@@ -1,0 +1,48 @@
+//! PTQ shoot-out: RTN vs SmoothQuant vs GPTQ vs SpinQuant-analog vs SiLQ on
+//! the same instruct model — the qualitative core of the paper's Table 1.
+//!
+//! Run: `cargo run --release --offline --example ptq_compare -- [qat_steps]`
+
+use anyhow::Result;
+use silq::config::TrainCfg;
+use silq::coordinator::{Pipeline, PipelineCfg};
+use silq::data::{DataMix, SftStyle, Suite};
+use silq::metrics::{RunLog, Table};
+use silq::runtime::Engine;
+
+fn main() -> Result<()> {
+    let qat_steps: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(200);
+    let engine = Engine::new("artifacts")?;
+    let p = Pipeline::new(&engine, PipelineCfg { qat_steps, eval_items: 40, ..Default::default() })?;
+    let mut log = RunLog::new("runs/ptq_compare");
+
+    let fp16 = p.instruct_model(SftStyle::TuluSynth, "instruct", &mut log)?;
+    let stats = p.calib_stats(&fp16, 4)?;
+    let prec = "a8d-c8-w4";
+
+    let mut t = Table::new(&["method", "CSR", "OLLMv1", "OLLMv2"]);
+    let mut add = |name: &str, r: &silq::evalharness::EvalReport| {
+        t.row(&[
+            name.into(),
+            format!("{:.2}", 100.0 * r.suite_avg(Suite::Csr)),
+            format!("{:.2}", 100.0 * r.suite_avg(Suite::OllmV1)),
+            format!("{:.2}", 100.0 * r.suite_avg(Suite::OllmV2)),
+        ]);
+    };
+
+    add("fp16 baseline", &p.eval("fp16", &fp16, true)?);
+    for method in ["rtn", "smoothquant", "gptq", "spinquant"] {
+        log.note(&format!("[ptq] {method}..."));
+        let qs = p.ptq_baseline(method, prec, &fp16, &stats)?;
+        add(method, &p.eval(prec, &qs, true)?);
+    }
+
+    log.note("[ptq] silq (QAT)...");
+    let mut qs = p.calibrated_quant_store(prec, &fp16, &stats, "quantile", "mse")?;
+    let tcfg = p.qat_cfg(qat_steps);
+    p.qat(prec, &mut qs, &fp16, DataMix::Instruct { style: SftStyle::TuluSynth, dclm_ratio: 0.25 }, tcfg, &mut log, None)?;
+    add("silq (QAT+KD)", &p.eval(prec, &qs, true)?);
+
+    println!("\n{}", t.render());
+    Ok(())
+}

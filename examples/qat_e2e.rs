@@ -1,0 +1,92 @@
+//! End-to-end driver (DESIGN.md §5): pretrain a transformer LM on the
+//! synthetic corpus (loss curve logged), SFT it into an instruct model,
+//! calibrate, run SiLQ QAT with knowledge distillation at A8d-C8-W4, and
+//! evaluate fp16 vs quantized on all three benchmark suites.
+//!
+//! Run: `cargo run --release --offline --example qat_e2e -- [model] [steps]`
+//! Defaults: tiny, pretrain 500 / sft 250 / qat 250. The `small` (~5.5M
+//! param) configuration is the showcase; results land in EXPERIMENTS.md.
+
+use anyhow::Result;
+use silq::config::TrainCfg;
+use silq::coordinator::{Pipeline, PipelineCfg};
+use silq::data::{DataMix, SftStyle, Suite};
+use silq::metrics::{RunLog, Table};
+use silq::runtime::Engine;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args.first().cloned().unwrap_or_else(|| "tiny".into());
+    let qat_steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(250);
+
+    let engine = Engine::new("artifacts")?;
+    let cfg = PipelineCfg {
+        model: model.clone(),
+        pretrain_steps: qat_steps * 2,
+        sft_steps: qat_steps,
+        qat_steps,
+        eval_items: 40,
+        ..Default::default()
+    };
+    let p = Pipeline::new(&engine, cfg)?;
+    let mut log = RunLog::new(format!("runs/e2e_{model}"));
+
+    // ---- phase 1+2: fp16 pretrain + SFT (cached across runs) ----
+    log.note(&format!("[e2e] model={model} qat_steps={qat_steps}"));
+    let fp16 = p.instruct_model(SftStyle::TuluSynth, "instruct", &mut log)?;
+
+    // ---- phase 3: calibration ----
+    log.note("[e2e] collecting calibration statistics (quantile + Gram)...");
+    let stats = p.calib_stats(&fp16, 4)?;
+    let prec = "a8d-c8-w4";
+    let mut qs = p.calibrated_quant_store(prec, &fp16, &stats, "quantile", "mse")?;
+
+    // ---- phase 4: SiLQ QAT with KD ----
+    log.note("[e2e] QAT with knowledge distillation...");
+    let tcfg = p.qat_cfg(qat_steps);
+    let st = p.qat(
+        prec,
+        &mut qs,
+        &fp16,
+        DataMix::Instruct { style: SftStyle::TuluSynth, dclm_ratio: 0.25 },
+        tcfg,
+        &mut log,
+        None,
+    )?;
+    log.note(&format!(
+        "[e2e] QAT: {:.2} steps/s (exec {:.0}% teacher {:.0}% data {:.0}% host {:.0}%), final loss {:.4}",
+        st.steps_per_sec(),
+        100.0 * st.exec_secs / st.total_secs,
+        100.0 * st.teacher_secs / st.total_secs,
+        100.0 * st.data_secs / st.total_secs,
+        100.0 * st.host_secs / st.total_secs,
+        st.final_loss
+    ));
+    // loss curve (sampled)
+    let n = log.losses.len();
+    let curve: Vec<String> = (0..10.min(n))
+        .map(|i| {
+            let (s, l) = log.losses[i * n.max(1) / 10.min(n).max(1)];
+            format!("{s}:{l:.3}")
+        })
+        .collect();
+    println!("[e2e] loss curve (step:loss): {}", curve.join(" "));
+
+    // ---- phase 5: evaluation ----
+    log.note("[e2e] evaluating fp16 vs quantized...");
+    let r_fp = p.eval("fp16", &fp16, true)?;
+    let r_q = p.eval(prec, &qs, true)?;
+    let mut t = Table::new(&["model", "CSR", "OLLMv1", "OLLMv2"]);
+    for (name, r) in [("fp16 instruct", &r_fp), ("SiLQ a8d-c8-w4", &r_q)] {
+        t.row(&[
+            name.into(),
+            format!("{:.2}", 100.0 * r.suite_avg(Suite::Csr)),
+            format!("{:.2}", 100.0 * r.suite_avg(Suite::OllmV1)),
+            format!("{:.2}", 100.0 * r.suite_avg(Suite::OllmV2)),
+        ]);
+    }
+    println!("\n{}", t.render());
+    qs.save(format!("runs/e2e_{model}/quantized.ckpt"))?;
+    println!("[e2e] quantized checkpoint saved; done.");
+    Ok(())
+}

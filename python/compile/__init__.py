@@ -1,0 +1,1 @@
+"""Build-time JAX/Pallas compile path for the SiLQ reproduction."""

@@ -1,0 +1,180 @@
+"""AOT pipeline: lower every (model, precision, mode) artifact to HLO *text*
+and write the manifest the Rust coordinator parses.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--only tiny_fp16_fwd]
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .configs import ARTIFACT_MATRIX, MODELS, PRECISIONS
+
+TRAIN_SCALARS = ["lr", "act_lrx", "kd_ratio", "kd_temp", "wd", "step"]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants is ESSENTIAL: the default printer elides big
+    # array constants as `constant({...})`, which xla_extension 0.5.1's text
+    # parser accepts silently and materializes as garbage — the RoPE tables
+    # and causal mask would be destroyed.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_artifact(mc, pc, mode):
+    """Returns (fn, in_specs, out_names) where in_specs is a list of
+    (name, ShapeDtypeStruct)."""
+    spec = M.param_spec(mc, pc)
+    names = [n for n, _ in spec]
+    pins = [(f"params.{n}", _sds(s)) for n, s in spec]
+
+    if mode == "fwd":
+        toks = ("tokens", _sds((mc.fwd_batch, mc.seq_len), jnp.int32))
+
+        def f(*args):
+            params = dict(zip(names, args[: len(names)]))
+            return (M.forward(params, args[len(names)], mc, pc),)
+
+        return f, pins + [toks], ["logits"]
+
+    if mode == "calib":
+        toks = ("tokens", _sds((mc.fwd_batch, mc.seq_len), jnp.int32))
+
+        def f(*args):
+            params = dict(zip(names, args[: len(names)]))
+            logits, stats = M.forward(params, args[len(names)], mc, pc, collect_stats=True)
+            # logits are returned too so every parameter (incl. the head) is
+            # live — the stablehlo->XlaComputation conversion DROPS unused
+            # parameters, which would desync the manifest's input list.
+            return (logits,) + tuple(stats[k] for k in M.CALIB_OUTPUTS)
+
+        return f, pins + [toks], ["logits"] + list(M.CALIB_OUTPUTS)
+
+    if mode == "train":
+        n = len(names)
+        ins = (
+            pins
+            + [(f"m.{x}", _sds(s)) for x, s in spec]
+            + [(f"v.{x}", _sds(s)) for x, s in spec]
+            + [("tokens", _sds((mc.train_batch, mc.seq_len), jnp.int32))]
+            + [("teacher_logits", _sds((mc.train_batch, mc.seq_len, mc.vocab)))]
+            + [(x, _sds(())) for x in TRAIN_SCALARS]
+        )
+
+        def f(*args):
+            p = dict(zip(names, args[:n]))
+            m = dict(zip(names, args[n : 2 * n]))
+            v = dict(zip(names, args[2 * n : 3 * n]))
+            tokens, teacher = args[3 * n], args[3 * n + 1]
+            lr, act_lrx, kd_ratio, kd_temp, wd, step = args[3 * n + 2 :]
+            np_, nm, nv, loss, gnorm, ntp, kd = M.train_step(
+                p, m, v, tokens, teacher, lr, act_lrx, kd_ratio, kd_temp, wd, step, mc, pc
+            )
+            return tuple(
+                [np_[x] for x in names]
+                + [nm[x] for x in names]
+                + [nv[x] for x in names]
+                + [loss, gnorm, ntp, kd]
+            )
+
+        outs = (
+            [f"params.{x}" for x in names]
+            + [f"m.{x}" for x in names]
+            + [f"v.{x}" for x in names]
+            + ["loss", "gnorm", "ntp", "kd"]
+        )
+        return f, ins, outs
+
+    raise ValueError(mode)
+
+
+def _dtype_tag(dt) -> str:
+    return {"float32": "f32", "int32": "i32"}[str(dt)]
+
+
+def _shape_tag(shape) -> str:
+    return "scalar" if len(shape) == 0 else "x".join(str(d) for d in shape)
+
+
+def lower_one(name, mc, pc, mode, out_dir, manifest_lines, force=False):
+    fn, ins, out_names = build_artifact(mc, pc, mode)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    if force or not os.path.exists(path):
+        lowered = jax.jit(fn, keep_unused=True).lower(*[s for _, s in ins])
+        text = to_hlo_text(lowered)
+        with open(path, "w") as fh:
+            fh.write(text)
+        print(f"  wrote {path} ({len(text) / 1e6:.2f} MB, {len(ins)} inputs)")
+    else:
+        print(f"  cached {path}")
+
+    manifest_lines.append(
+        f"artifact {name} file={name}.hlo.txt model={mc.name} prec={pc.name} mode={mode}"
+    )
+    # re-derive output shapes via eval_shape so cached artifacts still get
+    # complete manifest entries.
+    out_shapes = jax.eval_shape(fn, *[s for _, s in ins])
+    for n, s in ins:
+        manifest_lines.append(f"in {n} {_dtype_tag(s.dtype)} {_shape_tag(s.shape)}")
+    for n, s in zip(out_names, out_shapes):
+        manifest_lines.append(f"out {n} {_dtype_tag(s.dtype)} {_shape_tag(s.shape)}")
+    manifest_lines.append("endartifact")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter on artifact names")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    lines = ["# silq artifact manifest v1"]
+    for mc in MODELS.values():
+        lines.append(
+            f"model {mc.name} vocab={mc.vocab} d_model={mc.d_model} "
+            f"n_layers={mc.n_layers} n_heads={mc.n_heads} d_ff={mc.d_ff} "
+            f"seq_len={mc.seq_len} train_batch={mc.train_batch} fwd_batch={mc.fwd_batch} "
+            f"use_pallas={int(mc.use_pallas)}"
+        )
+    for pc in PRECISIONS.values():
+        lines.append(
+            f"prec {pc.name} quantized={int(pc.quantized)} act_bits={pc.act_bits} "
+            f"act_dynamic={int(pc.act_dynamic)} cache_bits={pc.cache_bits} "
+            f"weight_bits={pc.weight_bits} head_bits={pc.head_bits} "
+            f"query_bits={pc.query_bits} online_rot={int(pc.online_rot)}"
+        )
+
+    for size, prec, mode in ARTIFACT_MATRIX:
+        name = f"{size}_{prec}_{mode}"
+        if args.only and args.only not in name:
+            continue
+        print(f"lowering {name} ...")
+        lower_one(name, MODELS[size], PRECISIONS[prec], mode, args.out_dir, lines,
+                  force=args.force)
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as fh:
+        fh.write("\n".join(lines) + "\n")
+    print(f"manifest: {len(lines)} lines")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,107 @@
+"""Model / precision configurations shared by the JAX model and the AOT pipeline.
+
+Names here are the contract with the Rust coordinator: every artifact is
+identified as ``{size}_{precision}_{mode}`` and the manifest written by
+``aot.py`` records the exact input/output tensor order for each artifact.
+"""
+
+from dataclasses import dataclass, field, replace
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture of the decoder-only transformer (Llama-style).
+
+    d_model and d_ff are kept powers of two so the online-Hadamard rotation
+    ablation (QuaRot-style) has well-defined Hadamard matrices.
+    """
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq_len: int
+    train_batch: int
+    fwd_batch: int
+    rope_theta: float = 10000.0
+    use_pallas: bool = False  # route linear layers through the Pallas kernel
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+
+@dataclass(frozen=True)
+class PrecisionConfig:
+    """Quantization placement, mirroring the paper's Figure 2.
+
+    - activations feeding every linear / matmul: ``act_bits`` (8)
+    - query and softmax-output matmul inputs: INT16 (softmax output is left
+      unquantized during training, exactly as in paper section 3.2)
+    - KV cache: ``cache_bits`` (4 or 8)
+    - weights: ``weight_bits`` (4), per output channel
+    - final head: 8-bit input and weights; embedding stays fp16/f32
+    """
+
+    name: str
+    quantized: bool = True
+    act_bits: int = 8
+    act_dynamic: bool = True  # True = per-token dynamic ('d'), False = static learned ('s')
+    cache_bits: int = 8
+    weight_bits: int = 4
+    head_bits: int = 8
+    query_bits: int = 16
+    online_rot: bool = False  # QuaRot-style online Hadamard before down-proj (Table 4 ablation)
+
+
+FP16 = PrecisionConfig(name="fp16", quantized=False)
+A8D_C8_W4 = PrecisionConfig(name="a8d-c8-w4", act_dynamic=True, cache_bits=8)
+A8S_C8_W4 = PrecisionConfig(name="a8s-c8-w4", act_dynamic=False, cache_bits=8)
+A8D_C4_W4 = PrecisionConfig(name="a8d-c4-w4", act_dynamic=True, cache_bits=4)
+A8D_C8_W4_ROT = replace(A8D_C8_W4, name="a8d-c8-w4-rot", online_rot=True)
+
+PRECISIONS = {p.name: p for p in [FP16, A8D_C8_W4, A8S_C8_W4, A8D_C4_W4, A8D_C8_W4_ROT]}
+
+# Percentiles for activation-step calibration, per paper section 3.1:
+# 99.91 / 99.99 / 99.995 for 4- / 8- / 16-bit activations.
+CALIB_PERCENTILES = {4: 99.91, 8: 99.99, 16: 99.995}
+
+TINY = ModelConfig(
+    name="tiny", vocab=256, d_model=128, n_layers=4, n_heads=4, d_ff=256,
+    seq_len=64, train_batch=16, fwd_batch=32,
+)
+SMALL = ModelConfig(
+    name="small", vocab=512, d_model=256, n_layers=8, n_heads=8, d_ff=512,
+    seq_len=128, train_batch=8, fwd_batch=16,
+)
+# tiny variant that routes its linears through the Pallas kernel; proves the
+# L1->L2->L3 composition end to end (see DESIGN.md section 3).
+TINY_PALLAS = replace(TINY, name="tiny-pallas", use_pallas=True, n_layers=2)
+
+MODELS = {m.name: m for m in [TINY, SMALL, TINY_PALLAS]}
+
+# Which (model, precision, mode) triples `make artifacts` builds.
+ARTIFACT_MATRIX = [
+    # tiny: full experiment grid
+    ("tiny", "fp16", "fwd"),
+    ("tiny", "fp16", "train"),
+    ("tiny", "fp16", "calib"),
+    ("tiny", "a8d-c8-w4", "fwd"),
+    ("tiny", "a8d-c8-w4", "train"),
+    ("tiny", "a8s-c8-w4", "fwd"),
+    ("tiny", "a8s-c8-w4", "train"),
+    ("tiny", "a8d-c4-w4", "fwd"),
+    ("tiny", "a8d-c4-w4", "train"),
+    ("tiny", "a8d-c8-w4-rot", "fwd"),
+    ("tiny", "a8d-c8-w4-rot", "train"),
+    # small: e2e showcase
+    ("small", "fp16", "fwd"),
+    ("small", "fp16", "train"),
+    ("small", "fp16", "calib"),
+    ("small", "a8d-c8-w4", "fwd"),
+    ("small", "a8d-c8-w4", "train"),
+    # pallas-composed variant (L1 kernels inside the lowered HLO)
+    ("tiny-pallas", "a8d-c8-w4", "fwd"),
+]

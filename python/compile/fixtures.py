@@ -1,0 +1,150 @@
+"""Generate cross-language fixtures: expected numerics the Rust test suite
+replays against the compiled artifacts and against its host-side quant /
+calibration implementations.
+
+Format is the same "tensor bundle" the Rust checkpoint IO uses:
+
+    magic  b"SILQTNSR"
+    u32    version (1)
+    u32    tensor count
+    per tensor:
+        u32 name_len, name (utf-8)
+        u8  dtype (0 = f32, 1 = i32)
+        u32 ndim, u32 dims...
+        payload (little-endian)
+
+Usage: python -m compile.fixtures --out-dir ../artifacts/fixtures
+"""
+
+import argparse
+import os
+import struct
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import model as M
+from . import quant
+from .configs import TINY, PRECISIONS
+from .kernels import ref
+
+MAGIC = b"SILQTNSR"
+
+
+def write_bundle(path, tensors):
+    """tensors: list of (name, np.ndarray) with dtype f32 or i32."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", 1, len(tensors)))
+        for name, arr in tensors:
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype == np.float32:
+                dt = 0
+            elif arr.dtype == np.int32:
+                dt = 1
+            else:
+                raise ValueError(f"{name}: {arr.dtype}")
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BI", dt, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def f32(x):
+    return np.asarray(x, np.float32)
+
+
+def quant_fixtures():
+    rng = np.random.default_rng(100)
+    out = []
+    cases = [(8, 0.05), (4, 0.11), (16, 0.002), (2, 0.4)]
+    for i, (bits, s) in enumerate(cases):
+        x = (rng.standard_normal(257) * 2).astype(np.float32)
+        y = ref.fake_quant_ref(jnp.asarray(x), s, bits)
+        out += [(f"fq{i}.x", x), (f"fq{i}.s", f32([s])), (f"fq{i}.bits", np.asarray([bits], np.int32)),
+                (f"fq{i}.y", np.asarray(y))]
+    # dynamic per-row
+    x = (rng.standard_normal((6, 64)) * 3).astype(np.float32)
+    y = ref.dynamic_quant_ref(jnp.asarray(x), 8)
+    out += [("dq.x", x), ("dq.y", np.asarray(y))]
+    # per-channel
+    w = rng.standard_normal((32, 16)).astype(np.float32)
+    sw = (np.abs(rng.standard_normal(16)) * 0.1 + 0.01).astype(np.float32)
+    y = ref.fake_quant_ref(jnp.asarray(w), jnp.asarray(sw)[None, :], 4)
+    out += [("pc.w", w), ("pc.sw", sw), ("pc.y", np.asarray(y))]
+    # MSE-calibrated steps (paper Eq. 2)
+    for i, dist in enumerate(["normal", "heavy"]):
+        w = (rng.standard_normal(1024) if dist == "normal"
+             else rng.standard_t(df=3, size=1024) * 0.2).astype(np.float32)
+        s4 = float(quant.weight_step_mse(jnp.asarray(w), 4))
+        s8 = float(quant.weight_step_mse(jnp.asarray(w), 8))
+        out += [(f"mse{i}.w", w), (f"mse{i}.s4", f32([s4])), (f"mse{i}.s8", f32([s8]))]
+    # LSQ-init steps
+    w = rng.standard_normal(512).astype(np.float32)
+    out += [("lsqinit.w", w),
+            ("lsqinit.s4", f32([float(quant.weight_step_lsq_init(jnp.asarray(w), 4))]))]
+    # percentile calibration
+    x = rng.standard_normal(50000).astype(np.float32)
+    out += [("pct.x", x),
+            ("pct.s8", f32([float(quant.act_step_percentile(jnp.asarray(x), 8, 99.99))])),
+            ("pct.smax", f32([float(quant.act_step_max(jnp.asarray(x), 8))]))]
+    # qmatmul
+    xx = rng.standard_normal((24, 32)).astype(np.float32)
+    ww = rng.standard_normal((32, 16)).astype(np.float32)
+    sw = (np.abs(rng.standard_normal(16)) * 0.05 + 0.01).astype(np.float32)
+    y = ref.qmatmul_ref(jnp.asarray(xx), jnp.asarray(ww), 0.04, jnp.asarray(sw), 8, 4)
+    out += [("qmm.x", xx), ("qmm.w", ww), ("qmm.sw", sw), ("qmm.sx", f32([0.04])),
+            ("qmm.y", np.asarray(y))]
+    return out
+
+
+def model_fixtures(pc_name):
+    mc, pc = TINY, PRECISIONS[pc_name]
+    params = M.init_params(mc, pc, seed=7)
+    rng = np.random.default_rng(8)
+    tokens = rng.integers(1, mc.vocab, (mc.fwd_batch, mc.seq_len)).astype(np.int32)
+    logits = M.forward({k: jnp.asarray(v) for k, v in params.items()},
+                       jnp.asarray(tokens), mc, pc)
+    out = [(f"params.{k}", v) for k, v in params.items()]
+    out += [("tokens", tokens), ("logits", np.asarray(logits))]
+    return out
+
+
+def train_fixture():
+    mc, pc = TINY, PRECISIONS["a8s-c8-w4"]
+    params = {k: jnp.asarray(v) for k, v in M.init_params(mc, pc, seed=7).items()}
+    m = {k: jnp.zeros_like(v) for k, v in params.items()}
+    v = {k: jnp.zeros_like(x) for k, x in params.items()}
+    rng = np.random.default_rng(9)
+    tokens = rng.integers(1, mc.vocab, (mc.train_batch, mc.seq_len)).astype(np.int32)
+    teacher = rng.standard_normal((mc.train_batch, mc.seq_len, mc.vocab)).astype(np.float32)
+    p1, m1, v1, loss, gnorm, ntp, kd = M.train_step(
+        params, m, v, jnp.asarray(tokens), jnp.asarray(teacher),
+        5e-3, 50.0, 1.0, 1.0, 0.1, 1.0, mc, pc)
+    out = [(f"params.{k}", np.asarray(x)) for k, x in params.items()]
+    out += [("tokens", tokens), ("teacher", teacher),
+            ("loss", f32([float(loss)])), ("gnorm", f32([float(gnorm)])),
+            ("ntp", f32([float(ntp)])), ("kd", f32([float(kd)])),
+            ("new.ln_f", np.asarray(p1["ln_f"])), ("new.sa_x1", np.asarray(p1["sa_x1"])),
+            ("new.head", np.asarray(p1["head"])), ("newm.head", np.asarray(m1["head"])),
+            ("newv.head", np.asarray(v1["head"]))]
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts/fixtures")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    write_bundle(os.path.join(args.out_dir, "quant_cases.bin"), quant_fixtures())
+    write_bundle(os.path.join(args.out_dir, "fwd_tiny_fp16.bin"), model_fixtures("fp16"))
+    write_bundle(os.path.join(args.out_dir, "fwd_tiny_a8s.bin"), model_fixtures("a8s-c8-w4"))
+    write_bundle(os.path.join(args.out_dir, "train_tiny_a8s.bin"), train_fixture())
+    print("fixtures written to", args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""L1 Pallas kernels + pure-jnp oracles."""
+from . import ref, quantize, qmatmul  # noqa: F401

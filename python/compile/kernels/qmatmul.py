@@ -1,0 +1,86 @@
+"""Fused quantize-matmul Pallas kernel — the paper's compute hot-spot.
+
+Computes ``fake_quant(x) @ fake_quant_per_channel(w)`` in one pass:
+activation blocks are quantized as they stream into VMEM, weight blocks are
+quantized per output channel, and products accumulate in f32 — exactly the
+dataflow a low-precision accelerator (NorthPole's vector-matrix unit, or a
+TPU MXU fed with quantized operands) implements in hardware.
+
+Grid is (M/bm, N/bn, K/bk): the k axis is innermost so each [bm, bn] output
+tile stays resident in VMEM while K streams through — the Pallas/TPU
+equivalent of the threadblock tiling the paper's GPU baselines use.
+
+VMEM footprint per grid step (f32):
+    bm*bk (x) + bk*bn (w) + bm*bn (acc) + bm (sx) + bn (sw)
+At the default 128-blocks that is 3*64 KiB + 1 KiB ≈ 193 KiB — far under
+the ~16 MiB VMEM budget, leaving room for double buffering (see
+EXPERIMENTS.md §Perf for the footprint/utilization table).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import qbounds, EPS
+from .quantize import _block
+
+
+def _qmm_kernel(act_bits, weight_bits, nk):
+    aqn, aqp = qbounds(act_bits)
+    wqn, wqp = qbounds(weight_bits)
+
+    def kernel(x_ref, sx_ref, w_ref, sw_ref, o_ref):
+        k = pl.program_id(2)
+
+        sx = jnp.maximum(sx_ref[...], EPS)  # [bm, 1]
+        xq = jnp.round(jnp.clip(x_ref[...] / sx, aqn, aqp)) * sx
+        sw = jnp.maximum(sw_ref[...], EPS)  # [1, bn]
+        wq = jnp.round(jnp.clip(w_ref[...] / sw, wqn, wqp)) * sw
+
+        acc = jnp.dot(xq, wq, preferred_element_type=jnp.float32)
+
+        @pl.when(k == 0)
+        def _init():
+            o_ref[...] = acc
+
+        @pl.when(k > 0)
+        def _accum():
+            o_ref[...] += acc
+
+    return kernel
+
+
+def qmatmul_pallas(x, w, sx, sw, act_bits: int, weight_bits: int,
+                   bm: int = 128, bn: int = 128, bk: int = 128):
+    """Fused quantized matmul.
+
+    x: [M, K] f32; w: [K, N] f32; sw: [N] per-output-channel weight steps.
+    sx: scalar step (static per-tensor), [M] per-row steps, or None for
+    per-token dynamic quantization (row scales computed from |x|).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bm, bn, bk = _block(m, bm), _block(n, bn), _block(k, bk)
+
+    _, aqp = qbounds(act_bits)
+    if sx is None:  # dynamic: per-row scale from the row absmax
+        sx_rows = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / aqp
+    else:
+        sx_arr = jnp.asarray(sx, jnp.float32)
+        sx_rows = jnp.broadcast_to(sx_arr.reshape(-1, 1), (m, 1))
+
+    return pl.pallas_call(
+        _qmm_kernel(act_bits, weight_bits, k // bk),
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), sx_rows.astype(jnp.float32),
+      w.astype(jnp.float32), sw.reshape(1, n).astype(jnp.float32))

@@ -1,0 +1,96 @@
+"""Pallas fake-quantization kernels (L1).
+
+All kernels are lowered with ``interpret=True`` — the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so interpret mode turns them into plain HLO that
+any backend (including the Rust-side PJRT CPU client) can run. Block shapes
+are nevertheless chosen as they would be for a real TPU: multiples/divisors
+of the 128-lane vector registers and the 128x128 MXU tile (see
+DESIGN.md §Hardware-Adaptation).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import qbounds, EPS
+
+
+def _block(dim: int, target: int = 128) -> int:
+    """Largest divisor of ``dim`` that is <= target (TPU-tile friendly)."""
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _fq_kernel(bits):
+    qn, qp = qbounds(bits)
+
+    def kernel(x_ref, s_ref, o_ref):
+        s = jnp.maximum(s_ref[...], EPS)
+        v = x_ref[...] / s
+        o_ref[...] = jnp.round(jnp.clip(v, qn, qp)) * s
+
+    return kernel
+
+
+def fake_quant_pallas(x, s, bits: int):
+    """Per-tensor fake quantization; ``s`` is a scalar (shape [1,1])."""
+    m, n = x.shape
+    bm, bn = _block(m), _block(n)
+    s2 = jnp.asarray(s, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        _fq_kernel(bits),
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), s2)
+
+
+def fake_quant_channel_pallas(w, sw, bits: int):
+    """Per-output-channel weight fake quantization; ``sw`` has shape [N]."""
+    k, n = w.shape
+    bk, bn = _block(k), _block(n)
+    return pl.pallas_call(
+        _fq_kernel(bits),
+        grid=(k // bk, n // bn),
+        in_specs=[
+            pl.BlockSpec((bk, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bk, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((k, n), jnp.float32),
+        interpret=True,
+    )(w.astype(jnp.float32), sw.reshape(1, n).astype(jnp.float32))
+
+
+def _dynq_kernel(bits):
+    qn, qp = qbounds(bits)
+
+    def kernel(x_ref, o_ref):
+        x = x_ref[...]
+        s = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True) / qp, EPS)
+        o_ref[...] = jnp.round(jnp.clip(x / s, qn, qp)) * s
+
+    return kernel
+
+
+def dynamic_quant_pallas(x, bits: int):
+    """Per-row (token) dynamic quantization. Row must fit one block, so the
+    block is [bm, K] — on TPU this is the natural layout because the row
+    reduction happens across lanes within VMEM."""
+    m, k = x.shape
+    bm = _block(m)
+    return pl.pallas_call(
+        _dynq_kernel(bits),
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, k), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, k), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32))

@@ -1,0 +1,337 @@
+"""L2: the quantized decoder-only transformer, its KD/NTP training step
+(AdamW), and the calibration forward pass.
+
+Architecture (Llama-style, matching the paper's targets): RMSNorm ->
+causal attention with RoPE -> RMSNorm -> SwiGLU MLP, tied quantization
+sites per the paper's Figure 2:
+
+  * inputs to every linear layer: ``act_bits`` (8), static or dynamic
+  * query / softmax-output matmul inputs: INT16; the softmax output tensor
+    itself is left unquantized during training (paper section 3.2)
+  * K/V cache tensors: ``cache_bits`` (4 or 8)
+  * all linear weights: ``weight_bits`` (4), per output channel
+  * final head: 8-bit input activations and weights; embedding fp16/f32
+
+The layer stack is a ``lax.scan`` over stacked per-layer parameters: this
+keeps the lowered HLO small and gives the Rust coordinator a short, stable
+flat parameter list (see ``param_spec``).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import quant
+from .configs import ModelConfig, PrecisionConfig
+from .kernels import qmatmul as qkern
+
+EPS = 1e-6
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.95, 1e-10  # paper Appendix B
+
+# parameters that receive weight decay (2-D weight matrices only)
+DECAY_PARAMS = ("embed", "head", "wq", "wk", "wv", "wo", "wg", "wu", "wd")
+
+
+# ---------------------------------------------------------------------------
+# Parameter specification — the contract with the Rust coordinator
+# ---------------------------------------------------------------------------
+
+def param_spec(mc: ModelConfig, pc: PrecisionConfig):
+    """Ordered list of (name, shape) for every trainable tensor."""
+    L, D, F, V = mc.n_layers, mc.d_model, mc.d_ff, mc.vocab
+    spec = [
+        ("embed", (V, D)),
+        ("ln1", (L, D)), ("wq", (L, D, D)), ("wk", (L, D, D)), ("wv", (L, D, D)),
+        ("wo", (L, D, D)),
+        ("ln2", (L, D)), ("wg", (L, D, F)), ("wu", (L, D, F)), ("wd", (L, F, D)),
+        ("ln_f", (D,)), ("head", (D, V)),
+    ]
+    if pc.quantized:
+        spec += [
+            ("sw_q", (L, D)), ("sw_k", (L, D)), ("sw_v", (L, D)), ("sw_o", (L, D)),
+            ("sw_g", (L, F)), ("sw_u", (L, F)), ("sw_d", (L, D)), ("sw_head", (V,)),
+        ]
+        if not pc.act_dynamic:
+            spec += [
+                ("sa_x1", (L,)), ("sa_q", (L,)), ("sc_k", (L,)), ("sc_v", (L,)),
+                ("sa_o", (L,)), ("sa_x2", (L,)), ("sa_d", (L,)), ("sa_head", ()),
+            ]
+    return spec
+
+
+BLOCK_PARAMS = ("ln1", "wq", "wk", "wv", "wo", "ln2", "wg", "wu", "wd",
+                "sw_q", "sw_k", "sw_v", "sw_o", "sw_g", "sw_u", "sw_d",
+                "sa_x1", "sa_q", "sc_k", "sc_v", "sa_o", "sa_x2", "sa_d")
+
+
+def init_params(mc: ModelConfig, pc: PrecisionConfig, seed: int = 0):
+    """Host-side init (numpy) — used by pytest; the Rust coordinator has its
+    own equivalent initializer."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for name, shape in param_spec(mc, pc):
+        if name.startswith("ln"):
+            out[name] = np.ones(shape, np.float32)
+        elif name.startswith("sw_") or name.startswith("sa_") or name.startswith("sc_"):
+            out[name] = np.full(shape, 0.05, np.float32)
+        else:
+            std = 0.02 if name in ("embed", "head") else 1.0 / np.sqrt(shape[-2])
+            out[name] = (rng.standard_normal(shape) * std).astype(np.float32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, g):
+    return x * g * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + EPS)
+
+
+def rope_tables(mc: ModelConfig):
+    dh = mc.d_head
+    inv = 1.0 / (mc.rope_theta ** (np.arange(0, dh, 2) / dh))
+    t = np.arange(mc.seq_len)
+    freqs = np.outer(t, inv)
+    return jnp.asarray(np.cos(freqs), jnp.float32), jnp.asarray(np.sin(freqs), jnp.float32)
+
+
+def apply_rope(x, cos, sin):
+    # x: [B, H, S, dh]
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    c, s = cos[None, None], sin[None, None]
+    out = jnp.stack([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    return out.reshape(x.shape)
+
+
+def _hadamard(n: int) -> np.ndarray:
+    h = np.array([[1.0]])
+    while h.shape[0] < n:
+        h = np.block([[h, h], [h, -h]])
+    return (h / np.sqrt(n)).astype(np.float32)
+
+
+def act_quant(x, step, bits, pc: PrecisionConfig, numel: int):
+    """Quantize an activation/cache tensor at a site.
+
+    ``step`` is the learned scalar step (static mode) or None (dynamic
+    per-token mode). ``numel`` is the per-step element count for the LSQ
+    gradient scale.
+    """
+    if not pc.quantized:
+        return x
+    if pc.act_dynamic or step is None:
+        return quant.ste_dynamic_quantize(x, bits)
+    qn, qp = quant.qbounds(bits)
+    g = quant.lsq_grad_scale(numel, qp)
+    return quant.lsq_quantize(x, step, qn, qp, g)
+
+
+def weight_quant(w, sw, bits, pc: PrecisionConfig):
+    """Per-output-channel LSQ weight quantization. ``sw``: [out]."""
+    if not pc.quantized:
+        return w
+    qn, qp = quant.qbounds(bits)
+    g = quant.lsq_grad_scale(w.shape[-2], qp)
+    return quant.lsq_quantize(w, sw[..., None, :], qn, qp, g)
+
+
+def qlinear(x, w, sa, sw, abits, wbits, pc, mc, numel):
+    """Quantized linear layer: act-quant(x) @ weight-quant(w).
+
+    Routes through the fused Pallas kernel when ``mc.use_pallas`` (forward
+    artifacts only — the kernel carries no custom VJP)."""
+    if pc.quantized and mc.use_pallas:
+        m = int(np.prod(x.shape[:-1]))
+        y = qkern.qmatmul_pallas(
+            x.reshape(m, x.shape[-1]), w,
+            None if (pc.act_dynamic or sa is None) else jnp.broadcast_to(sa, (m,)),
+            sw, abits, wbits)
+        return y.reshape(x.shape[:-1] + (w.shape[-1],))
+    xq = act_quant(x, sa, abits, pc, numel)
+    wq = weight_quant(w, sw, wbits, pc)
+    return xq @ wq
+
+
+# ---------------------------------------------------------------------------
+# Forward pass (optionally collecting calibration statistics)
+# ---------------------------------------------------------------------------
+
+def _percentile_stats(x):
+    """[q99.91, q99.99, q99.995, max] of |x| — the calibration vector."""
+    a = jnp.abs(x).reshape(-1)
+    qs = jnp.percentile(a, jnp.array([99.91, 99.99, 99.995]))
+    return jnp.concatenate([qs, jnp.max(a)[None]])
+
+
+def _gram(x2d):
+    return x2d.T @ x2d
+
+
+def forward(params, tokens, mc: ModelConfig, pc: PrecisionConfig, collect_stats=False):
+    """Token ids [B, S] -> logits [B, S, V] (f32).
+
+    With ``collect_stats`` (fp16 calibration artifact) also returns the
+    per-site statistics the Rust coordinator needs for quantile/max
+    activation calibration, SmoothQuant channel maxima, and GPTQ Gram
+    matrices.
+    """
+    B, S = tokens.shape
+    D, F, H, dh = mc.d_model, mc.d_ff, mc.n_heads, mc.d_head
+    cos, sin = rope_tables(mc)
+    mask = jnp.where(
+        np.tril(np.ones((S, S), np.float32))[None, None] > 0, 0.0, -1e9)
+    numel = B * S * D  # per-step elements for LSQ grad scale (per layer site)
+
+    x = params["embed"][tokens]  # embedding stays fp16/f32
+
+    had = jnp.asarray(_hadamard(F)) if pc.online_rot else None
+
+    block_names = [n for n in BLOCK_PARAMS if n in params]
+    xs = {n: params[n] for n in block_names}
+
+    def step(x, bp):
+        def sa(name):
+            return bp.get(name)
+
+        h = rmsnorm(x, bp["ln1"])
+        q = qlinear(h, bp["wq"], sa("sa_x1"), bp.get("sw_q"), pc.act_bits, pc.weight_bits, pc, mc, numel)
+        k = qlinear(h, bp["wk"], sa("sa_x1"), bp.get("sw_k"), pc.act_bits, pc.weight_bits, pc, mc, numel)
+        v = qlinear(h, bp["wv"], sa("sa_x1"), bp.get("sw_v"), pc.act_bits, pc.weight_bits, pc, mc, numel)
+
+        def heads(t):
+            return t.reshape(B, S, H, dh).transpose(0, 2, 1, 3)
+
+        qh, kh, vh = heads(q), heads(k), heads(v)
+        qh = apply_rope(qh, cos, sin)
+        kh = apply_rope(kh, cos, sin)
+
+        # INT16 query; C-bit KV cache (per paper Figure 2)
+        qq = act_quant(qh, sa("sa_q"), pc.query_bits, pc, B * S * dh * H)
+        kq = act_quant(kh, sa("sc_k"), pc.cache_bits, pc, B * S * dh * H)
+        vq = act_quant(vh, sa("sc_v"), pc.cache_bits, pc, B * S * dh * H)
+
+        scores = (qq @ kq.transpose(0, 1, 3, 2)) / np.sqrt(dh) + mask
+        p = jax.nn.softmax(scores, axis=-1)  # softmax output NOT quantized
+        ctx = (p @ vq).transpose(0, 2, 1, 3).reshape(B, S, D)
+
+        o = qlinear(ctx, bp["wo"], sa("sa_o"), bp.get("sw_o"), pc.act_bits, pc.weight_bits, pc, mc, numel)
+        x = x + o
+
+        h2 = rmsnorm(x, bp["ln2"])
+        gte = qlinear(h2, bp["wg"], sa("sa_x2"), bp.get("sw_g"), pc.act_bits, pc.weight_bits, pc, mc, numel)
+        up = qlinear(h2, bp["wu"], sa("sa_x2"), bp.get("sw_u"), pc.act_bits, pc.weight_bits, pc, mc, numel)
+        a = jax.nn.silu(gte) * up
+        wd = bp["wd"]
+        if pc.online_rot:
+            # QuaRot-style online rotation: rotate the down-proj input and
+            # counter-rotate its weight so the function is unchanged but the
+            # quantized tensor has suppressed outliers.
+            a = a @ had
+            wd = had.T @ wd
+        d = qlinear(a, wd, sa("sa_d"), bp.get("sw_d"), pc.act_bits, pc.weight_bits, pc, mc, B * S * F)
+        x = x + d
+
+        stats = None
+        if collect_stats:
+            h2d, ctx2d, a2d = h.reshape(-1, D), ctx.reshape(-1, D), a.reshape(-1, F)
+            hh2d = h2.reshape(-1, D)
+            stats = {
+                "qs_x1": _percentile_stats(h), "qs_q": _percentile_stats(qh),
+                "qs_k": _percentile_stats(kh), "qs_v": _percentile_stats(vh),
+                "qs_o": _percentile_stats(ctx), "qs_x2": _percentile_stats(h2),
+                "qs_d": _percentile_stats(a),
+                "cmax_x1": jnp.max(jnp.abs(h2d), axis=0),
+                "cmax_o": jnp.max(jnp.abs(ctx2d), axis=0),
+                "cmax_x2": jnp.max(jnp.abs(hh2d), axis=0),
+                "cmax_d": jnp.max(jnp.abs(a2d), axis=0),
+                "gram_x1": _gram(h2d), "gram_o": _gram(ctx2d),
+                "gram_x2": _gram(hh2d), "gram_d": _gram(a2d),
+            }
+        return x, stats
+
+    x, stats = jax.lax.scan(step, x, xs)
+
+    hf = rmsnorm(x, params["ln_f"])
+    hq = act_quant(hf, params.get("sa_head"), pc.head_bits, pc, numel)
+    headw = params["head"]
+    if pc.quantized:
+        headw = weight_quant(headw, params["sw_head"], pc.head_bits, pc)
+    logits = hq @ headw
+
+    if collect_stats:
+        hf2d = hf.reshape(-1, D)
+        stats["qs_head"] = _percentile_stats(hf)
+        stats["cmax_head"] = jnp.max(jnp.abs(hf2d), axis=0)
+        stats["gram_head"] = _gram(hf2d)
+        return logits, stats
+    return logits
+
+
+CALIB_OUTPUTS = (
+    ["qs_x1", "qs_q", "qs_k", "qs_v", "qs_o", "qs_x2", "qs_d", "qs_head"]
+    + ["cmax_x1", "cmax_o", "cmax_x2", "cmax_d", "cmax_head"]
+    + ["gram_x1", "gram_o", "gram_x2", "gram_d", "gram_head"]
+)
+
+
+# ---------------------------------------------------------------------------
+# Losses + AdamW training step
+# ---------------------------------------------------------------------------
+
+def losses(logits, tokens, teacher_logits, kd_ratio, kd_temp):
+    """Mixture of KD cross-entropy (teacher soft labels, Hinton) and
+    next-token-prediction CE, masked on pad (id 0) targets."""
+    logits, teacher_logits = logits[:, :-1], teacher_logits[:, :-1]
+    tgt = tokens[:, 1:]
+    m = (tgt != 0).astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(m), 1.0)
+
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ntp_tok = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    ntp = jnp.sum(ntp_tok * m) / denom
+
+    t = kd_temp
+    pt = jax.nn.softmax(teacher_logits / t, axis=-1)
+    logq = jax.nn.log_softmax(logits / t, axis=-1)
+    kd_tok = -jnp.sum(pt * logq, axis=-1)
+    kd = jnp.sum(kd_tok * m) / denom * t * t
+
+    return kd_ratio * kd + (1.0 - kd_ratio) * ntp, ntp, kd
+
+
+def train_step(params, m, v, tokens, teacher_logits, lr, act_lrx, kd_ratio,
+               kd_temp, wd, step, mc: ModelConfig, pc: PrecisionConfig):
+    """One AdamW step. ``m``/``v`` are Adam moments keyed like ``params``.
+
+    Scalars (all runtime inputs, so one artifact serves every ablation):
+    lr, act_lrx (x50 activation-step LR boost), kd_ratio, kd_temp, wd,
+    step (1-based, for bias correction).
+    """
+
+    def loss_fn(p):
+        logits = forward(p, tokens, mc, pc)
+        loss, ntp, kd = losses(logits, tokens, teacher_logits, kd_ratio, kd_temp)
+        return loss, (ntp, kd)
+
+    (loss, (ntp, kd)), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads.values()))
+
+    t = step
+    bc1 = 1.0 - ADAM_B1 ** t
+    bc2 = 1.0 - ADAM_B2 ** t
+
+    new_p, new_m, new_v = {}, {}, {}
+    for name in params:
+        g = grads[name]
+        m1 = ADAM_B1 * m[name] + (1 - ADAM_B1) * g
+        v1 = ADAM_B2 * v[name] + (1 - ADAM_B2) * g * g
+        upd = (m1 / bc1) / (jnp.sqrt(v1 / bc2) + ADAM_EPS)
+        plr = lr * act_lrx if (name.startswith("sa_") or name.startswith("sc_")) else lr
+        p1 = params[name] - plr * upd
+        if name in DECAY_PARAMS:
+            p1 = p1 - plr * wd * params[name]
+        new_p[name], new_m[name], new_v[name] = p1, m1, v1
+
+    return new_p, new_m, new_v, loss, gnorm, ntp, kd

@@ -1,0 +1,162 @@
+"""Quantization primitives: STE fake-quant, LSQ learned-step quantizers,
+per-token dynamic quantization, and the paper's calibration rules.
+
+Everything here is the *training-time* (fake-quant) formulation of paper
+Eq. 1:
+
+    x_hat = round(clip(x / s, b_l, b_u)) * s
+
+with the straight-through estimator for d x_hat / d x and the LSQ gradient
+(Esser et al., 2019) for d x_hat / d s.
+"""
+
+import jax
+import jax.numpy as jnp
+from functools import partial
+
+EPS = 1e-9
+
+
+def qbounds(bits: int):
+    """Signed symmetric integer bounds (b_l, b_u) at a given precision."""
+    return -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+
+
+def _reduce_to_shape(g, shape):
+    """Sum-reduce gradient ``g`` down to a broadcastable ``shape``."""
+    if g.shape == tuple(shape):
+        return g
+    # sum over leading extra axes
+    while g.ndim > len(shape):
+        g = jnp.sum(g, axis=0)
+    # sum over broadcast axes
+    axes = tuple(i for i, (gs, ss) in enumerate(zip(g.shape, shape)) if ss == 1 and gs != 1)
+    if axes:
+        g = jnp.sum(g, axis=axes, keepdims=True)
+    return g.reshape(shape)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def lsq_quantize(x, s, qn, qp, grad_scale):
+    """LSQ fake-quantization with a learned step size ``s``.
+
+    ``s`` must broadcast against ``x`` (scalar for per-tensor, shaped
+    ``[..., 1]``-style for per-channel). ``grad_scale`` is the LSQ gradient
+    scale g = 1/sqrt(N * qp).
+    """
+    s = jnp.maximum(s, EPS)
+    v = x / s
+    vbar = jnp.clip(v, qn, qp)
+    return jnp.round(vbar) * s
+
+
+def _lsq_fwd(x, s, qn, qp, grad_scale):
+    out = lsq_quantize(x, s, qn, qp, grad_scale)
+    return out, (x, s)
+
+
+def _lsq_bwd(qn, qp, grad_scale, res, g):
+    x, s = res
+    s_safe = jnp.maximum(s, EPS)
+    v = x / s_safe
+    in_range = (v >= qn) & (v <= qp)
+    # d x_hat / d x : straight-through inside the clip range, 0 outside.
+    gx = jnp.where(in_range, g, 0.0)
+    # d x_hat / d s : LSQ — (round(v) - v) inside, clip bound outside.
+    ds_elem = jnp.where(in_range, jnp.round(v) - v, jnp.clip(v, qn, qp))
+    gs = _reduce_to_shape(g * ds_elem, s.shape) * grad_scale
+    return gx, gs
+
+
+lsq_quantize.defvjp(_lsq_fwd, _lsq_bwd)
+
+
+def lsq_grad_scale(numel_per_step: int, qp: int) -> float:
+    """LSQ step-size gradient scale: 1 / sqrt(N * Q_p)."""
+    import math
+
+    return 1.0 / math.sqrt(max(1.0, float(numel_per_step) * float(qp)))
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def ste_dynamic_quantize(x, bits):
+    """Per-token (last-axis) dynamic symmetric quantization with STE.
+
+    The step is recomputed from the data at every call — this is the 'd'
+    mode in the paper's A8d configurations; there is no learned parameter.
+    """
+    qn, qp = qbounds(bits)
+    s = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / qp
+    s = jnp.maximum(s, EPS)
+    return jnp.round(jnp.clip(x / s, qn, qp)) * s
+
+
+def _dyn_fwd(x, bits):
+    return ste_dynamic_quantize(x, bits), None
+
+
+def _dyn_bwd(bits, _res, g):
+    # Pure STE: by construction |x|/s <= qp, nothing is clipped.
+    return (g,)
+
+
+ste_dynamic_quantize.defvjp(_dyn_fwd, _dyn_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Calibration (no gradients involved)
+# ---------------------------------------------------------------------------
+
+def act_step_percentile(x, bits: int, percentile: float):
+    """Paper's activation calibration: step = |x| percentile / q_p."""
+    _, qp = qbounds(bits)
+    q = jnp.percentile(jnp.abs(x).reshape(-1), percentile)
+    return jnp.maximum(q / qp, EPS)
+
+
+def act_step_max(x, bits: int):
+    """Max calibration (the weak baseline in the Table 4 ablation)."""
+    _, qp = qbounds(bits)
+    return jnp.maximum(jnp.max(jnp.abs(x)) / qp, EPS)
+
+
+def weight_step_mse(w, bits: int, axis=None, iters: int = 60):
+    """The paper's novel convex-MSE weight calibration (Eq. 2).
+
+    Approximates quantization MSE as
+        eps(s) = sum_i max(s^2/12, H(|w_i| - s b)(|w_i| - s b)^2),
+    with b = 2^{p-1} - 0.5, and minimizes over s by ternary search (the
+    objective is convex in s). ``axis`` = axes to reduce over; the
+    remaining axes hold independent (per-channel) steps.
+    """
+    b = 2.0 ** (bits - 1) - 0.5
+    aw = jnp.abs(w)
+    if axis is None:
+        axis = tuple(range(w.ndim))
+    hi = jnp.max(aw, axis=axis, keepdims=True) / b + EPS
+    lo = jnp.full_like(hi, EPS)
+
+    def err(s):
+        over = jnp.maximum(aw - s * b, 0.0)
+        return jnp.sum(jnp.maximum(s * s / 12.0, over * over), axis=axis, keepdims=True)
+
+    def body(_, carry):
+        lo, hi = carry
+        m1 = lo + (hi - lo) / 3.0
+        m2 = hi - (hi - lo) / 3.0
+        e1, e2 = err(m1), err(m2)
+        lo = jnp.where(e1 > e2, m1, lo)
+        hi = jnp.where(e1 > e2, hi, m2)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    s = (lo + hi) / 2.0
+    return jnp.squeeze(s, axis=axis) if isinstance(axis, tuple) else s
+
+
+def weight_step_lsq_init(w, bits: int, axis=None):
+    """LSQ-paper initialization: s = 2 * mean|w| / sqrt(q_p)."""
+    _, qp = qbounds(bits)
+    if axis is None:
+        axis = tuple(range(w.ndim))
+    return 2.0 * jnp.mean(jnp.abs(w), axis=axis) / jnp.sqrt(float(qp)) + EPS

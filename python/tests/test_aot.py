@@ -1,0 +1,82 @@
+"""AOT pipeline: manifest consistency and HLO-text round-trip sanity."""
+
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model as M
+from compile.configs import ARTIFACT_MATRIX, MODELS, PRECISIONS, TINY
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_artifact_matrix_names_unique():
+    names = [f"{s}_{p}_{m}" for s, p, m in ARTIFACT_MATRIX]
+    assert len(names) == len(set(names))
+
+
+def test_matrix_references_known_configs():
+    for s, p, m in ARTIFACT_MATRIX:
+        assert s in MODELS and p in PRECISIONS and m in ("fwd", "train", "calib")
+
+
+def test_build_artifact_shapes_fwd():
+    fn, ins, outs = aot.build_artifact(TINY, PRECISIONS["fp16"], "fwd")
+    shapes = jax.eval_shape(fn, *[s for _, s in ins])
+    assert outs == ["logits"]
+    assert shapes[0].shape == (TINY.fwd_batch, TINY.seq_len, TINY.vocab)
+
+
+def test_build_artifact_train_io_symmetry():
+    """train outputs mirror params/m/v inputs exactly (order and shape)."""
+    fn, ins, outs = aot.build_artifact(TINY, PRECISIONS["a8s-c8-w4"], "train")
+    nparams = len(M.param_spec(TINY, PRECISIONS["a8s-c8-w4"]))
+    assert len(ins) == 3 * nparams + 2 + len(aot.TRAIN_SCALARS)
+    assert len(outs) == 3 * nparams + 4
+    in_names = [n for n, _ in ins]
+    assert in_names[:nparams] == outs[:nparams]
+    shapes = jax.eval_shape(fn, *[s for _, s in ins])
+    for (name, sds), out_sds in zip(ins[: 3 * nparams], shapes):
+        assert sds.shape == out_sds.shape, name
+
+
+def test_build_artifact_calib_outputs():
+    fn, ins, outs = aot.build_artifact(TINY, PRECISIONS["fp16"], "calib")
+    assert outs == ["logits"] + list(M.CALIB_OUTPUTS)
+    shapes = jax.eval_shape(fn, *[s for _, s in ins])
+    assert len(shapes) == len(outs)
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.txt")),
+                    reason="artifacts not built")
+def test_manifest_covers_matrix():
+    text = open(os.path.join(ART, "manifest.txt")).read()
+    for s, p, m in ARTIFACT_MATRIX:
+        assert f"artifact {s}_{p}_{m} " in text
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.txt")),
+                    reason="artifacts not built")
+def test_manifest_artifact_files_exist():
+    for line in open(os.path.join(ART, "manifest.txt")):
+        if line.startswith("artifact "):
+            fname = [f for f in line.split() if f.startswith("file=")][0][5:]
+            assert os.path.exists(os.path.join(ART, fname)), fname
+
+
+def test_hlo_text_lowering_small_fn():
+    """The HLO-text interchange survives a lower->text round trip."""
+    fn = lambda x, y: (jnp.matmul(x, y) + 1.0,)
+    spec = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    text = aot.to_hlo_text(jax.jit(fn).lower(spec, spec))
+    assert "HloModule" in text and "dot" in text
+
+
+def test_scalar_and_shape_tags():
+    assert aot._shape_tag(()) == "scalar"
+    assert aot._shape_tag((2, 3)) == "2x3"
+    assert aot._dtype_tag(np.dtype("float32")) == "f32"
+    assert aot._dtype_tag(np.dtype("int32")) == "i32"

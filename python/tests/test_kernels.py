@@ -1,0 +1,101 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles (hypothesis sweeps)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, quantize, qmatmul
+
+DIMS = st.sampled_from([8, 16, 32, 64, 128, 192, 256])
+BITS = st.sampled_from([2, 4, 8, 16])
+SEEDS = st.integers(0, 2**31 - 1)
+
+
+def _rand(rng, *shape, scale=1.0):
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, n=DIMS, bits=BITS, seed=SEEDS)
+def test_fake_quant_matches_ref(m, n, bits, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, m, n)
+    s = float(abs(rng.standard_normal()) * 0.1 + 1e-3)
+    got = quantize.fake_quant_pallas(x, s, bits)
+    want = ref.fake_quant_ref(jnp.asarray(x), s, bits)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(k=DIMS, n=DIMS, bits=BITS, seed=SEEDS)
+def test_fake_quant_channel_matches_ref(k, n, bits, seed):
+    rng = np.random.default_rng(seed)
+    w = _rand(rng, k, n)
+    sw = (np.abs(rng.standard_normal(n)) * 0.1 + 1e-3).astype(np.float32)
+    got = quantize.fake_quant_channel_pallas(w, sw, bits)
+    want = ref.fake_quant_ref(jnp.asarray(w), jnp.asarray(sw)[None, :], bits)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, n=DIMS, bits=BITS, seed=SEEDS)
+def test_dynamic_quant_matches_ref(m, n, bits, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, m, n, scale=3.0)
+    got = quantize.dynamic_quant_pallas(x, bits)
+    want = ref.dynamic_quant_ref(jnp.asarray(x), bits)
+    # a 1-ulp difference in the row scale can flip a rounding bin; allow up
+    # to one step of error per element (the bulk must still match exactly).
+    step = np.abs(x).max() / (2 ** (bits - 1) - 1)
+    diff = np.abs(np.asarray(got) - np.asarray(want))
+    assert diff.max() <= step * 1.001 + 1e-6
+    assert np.mean(diff > 1e-6) < 0.02
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, seed=SEEDS,
+       abits=st.sampled_from([4, 8, 16]), wbits=st.sampled_from([2, 4, 8]))
+def test_qmatmul_static_matches_ref(m, k, n, seed, abits, wbits):
+    rng = np.random.default_rng(seed)
+    x, w = _rand(rng, m, k), _rand(rng, k, n)
+    sw = (np.abs(rng.standard_normal(n)) * 0.05 + 1e-3).astype(np.float32)
+    sx = float(abs(rng.standard_normal()) * 0.05 + 1e-3)
+    got = qmatmul.qmatmul_pallas(x, w, sx, sw, abits, wbits)
+    want = ref.qmatmul_ref(jnp.asarray(x), jnp.asarray(w), sx, jnp.asarray(sw), abits, wbits)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, seed=SEEDS)
+def test_qmatmul_dynamic_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _rand(rng, m, k, scale=2.0), _rand(rng, k, n)
+    sw = (np.abs(rng.standard_normal(n)) * 0.05 + 1e-3).astype(np.float32)
+    got = qmatmul.qmatmul_pallas(x, w, None, sw, 8, 4)
+    want = ref.qmatmul_ref(jnp.asarray(x), jnp.asarray(w), None, jnp.asarray(sw), 8, 4)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_qmatmul_rejects_shape_mismatch():
+    x = np.zeros((8, 16), np.float32)
+    w = np.zeros((8, 16), np.float32)
+    with pytest.raises(AssertionError):
+        qmatmul.qmatmul_pallas(x, w, 0.1, np.ones(16, np.float32), 8, 4)
+
+
+def test_block_helper_divides():
+    for dim in [8, 24, 100, 128, 640, 1000]:
+        b = quantize._block(dim)
+        assert dim % b == 0 and b <= 128
+
+
+def test_fake_quant_grid_levels():
+    """Quantized values must land on the step grid within the clip range."""
+    rng = np.random.default_rng(0)
+    x = _rand(rng, 32, 64, scale=2.0)
+    s = 0.07
+    y = np.asarray(quantize.fake_quant_pallas(x, s, 4))
+    ratio = y / s
+    np.testing.assert_allclose(ratio, np.round(ratio), atol=1e-4)
+    assert ratio.min() >= -8 - 1e-4 and ratio.max() <= 7 + 1e-4

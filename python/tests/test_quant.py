@@ -1,0 +1,146 @@
+"""Quantizer semantics: STE/LSQ gradients, dynamic quant, calibration rules."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quant
+
+
+def test_qbounds():
+    assert quant.qbounds(4) == (-8, 7)
+    assert quant.qbounds(8) == (-128, 127)
+    assert quant.qbounds(16) == (-32768, 32767)
+    assert quant.qbounds(2) == (-2, 1)
+
+
+def test_lsq_forward_matches_eq1():
+    x = jnp.asarray([-3.0, -0.26, -0.24, 0.0, 0.26, 10.0])
+    s = jnp.asarray(0.5)
+    y = quant.lsq_quantize(x, s, -8, 7, 1.0)
+    # round(clip(x/s, -8, 7)) * s
+    np.testing.assert_allclose(y, [-1.5 * 2, -0.5, -0.0, 0.0, 0.5, 3.5], atol=1e-6)
+
+
+def test_lsq_grad_x_is_ste_with_clipping():
+    s = jnp.asarray(0.5)
+    x = jnp.asarray([-10.0, 0.2, 10.0])  # below, inside, above the clip range
+    g = jax.grad(lambda x: jnp.sum(quant.lsq_quantize(x, s, -8, 7, 1.0)))(x)
+    np.testing.assert_allclose(g, [0.0, 1.0, 0.0], atol=1e-6)
+
+
+def test_lsq_grad_s_formula():
+    """d xhat/d s = round(v)-v inside range, clip bound outside (LSQ eq. 2)."""
+    s = jnp.asarray(1.0)
+    for xv, expect in [(0.3, np.round(0.3) - 0.3), (7.4, 7.0), (-9.0, -8.0), (100.0, 7.0)]:
+        g = jax.grad(lambda s: jnp.sum(quant.lsq_quantize(jnp.asarray([xv]), s, -8, 7, 1.0)))(s)
+        np.testing.assert_allclose(g, expect, atol=1e-5)
+
+
+def test_lsq_grad_s_scale_applied():
+    x = jnp.asarray([0.3, 0.3])
+    base = jax.grad(lambda s: jnp.sum(quant.lsq_quantize(x, s, -8, 7, 1.0)))(jnp.asarray(1.0))
+    half = jax.grad(lambda s: jnp.sum(quant.lsq_quantize(x, s, -8, 7, 0.5)))(jnp.asarray(1.0))
+    np.testing.assert_allclose(half, base * 0.5, atol=1e-6)
+
+
+def test_lsq_per_channel_step():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.standard_normal((16, 4)).astype(np.float32))
+    s = jnp.asarray([0.1, 0.2, 0.3, 0.4])[None, :]
+    y = quant.lsq_quantize(w, s, -8, 7, 1.0)
+    for c in range(4):
+        ratio = np.asarray(y[:, c]) / float(s[0, c])
+        np.testing.assert_allclose(ratio, np.round(ratio), atol=1e-4)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), bits=st.sampled_from([4, 8]))
+def test_dynamic_quant_error_bound(seed, bits):
+    """Per-token dynamic quantization error is bounded by s/2 per element."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((8, 32)).astype(np.float32) * 5)
+    y = quant.ste_dynamic_quantize(x, bits)
+    _, qp = quant.qbounds(bits)
+    s = np.max(np.abs(np.asarray(x)), axis=-1, keepdims=True) / qp
+    assert np.all(np.abs(np.asarray(y - x)) <= s / 2 + 1e-6)
+
+
+def test_dynamic_quant_grad_is_identity():
+    x = jnp.asarray([[1.0, -2.0, 3.0]])
+    g = jax.grad(lambda x: jnp.sum(quant.ste_dynamic_quantize(x, 8) * 2.0))(x)
+    np.testing.assert_allclose(g, 2.0 * np.ones_like(x), atol=1e-6)
+
+
+def test_act_step_percentile_vs_max():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal(100000).astype(np.float32))
+    sp = quant.act_step_percentile(x, 8, 99.99)
+    sm = quant.act_step_max(x, 8)
+    assert float(sp) < float(sm)  # percentile clips the outlier tail
+    assert float(sp) > 0
+
+
+def test_weight_step_mse_matches_bruteforce():
+    rng = np.random.default_rng(2)
+    w = rng.standard_normal(512).astype(np.float32)
+    s = float(quant.weight_step_mse(jnp.asarray(w), 4))
+    b = 2.0 ** 3 - 0.5
+
+    def eps(sv):
+        over = np.maximum(np.abs(w) - sv * b, 0.0)
+        return np.sum(np.maximum(sv * sv / 12.0, over * over))
+
+    grid = np.linspace(1e-4, np.abs(w).max() / b, 4000)
+    best = grid[np.argmin([eps(sv) for sv in grid])]
+    assert abs(s - best) / best < 0.02
+
+
+def test_weight_step_mse_beats_max_scaling_mse():
+    """The convex-MSE step should give lower true quantization MSE than
+    naive max-scaling for heavy-tailed weights (the reason the paper
+    introduces it)."""
+    rng = np.random.default_rng(3)
+    w = jnp.asarray((rng.standard_t(df=3, size=4096) * 0.05).astype(np.float32))
+    _, qp = quant.qbounds(4)
+
+    def mse(s):
+        y = quant.lsq_quantize(w, jnp.asarray(s), -8, 7, 1.0)
+        return float(jnp.mean((y - w) ** 2))
+
+    s_mse = float(quant.weight_step_mse(w, 4))
+    s_max = float(jnp.max(jnp.abs(w)) / qp)
+    assert mse(s_mse) < mse(s_max)
+
+
+def test_weight_step_mse_per_channel_shape():
+    rng = np.random.default_rng(4)
+    w = jnp.asarray(rng.standard_normal((64, 8)).astype(np.float32))
+    s = quant.weight_step_mse(w, 4, axis=(0,))
+    assert s.shape == (8,)
+    assert np.all(np.asarray(s) > 0)
+
+
+def test_weight_step_lsq_init():
+    w = jnp.asarray(np.ones(100, np.float32))
+    s = quant.weight_step_lsq_init(w, 4)
+    np.testing.assert_allclose(float(s), 2.0 / np.sqrt(7.0), rtol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_mse_objective_convexity_witness(seed):
+    """eps(s) evaluated on a grid is unimodal (sanity for ternary search)."""
+    rng = np.random.default_rng(seed)
+    w = np.abs(rng.standard_normal(256)).astype(np.float32)
+    b = 2.0 ** 3 - 0.5
+    grid = np.linspace(1e-4, w.max() / b * 1.5, 200)
+    vals = []
+    for sv in grid:
+        over = np.maximum(w - sv * b, 0.0)
+        vals.append(np.sum(np.maximum(sv * sv / 12.0, over * over)))
+    vals = np.array(vals)
+    k = int(np.argmin(vals))
+    assert np.all(np.diff(vals[: k + 1]) <= 1e-3) and np.all(np.diff(vals[k:]) >= -1e-3)

@@ -1,0 +1,141 @@
+//! Benchmark harness (criterion is unavailable offline; hand-rolled timing
+//! with warmup + repetitions). One section per paper table/figure measuring
+//! the compute that regenerates it, plus the §Perf hot-path microbenches.
+//!
+//! Run: `cargo bench --offline` (results also land in bench_output.txt via
+//! the Makefile).
+
+use silq::config::Manifest;
+use silq::data::vocab::Vocab;
+use silq::data::{Batcher, DataMix, World};
+use silq::linalg::{hadamard, Mat};
+use silq::model::ParamStore;
+use silq::ptq::gptq::gptq_quantize_family;
+use silq::quant;
+use silq::runtime::{build_inputs, literal_i32, Engine};
+use silq::util::{timer::bench_ms, Rng};
+
+fn section(name: &str) {
+    println!("\n== {name} ==");
+}
+
+fn report(name: &str, ms: f64, extra: &str) {
+    println!("{name:<44} {ms:>10.3} ms  {extra}");
+}
+
+fn main() {
+    println!("silq bench harness (warmup+avg wall-clock; CPU PJRT)");
+
+    // ---------------- host-side quantization (L3 substrate) --------------
+    section("quant substrate (feeds every PTQ table)");
+    let mut rng = Rng::new(0);
+    let w: Vec<f32> = rng.normal_vec(256 * 256, 0.1);
+    report("weight_step_mse_per_channel 256x256 int4", bench_ms(2, 10, || {
+        let _ = quant::calib::weight_step_mse_per_channel(&w, 256, 4);
+    }), "(paper Eq. 2, ternary search)");
+    let steps = quant::calib::weight_step_mse_per_channel(&w, 256, 4);
+    report("fake_quant_per_channel 256x256 int4", bench_ms(2, 50, || {
+        let mut c = w.clone();
+        quant::fake_quant_per_channel(&mut c, 256, &steps, 4);
+    }), "");
+    let mut x = rng.normal_vec(1024 * 256, 1.0);
+    report("dynamic_quant_rows 1024x256 int8", bench_ms(2, 50, || {
+        let mut c = x.clone();
+        quant::dynamic_quant_rows(&mut c, 256, 8);
+    }), "(A8d runtime path)");
+    x.truncate(0);
+
+    // ---------------- GPTQ / rotations (Table 1 baselines) ---------------
+    section("PTQ kernels (Table 1 baselines)");
+    let k = 128;
+    let gram = {
+        let mut g = Mat::zeros(k, k);
+        let mut r2 = Rng::new(1);
+        for _ in 0..256 {
+            let v = r2.normal_vec(k, 1.0);
+            for i in 0..k {
+                for j in 0..k {
+                    g.data[i * k + j] += v[i] * v[j];
+                }
+            }
+        }
+        g
+    };
+    let wk: Vec<f32> = rng.normal_vec(k * 128, 0.1);
+    let sk = quant::calib::weight_step_mse_per_channel(&wk, 128, 4);
+    report("gptq_quantize_family 128x128 int4", bench_ms(1, 5, || {
+        let mut c = wk.clone();
+        let _ = gptq_quantize_family(&mut c, k, 128, &gram, &sk, 4);
+    }), "(Cholesky + OBS updates)");
+    report("hadamard(128) construction", bench_ms(2, 50, || {
+        let _ = hadamard(128);
+    }), "(SpinQuant rotation)");
+    let a = Mat::from_vec(128, 128, rng.normal_vec(128 * 128, 1.0));
+    let b = Mat::from_vec(128, 128, rng.normal_vec(128 * 128, 1.0));
+    report("procrustes rotation_decomposition 128x128", bench_ms(1, 3, || {
+        let _ = silq::linalg::rotation_decomposition(&a, &b);
+    }), "(Figure 3, Jacobi SVD)");
+
+    // ---------------- data pipeline (L3 hot loop input) -------------------
+    section("data pipeline");
+    let world = World::generate(Vocab::new(256), 7);
+    let mut batcher = Batcher::new(&world, DataMix::Corpus, 16, 64, 0);
+    report("corpus batch 16x64", bench_ms(10, 200, || {
+        let _ = batcher.next_batch();
+    }), "(must be << exec time)");
+
+    // ---------------- PJRT execution (every experiment) ------------------
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        println!("\nartifacts not built; skipping PJRT benches (run `make artifacts`)");
+        return;
+    }
+    let engine = Engine::new("artifacts").expect("engine");
+    let _ = Manifest::load("artifacts").unwrap();
+    section("PJRT execution (Tables 1-4, Figure 1)");
+    for art in ["tiny_fp16_fwd", "tiny_a8d-c8-w4_fwd", "tiny_a8s-c8-w4_fwd", "tiny-pallas_a8d-c8-w4_fwd"] {
+        let m = engine.module(art).expect("module");
+        let mc = engine.manifest.model(&m.spec.model).unwrap().clone();
+        let mut r3 = Rng::new(3);
+        let ps = ParamStore::init(&m.spec, &mc, &mut r3);
+        let tok_spec = m.spec.inputs[m.spec.input_index("tokens").unwrap()].clone();
+        let tokens: Vec<i32> = (0..tok_spec.numel()).map(|i| 1 + (i as i32 % 250)).collect();
+        let inputs = build_inputs(&m.spec, &ps, &[("tokens", literal_i32(&tok_spec.dims, &tokens).unwrap())]).unwrap();
+        let toks_per = tok_spec.numel() as f64;
+        let ms = bench_ms(2, 10, || {
+            let _ = m.run(&inputs).unwrap();
+        });
+        report(&format!("fwd {art}"), ms, &format!("({:.0} tok/s)", toks_per / ms * 1e3));
+    }
+
+    // train step (the QAT hot path — Table 1/2/3/4 inner loop)
+    for art in ["tiny_fp16_train", "tiny_a8s-c8-w4_train"] {
+        let m = engine.module(art).expect("module");
+        let mc = engine.manifest.model(&m.spec.model).unwrap().clone();
+        let spec = m.spec.clone();
+        let mut r4 = Rng::new(4);
+        let ps = ParamStore::init(&m.spec, &mc, &mut r4);
+        let n = ps.names.len();
+        let mut inputs = vec![];
+        for (i, t) in spec.inputs.iter().enumerate() {
+            if i < n {
+                inputs.push(silq::runtime::literal_f32(&t.dims, &ps.values[i]).unwrap());
+            } else if i < 3 * n {
+                inputs.push(silq::runtime::literal_f32(&t.dims, &vec![0.0; t.numel()]).unwrap());
+            } else if t.name == "tokens" {
+                let toks: Vec<i32> = (0..t.numel()).map(|i| 1 + (i as i32 % 250)).collect();
+                inputs.push(literal_i32(&t.dims, &toks).unwrap());
+            } else if t.name == "teacher_logits" {
+                inputs.push(silq::runtime::literal_f32(&t.dims, &vec![0.0; t.numel()]).unwrap());
+            } else {
+                inputs.push(silq::runtime::literal_scalar(1.0));
+            }
+        }
+        let batch_tokens = mc.train_batch * mc.seq_len;
+        let ms = bench_ms(1, 5, || {
+            let _ = m.run(&inputs).unwrap();
+        });
+        report(&format!("train_step {art}"), ms, &format!("({:.0} tok/s)", batch_tokens as f64 / ms * 1e3));
+    }
+
+    println!("\nbench harness done");
+}

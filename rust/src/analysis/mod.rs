@@ -1,0 +1,116 @@
+//! Weight-rotation analysis (paper section 3.4 / Figure 3): how much of the
+//! weight change produced by QAT or SpinQuant is explainable as a pure
+//! matrix rotation (orthogonal Procrustes distance) vs not.
+
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+use crate::config::ModelCfg;
+use crate::linalg::{rotation_decomposition, Mat, RotationSplit};
+use crate::model::ParamStore;
+
+/// Per-layer-type averages of the rotational / non-rotational split.
+pub fn analyze_rotation(
+    before: &ParamStore,
+    after: &ParamStore,
+    _mc: &ModelCfg,
+) -> Result<BTreeMap<String, RotationSplit>> {
+    let mut grouped: BTreeMap<String, Vec<RotationSplit>> = BTreeMap::new();
+    // the paper plots per linear-layer type; q/k/g/u/d/o are single-side
+    // rotated in our SpinQuant-analog so all are comparable.
+    for wn in ["wq", "wk", "wv", "wo", "wg", "wu", "wd"] {
+        let shape = before.shape(wn)?.to_vec();
+        let (l, k, n) = (shape[0], shape[1], shape[2]);
+        for li in 0..l {
+            let a = Mat::from_vec(k, n, before.get(wn)?[li * k * n..(li + 1) * k * n].to_vec());
+            let b = Mat::from_vec(k, n, after.get(wn)?[li * k * n..(li + 1) * k * n].to_vec());
+            grouped.entry(wn.to_string()).or_default().push(rotation_decomposition(&a, &b));
+        }
+    }
+    Ok(grouped
+        .into_iter()
+        .map(|(k, v)| {
+            let n = v.len() as f64;
+            (
+                k,
+                RotationSplit {
+                    total: v.iter().map(|s| s.total).sum::<f64>() / n,
+                    non_rotational: v.iter().map(|s| s.non_rotational).sum::<f64>() / n,
+                    rotational: v.iter().map(|s| s.rotational).sum::<f64>() / n,
+                },
+            )
+        })
+        .collect())
+}
+
+/// Fraction of the total weight change explained by rotation, aggregated
+/// over all layer types (the paper's headline 90% vs 43% numbers).
+pub fn rotation_fraction(splits: &BTreeMap<String, RotationSplit>) -> f64 {
+    let total: f64 = splits.values().map(|s| s.total).sum();
+    let rot: f64 = splits.values().map(|s| s.rotational).sum();
+    if total <= 0.0 {
+        0.0
+    } else {
+        rot / total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::random_rotation;
+    use crate::util::Rng;
+
+    fn fake_store(seed: u64) -> (ParamStore, ModelCfg) {
+        use crate::config::TensorSpec;
+        let mc = ModelCfg {
+            name: "t".into(), vocab: 32, d_model: 8, n_layers: 2, n_heads: 2,
+            d_ff: 8, seq_len: 8, train_batch: 1, fwd_batch: 1, use_pallas: false,
+        };
+        let mut inputs = vec![];
+        for wn in ["wq", "wk", "wv", "wo", "wg", "wu", "wd"] {
+            inputs.push(TensorSpec { name: format!("params.{wn}"), dtype: "f32".into(), dims: vec![2, 8, 8] });
+        }
+        let spec = crate::config::ArtifactSpec {
+            name: "x".into(), file: "x".into(), model: "t".into(), prec: "p".into(),
+            mode: "fwd".into(), inputs, outputs: vec![],
+        };
+        let mut rng = Rng::new(seed);
+        let mut ps = ParamStore::from_spec(&spec);
+        for v in ps.values.iter_mut() {
+            *v = rng.normal_vec(v.len(), 1.0);
+        }
+        (ps, mc)
+    }
+
+    #[test]
+    fn pure_rotation_has_high_fraction() {
+        let (before, mc) = fake_store(1);
+        let mut after = before.clone();
+        let r = random_rotation(8, &mut Rng::new(2));
+        // rotate every weight on the left: B = R A
+        for i in 0..after.names.len() {
+            for li in 0..2 {
+                let a = Mat::from_vec(8, 8, before.values[i][li * 64..(li + 1) * 64].to_vec());
+                let b = r.matmul(&a);
+                after.values[i][li * 64..(li + 1) * 64].copy_from_slice(&b.data);
+            }
+        }
+        let splits = analyze_rotation(&before, &after, &mc).unwrap();
+        assert!(rotation_fraction(&splits) > 0.9, "{}", rotation_fraction(&splits));
+    }
+
+    #[test]
+    fn additive_noise_has_low_fraction() {
+        let (before, mc) = fake_store(3);
+        let mut after = before.clone();
+        let mut rng = Rng::new(4);
+        for v in after.values.iter_mut() {
+            for x in v.iter_mut() {
+                *x += rng.normal() * 0.5;
+            }
+        }
+        let splits = analyze_rotation(&before, &after, &mc).unwrap();
+        assert!(rotation_fraction(&splits) < 0.5, "{}", rotation_fraction(&splits));
+    }
+}

@@ -1,0 +1,294 @@
+//! Artifact manifest parser.
+//!
+//! `python -m compile.aot` writes `artifacts/manifest.txt`, a plain
+//! line-based description of every compiled artifact (serde is unavailable
+//! offline, and a line format is trivially diffable anyway). This module is
+//! the Rust half of that contract.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::kv_pairs;
+
+/// Architecture description mirrored from `python/compile/configs.py`.
+#[derive(Clone, Debug)]
+pub struct ModelCfg {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub train_batch: usize,
+    pub fwd_batch: usize,
+    pub use_pallas: bool,
+}
+
+/// Quantization placement mirrored from `python/compile/configs.py`.
+#[derive(Clone, Debug)]
+pub struct PrecCfg {
+    pub name: String,
+    pub quantized: bool,
+    pub act_bits: u32,
+    pub act_dynamic: bool,
+    pub cache_bits: u32,
+    pub weight_bits: u32,
+    pub head_bits: u32,
+    pub query_bits: u32,
+    pub online_rot: bool,
+}
+
+/// One tensor in an artifact signature.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    /// "f32" | "i32"
+    pub dtype: String,
+    /// empty for scalars
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// One compiled artifact: file + typed I/O signature.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub model: String,
+    pub prec: String,
+    pub mode: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactSpec {
+    /// Names of the `params.*` inputs in order (the parameter contract).
+    pub fn param_names(&self) -> Vec<String> {
+        self.inputs
+            .iter()
+            .filter_map(|t| t.name.strip_prefix("params.").map(|s| s.to_string()))
+            .collect()
+    }
+
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|t| t.name == name)
+            .ok_or_else(|| anyhow!("artifact {}: no input {name}", self.name))
+    }
+
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|t| t.name == name)
+            .ok_or_else(|| anyhow!("artifact {}: no output {name}", self.name))
+    }
+}
+
+/// The whole parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelCfg>,
+    pub precs: BTreeMap<String, PrecCfg>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn get<'a>(kv: &'a [(String, String)], key: &str) -> Result<&'a str> {
+    kv.iter()
+        .find(|(k, _)| k == key)
+        .map(|(_, v)| v.as_str())
+        .ok_or_else(|| anyhow!("missing key {key}"))
+}
+
+fn parse_dims(tag: &str) -> Result<Vec<usize>> {
+    if tag == "scalar" {
+        return Ok(vec![]);
+    }
+    tag.split('x')
+        .map(|d| d.parse::<usize>().context("bad dim"))
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let mut m = Manifest { dir, ..Default::default() };
+        let mut cur: Option<ArtifactSpec> = None;
+
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let tag = it.next().unwrap();
+            let rest: Vec<&str> = it.collect();
+            let kv = kv_pairs(line);
+            match tag {
+                "model" => {
+                    let name = rest.first().ok_or_else(|| anyhow!("line {lineno}: model name"))?;
+                    m.models.insert(
+                        name.to_string(),
+                        ModelCfg {
+                            name: name.to_string(),
+                            vocab: get(&kv, "vocab")?.parse()?,
+                            d_model: get(&kv, "d_model")?.parse()?,
+                            n_layers: get(&kv, "n_layers")?.parse()?,
+                            n_heads: get(&kv, "n_heads")?.parse()?,
+                            d_ff: get(&kv, "d_ff")?.parse()?,
+                            seq_len: get(&kv, "seq_len")?.parse()?,
+                            train_batch: get(&kv, "train_batch")?.parse()?,
+                            fwd_batch: get(&kv, "fwd_batch")?.parse()?,
+                            use_pallas: get(&kv, "use_pallas")? == "1",
+                        },
+                    );
+                }
+                "prec" => {
+                    let name = rest.first().ok_or_else(|| anyhow!("line {lineno}: prec name"))?;
+                    m.precs.insert(
+                        name.to_string(),
+                        PrecCfg {
+                            name: name.to_string(),
+                            quantized: get(&kv, "quantized")? == "1",
+                            act_bits: get(&kv, "act_bits")?.parse()?,
+                            act_dynamic: get(&kv, "act_dynamic")? == "1",
+                            cache_bits: get(&kv, "cache_bits")?.parse()?,
+                            weight_bits: get(&kv, "weight_bits")?.parse()?,
+                            head_bits: get(&kv, "head_bits")?.parse()?,
+                            query_bits: get(&kv, "query_bits")?.parse()?,
+                            online_rot: get(&kv, "online_rot")? == "1",
+                        },
+                    );
+                }
+                "artifact" => {
+                    let name = rest.first().ok_or_else(|| anyhow!("line {lineno}: artifact name"))?;
+                    cur = Some(ArtifactSpec {
+                        name: name.to_string(),
+                        file: get(&kv, "file")?.to_string(),
+                        model: get(&kv, "model")?.to_string(),
+                        prec: get(&kv, "prec")?.to_string(),
+                        mode: get(&kv, "mode")?.to_string(),
+                        inputs: vec![],
+                        outputs: vec![],
+                    });
+                }
+                "in" | "out" => {
+                    let a = cur.as_mut().ok_or_else(|| anyhow!("line {lineno}: io outside artifact"))?;
+                    if rest.len() != 3 {
+                        bail!("line {lineno}: expected `in name dtype dims`");
+                    }
+                    let spec = TensorSpec {
+                        name: rest[0].to_string(),
+                        dtype: rest[1].to_string(),
+                        dims: parse_dims(rest[2])?,
+                    };
+                    if tag == "in" {
+                        a.inputs.push(spec);
+                    } else {
+                        a.outputs.push(spec);
+                    }
+                }
+                "endartifact" => {
+                    let a = cur.take().ok_or_else(|| anyhow!("line {lineno}: stray endartifact"))?;
+                    m.artifacts.insert(a.name.clone(), a);
+                }
+                other => bail!("line {lineno}: unknown tag {other}"),
+            }
+        }
+        if cur.is_some() {
+            bail!("unterminated artifact block");
+        }
+        Ok(m)
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.get(name).ok_or_else(|| anyhow!("unknown artifact {name}"))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelCfg> {
+        self.models.get(name).ok_or_else(|| anyhow!("unknown model {name}"))
+    }
+
+    pub fn prec(&self, name: &str) -> Result<&PrecCfg> {
+        self.precs.get(name).ok_or_else(|| anyhow!("unknown precision {name}"))
+    }
+
+    pub fn hlo_path(&self, artifact: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.artifact(artifact)?.file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# silq artifact manifest v1
+model tiny vocab=256 d_model=128 n_layers=4 n_heads=4 d_ff=256 seq_len=64 train_batch=16 fwd_batch=32 use_pallas=0
+prec fp16 quantized=0 act_bits=8 act_dynamic=1 cache_bits=8 weight_bits=4 head_bits=8 query_bits=16 online_rot=0
+artifact tiny_fp16_fwd file=tiny_fp16_fwd.hlo.txt model=tiny prec=fp16 mode=fwd
+in params.embed f32 256x128
+in tokens i32 32x64
+out logits f32 32x64x256
+endartifact
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.models["tiny"].d_model, 128);
+        assert!(!m.precs["fp16"].quantized);
+        let a = m.artifact("tiny_fp16_fwd").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.outputs[0].dims, vec![32, 64, 256]);
+        assert_eq!(a.param_names(), vec!["embed"]);
+    }
+
+    #[test]
+    fn scalar_dims() {
+        assert_eq!(parse_dims("scalar").unwrap(), Vec::<usize>::new());
+        assert_eq!(parse_dims("2x3").unwrap(), vec![2, 3]);
+        assert!(parse_dims("2xq").is_err());
+    }
+
+    #[test]
+    fn io_indexing() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        let a = m.artifact("tiny_fp16_fwd").unwrap();
+        assert_eq!(a.input_index("tokens").unwrap(), 1);
+        assert_eq!(a.output_index("logits").unwrap(), 0);
+        assert!(a.input_index("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Manifest::parse("bogus line", PathBuf::new()).is_err());
+        assert!(Manifest::parse("in x f32 2", PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        if let Ok(m) = Manifest::load("artifacts") {
+            assert!(m.artifacts.len() >= 10);
+            let a = m.artifact("tiny_a8s-c8-w4_train").unwrap();
+            // params/m/v symmetry
+            let nparams = a.param_names().len();
+            assert_eq!(a.outputs.len(), 3 * nparams + 4);
+        }
+    }
+}

@@ -1,0 +1,147 @@
+//! Configuration: model/precision descriptions parsed from the artifact
+//! manifest (the single source of truth shared with the Python compile path)
+//! plus training hyper-parameters with `--set key=value` overrides.
+
+pub mod manifest;
+
+pub use manifest::{ArtifactSpec, Manifest, ModelCfg, PrecCfg, TensorSpec};
+
+/// Training hyper-parameters (paper Appendix B defaults).
+#[derive(Clone, Debug)]
+pub struct TrainCfg {
+    /// base learning rate at `ref_steps` (scaled by the inverse-sqrt rule)
+    pub base_lr: f32,
+    /// number of steps the base LR is quoted at (paper: 8000)
+    pub ref_steps: usize,
+    pub steps: usize,
+    pub weight_decay: f32,
+    /// multiplicative LR boost on activation quantizer steps (paper: 50)
+    pub act_lrx: f32,
+    pub kd_ratio: f32,
+    pub kd_temp: f32,
+    /// fraction of pre-training (DCLM-analog) data mixed into instruct QAT
+    pub dclm_ratio: f32,
+    /// cosine schedule floor as a fraction of the initial LR (paper: 0.1)
+    pub min_lr_frac: f32,
+    pub seed: u64,
+    /// evaluate every N steps (0 = only at the end)
+    pub eval_every: usize,
+    /// calibration batches (paper: 5 x 128 samples; scaled down here)
+    pub calib_batches: usize,
+    /// activation calibration: "quantile" (paper) or "max" (ablation)
+    pub act_calib: String,
+    /// weight calibration: "mse" (paper Eq. 2) or "lsq" (LSQ-paper init)
+    pub wgt_calib: String,
+}
+
+impl Default for TrainCfg {
+    fn default() -> Self {
+        TrainCfg {
+            base_lr: 5e-3, // scaled up from the paper's 5e-6: tiny models + short runs
+            ref_steps: 800,
+            steps: 800,
+            weight_decay: 0.1,
+            act_lrx: 50.0,
+            kd_ratio: 1.0,
+            kd_temp: 1.0,
+            dclm_ratio: 0.25,
+            min_lr_frac: 0.1,
+            seed: 0,
+            eval_every: 0,
+            calib_batches: 4,
+            act_calib: "quantile".into(),
+            wgt_calib: "mse".into(),
+        }
+    }
+}
+
+impl TrainCfg {
+    /// Apply a `key=value` override; returns false for unknown keys.
+    pub fn set(&mut self, key: &str, value: &str) -> bool {
+        match key {
+            "base_lr" => self.base_lr = value.parse().unwrap_or(self.base_lr),
+            "ref_steps" => self.ref_steps = value.parse().unwrap_or(self.ref_steps),
+            "steps" => self.steps = value.parse().unwrap_or(self.steps),
+            "weight_decay" => self.weight_decay = value.parse().unwrap_or(self.weight_decay),
+            "act_lrx" => self.act_lrx = value.parse().unwrap_or(self.act_lrx),
+            "kd_ratio" => self.kd_ratio = value.parse().unwrap_or(self.kd_ratio),
+            "kd_temp" => self.kd_temp = value.parse().unwrap_or(self.kd_temp),
+            "dclm_ratio" => self.dclm_ratio = value.parse().unwrap_or(self.dclm_ratio),
+            "min_lr_frac" => self.min_lr_frac = value.parse().unwrap_or(self.min_lr_frac),
+            "seed" => self.seed = value.parse().unwrap_or(self.seed),
+            "eval_every" => self.eval_every = value.parse().unwrap_or(self.eval_every),
+            "calib_batches" => self.calib_batches = value.parse().unwrap_or(self.calib_batches),
+            "act_calib" => self.act_calib = value.into(),
+            "wgt_calib" => self.wgt_calib = value.into(),
+            _ => return false,
+        }
+        true
+    }
+
+    /// The paper's LR transfer rule (Appendix B / power scheduler): when the
+    /// step count changes by a factor k relative to `ref_steps`, the LR is
+    /// scaled by 1/sqrt(k).
+    pub fn scaled_lr(&self) -> f32 {
+        let k = self.steps as f32 / self.ref_steps as f32;
+        self.base_lr / k.sqrt()
+    }
+
+    /// Cosine schedule with floor (paper: cosine to 10% of initial, no warmup).
+    pub fn lr_at(&self, step: usize) -> f32 {
+        let lr0 = self.scaled_lr();
+        let min_lr = lr0 * self.min_lr_frac;
+        if self.steps <= 1 {
+            return lr0;
+        }
+        let t = step as f32 / (self.steps - 1) as f32;
+        let cos = 0.5 * (1.0 + (std::f32::consts::PI * t).cos());
+        min_lr + (lr0 - min_lr) * cos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_shape() {
+        let c = TrainCfg::default();
+        assert_eq!(c.act_lrx, 50.0);
+        assert_eq!(c.kd_ratio, 1.0);
+        assert_eq!(c.dclm_ratio, 0.25);
+        assert_eq!(c.weight_decay, 0.1);
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut c = TrainCfg::default();
+        assert!(c.set("steps", "100"));
+        assert!(c.set("kd_ratio", "0.5"));
+        assert!(!c.set("nope", "1"));
+        assert_eq!(c.steps, 100);
+        assert_eq!(c.kd_ratio, 0.5);
+    }
+
+    #[test]
+    fn lr_sqrt_scaling() {
+        let mut c = TrainCfg::default();
+        c.base_lr = 1e-3;
+        c.ref_steps = 100;
+        c.steps = 400; // 4x steps -> lr/2
+        assert!((c.scaled_lr() - 5e-4).abs() < 1e-9);
+        c.steps = 25; // 1/4 steps -> 2x lr
+        assert!((c.scaled_lr() - 2e-3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cosine_schedule_endpoints() {
+        let mut c = TrainCfg::default();
+        c.base_lr = 1e-3;
+        c.ref_steps = 100;
+        c.steps = 100;
+        assert!((c.lr_at(0) - 1e-3).abs() < 1e-9);
+        let end = c.lr_at(99);
+        assert!((end - 1e-4).abs() < 1e-8, "{end}");
+        assert!(c.lr_at(50) < c.lr_at(10));
+    }
+}

@@ -1,0 +1,8 @@
+//! Experiment coordinator: the end-to-end SiLQ pipeline plus one runner per
+//! paper table/figure (see DESIGN.md §4 for the index).
+
+pub mod experiments;
+pub mod pipeline;
+
+pub use experiments::run_experiment;
+pub use pipeline::{Pipeline, PipelineCfg};

@@ -1,0 +1,226 @@
+//! The full SiLQ pipeline over one model size: pretrain -> SFT -> calibrate
+//! -> QAT (or a PTQ baseline) -> evaluate. Checkpoints are cached under
+//! `runs/` so experiment runners share the expensive fp16 phases.
+
+use anyhow::Result;
+
+use crate::config::TrainCfg;
+use crate::data::{DataMix, SftStyle, Vocab, World};
+use crate::evalharness::{EvalReport, Evaluator};
+use crate::metrics::RunLog;
+use crate::model::ParamStore;
+use crate::ptq;
+use crate::runtime::Engine;
+use crate::train::calibrate::{calibrate_act_steps, calibrate_weight_steps, collect_stats, CalibStats};
+use crate::train::{init_model, quantize_store, Trainer, TrainStats};
+
+/// Scaled-down defaults for the tiny experiment grid.
+#[derive(Clone, Debug)]
+pub struct PipelineCfg {
+    pub model: String,
+    pub pretrain_steps: usize,
+    pub sft_steps: usize,
+    pub qat_steps: usize,
+    pub eval_items: usize,
+    pub seed: u64,
+    /// world seed shared by data and eval
+    pub world_seed: u64,
+}
+
+impl Default for PipelineCfg {
+    fn default() -> Self {
+        PipelineCfg {
+            model: "tiny".into(),
+            pretrain_steps: 500,
+            sft_steps: 250,
+            qat_steps: 250,
+            eval_items: 40,
+            seed: 0,
+            world_seed: 7,
+        }
+    }
+}
+
+pub struct Pipeline<'e> {
+    pub engine: &'e Engine,
+    pub cfg: PipelineCfg,
+    pub world: World,
+}
+
+impl<'e> Pipeline<'e> {
+    pub fn new(engine: &'e Engine, cfg: PipelineCfg) -> Result<Self> {
+        let mc = engine.manifest.model(&cfg.model)?;
+        let world = World::generate(Vocab::new(mc.vocab), cfg.world_seed);
+        Ok(Pipeline { engine, cfg, world })
+    }
+
+    fn art(&self, prec: &str, mode: &str) -> String {
+        format!("{}_{prec}_{mode}", self.cfg.model)
+    }
+
+    fn ckpt(&self, tag: &str) -> std::path::PathBuf {
+        std::path::PathBuf::from(format!(
+            "runs/{}_s{}_{}.ckpt",
+            self.cfg.model, self.cfg.seed, tag
+        ))
+    }
+
+    /// QAT hyper-parameters: like train_cfg but with the much smaller LR
+    /// QAT needs relative to pretraining (paper: 5e-6 QAT vs ~1e-4 scale
+    /// pretrain LRs; same ~20x ratio here).
+    pub fn qat_cfg(&self, steps: usize) -> TrainCfg {
+        let mut t = self.train_cfg(steps);
+        t.base_lr = 3e-4;
+        t
+    }
+
+    fn train_cfg(&self, steps: usize) -> TrainCfg {
+        let mut t = TrainCfg::default();
+        t.steps = steps;
+        t.ref_steps = 500;
+        t.seed = self.cfg.seed;
+        t
+    }
+
+    /// fp16 base model: pretrained on the corpus (cached).
+    pub fn base_model(&self, log: &mut RunLog) -> Result<ParamStore> {
+        let fwd = self.art("fp16", "fwd");
+        let spec = self.engine.module(&fwd)?.spec.clone();
+        let path = self.ckpt("base");
+        if path.exists() {
+            log.note(&format!("[pipeline] cached base model {path:?}"));
+            return ParamStore::load(&spec, &path);
+        }
+        log.note(&format!("[pipeline] pretraining base ({} steps)...", self.cfg.pretrain_steps));
+        let mut params = init_model(self.engine, &fwd, self.cfg.seed ^ 0x1717)?;
+        let mut tcfg = self.train_cfg(self.cfg.pretrain_steps);
+        tcfg.kd_ratio = 0.0;
+        let trainer = Trainer::new(self.engine, &self.art("fp16", "train"), None, tcfg)?;
+        let stats = trainer.run(&mut params, &self.world, DataMix::Corpus, log, None)?;
+        log.note(&format!(
+            "[pipeline] pretrain done: loss {:.4}, {:.2} steps/s",
+            stats.final_loss,
+            stats.steps_per_sec()
+        ));
+        params.save(&path)?;
+        Ok(params)
+    }
+
+    /// fp16 instruct model: base + SFT on the given mixture (cached by tag).
+    pub fn instruct_model(
+        &self,
+        style: SftStyle,
+        tag: &str,
+        log: &mut RunLog,
+    ) -> Result<ParamStore> {
+        let fwd = self.art("fp16", "fwd");
+        let spec = self.engine.module(&fwd)?.spec.clone();
+        let path = self.ckpt(tag);
+        if path.exists() {
+            log.note(&format!("[pipeline] cached instruct model {path:?}"));
+            return ParamStore::load(&spec, &path);
+        }
+        let mut params = self.base_model(log)?;
+        log.note(&format!("[pipeline] SFT {tag} ({} steps)...", self.cfg.sft_steps));
+        let mut tcfg = self.train_cfg(self.cfg.sft_steps);
+        tcfg.kd_ratio = 0.0;
+        let trainer = Trainer::new(self.engine, &self.art("fp16", "train"), None, tcfg)?;
+        let stats = trainer.run(
+            &mut params,
+            &self.world,
+            DataMix::Instruct { style, dclm_ratio: 0.25 },
+            log,
+            None,
+        )?;
+        log.note(&format!("[pipeline] SFT done: loss {:.4}", stats.final_loss));
+        params.save(&path)?;
+        Ok(params)
+    }
+
+    /// Calibration statistics from the fp16 model (cached per fp16 params
+    /// instance is overkill; recomputed each call, it is cheap).
+    pub fn calib_stats(&self, fp16: &ParamStore, batches: usize) -> Result<CalibStats> {
+        collect_stats(
+            self.engine,
+            &self.art("fp16", "calib"),
+            fp16,
+            &self.world,
+            batches,
+            self.cfg.seed ^ 0xCAFE,
+        )
+    }
+
+    /// Build + calibrate a quantized store from fp16 weights (SiLQ init).
+    pub fn calibrated_quant_store(
+        &self,
+        prec: &str,
+        fp16: &ParamStore,
+        stats: &CalibStats,
+        act_calib: &str,
+        wgt_calib: &str,
+    ) -> Result<ParamStore> {
+        let pc = self.engine.manifest.prec(prec)?.clone();
+        let mut qs = quantize_store(self.engine, &self.art(prec, "fwd"), fp16)?;
+        calibrate_act_steps(&mut qs, &pc, stats, act_calib == "max")?;
+        calibrate_weight_steps(&mut qs, &pc, wgt_calib)?;
+        Ok(qs)
+    }
+
+    /// SiLQ QAT: KD from the fp16 teacher, LSQ step refinement, end-to-end.
+    /// Returns train stats; `qs` is updated in place.
+    #[allow(clippy::too_many_arguments)]
+    pub fn qat(
+        &self,
+        prec: &str,
+        qs: &mut ParamStore,
+        teacher: &ParamStore,
+        mix: DataMix,
+        tcfg: TrainCfg,
+        log: &mut RunLog,
+        eval_hook: Option<&mut dyn FnMut(usize, &ParamStore)>,
+    ) -> Result<TrainStats> {
+        let trainer = Trainer::new(
+            self.engine,
+            &self.art(prec, "train"),
+            Some((&self.art("fp16", "fwd"), teacher.clone())),
+            tcfg,
+        )?;
+        trainer.run(qs, &self.world, mix, log, eval_hook)
+    }
+
+    /// Evaluate a param store under a precision config.
+    pub fn eval(
+        &self,
+        prec: &str,
+        params: &ParamStore,
+        chat: bool,
+    ) -> Result<EvalReport> {
+        let ev = Evaluator::new(self.engine, &self.art(prec, "fwd"), chat, self.cfg.eval_items)?;
+        ev.eval_all(params, &self.world, self.cfg.world_seed ^ 0xE7A1)
+    }
+
+    /// PTQ baselines sharing the same artifacts.
+    pub fn ptq_baseline(
+        &self,
+        method: &str,
+        prec: &str,
+        fp16: &ParamStore,
+        stats: &CalibStats,
+    ) -> Result<ParamStore> {
+        let pc = self.engine.manifest.prec(prec)?.clone();
+        let mc = self.engine.manifest.model(&self.cfg.model)?.clone();
+        let mut qs = quantize_store(self.engine, &self.art(prec, "fwd"), fp16)?;
+        calibrate_act_steps(&mut qs, &pc, stats, false)?;
+        match method {
+            "rtn" => ptq::rtn(&mut qs, &pc)?,
+            "smoothquant" => ptq::smoothquant(&mut qs, &mc, &pc, stats, 0.4)?,
+            "gptq" => ptq::gptq(&mut qs, &mc, &pc, stats)?,
+            "spinquant" => ptq::spinquant(&mut qs, &mc, &pc, stats, 3, self.cfg.seed)?,
+            other => anyhow::bail!("unknown ptq method {other}"),
+        }
+        // weight changes (smoothquant/rotation) shift activation ranges:
+        // re-calibrating statics on the fp16 stats is the faithful analog of
+        // each method's own calibration pass.
+        Ok(qs)
+    }
+}

@@ -1,0 +1,219 @@
+//! Batch assembly with mixture sampling (the paper's 75% SFT / 25% DCLM
+//! recipe) and a background prefetch thread so data generation never sits
+//! on the training hot path.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+
+use crate::data::corpus::CorpusGen;
+use crate::data::sft::{SftGen, SftStyle};
+use crate::data::world::World;
+use crate::util::Rng;
+
+/// Which documents a batch draws from.
+#[derive(Clone, Debug)]
+pub enum DataMix {
+    /// pre-training corpus only (base-model QAT / pretraining)
+    Corpus,
+    /// SFT style mixed with `dclm_ratio` of corpus documents (instruct QAT)
+    Instruct { style: SftStyle, dclm_ratio: f32 },
+    /// fixed set of pre-generated documents cycled forever (LLM-QAT's
+    /// self-generated data)
+    Fixed(Vec<Vec<i32>>),
+}
+
+/// Synchronous batcher: deterministic, used by tests and as the prefetch
+/// thread's inner generator.
+pub struct Batcher<'w> {
+    mix: DataMix,
+    corpus: CorpusGen<'w>,
+    sft: SftGen<'w>,
+    rng: Rng,
+    fixed_pos: usize,
+    pub batch: usize,
+    pub seq_len: usize,
+}
+
+impl<'w> Batcher<'w> {
+    pub fn new(world: &'w World, mix: DataMix, batch: usize, seq_len: usize, seed: u64) -> Self {
+        let style = match &mix {
+            DataMix::Instruct { style, .. } => *style,
+            _ => SftStyle::TuluSynth,
+        };
+        let _ = world; // generators hold their own references
+        Batcher {
+            mix,
+            corpus: CorpusGen::new(world, seed ^ 0xC0),
+            sft: SftGen::new(world, style, seed ^ 0x5F),
+            rng: Rng::new(seed ^ 0xBA),
+            fixed_pos: 0,
+            batch,
+            seq_len,
+        }
+    }
+
+    fn document(&mut self) -> Vec<i32> {
+        match &self.mix {
+            DataMix::Corpus => self.corpus.document(self.seq_len),
+            DataMix::Instruct { dclm_ratio, .. } => {
+                if self.rng.uniform() < *dclm_ratio {
+                    self.corpus.document(self.seq_len)
+                } else {
+                    self.sft.document(self.seq_len)
+                }
+            }
+            DataMix::Fixed(docs) => {
+                let d = docs[self.fixed_pos % docs.len()].clone();
+                self.fixed_pos += 1;
+                let mut d = d;
+                d.resize(self.seq_len, crate::data::vocab::PAD);
+                d
+            }
+        }
+    }
+
+    /// Next `[batch * seq_len]` row-major token batch.
+    pub fn next_batch(&mut self) -> Vec<i32> {
+        let mut out = Vec::with_capacity(self.batch * self.seq_len);
+        for _ in 0..self.batch {
+            out.extend(self.document());
+        }
+        out
+    }
+}
+
+/// Background prefetcher: runs a `Batcher` on its own thread with a bounded
+/// channel, overlapping data generation with PJRT execution.
+pub struct Prefetcher {
+    rx: mpsc::Receiver<Vec<i32>>,
+    _handle: std::thread::JoinHandle<()>,
+}
+
+impl Prefetcher {
+    /// `world` is cloned into the thread (worlds are small).
+    pub fn spawn(
+        world: World,
+        mix: DataMix,
+        batch: usize,
+        seq_len: usize,
+        seed: u64,
+        depth: usize,
+    ) -> Prefetcher {
+        let (tx, rx) = mpsc::sync_channel(depth);
+        let handle = std::thread::spawn(move || {
+            let mut b = Batcher::new(&world, mix, batch, seq_len, seed);
+            loop {
+                let batch = b.next_batch();
+                if tx.send(batch).is_err() {
+                    return; // consumer dropped
+                }
+            }
+        });
+        Prefetcher { rx, _handle: handle }
+    }
+
+    pub fn next(&self) -> Vec<i32> {
+        self.rx.recv().expect("prefetch thread died")
+    }
+}
+
+/// Deterministic eval-batch assembly: pack prompts (right-padded) into
+/// fixed-shape [batch, seq_len] with their row indices.
+pub fn pad_rows(rows: &[Vec<i32>], batch: usize, seq_len: usize) -> Vec<Vec<i32>> {
+    let mut out = vec![];
+    let mut cur: Vec<i32> = Vec::with_capacity(batch * seq_len);
+    let mut q = VecDeque::from(rows.to_vec());
+    while let Some(mut r) = q.pop_front() {
+        r.truncate(seq_len);
+        r.resize(seq_len, crate::data::vocab::PAD);
+        cur.extend(r);
+        if cur.len() == batch * seq_len {
+            out.push(std::mem::take(&mut cur));
+        }
+    }
+    if !cur.is_empty() {
+        cur.resize(batch * seq_len, crate::data::vocab::PAD);
+        out.push(cur);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::vocab::{Vocab, PAD, Q};
+
+    fn setup() -> World {
+        World::generate(Vocab::new(256), 41)
+    }
+
+    #[test]
+    fn batch_shape() {
+        let w = setup();
+        let mut b = Batcher::new(&w, DataMix::Corpus, 4, 32, 0);
+        let batch = b.next_batch();
+        assert_eq!(batch.len(), 4 * 32);
+    }
+
+    #[test]
+    fn mixture_ratio_respected() {
+        let w = setup();
+        let mut b = Batcher::new(
+            &w,
+            DataMix::Instruct { style: SftStyle::TuluSynth, dclm_ratio: 0.25 },
+            1,
+            64,
+            7,
+        );
+        let mut sft_docs = 0;
+        let n = 400;
+        for _ in 0..n {
+            let doc = b.next_batch();
+            if doc.contains(&Q) {
+                sft_docs += 1;
+            }
+        }
+        let frac = sft_docs as f32 / n as f32;
+        assert!((frac - 0.75).abs() < 0.08, "sft fraction {frac}");
+    }
+
+    #[test]
+    fn fixed_mix_cycles() {
+        let w = setup();
+        let docs = vec![vec![1, 2, 3], vec![4, 5, 6]];
+        let mut b = Batcher::new(&w, DataMix::Fixed(docs), 1, 4, 0);
+        assert_eq!(b.next_batch(), vec![1, 2, 3, PAD]);
+        assert_eq!(b.next_batch(), vec![4, 5, 6, PAD]);
+        assert_eq!(b.next_batch(), vec![1, 2, 3, PAD]);
+    }
+
+    #[test]
+    fn prefetcher_streams() {
+        let w = setup();
+        let p = Prefetcher::spawn(w, DataMix::Corpus, 2, 16, 3, 4);
+        let a = p.next();
+        let b = p.next();
+        assert_eq!(a.len(), 32);
+        assert_eq!(b.len(), 32);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn prefetcher_matches_sync_batcher() {
+        let w = setup();
+        let mut sync = Batcher::new(&w, DataMix::Corpus, 2, 16, 5);
+        let p = Prefetcher::spawn(w.clone(), DataMix::Corpus, 2, 16, 5, 2);
+        for _ in 0..5 {
+            assert_eq!(p.next(), sync.next_batch());
+        }
+    }
+
+    #[test]
+    fn pad_rows_shapes() {
+        let rows = vec![vec![1, 2], vec![3, 4, 5, 6, 7], vec![8]];
+        let batches = pad_rows(&rows, 2, 4);
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[0], vec![1, 2, 0, 0, 3, 4, 5, 6]);
+        assert_eq!(batches[1], vec![8, 0, 0, 0, 0, 0, 0, 0]);
+    }
+}

@@ -1,0 +1,28 @@
+//! SynthLang: the synthetic language substrate standing in for the paper's
+//! datasets (DCLM pre-train corpus, SFT instruct mixtures) and for the
+//! worlds the benchmark suites query. See DESIGN.md §2 for the substitution
+//! rationale.
+//!
+//! Design: a deterministic entity-attribute *world* (who has which color /
+//! size / shape / place / number, and who is whose friend) plus closed-form
+//! arithmetic and sequence patterns. The pre-training corpus states world
+//! facts and patterns as declarative token sentences; SFT datasets wrap the
+//! same knowledge in Q/A chat format; the eval suites (CSR / OLLMv1 /
+//! OLLMv2 analogs) probe it at increasing compositional depth. Accuracy is
+//! therefore meaningful: a model can only score well by actually modeling
+//! the data, and quantization damage shows up exactly like it does on real
+//! benchmarks (harder, more compositional suites degrade first).
+
+pub mod batcher;
+pub mod corpus;
+pub mod sft;
+pub mod tasks;
+pub mod vocab;
+pub mod world;
+
+pub use batcher::{Batcher, DataMix};
+pub use corpus::CorpusGen;
+pub use sft::{SftGen, SftStyle};
+pub use tasks::{EvalItem, Suite, TaskDef, TaskKind};
+pub use vocab::Vocab;
+pub use world::World;

@@ -1,0 +1,220 @@
+//! SFT instruct datasets: Q/A-formatted documents over the world.
+//!
+//! Two styles reproduce the paper's Table 3 comparison:
+//! * `Original` — the narrow "model's own SFT data": knowledge-only question
+//!   families (attributes, friendships, booleans).
+//! * `TuluSynth` — the broad open-source substitute: every question family
+//!   including arithmetic, sequences and instruction-following, i.e. better
+//!   aligned with the benchmarks (like Tulu3 is for the Open LLM suites).
+
+use crate::data::vocab::{self, Vocab, ATTR_VALS_PER_FAMILY};
+use crate::data::world::World;
+use crate::util::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SftStyle {
+    Original,
+    TuluSynth,
+}
+
+pub struct SftGen<'w> {
+    pub world: &'w World,
+    pub style: SftStyle,
+    rng: Rng,
+}
+
+impl<'w> SftGen<'w> {
+    pub fn new(world: &'w World, style: SftStyle, seed: u64) -> Self {
+        SftGen { world, style, rng: Rng::new(seed ^ 0x53465447) }
+    }
+
+    /// One Q/A pair: (question tokens, answer tokens).
+    pub fn qa(&mut self) -> (Vec<i32>, Vec<i32>) {
+        let w = self.world;
+        let v = &w.vocab;
+        let ne = w.n_entities();
+        let rng = &mut self.rng;
+        let n_kinds = match self.style {
+            SftStyle::Original => 4,
+            SftStyle::TuluSynth => 10,
+        };
+        match rng.below(n_kinds) {
+            0 => {
+                let f = rng.below(4);
+                let e = rng.below(ne);
+                (
+                    vec![Vocab::attr_type(f), vocab::OF, v.entity(e)],
+                    vec![v.attr_val(f, w.attr(e, f))],
+                )
+            }
+            1 => {
+                let e = rng.below(ne);
+                (
+                    vec![vocab::FRIEND, vocab::OF, v.entity(e), vocab::IS],
+                    vec![v.entity(w.friend(e))],
+                )
+            }
+            2 => {
+                let f = rng.below(4);
+                let e = rng.below(ne);
+                let truth = rng.below(2) == 0;
+                let val = if truth {
+                    w.attr(e, f)
+                } else {
+                    (w.attr(e, f) + 1 + rng.below(ATTR_VALS_PER_FAMILY - 1)) % ATTR_VALS_PER_FAMILY
+                };
+                (
+                    vec![v.entity(e), vocab::HAS, Vocab::attr_type(f), v.attr_val(f, val)],
+                    vec![if truth { vocab::YES } else { vocab::NO }],
+                )
+            }
+            3 => {
+                let f = rng.below(4);
+                let e = rng.below(ne);
+                (
+                    vec![Vocab::attr_type(f), vocab::OF, vocab::FRIEND, vocab::OF, v.entity(e)],
+                    vec![v.attr_val(f, w.attr(w.friend(e), f))],
+                )
+            }
+            // ---- TuluSynth-only families ----
+            4 => {
+                let a = rng.below(16);
+                let b = rng.below(16);
+                (
+                    vec![v.number(a), vocab::PLUS, v.number(b), vocab::EQUALS],
+                    vec![v.number(a + b)],
+                )
+            }
+            5 => {
+                let a = rng.below(10);
+                let b = rng.below(10);
+                let c = rng.below(10);
+                (
+                    vec![v.number(a), vocab::PLUS, v.number(b), vocab::PLUS, v.number(c), vocab::EQUALS],
+                    vec![v.number(a + b + c)],
+                )
+            }
+            6 => {
+                let a = rng.below(6);
+                let b = rng.below(6);
+                (
+                    vec![v.number(a), vocab::TIMES, v.number(b), vocab::EQUALS],
+                    vec![v.number(a * b)],
+                )
+            }
+            7 => {
+                let k = rng.range(1, 4);
+                let n0 = rng.below(32 - 5 * k);
+                (
+                    (0..4).map(|i| v.number(n0 + i * k)).collect(),
+                    vec![v.number(n0 + 4 * k)],
+                )
+            }
+            8 => {
+                let k = rng.range(1, 5);
+                (
+                    vec![vocab::REPEAT, v.number(k), vocab::YES],
+                    vec![vocab::YES; k],
+                )
+            }
+            _ => {
+                let e1 = rng.below(ne);
+                let e2 = rng.below(ne);
+                (
+                    vec![
+                        vocab::NUMBER, vocab::OF, v.entity(e1), vocab::PLUS,
+                        vocab::NUMBER, vocab::OF, v.entity(e2), vocab::EQUALS,
+                    ],
+                    vec![v.number(w.number(e1) + w.number(e2))],
+                )
+            }
+        }
+    }
+
+    /// One packed SFT document: BOS then `Q q A a SEP` groups; PAD tail.
+    pub fn document(&mut self, seq_len: usize) -> Vec<i32> {
+        let mut doc = vec![vocab::BOS];
+        loop {
+            let (q, a) = self.qa();
+            // stop if the next pair would overflow
+            if doc.len() + q.len() + a.len() + 3 > seq_len {
+                break;
+            }
+            doc.push(vocab::Q);
+            doc.extend_from_slice(&q);
+            doc.push(vocab::A);
+            doc.extend_from_slice(&a);
+            doc.push(vocab::SEP);
+        }
+        doc.resize(seq_len, vocab::PAD);
+        doc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::vocab::NUM_BASE;
+
+    fn setup() -> World {
+        World::generate(Vocab::new(256), 31)
+    }
+
+    #[test]
+    fn documents_shape() {
+        let w = setup();
+        let mut g = SftGen::new(&w, SftStyle::TuluSynth, 0);
+        for _ in 0..10 {
+            let d = g.document(64);
+            assert_eq!(d.len(), 64);
+            assert_eq!(d[0], vocab::BOS);
+            assert!(d.contains(&vocab::Q) && d.contains(&vocab::A));
+        }
+    }
+
+    #[test]
+    fn original_style_has_no_arithmetic() {
+        let w = setup();
+        let mut g = SftGen::new(&w, SftStyle::Original, 1);
+        for _ in 0..500 {
+            let (q, _) = g.qa();
+            assert!(!q.contains(&vocab::PLUS) && !q.contains(&vocab::TIMES));
+        }
+    }
+
+    #[test]
+    fn tulu_style_covers_arithmetic() {
+        let w = setup();
+        let mut g = SftGen::new(&w, SftStyle::TuluSynth, 2);
+        let mut saw_plus = false;
+        let mut saw_repeat = false;
+        for _ in 0..500 {
+            let (q, _) = g.qa();
+            saw_plus |= q.contains(&vocab::PLUS);
+            saw_repeat |= q.contains(&vocab::REPEAT);
+        }
+        assert!(saw_plus && saw_repeat);
+    }
+
+    #[test]
+    fn answers_are_correct() {
+        let w = setup();
+        let mut g = SftGen::new(&w, SftStyle::TuluSynth, 3);
+        for _ in 0..1000 {
+            let (q, a) = g.qa();
+            if q.len() == 4 && q[1] == vocab::PLUS && q[3] == vocab::EQUALS {
+                assert_eq!(a[0] - NUM_BASE, (q[0] - NUM_BASE) + (q[2] - NUM_BASE));
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let w = setup();
+        let mut g1 = SftGen::new(&w, SftStyle::TuluSynth, 9);
+        let mut g2 = SftGen::new(&w, SftStyle::TuluSynth, 9);
+        for _ in 0..20 {
+            assert_eq!(g1.document(48), g2.document(48));
+        }
+    }
+}

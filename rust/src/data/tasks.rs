@@ -1,0 +1,520 @@
+//! Benchmark task generators: synthetic analogs of the paper's CSR,
+//! OLLMv1 and OLLMv2 suites (Tables 1, 5, 6, 7).
+//!
+//! Mechanics mirror lm-evaluation-harness: multiple-choice tasks are scored
+//! by length-normalized continuation log-likelihood; generation tasks by
+//! greedy decoding + exact match. Suites are ordered by compositional
+//! depth, so quantization damage degrades OLLMv2-analogs first — the same
+//! qualitative behaviour the paper reports.
+
+use crate::data::vocab::{self, Vocab, ATTR_VALS_PER_FAMILY};
+use crate::data::world::World;
+use crate::util::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Suite {
+    Csr,
+    OllmV1,
+    OllmV2,
+}
+
+impl Suite {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Suite::Csr => "CSR",
+            Suite::OllmV1 => "OLLMv1",
+            Suite::OllmV2 => "OLLMv2",
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TaskKind {
+    MultipleChoice,
+    Generate,
+}
+
+/// One benchmark task.
+#[derive(Clone, Debug)]
+pub struct TaskDef {
+    pub name: &'static str,
+    pub suite: Suite,
+    pub fewshot: usize,
+    pub kind: TaskKind,
+    pub n_items: usize,
+    qtype: QType,
+}
+
+/// One evaluation item.
+#[derive(Clone, Debug)]
+pub struct EvalItem {
+    /// full prompt (BOS + few-shot examples + question), unpadded
+    pub prompt: Vec<i32>,
+    /// candidate continuations (MultipleChoice)
+    pub choices: Vec<Vec<i32>>,
+    pub correct: usize,
+    /// gold continuation (Generate)
+    pub answer: Vec<i32>,
+}
+
+/// Question archetypes, ordered roughly by difficulty.
+#[derive(Clone, Copy, Debug)]
+enum QType {
+    /// attribute of an entity (family fixed or 4 = random)
+    Attr(usize),
+    /// attribute of the friend of an entity
+    TwoHop,
+    /// attribute of the friend of the friend (3 retrieval hops)
+    ThreeHop,
+    /// does entity have attribute value? yes/no
+    BoolAttr,
+    /// statement + true/false judgement
+    Truth,
+    /// who is the friend of E?
+    Friend,
+    /// a + b = ?
+    Add,
+    /// a + b + c = ? (two-step arithmetic, GSM8K-analog)
+    Add3,
+    /// a * b = ?
+    Mul,
+    /// continue the arithmetic progression
+    SeqCont,
+    /// number(e1) + number(e2) = ? (two retrievals + arithmetic)
+    NumSum,
+    /// instruction following: repeat "yes" k times
+    RepeatInstr,
+    /// in-context friendship graph overriding the world (MUSR-analog)
+    ContextHop,
+    /// mixture of Attr/Add/Mul (MMLU-analog)
+    Mixed,
+}
+
+/// A question: tokens, gold answer tokens, distractor answers.
+struct Qa {
+    q: Vec<i32>,
+    ans: Vec<i32>,
+    distractors: Vec<Vec<i32>>,
+}
+
+fn gen_qa(w: &World, rng: &mut Rng, qt: QType) -> Qa {
+    let v = &w.vocab;
+    let ne = w.n_entities();
+    match qt {
+        QType::Attr(fam) => {
+            let f = if fam >= 4 { rng.below(4) } else { fam };
+            let e = rng.below(ne);
+            let correct = w.attr(e, f);
+            let distractors = distinct_vals(rng, correct, 3)
+                .into_iter()
+                .map(|x| vec![v.attr_val(f, x)])
+                .collect();
+            Qa {
+                q: vec![Vocab::attr_type(f), vocab::OF, v.entity(e)],
+                ans: vec![v.attr_val(f, correct)],
+                distractors,
+            }
+        }
+        QType::TwoHop => {
+            let f = rng.below(4);
+            let e = rng.below(ne);
+            let correct = w.attr(w.friend(e), f);
+            Qa {
+                q: vec![Vocab::attr_type(f), vocab::OF, vocab::FRIEND, vocab::OF, v.entity(e)],
+                ans: vec![v.attr_val(f, correct)],
+                distractors: distinct_vals(rng, correct, 3)
+                    .into_iter()
+                    .map(|x| vec![v.attr_val(f, x)])
+                    .collect(),
+            }
+        }
+        QType::ThreeHop => {
+            let f = rng.below(4);
+            let e = rng.below(ne);
+            let correct = w.attr(w.friend_hop(e, 2), f);
+            Qa {
+                q: vec![
+                    Vocab::attr_type(f), vocab::OF, vocab::FRIEND, vocab::OF,
+                    vocab::FRIEND, vocab::OF, v.entity(e),
+                ],
+                ans: vec![v.attr_val(f, correct)],
+                distractors: distinct_vals(rng, correct, 3)
+                    .into_iter()
+                    .map(|x| vec![v.attr_val(f, x)])
+                    .collect(),
+            }
+        }
+        QType::BoolAttr => {
+            let f = rng.below(4);
+            let e = rng.below(ne);
+            let truth = rng.below(2) == 0;
+            let val = if truth {
+                w.attr(e, f)
+            } else {
+                (w.attr(e, f) + 1 + rng.below(ATTR_VALS_PER_FAMILY - 1)) % ATTR_VALS_PER_FAMILY
+            };
+            Qa {
+                q: vec![v.entity(e), vocab::HAS, Vocab::attr_type(f), v.attr_val(f, val)],
+                ans: vec![if truth { vocab::YES } else { vocab::NO }],
+                distractors: vec![vec![if truth { vocab::NO } else { vocab::YES }]],
+            }
+        }
+        QType::Truth => {
+            let f = rng.below(4);
+            let e = rng.below(ne);
+            let truth = rng.below(2) == 0;
+            let val = if truth {
+                w.attr(e, f)
+            } else {
+                (w.attr(e, f) + 1 + rng.below(ATTR_VALS_PER_FAMILY - 1)) % ATTR_VALS_PER_FAMILY
+            };
+            Qa {
+                q: vec![v.entity(e), vocab::HAS, Vocab::attr_type(f), v.attr_val(f, val), vocab::IS],
+                ans: vec![if truth { vocab::TRUE_T } else { vocab::FALSE_T }],
+                distractors: vec![vec![if truth { vocab::FALSE_T } else { vocab::TRUE_T }]],
+            }
+        }
+        QType::Friend => {
+            let e = rng.below(ne);
+            let correct = w.friend(e);
+            let mut ds = vec![];
+            while ds.len() < 3 {
+                let d = rng.below(ne);
+                if d != correct {
+                    ds.push(vec![v.entity(d)]);
+                }
+            }
+            Qa {
+                q: vec![vocab::FRIEND, vocab::OF, v.entity(e), vocab::IS],
+                ans: vec![v.entity(correct)],
+                distractors: ds,
+            }
+        }
+        QType::Add => {
+            let a = rng.below(16);
+            let b = rng.below(16);
+            let c = a + b;
+            let wrong = if c == 0 { 1 } else { c - 1 };
+            Qa {
+                q: vec![v.number(a), vocab::PLUS, v.number(b), vocab::EQUALS],
+                ans: vec![v.number(c)],
+                distractors: vec![vec![v.number(wrong)]],
+            }
+        }
+        QType::Add3 => {
+            let a = rng.below(10);
+            let b = rng.below(10);
+            let c = rng.below(10);
+            let s = a + b + c;
+            Qa {
+                q: vec![
+                    v.number(a), vocab::PLUS, v.number(b), vocab::PLUS, v.number(c), vocab::EQUALS,
+                ],
+                ans: vec![v.number(s)],
+                distractors: vec![vec![v.number((s + 1) % 32)], vec![v.number((s + 2) % 32)],
+                                  vec![v.number((s + 30) % 32)]],
+            }
+        }
+        QType::Mul => {
+            let a = rng.below(6);
+            let b = rng.below(6);
+            let p = a * b;
+            Qa {
+                q: vec![v.number(a), vocab::TIMES, v.number(b), vocab::EQUALS],
+                ans: vec![v.number(p)],
+                distractors: vec![vec![v.number((p + 1) % 32)], vec![v.number((p + 2) % 32)],
+                                  vec![v.number((p + 31) % 32)]],
+            }
+        }
+        QType::SeqCont => {
+            let k = rng.range(1, 4);
+            let n0 = rng.below(32 - 5 * k);
+            let q: Vec<i32> = (0..4).map(|i| v.number(n0 + i * k)).collect();
+            let correct = n0 + 4 * k;
+            let mut ds = vec![];
+            for delta in [1usize, 2, 3] {
+                let wrong = (correct + delta) % 32;
+                ds.push(vec![v.number(wrong)]);
+            }
+            Qa { q, ans: vec![v.number(correct)], distractors: ds }
+        }
+        QType::NumSum => {
+            let e1 = rng.below(ne);
+            let e2 = rng.below(ne);
+            let correct = w.number(e1) + w.number(e2);
+            let mut ds = vec![];
+            for delta in [1usize, 2, 3] {
+                ds.push(vec![v.number((correct + delta) % 32)]);
+            }
+            Qa {
+                q: vec![
+                    vocab::NUMBER, vocab::OF, v.entity(e1), vocab::PLUS,
+                    vocab::NUMBER, vocab::OF, v.entity(e2), vocab::EQUALS,
+                ],
+                ans: vec![v.number(correct)],
+                distractors: ds,
+            }
+        }
+        QType::RepeatInstr => {
+            let k = rng.range(1, 5);
+            Qa {
+                q: vec![vocab::REPEAT, v.number(k), vocab::YES],
+                ans: vec![vocab::YES; k],
+                distractors: vec![],
+            }
+        }
+        QType::ContextHop => {
+            // context states a (possibly world-contradicting) friendship and
+            // an attribute of that friend; the answer must come from context.
+            let f = rng.below(4);
+            let e = rng.below(ne);
+            let ctx_friend = rng.below(ne);
+            let ctx_val = rng.below(ATTR_VALS_PER_FAMILY);
+            let mut q = vec![
+                vocab::FRIEND, vocab::OF, v.entity(e), vocab::IS, v.entity(ctx_friend), vocab::SEP,
+                v.entity(ctx_friend), vocab::HAS, Vocab::attr_type(f), v.attr_val(f, ctx_val), vocab::SEP,
+            ];
+            q.extend_from_slice(&[Vocab::attr_type(f), vocab::OF, vocab::FRIEND, vocab::OF, v.entity(e)]);
+            Qa {
+                q,
+                ans: vec![v.attr_val(f, ctx_val)],
+                distractors: distinct_vals(rng, ctx_val, 3)
+                    .into_iter()
+                    .map(|x| vec![v.attr_val(f, x)])
+                    .collect(),
+            }
+        }
+        QType::Mixed => {
+            let qt = *rng.choice(&[QType::Attr(4), QType::Add, QType::Mul, QType::SeqCont]);
+            gen_qa(w, rng, qt)
+        }
+    }
+}
+
+fn distinct_vals(rng: &mut Rng, correct: usize, n: usize) -> Vec<usize> {
+    let mut out = vec![];
+    while out.len() < n {
+        let d = rng.below(ATTR_VALS_PER_FAMILY);
+        if d != correct && !out.contains(&d) {
+            out.push(d);
+        }
+    }
+    out
+}
+
+/// Assemble the prompt: `chat` adds the instruct Q/A template (the paper's
+/// `--apply_chat_template` analog); base models get declarative shots.
+fn format_prompt(chat: bool, shots: &[(Vec<i32>, Vec<i32>)], q: &[i32]) -> Vec<i32> {
+    let mut p = vec![vocab::BOS];
+    for (sq, sa) in shots {
+        if chat {
+            p.push(vocab::Q);
+            p.extend_from_slice(sq);
+            p.push(vocab::A);
+            p.extend_from_slice(sa);
+            p.push(vocab::SEP);
+        } else {
+            p.extend_from_slice(sq);
+            p.extend_from_slice(sa);
+            p.push(vocab::SEP);
+        }
+    }
+    if chat {
+        p.push(vocab::Q);
+        p.extend_from_slice(q);
+        p.push(vocab::A);
+    } else {
+        p.extend_from_slice(q);
+    }
+    p
+}
+
+impl TaskDef {
+    /// Generate the task's items deterministically.
+    pub fn items(&self, world: &World, chat: bool, seed: u64) -> Vec<EvalItem> {
+        let mut rng = Rng::new(seed ^ fxhash(self.name));
+        (0..self.n_items)
+            .map(|_| {
+                let shots: Vec<(Vec<i32>, Vec<i32>)> = (0..self.fewshot)
+                    .map(|_| {
+                        let qa = gen_qa(world, &mut rng, self.qtype);
+                        (qa.q, qa.ans)
+                    })
+                    .collect();
+                let qa = gen_qa(world, &mut rng, self.qtype);
+                let prompt = format_prompt(chat, &shots, &qa.q);
+                match self.kind {
+                    TaskKind::MultipleChoice => {
+                        let mut choices = vec![qa.ans.clone()];
+                        choices.extend(qa.distractors.iter().cloned());
+                        // shuffle so the gold answer isn't always index 0
+                        let mut idx: Vec<usize> = (0..choices.len()).collect();
+                        rng.shuffle(&mut idx);
+                        let correct = idx.iter().position(|&i| i == 0).unwrap();
+                        let choices = idx.into_iter().map(|i| choices[i].clone()).collect();
+                        EvalItem { prompt, choices, correct, answer: qa.ans }
+                    }
+                    TaskKind::Generate => EvalItem {
+                        prompt,
+                        choices: vec![],
+                        correct: 0,
+                        answer: qa.ans,
+                    },
+                }
+            })
+            .collect()
+    }
+}
+
+fn fxhash(s: &str) -> u64 {
+    s.bytes().fold(0xcbf29ce484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001b3))
+}
+
+/// The full task registry — 8 CSR + 6 OLLMv1 + 6 OLLMv2 analogs, mirroring
+/// the paper's Tables 5/6/7 structure.
+pub fn registry(n_items: usize) -> Vec<TaskDef> {
+    use Suite::*;
+    use TaskKind::*;
+    let t = |name, suite, fewshot, kind, qtype| TaskDef { name, suite, fewshot, kind, n_items, qtype };
+    vec![
+        // ---- CSR analogs (zero-shot, Table 5) ----
+        t("arc_e*", Csr, 0, MultipleChoice, QType::Attr(0)),
+        t("arc_c*", Csr, 0, MultipleChoice, QType::TwoHop),
+        t("boolq*", Csr, 0, MultipleChoice, QType::BoolAttr),
+        t("piqa*", Csr, 0, MultipleChoice, QType::Add),
+        t("siqa*", Csr, 0, MultipleChoice, QType::Friend),
+        t("hellaswag*", Csr, 0, MultipleChoice, QType::SeqCont),
+        t("obqa*", Csr, 0, MultipleChoice, QType::Attr(2)),
+        t("winogrande*", Csr, 0, MultipleChoice, QType::Attr(3)),
+        // ---- OLLMv1 analogs (few-shot, Table 6) ----
+        t("v1_arc_c*", OllmV1, 2, MultipleChoice, QType::TwoHop),
+        t("v1_hellaswag*", OllmV1, 2, MultipleChoice, QType::SeqCont),
+        t("v1_mmlu*", OllmV1, 2, MultipleChoice, QType::Mixed),
+        t("v1_truthfulqa*", OllmV1, 2, MultipleChoice, QType::Truth),
+        t("v1_winogrande*", OllmV1, 2, MultipleChoice, QType::Attr(3)),
+        t("v1_gsm8k*", OllmV1, 2, Generate, QType::Add3),
+        // ---- OLLMv2 analogs (hardest, Table 7) ----
+        t("v2_bbh*", OllmV2, 2, MultipleChoice, QType::ThreeHop),
+        t("v2_gpqa*", OllmV2, 2, MultipleChoice, QType::NumSum),
+        t("v2_ifeval*", OllmV2, 1, Generate, QType::RepeatInstr),
+        t("v2_math*", OllmV2, 2, Generate, QType::Mul),
+        t("v2_mmlupro*", OllmV2, 2, MultipleChoice, QType::Mixed),
+        t("v2_musr*", OllmV2, 1, MultipleChoice, QType::ContextHop),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> World {
+        World::generate(Vocab::new(256), 21)
+    }
+
+    #[test]
+    fn registry_has_paper_structure() {
+        let r = registry(16);
+        assert_eq!(r.iter().filter(|t| t.suite == Suite::Csr).count(), 8);
+        assert_eq!(r.iter().filter(|t| t.suite == Suite::OllmV1).count(), 6);
+        assert_eq!(r.iter().filter(|t| t.suite == Suite::OllmV2).count(), 6);
+        let names: Vec<_> = r.iter().map(|t| t.name).collect();
+        let mut dedup = names.clone();
+        dedup.dedup();
+        assert_eq!(names.len(), dedup.len());
+    }
+
+    #[test]
+    fn items_deterministic() {
+        let w = setup();
+        let task = &registry(8)[1];
+        let a = task.items(&w, true, 5);
+        let b = task.items(&w, true, 5);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.correct, y.correct);
+        }
+    }
+
+    #[test]
+    fn mc_items_have_valid_correct_index() {
+        let w = setup();
+        for task in registry(12) {
+            if task.kind != TaskKind::MultipleChoice {
+                continue;
+            }
+            for item in task.items(&w, false, 1) {
+                assert!(item.correct < item.choices.len(), "{}", task.name);
+                assert_eq!(item.choices[item.correct], item.answer, "{}", task.name);
+                assert!(item.choices.len() >= 2);
+            }
+        }
+    }
+
+    #[test]
+    fn gold_position_shuffled() {
+        let w = setup();
+        let task = &registry(64)[0];
+        let items = task.items(&w, false, 3);
+        let positions: std::collections::HashSet<usize> =
+            items.iter().map(|i| i.correct).collect();
+        assert!(positions.len() > 1, "gold answer must not always sit at one index");
+    }
+
+    #[test]
+    fn chat_template_adds_markers() {
+        let w = setup();
+        let task = &registry(4)[0];
+        let chat = task.items(&w, true, 2);
+        let base = task.items(&w, false, 2);
+        assert!(chat[0].prompt.contains(&vocab::Q));
+        assert!(chat[0].prompt.ends_with(&[vocab::A]));
+        assert!(!base[0].prompt.contains(&vocab::Q));
+    }
+
+    #[test]
+    fn fewshot_prompts_longer() {
+        let w = setup();
+        let r = registry(4);
+        let zero = r[1].items(&w, true, 1); // arc_c*, 0-shot
+        let few = r[8].items(&w, true, 1); // v1_arc_c*, 2-shot
+        assert!(few[0].prompt.len() > zero[0].prompt.len());
+    }
+
+    #[test]
+    fn generation_answers_correct_arithmetic() {
+        let w = setup();
+        let task = registry(32).into_iter().find(|t| t.name == "v1_gsm8k*").unwrap();
+        for item in task.items(&w, true, 7) {
+            // question tail: a PLUS b PLUS c EQUALS ; answer = a+b+c
+            let p = &item.prompt;
+            let eq_pos = p.iter().rposition(|&t| t == vocab::EQUALS).unwrap();
+            let a = p[eq_pos - 5] - vocab::NUM_BASE;
+            let b = p[eq_pos - 3] - vocab::NUM_BASE;
+            let c = p[eq_pos - 1] - vocab::NUM_BASE;
+            assert_eq!(item.answer, vec![vocab::NUM_BASE + a + b + c]);
+        }
+    }
+
+    #[test]
+    fn context_hop_answer_comes_from_context() {
+        let w = setup();
+        let task = registry(16).into_iter().find(|t| t.name == "v2_musr*").unwrap();
+        for item in task.items(&w, false, 9) {
+            // the stated attribute value inside the context equals the gold
+            let p = &item.prompt;
+            let ans = item.answer[0];
+            assert!(p.contains(&ans), "context must state the answer");
+        }
+    }
+
+    #[test]
+    fn repeat_instruction_lengths() {
+        let w = setup();
+        let task = registry(32).into_iter().find(|t| t.name == "v2_ifeval*").unwrap();
+        for item in task.items(&w, true, 11) {
+            assert!(!item.answer.is_empty() && item.answer.len() <= 4);
+            assert!(item.answer.iter().all(|&t| t == vocab::YES));
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! Token-id layout of SynthLang. Fixed structural ids below 32, number
+//! tokens 32..64, attribute values 64..96, filler words 96..128, entities
+//! from 128 up to the model's vocab size.
+
+/// Structural token ids.
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const Q: i32 = 3;
+pub const A: i32 = 4;
+pub const YES: i32 = 5;
+pub const NO: i32 = 6;
+pub const SEP: i32 = 7;
+pub const IS: i32 = 8;
+pub const HAS: i32 = 9;
+pub const OF: i32 = 10;
+pub const FRIEND: i32 = 11;
+pub const PLUS: i32 = 12;
+pub const MINUS: i32 = 13;
+pub const TIMES: i32 = 14;
+pub const EQUALS: i32 = 15;
+pub const TRUE_T: i32 = 16;
+pub const FALSE_T: i32 = 17;
+pub const REPEAT: i32 = 18;
+
+/// Attribute-type tokens.
+pub const COLOR: i32 = 22;
+pub const SIZE: i32 = 23;
+pub const SHAPE: i32 = 24;
+pub const PLACE: i32 = 25;
+pub const NUMBER: i32 = 26;
+
+pub const NUM_BASE: i32 = 32;
+pub const NUM_COUNT: usize = 32;
+pub const ATTR_VAL_BASE: i32 = 64; // 4 families x 8 values
+pub const ATTR_VALS_PER_FAMILY: usize = 8;
+pub const FILLER_BASE: i32 = 96;
+pub const FILLER_COUNT: usize = 32;
+pub const ENTITY_BASE: i32 = 128;
+
+/// Vocab view for a given model vocabulary size.
+#[derive(Clone, Debug)]
+pub struct Vocab {
+    pub size: usize,
+}
+
+impl Vocab {
+    pub fn new(size: usize) -> Vocab {
+        assert!(size >= 256, "SynthLang needs vocab >= 256");
+        Vocab { size }
+    }
+
+    pub fn n_entities(&self) -> usize {
+        self.size - ENTITY_BASE as usize
+    }
+
+    pub fn entity(&self, i: usize) -> i32 {
+        assert!(i < self.n_entities());
+        ENTITY_BASE + i as i32
+    }
+
+    pub fn number(&self, v: usize) -> i32 {
+        assert!(v < NUM_COUNT);
+        NUM_BASE + v as i32
+    }
+
+    /// value token for attribute family f (0=color,1=size,2=shape,3=place)
+    pub fn attr_val(&self, family: usize, v: usize) -> i32 {
+        assert!(family < 4 && v < ATTR_VAL_PER_FAMILY_CHECK);
+        ATTR_VAL_BASE + (family * ATTR_VALS_PER_FAMILY + v) as i32
+    }
+
+    pub fn filler(&self, i: usize) -> i32 {
+        FILLER_BASE + (i % FILLER_COUNT) as i32
+    }
+
+    /// attribute-type token for family index
+    pub fn attr_type(family: usize) -> i32 {
+        [COLOR, SIZE, SHAPE, PLACE][family]
+    }
+
+    /// Human-readable form (debugging / examples output).
+    pub fn describe(&self, tok: i32) -> String {
+        match tok {
+            PAD => "<pad>".into(),
+            BOS => "<bos>".into(),
+            EOS => "<eos>".into(),
+            Q => "Q:".into(),
+            A => "A:".into(),
+            YES => "yes".into(),
+            NO => "no".into(),
+            SEP => ".".into(),
+            IS => "is".into(),
+            HAS => "has".into(),
+            OF => "of".into(),
+            FRIEND => "friend".into(),
+            PLUS => "plus".into(),
+            MINUS => "minus".into(),
+            TIMES => "times".into(),
+            EQUALS => "equals".into(),
+            TRUE_T => "true".into(),
+            FALSE_T => "false".into(),
+            REPEAT => "repeat".into(),
+            COLOR => "color".into(),
+            SIZE => "size".into(),
+            SHAPE => "shape".into(),
+            PLACE => "place".into(),
+            NUMBER => "number".into(),
+            t if (NUM_BASE..NUM_BASE + NUM_COUNT as i32).contains(&t) => format!("{}", t - NUM_BASE),
+            t if (ATTR_VAL_BASE..FILLER_BASE).contains(&t) => {
+                let idx = (t - ATTR_VAL_BASE) as usize;
+                let fam = ["color", "size", "shape", "place"][idx / ATTR_VALS_PER_FAMILY];
+                format!("{fam}{}", idx % ATTR_VALS_PER_FAMILY)
+            }
+            t if (FILLER_BASE..ENTITY_BASE).contains(&t) => format!("w{}", t - FILLER_BASE),
+            t if t >= ENTITY_BASE => format!("E{}", t - ENTITY_BASE),
+            t => format!("?{t}?"),
+        }
+    }
+
+    pub fn describe_seq(&self, toks: &[i32]) -> String {
+        toks.iter().map(|&t| self.describe(t)).collect::<Vec<_>>().join(" ")
+    }
+}
+
+const ATTR_VAL_PER_FAMILY_CHECK: usize = ATTR_VALS_PER_FAMILY;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_disjoint() {
+        let v = Vocab::new(256);
+        // structural < numbers < attr values < filler < entities
+        assert!(NUMBER < NUM_BASE);
+        assert_eq!(v.number(0), 32);
+        assert_eq!(v.number(31), 63);
+        assert_eq!(v.attr_val(0, 0), 64);
+        assert_eq!(v.attr_val(3, 7), 95);
+        assert_eq!(v.filler(0), 96);
+        assert_eq!(v.entity(0), 128);
+        assert_eq!(v.entity(127), 255);
+        assert_eq!(v.n_entities(), 128);
+    }
+
+    #[test]
+    #[should_panic]
+    fn entity_out_of_range_panics() {
+        Vocab::new(256).entity(128);
+    }
+
+    #[test]
+    fn describe_roundtrip_spotcheck() {
+        let v = Vocab::new(256);
+        assert_eq!(v.describe(v.number(5)), "5");
+        assert_eq!(v.describe(v.entity(3)), "E3");
+        assert_eq!(v.describe(PLUS), "plus");
+        assert_eq!(v.describe(v.attr_val(1, 2)), "size2");
+    }
+
+    #[test]
+    fn bigger_vocab_more_entities() {
+        assert_eq!(Vocab::new(512).n_entities(), 384);
+    }
+}

@@ -1,0 +1,120 @@
+//! The entity-attribute world: the ground truth every dataset and benchmark
+//! is generated from. Deterministic given a seed.
+
+use crate::data::vocab::{Vocab, ATTR_VALS_PER_FAMILY, NUM_COUNT};
+use crate::util::Rng;
+
+/// One entity's attributes (indices into the per-family value sets).
+#[derive(Clone, Debug)]
+pub struct Entity {
+    /// color, size, shape, place — value index per family
+    pub attrs: [usize; 4],
+    /// index of the friend entity
+    pub friend: usize,
+    /// a number in 0..NUM_COUNT/2 (kept small so sums stay in range)
+    pub number: usize,
+}
+
+/// The full world.
+#[derive(Clone, Debug)]
+pub struct World {
+    pub vocab: Vocab,
+    pub entities: Vec<Entity>,
+}
+
+impl World {
+    pub fn generate(vocab: Vocab, seed: u64) -> World {
+        let mut rng = Rng::new(seed ^ 0x5157_4f52_4c44); // "QWORLD"
+        let n = vocab.n_entities();
+        let entities = (0..n)
+            .map(|i| {
+                let mut friend = rng.below(n);
+                if friend == i {
+                    friend = (friend + 1) % n;
+                }
+                Entity {
+                    attrs: [
+                        rng.below(ATTR_VALS_PER_FAMILY),
+                        rng.below(ATTR_VALS_PER_FAMILY),
+                        rng.below(ATTR_VALS_PER_FAMILY),
+                        rng.below(ATTR_VALS_PER_FAMILY),
+                    ],
+                    friend,
+                    number: rng.below(NUM_COUNT / 2),
+                }
+            })
+            .collect();
+        World { vocab, entities }
+    }
+
+    pub fn n_entities(&self) -> usize {
+        self.entities.len()
+    }
+
+    /// Attribute value index of entity `e` in family `f`.
+    pub fn attr(&self, e: usize, f: usize) -> usize {
+        self.entities[e].attrs[f]
+    }
+
+    pub fn friend(&self, e: usize) -> usize {
+        self.entities[e].friend
+    }
+
+    pub fn number(&self, e: usize) -> usize {
+        self.entities[e].number
+    }
+
+    /// k-hop friend chain.
+    pub fn friend_hop(&self, e: usize, hops: usize) -> usize {
+        let mut cur = e;
+        for _ in 0..hops {
+            cur = self.friend(cur);
+        }
+        cur
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let a = World::generate(Vocab::new(256), 7);
+        let b = World::generate(Vocab::new(256), 7);
+        for (x, y) in a.entities.iter().zip(&b.entities) {
+            assert_eq!(x.attrs, y.attrs);
+            assert_eq!(x.friend, y.friend);
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let a = World::generate(Vocab::new(256), 1);
+        let b = World::generate(Vocab::new(256), 2);
+        assert!(a.entities.iter().zip(&b.entities).any(|(x, y)| x.attrs != y.attrs));
+    }
+
+    #[test]
+    fn no_self_friends() {
+        let w = World::generate(Vocab::new(256), 3);
+        for (i, e) in w.entities.iter().enumerate() {
+            assert_ne!(e.friend, i);
+        }
+    }
+
+    #[test]
+    fn numbers_small_enough_for_sums() {
+        let w = World::generate(Vocab::new(256), 4);
+        for e in &w.entities {
+            assert!(e.number < NUM_COUNT / 2);
+        }
+    }
+
+    #[test]
+    fn friend_hops_compose() {
+        let w = World::generate(Vocab::new(256), 5);
+        let e = 3;
+        assert_eq!(w.friend_hop(e, 2), w.friend(w.friend(e)));
+    }
+}

@@ -1,0 +1,285 @@
+//! Evaluation harness — the lm-evaluation-harness analog.
+//!
+//! Multiple choice: length-normalized continuation log-likelihood over the
+//! candidate answers (exactly the mechanics of ARC/HellaSwag/MMLU scoring).
+//! Generation: greedy decoding + exact match (GSM8K/IFEval mechanics).
+
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::config::ModelCfg;
+use crate::data::vocab::PAD;
+use crate::data::{EvalItem, Suite, TaskKind, World};
+use crate::model::ParamStore;
+use crate::runtime::{build_inputs, literal_i32, to_f32_vec, Engine, Module};
+
+/// Scores one model (params + fwd artifact) on the benchmark registry.
+pub struct Evaluator<'e> {
+    pub engine: &'e Engine,
+    pub module: Arc<Module>,
+    pub mc: ModelCfg,
+    /// apply the instruct chat template (paper's --apply_chat_template)
+    pub chat: bool,
+    /// items per task
+    pub n_items: usize,
+}
+
+/// Per-suite averages plus per-task accuracies.
+#[derive(Clone, Debug, Default)]
+pub struct EvalReport {
+    pub per_task: Vec<(String, Suite, f32)>,
+}
+
+impl EvalReport {
+    pub fn suite_avg(&self, suite: Suite) -> f32 {
+        let v: Vec<f32> =
+            self.per_task.iter().filter(|(_, s, _)| *s == suite).map(|(_, _, a)| *a).collect();
+        if v.is_empty() {
+            0.0
+        } else {
+            v.iter().sum::<f32>() / v.len() as f32
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "CSR {:.2}  OLLMv1 {:.2}  OLLMv2 {:.2}",
+            100.0 * self.suite_avg(Suite::Csr),
+            100.0 * self.suite_avg(Suite::OllmV1),
+            100.0 * self.suite_avg(Suite::OllmV2)
+        )
+    }
+}
+
+impl<'e> Evaluator<'e> {
+    pub fn new(engine: &'e Engine, artifact: &str, chat: bool, n_items: usize) -> Result<Self> {
+        let module = engine.module(artifact)?;
+        let mc = engine.manifest.model(&module.spec.model)?.clone();
+        Ok(Evaluator { engine, module, mc, chat, n_items })
+    }
+
+    /// Run one [fwd_batch, seq_len] token batch -> logits (row-major).
+    fn logits(&self, params: &ParamStore, tokens: &[i32]) -> Result<Vec<f32>> {
+        let spec = &self.module.spec;
+        let tok_spec = &spec.inputs[spec.input_index("tokens")?];
+        let inputs =
+            build_inputs(spec, params, &[("tokens", literal_i32(&tok_spec.dims, tokens)?)])?;
+        let out = self.module.run(&inputs)?;
+        to_f32_vec(&out[0])
+    }
+
+    /// Length-normalized log-likelihood of `cont` following `prompt` for a
+    /// set of rows, evaluated in packed batches.
+    fn continuation_scores(
+        &self,
+        params: &ParamStore,
+        rows: &[(Vec<i32>, Vec<i32>)], // (prompt, continuation)
+    ) -> Result<Vec<f32>> {
+        let (bsz, s, v) = (self.mc.fwd_batch, self.mc.seq_len, self.mc.vocab);
+        let mut scores = vec![0f32; rows.len()];
+        for (chunk_idx, chunk) in rows.chunks(bsz).enumerate() {
+            let mut tokens = vec![PAD; bsz * s];
+            for (r, (p, c)) in chunk.iter().enumerate() {
+                let mut row: Vec<i32> = p.iter().chain(c.iter()).cloned().collect();
+                row.truncate(s);
+                tokens[r * s..r * s + row.len()].copy_from_slice(&row);
+            }
+            let logits = self.logits(params, &tokens)?;
+            for (r, (p, c)) in chunk.iter().enumerate() {
+                let mut total = 0f32;
+                let mut n = 0usize;
+                for (k, &tok) in c.iter().enumerate() {
+                    let pos = p.len() + k; // predicted from pos-1
+                    if pos >= s {
+                        break;
+                    }
+                    let base = (r * s + pos - 1) * v;
+                    let row_logits = &logits[base..base + v];
+                    total += log_softmax_at(row_logits, tok as usize);
+                    n += 1;
+                }
+                scores[chunk_idx * bsz + r] = if n > 0 { total / n as f32 } else { f32::MIN };
+            }
+        }
+        Ok(scores)
+    }
+
+    /// Greedy-decode `max_new` tokens for each prompt.
+    pub fn generate(
+        &self,
+        params: &ParamStore,
+        prompts: &[Vec<i32>],
+        max_new: usize,
+    ) -> Result<Vec<Vec<i32>>> {
+        let (bsz, s, v) = (self.mc.fwd_batch, self.mc.seq_len, self.mc.vocab);
+        let mut outs: Vec<Vec<i32>> = vec![vec![]; prompts.len()];
+        for (chunk_idx, chunk) in prompts.chunks(bsz).enumerate() {
+            let mut rows: Vec<Vec<i32>> = chunk.to_vec();
+            for _ in 0..max_new {
+                let mut tokens = vec![PAD; bsz * s];
+                for (r, row) in rows.iter().enumerate() {
+                    let l = row.len().min(s);
+                    tokens[r * s..r * s + l].copy_from_slice(&row[..l]);
+                }
+                let logits = self.logits(params, &tokens)?;
+                for (r, row) in rows.iter_mut().enumerate() {
+                    if row.len() >= s {
+                        continue;
+                    }
+                    let base = (r * s + row.len() - 1) * v;
+                    let next = argmax(&logits[base..base + v]) as i32;
+                    row.push(next);
+                    outs[chunk_idx * bsz + r].push(next);
+                }
+            }
+        }
+        Ok(outs)
+    }
+
+    /// Score one task's items.
+    pub fn score_task(
+        &self,
+        params: &ParamStore,
+        kind: TaskKind,
+        items: &[EvalItem],
+    ) -> Result<f32> {
+        match kind {
+            TaskKind::MultipleChoice => {
+                let mut rows = vec![];
+                let mut spans = vec![];
+                for it in items {
+                    spans.push((rows.len(), it.choices.len()));
+                    for c in &it.choices {
+                        rows.push((it.prompt.clone(), c.clone()));
+                    }
+                }
+                let scores = self.continuation_scores(params, &rows)?;
+                let mut correct = 0usize;
+                for (it, (start, n)) in items.iter().zip(&spans) {
+                    let best = (0..*n)
+                        .max_by(|&a, &b| {
+                            scores[start + a].partial_cmp(&scores[start + b]).unwrap()
+                        })
+                        .unwrap();
+                    if best == it.correct {
+                        correct += 1;
+                    }
+                }
+                Ok(correct as f32 / items.len() as f32)
+            }
+            TaskKind::Generate => {
+                let prompts: Vec<Vec<i32>> = items.iter().map(|i| i.prompt.clone()).collect();
+                let max_new = items.iter().map(|i| i.answer.len()).max().unwrap_or(1);
+                let gens = self.generate(params, &prompts, max_new)?;
+                let mut correct = 0usize;
+                for (it, g) in items.iter().zip(&gens) {
+                    if g.len() >= it.answer.len() && g[..it.answer.len()] == it.answer[..] {
+                        correct += 1;
+                    }
+                }
+                Ok(correct as f32 / items.len() as f32)
+            }
+        }
+    }
+
+    /// Evaluate the full registry on a world.
+    pub fn eval_all(&self, params: &ParamStore, world: &World, seed: u64) -> Result<EvalReport> {
+        let mut report = EvalReport::default();
+        for task in crate::data::tasks::registry(self.n_items) {
+            let items = task.items(world, self.chat, seed);
+            let acc = self.score_task(params, task.kind, &items)?;
+            report.per_task.push((task.name.to_string(), task.suite, acc));
+        }
+        Ok(report)
+    }
+
+    /// Evaluate only the named suites (faster loops, e.g. Figure 1 sweeps).
+    pub fn eval_suites(
+        &self,
+        params: &ParamStore,
+        world: &World,
+        suites: &[Suite],
+        seed: u64,
+    ) -> Result<EvalReport> {
+        let mut report = EvalReport::default();
+        for task in crate::data::tasks::registry(self.n_items) {
+            if !suites.contains(&task.suite) {
+                continue;
+            }
+            let items = task.items(world, self.chat, seed);
+            let acc = self.score_task(params, task.kind, &items)?;
+            report.per_task.push((task.name.to_string(), task.suite, acc));
+        }
+        Ok(report)
+    }
+}
+
+fn log_softmax_at(logits: &[f32], idx: usize) -> f32 {
+    let m = logits.iter().fold(f32::MIN, |a, &b| a.max(b));
+    let lse = logits.iter().map(|&x| (x - m).exp()).sum::<f32>().ln() + m;
+    logits[idx] - lse
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).map(|(i, _)| i).unwrap()
+}
+
+/// Aggregate multiple reports (e.g. across model seeds) by task name.
+pub fn average_reports(reports: &[EvalReport]) -> EvalReport {
+    let mut acc: BTreeMap<(String, u8), (Suite, f32, usize)> = BTreeMap::new();
+    for r in reports {
+        for (name, suite, a) in &r.per_task {
+            let k = (name.clone(), *suite as u8);
+            let e = acc.entry(k).or_insert((*suite, 0.0, 0));
+            e.1 += a;
+            e.2 += 1;
+        }
+    }
+    EvalReport {
+        per_task: acc
+            .into_iter()
+            .map(|((name, _), (suite, total, n))| (name, suite, total / n as f32))
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_softmax_normalizes() {
+        let l = [1.0f32, 2.0, 3.0];
+        let p: f32 = (0..3).map(|i| log_softmax_at(&l, i).exp()).sum();
+        assert!((p - 1.0).abs() < 1e-5);
+        assert!(log_softmax_at(&l, 2) > log_softmax_at(&l, 0));
+    }
+
+    #[test]
+    fn argmax_works() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
+    }
+
+    #[test]
+    fn report_suite_average() {
+        let r = EvalReport {
+            per_task: vec![
+                ("a".into(), Suite::Csr, 0.5),
+                ("b".into(), Suite::Csr, 0.7),
+                ("c".into(), Suite::OllmV1, 0.2),
+            ],
+        };
+        assert!((r.suite_avg(Suite::Csr) - 0.6).abs() < 1e-6);
+        assert!((r.suite_avg(Suite::OllmV1) - 0.2).abs() < 1e-6);
+        assert_eq!(r.suite_avg(Suite::OllmV2), 0.0);
+    }
+
+    #[test]
+    fn average_reports_merges() {
+        let a = EvalReport { per_task: vec![("t".into(), Suite::Csr, 0.4)] };
+        let b = EvalReport { per_task: vec![("t".into(), Suite::Csr, 0.6)] };
+        let avg = average_reports(&[a, b]);
+        assert!((avg.per_task[0].2 - 0.5).abs() < 1e-6);
+    }
+}

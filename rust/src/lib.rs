@@ -1,0 +1,28 @@
+//! # SiLQ — Simple Large Language Model Quantization-Aware Training
+//!
+//! Full-system reproduction of the SiLQ paper as a three-layer stack:
+//! Rust coordinator (this crate) + JAX model + Pallas kernels, AOT-compiled
+//! to HLO and executed through PJRT. See DESIGN.md for the architecture and
+//! EXPERIMENTS.md for paper-vs-measured results.
+//!
+//! Layer map:
+//! * [`runtime`] — PJRT engine loading `artifacts/*.hlo.txt`
+//! * [`train`] — the SiLQ QAT pipeline (calibrate -> LSQ + KD end-to-end)
+//! * [`ptq`] — baselines: RTN, SmoothQuant, GPTQ, SpinQuant-analog
+//! * [`evalharness`] — CSR / OLLMv1 / OLLMv2 synthetic benchmark suites
+//! * [`data`] — SynthLang corpus + SFT dataset generators
+//! * [`coordinator`] — one runner per paper table/figure
+
+pub mod analysis;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod evalharness;
+pub mod linalg;
+pub mod metrics;
+pub mod model;
+pub mod ptq;
+pub mod quant;
+pub mod runtime;
+pub mod train;
+pub mod util;

@@ -1,0 +1,331 @@
+//! Dense linear algebra substrate (no external crates available offline):
+//! row-major matrices, matmul, Cholesky (GPTQ Hessians), one-sided Jacobi
+//! SVD (Procrustes analysis), Hadamard/random rotations (SpinQuant-analog).
+
+pub mod procrustes;
+pub mod rotations;
+
+pub use procrustes::{procrustes_distance, rotation_decomposition, RotationSplit};
+pub use rotations::{hadamard, random_rotation};
+
+use anyhow::{bail, Result};
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(rows * cols, data.len());
+        Mat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        t
+    }
+
+    /// Cache-friendly ikj matmul.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows);
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            for kk in 0..k {
+                let a = self.data[i * k + kk];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[kk * n..kk * n + n];
+                let orow = &mut out.data[i * n..i * n + n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn frobenius(&self) -> f64 {
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat::from_vec(
+            self.rows,
+            self.cols,
+            self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect(),
+        )
+    }
+
+    pub fn scale(&self, k: f32) -> Mat {
+        Mat::from_vec(self.rows, self.cols, self.data.iter().map(|v| v * k).collect())
+    }
+
+    /// Multiply each row r by d[r] (diag(d) * M).
+    pub fn scale_rows(&mut self, d: &[f32]) {
+        assert_eq!(d.len(), self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                self.data[r * self.cols + c] *= d[r];
+            }
+        }
+    }
+
+    /// Multiply each column c by d[c] (M * diag(d)).
+    pub fn scale_cols(&mut self, d: &[f32]) {
+        assert_eq!(d.len(), self.cols);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                self.data[r * self.cols + c] *= d[c];
+            }
+        }
+    }
+}
+
+/// Cholesky decomposition of a symmetric positive-definite matrix: A = L L^T.
+/// Returns the lower-triangular L.
+pub fn cholesky(a: &Mat) -> Result<Mat> {
+    if a.rows != a.cols {
+        bail!("cholesky: not square");
+    }
+    let n = a.rows;
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.at(i, j) as f64;
+            for k in 0..j {
+                sum -= l.at(i, k) as f64 * l.at(j, k) as f64;
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    bail!("cholesky: not positive definite at {i}");
+                }
+                l.set(i, j, (sum.sqrt()) as f32);
+            } else {
+                l.set(i, j, (sum / l.at(j, j) as f64) as f32);
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Invert an SPD matrix via Cholesky (A^-1 = L^-T L^-1).
+pub fn spd_inverse(a: &Mat) -> Result<Mat> {
+    let n = a.rows;
+    let l = cholesky(a)?;
+    // forward-solve L X = I  -> X = L^-1
+    let mut linv = Mat::zeros(n, n);
+    for col in 0..n {
+        for i in 0..n {
+            let mut sum = if i == col { 1.0f64 } else { 0.0 };
+            for k in 0..i {
+                sum -= l.at(i, k) as f64 * linv.at(k, col) as f64;
+            }
+            linv.set(i, col, (sum / l.at(i, i) as f64) as f32);
+        }
+    }
+    // A^-1 = L^-T L^-1
+    Ok(linv.transpose().matmul(&linv))
+}
+
+/// Singular values of a square matrix via one-sided Jacobi (on A^T A).
+/// Sufficient for the Procrustes trace-norm; tolerances are fine at D<=512.
+pub fn singular_values(a: &Mat) -> Vec<f64> {
+    let mut u = a.transpose(); // rows = original cols; we orthogonalize rows
+    let n = u.rows;
+    let cols = u.cols;
+    for _sweep in 0..30 {
+        let mut off = 0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let (mut app, mut aqq, mut apq) = (0f64, 0f64, 0f64);
+                for k in 0..cols {
+                    let up = u.data[p * cols + k] as f64;
+                    let uq = u.data[q * cols + k] as f64;
+                    app += up * up;
+                    aqq += uq * uq;
+                    apq += up * uq;
+                }
+                off += apq.abs();
+                if apq.abs() < 1e-12 * (app * aqq).sqrt().max(1e-30) {
+                    continue;
+                }
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for k in 0..cols {
+                    let up = u.data[p * cols + k] as f64;
+                    let uq = u.data[q * cols + k] as f64;
+                    u.data[p * cols + k] = (c * up - s * uq) as f32;
+                    u.data[q * cols + k] = (s * up + c * uq) as f32;
+                }
+            }
+        }
+        if off < 1e-10 {
+            break;
+        }
+    }
+    let mut sv: Vec<f64> = (0..n)
+        .map(|r| {
+            (0..cols)
+                .map(|k| {
+                    let v = u.data[r * cols + k] as f64;
+                    v * v
+                })
+                .sum::<f64>()
+                .sqrt()
+        })
+        .collect();
+    sv.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    sv
+}
+
+/// Nuclear norm (sum of singular values).
+pub fn nuclear_norm(a: &Mat) -> f64 {
+    singular_values(a).iter().sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn randmat(rng: &mut Rng, r: usize, c: usize) -> Mat {
+        Mat::from_vec(r, c, rng.normal_vec(r * c, 1.0))
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(0);
+        let a = randmat(&mut rng, 5, 5);
+        let i = Mat::eye(5);
+        assert_eq!(a.matmul(&i).data, a.data);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let b = Mat::from_vec(2, 2, vec![5., 6., 7., 8.]);
+        assert_eq!(a.matmul(&b).data, vec![19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(1);
+        let a = randmat(&mut rng, 3, 7);
+        assert_eq!(a.transpose().transpose().data, a.data);
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Rng::new(2);
+        let b = randmat(&mut rng, 8, 8);
+        let mut a = b.matmul(&b.transpose());
+        for i in 0..8 {
+            a.data[i * 8 + i] += 8.0; // ensure SPD
+        }
+        let l = cholesky(&a).unwrap();
+        let rec = l.matmul(&l.transpose());
+        for (x, y) in rec.data.iter().zip(&a.data) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigvals 3, -1
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn spd_inverse_works() {
+        let mut rng = Rng::new(3);
+        let b = randmat(&mut rng, 6, 6);
+        let mut a = b.matmul(&b.transpose());
+        for i in 0..6 {
+            a.data[i * 6 + i] += 6.0;
+        }
+        let ainv = spd_inverse(&a).unwrap();
+        let id = a.matmul(&ainv);
+        for i in 0..6 {
+            for j in 0..6 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((id.at(i, j) - want).abs() < 1e-3, "({i},{j}) {}", id.at(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn singular_values_of_diag() {
+        let mut a = Mat::zeros(3, 3);
+        a.set(0, 0, 3.0);
+        a.set(1, 1, -2.0);
+        a.set(2, 2, 1.0);
+        let sv = singular_values(&a);
+        assert!((sv[0] - 3.0).abs() < 1e-4);
+        assert!((sv[1] - 2.0).abs() < 1e-4);
+        assert!((sv[2] - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn singular_values_rotation_invariant() {
+        let mut rng = Rng::new(4);
+        let a = randmat(&mut rng, 16, 16);
+        let r = rotations::random_rotation(16, &mut rng);
+        let sv_a = singular_values(&a);
+        let sv_ra = singular_values(&r.matmul(&a));
+        for (x, y) in sv_a.iter().zip(&sv_ra) {
+            assert!((x - y).abs() < 1e-2 * x.max(1.0), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn nuclear_norm_orthogonal_is_n() {
+        let mut rng = Rng::new(5);
+        let r = rotations::random_rotation(12, &mut rng);
+        assert!((nuclear_norm(&r) - 12.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn row_col_scaling() {
+        let mut a = Mat::from_vec(2, 2, vec![1., 1., 1., 1.]);
+        a.scale_rows(&[2.0, 3.0]);
+        assert_eq!(a.data, vec![2., 2., 3., 3.]);
+        a.scale_cols(&[1.0, 10.0]);
+        assert_eq!(a.data, vec![2., 20., 3., 30.]);
+    }
+}

@@ -1,0 +1,113 @@
+//! Orthogonal Procrustes analysis (paper section 3.4 / Figure 3).
+//!
+//! For weight matrices A (before) and B (after), the Procrustes distance
+//! d_p(A, B) = min_R ||R A - B||_F over rotations R measures how much of the
+//! change A -> B *cannot* be explained by a rotation; the paper computes it
+//! for left- and right-side rotations and keeps the smaller. With
+//! M = B A^T (left) or A^T B (right) and SVD M = U S V^T:
+//!     d_p^2 = ||A||_F^2 + ||B||_F^2 - 2 * sum(S)  (the nuclear norm of M).
+
+use super::{nuclear_norm, Mat};
+
+/// Procrustes distance for one side. `left=true` solves min_R ||R A - B||.
+pub fn procrustes_distance(a: &Mat, b: &Mat, left: bool) -> f64 {
+    let m = if left { b.matmul(&a.transpose()) } else { a.transpose().matmul(b) };
+    let na = a.frobenius();
+    let nb = b.frobenius();
+    let d2 = na * na + nb * nb - 2.0 * nuclear_norm(&m);
+    d2.max(0.0).sqrt()
+}
+
+/// The decomposition Figure 3 plots, normalized by ||A||_F.
+#[derive(Clone, Debug)]
+pub struct RotationSplit {
+    /// total relative change ||B - A||_F / ||A||_F
+    pub total: f64,
+    /// part not explainable by rotation: min-side Procrustes distance / ||A||_F
+    pub non_rotational: f64,
+    /// part explainable by rotation: total - non_rotational
+    pub rotational: f64,
+}
+
+/// Decompose the change A -> B into rotational and non-rotational parts.
+pub fn rotation_decomposition(a: &Mat, b: &Mat) -> RotationSplit {
+    let na = a.frobenius().max(1e-12);
+    let total = b.sub(a).frobenius() / na;
+    let dp = procrustes_distance(a, b, true).min(procrustes_distance(a, b, false)) / na;
+    let dp = dp.min(total); // numerical guard: rotation can only explain, not add
+    RotationSplit { total, non_rotational: dp, rotational: total - dp }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rotations::random_rotation;
+    use crate::util::Rng;
+
+    fn randmat(rng: &mut Rng, r: usize, c: usize) -> Mat {
+        Mat::from_vec(r, c, rng.normal_vec(r * c, 1.0))
+    }
+
+    #[test]
+    fn identical_matrices_zero_distance() {
+        let mut rng = Rng::new(0);
+        let a = randmat(&mut rng, 12, 12);
+        let s = rotation_decomposition(&a, &a);
+        assert!(s.total < 1e-6 && s.non_rotational < 1e-3);
+    }
+
+    #[test]
+    fn pure_rotation_fully_explained() {
+        let mut rng = Rng::new(1);
+        let a = randmat(&mut rng, 16, 16);
+        let r = random_rotation(16, &mut rng);
+        let b = r.matmul(&a); // pure left rotation
+        let s = rotation_decomposition(&a, &b);
+        assert!(s.non_rotational < 0.02 * s.total.max(1.0), "non-rot {}", s.non_rotational);
+        assert!(s.rotational > 0.5, "rotation should dominate: {:?}", s);
+    }
+
+    #[test]
+    fn right_rotation_also_detected() {
+        let mut rng = Rng::new(2);
+        let a = randmat(&mut rng, 16, 16);
+        let r = random_rotation(16, &mut rng);
+        let b = a.matmul(&r);
+        let s = rotation_decomposition(&a, &b);
+        assert!(s.non_rotational < 0.02 * s.total.max(1.0));
+    }
+
+    #[test]
+    fn random_perturbation_mostly_non_rotational() {
+        let mut rng = Rng::new(3);
+        let a = randmat(&mut rng, 16, 16);
+        let noise = randmat(&mut rng, 16, 16).scale(0.3);
+        let mut b = a.clone();
+        for (x, n) in b.data.iter_mut().zip(&noise.data) {
+            *x += n;
+        }
+        let s = rotation_decomposition(&a, &b);
+        assert!(s.non_rotational > 0.5 * s.total, "{:?}", s);
+    }
+
+    #[test]
+    fn scaling_is_non_rotational() {
+        let mut rng = Rng::new(4);
+        let a = randmat(&mut rng, 8, 8);
+        let b = a.scale(2.0);
+        let s = rotation_decomposition(&a, &b);
+        // doubling is not a rotation: non-rotational ~ ||A|| (relative 1.0)
+        assert!(s.non_rotational > 0.9, "{:?}", s);
+    }
+
+    #[test]
+    fn procrustes_symmetric_under_side_choice_for_square() {
+        let mut rng = Rng::new(5);
+        let a = randmat(&mut rng, 10, 10);
+        let b = randmat(&mut rng, 10, 10);
+        let l = procrustes_distance(&a, &b, true);
+        let r = procrustes_distance(&a, &b, false);
+        assert!(l.is_finite() && r.is_finite());
+        assert!(l >= 0.0 && r >= 0.0);
+    }
+}

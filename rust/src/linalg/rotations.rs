@@ -1,0 +1,122 @@
+//! Orthogonal rotation constructors for the SpinQuant-analog PTQ baseline
+//! and the QuaRot-style online-rotation ablation.
+
+use super::Mat;
+use crate::util::Rng;
+
+/// Normalized Walsh-Hadamard matrix (n must be a power of two): H H^T = I.
+pub fn hadamard(n: usize) -> Mat {
+    assert!(n.is_power_of_two(), "hadamard size must be a power of two");
+    let mut h = vec![1.0f32];
+    let mut size = 1;
+    while size < n {
+        let mut next = vec![0.0f32; 4 * size * size];
+        let ns = 2 * size;
+        for r in 0..size {
+            for c in 0..size {
+                let v = h[r * size + c];
+                next[r * ns + c] = v;
+                next[r * ns + c + size] = v;
+                next[(r + size) * ns + c] = v;
+                next[(r + size) * ns + c + size] = -v;
+            }
+        }
+        h = next;
+        size = ns;
+    }
+    let norm = 1.0 / (n as f32).sqrt();
+    Mat::from_vec(n, n, h.into_iter().map(|v| v * norm).collect())
+}
+
+/// Random rotation from QR (modified Gram-Schmidt) of a Gaussian matrix,
+/// sign-fixed so det-independent columns have positive diagonal R.
+pub fn random_rotation(n: usize, rng: &mut Rng) -> Mat {
+    let mut a = Mat::from_vec(n, n, rng.normal_vec(n * n, 1.0));
+    // modified Gram-Schmidt on columns
+    for c in 0..n {
+        // normalize column c
+        let mut norm = 0f64;
+        for r in 0..n {
+            norm += (a.at(r, c) as f64).powi(2);
+        }
+        let norm = norm.sqrt().max(1e-12) as f32;
+        for r in 0..n {
+            a.set(r, c, a.at(r, c) / norm);
+        }
+        // orthogonalize the rest
+        for c2 in (c + 1)..n {
+            let mut dot = 0f64;
+            for r in 0..n {
+                dot += a.at(r, c) as f64 * a.at(r, c2) as f64;
+            }
+            for r in 0..n {
+                a.set(r, c2, a.at(r, c2) - (dot as f32) * a.at(r, c));
+            }
+        }
+    }
+    a
+}
+
+/// || R R^T - I ||_max — orthogonality defect, used by tests.
+pub fn orthogonality_defect(r: &Mat) -> f32 {
+    let g = r.matmul(&r.transpose());
+    let n = r.rows;
+    let mut worst = 0f32;
+    for i in 0..n {
+        for j in 0..n {
+            let want = if i == j { 1.0 } else { 0.0 };
+            worst = worst.max((g.at(i, j) - want).abs());
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hadamard_orthogonal() {
+        for n in [2usize, 4, 8, 64, 128] {
+            assert!(orthogonality_defect(&hadamard(n)) < 1e-4, "n={n}");
+        }
+    }
+
+    #[test]
+    fn hadamard_entries_uniform_magnitude() {
+        let h = hadamard(16);
+        let want = 1.0 / 4.0;
+        assert!(h.data.iter().all(|v| (v.abs() - want).abs() < 1e-6));
+    }
+
+    #[test]
+    #[should_panic]
+    fn hadamard_rejects_non_pow2() {
+        hadamard(12);
+    }
+
+    #[test]
+    fn random_rotation_orthogonal() {
+        let mut rng = Rng::new(7);
+        for n in [4usize, 16, 64] {
+            let r = random_rotation(n, &mut rng);
+            assert!(orthogonality_defect(&r) < 1e-3, "n={n}");
+        }
+    }
+
+    #[test]
+    fn random_rotations_differ_by_seed() {
+        let r1 = random_rotation(8, &mut Rng::new(1));
+        let r2 = random_rotation(8, &mut Rng::new(2));
+        assert_ne!(r1.data, r2.data);
+    }
+
+    #[test]
+    fn rotation_preserves_norm() {
+        let mut rng = Rng::new(9);
+        let r = random_rotation(32, &mut rng);
+        let x = Mat::from_vec(1, 32, rng.normal_vec(32, 1.0));
+        let y = x.matmul(&r);
+        assert!((x.frobenius() - y.frobenius()).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,196 @@
+//! `silq` — the coordinator CLI.
+//!
+//! Subcommands (clap is unavailable offline; parsing is hand-rolled):
+//!   silq info                          # artifacts + configs
+//!   silq pretrain|sft|qat [--set k=v]  # pipeline stages
+//!   silq eval --ckpt path --prec p     # evaluate a checkpoint
+//!   silq exp <table1|...|fig3>         # regenerate a paper table/figure
+//!   silq e2e                           # full end-to-end demo (small model)
+
+use anyhow::{bail, Context, Result};
+
+use silq::config::TrainCfg;
+use silq::coordinator::{run_experiment, Pipeline, PipelineCfg};
+use silq::data::{DataMix, SftStyle};
+use silq::metrics::RunLog;
+use silq::runtime::Engine;
+
+struct Args {
+    cmd: String,
+    flags: Vec<(String, String)>,
+}
+
+fn parse_args() -> Args {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().cloned().unwrap_or_else(|| "help".into());
+    let mut flags = vec![];
+    let mut i = 1;
+    while i < argv.len() {
+        if let Some(name) = argv[i].strip_prefix("--") {
+            if name == "set" && i + 1 < argv.len() {
+                if let Some((k, v)) = argv[i + 1].split_once('=') {
+                    flags.push((k.into(), v.into()));
+                }
+                i += 2;
+            } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                flags.push((name.into(), argv[i + 1].clone()));
+                i += 2;
+            } else {
+                flags.push((name.into(), "1".into()));
+                i += 1;
+            }
+        } else {
+            flags.push(("_pos".into(), argv[i].clone()));
+            i += 1;
+        }
+    }
+    Args { cmd, flags }
+}
+
+impl Args {
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    fn pos(&self) -> Option<&str> {
+        self.get("_pos")
+    }
+
+    fn pipeline_cfg(&self) -> PipelineCfg {
+        let mut c = PipelineCfg::default();
+        if let Some(m) = self.get("model") {
+            c.model = m.into();
+        }
+        for (k, v) in &self.flags {
+            match k.as_str() {
+                "pretrain_steps" => c.pretrain_steps = v.parse().unwrap_or(c.pretrain_steps),
+                "sft_steps" => c.sft_steps = v.parse().unwrap_or(c.sft_steps),
+                "qat_steps" => c.qat_steps = v.parse().unwrap_or(c.qat_steps),
+                "eval_items" => c.eval_items = v.parse().unwrap_or(c.eval_items),
+                "seed" => c.seed = v.parse().unwrap_or(c.seed),
+                "world_seed" => c.world_seed = v.parse().unwrap_or(c.world_seed),
+                _ => {}
+            }
+        }
+        c
+    }
+
+    fn train_cfg(&self) -> TrainCfg {
+        let mut t = TrainCfg::default();
+        for (k, v) in &self.flags {
+            t.set(k, v);
+        }
+        t
+    }
+}
+
+fn main() -> Result<()> {
+    let args = parse_args();
+    let art_dir = args.get("artifacts").unwrap_or("artifacts").to_string();
+
+    match args.cmd.as_str() {
+        "help" | "--help" | "-h" => {
+            println!(
+                "silq — SiLQ reproduction coordinator\n\
+                 usage: silq <cmd> [flags]\n\
+                 cmds:  info | pretrain | sft | qat | eval | exp <id> | e2e\n\
+                 flags: --model tiny|small  --prec a8d-c8-w4|...  --ckpt path\n\
+                        --set key=value (training hyper-params)\n\
+                        --qat_steps N --pretrain_steps N --sft_steps N --eval_items N"
+            );
+            Ok(())
+        }
+        "info" => {
+            let eng = Engine::new(&art_dir)?;
+            println!("platform: {}", eng.platform());
+            println!("models:");
+            for m in eng.manifest.models.values() {
+                println!(
+                    "  {}: vocab={} d={} L={} H={} ff={} S={} (pallas={})",
+                    m.name, m.vocab, m.d_model, m.n_layers, m.n_heads, m.d_ff, m.seq_len, m.use_pallas
+                );
+            }
+            println!("precisions: {:?}", eng.manifest.precs.keys().collect::<Vec<_>>());
+            println!("artifacts:  {}", eng.manifest.artifacts.len());
+            Ok(())
+        }
+        "pretrain" => {
+            let eng = Engine::new(&art_dir)?;
+            let p = Pipeline::new(&eng, args.pipeline_cfg())?;
+            let mut log = RunLog::new("runs/pretrain");
+            let params = p.base_model(&mut log)?;
+            println!("base model ready ({} params)", params.numel());
+            Ok(())
+        }
+        "sft" => {
+            let eng = Engine::new(&art_dir)?;
+            let p = Pipeline::new(&eng, args.pipeline_cfg())?;
+            let mut log = RunLog::new("runs/sft");
+            let style = match args.get("style").unwrap_or("tulu") {
+                "original" => SftStyle::Original,
+                _ => SftStyle::TuluSynth,
+            };
+            let params = p.instruct_model(style, "instruct", &mut log)?;
+            println!("instruct model ready ({} params)", params.numel());
+            Ok(())
+        }
+        "qat" => {
+            let eng = Engine::new(&art_dir)?;
+            let p = Pipeline::new(&eng, args.pipeline_cfg())?;
+            let mut log = RunLog::new("runs/qat");
+            let prec = args.get("prec").unwrap_or("a8d-c8-w4").to_string();
+            let fp16 = p.instruct_model(SftStyle::TuluSynth, "instruct", &mut log)?;
+            let stats = p.calib_stats(&fp16, 4)?;
+            let tcfg = args.train_cfg();
+            let act_calib = tcfg.act_calib.clone();
+            let wgt_calib = tcfg.wgt_calib.clone();
+            let mut qs = p.calibrated_quant_store(&prec, &fp16, &stats, &act_calib, &wgt_calib)?;
+            let stats_t = p.qat(
+                &prec, &mut qs, &fp16,
+                DataMix::Instruct { style: SftStyle::TuluSynth, dclm_ratio: tcfg.dclm_ratio },
+                tcfg, &mut log, None,
+            )?;
+            println!(
+                "QAT done: {:.2} steps/s, final loss {:.4}",
+                stats_t.steps_per_sec(), stats_t.final_loss
+            );
+            let out = args.get("out").unwrap_or("runs/qat/model.ckpt").to_string();
+            qs.save(&out)?;
+            let r = p.eval(&prec, &qs, true)?;
+            println!("eval: {}", r.summary());
+            Ok(())
+        }
+        "eval" => {
+            let eng = Engine::new(&art_dir)?;
+            let p = Pipeline::new(&eng, args.pipeline_cfg())?;
+            let prec = args.get("prec").unwrap_or("fp16").to_string();
+            let ckpt = args.get("ckpt").context("--ckpt required")?;
+            let spec = eng
+                .module(&format!("{}_{prec}_fwd", p.cfg.model))?
+                .spec
+                .clone();
+            let params = silq::model::ParamStore::load(&spec, ckpt)?;
+            let chat = args.get("chat").map(|v| v == "1").unwrap_or(true);
+            let r = p.eval(&prec, &params, chat)?;
+            println!("{}", r.summary());
+            for (name, suite, acc) in &r.per_task {
+                println!("  {:<16} {:8} {:.2}", name, suite.label(), 100.0 * acc);
+            }
+            Ok(())
+        }
+        "exp" => {
+            let id = args.pos().context("exp needs an id: table1..table4, fig1..fig3")?;
+            let eng = Engine::new(&art_dir)?;
+            run_experiment(&eng, id, args.pipeline_cfg())
+        }
+        "e2e" => {
+            // delegated to the example so `cargo run --example qat_e2e` and
+            // `silq e2e` share one code path
+            let eng = Engine::new(&art_dir)?;
+            silq::coordinator::experiments::run_experiment(&eng, "fig2", args.pipeline_cfg())?;
+            println!("(full e2e lives in examples/qat_e2e.rs — `cargo run --release --example qat_e2e`)");
+            Ok(())
+        }
+        other => bail!("unknown command {other}; try `silq help`"),
+    }
+}

@@ -1,0 +1,128 @@
+//! Run logging and report formatting (EXPERIMENTS.md rows come from here).
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// Append-only run log: step metrics + free-form notes, flushed to
+/// `runs/<name>/log.txt`.
+pub struct RunLog {
+    pub dir: PathBuf,
+    file: Option<std::fs::File>,
+    pub losses: Vec<(usize, f32)>,
+}
+
+impl RunLog {
+    pub fn new(dir: impl AsRef<Path>) -> RunLog {
+        let dir = dir.as_ref().to_path_buf();
+        let file = std::fs::create_dir_all(&dir)
+            .ok()
+            .and_then(|_| std::fs::File::create(dir.join("log.txt")).ok());
+        RunLog { dir, file, losses: vec![] }
+    }
+
+    /// In-memory only (tests, throwaway runs).
+    pub fn ephemeral() -> RunLog {
+        RunLog { dir: PathBuf::new(), file: None, losses: vec![] }
+    }
+
+    pub fn note(&mut self, msg: &str) {
+        println!("{msg}");
+        if let Some(f) = &mut self.file {
+            let _ = writeln!(f, "{msg}");
+        }
+    }
+
+    pub fn step(&mut self, step: usize, loss: f32, extra: &str) {
+        self.losses.push((step, loss));
+        if let Some(f) = &mut self.file {
+            let _ = writeln!(f, "step {step} loss {loss:.5} {extra}");
+        }
+    }
+
+    /// Mean loss over the last `n` recorded steps.
+    pub fn recent_loss(&self, n: usize) -> f32 {
+        let tail = &self.losses[self.losses.len().saturating_sub(n)..];
+        if tail.is_empty() {
+            return f32::NAN;
+        }
+        tail.iter().map(|(_, l)| l).sum::<f32>() / tail.len() as f32
+    }
+}
+
+/// Fixed-width table printer for experiment reports.
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate().take(ncol) {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .take(ncol)
+                .map(|(i, c)| format!("{:w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = fmt_row(&self.header) + "\n";
+        out += &widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  ");
+        out += "\n";
+        for r in &self.rows {
+            out += &fmt_row(r);
+            out += "\n";
+        }
+        out
+    }
+}
+
+pub fn pct(x: f32) -> String {
+    format!("{:.2}", 100.0 * x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "acc"]);
+        t.row(&["baseline".into(), "62.65".into()]);
+        t.row(&["siq".into(), "61.1".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("name"));
+        assert!(lines[2].contains("baseline"));
+    }
+
+    #[test]
+    fn runlog_tracks_losses() {
+        let mut l = RunLog::ephemeral();
+        l.step(1, 2.0, "");
+        l.step(2, 1.0, "");
+        assert_eq!(l.recent_loss(1), 1.0);
+        assert_eq!(l.recent_loss(10), 1.5);
+    }
+
+    #[test]
+    fn pct_format() {
+        assert_eq!(pct(0.6265), "62.65");
+    }
+}

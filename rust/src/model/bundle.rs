@@ -1,0 +1,243 @@
+//! "Tensor bundle" binary format — the checkpoint format of this repo and
+//! the fixture interchange with the Python compile path
+//! (see `python/compile/fixtures.py` for the layout).
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"SILQTNSR";
+
+/// A named tensor: f32 or i32 payload plus shape.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32 { dims: Vec<usize>, data: Vec<f32> },
+    I32 { dims: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn f32(dims: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        Tensor::F32 { dims, data }
+    }
+
+    pub fn i32(dims: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        Tensor::I32 { dims, data }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor::F32 { dims: vec![], data: vec![v] }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { dims, .. } | Tensor::I32 { dims, .. } => dims,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.dims().iter().product::<usize>().max(1)
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut Vec<f32>> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+}
+
+/// An ordered map of named tensors with binary (de)serialization.
+#[derive(Clone, Debug, Default)]
+pub struct TensorBundle {
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl TensorBundle {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: impl Into<String>, t: Tensor) {
+        self.tensors.insert(name.into(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors.get(name).ok_or_else(|| anyhow!("bundle: no tensor {name}"))
+    }
+
+    pub fn f32s(&self, name: &str) -> Result<&[f32]> {
+        self.get(name)?.as_f32()
+    }
+
+    pub fn scalar(&self, name: &str) -> Result<f32> {
+        Ok(self.f32s(name)?[0])
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path.as_ref())?);
+        w.write_all(MAGIC)?;
+        w.write_all(&1u32.to_le_bytes())?;
+        w.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for (name, t) in &self.tensors {
+            let nb = name.as_bytes();
+            w.write_all(&(nb.len() as u32).to_le_bytes())?;
+            w.write_all(nb)?;
+            let (dt, dims): (u8, &[usize]) = match t {
+                Tensor::F32 { dims, .. } => (0, dims),
+                Tensor::I32 { dims, .. } => (1, dims),
+            };
+            w.write_all(&[dt])?;
+            w.write_all(&(dims.len() as u32).to_le_bytes())?;
+            for d in dims {
+                w.write_all(&(*d as u32).to_le_bytes())?;
+            }
+            match t {
+                Tensor::F32 { data, .. } => {
+                    for v in data {
+                        w.write_all(&v.to_le_bytes())?;
+                    }
+                }
+                Tensor::I32 { data, .. } => {
+                    for v in data {
+                        w.write_all(&v.to_le_bytes())?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<TensorBundle> {
+        let bytes = std::fs::read(path.as_ref())
+            .with_context(|| format!("reading bundle {:?}", path.as_ref()))?;
+        Self::from_bytes(&bytes)
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<TensorBundle> {
+        let mut r = bytes;
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("bad bundle magic");
+        }
+        let version = read_u32(&mut r)?;
+        if version != 1 {
+            bail!("unsupported bundle version {version}");
+        }
+        let count = read_u32(&mut r)? as usize;
+        let mut bundle = TensorBundle::new();
+        for _ in 0..count {
+            let nlen = read_u32(&mut r)? as usize;
+            let mut nb = vec![0u8; nlen];
+            r.read_exact(&mut nb)?;
+            let name = String::from_utf8(nb)?;
+            let mut dt = [0u8; 1];
+            r.read_exact(&mut dt)?;
+            let ndim = read_u32(&mut r)? as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(read_u32(&mut r)? as usize);
+            }
+            let numel: usize = dims.iter().product::<usize>().max(if ndim == 0 { 1 } else { 0 });
+            // note: 0-dim tensors carry exactly one element
+            let numel = if ndim == 0 { 1 } else { numel };
+            let t = match dt[0] {
+                0 => {
+                    let mut data = vec![0f32; numel];
+                    for v in data.iter_mut() {
+                        let mut b = [0u8; 4];
+                        r.read_exact(&mut b)?;
+                        *v = f32::from_le_bytes(b);
+                    }
+                    Tensor::F32 { dims, data }
+                }
+                1 => {
+                    let mut data = vec![0i32; numel];
+                    for v in data.iter_mut() {
+                        let mut b = [0u8; 4];
+                        r.read_exact(&mut b)?;
+                        *v = i32::from_le_bytes(b);
+                    }
+                    Tensor::I32 { dims, data }
+                }
+                other => bail!("unknown dtype tag {other}"),
+            };
+            bundle.insert(name, t);
+        }
+        Ok(bundle)
+    }
+}
+
+fn read_u32(r: &mut &[u8]) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut b = TensorBundle::new();
+        b.insert("a", Tensor::f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]));
+        b.insert("b", Tensor::i32(vec![4], vec![7, 8, 9, 10]));
+        b.insert("s", Tensor::scalar(3.5));
+        let dir = std::env::temp_dir().join("silq_bundle_test.bin");
+        b.save(&dir).unwrap();
+        let c = TensorBundle::load(&dir).unwrap();
+        assert_eq!(b.tensors, c.tensors);
+        assert_eq!(c.scalar("s").unwrap(), 3.5);
+        assert_eq!(c.get("b").unwrap().as_i32().unwrap(), &[7, 8, 9, 10]);
+    }
+
+    #[test]
+    fn missing_tensor_errors() {
+        let b = TensorBundle::new();
+        assert!(b.get("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(TensorBundle::from_bytes(b"NOTMAGIC\x01\x00\x00\x00").is_err());
+    }
+
+    #[test]
+    fn python_fixtures_load_if_built() {
+        let p = std::path::Path::new("artifacts/fixtures/quant_cases.bin");
+        if p.exists() {
+            let b = TensorBundle::load(p).unwrap();
+            assert!(b.tensors.len() > 10);
+            // quantized outputs land on the step grid
+            let x = b.f32s("fq0.x").unwrap();
+            let y = b.f32s("fq0.y").unwrap();
+            let s = b.scalar("fq0.s").unwrap();
+            assert_eq!(x.len(), y.len());
+            for v in y {
+                let r = v / s;
+                assert!((r - r.round()).abs() < 1e-3);
+            }
+        }
+    }
+}

@@ -1,0 +1,7 @@
+//! Parameter storage, initialization, and checkpoint IO.
+
+pub mod bundle;
+pub mod params;
+
+pub use bundle::{Tensor, TensorBundle};
+pub use params::ParamStore;

@@ -1,0 +1,224 @@
+//! Parameter store: the ordered, named f32 tensors of one model instance,
+//! matching the artifact manifest's `params.*` contract.
+
+use anyhow::{anyhow, Result};
+use std::path::Path;
+
+use crate::config::{ArtifactSpec, ModelCfg};
+use crate::model::bundle::{Tensor, TensorBundle};
+use crate::util::Rng;
+
+/// Ordered parameter collection. Order always matches the artifact manifest
+/// so the flat literal list fed to PJRT lines up.
+#[derive(Clone, Debug)]
+pub struct ParamStore {
+    pub names: Vec<String>,
+    pub shapes: Vec<Vec<usize>>,
+    pub values: Vec<Vec<f32>>,
+}
+
+impl ParamStore {
+    /// Build an empty store with the shapes an artifact expects.
+    pub fn from_spec(spec: &ArtifactSpec) -> Self {
+        let mut names = vec![];
+        let mut shapes = vec![];
+        let mut values = vec![];
+        for t in &spec.inputs {
+            if let Some(n) = t.name.strip_prefix("params.") {
+                names.push(n.to_string());
+                shapes.push(t.dims.clone());
+                values.push(vec![0.0; t.numel().max(1)]);
+            }
+        }
+        ParamStore { names, shapes, values }
+    }
+
+    /// Random initialization (same scheme as `model.init_params` on the
+    /// Python side: ones for norms, small constant for quantizer steps,
+    /// scaled normals for weights).
+    pub fn init(spec: &ArtifactSpec, _mc: &ModelCfg, rng: &mut Rng) -> Self {
+        let mut ps = Self::from_spec(spec);
+        for i in 0..ps.names.len() {
+            let name = ps.names[i].clone();
+            let shape = ps.shapes[i].clone();
+            let n = ps.values[i].len();
+            ps.values[i] = if name.starts_with("ln") {
+                vec![1.0; n]
+            } else if name.starts_with("sw_") || name.starts_with("sa_") || name.starts_with("sc_") {
+                vec![0.05; n]
+            } else {
+                let std = if name == "embed" || name == "head" {
+                    0.02
+                } else {
+                    // fan-in init: second-to-last dim
+                    let fan_in = shape[shape.len() - 2] as f32;
+                    1.0 / fan_in.sqrt()
+                };
+                rng.normal_vec(n, std)
+            };
+        }
+        ps
+    }
+
+    pub fn index(&self, name: &str) -> Result<usize> {
+        self.names
+            .iter()
+            .position(|n| n == name)
+            .ok_or_else(|| anyhow!("param store: no param {name}"))
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.names.iter().any(|n| n == name)
+    }
+
+    pub fn get(&self, name: &str) -> Result<&[f32]> {
+        Ok(&self.values[self.index(name)?])
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut Vec<f32>> {
+        let i = self.index(name)?;
+        Ok(&mut self.values[i])
+    }
+
+    pub fn shape(&self, name: &str) -> Result<&[usize]> {
+        Ok(&self.shapes[self.index(name)?])
+    }
+
+    pub fn set(&mut self, name: &str, data: Vec<f32>) -> Result<()> {
+        let i = self.index(name)?;
+        anyhow::ensure!(data.len() == self.values[i].len(), "shape mismatch for {name}");
+        self.values[i] = data;
+        Ok(())
+    }
+
+    /// Total parameter count.
+    pub fn numel(&self) -> usize {
+        self.values.iter().map(|v| v.len()).sum()
+    }
+
+    /// Copy shared tensors from another store (e.g. fp16 weights into a
+    /// quantized store whose extra `sw_*`/`sa_*` entries stay untouched).
+    pub fn copy_common_from(&mut self, other: &ParamStore) {
+        for i in 0..self.names.len() {
+            if let Ok(j) = other.index(&self.names[i]) {
+                if other.values[j].len() == self.values[i].len() {
+                    self.values[i] = other.values[j].clone();
+                }
+            }
+        }
+    }
+
+    pub fn to_bundle(&self) -> TensorBundle {
+        let mut b = TensorBundle::new();
+        for i in 0..self.names.len() {
+            b.insert(
+                format!("params.{}", self.names[i]),
+                Tensor::f32(self.shapes[i].clone(), self.values[i].clone()),
+            );
+        }
+        b
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        self.to_bundle().save(path)
+    }
+
+    /// Load values from a bundle (names must cover this store's params).
+    pub fn load_from_bundle(spec: &ArtifactSpec, b: &TensorBundle) -> Result<Self> {
+        let mut ps = Self::from_spec(spec);
+        for i in 0..ps.names.len() {
+            let t = b.get(&format!("params.{}", ps.names[i]))?;
+            let data = t.as_f32()?.to_vec();
+            anyhow::ensure!(
+                data.len() == ps.values[i].len(),
+                "bundle shape mismatch for {}",
+                ps.names[i]
+            );
+            ps.values[i] = data;
+        }
+        Ok(ps)
+    }
+
+    pub fn load(spec: &ArtifactSpec, path: impl AsRef<Path>) -> Result<Self> {
+        Self::load_from_bundle(spec, &TensorBundle::load(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Manifest, TensorSpec};
+    use std::path::PathBuf;
+
+    fn fake_spec() -> ArtifactSpec {
+        ArtifactSpec {
+            name: "t".into(),
+            file: "t.hlo.txt".into(),
+            model: "tiny".into(),
+            prec: "fp16".into(),
+            mode: "fwd".into(),
+            inputs: vec![
+                TensorSpec { name: "params.embed".into(), dtype: "f32".into(), dims: vec![8, 4] },
+                TensorSpec { name: "params.ln1".into(), dtype: "f32".into(), dims: vec![2, 4] },
+                TensorSpec { name: "params.sw_q".into(), dtype: "f32".into(), dims: vec![2, 4] },
+                TensorSpec { name: "tokens".into(), dtype: "i32".into(), dims: vec![1, 4] },
+            ],
+            outputs: vec![],
+        }
+    }
+
+    fn fake_mc() -> ModelCfg {
+        ModelCfg {
+            name: "tiny".into(), vocab: 8, d_model: 4, n_layers: 2, n_heads: 1,
+            d_ff: 8, seq_len: 4, train_batch: 1, fwd_batch: 1, use_pallas: false,
+        }
+    }
+
+    #[test]
+    fn from_spec_skips_non_params() {
+        let ps = ParamStore::from_spec(&fake_spec());
+        assert_eq!(ps.names, vec!["embed", "ln1", "sw_q"]);
+        assert_eq!(ps.numel(), 32 + 8 + 8);
+    }
+
+    #[test]
+    fn init_rules() {
+        let mut rng = Rng::new(0);
+        let ps = ParamStore::init(&fake_spec(), &fake_mc(), &mut rng);
+        assert!(ps.get("ln1").unwrap().iter().all(|&v| v == 1.0));
+        assert!(ps.get("sw_q").unwrap().iter().all(|&v| v == 0.05));
+        assert!(ps.get("embed").unwrap().iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut ps = ParamStore::from_spec(&fake_spec());
+        ps.set("ln1", vec![2.0; 8]).unwrap();
+        assert_eq!(ps.get("ln1").unwrap()[0], 2.0);
+        assert!(ps.set("ln1", vec![1.0; 3]).is_err());
+        assert!(ps.get("nope").is_err());
+    }
+
+    #[test]
+    fn bundle_roundtrip() {
+        let mut rng = Rng::new(1);
+        let ps = ParamStore::init(&fake_spec(), &fake_mc(), &mut rng);
+        let path = std::env::temp_dir().join("silq_params_test.bin");
+        ps.save(&path).unwrap();
+        let ps2 = ParamStore::load(&fake_spec(), &path).unwrap();
+        assert_eq!(ps.values, ps2.values);
+    }
+
+    #[test]
+    fn loads_python_fixture_params_if_built() {
+        if let Ok(m) = Manifest::load("artifacts") {
+            let spec = m.artifact("tiny_fp16_fwd").unwrap();
+            let p = PathBuf::from("artifacts/fixtures/fwd_tiny_fp16.bin");
+            if p.exists() {
+                let ps = ParamStore::load(spec, &p).unwrap();
+                assert_eq!(ps.names.len(), 12);
+                assert!(ps.numel() > 500_000);
+            }
+        }
+    }
+}

@@ -1,0 +1,192 @@
+//! Step-size calibration: the paper's percentile rule for activations and
+//! the novel convex-MSE approximation (Eq. 2) for weights, plus the LSQ-paper
+//! initialization used as the Table 4 ablation baseline.
+
+use super::EPS;
+use crate::quant::qbounds;
+
+/// Paper section 3.1: percentile per precision — 99.91 / 99.99 / 99.995 for
+/// 4- / 8- / 16-bit activations.
+pub fn percentile_for_bits(bits: u32) -> f64 {
+    match bits {
+        b if b <= 4 => 99.91,
+        b if b <= 8 => 99.99,
+        _ => 99.995,
+    }
+}
+
+/// Linear-interpolated percentile of |x| (numpy semantics), then divided by
+/// q_p to produce a step size.
+pub fn act_step_percentile(xs: &[f32], bits: u32, percentile: f64) -> f32 {
+    let (_, qp) = qbounds(bits);
+    let mut a: Vec<f32> = xs.iter().map(|v| v.abs()).collect();
+    a.sort_by(|p, q| p.partial_cmp(q).unwrap());
+    let q = percentile_interp(&a, percentile);
+    (q / qp as f32).max(EPS)
+}
+
+/// numpy-style linear interpolation percentile on a sorted slice.
+pub fn percentile_interp(sorted: &[f32], percentile: f64) -> f32 {
+    assert!(!sorted.is_empty());
+    let rank = percentile / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = (rank - lo as f64) as f32;
+    sorted[lo] * (1.0 - frac) + sorted[hi.min(sorted.len() - 1)] * frac
+}
+
+/// Max (absmax) calibration — the weak baseline in the Table 4 ablation.
+pub fn act_step_max(xs: &[f32], bits: u32) -> f32 {
+    let (_, qp) = qbounds(bits);
+    let m = xs.iter().fold(0f32, |a, &b| a.max(b.abs()));
+    (m / qp as f32).max(EPS)
+}
+
+/// Paper Eq. 2 objective: eps(s) = sum_i max(s^2/12, H(|w_i|-sb)(|w_i|-sb)^2).
+fn mse_objective(aw: &[f32], s: f64, b: f64) -> f64 {
+    let floor = s * s / 12.0;
+    let mut acc = 0f64;
+    for &w in aw {
+        let over = (w as f64 - s * b).max(0.0);
+        acc += floor.max(over * over);
+    }
+    acc
+}
+
+/// The paper's novel convex-MSE weight-step calibration (Eq. 2), solved by
+/// ternary search (the objective is convex in s).
+pub fn weight_step_mse(w: &[f32], bits: u32) -> f32 {
+    let b = (1i64 << (bits - 1)) as f64 - 0.5;
+    let aw: Vec<f32> = w.iter().map(|v| v.abs()).collect();
+    let maxw = aw.iter().fold(0f32, |a, &v| a.max(v)) as f64;
+    let (mut lo, mut hi) = (EPS as f64, maxw / b + EPS as f64);
+    for _ in 0..60 {
+        let m1 = lo + (hi - lo) / 3.0;
+        let m2 = hi - (hi - lo) / 3.0;
+        if mse_objective(&aw, m1, b) > mse_objective(&aw, m2, b) {
+            lo = m1;
+        } else {
+            hi = m2;
+        }
+    }
+    (((lo + hi) / 2.0) as f32).max(EPS)
+}
+
+/// Per-output-channel convex-MSE steps for a row-major [rows, cols] matrix.
+pub fn weight_step_mse_per_channel(w: &[f32], cols: usize, bits: u32) -> Vec<f32> {
+    let rows = w.len() / cols;
+    (0..cols)
+        .map(|c| {
+            let col: Vec<f32> = (0..rows).map(|r| w[r * cols + c]).collect();
+            weight_step_mse(&col, bits)
+        })
+        .collect()
+}
+
+/// LSQ-paper initialization: s = 2 * mean|w| / sqrt(q_p).
+pub fn weight_step_lsq_init(w: &[f32], bits: u32) -> f32 {
+    let (_, qp) = qbounds(bits);
+    let mean: f32 = w.iter().map(|v| v.abs()).sum::<f32>() / w.len() as f32;
+    2.0 * mean / (qp as f32).sqrt() + EPS
+}
+
+/// Per-output-channel LSQ init.
+pub fn weight_step_lsq_per_channel(w: &[f32], cols: usize, bits: u32) -> Vec<f32> {
+    let rows = w.len() / cols;
+    (0..cols)
+        .map(|c| {
+            let col: Vec<f32> = (0..rows).map(|r| w[r * cols + c]).collect();
+            weight_step_lsq_init(&col, bits)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::quant_mse;
+    use crate::util::Rng;
+
+    #[test]
+    fn percentile_rule() {
+        assert_eq!(percentile_for_bits(4), 99.91);
+        assert_eq!(percentile_for_bits(8), 99.99);
+        assert_eq!(percentile_for_bits(16), 99.995);
+    }
+
+    #[test]
+    fn percentile_interp_simple() {
+        let v = [0.0, 1.0, 2.0, 3.0];
+        assert_eq!(percentile_interp(&v, 0.0), 0.0);
+        assert_eq!(percentile_interp(&v, 100.0), 3.0);
+        assert_eq!(percentile_interp(&v, 50.0), 1.5);
+    }
+
+    #[test]
+    fn percentile_below_max_with_outliers() {
+        let mut rng = Rng::new(0);
+        let mut xs = rng.normal_vec(100_000, 1.0);
+        xs[0] = 1000.0; // giant outlier
+        let sp = act_step_percentile(&xs, 8, 99.99);
+        let sm = act_step_max(&xs, 8);
+        assert!(sp < sm / 10.0, "percentile must ignore the outlier: {sp} vs {sm}");
+    }
+
+    #[test]
+    fn mse_step_beats_max_step_on_heavy_tails() {
+        let mut rng = Rng::new(1);
+        // cubed normals: heavy tails, the regime Eq. 2 is built for
+        let w: Vec<f32> = rng.normal_vec(4096, 1.0).iter().map(|x| x * x * x * 0.05).collect();
+        let s_mse = weight_step_mse(&w, 4);
+        let s_max = act_step_max(&w, 4);
+        assert!(s_mse < s_max, "MSE step must clip the tail: {s_mse} vs {s_max}");
+        assert!(quant_mse(&w, s_mse, 4) < quant_mse(&w, s_max, 4));
+    }
+
+    #[test]
+    fn mse_step_minimizes_eq2_objective() {
+        // the property the method *does* guarantee: s* minimizes Eq. 2
+        let mut rng = Rng::new(6);
+        let w = rng.normal_vec(2048, 0.3);
+        let aw: Vec<f32> = w.iter().map(|v| v.abs()).collect();
+        let b = 7.5f64;
+        let s = weight_step_mse(&w, 4) as f64;
+        let at = |sv: f64| mse_objective(&aw, sv, b);
+        assert!(at(s) <= at(s * 0.9) + 1e-9);
+        assert!(at(s) <= at(s * 1.1) + 1e-9);
+    }
+
+    #[test]
+    fn mse_step_near_bruteforce() {
+        let mut rng = Rng::new(2);
+        let w = rng.normal_vec(512, 1.0);
+        let s = weight_step_mse(&w, 4);
+        // brute force over a dense grid
+        let b = 7.5f32;
+        let maxw = w.iter().fold(0f32, |a, &v| a.max(v.abs()));
+        let mut best = (f64::MAX, 0f32);
+        for i in 1..4000 {
+            let sv = maxw / b * i as f32 / 4000.0;
+            let e = mse_objective(&w.iter().map(|v| v.abs()).collect::<Vec<_>>(), sv as f64, b as f64);
+            if e < best.0 {
+                best = (e, sv);
+            }
+        }
+        assert!((s - best.1).abs() / best.1 < 0.02, "{s} vs {}", best.1);
+    }
+
+    #[test]
+    fn per_channel_steps_independent() {
+        // col 0 small values, col 1 big values -> steps differ ~10x
+        let w: Vec<f32> = (0..64).flat_map(|i| [0.01 * (i as f32 % 7.0 - 3.0), 0.1 * (i as f32 % 7.0 - 3.0)]).collect();
+        let s = weight_step_mse_per_channel(&w, 2, 4);
+        assert!(s[1] > s[0] * 5.0);
+    }
+
+    #[test]
+    fn lsq_init_formula() {
+        let w = vec![1.0f32; 100];
+        let s = weight_step_lsq_init(&w, 4);
+        assert!((s - 2.0 / (7f32).sqrt()).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,145 @@
+//! Host-side quantization math — the Rust mirror of `python/compile/quant.py`
+//! and `kernels/ref.py` (cross-checked against Python-generated fixtures in
+//! `rust/tests/quant_integration.rs`).
+//!
+//! Used by the PTQ baselines (RTN / SmoothQuant / GPTQ / SpinQuant-analog),
+//! by QAT step-size calibration, and by the integer packing that a real
+//! deployment would ship to the accelerator.
+
+pub mod calib;
+pub mod pack;
+
+pub use calib::{
+    act_step_max, act_step_percentile, percentile_for_bits, weight_step_lsq_init, weight_step_mse,
+};
+
+pub const EPS: f32 = 1e-9;
+
+/// Signed symmetric integer bounds at a precision.
+pub fn qbounds(bits: u32) -> (i64, i64) {
+    (-(1i64 << (bits - 1)), (1i64 << (bits - 1)) - 1)
+}
+
+/// Paper Eq. 1: `round(clip(x/s, b_l, b_u)) * s` (round half to even, like
+/// jnp.round, so fixtures match bit-for-bit).
+pub fn fake_quant_scalar(x: f32, s: f32, bits: u32) -> f32 {
+    let (qn, qp) = qbounds(bits);
+    let s = s.max(EPS);
+    let v = (x / s).clamp(qn as f32, qp as f32);
+    round_half_even(v) * s
+}
+
+/// Round half to even (banker's rounding) — matches numpy/jnp semantics.
+pub fn round_half_even(v: f32) -> f32 {
+    let r = v.round(); // round half away from zero
+    if (v - v.trunc()).abs() == 0.5 {
+        // tie: pick the even neighbor
+        let lower = v.floor();
+        let upper = v.ceil();
+        if (lower as i64) % 2 == 0 {
+            lower
+        } else {
+            upper
+        }
+    } else {
+        r
+    }
+}
+
+/// Fake-quantize a slice in place with one step.
+pub fn fake_quant(xs: &mut [f32], s: f32, bits: u32) {
+    for x in xs.iter_mut() {
+        *x = fake_quant_scalar(*x, s, bits);
+    }
+}
+
+/// Per-token (row) dynamic symmetric quantization of a row-major [rows, cols]
+/// matrix, as the 'd' activation mode does at runtime.
+pub fn dynamic_quant_rows(xs: &mut [f32], cols: usize, bits: u32) {
+    let (_, qp) = qbounds(bits);
+    for row in xs.chunks_mut(cols) {
+        let maxabs = row.iter().fold(0f32, |a, &b| a.max(b.abs()));
+        let s = (maxabs / qp as f32).max(EPS);
+        for x in row.iter_mut() {
+            *x = fake_quant_scalar(*x, s, bits);
+        }
+    }
+}
+
+/// Per-output-channel fake quantization of a row-major [rows, cols] weight
+/// matrix; `sw[c]` is the step of column c.
+pub fn fake_quant_per_channel(w: &mut [f32], cols: usize, sw: &[f32], bits: u32) {
+    assert_eq!(sw.len(), cols);
+    for row in w.chunks_mut(cols) {
+        for (x, &s) in row.iter_mut().zip(sw) {
+            *x = fake_quant_scalar(*x, s, bits);
+        }
+    }
+}
+
+/// Mean squared quantization error of quantizing `w` with step `s`.
+pub fn quant_mse(w: &[f32], s: f32, bits: u32) -> f64 {
+    let mut acc = 0f64;
+    for &x in w {
+        let d = (fake_quant_scalar(x, s, bits) - x) as f64;
+        acc += d * d;
+    }
+    acc / w.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounds() {
+        assert_eq!(qbounds(4), (-8, 7));
+        assert_eq!(qbounds(8), (-128, 127));
+        assert_eq!(qbounds(16), (-32768, 32767));
+    }
+
+    #[test]
+    fn fake_quant_basics() {
+        // s=0.5, 4-bit: clip range [-4, 3.5]
+        assert_eq!(fake_quant_scalar(10.0, 0.5, 4), 3.5);
+        assert_eq!(fake_quant_scalar(-10.0, 0.5, 4), -4.0);
+        assert_eq!(fake_quant_scalar(0.26, 0.5, 4), 0.5);
+        assert_eq!(fake_quant_scalar(0.0, 0.5, 4), 0.0);
+    }
+
+    #[test]
+    fn round_half_even_matches_numpy() {
+        assert_eq!(round_half_even(0.5), 0.0);
+        assert_eq!(round_half_even(1.5), 2.0);
+        assert_eq!(round_half_even(2.5), 2.0);
+        assert_eq!(round_half_even(-0.5), 0.0);
+        assert_eq!(round_half_even(-1.5), -2.0);
+        assert_eq!(round_half_even(0.4999), 0.0);
+        assert_eq!(round_half_even(3.7), 4.0);
+    }
+
+    #[test]
+    fn dynamic_rows_bound_error() {
+        let mut x = vec![1.0, -2.0, 3.0, 0.5, 0.25, -0.125];
+        let orig = x.clone();
+        dynamic_quant_rows(&mut x, 3, 8);
+        for (a, b) in x.iter().zip(&orig) {
+            let rowmax: f32 = 3.0; // both rows max-abs <= 3
+            assert!((a - b).abs() <= rowmax / 127.0 / 2.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn per_channel_uses_own_step() {
+        let mut w = vec![0.3, 0.3, 0.3, 0.3];
+        fake_quant_per_channel(&mut w, 2, &[0.1, 0.2], 4);
+        assert!((w[0] - 0.3).abs() < 1e-6); // 0.3/0.1=3 exact
+        assert!((w[1] - 0.4).abs() < 1e-6); // round(1.5)=2 (half-even), 2*0.2=0.4
+    }
+
+    #[test]
+    fn mse_zero_for_grid_values() {
+        let w: Vec<f32> = (-8..8).map(|i| i as f32 * 0.25).collect();
+        assert!(quant_mse(&w, 0.25, 8) < 1e-12);
+    }
+}

@@ -1,0 +1,141 @@
+//! Integer packing: convert fake-quantized f32 tensors to the integer +
+//! scale representation a deployment target (NorthPole-like) stores.
+//!
+//! During QAT everything is f32 "fake quant"; at export time weights are
+//! divided by their step and stored as packed signed integers. This module
+//! exercises that path and verifies it is lossless w.r.t. the fake-quant
+//! values (the invariant the paper relies on for deployability).
+
+use anyhow::{bail, Result};
+
+use super::{qbounds, round_half_even, EPS};
+
+/// A per-channel-quantized integer tensor.
+#[derive(Clone, Debug)]
+pub struct PackedTensor {
+    pub bits: u32,
+    pub rows: usize,
+    pub cols: usize,
+    /// row-major quantized values (i8 covers up to 8-bit)
+    pub q: Vec<i8>,
+    /// one step per column (output channel)
+    pub scales: Vec<f32>,
+}
+
+impl PackedTensor {
+    /// Quantize a row-major [rows, cols] f32 matrix with per-column steps.
+    pub fn pack(w: &[f32], cols: usize, scales: &[f32], bits: u32) -> Result<PackedTensor> {
+        if bits > 8 {
+            bail!("pack supports <=8 bits (16-bit tensors stay fp16 on chip)");
+        }
+        if scales.len() != cols || w.len() % cols != 0 {
+            bail!("pack: shape mismatch");
+        }
+        let (qn, qp) = qbounds(bits);
+        let rows = w.len() / cols;
+        let mut q = Vec::with_capacity(w.len());
+        for row in w.chunks(cols) {
+            for (x, &s) in row.iter().zip(scales) {
+                let v = (x / s.max(EPS)).clamp(qn as f32, qp as f32);
+                q.push(round_half_even(v) as i8);
+            }
+        }
+        Ok(PackedTensor { bits, rows, cols, q, scales: scales.to_vec() })
+    }
+
+    /// Dequantize back to f32 (must reproduce the fake-quant tensor exactly).
+    pub fn dequant(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.q.len());
+        for row in self.q.chunks(self.cols) {
+            for (qv, &s) in row.iter().zip(&self.scales) {
+                out.push(*qv as f32 * s.max(EPS));
+            }
+        }
+        out
+    }
+
+    /// Bit-packed storage size in bytes (4-bit packs two values per byte).
+    pub fn storage_bytes(&self) -> usize {
+        (self.q.len() * self.bits as usize + 7) / 8 + self.scales.len() * 4
+    }
+
+    /// Integer matmul against an integer activation row (reference semantics
+    /// for the accelerator's vector-matrix unit): returns f32 accumulators.
+    pub fn int_matvec(&self, act_q: &[i8], act_scale: f32) -> Vec<f32> {
+        assert_eq!(act_q.len(), self.rows);
+        let mut out = vec![0f32; self.cols];
+        for (r, &a) in act_q.iter().enumerate() {
+            let a = a as i32;
+            let base = r * self.cols;
+            for c in 0..self.cols {
+                out[c] += (a * self.q[base + c] as i32) as f32;
+            }
+        }
+        for c in 0..self.cols {
+            out[c] *= act_scale * self.scales[c];
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{fake_quant_per_channel, round_half_even};
+    use crate::util::Rng;
+
+    #[test]
+    fn pack_dequant_matches_fake_quant() {
+        let mut rng = Rng::new(3);
+        let w = rng.normal_vec(64 * 16, 0.1);
+        let scales: Vec<f32> = (0..16).map(|i| 0.01 + 0.002 * i as f32).collect();
+        let packed = PackedTensor::pack(&w, 16, &scales, 4).unwrap();
+        let mut fq = w.clone();
+        fake_quant_per_channel(&mut fq, 16, &scales, 4);
+        let deq = packed.dequant();
+        for (a, b) in deq.iter().zip(&fq) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn values_in_bit_range() {
+        let mut rng = Rng::new(4);
+        let w = rng.normal_vec(256, 10.0);
+        let packed = PackedTensor::pack(&w, 8, &vec![0.01; 8], 4).unwrap();
+        assert!(packed.q.iter().all(|&q| (-8..=7).contains(&q)));
+    }
+
+    #[test]
+    fn storage_is_packed() {
+        let w = vec![0.0f32; 128];
+        let p4 = PackedTensor::pack(&w, 8, &vec![0.1; 8], 4).unwrap();
+        let p8 = PackedTensor::pack(&w, 8, &vec![0.1; 8], 8).unwrap();
+        assert_eq!(p4.storage_bytes(), 64 + 32);
+        assert_eq!(p8.storage_bytes(), 128 + 32);
+    }
+
+    #[test]
+    fn int_matvec_matches_float_matmul_of_dequant() {
+        let mut rng = Rng::new(5);
+        let w = rng.normal_vec(8 * 4, 0.2);
+        let scales = vec![0.05, 0.04, 0.03, 0.02];
+        let packed = PackedTensor::pack(&w, 4, &scales, 4).unwrap();
+        // quantized activation
+        let act: Vec<f32> = rng.normal_vec(8, 1.0);
+        let a_scale = 0.03f32;
+        let act_q: Vec<i8> = act.iter().map(|&x| round_half_even((x / a_scale).clamp(-128.0, 127.0)) as i8).collect();
+        let got = packed.int_matvec(&act_q, a_scale);
+        let deq = packed.dequant();
+        for c in 0..4 {
+            let want: f32 = (0..8).map(|r| (act_q[r] as f32 * a_scale) * deq[r * 4 + c]).sum();
+            assert!((got[c] - want).abs() < 1e-4, "{} vs {}", got[c], want);
+        }
+    }
+
+    #[test]
+    fn rejects_16bit_and_bad_shapes() {
+        assert!(PackedTensor::pack(&[0.0; 4], 2, &[0.1, 0.1], 16).is_err());
+        assert!(PackedTensor::pack(&[0.0; 5], 2, &[0.1, 0.1], 4).is_err());
+    }
+}

@@ -1,0 +1,208 @@
+//! PJRT runtime: load AOT-compiled HLO text artifacts and execute them.
+//!
+//! This is the only module that touches the `xla` crate. Python never runs
+//! at request time — the Rust binary loads `artifacts/*.hlo.txt` (produced
+//! once by `make artifacts`), compiles each on the PJRT CPU client, and
+//! executes with `Literal` inputs built from the [`crate::model::ParamStore`].
+
+use anyhow::{ensure, Context, Result};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::config::{ArtifactSpec, Manifest};
+use crate::model::ParamStore;
+
+/// Owns the PJRT client and a cache of compiled executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    modules: Mutex<HashMap<String, std::sync::Arc<Module>>>,
+}
+
+/// One compiled artifact.
+pub struct Module {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+// xla::PjRtLoadedExecutable wraps raw pointers without Send/Sync markers;
+// the engine serializes access through the modules mutex and the CPU client
+// is thread-safe, so sharing across threads is sound for our usage.
+unsafe impl Send for Module {}
+unsafe impl Sync for Module {}
+
+impl Engine {
+    /// Create a CPU engine over an artifact directory.
+    pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, manifest, modules: Mutex::new(HashMap::new()) })
+    }
+
+    /// Load (or fetch cached) compiled module by artifact name.
+    pub fn module(&self, name: &str) -> Result<std::sync::Arc<Module>> {
+        if let Some(m) = self.modules.lock().unwrap().get(name) {
+            return Ok(m.clone());
+        }
+        let spec = self.manifest.artifact(name)?.clone();
+        let path = self.manifest.hlo_path(name)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+        let m = std::sync::Arc::new(Module { spec, exe });
+        self.modules.lock().unwrap().insert(name.to_string(), m.clone());
+        Ok(m)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+impl Module {
+    /// Execute with literal inputs; returns the decomposed output tuple.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        ensure!(
+            inputs.len() == self.spec.inputs.len(),
+            "artifact {}: expected {} inputs, got {}",
+            self.spec.name,
+            self.spec.inputs.len(),
+            inputs.len()
+        );
+        let out = self.exe.execute::<xla::Literal>(inputs)?;
+        let lit = out[0][0].to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        ensure!(
+            parts.len() == self.spec.outputs.len(),
+            "artifact {}: expected {} outputs, got {}",
+            self.spec.name,
+            self.spec.outputs.len(),
+            parts.len()
+        );
+        Ok(parts)
+    }
+
+    /// Execute with device-resident buffers (hot path: the caller keeps
+    /// params on device between steps). Returns one tuple buffer; use
+    /// [`Module::run`] semantics via `tuple_to_literals` to decompose.
+    pub fn run_buffers(&self, inputs: &[xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
+        let out = self.exe.execute_b::<xla::PjRtBuffer>(inputs)?;
+        Ok(out.into_iter().next().unwrap())
+    }
+}
+
+/// Build an f32 literal of the given logical dims.
+pub fn literal_f32(dims: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    ensure!(dims.iter().product::<usize>().max(1) == data.len(), "literal_f32 shape mismatch");
+    let lit = xla::Literal::vec1(data);
+    if dims.is_empty() {
+        // 0-d scalar
+        Ok(lit.reshape(&[])?)
+    } else {
+        Ok(lit.reshape(&dims.iter().map(|&d| d as i64).collect::<Vec<_>>())?)
+    }
+}
+
+/// Build an i32 literal of the given logical dims.
+pub fn literal_i32(dims: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    ensure!(dims.iter().product::<usize>().max(1) == data.len(), "literal_i32 shape mismatch");
+    let lit = xla::Literal::vec1(data);
+    if dims.is_empty() {
+        Ok(lit.reshape(&[])?)
+    } else {
+        Ok(lit.reshape(&dims.iter().map(|&d| d as i64).collect::<Vec<_>>())?)
+    }
+}
+
+/// Scalar f32 literal.
+pub fn literal_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Extract an f32 vector from a literal.
+pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Extract the single f32 of a scalar literal.
+pub fn to_f32_scalar(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+/// Build the literal list for a params-prefixed artifact call: params first
+/// (in spec order), then the extra inputs provided by name.
+pub fn build_inputs(
+    spec: &ArtifactSpec,
+    params: &ParamStore,
+    extras: &[(&str, xla::Literal)],
+) -> Result<Vec<xla::Literal>> {
+    let mut out: Vec<Option<xla::Literal>> = Vec::with_capacity(spec.inputs.len());
+    for t in &spec.inputs {
+        if let Some(pname) = t.name.strip_prefix("params.") {
+            out.push(Some(literal_f32(&t.dims, params.get(pname)?)?));
+        } else {
+            out.push(None);
+        }
+    }
+    for (name, lit) in extras {
+        let idx = spec.input_index(name)?;
+        out[idx] = Some(lit.clone_literal()?);
+    }
+    let mut lits = Vec::with_capacity(out.len());
+    for (i, o) in out.into_iter().enumerate() {
+        lits.push(o.ok_or_else(|| {
+            anyhow::anyhow!("missing input {} for {}", spec.inputs[i].name, spec.name)
+        })?);
+    }
+    Ok(lits)
+}
+
+/// Clone helper (Literal lacks Clone; round-trip through vec1/reshape).
+pub trait LiteralClone {
+    fn clone_literal(&self) -> Result<xla::Literal>;
+}
+
+impl LiteralClone for xla::Literal {
+    fn clone_literal(&self) -> Result<xla::Literal> {
+        let shape = self.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match self.ty()? {
+            xla::ElementType::F32 => literal_f32(&dims, &self.to_vec::<f32>()?),
+            xla::ElementType::S32 => literal_i32(&dims, &self.to_vec::<i32>()?),
+            other => anyhow::bail!("clone_literal: unsupported type {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let lit = literal_f32(&[2, 3], &[1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(to_f32_vec(&lit).unwrap(), vec![1., 2., 3., 4., 5., 6.]);
+    }
+
+    #[test]
+    fn literal_scalar_shape() {
+        let lit = literal_f32(&[], &[5.0]).unwrap();
+        assert_eq!(to_f32_scalar(&lit).unwrap(), 5.0);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_rejected() {
+        assert!(literal_f32(&[2, 2], &[1.0]).is_err());
+        assert!(literal_i32(&[3], &[1, 2]).is_err());
+    }
+
+    #[test]
+    fn clone_literal_roundtrip() {
+        let lit = literal_i32(&[4], &[9, 8, 7, 6]).unwrap();
+        let c = lit.clone_literal().unwrap();
+        assert_eq!(c.to_vec::<i32>().unwrap(), vec![9, 8, 7, 6]);
+    }
+}

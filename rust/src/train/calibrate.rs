@@ -1,0 +1,179 @@
+//! QAT initialization (paper section 3.1): percentile calibration for
+//! activation/cache/query step sizes from the calib artifact's statistics,
+//! and convex-MSE (or LSQ-init) calibration for weight steps.
+
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+use crate::config::PrecCfg;
+use crate::data::{Batcher, DataMix, World};
+use crate::model::ParamStore;
+use crate::quant::{self, qbounds};
+use crate::runtime::{build_inputs, literal_i32, to_f32_vec, Engine};
+
+/// Accumulated calibration statistics: per-site [L,4] quantile rows
+/// (q99.91, q99.99, q99.995, max), per-channel maxima, Gram matrices.
+#[derive(Clone, Debug, Default)]
+pub struct CalibStats {
+    pub tensors: BTreeMap<String, (Vec<usize>, Vec<f32>)>,
+    pub batches: usize,
+}
+
+impl CalibStats {
+    pub fn get(&self, name: &str) -> &(Vec<usize>, Vec<f32>) {
+        self.tensors.get(name).unwrap_or_else(|| panic!("calib: no stat {name}"))
+    }
+}
+
+/// Run the fp16 calib artifact over `n_batches` corpus batches and average.
+/// (Quantiles/maxima are averaged across batches; Grams are summed, which is
+/// exactly what GPTQ's Hessian accumulation wants.)
+pub fn collect_stats(
+    engine: &Engine,
+    calib_artifact: &str,
+    fp16: &ParamStore,
+    world: &World,
+    n_batches: usize,
+    seed: u64,
+) -> Result<CalibStats> {
+    let m = engine.module(calib_artifact)?;
+    let mc = engine.manifest.model(&m.spec.model)?.clone();
+    let tok_spec = m.spec.inputs[m.spec.input_index("tokens")?].clone();
+    let mut batcher = Batcher::new(world, DataMix::Corpus, mc.fwd_batch, mc.seq_len, seed ^ 0xCA11B);
+
+    let mut stats = CalibStats::default();
+    for _ in 0..n_batches.max(1) {
+        let tokens = batcher.next_batch();
+        let inputs =
+            build_inputs(&m.spec, fp16, &[("tokens", literal_i32(&tok_spec.dims, &tokens)?)])?;
+        let out = m.run(&inputs)?;
+        for (o, spec) in out.iter().zip(&m.spec.outputs) {
+            if spec.name == "logits" {
+                continue;
+            }
+            let data = to_f32_vec(o)?;
+            let e = stats
+                .tensors
+                .entry(spec.name.clone())
+                .or_insert_with(|| (spec.dims.clone(), vec![0.0; data.len()]));
+            let sum_not_avg = spec.name.starts_with("gram_");
+            for (acc, x) in e.1.iter_mut().zip(&data) {
+                if sum_not_avg {
+                    *acc += x;
+                } else {
+                    *acc += x / n_batches.max(1) as f32;
+                }
+            }
+        }
+    }
+    stats.batches = n_batches.max(1);
+    Ok(stats)
+}
+
+/// Column index into the [.., 4] quantile rows for a precision, per the
+/// paper's rule (99.91 / 99.99 / 99.995 for 4/8/16-bit); 3 = max.
+pub fn quantile_col(bits: u32, use_max: bool) -> usize {
+    if use_max {
+        return 3;
+    }
+    match bits {
+        b if b <= 4 => 0,
+        b if b <= 8 => 1,
+        _ => 2,
+    }
+}
+
+/// Set the static activation/cache/query steps of a quantized store from
+/// calib statistics. No-op entries are skipped for dynamic configs (they
+/// have no `sa_*`/`sc_*` params).
+pub fn calibrate_act_steps(
+    qs: &mut ParamStore,
+    prec: &PrecCfg,
+    stats: &CalibStats,
+    use_max: bool,
+) -> Result<()> {
+    let site_bits: [(&str, &str, u32); 8] = [
+        ("sa_x1", "qs_x1", prec.act_bits),
+        ("sa_q", "qs_q", prec.query_bits),
+        ("sc_k", "qs_k", prec.cache_bits),
+        ("sc_v", "qs_v", prec.cache_bits),
+        ("sa_o", "qs_o", prec.act_bits),
+        ("sa_x2", "qs_x2", prec.act_bits),
+        ("sa_d", "qs_d", prec.act_bits),
+        ("sa_head", "qs_head", prec.head_bits),
+    ];
+    for (param, stat, bits) in site_bits {
+        if !qs.has(param) {
+            continue;
+        }
+        let col = quantile_col(bits, use_max);
+        let (_, qp) = qbounds(bits);
+        let (dims, data) = stats.get(stat);
+        let steps: Vec<f32> = if dims.len() == 2 {
+            // [L, 4]
+            (0..dims[0]).map(|l| (data[l * 4 + col] / qp as f32).max(quant::EPS)).collect()
+        } else {
+            vec![(data[col] / qp as f32).max(quant::EPS)]
+        };
+        let want_len = qs.get(param)?.len();
+        anyhow::ensure!(steps.len() == want_len, "{param}: {} vs {}", steps.len(), want_len);
+        qs.set(param, steps)?;
+    }
+    Ok(())
+}
+
+/// Set per-output-channel weight steps by the paper's convex-MSE rule
+/// (`mse`) or the LSQ-paper rule (`lsq`). Handles stacked [L, K, N] weights.
+pub fn calibrate_weight_steps(qs: &mut ParamStore, prec: &PrecCfg, method: &str) -> Result<()> {
+    let families: [(&str, &str, u32); 8] = [
+        ("wq", "sw_q", prec.weight_bits),
+        ("wk", "sw_k", prec.weight_bits),
+        ("wv", "sw_v", prec.weight_bits),
+        ("wo", "sw_o", prec.weight_bits),
+        ("wg", "sw_g", prec.weight_bits),
+        ("wu", "sw_u", prec.weight_bits),
+        ("wd", "sw_d", prec.weight_bits),
+        ("head", "sw_head", prec.head_bits),
+    ];
+    for (wname, sname, bits) in families {
+        if !qs.has(sname) {
+            continue;
+        }
+        let wshape = qs.shape(wname)?.to_vec();
+        let w = qs.get(wname)?.to_vec();
+        let steps = if wshape.len() == 3 {
+            let (l, k, n) = (wshape[0], wshape[1], wshape[2]);
+            let mut all = Vec::with_capacity(l * n);
+            for li in 0..l {
+                let slice = &w[li * k * n..(li + 1) * k * n];
+                let s = match method {
+                    "lsq" => quant::calib::weight_step_lsq_per_channel(slice, n, bits),
+                    _ => quant::calib::weight_step_mse_per_channel(slice, n, bits),
+                };
+                all.extend(s);
+            }
+            all
+        } else {
+            let n = wshape[1];
+            match method {
+                "lsq" => quant::calib::weight_step_lsq_per_channel(&w, n, bits),
+                _ => quant::calib::weight_step_mse_per_channel(&w, n, bits),
+            }
+        };
+        qs.set(sname, steps)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantile_col_rule() {
+        assert_eq!(quantile_col(4, false), 0);
+        assert_eq!(quantile_col(8, false), 1);
+        assert_eq!(quantile_col(16, false), 2);
+        assert_eq!(quantile_col(8, true), 3);
+    }
+}

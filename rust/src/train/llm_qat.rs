@@ -1,0 +1,106 @@
+//! LLM-QAT baseline (Liu et al., 2023; paper Table 2): QAT on data
+//! *self-generated* from the fp16 model instead of an external corpus.
+//!
+//! Faithful to the original recipe at our scale: the first tokens after BOS
+//! are decoded greedily (top-1), the rest sampled from the full softmax —
+//! LLM-QAT's "hybrid" sampling — and generation cost is what makes the
+//! method slow, which is exactly the axis Table 2 compares.
+
+use anyhow::Result;
+
+use crate::data::vocab::{BOS, PAD};
+use crate::model::ParamStore;
+use crate::runtime::{build_inputs, literal_i32, to_f32_vec, Engine};
+use crate::util::{Rng, Timer};
+
+/// Generate `n_samples` documents of `gen_len` tokens from the model.
+/// Returns (documents, wall_seconds).
+pub fn self_generate(
+    engine: &Engine,
+    fwd_artifact: &str,
+    fp16: &ParamStore,
+    n_samples: usize,
+    gen_len: usize,
+    greedy_prefix: usize,
+    temperature: f32,
+    seed: u64,
+) -> Result<(Vec<Vec<i32>>, f64)> {
+    let m = engine.module(fwd_artifact)?;
+    let mc = engine.manifest.model(&m.spec.model)?.clone();
+    let tok_spec = m.spec.inputs[m.spec.input_index("tokens")?].clone();
+    let (fb, s, v) = (mc.fwd_batch, mc.seq_len, mc.vocab);
+    let gen_len = gen_len.min(s - 1);
+    let mut rng = Rng::new(seed ^ 0x11AA);
+    let t = Timer::start();
+
+    let mut docs: Vec<Vec<i32>> = vec![];
+    let mut remaining = n_samples;
+    while remaining > 0 {
+        let bsz = remaining.min(fb);
+        let mut rows: Vec<Vec<i32>> = vec![vec![BOS]; bsz];
+        for step in 0..gen_len {
+            let mut tokens = vec![PAD; fb * s];
+            for (r, row) in rows.iter().enumerate() {
+                tokens[r * s..r * s + row.len()].copy_from_slice(row);
+            }
+            let inputs = build_inputs(
+                &m.spec,
+                fp16,
+                &[("tokens", literal_i32(&tok_spec.dims, &tokens)?)],
+            )?;
+            let out = m.run(&inputs)?;
+            let logits = to_f32_vec(&out[0])?;
+            for (r, row) in rows.iter_mut().enumerate() {
+                let base = (r * s + row.len() - 1) * v;
+                let lg = &logits[base..base + v];
+                let next = if step < greedy_prefix {
+                    argmax(lg) as i32
+                } else {
+                    sample(lg, temperature, &mut rng) as i32
+                };
+                row.push(next);
+            }
+        }
+        docs.extend(rows);
+        remaining -= bsz;
+    }
+    Ok((docs, t.secs()))
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).map(|(i, _)| i).unwrap()
+}
+
+fn sample(logits: &[f32], temperature: f32, rng: &mut Rng) -> usize {
+    let t = temperature.max(1e-3);
+    let m = logits.iter().fold(f32::MIN, |a, &b| a.max(b));
+    let ps: Vec<f32> = logits.iter().map(|&x| ((x - m) / t).exp()).collect();
+    rng.weighted(&ps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_prefers_high_logits() {
+        let mut rng = Rng::new(0);
+        let logits = [0.0f32, 5.0, 0.0, 0.0];
+        let mut hits = 0;
+        for _ in 0..200 {
+            if sample(&logits, 1.0, &mut rng) == 1 {
+                hits += 1;
+            }
+        }
+        assert!(hits > 150);
+    }
+
+    #[test]
+    fn sample_temperature_flattens() {
+        let mut rng = Rng::new(1);
+        let logits = [0.0f32, 3.0];
+        let hot: usize = (0..500).filter(|_| sample(&logits, 0.1, &mut rng) == 1).count();
+        let cold: usize = (0..500).filter(|_| sample(&logits, 10.0, &mut rng) == 1).count();
+        assert!(hot > cold);
+    }
+}

@@ -1,0 +1,244 @@
+//! The SiLQ training pipeline (paper section 3.1): pretrain / SFT at fp16,
+//! then QAT with calibrated LSQ quantizers and knowledge distillation.
+
+pub mod calibrate;
+pub mod llm_qat;
+
+use anyhow::{Context, Result};
+use std::sync::Arc;
+
+use crate::config::{ModelCfg, TrainCfg};
+use crate::data::{Batcher, DataMix, World};
+use crate::data::vocab::PAD;
+use crate::metrics::RunLog;
+use crate::model::ParamStore;
+use crate::runtime::{literal_f32, literal_i32, literal_scalar, to_f32_scalar, to_f32_vec, Engine, Module};
+use crate::util::{Rng, Timer};
+
+/// Optimizer state threaded through the train artifact.
+pub struct OptState {
+    pub m: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+}
+
+impl OptState {
+    pub fn zeros_like(p: &ParamStore) -> OptState {
+        OptState {
+            m: p.values.iter().map(|v| vec![0.0; v.len()]).collect(),
+            v: p.values.iter().map(|v| vec![0.0; v.len()]).collect(),
+        }
+    }
+}
+
+/// Everything one training run needs.
+pub struct Trainer<'e> {
+    pub engine: &'e Engine,
+    pub train_mod: Arc<Module>,
+    /// fp16 fwd module used as the KD teacher (None -> NTP-only training)
+    pub teacher: Option<(Arc<Module>, ParamStore)>,
+    pub mc: ModelCfg,
+    pub cfg: TrainCfg,
+}
+
+/// Timing breakdown of one run (feeds EXPERIMENTS.md §Perf).
+#[derive(Clone, Debug, Default)]
+pub struct TrainStats {
+    pub steps: usize,
+    pub total_secs: f64,
+    pub exec_secs: f64,
+    pub teacher_secs: f64,
+    pub data_secs: f64,
+    pub host_secs: f64,
+    pub final_loss: f32,
+}
+
+impl TrainStats {
+    pub fn steps_per_sec(&self) -> f64 {
+        self.steps as f64 / self.total_secs.max(1e-9)
+    }
+}
+
+impl<'e> Trainer<'e> {
+    pub fn new(
+        engine: &'e Engine,
+        train_artifact: &str,
+        teacher: Option<(&str, ParamStore)>,
+        cfg: TrainCfg,
+    ) -> Result<Self> {
+        let train_mod = engine.module(train_artifact)?;
+        let mc = engine.manifest.model(&train_mod.spec.model)?.clone();
+        let teacher = match teacher {
+            Some((art, params)) => Some((engine.module(art)?, params)),
+            None => None,
+        };
+        Ok(Trainer { engine, train_mod, teacher, mc, cfg })
+    }
+
+    /// Teacher forward on a train-shaped token batch. The fwd artifact has a
+    /// larger batch (fwd_batch >= train_batch); rows are padded and the
+    /// first train_batch rows of logits sliced out.
+    fn teacher_logits(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let (tm, tp) = self.teacher.as_ref().context("no teacher configured")?;
+        let spec = &tm.spec;
+        let tok_spec = &spec.inputs[spec.input_index("tokens")?];
+        let (fb, s, v) = (self.mc.fwd_batch, self.mc.seq_len, self.mc.vocab);
+        let mut padded = vec![PAD; fb * s];
+        padded[..tokens.len()].copy_from_slice(tokens);
+        let inputs = crate::runtime::build_inputs(
+            spec,
+            tp,
+            &[("tokens", literal_i32(&tok_spec.dims, &padded)?)],
+        )?;
+        let out = tm.run(&inputs)?;
+        let logits = to_f32_vec(&out[0])?;
+        Ok(logits[..self.mc.train_batch * s * v].to_vec())
+    }
+
+    /// Run `cfg.steps` of training, mutating `params` in place.
+    /// `eval_hook(step, params)` fires every `cfg.eval_every` steps.
+    pub fn run(
+        &self,
+        params: &mut ParamStore,
+        world: &World,
+        mix: DataMix,
+        log: &mut RunLog,
+        mut eval_hook: Option<&mut dyn FnMut(usize, &ParamStore)>,
+    ) -> Result<TrainStats> {
+        let spec = self.train_mod.spec.clone();
+        let names = spec.param_names();
+        let n = names.len();
+        anyhow::ensure!(names == params.names, "param order mismatch");
+
+        let mut opt = OptState::zeros_like(params);
+        let mut batcher = Batcher::new(
+            world,
+            mix,
+            self.mc.train_batch,
+            self.mc.seq_len,
+            self.cfg.seed ^ 0xDA7A,
+        );
+        let mut stats = TrainStats::default();
+        let total_t = Timer::start();
+
+        let tok_idx = spec.input_index("tokens")?;
+        let tl_idx = spec.input_index("teacher_logits")?;
+        let (tb, s, v) = (self.mc.train_batch, self.mc.seq_len, self.mc.vocab);
+
+        for step in 0..self.cfg.steps {
+            let dt = Timer::start();
+            let tokens = batcher.next_batch();
+            stats.data_secs += dt.secs();
+
+            let tt = Timer::start();
+            let teacher_logits = if self.teacher.is_some() && self.cfg.kd_ratio > 0.0 {
+                self.teacher_logits(&tokens)?
+            } else {
+                vec![0.0; tb * s * v]
+            };
+            stats.teacher_secs += tt.secs();
+
+            let ht = Timer::start();
+            let mut inputs = Vec::with_capacity(spec.inputs.len());
+            for (i, t) in spec.inputs.iter().enumerate() {
+                if i < n {
+                    inputs.push(literal_f32(&t.dims, &params.values[i])?);
+                } else if i < 2 * n {
+                    inputs.push(literal_f32(&t.dims, &opt.m[i - n])?);
+                } else if i < 3 * n {
+                    inputs.push(literal_f32(&t.dims, &opt.v[i - 2 * n])?);
+                } else if i == tok_idx {
+                    inputs.push(literal_i32(&t.dims, &tokens)?);
+                } else if i == tl_idx {
+                    inputs.push(literal_f32(&t.dims, &teacher_logits)?);
+                } else {
+                    let val = match t.name.as_str() {
+                        "lr" => self.cfg.lr_at(step),
+                        "act_lrx" => self.cfg.act_lrx,
+                        "kd_ratio" => if self.teacher.is_some() { self.cfg.kd_ratio } else { 0.0 },
+                        "kd_temp" => self.cfg.kd_temp,
+                        "wd" => self.cfg.weight_decay,
+                        "step" => (step + 1) as f32,
+                        other => anyhow::bail!("unknown scalar input {other}"),
+                    };
+                    inputs.push(literal_scalar(val));
+                }
+            }
+            stats.host_secs += ht.secs();
+
+            let et = Timer::start();
+            let out = self.train_mod.run(&inputs)?;
+            stats.exec_secs += et.secs();
+
+            let ht2 = Timer::start();
+            for i in 0..n {
+                params.values[i] = to_f32_vec(&out[i])?;
+                opt.m[i] = to_f32_vec(&out[n + i])?;
+                opt.v[i] = to_f32_vec(&out[2 * n + i])?;
+            }
+            let loss = to_f32_scalar(&out[spec.output_index("loss")?])?;
+            let gnorm = to_f32_scalar(&out[spec.output_index("gnorm")?])?;
+            stats.host_secs += ht2.secs();
+            anyhow::ensure!(loss.is_finite(), "loss diverged at step {step}");
+            log.step(step, loss, &format!("gnorm {gnorm:.4} lr {:.2e}", self.cfg.lr_at(step)));
+
+            if let Some(hook) = eval_hook.as_deref_mut() {
+                if self.cfg.eval_every > 0 && (step + 1) % self.cfg.eval_every == 0 {
+                    hook(step + 1, params);
+                }
+            }
+            stats.final_loss = loss;
+        }
+        stats.steps = self.cfg.steps;
+        stats.total_secs = total_t.secs();
+        Ok(stats)
+    }
+}
+
+/// Initialize a fresh fp16 model for pretraining.
+pub fn init_model(engine: &Engine, fwd_artifact: &str, seed: u64) -> Result<ParamStore> {
+    let m = engine.module(fwd_artifact)?;
+    let mc = engine.manifest.model(&m.spec.model)?.clone();
+    let mut rng = Rng::new(seed);
+    Ok(ParamStore::init(&m.spec, &mc, &mut rng))
+}
+
+/// Build a quantized-model store from fp16 weights: shared tensors copied,
+/// quantizer steps left for calibration.
+pub fn quantize_store(engine: &Engine, quant_artifact: &str, fp16: &ParamStore) -> Result<ParamStore> {
+    let m = engine.module(quant_artifact)?;
+    let mut qs = ParamStore::from_spec(&m.spec);
+    // steps get a safe placeholder before calibration
+    for i in 0..qs.names.len() {
+        if qs.names[i].starts_with("sw_") || qs.names[i].starts_with("sa_") || qs.names[i].starts_with("sc_") {
+            qs.values[i] = vec![0.05; qs.values[i].len()];
+        }
+    }
+    qs.copy_common_from(fp16);
+    Ok(qs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn optstate_shapes() {
+        use crate::config::TensorSpec;
+        let spec = crate::config::ArtifactSpec {
+            name: "t".into(), file: "f".into(), model: "m".into(), prec: "p".into(),
+            mode: "train".into(),
+            inputs: vec![TensorSpec { name: "params.a".into(), dtype: "f32".into(), dims: vec![3] }],
+            outputs: vec![],
+        };
+        let p = ParamStore::from_spec(&spec);
+        let o = OptState::zeros_like(&p);
+        assert_eq!(o.m[0].len(), 3);
+        assert_eq!(o.v.len(), 1);
+    }
+
+    #[test]
+    fn stats_steps_per_sec() {
+        let s = TrainStats { steps: 10, total_secs: 2.0, ..Default::default() };
+        assert!((s.steps_per_sec() - 5.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,50 @@
+//! Small shared utilities: deterministic PRNG, timers, and text helpers.
+//!
+//! The `rand`/`proptest` crates are unavailable in this offline environment,
+//! so the repository carries its own SplitMix64/xoshiro-style generator; the
+//! property tests in `rust/tests/proptests.rs` drive it.
+
+pub mod rng;
+pub mod timer;
+
+pub use rng::Rng;
+pub use timer::Timer;
+
+/// Parse `key=value` tokens out of a whitespace-separated line.
+pub fn kv_pairs(line: &str) -> Vec<(String, String)> {
+    line.split_whitespace()
+        .filter_map(|tok| tok.split_once('=').map(|(k, v)| (k.to_string(), v.to_string())))
+        .collect()
+}
+
+/// Mean of a slice (0.0 for empty input).
+pub fn mean(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f32>() / xs.len() as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kv_pairs_parses() {
+        let kv = kv_pairs("model tiny vocab=256 d_model=128");
+        assert_eq!(kv.len(), 2);
+        assert_eq!(kv[0], ("vocab".into(), "256".into()));
+    }
+
+    #[test]
+    fn kv_pairs_empty() {
+        assert!(kv_pairs("no pairs here").is_empty());
+    }
+
+    #[test]
+    fn mean_works() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(mean(&[]), 0.0);
+    }
+}

@@ -1,0 +1,52 @@
+//! Wall-clock phase timing for the metrics/EXPERIMENTS reports.
+
+use std::time::Instant;
+
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn millis(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Measure the average milliseconds of `f` over `iters` runs after `warmup`.
+pub fn bench_ms<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let t = Timer::start();
+    for _ in 0..iters {
+        f();
+    }
+    t.millis() / iters as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotonic() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(t.millis() >= 4.0);
+    }
+
+    #[test]
+    fn bench_runs() {
+        let mut n = 0;
+        let _ = bench_ms(1, 3, || n += 1);
+        assert_eq!(n, 4);
+    }
+}

@@ -1,0 +1,57 @@
+//! Eval harness integration: scoring machinery sanity on real artifacts.
+
+use silq::data::{Suite, Vocab, World};
+use silq::evalharness::Evaluator;
+use silq::runtime::Engine;
+use silq::train::init_model;
+
+fn ready() -> bool {
+    std::path::Path::new("artifacts/manifest.txt").exists()
+}
+
+#[test]
+fn untrained_model_scores_near_chance() {
+    if !ready() {
+        return;
+    }
+    let engine = Engine::new("artifacts").unwrap();
+    let params = init_model(&engine, "tiny_fp16_fwd", 11).unwrap();
+    let world = World::generate(Vocab::new(256), 5);
+    let ev = Evaluator::new(&engine, "tiny_fp16_fwd", false, 24).unwrap();
+    let r = ev.eval_suites(&params, &world, &[Suite::Csr], 1).unwrap();
+    // 8 CSR tasks with 2-4 choices: chance is 0.25-0.5; an untrained model
+    // must sit in a broad band around it (not 0, not high)
+    let avg = r.suite_avg(Suite::Csr);
+    assert!(avg > 0.03 && avg < 0.70, "untrained CSR avg {avg}");
+}
+
+#[test]
+fn generation_returns_requested_tokens() {
+    if !ready() {
+        return;
+    }
+    let engine = Engine::new("artifacts").unwrap();
+    let params = init_model(&engine, "tiny_fp16_fwd", 12).unwrap();
+    let ev = Evaluator::new(&engine, "tiny_fp16_fwd", false, 4).unwrap();
+    let prompts = vec![vec![1i32, 40, 12, 41, 15], vec![1i32, 50, 12, 33, 15]];
+    let outs = ev.generate(&params, &prompts, 3).unwrap();
+    assert_eq!(outs.len(), 2);
+    assert!(outs.iter().all(|o| o.len() == 3));
+    assert!(outs.iter().flatten().all(|&t| (0..256).contains(&t)));
+}
+
+#[test]
+fn report_covers_all_suites() {
+    if !ready() {
+        return;
+    }
+    let engine = Engine::new("artifacts").unwrap();
+    let params = init_model(&engine, "tiny_fp16_fwd", 13).unwrap();
+    let world = World::generate(Vocab::new(256), 5);
+    let ev = Evaluator::new(&engine, "tiny_fp16_fwd", true, 8).unwrap();
+    let r = ev.eval_all(&params, &world, 2).unwrap();
+    assert_eq!(r.per_task.len(), 20);
+    assert_eq!(r.per_task.iter().filter(|(_, s, _)| *s == Suite::Csr).count(), 8);
+    assert_eq!(r.per_task.iter().filter(|(_, s, _)| *s == Suite::OllmV1).count(), 6);
+    assert_eq!(r.per_task.iter().filter(|(_, s, _)| *s == Suite::OllmV2).count(), 6);
+}

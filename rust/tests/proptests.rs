@@ -1,0 +1,143 @@
+//! PRNG-driven property tests (the proptest crate is unavailable offline;
+//! properties are swept over seeded random cases instead — same spirit,
+//! deterministic by construction).
+
+use silq::linalg::{rotation_decomposition, random_rotation, Mat};
+use silq::quant;
+use silq::util::Rng;
+
+const CASES: u64 = 40;
+
+#[test]
+fn prop_fake_quant_idempotent() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let mut x = rng.normal_vec(257, 2.0);
+        let s = rng.uniform() * 0.2 + 1e-3;
+        let bits = [2, 4, 8, 16][rng.below(4)];
+        quant::fake_quant(&mut x, s, bits);
+        let once = x.clone();
+        quant::fake_quant(&mut x, s, bits);
+        assert_eq!(once, x, "seed {seed}: quantization must be idempotent");
+    }
+}
+
+#[test]
+fn prop_fake_quant_error_bounded_in_range() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0xA);
+        let x = rng.normal_vec(128, 1.0);
+        let s = rng.uniform() * 0.1 + 1e-3;
+        let (qn, qp) = quant::qbounds(8);
+        for &v in &x {
+            let q = quant::fake_quant_scalar(v, s, 8);
+            if v > s * qn as f32 && v < s * qp as f32 {
+                assert!((q - v).abs() <= s / 2.0 + 1e-6, "seed {seed}");
+            }
+            assert!(q >= s * qn as f32 - 1e-6 && q <= s * qp as f32 + 1e-6);
+        }
+    }
+}
+
+#[test]
+fn prop_quant_monotone_nondecreasing() {
+    // fake quant is a monotone function of its input
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0xB);
+        let s = rng.uniform() * 0.3 + 1e-3;
+        let mut xs = rng.normal_vec(64, 2.0);
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let qs: Vec<f32> = xs.iter().map(|&v| quant::fake_quant_scalar(v, s, 4)).collect();
+        for w in qs.windows(2) {
+            assert!(w[1] >= w[0] - 1e-7, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_mse_step_within_max_bound() {
+    // the optimal step never exceeds max|w|/b (clipping everything is never
+    // optimal) and is positive
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0xC);
+        let std = rng.uniform() + 0.01;
+        let w = rng.normal_vec(512, std);
+        let s = quant::weight_step_mse(&w, 4);
+        let maxw = w.iter().fold(0f32, |a, &b| a.max(b.abs()));
+        assert!(s > 0.0 && s <= maxw / 7.5 + 1e-3, "seed {seed}: s={s}");
+    }
+}
+
+#[test]
+fn prop_percentile_between_zero_and_max() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0xD);
+        let x = rng.normal_vec(2048, 1.0);
+        let sp = quant::act_step_percentile(&x, 8, 99.99);
+        let sm = quant::act_step_max(&x, 8);
+        assert!(sp > 0.0 && sp <= sm + 1e-9, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_rotation_decomposition_sane() {
+    // non_rotational <= total, parts sum to total
+    for seed in 0..CASES / 2 {
+        let mut rng = Rng::new(seed ^ 0xE);
+        let a = Mat::from_vec(12, 12, rng.normal_vec(144, 1.0));
+        let mut b = a.clone();
+        for v in b.data.iter_mut() {
+            *v += rng.normal() * 0.2;
+        }
+        let s = rotation_decomposition(&a, &b);
+        assert!(s.non_rotational <= s.total + 1e-6, "seed {seed}");
+        assert!((s.rotational + s.non_rotational - s.total).abs() < 1e-6);
+        assert!(s.rotational >= -1e-9);
+    }
+}
+
+#[test]
+fn prop_random_rotations_orthogonal() {
+    for seed in 0..10 {
+        let mut rng = Rng::new(seed ^ 0xF);
+        let n = [4usize, 8, 16, 32][rng.below(4)];
+        let r = random_rotation(n, &mut rng);
+        assert!(silq::linalg::rotations::orthogonality_defect(&r) < 1e-3, "seed {seed} n={n}");
+    }
+}
+
+#[test]
+fn prop_pack_dequant_lossless_vs_fake_quant() {
+    for seed in 0..CASES / 2 {
+        let mut rng = Rng::new(seed ^ 0x10);
+        let cols = [4usize, 8, 16][rng.below(3)];
+        let rows = rng.range(2, 32);
+        let w = rng.normal_vec(rows * cols, 0.2);
+        let steps: Vec<f32> = (0..cols).map(|_| rng.uniform() * 0.1 + 1e-3).collect();
+        let bits = [2u32, 4, 8][rng.below(3)];
+        let packed = silq::quant::pack::PackedTensor::pack(&w, cols, &steps, bits).unwrap();
+        let mut fq = w.clone();
+        quant::fake_quant_per_channel(&mut fq, cols, &steps, bits);
+        for (a, b) in packed.dequant().iter().zip(&fq) {
+            assert!((a - b).abs() < 1e-6, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_bundle_roundtrip_random() {
+    use silq::model::{Tensor, TensorBundle};
+    for seed in 0..10 {
+        let mut rng = Rng::new(seed ^ 0x11);
+        let mut b = TensorBundle::new();
+        for i in 0..rng.range(1, 6) {
+            let n = rng.range(1, 100);
+            b.insert(format!("t{i}"), Tensor::f32(vec![n], rng.normal_vec(n, 1.0)));
+        }
+        let path = std::env::temp_dir().join(format!("silq_prop_{seed}.bin"));
+        b.save(&path).unwrap();
+        let c = TensorBundle::load(&path).unwrap();
+        assert_eq!(b.tensors, c.tensors);
+        let _ = std::fs::remove_file(path);
+    }
+}

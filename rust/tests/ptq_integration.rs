@@ -1,0 +1,98 @@
+//! PTQ end-to-end: norm folding and rotations must preserve the fp function
+//! exactly (checked through the compiled PJRT model), and each baseline
+//! must produce a runnable quantized store.
+
+use silq::coordinator::{Pipeline, PipelineCfg};
+use silq::linalg::hadamard;
+use silq::metrics::RunLog;
+use silq::model::ParamStore;
+use silq::ptq;
+use silq::runtime::{build_inputs, literal_i32, to_f32_vec, Engine};
+use silq::train::{init_model, quantize_store};
+
+fn ready() -> bool {
+    std::path::Path::new("artifacts/manifest.txt").exists()
+}
+
+fn fwd_fp16(engine: &Engine, qs: &ParamStore, tokens: &[i32]) -> Vec<f32> {
+    // run the quantized store's *weights* through the fp16 artifact by
+    // building an fp16 store from its shared tensors
+    let m = engine.module("tiny_fp16_fwd").unwrap();
+    let mut fp = ParamStore::from_spec(&m.spec);
+    fp.copy_common_from(qs);
+    let tok_spec = m.spec.inputs[m.spec.input_index("tokens").unwrap()].clone();
+    let inputs =
+        build_inputs(&m.spec, &fp, &[("tokens", literal_i32(&tok_spec.dims, tokens).unwrap())])
+            .unwrap();
+    to_f32_vec(&m.run(&inputs).unwrap()[0]).unwrap()
+}
+
+#[test]
+fn fold_and_rotate_preserve_fp_function() {
+    if !ready() {
+        return;
+    }
+    let engine = Engine::new("artifacts").unwrap();
+    let mc = engine.manifest.model("tiny").unwrap().clone();
+    let fp16 = init_model(&engine, "tiny_fp16_fwd", 123).unwrap();
+    let mut qs = quantize_store(&engine, "tiny_a8d-c8-w4_fwd", &fp16).unwrap();
+
+    let tokens: Vec<i32> = (0..32 * 64).map(|i| 1 + (i as i32 % 250)).collect();
+    let base = fwd_fp16(&engine, &qs, &tokens);
+
+    ptq::fold_norms(&mut qs, &mc).unwrap();
+    let folded = fwd_fp16(&engine, &qs, &tokens);
+    let d1 = base.iter().zip(&folded).map(|(a, b)| (a - b).abs()).fold(0f32, f32::max);
+    assert!(d1 < 2e-3, "norm folding must preserve the function: {d1}");
+
+    ptq::apply_rotation(&mut qs, &mc, &hadamard(mc.d_model)).unwrap();
+    let rotated = fwd_fp16(&engine, &qs, &tokens);
+    let d2 = base.iter().zip(&rotated).map(|(a, b)| (a - b).abs()).fold(0f32, f32::max);
+    assert!(d2 < 5e-3, "rotation must preserve the fp function: {d2}");
+}
+
+#[test]
+fn all_ptq_baselines_produce_runnable_models() {
+    if !ready() {
+        return;
+    }
+    let engine = Engine::new("artifacts").unwrap();
+    let cfg = PipelineCfg { eval_items: 4, ..Default::default() };
+    let p = Pipeline::new(&engine, cfg).unwrap();
+    let mut log = RunLog::ephemeral();
+    let fp16 = init_model(&engine, "tiny_fp16_fwd", 5).unwrap();
+    log.note("collecting stats");
+    let stats = p.calib_stats(&fp16, 1).unwrap();
+    for method in ["rtn", "smoothquant", "gptq", "spinquant"] {
+        let qs = p.ptq_baseline(method, "a8d-c8-w4", &fp16, &stats).unwrap();
+        // steps must be positive and weights finite
+        for (name, vals) in qs.names.iter().zip(&qs.values) {
+            assert!(vals.iter().all(|v| v.is_finite()), "{method}/{name} not finite");
+            if name.starts_with("sw_") {
+                assert!(vals.iter().all(|&v| v > 0.0), "{method}/{name} step <= 0");
+            }
+        }
+        let r = p.eval("a8d-c8-w4", &qs, false).unwrap();
+        assert!(r.per_task.len() == 20, "{method} eval incomplete");
+    }
+}
+
+#[test]
+fn smoothquant_reduces_act_range_on_outlier_channels() {
+    if !ready() {
+        return;
+    }
+    let engine = Engine::new("artifacts").unwrap();
+    let mc = engine.manifest.model("tiny").unwrap().clone();
+    let fp16 = init_model(&engine, "tiny_fp16_fwd", 9).unwrap();
+    let cfg = PipelineCfg { eval_items: 4, ..Default::default() };
+    let p = Pipeline::new(&engine, cfg).unwrap();
+    let stats = p.calib_stats(&fp16, 1).unwrap();
+    let pc = engine.manifest.prec("a8d-c8-w4").unwrap().clone();
+    let mut qs = quantize_store(&engine, "tiny_a8d-c8-w4_fwd", &fp16).unwrap();
+    let ln_before = qs.get("ln1").unwrap().to_vec();
+    ptq::smoothquant(&mut qs, &mc, &pc, &stats, 0.5).unwrap();
+    let ln_after = qs.get("ln1").unwrap().to_vec();
+    assert!(ln_before.iter().zip(&ln_after).any(|(a, b)| (a - b).abs() > 1e-6),
+        "smoothquant must migrate scales into the norm");
+}

@@ -1,0 +1,208 @@
+//! Integration: PJRT runtime loads and executes the AOT artifacts, and the
+//! numerics match the Python-side fixtures exactly where they must.
+//!
+//! Requires `make artifacts` to have been run (skips otherwise).
+
+use silq::config::Manifest;
+use silq::model::{ParamStore, TensorBundle};
+use silq::runtime::{build_inputs, literal_i32, literal_scalar, to_f32_vec, Engine};
+
+fn engine() -> Option<Engine> {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Engine::new("artifacts").expect("engine"))
+}
+
+#[test]
+fn manifest_and_engine_load() {
+    let Some(eng) = engine() else { return };
+    let _ = Manifest::load("artifacts").unwrap();
+    assert!(eng.manifest.artifacts.len() >= 15);
+}
+
+#[test]
+fn fwd_fp16_matches_python_fixture() {
+    let Some(eng) = engine() else { return };
+    let fixture = std::path::Path::new("artifacts/fixtures/fwd_tiny_fp16.bin");
+    if !fixture.exists() {
+        return;
+    }
+    let m = eng.module("tiny_fp16_fwd").expect("module");
+    let b = TensorBundle::load(fixture).unwrap();
+    let params = ParamStore::load_from_bundle(&m.spec, &b).unwrap();
+    let tokens = b.get("tokens").unwrap().as_i32().unwrap().to_vec();
+    let tok_spec = &m.spec.inputs[m.spec.input_index("tokens").unwrap()];
+    let inputs = build_inputs(
+        &m.spec,
+        &params,
+        &[("tokens", literal_i32(&tok_spec.dims, &tokens).unwrap())],
+    )
+    .unwrap();
+    let out = m.run(&inputs).expect("run");
+    let logits = to_f32_vec(&out[0]).unwrap();
+    let want = b.f32s("logits").unwrap();
+    assert_eq!(logits.len(), want.len());
+    let max_diff = logits
+        .iter()
+        .zip(want)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_diff < 1e-3, "fp16 fwd mismatch: {max_diff}");
+}
+
+#[test]
+fn fwd_quantized_matches_python_fixture() {
+    let Some(eng) = engine() else { return };
+    let fixture = std::path::Path::new("artifacts/fixtures/fwd_tiny_a8s.bin");
+    if !fixture.exists() {
+        return;
+    }
+    let m = eng.module("tiny_a8s-c8-w4_fwd").expect("module");
+    let b = TensorBundle::load(fixture).unwrap();
+    let params = ParamStore::load_from_bundle(&m.spec, &b).unwrap();
+    let tokens = b.get("tokens").unwrap().as_i32().unwrap().to_vec();
+    let tok_spec = &m.spec.inputs[m.spec.input_index("tokens").unwrap()];
+    let inputs = build_inputs(
+        &m.spec,
+        &params,
+        &[("tokens", literal_i32(&tok_spec.dims, &tokens).unwrap())],
+    )
+    .unwrap();
+    let out = m.run(&inputs).expect("run");
+    let logits = to_f32_vec(&out[0]).unwrap();
+    let want = b.f32s("logits").unwrap();
+    // quantized path: discontinuities allow isolated bin flips, but the
+    // overwhelming majority of entries must agree tightly.
+    let mut diffs: Vec<f32> = logits.iter().zip(want).map(|(a, b)| (a - b).abs()).collect();
+    diffs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // cross-compiler (jax XLA vs xla_extension 0.5.1) 1-ulp differences can
+    // flip isolated round() bins; require tight agreement for the bulk and
+    // bounded flips for the tail.
+    let p90 = diffs[(diffs.len() as f64 * 0.90) as usize];
+    let p9999 = diffs[(diffs.len() as f64 * 0.9999) as usize];
+    assert!(p90 < 1e-3, "quantized fwd p90 diff {p90}");
+    assert!(p9999 < 0.2, "quantized fwd p99.99 diff {p9999}");
+}
+
+#[test]
+fn train_step_matches_python_fixture() {
+    let Some(eng) = engine() else { return };
+    let fixture = std::path::Path::new("artifacts/fixtures/train_tiny_a8s.bin");
+    if !fixture.exists() {
+        return;
+    }
+    let m = eng.module("tiny_a8s-c8-w4_train").expect("module");
+    let b = TensorBundle::load(fixture).unwrap();
+    let params = ParamStore::load_from_bundle(&m.spec, &b).unwrap();
+
+    let spec = &m.spec;
+    let mut inputs = Vec::new();
+    for t in &spec.inputs {
+        if let Some(p) = t.name.strip_prefix("params.") {
+            inputs.push(silq::runtime::literal_f32(&t.dims, params.get(p).unwrap()).unwrap());
+        } else if t.name.starts_with("m.") || t.name.starts_with("v.") {
+            inputs.push(silq::runtime::literal_f32(&t.dims, &vec![0.0; t.numel()]).unwrap());
+        } else if t.name == "tokens" {
+            inputs.push(literal_i32(&t.dims, b.get("tokens").unwrap().as_i32().unwrap()).unwrap());
+        } else if t.name == "teacher_logits" {
+            inputs.push(silq::runtime::literal_f32(&t.dims, b.f32s("teacher").unwrap()).unwrap());
+        } else {
+            let v = match t.name.as_str() {
+                "lr" => 5e-3,
+                "act_lrx" => 50.0,
+                "kd_ratio" => 1.0,
+                "kd_temp" => 1.0,
+                "wd" => 0.1,
+                "step" => 1.0,
+                other => panic!("unexpected input {other}"),
+            };
+            inputs.push(literal_scalar(v));
+        }
+    }
+    let out = m.run(&inputs).expect("run");
+    let loss = silq::runtime::to_f32_scalar(&out[spec.output_index("loss").unwrap()]).unwrap();
+    let want_loss = b.scalar("loss").unwrap();
+    assert!((loss - want_loss).abs() < 2e-3, "loss {loss} vs {want_loss}");
+
+    let gnorm = silq::runtime::to_f32_scalar(&out[spec.output_index("gnorm").unwrap()]).unwrap();
+    assert!((gnorm - b.scalar("gnorm").unwrap()).abs() < 2e-2);
+
+    for (out_name, fix_name) in [
+        ("params.ln_f", "new.ln_f"),
+        ("params.sa_x1", "new.sa_x1"),
+        ("params.head", "new.head"),
+        ("m.head", "newm.head"),
+        ("v.head", "newv.head"),
+    ] {
+        let got = to_f32_vec(&out[spec.output_index(out_name).unwrap()]).unwrap();
+        let want = b.f32s(fix_name).unwrap();
+        let mut diffs: Vec<f32> =
+            got.iter().zip(want).map(|(a, b)| (a - b).abs()).collect();
+        diffs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p99 = diffs[(diffs.len() as f64 * 0.99) as usize];
+        // isolated quantization bin flips move an Adam update by up to
+        // ~2*lr on first step (sign flip of m/sqrt(v)); bound the tail by that.
+        let maxd = diffs[diffs.len() - 1];
+        assert!(p99 < 5e-4, "{out_name} p99 diff {p99}");
+        assert!(maxd < 2.5 * 5e-3, "{out_name} max diff {maxd}");
+    }
+}
+
+#[test]
+fn pallas_composed_artifact_runs() {
+    // The tiny-pallas fwd artifact contains the lowered L1 kernels; running
+    // it through the Rust PJRT client proves the full L1->L2->L3 stack.
+    let Some(eng) = engine() else { return };
+    let m = eng.module("tiny-pallas_a8d-c8-w4_fwd").expect("module");
+    let mc = eng.manifest.model("tiny-pallas").unwrap().clone();
+    let mut rng = silq::util::Rng::new(0);
+    let params = ParamStore::init(&m.spec, &mc, &mut rng);
+    let tok_spec = &m.spec.inputs[m.spec.input_index("tokens").unwrap()];
+    let tokens: Vec<i32> = (0..tok_spec.numel()).map(|i| 1 + (i as i32 % 250)).collect();
+    let inputs = build_inputs(
+        &m.spec,
+        &params,
+        &[("tokens", literal_i32(&tok_spec.dims, &tokens).unwrap())],
+    )
+    .unwrap();
+    let out = m.run(&inputs).expect("pallas-composed artifact must run on CPU PJRT");
+    let logits = to_f32_vec(&out[0]).unwrap();
+    assert!(logits.iter().all(|v| v.is_finite()));
+    assert!(logits.iter().any(|v| *v != 0.0));
+}
+
+#[test]
+fn calib_artifact_produces_ordered_quantiles() {
+    let Some(eng) = engine() else { return };
+    let m = eng.module("tiny_fp16_calib").expect("module");
+    let fixture = std::path::Path::new("artifacts/fixtures/fwd_tiny_fp16.bin");
+    if !fixture.exists() {
+        return;
+    }
+    let b = TensorBundle::load(fixture).unwrap();
+    let params = ParamStore::load_from_bundle(&m.spec, &b).unwrap();
+    let tok_spec = &m.spec.inputs[m.spec.input_index("tokens").unwrap()];
+    let tokens = b.get("tokens").unwrap().as_i32().unwrap().to_vec();
+    let inputs = build_inputs(
+        &m.spec,
+        &params,
+        &[("tokens", literal_i32(&tok_spec.dims, &tokens).unwrap())],
+    )
+    .unwrap();
+    let out = m.run(&inputs).expect("calib run");
+    let qs = to_f32_vec(&out[m.spec.output_index("qs_x1").unwrap()]).unwrap();
+    for row in qs.chunks(4) {
+        assert!(row[0] <= row[1] + 1e-6 && row[1] <= row[2] + 1e-6 && row[2] <= row[3] + 1e-6);
+        assert!(row[3] > 0.0);
+    }
+    let gram = to_f32_vec(&out[m.spec.output_index("gram_x1").unwrap()]).unwrap();
+    let d = 128;
+    for l in 0..4 {
+        let g = &gram[l * d * d..(l + 1) * d * d];
+        for i in 0..d {
+            assert!(g[i * d + i] >= 0.0);
+        }
+    }
+}
