@@ -1,0 +1,23 @@
+# SiLQ reproduction — top-level targets.
+#
+# `make check` is the tier-1 gate every PR must keep green (see ROADMAP.md).
+
+.PHONY: check fmt artifacts bench pytest
+
+# tier-1: release build + full test suite + formatting
+check:
+	./scripts/check.sh
+
+fmt:
+	cd rust && cargo fmt
+
+# AOT-lower every (model, precision, mode) artifact + manifest (needs JAX)
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../artifacts
+	cd python && python3 -m compile.fixtures --out-dir=../artifacts/fixtures
+
+bench:
+	cd rust && cargo bench --offline 2>&1 | tee ../bench_output.txt
+
+pytest:
+	cd python && python3 -m pytest tests/ -q

@@ -1,7 +1,10 @@
-//! Serve a quantized checkpoint: batched greedy generation through the
-//! compiled a8d-c8-w4 forward artifact — the deployment-shaped path (the
-//! paper's motivation is low-latency inference on NorthPole-class
-//! accelerators; here the same integer-constrained graph runs on CPU PJRT).
+//! Serve a quantized checkpoint through the continuous-batching engine:
+//! requests flow admission queue -> scheduler -> decode backend, with
+//! per-request TTFT/latency and aggregate throughput reported — the
+//! deployment-shaped path (the paper's motivation is low-latency inference
+//! on NorthPole-class accelerators; here the same integer-constrained
+//! graph runs on CPU PJRT, and the host backend shows the K/V cache
+//! resident in the paper's 8-bit integer representation).
 //!
 //! Run: `cargo run --release --offline --example serve_quantized -- [ckpt]`
 //! Without a checkpoint it calibrates a fresh model (answers will be noise,
@@ -11,11 +14,12 @@ use anyhow::Result;
 use silq::coordinator::{Pipeline, PipelineCfg};
 use silq::data::vocab::{self, Vocab};
 use silq::data::World;
-use silq::evalharness::Evaluator;
 use silq::metrics::RunLog;
 use silq::model::ParamStore;
+use silq::serve::{
+    serve_inline, ArtifactBackend, CacheStore, GenRequest, HostBackend, HostCfg,
+};
 use silq::train::init_model;
-use silq::util::Timer;
 
 fn main() -> Result<()> {
     let engine = silq::runtime::Engine::new("artifacts")?;
@@ -41,45 +45,54 @@ fn main() -> Result<()> {
     };
 
     let mc = engine.manifest.model("tiny")?.clone();
+    let pc = engine.manifest.prec(prec)?.clone();
     let world = World::generate(Vocab::new(mc.vocab), 7);
-    let ev = Evaluator::new(&engine, &art, true, 4)?;
+    let v = world.vocab.clone();
 
-    // a batch of "requests": chat-format questions about the world
-    let v = &world.vocab;
-    let prompts: Vec<Vec<i32>> = (0..8)
-        .map(|i| {
-            vec![
-                vocab::BOS, vocab::Q,
-                Vocab::attr_type(i % 4), vocab::OF, v.entity(i * 3 % world.n_entities()),
-                vocab::A,
-            ]
-        })
-        .collect();
+    // a stream of "requests": chat-format questions about the world
+    let requests = |n: usize, max_new: usize| -> Vec<GenRequest> {
+        (0..n)
+            .map(|i| {
+                let prompt = vec![
+                    vocab::BOS, vocab::Q,
+                    Vocab::attr_type(i % 4), vocab::OF, v.entity(i * 3 % world.n_entities()),
+                    vocab::A,
+                ];
+                GenRequest::new(i as u64, prompt, max_new)
+            })
+            .collect()
+    };
 
-    println!("serving {} requests (batched greedy decode, 4 new tokens)...", prompts.len());
-    let t = Timer::start();
-    let outs = ev.generate(&params, &prompts, 4)?;
-    let ms = t.millis();
-    for (p, o) in prompts.iter().zip(&outs) {
-        println!("  {:<40} -> {}", v.describe_seq(p), v.describe_seq(o));
+    // 1) throughput path: continuous batching through the compiled artifact
+    println!("\n== artifact backend: 8 requests, 4 new tokens each ==");
+    let backend = ArtifactBackend::new(&engine, &art, &params)?;
+    let (results, stats) = serve_inline(backend, 8, requests(8, 4))?;
+    for r in &results {
+        println!(
+            "  {:<40} -> {}",
+            v.describe_seq(&r.tokens[..r.prompt_len]),
+            v.describe_seq(r.generated())
+        );
     }
-    println!(
-        "latency: {:.1} ms total, {:.1} ms/request, {:.0} generated tok/s",
-        ms,
-        ms / prompts.len() as f64,
-        (prompts.len() * 4) as f64 / ms * 1e3
-    );
+    println!("{}", stats.report());
 
-    // deployment-path check: pack the head weights to integers and verify
-    // the packed representation is lossless vs the fake-quant values
-    let head = params.get("head")?;
-    let sw = params.get("sw_head")?;
-    let cols = params.shape("head")?[1];
-    let packed = silq::quant::pack::PackedTensor::pack(head, cols, sw, 8)?;
+    // 2) deployment path: host incremental decode, K/V cache resident as
+    //    packed INT8 — must be token-identical to the f32 cache run
+    println!("\n== host backend: int8 KV pool vs f32 cache ==");
+    let cfg = HostCfg::from_manifest(&mc, &pc)?;
+    let b_i8 = HostBackend::new(cfg.clone(), 4, &params, CacheStore::Int8)?;
+    let b_f32 = HostBackend::new(cfg, 4, &params, CacheStore::F32)?;
+    let (mut r_i8, s_i8) = serve_inline(b_i8, 4, requests(8, 4))?;
+    let (mut r_f32, _) = serve_inline(b_f32, 4, requests(8, 4))?;
+    r_i8.sort_by_key(|r| r.id);
+    r_f32.sort_by_key(|r| r.id);
+    let identical =
+        r_i8.iter().zip(&r_f32).all(|(a, b)| a.generated() == b.generated());
     println!(
-        "head packed for deployment: {} KiB (fp32 would be {} KiB)",
-        packed.storage_bytes() / 1024,
-        head.len() * 4 / 1024
+        "int8 pool vs f32 cache: {} (kv pool peak {} KiB)",
+        if identical { "token-identical" } else { "DIVERGED" },
+        s_i8.kv_bytes_peak / 1024
     );
+    anyhow::ensure!(identical, "integer cache must not change greedy output");
     Ok(())
 }

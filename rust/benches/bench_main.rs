@@ -13,7 +13,9 @@ use silq::model::ParamStore;
 use silq::ptq::gptq::gptq_quantize_family;
 use silq::quant;
 use silq::runtime::{build_inputs, literal_i32, Engine};
-use silq::util::{timer::bench_ms, Rng};
+use silq::serve::backend::host_test_params;
+use silq::serve::{serve_inline, ArtifactBackend, CacheStore, GenRequest, HostBackend, HostCfg};
+use silq::util::{timer::bench_ms, Rng, Timer};
 
 fn section(name: &str) {
     println!("\n== {name} ==");
@@ -84,6 +86,35 @@ fn main() {
         let _ = batcher.next_batch();
     }), "(must be << exec time)");
 
+    // ---------------- serve throughput (host backend) ---------------------
+    // continuous-batching engine over the host incremental decoder; no
+    // artifacts needed, so this section always runs
+    section("serve throughput (host backend, quantized KV pool)");
+    {
+        let cfg = HostCfg {
+            vocab: 256, d_model: 64, n_layers: 2, n_heads: 4, d_ff: 128, seq_len: 48,
+            quantized: true, act_bits: 8, act_dynamic: true, cache_bits: 8,
+            weight_bits: 4, head_bits: 8, query_bits: 16, rope_theta: 10000.0,
+        };
+        let params = host_test_params(&cfg, 9);
+        for (label, store) in
+            [("serve 32 reqs x8 tok, int8 kv pool", CacheStore::Int8),
+             ("serve 32 reqs x8 tok, f32 kv cache", CacheStore::F32)]
+        {
+            let reqs: Vec<GenRequest> = (0..32)
+                .map(|i| GenRequest::new(i, vec![1, 3, 22 + (i % 4) as i32, 10, 4], 8).ignore_eos())
+                .collect();
+            let backend = HostBackend::new(cfg.clone(), 8, &params, store).expect("backend");
+            let t = Timer::start();
+            let (results, stats) = serve_inline(backend, 8, reqs).expect("serve run");
+            let ms = t.millis();
+            report(label, ms, &format!(
+                "({:.0} tok/s, occ {:.0}%, {} reqs)",
+                stats.tokens_per_sec(), 100.0 * stats.batch_occupancy(), results.len()
+            ));
+        }
+    }
+
     // ---------------- PJRT execution (every experiment) ------------------
     if !std::path::Path::new("artifacts/manifest.txt").exists() {
         println!("\nartifacts not built; skipping PJRT benches (run `make artifacts`)");
@@ -105,6 +136,28 @@ fn main() {
             let _ = m.run(&inputs).unwrap();
         });
         report(&format!("fwd {art}"), ms, &format!("({:.0} tok/s)", toks_per / ms * 1e3));
+    }
+
+    // serve throughput through the compiled graph (continuous batching,
+    // full-sequence recompute per step)
+    section("serve throughput (artifact backend)");
+    {
+        let art = "tiny_a8d-c8-w4_fwd";
+        let m = engine.module(art).expect("module");
+        let mc = engine.manifest.model(&m.spec.model).unwrap().clone();
+        let mut r6 = Rng::new(11);
+        let params = ParamStore::init(&m.spec, &mc, &mut r6);
+        let reqs: Vec<GenRequest> = (0..16)
+            .map(|i| GenRequest::new(i, vec![1, 3, 22 + (i % 4) as i32, 10, 4], 4).ignore_eos())
+            .collect();
+        let backend = ArtifactBackend::new(&engine, art, &params).expect("backend");
+        let t = Timer::start();
+        let (results, stats) = serve_inline(backend, 8, reqs).expect("serve run");
+        let ms = t.millis();
+        report("serve 16 reqs x4 tok via PJRT fwd", ms, &format!(
+            "({:.0} tok/s, occ {:.0}%, {} reqs)",
+            stats.tokens_per_sec(), 100.0 * stats.batch_occupancy(), results.len()
+        ));
     }
 
     // train step (the QAT hot path — Table 1/2/3/4 inner loop)

@@ -1,0 +1,53 @@
+//! Greedy-decode primitives shared by the eval harness and the serve
+//! engine, so `silq eval` and `silq serve` score and sample identically.
+
+use crate::data::vocab::PAD;
+
+/// Index of the maximum logit (greedy next-token choice).
+pub fn argmax(xs: &[f32]) -> usize {
+    xs.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).map(|(i, _)| i).unwrap()
+}
+
+/// Log-probability of token `idx` under a softmax over `logits`.
+pub fn log_softmax_at(logits: &[f32], idx: usize) -> f32 {
+    let m = logits.iter().fold(f32::MIN, |a, &b| a.max(b));
+    let lse = logits.iter().map(|&x| (x - m).exp()).sum::<f32>().ln() + m;
+    logits[idx] - lse
+}
+
+/// Pack variable-length rows into the fixed `[bsz, s]` token shape a fwd
+/// artifact expects: PAD-filled, rows truncated at the context window,
+/// missing rows all-PAD.
+pub fn pack_rows(rows: &[&[i32]], bsz: usize, s: usize) -> Vec<i32> {
+    let mut tokens = vec![PAD; bsz * s];
+    for (r, row) in rows.iter().enumerate().take(bsz) {
+        let l = row.len().min(s);
+        tokens[r * s..r * s + l].copy_from_slice(&row[..l]);
+    }
+    tokens
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_softmax_normalizes() {
+        let l = [1.0f32, 2.0, 3.0];
+        let p: f32 = (0..3).map(|i| log_softmax_at(&l, i).exp()).sum();
+        assert!((p - 1.0).abs() < 1e-5);
+        assert!(log_softmax_at(&l, 2) > log_softmax_at(&l, 0));
+    }
+
+    #[test]
+    fn argmax_works() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
+    }
+
+    #[test]
+    fn pack_rows_pads_and_truncates() {
+        let rows: Vec<&[i32]> = vec![&[1, 2, 3], &[4, 5, 6, 7, 8, 9]];
+        let t = pack_rows(&rows, 3, 4);
+        assert_eq!(t, vec![1, 2, 3, PAD, 4, 5, 6, 7, PAD, PAD, PAD, PAD]);
+    }
+}

@@ -4,15 +4,18 @@
 //! candidate answers (exactly the mechanics of ARC/HellaSwag/MMLU scoring).
 //! Generation: greedy decoding + exact match (GSM8K/IFEval mechanics).
 
+pub mod decode;
+
 use anyhow::Result;
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use crate::config::ModelCfg;
-use crate::data::vocab::PAD;
 use crate::data::{EvalItem, Suite, TaskKind, World};
 use crate::model::ParamStore;
 use crate::runtime::{build_inputs, literal_i32, to_f32_vec, Engine, Module};
+
+use decode::{argmax, log_softmax_at, pack_rows};
 
 /// Scores one model (params + fwd artifact) on the benchmark registry.
 pub struct Evaluator<'e> {
@@ -79,12 +82,10 @@ impl<'e> Evaluator<'e> {
         let (bsz, s, v) = (self.mc.fwd_batch, self.mc.seq_len, self.mc.vocab);
         let mut scores = vec![0f32; rows.len()];
         for (chunk_idx, chunk) in rows.chunks(bsz).enumerate() {
-            let mut tokens = vec![PAD; bsz * s];
-            for (r, (p, c)) in chunk.iter().enumerate() {
-                let mut row: Vec<i32> = p.iter().chain(c.iter()).cloned().collect();
-                row.truncate(s);
-                tokens[r * s..r * s + row.len()].copy_from_slice(&row);
-            }
+            let joined: Vec<Vec<i32>> =
+                chunk.iter().map(|(p, c)| p.iter().chain(c.iter()).cloned().collect()).collect();
+            let views: Vec<&[i32]> = joined.iter().map(|r| r.as_slice()).collect();
+            let tokens = pack_rows(&views, bsz, s);
             let logits = self.logits(params, &tokens)?;
             for (r, (p, c)) in chunk.iter().enumerate() {
                 let mut total = 0f32;
@@ -117,11 +118,8 @@ impl<'e> Evaluator<'e> {
         for (chunk_idx, chunk) in prompts.chunks(bsz).enumerate() {
             let mut rows: Vec<Vec<i32>> = chunk.to_vec();
             for _ in 0..max_new {
-                let mut tokens = vec![PAD; bsz * s];
-                for (r, row) in rows.iter().enumerate() {
-                    let l = row.len().min(s);
-                    tokens[r * s..r * s + l].copy_from_slice(&row[..l]);
-                }
+                let views: Vec<&[i32]> = rows.iter().map(|r| r.as_slice()).collect();
+                let tokens = pack_rows(&views, bsz, s);
                 let logits = self.logits(params, &tokens)?;
                 for (r, row) in rows.iter_mut().enumerate() {
                     if row.len() >= s {
@@ -215,16 +213,6 @@ impl<'e> Evaluator<'e> {
     }
 }
 
-fn log_softmax_at(logits: &[f32], idx: usize) -> f32 {
-    let m = logits.iter().fold(f32::MIN, |a, &b| a.max(b));
-    let lse = logits.iter().map(|&x| (x - m).exp()).sum::<f32>().ln() + m;
-    logits[idx] - lse
-}
-
-fn argmax(xs: &[f32]) -> usize {
-    xs.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).map(|(i, _)| i).unwrap()
-}
-
 /// Aggregate multiple reports (e.g. across model seeds) by task name.
 pub fn average_reports(reports: &[EvalReport]) -> EvalReport {
     let mut acc: BTreeMap<(String, u8), (Suite, f32, usize)> = BTreeMap::new();
@@ -247,19 +235,6 @@ pub fn average_reports(reports: &[EvalReport]) -> EvalReport {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn log_softmax_normalizes() {
-        let l = [1.0f32, 2.0, 3.0];
-        let p: f32 = (0..3).map(|i| log_softmax_at(&l, i).exp()).sum();
-        assert!((p - 1.0).abs() < 1e-5);
-        assert!(log_softmax_at(&l, 2) > log_softmax_at(&l, 0));
-    }
-
-    #[test]
-    fn argmax_works() {
-        assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
-    }
 
     #[test]
     fn report_suite_average() {

@@ -10,6 +10,7 @@
 //! * [`train`] — the SiLQ QAT pipeline (calibrate -> LSQ + KD end-to-end)
 //! * [`ptq`] — baselines: RTN, SmoothQuant, GPTQ, SpinQuant-analog
 //! * [`evalharness`] — CSR / OLLMv1 / OLLMv2 synthetic benchmark suites
+//! * [`serve`] — continuous-batching inference engine + quantized KV pool
 //! * [`data`] — SynthLang corpus + SFT dataset generators
 //! * [`coordinator`] — one runner per paper table/figure
 
@@ -24,5 +25,6 @@ pub mod model;
 pub mod ptq;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod train;
 pub mod util;

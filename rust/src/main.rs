@@ -6,14 +6,23 @@
 //!   silq eval --ckpt path --prec p     # evaluate a checkpoint
 //!   silq exp <table1|...|fig3>         # regenerate a paper table/figure
 //!   silq e2e                           # full end-to-end demo (small model)
+//!   silq serve                         # continuous-batching load run
 
 use anyhow::{bail, Context, Result};
+use std::sync::Arc;
 
 use silq::config::TrainCfg;
 use silq::coordinator::{run_experiment, Pipeline, PipelineCfg};
-use silq::data::{DataMix, SftStyle};
+use silq::data::{vocab, DataMix, SftStyle, Vocab, World};
 use silq::metrics::RunLog;
+use silq::model::ParamStore;
 use silq::runtime::Engine;
+use silq::serve::{
+    AdmissionQueue, ArtifactBackend, CacheStore, DecodeBackend, GenRequest, HostBackend, HostCfg,
+    Scheduler, ServeStats,
+};
+use silq::train::init_model;
+use silq::util::Timer;
 
 struct Args {
     cmd: String,
@@ -21,13 +30,27 @@ struct Args {
 }
 
 fn parse_args() -> Args {
-    let argv: Vec<String> = std::env::args().skip(1).collect();
+    parse_argv(std::env::args().skip(1).collect())
+}
+
+fn parse_argv(argv: Vec<String>) -> Args {
     let cmd = argv.first().cloned().unwrap_or_else(|| "help".into());
     let mut flags = vec![];
     let mut i = 1;
     while i < argv.len() {
         if let Some(name) = argv[i].strip_prefix("--") {
-            if name == "set" && i + 1 < argv.len() {
+            if let Some((k, v)) = name.split_once('=') {
+                // `--flag=value`: the unambiguous form — use it for values
+                // that start with `--` or look like another flag
+                if k == "set" {
+                    if let Some((sk, sv)) = v.split_once('=') {
+                        flags.push((sk.into(), sv.into()));
+                    }
+                } else {
+                    flags.push((k.into(), v.into()));
+                }
+                i += 1;
+            } else if name == "set" && i + 1 < argv.len() {
                 if let Some((k, v)) = argv[i + 1].split_once('=') {
                     flags.push((k.into(), v.into()));
                 }
@@ -93,10 +116,14 @@ fn main() -> Result<()> {
             println!(
                 "silq — SiLQ reproduction coordinator\n\
                  usage: silq <cmd> [flags]\n\
-                 cmds:  info | pretrain | sft | qat | eval | exp <id> | e2e\n\
+                 cmds:  info | pretrain | sft | qat | eval | exp <id> | e2e | serve\n\
                  flags: --model tiny|small  --prec a8d-c8-w4|...  --ckpt path\n\
                         --set key=value (training hyper-params)\n\
-                        --qat_steps N --pretrain_steps N --sft_steps N --eval_items N"
+                        --qat_steps N --pretrain_steps N --sft_steps N --eval_items N\n\
+                 serve: --requests N --batch B --max_new M --queue_cap C --producers P\n\
+                        --backend artifact|host  --cache int8|f32 (host backend)\n\
+                 note:  `--flag value` and `--flag=value` are equivalent; use\n\
+                        `--flag=value` when the value itself starts with `--`"
             );
             Ok(())
         }
@@ -178,6 +205,10 @@ fn main() -> Result<()> {
             }
             Ok(())
         }
+        "serve" => {
+            let eng = Engine::new(&art_dir)?;
+            serve_cmd(&eng, &args)
+        }
         "exp" => {
             let id = args.pos().context("exp needs an id: table1..table4, fig1..fig3")?;
             let eng = Engine::new(&art_dir)?;
@@ -192,5 +223,175 @@ fn main() -> Result<()> {
             Ok(())
         }
         other => bail!("unknown command {other}; try `silq help`"),
+    }
+}
+
+/// `silq serve`: self-driving load run — producer threads push synthetic
+/// chat requests through the bounded admission queue while the
+/// continuous-batching scheduler drains it (there is no network stack in
+/// this offline environment; the load generator stands in for clients).
+fn serve_cmd(eng: &Engine, args: &Args) -> Result<()> {
+    let model = args.get("model").unwrap_or("tiny").to_string();
+    let prec = args.get("prec").unwrap_or("a8d-c8-w4").to_string();
+    let backend_kind = args.get("backend").unwrap_or("artifact").to_string();
+    let n_requests: usize = args.get("requests").unwrap_or("64").parse()?;
+    let batch: usize = args.get("batch").unwrap_or("8").parse()?;
+    let max_new: usize = args.get("max_new").unwrap_or("8").parse()?;
+    let queue_cap: usize = args.get("queue_cap").unwrap_or("16").parse()?;
+    let producers: usize = args.get("producers").unwrap_or("2").parse::<usize>()?.max(1);
+
+    let mc = eng.manifest.model(&model)?.clone();
+    let art = format!("{model}_{prec}_fwd");
+    // spec comes from the manifest, not eng.module(): the host backend must
+    // not pay (or depend on) a PJRT compile of the fwd artifact
+    let spec = eng.manifest.artifact(&art)?.clone();
+
+    // trained checkpoint if given, else a freshly calibrated model (noise
+    // answers, but the latency/throughput trajectory is what we measure)
+    let params: ParamStore = match args.get("ckpt") {
+        Some(path) => {
+            println!("loading checkpoint {path}");
+            ParamStore::load(&spec, path)?
+        }
+        None if prec == "fp16" => {
+            // init straight from the manifest spec — no PJRT compile needed
+            let mut rng = silq::util::Rng::new(0);
+            ParamStore::init(&spec, &mc, &mut rng)
+        }
+        None => {
+            println!("no checkpoint given; calibrating a fresh (untrained) model");
+            let p = Pipeline::new(
+                eng,
+                PipelineCfg { model: model.clone(), eval_items: 4, ..Default::default() },
+            )?;
+            let fp16 = init_model(eng, &format!("{model}_fp16_fwd"), 0)?;
+            let cstats = p.calib_stats(&fp16, 2)?;
+            p.calibrated_quant_store(&prec, &fp16, &cstats, "quantile", "mse")?
+        }
+    };
+
+    // synthetic chat traffic: questions about the world's entities
+    let world = World::generate(Vocab::new(mc.vocab), 7);
+    let v = world.vocab.clone();
+    let prompts: Vec<Vec<i32>> = (0..n_requests)
+        .map(|i| {
+            vec![
+                vocab::BOS, vocab::Q,
+                Vocab::attr_type(i % 4), vocab::OF, v.entity(i * 3 % world.n_entities()),
+                vocab::A,
+            ]
+        })
+        .collect();
+
+    println!(
+        "serving {n_requests} requests: backend={backend_kind} prec={prec} \
+         batch={batch} max_new={max_new} queue_cap={queue_cap} producers={producers}"
+    );
+
+    let queue = Arc::new(AdmissionQueue::new(queue_cap));
+    let mut producer_handles = vec![];
+    for p in 0..producers {
+        let q = queue.clone();
+        let mine: Vec<(u64, Vec<i32>)> = prompts
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| i % producers == p)
+            .map(|(i, pr)| (i as u64, pr.clone()))
+            .collect();
+        producer_handles.push(std::thread::spawn(move || -> Result<()> {
+            for (id, prompt) in mine {
+                q.submit(GenRequest::new(id, prompt, max_new))?;
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+            Ok(())
+        }));
+    }
+    // close the queue once every producer has drained its share
+    {
+        let q = queue.clone();
+        std::thread::spawn(move || {
+            for h in producer_handles {
+                let _ = h.join();
+            }
+            q.close();
+        });
+    }
+
+    let t = Timer::start();
+    let (results, stats) = match backend_kind.as_str() {
+        "artifact" => {
+            let b = ArtifactBackend::new(eng, &art, &params)?;
+            let lanes = batch.min(b.lanes());
+            let mut stats = ServeStats::new(lanes);
+            let mut sched = Scheduler::new(b, lanes)?;
+            let results = sched.run(&queue, &mut stats)?;
+            (results, stats)
+        }
+        "host" => {
+            let pc = eng.manifest.prec(&prec)?.clone();
+            // integer storage only exists for quantized precisions; fp16
+            // serving degrades to the f32 cache
+            let store = match (pc.quantized, args.get("cache").unwrap_or("int8")) {
+                (false, _) | (_, "f32") => CacheStore::F32,
+                _ => CacheStore::Int8,
+            };
+            let b = HostBackend::new(HostCfg::from_manifest(&mc, &pc)?, batch, &params, store)?;
+            let mut stats = ServeStats::new(batch);
+            let mut sched = Scheduler::new(b, batch)?;
+            let results = sched.run(&queue, &mut stats)?;
+            (results, stats)
+        }
+        other => bail!("unknown serve backend {other} (artifact|host)"),
+    };
+    let wall = t.secs();
+
+    for r in results.iter().take(4) {
+        println!(
+            "  [{}] {:<40} -> {}",
+            r.id,
+            v.describe_seq(&r.tokens[..r.prompt_len]),
+            v.describe_seq(r.generated())
+        );
+    }
+    if results.len() > 4 {
+        println!("  ... and {} more", results.len() - 4);
+    }
+    println!("{}", stats.report());
+    println!("wall time {wall:.2}s");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::parse_argv;
+
+    fn args_of(v: &[&str]) -> Vec<(String, String)> {
+        parse_argv(v.iter().map(|s| s.to_string()).collect()).flags
+    }
+
+    #[test]
+    fn space_and_equals_forms_agree() {
+        assert_eq!(args_of(&["x", "--prec", "fp16"]), args_of(&["x", "--prec=fp16"]));
+    }
+
+    #[test]
+    fn equals_form_admits_flag_like_values() {
+        // the space form degrades to a boolean; `=` is the escape hatch
+        assert_eq!(args_of(&["x", "--note", "--fast"]),
+                   vec![("note".to_string(), "1".to_string()), ("fast".to_string(), "1".to_string())]);
+        assert_eq!(args_of(&["x", "--note=--fast"]),
+                   vec![("note".to_string(), "--fast".to_string())]);
+    }
+
+    #[test]
+    fn set_works_in_both_forms() {
+        assert_eq!(args_of(&["x", "--set", "kd_ratio=0.5"]), args_of(&["x", "--set=kd_ratio=0.5"]));
+        assert_eq!(args_of(&["x", "--set", "kd_ratio=0.5"]),
+                   vec![("kd_ratio".to_string(), "0.5".to_string())]);
+    }
+
+    #[test]
+    fn trailing_flag_is_boolean() {
+        assert_eq!(args_of(&["x", "--chat"]), vec![("chat".to_string(), "1".to_string())]);
     }
 }

@@ -15,8 +15,15 @@ impl RunLog {
     pub fn new(dir: impl AsRef<Path>) -> RunLog {
         let dir = dir.as_ref().to_path_buf();
         let file = std::fs::create_dir_all(&dir)
-            .ok()
-            .and_then(|_| std::fs::File::create(dir.join("log.txt")).ok());
+            .and_then(|_| std::fs::File::create(dir.join("log.txt")))
+            .map_err(|e| {
+                eprintln!(
+                    "warning: RunLog: cannot create {}/log.txt ({e}); \
+                     this run will not be logged to disk",
+                    dir.display()
+                )
+            })
+            .ok();
         RunLog { dir, file, losses: vec![] }
     }
 
@@ -96,6 +103,18 @@ pub fn pct(x: f32) -> String {
     format!("{:.2}", 100.0 * x)
 }
 
+/// Nearest-rank percentile of an unsorted sample (NaN for empty input).
+/// Used by the serve stats for TTFT/latency tails.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((p / 100.0 * v.len() as f64).ceil() as usize).clamp(1, v.len()) - 1;
+    v[idx]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -124,5 +143,15 @@ mod tests {
     #[test]
     fn pct_format() {
         assert_eq!(pct(0.6265), "62.65");
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 50.0), 50.0);
+        assert_eq!(percentile(&xs, 95.0), 95.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        assert_eq!(percentile(&[3.0], 99.0), 3.0);
+        assert!(percentile(&[], 50.0).is_nan());
     }
 }

@@ -13,10 +13,15 @@ use crate::config::{ArtifactSpec, Manifest};
 use crate::model::ParamStore;
 
 /// Owns the PJRT client and a cache of compiled executables.
+///
+/// The cache maps artifact name -> a per-entry cell so that concurrent
+/// `module()` calls for the *same* artifact compile it exactly once (the
+/// first caller holds the entry's lock through compilation) while calls for
+/// *different* artifacts compile in parallel.
 pub struct Engine {
     client: xla::PjRtClient,
     pub manifest: Manifest,
-    modules: Mutex<HashMap<String, std::sync::Arc<Module>>>,
+    modules: Mutex<HashMap<String, std::sync::Arc<Mutex<Option<std::sync::Arc<Module>>>>>>,
 }
 
 /// One compiled artifact.
@@ -41,7 +46,20 @@ impl Engine {
 
     /// Load (or fetch cached) compiled module by artifact name.
     pub fn module(&self, name: &str) -> Result<std::sync::Arc<Module>> {
-        if let Some(m) = self.modules.lock().unwrap().get(name) {
+        // reserve (or find) this artifact's cell under the map lock, then
+        // compile under the cell's own lock — a second thread racing on the
+        // same name blocks on the cell instead of compiling a duplicate
+        let cell = self
+            .modules
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| std::sync::Arc::new(Mutex::new(None)))
+            .clone();
+        // a panic mid-compile poisons the cell but leaves the slot None —
+        // recover the lock so the next caller retries instead of panicking
+        let mut slot = cell.lock().unwrap_or_else(|p| p.into_inner());
+        if let Some(m) = slot.as_ref() {
             return Ok(m.clone());
         }
         let spec = self.manifest.artifact(name)?.clone();
@@ -53,7 +71,8 @@ impl Engine {
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
         let m = std::sync::Arc::new(Module { spec, exe });
-        self.modules.lock().unwrap().insert(name.to_string(), m.clone());
+        // on failure the slot stays None, so a later caller retries cleanly
+        *slot = Some(m.clone());
         Ok(m)
     }
 

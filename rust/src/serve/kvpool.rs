@@ -1,0 +1,381 @@
+//! Slab-allocated KV-cache pool with quantized storage.
+//!
+//! Each session admitted by the scheduler owns one *slot*: a contiguous
+//! per-layer slab of K and V rows, one row of `dim` channels per generated
+//! position. The pool applies the paper's cache quantization **on write**
+//! (Figure 2: C-bit K/V tensors) and dequantizes **on read**, so the decode
+//! backend only ever sees f32 rows while the resident representation is the
+//! one a NorthPole-class deployment would hold.
+//!
+//! Two storage modes share one quantization rule:
+//! * [`CacheStore::F32`] — the QAT "fake quant" view: quantized values kept
+//!   as f32 (round(clip(x/s))*s).
+//! * [`CacheStore::Int8`] — the deployment view: the integers themselves
+//!   plus their steps. By the pack/unpack losslessness invariant (see
+//!   `quant::pack` and `prop_pack_unpack_exactly_lossless_2_to_8_bits`) both
+//!   modes dequantize to bit-identical f32, which is exactly the paper's
+//!   deployability claim — the serve integration test asserts greedy decode
+//!   is token-identical across the two.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::quant::{fake_quant_scalar, qbounds, round_half_even, EPS};
+
+/// How cache rows are quantized on write.
+#[derive(Clone, Debug)]
+pub enum QuantRule {
+    /// No cache quantization (fp16-precision serving).
+    None,
+    /// Fixed calibrated steps, one per (layer, channel); `k_steps` and
+    /// `v_steps` are `[layers * dim]` row-major. This is the static ('s')
+    /// cache mode: steps come from the trained `sc_k`/`sc_v` parameters or
+    /// from offline calibration.
+    Static { bits: u32, k_steps: Vec<f32>, v_steps: Vec<f32> },
+    /// Per-write dynamic steps over `rows` equal sub-rows of each cache row
+    /// (one per attention head, matching `ste_dynamic_quantize`'s last-axis
+    /// reduction on `[B, H, S, d_head]`). This is the dynamic ('d') mode.
+    Dynamic { bits: u32, rows: usize },
+}
+
+/// Resident representation of the quantized values.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheStore {
+    F32,
+    Int8,
+}
+
+/// Slab pool: `slots` sessions x `layers` x `seq` positions x `dim` channels
+/// for K and V each.
+pub struct KvPool {
+    pub slots: usize,
+    pub layers: usize,
+    pub seq: usize,
+    pub dim: usize,
+    pub store: CacheStore,
+    rule: QuantRule,
+    // F32 storage (quantized values kept as floats)
+    kf: Vec<f32>,
+    vf: Vec<f32>,
+    // Int8 storage (integers + per-write dynamic scales)
+    ki: Vec<i8>,
+    vi: Vec<i8>,
+    k_scales: Vec<f32>,
+    v_scales: Vec<f32>,
+    free: Vec<usize>,
+    in_use: usize,
+}
+
+impl KvPool {
+    pub fn new(
+        slots: usize,
+        layers: usize,
+        seq: usize,
+        dim: usize,
+        store: CacheStore,
+        rule: QuantRule,
+    ) -> Result<KvPool> {
+        let n = slots * layers * seq * dim;
+        match &rule {
+            QuantRule::None => {
+                ensure!(store == CacheStore::F32, "integer storage needs a quantization rule");
+            }
+            QuantRule::Static { bits, k_steps, v_steps } => {
+                ensure!((2..=8).contains(bits), "cache bits must be 2..=8, got {bits}");
+                ensure!(
+                    k_steps.len() == layers * dim && v_steps.len() == layers * dim,
+                    "static steps must be [layers*dim]"
+                );
+            }
+            QuantRule::Dynamic { bits, rows } => {
+                ensure!((2..=8).contains(bits), "cache bits must be 2..=8, got {bits}");
+                ensure!(*rows > 0 && dim % rows == 0, "dim {dim} not divisible into {rows} rows");
+            }
+        }
+        let int8 = store == CacheStore::Int8;
+        let n_scales = match &rule {
+            QuantRule::Dynamic { rows, .. } if int8 => slots * layers * seq * rows,
+            _ => 0,
+        };
+        Ok(KvPool {
+            slots,
+            layers,
+            seq,
+            dim,
+            store,
+            rule,
+            kf: if int8 { vec![] } else { vec![0.0; n] },
+            vf: if int8 { vec![] } else { vec![0.0; n] },
+            ki: if int8 { vec![0; n] } else { vec![] },
+            vi: if int8 { vec![0; n] } else { vec![] },
+            k_scales: vec![0.0; n_scales],
+            v_scales: vec![0.0; n_scales],
+            free: (0..slots).rev().collect(),
+            in_use: 0,
+        })
+    }
+
+    /// Claim a session slot; `None` when the pool is exhausted.
+    pub fn alloc(&mut self) -> Option<usize> {
+        let s = self.free.pop()?;
+        self.in_use += 1;
+        Some(s)
+    }
+
+    /// Return a slot to the free list. Contents need no zeroing: positions
+    /// are only ever read up to the owning session's length.
+    pub fn free(&mut self, slot: usize) {
+        debug_assert!(!self.free.contains(&slot), "double free of slot {slot}");
+        self.free.push(slot);
+        self.in_use -= 1;
+    }
+
+    pub fn slots_in_use(&self) -> usize {
+        self.in_use
+    }
+
+    /// Deployment storage footprint in bytes (bit-packed integers + scales,
+    /// matching `PackedTensor::storage_bytes` accounting).
+    pub fn storage_bytes(&self) -> usize {
+        let n = 2 * self.slots * self.layers * self.seq * self.dim; // K and V
+        match (&self.rule, self.store) {
+            (QuantRule::None, _) => n * 4,
+            (_, CacheStore::F32) => n * 4,
+            (QuantRule::Static { bits, k_steps, v_steps }, CacheStore::Int8) => {
+                (n * *bits as usize + 7) / 8 + (k_steps.len() + v_steps.len()) * 4
+            }
+            (QuantRule::Dynamic { bits, .. }, CacheStore::Int8) => {
+                (n * *bits as usize + 7) / 8 + (self.k_scales.len() + self.v_scales.len()) * 4
+            }
+        }
+    }
+
+    #[inline]
+    fn base(&self, slot: usize, layer: usize, pos: usize) -> usize {
+        debug_assert!(slot < self.slots && layer < self.layers && pos < self.seq);
+        ((slot * self.layers + layer) * self.seq + pos) * self.dim
+    }
+
+    /// Quantize-on-write one position's K and V rows (`dim` channels each).
+    pub fn write(&mut self, slot: usize, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        assert_eq!(k.len(), self.dim);
+        assert_eq!(v.len(), self.dim);
+        let base = self.base(slot, layer, pos);
+        match (&self.rule, self.store) {
+            (QuantRule::None, _) => {
+                self.kf[base..base + self.dim].copy_from_slice(k);
+                self.vf[base..base + self.dim].copy_from_slice(v);
+            }
+            (QuantRule::Static { bits, k_steps, v_steps }, CacheStore::F32) => {
+                let sb = layer * self.dim;
+                for c in 0..self.dim {
+                    self.kf[base + c] = fake_quant_scalar(k[c], k_steps[sb + c], *bits);
+                    self.vf[base + c] = fake_quant_scalar(v[c], v_steps[sb + c], *bits);
+                }
+            }
+            (QuantRule::Static { bits, k_steps, v_steps }, CacheStore::Int8) => {
+                let sb = layer * self.dim;
+                for c in 0..self.dim {
+                    self.ki[base + c] = qi(k[c], k_steps[sb + c], *bits);
+                    self.vi[base + c] = qi(v[c], v_steps[sb + c], *bits);
+                }
+            }
+            (QuantRule::Dynamic { bits, rows }, CacheStore::F32) => {
+                let (_, qp) = qbounds(*bits);
+                let sub = self.dim / rows;
+                for r in 0..*rows {
+                    let ks = dyn_step(&k[r * sub..(r + 1) * sub], qp);
+                    let vs = dyn_step(&v[r * sub..(r + 1) * sub], qp);
+                    for c in r * sub..(r + 1) * sub {
+                        self.kf[base + c] = fake_quant_scalar(k[c], ks, *bits);
+                        self.vf[base + c] = fake_quant_scalar(v[c], vs, *bits);
+                    }
+                }
+            }
+            (QuantRule::Dynamic { bits, rows }, CacheStore::Int8) => {
+                let (_, qp) = qbounds(*bits);
+                let sub = self.dim / rows;
+                let scale_base = ((slot * self.layers + layer) * self.seq + pos) * rows;
+                for r in 0..*rows {
+                    let ks = dyn_step(&k[r * sub..(r + 1) * sub], qp);
+                    let vs = dyn_step(&v[r * sub..(r + 1) * sub], qp);
+                    self.k_scales[scale_base + r] = ks;
+                    self.v_scales[scale_base + r] = vs;
+                    for c in r * sub..(r + 1) * sub {
+                        self.ki[base + c] = qi(k[c], ks, *bits);
+                        self.vi[base + c] = qi(v[c], vs, *bits);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Dequantize-on-read positions `0..len` into `k_out`/`v_out`
+    /// (`len * dim` f32 each, row-major by position).
+    pub fn read_into(
+        &self,
+        slot: usize,
+        layer: usize,
+        len: usize,
+        k_out: &mut [f32],
+        v_out: &mut [f32],
+    ) -> Result<()> {
+        ensure!(len <= self.seq, "read past slab end: {len} > {}", self.seq);
+        ensure!(k_out.len() == len * self.dim && v_out.len() == len * self.dim, "bad read buffer");
+        let base = self.base(slot, layer, 0);
+        match (&self.rule, self.store) {
+            (_, CacheStore::F32) => {
+                k_out.copy_from_slice(&self.kf[base..base + len * self.dim]);
+                v_out.copy_from_slice(&self.vf[base..base + len * self.dim]);
+            }
+            (QuantRule::Static { k_steps, v_steps, .. }, CacheStore::Int8) => {
+                let sb = layer * self.dim;
+                for p in 0..len {
+                    for c in 0..self.dim {
+                        let i = p * self.dim + c;
+                        k_out[i] = self.ki[base + i] as f32 * k_steps[sb + c].max(EPS);
+                        v_out[i] = self.vi[base + i] as f32 * v_steps[sb + c].max(EPS);
+                    }
+                }
+            }
+            (QuantRule::Dynamic { rows, .. }, CacheStore::Int8) => {
+                let sub = self.dim / rows;
+                for p in 0..len {
+                    let scale_base = ((slot * self.layers + layer) * self.seq + p) * rows;
+                    for r in 0..*rows {
+                        let (ks, vs) = (self.k_scales[scale_base + r], self.v_scales[scale_base + r]);
+                        for c in r * sub..(r + 1) * sub {
+                            let i = p * self.dim + c;
+                            k_out[i] = self.ki[base + i] as f32 * ks;
+                            v_out[i] = self.vi[base + i] as f32 * vs;
+                        }
+                    }
+                }
+            }
+            (QuantRule::None, CacheStore::Int8) => bail!("unreachable: int8 without rule"),
+        }
+        Ok(())
+    }
+}
+
+/// The integer half of `fake_quant_scalar` (same EPS floor, clamp and
+/// round, minus the final multiply) — what the deployment target stores.
+/// Kept next to the dequant paths so the pair stays bit-consistent with
+/// `quant::fake_quant_scalar`.
+#[inline]
+fn qi(x: f32, s: f32, bits: u32) -> i8 {
+    let (qn, qp) = qbounds(bits);
+    let s = s.max(EPS);
+    round_half_even((x / s).clamp(qn as f32, qp as f32)) as i8
+}
+
+/// Dynamic per-row step: max|x| / q_p, floored at EPS (the 'd' mode rule).
+#[inline]
+fn dyn_step(row: &[f32], qp: i64) -> f32 {
+    let maxabs = row.iter().fold(0f32, |a, &b| a.max(b.abs()));
+    (maxabs / qp as f32).max(EPS)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::fake_quant_scalar;
+    use crate::util::Rng;
+
+    fn rand_row(rng: &mut Rng, n: usize) -> Vec<f32> {
+        rng.normal_vec(n, 0.3)
+    }
+
+    #[test]
+    fn alloc_free_slab_cycle() {
+        let mut p =
+            KvPool::new(2, 1, 4, 8, CacheStore::F32, QuantRule::None).unwrap();
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        assert_ne!(a, b);
+        assert!(p.alloc().is_none());
+        assert_eq!(p.slots_in_use(), 2);
+        p.free(a);
+        assert_eq!(p.alloc(), Some(a));
+    }
+
+    #[test]
+    fn raw_roundtrip() {
+        let mut rng = Rng::new(0);
+        let mut p = KvPool::new(1, 2, 4, 8, CacheStore::F32, QuantRule::None).unwrap();
+        let s = p.alloc().unwrap();
+        let (k, v) = (rand_row(&mut rng, 8), rand_row(&mut rng, 8));
+        p.write(s, 1, 2, &k, &v);
+        let mut ko = vec![0.0; 3 * 8];
+        let mut vo = vec![0.0; 3 * 8];
+        p.read_into(s, 1, 3, &mut ko, &mut vo).unwrap();
+        assert_eq!(&ko[16..24], &k[..]);
+        assert_eq!(&vo[16..24], &v[..]);
+    }
+
+    #[test]
+    fn static_int8_matches_fake_quant() {
+        let mut rng = Rng::new(1);
+        let dim = 8;
+        let steps: Vec<f32> = (0..dim).map(|i| 0.01 + 0.003 * i as f32).collect();
+        let rule = QuantRule::Static { bits: 8, k_steps: steps.clone(), v_steps: steps.clone() };
+        let mut p = KvPool::new(1, 1, 2, dim, CacheStore::Int8, rule).unwrap();
+        let s = p.alloc().unwrap();
+        let (k, v) = (rand_row(&mut rng, dim), rand_row(&mut rng, dim));
+        p.write(s, 0, 0, &k, &v);
+        let mut ko = vec![0.0; dim];
+        let mut vo = vec![0.0; dim];
+        p.read_into(s, 0, 1, &mut ko, &mut vo).unwrap();
+        for c in 0..dim {
+            assert_eq!(ko[c], fake_quant_scalar(k[c], steps[c], 8));
+            assert_eq!(vo[c], fake_quant_scalar(v[c], steps[c], 8));
+        }
+    }
+
+    #[test]
+    fn int8_and_f32_stores_dequantize_identically() {
+        // the pool-level statement of the serve-path deployability invariant
+        let mut rng = Rng::new(2);
+        let (dim, rows) = (16, 4);
+        for rule in [
+            QuantRule::Dynamic { bits: 8, rows },
+            QuantRule::Static {
+                bits: 8,
+                k_steps: (0..dim).map(|_| rng.uniform() * 0.05 + 1e-3).collect(),
+                v_steps: (0..dim).map(|_| rng.uniform() * 0.05 + 1e-3).collect(),
+            },
+        ] {
+            let mut pf = KvPool::new(1, 1, 4, dim, CacheStore::F32, rule.clone()).unwrap();
+            let mut pi = KvPool::new(1, 1, 4, dim, CacheStore::Int8, rule).unwrap();
+            let (sf, si) = (pf.alloc().unwrap(), pi.alloc().unwrap());
+            for pos in 0..4 {
+                let (k, v) = (rand_row(&mut rng, dim), rand_row(&mut rng, dim));
+                pf.write(sf, 0, pos, &k, &v);
+                pi.write(si, 0, pos, &k, &v);
+            }
+            let mut a = (vec![0.0; 4 * dim], vec![0.0; 4 * dim]);
+            let mut b = (vec![0.0; 4 * dim], vec![0.0; 4 * dim]);
+            pf.read_into(sf, 0, 4, &mut a.0, &mut a.1).unwrap();
+            pi.read_into(si, 0, 4, &mut b.0, &mut b.1).unwrap();
+            assert_eq!(a, b, "f32 and int8 stores must dequantize bit-identically");
+        }
+    }
+
+    #[test]
+    fn int8_storage_is_smaller() {
+        let rule = QuantRule::Dynamic { bits: 8, rows: 4 };
+        let pf = KvPool::new(4, 2, 8, 16, CacheStore::F32, rule.clone()).unwrap();
+        let pi = KvPool::new(4, 2, 8, 16, CacheStore::Int8, rule).unwrap();
+        assert!(pi.storage_bytes() * 2 < pf.storage_bytes());
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        assert!(KvPool::new(1, 1, 2, 8, CacheStore::Int8, QuantRule::None).is_err());
+        assert!(KvPool::new(1, 1, 2, 8, CacheStore::Int8, QuantRule::Dynamic { bits: 16, rows: 2 })
+            .is_err());
+        assert!(KvPool::new(1, 1, 2, 8, CacheStore::Int8, QuantRule::Dynamic { bits: 8, rows: 3 })
+            .is_err());
+        let bad = QuantRule::Static { bits: 8, k_steps: vec![0.1; 4], v_steps: vec![0.1; 8] };
+        assert!(KvPool::new(1, 1, 2, 8, CacheStore::Int8, bad).is_err());
+    }
+}

@@ -1,0 +1,273 @@
+//! `serve` — the continuous-batching inference engine.
+//!
+//! Pipeline shape (see README §serving):
+//!
+//! ```text
+//!   producers -> AdmissionQueue (bounded, blocking)
+//!                   |
+//!             Scheduler: evict finished / admit queued / step   (scheduler.rs)
+//!                   |
+//!             DecodeBackend: ArtifactBackend (PJRT full-sequence)  (backend.rs)
+//!                            HostBackend (incremental + KvPool)
+//!                   |
+//!             KvPool: slab K/V cache, INT8 quantize-on-write      (kvpool.rs)
+//!                   |
+//!             ServeStats: TTFT / tok/s / queue depth / occupancy  (stats.rs)
+//! ```
+//!
+//! The engine is deliberately network-free: in this offline environment the
+//! "clients" are load-generator threads (`silq serve` drives itself), but
+//! the queue/scheduler/pool layering is the one a socket frontend would sit
+//! on top of.
+
+pub mod backend;
+pub mod kvpool;
+pub mod scheduler;
+pub mod session;
+pub mod stats;
+
+pub use backend::{ArtifactBackend, DecodeBackend, HostBackend, HostCfg};
+pub use kvpool::{CacheStore, KvPool, QuantRule};
+pub use scheduler::Scheduler;
+pub use stats::ServeStats;
+
+use anyhow::{bail, ensure, Result};
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One generation request as submitted by a client.
+#[derive(Debug)]
+pub struct GenRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    /// token budget for the completion
+    pub max_new: usize,
+    /// stop at EOS (default); load generators and latency tests turn this
+    /// off so every request decodes its full budget deterministically
+    pub stop_on_eos: bool,
+    pub submitted: Instant,
+}
+
+impl GenRequest {
+    pub fn new(id: u64, prompt: Vec<i32>, max_new: usize) -> GenRequest {
+        GenRequest { id, prompt, max_new, stop_on_eos: true, submitted: Instant::now() }
+    }
+
+    /// Decode the full `max_new` budget even if the model emits EOS.
+    pub fn ignore_eos(mut self) -> GenRequest {
+        self.stop_on_eos = false;
+        self
+    }
+}
+
+/// One finished request with its latency breakdown.
+#[derive(Debug)]
+pub struct GenResult {
+    pub id: u64,
+    pub prompt_len: usize,
+    /// prompt followed by the generated completion
+    pub tokens: Vec<i32>,
+    /// submit -> admission (time spent in the queue)
+    pub queued_ms: f64,
+    /// submit -> first generated token
+    pub ttft_ms: f64,
+    /// submit -> completion
+    pub total_ms: f64,
+    /// steady-state decode rate after the first token (NaN for 1-token runs)
+    pub decode_tok_per_sec: f64,
+    /// scheduler step at which the request entered a lane / left it
+    pub admitted_step: u64,
+    pub finished_step: u64,
+    /// set when the request was rejected at admission (bad prompt, cache
+    /// exhaustion); the run itself survives and serves everything else
+    pub error: Option<String>,
+}
+
+impl GenResult {
+    pub fn generated(&self) -> &[i32] {
+        &self.tokens[self.prompt_len..]
+    }
+}
+
+/// Bounded MPSC admission queue: producers block when the queue is full
+/// (backpressure), the scheduler polls it every step.
+pub struct AdmissionQueue {
+    cap: usize,
+    inner: Mutex<QueueInner>,
+    space: Condvar,
+    avail: Condvar,
+}
+
+struct QueueInner {
+    q: VecDeque<GenRequest>,
+    closed: bool,
+}
+
+impl AdmissionQueue {
+    pub fn new(cap: usize) -> AdmissionQueue {
+        AdmissionQueue {
+            cap: cap.max(1),
+            inner: Mutex::new(QueueInner { q: VecDeque::new(), closed: false }),
+            space: Condvar::new(),
+            avail: Condvar::new(),
+        }
+    }
+
+    /// Enqueue a request, blocking while the queue is at capacity.
+    /// Fails once the queue is closed.
+    pub fn submit(&self, req: GenRequest) -> Result<()> {
+        ensure!(!req.prompt.is_empty(), "empty prompt");
+        let mut g = self.inner.lock().unwrap();
+        while g.q.len() >= self.cap && !g.closed {
+            g = self.space.wait(g).unwrap();
+        }
+        if g.closed {
+            bail!("admission queue is closed");
+        }
+        g.q.push_back(req);
+        self.avail.notify_one();
+        Ok(())
+    }
+
+    pub fn try_pop(&self) -> Option<GenRequest> {
+        let mut g = self.inner.lock().unwrap();
+        let r = g.q.pop_front();
+        if r.is_some() {
+            self.space.notify_one();
+        }
+        r
+    }
+
+    /// No more submissions; the scheduler drains what is left and stops.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        self.space.notify_all();
+        self.avail.notify_all();
+    }
+
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().q.len()
+    }
+
+    pub fn is_drained(&self) -> bool {
+        let g = self.inner.lock().unwrap();
+        g.closed && g.q.is_empty()
+    }
+
+    /// Park until a request is available or the queue closes (bounded by
+    /// `timeout` so the scheduler can re-check its own state).
+    pub fn wait_nonempty(&self, timeout: Duration) {
+        let g = self.inner.lock().unwrap();
+        if g.q.is_empty() && !g.closed {
+            let _ = self.avail.wait_timeout(g, timeout).unwrap();
+        }
+    }
+}
+
+/// A scheduler running on its own worker thread, sharing the admission
+/// queue with any number of producer threads — the multi-threaded shape of
+/// the engine (and the proof the serve types are `Send`-sound).
+pub struct ServeHandle {
+    queue: Arc<AdmissionQueue>,
+    worker: std::thread::JoinHandle<Result<(Vec<GenResult>, ServeStats)>>,
+}
+
+impl ServeHandle {
+    /// Spawn a scheduler over `backend` with `lanes` batch lanes and an
+    /// admission queue of `queue_cap` entries.
+    pub fn spawn<B>(backend: B, lanes: usize, queue_cap: usize) -> Result<ServeHandle>
+    where
+        B: DecodeBackend + Send + 'static,
+    {
+        /// Closes the queue when the worker exits — by return, error or
+        /// panic — so producers blocked in `submit` always wake up and get
+        /// an error instead of deadlocking on a dead scheduler.
+        struct CloseOnExit(Arc<AdmissionQueue>);
+        impl Drop for CloseOnExit {
+            fn drop(&mut self) {
+                self.0.close();
+            }
+        }
+
+        let mut sched = Scheduler::new(backend, lanes)?;
+        let queue = Arc::new(AdmissionQueue::new(queue_cap));
+        let q = queue.clone();
+        let worker = std::thread::spawn(move || {
+            let _guard = CloseOnExit(q.clone());
+            let mut stats = ServeStats::new(lanes);
+            let results = sched.run(&q, &mut stats)?;
+            Ok((results, stats))
+        });
+        Ok(ServeHandle { queue, worker })
+    }
+
+    /// The shared queue — clone the `Arc` into producer threads.
+    pub fn queue(&self) -> Arc<AdmissionQueue> {
+        self.queue.clone()
+    }
+
+    /// Close the queue, wait for the drain, and return results + stats.
+    pub fn finish(self) -> Result<(Vec<GenResult>, ServeStats)> {
+        self.queue.close();
+        match self.worker.join() {
+            Ok(r) => r,
+            Err(_) => bail!("serve worker panicked"),
+        }
+    }
+}
+
+/// Run a scheduler to completion on the current thread (single-threaded
+/// callers: examples, benches, the artifact backend whose literals are not
+/// `Send`).
+pub fn serve_inline<B: DecodeBackend>(
+    backend: B,
+    lanes: usize,
+    requests: Vec<GenRequest>,
+) -> Result<(Vec<GenResult>, ServeStats)> {
+    let queue = AdmissionQueue::new(requests.len().max(1));
+    for r in requests {
+        queue.submit(r)?;
+    }
+    queue.close();
+    let mut sched = Scheduler::new(backend, lanes)?;
+    let mut stats = ServeStats::new(lanes);
+    let results = sched.run(&queue, &mut stats)?;
+    Ok((results, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queue_blocks_and_closes() {
+        let q = AdmissionQueue::new(1);
+        q.submit(GenRequest::new(1, vec![1], 1)).unwrap();
+        assert_eq!(q.depth(), 1);
+        assert!(!q.is_drained());
+        q.close();
+        assert!(q.submit(GenRequest::new(2, vec![1], 1)).is_err());
+        assert!(q.try_pop().is_some());
+        assert!(q.is_drained());
+    }
+
+    #[test]
+    fn queue_rejects_empty_prompt() {
+        let q = AdmissionQueue::new(4);
+        assert!(q.submit(GenRequest::new(1, vec![], 1)).is_err());
+    }
+
+    #[test]
+    fn backpressure_unblocks_on_pop() {
+        let q = Arc::new(AdmissionQueue::new(1));
+        q.submit(GenRequest::new(1, vec![1], 1)).unwrap();
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || q2.submit(GenRequest::new(2, vec![1], 1)));
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(q.try_pop().is_some()); // frees space, unblocks the producer
+        t.join().unwrap().unwrap();
+        assert_eq!(q.depth(), 1);
+    }
+}

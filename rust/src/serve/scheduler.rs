@@ -1,0 +1,270 @@
+//! Continuous-batching scheduler.
+//!
+//! The scheduler owns a fixed set of batch lanes over one decode backend.
+//! Every step it (1) evicts finished sessions, (2) admits queued requests
+//! into the freed lanes, and (3) advances all live lanes by one token — so
+//! a queued request starts decoding as soon as *any* lane frees, instead of
+//! waiting for the whole batch to drain (the property the serve
+//! integration test pins down).
+
+use anyhow::{ensure, Result};
+use std::time::Duration;
+
+use crate::serve::backend::DecodeBackend;
+use crate::serve::session::Session;
+use crate::serve::stats::ServeStats;
+use crate::serve::{AdmissionQueue, GenResult};
+
+pub struct Scheduler<B: DecodeBackend> {
+    backend: B,
+    lanes: Vec<Option<Session>>,
+    /// monotone step counter (one backend step per increment)
+    step_no: u64,
+}
+
+impl<B: DecodeBackend> Scheduler<B> {
+    /// `lanes` may be smaller than the backend's native batch (the unused
+    /// rows ride along as padding); it can never exceed it.
+    pub fn new(backend: B, lanes: usize) -> Result<Scheduler<B>> {
+        ensure!(lanes >= 1, "need at least one lane");
+        ensure!(
+            lanes <= backend.lanes(),
+            "requested {lanes} lanes but the backend serves {}",
+            backend.lanes()
+        );
+        Ok(Scheduler { backend, lanes: (0..lanes).map(|_| None).collect(), step_no: 0 })
+    }
+
+    pub fn backend(&self) -> &B {
+        &self.backend
+    }
+
+    fn active(&self) -> usize {
+        self.lanes.iter().filter(|l| l.is_some()).count()
+    }
+
+    /// Drain the queue to completion: runs until the queue is closed and
+    /// every admitted session has finished. Returns results in completion
+    /// order.
+    pub fn run(&mut self, queue: &AdmissionQueue, stats: &mut ServeStats) -> Result<Vec<GenResult>> {
+        let mut results = vec![];
+        let seq_len = self.backend.seq_len();
+        loop {
+            // 1. evict finished sessions, freeing their lane + cache slot
+            for lane in 0..self.lanes.len() {
+                let done = matches!(&self.lanes[lane], Some(s) if s.done(seq_len));
+                if done {
+                    let s = self.lanes[lane].take().unwrap();
+                    self.backend.evict(lane);
+                    let r = s.into_result(self.step_no);
+                    stats.on_complete(&r);
+                    results.push(r);
+                }
+            }
+
+            // 2. admit queued requests into free lanes (continuous batching:
+            //    this happens every step, not once per batch)
+            for lane in 0..self.lanes.len() {
+                if self.lanes[lane].is_some() {
+                    continue;
+                }
+                let Some(req) = queue.try_pop() else { break };
+                match self.backend.admit(lane, &req.prompt) {
+                    Ok(()) => {
+                        let sess = Session::admit(req, self.step_no);
+                        if sess.done(seq_len) {
+                            // zero-budget request: complete without a step
+                            self.backend.evict(lane);
+                            let r = sess.into_result(self.step_no);
+                            stats.on_complete(&r);
+                            results.push(r);
+                        } else {
+                            self.lanes[lane] = Some(sess);
+                        }
+                    }
+                    Err(e) => {
+                        // reject just this request — one bad prompt must not
+                        // take down the run (or lose the other sessions)
+                        self.backend.evict(lane); // release any partial admit
+                        let mut r = Session::admit(req, self.step_no).into_result(self.step_no);
+                        r.error = Some(e.to_string());
+                        stats.on_reject();
+                        results.push(r);
+                    }
+                }
+            }
+
+            if self.active() == 0 {
+                if queue.is_drained() {
+                    break;
+                }
+                // idle: block until a request arrives or the queue closes
+                queue.wait_nonempty(Duration::from_millis(50));
+                continue;
+            }
+
+            // 3. one decode step across all live lanes
+            let views: Vec<Option<&[i32]>> =
+                self.lanes.iter().map(|l| l.as_ref().map(|s| s.tokens.as_slice())).collect();
+            let next = self.backend.step(&views)?;
+            self.step_no += 1;
+            for (lane, tok) in next.into_iter().enumerate() {
+                if let (Some(s), Some(t)) = (self.lanes[lane].as_mut(), tok) {
+                    s.push(t);
+                }
+            }
+            stats.on_step(queue.depth(), self.active(), self.backend.kv_bytes());
+        }
+        stats.finish();
+        Ok(results)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::GenRequest;
+
+    /// Deterministic model-free backend: lane l always emits token 100+l.
+    /// Mirrors the artifact backend's statelessness.
+    struct MockBackend {
+        lanes: usize,
+        seq: usize,
+        admitted: Vec<u32>,
+        evicted: Vec<u32>,
+    }
+
+    impl MockBackend {
+        fn new(lanes: usize, seq: usize) -> MockBackend {
+            MockBackend { lanes, seq, admitted: vec![0; lanes], evicted: vec![0; lanes] }
+        }
+    }
+
+    impl DecodeBackend for MockBackend {
+        fn lanes(&self) -> usize {
+            self.lanes
+        }
+        fn seq_len(&self) -> usize {
+            self.seq
+        }
+        fn admit(&mut self, lane: usize, prompt: &[i32]) -> Result<()> {
+            anyhow::ensure!(prompt.first() != Some(&99), "marker prompt rejected");
+            self.admitted[lane] += 1;
+            Ok(())
+        }
+        fn evict(&mut self, lane: usize) {
+            self.evicted[lane] += 1;
+        }
+        fn step(&mut self, lanes: &[Option<&[i32]>]) -> Result<Vec<Option<i32>>> {
+            Ok(lanes
+                .iter()
+                .enumerate()
+                .map(|(l, t)| t.map(|_| 100 + l as i32))
+                .collect())
+        }
+    }
+
+    fn run_reqs(lanes: usize, reqs: Vec<GenRequest>) -> (Vec<GenResult>, ServeStats) {
+        let queue = AdmissionQueue::new(reqs.len().max(1));
+        for r in reqs {
+            queue.submit(r).unwrap();
+        }
+        queue.close();
+        let mut sched = Scheduler::new(MockBackend::new(lanes, 64), lanes).unwrap();
+        let mut stats = ServeStats::new(lanes);
+        let results = sched.run(&queue, &mut stats).unwrap();
+        (results, stats)
+    }
+
+    fn by_id(results: &[GenResult], id: u64) -> &GenResult {
+        results.iter().find(|r| r.id == id).unwrap()
+    }
+
+    #[test]
+    fn admits_queued_request_before_batch_drains() {
+        // 2 lanes, 3 requests: the short one frees a lane while the long
+        // one is still decoding — the queued request must start then.
+        let (results, stats) = run_reqs(
+            2,
+            vec![
+                GenRequest::new(1, vec![1, 3], 6),
+                GenRequest::new(2, vec![1, 4], 2),
+                GenRequest::new(3, vec![1, 5], 2),
+            ],
+        );
+        assert_eq!(results.len(), 3);
+        let (r1, r2, r3) = (by_id(&results, 1), by_id(&results, 2), by_id(&results, 3));
+        assert!(
+            r3.admitted_step < r1.finished_step,
+            "continuous batching must admit ({}) before the batch drains ({})",
+            r3.admitted_step,
+            r1.finished_step
+        );
+        assert!(r3.admitted_step >= r2.finished_step, "no free lane before the short request ended");
+        assert_eq!(r1.generated().len(), 6);
+        assert!(stats.mean_queue_depth() > 0.0, "request 3 must have waited in the queue");
+        assert!(stats.batch_occupancy() > 0.5);
+    }
+
+    #[test]
+    fn all_lanes_used_and_released() {
+        let reqs = (0..8).map(|i| GenRequest::new(i, vec![1, 2], 3)).collect();
+        let (results, stats) = run_reqs(4, reqs);
+        assert_eq!(results.len(), 8);
+        assert_eq!(stats.completed, 8);
+        assert_eq!(stats.total_new_tokens, 8 * 3);
+        let mut ids: Vec<u64> = results.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 8);
+    }
+
+    #[test]
+    fn context_window_bounds_generation() {
+        // seq 8, prompt 5 -> at most 3 generated tokens regardless of budget
+        let queue = AdmissionQueue::new(1);
+        queue.submit(GenRequest::new(9, vec![1, 2, 3, 4, 5], 100)).unwrap();
+        queue.close();
+        let mut sched = Scheduler::new(MockBackend::new(1, 8), 1).unwrap();
+        let mut stats = ServeStats::new(1);
+        let results = sched.run(&queue, &mut stats).unwrap();
+        assert_eq!(results[0].generated().len(), 3);
+    }
+
+    #[test]
+    fn bad_request_is_rejected_without_killing_the_run() {
+        let (results, stats) = run_reqs(
+            2,
+            vec![
+                GenRequest::new(1, vec![1, 2], 3),
+                GenRequest::new(2, vec![99, 2], 3), // admit fails on marker
+                GenRequest::new(3, vec![1, 4], 3),
+            ],
+        );
+        assert_eq!(results.len(), 3);
+        let bad = by_id(&results, 2);
+        assert!(bad.error.as_deref().unwrap().contains("marker"));
+        assert!(bad.generated().is_empty());
+        assert_eq!(stats.rejected, 1);
+        assert!(by_id(&results, 1).error.is_none());
+        assert_eq!(by_id(&results, 3).generated().len(), 3);
+    }
+
+    #[test]
+    fn zero_budget_request_generates_nothing() {
+        let (results, stats) = run_reqs(
+            1,
+            vec![GenRequest::new(1, vec![1, 2], 0), GenRequest::new(2, vec![1, 3], 2)],
+        );
+        assert_eq!(results.len(), 2);
+        assert!(by_id(&results, 1).generated().is_empty());
+        assert_eq!(by_id(&results, 2).generated().len(), 2);
+        assert_eq!(stats.total_new_tokens, 2);
+    }
+
+    #[test]
+    fn rejects_more_lanes_than_backend() {
+        assert!(Scheduler::new(MockBackend::new(2, 8), 3).is_err());
+        assert!(Scheduler::new(MockBackend::new(2, 8), 0).is_err());
+    }
+}

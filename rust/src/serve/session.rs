@@ -1,0 +1,126 @@
+//! One in-flight generation session: a request bound to a scheduler lane.
+
+use std::time::Instant;
+
+use crate::data::vocab::EOS;
+use crate::serve::{GenRequest, GenResult};
+
+/// State of one admitted request while it occupies a lane.
+#[derive(Debug)]
+pub struct Session {
+    pub id: u64,
+    pub prompt_len: usize,
+    /// prompt followed by generated tokens
+    pub tokens: Vec<i32>,
+    pub max_new: usize,
+    pub stop_on_eos: bool,
+    pub submitted: Instant,
+    pub admitted: Instant,
+    pub admitted_step: u64,
+    pub first_token: Option<Instant>,
+}
+
+impl Session {
+    pub fn admit(req: GenRequest, step: u64) -> Session {
+        Session {
+            id: req.id,
+            prompt_len: req.prompt.len(),
+            tokens: req.prompt,
+            max_new: req.max_new,
+            stop_on_eos: req.stop_on_eos,
+            submitted: req.submitted,
+            admitted: Instant::now(),
+            admitted_step: step,
+            first_token: None,
+        }
+    }
+
+    pub fn generated(&self) -> &[i32] {
+        &self.tokens[self.prompt_len..]
+    }
+
+    /// Record one generated token (stamps time-to-first-token once).
+    pub fn push(&mut self, tok: i32) {
+        if self.first_token.is_none() {
+            self.first_token = Some(Instant::now());
+        }
+        self.tokens.push(tok);
+    }
+
+    /// A session is done when it hit its token budget, emitted EOS, or
+    /// filled the model's context window.
+    pub fn done(&self, seq_len: usize) -> bool {
+        self.generated().len() >= self.max_new
+            || (self.stop_on_eos && self.generated().last() == Some(&EOS))
+            || self.tokens.len() >= seq_len
+    }
+
+    pub fn into_result(self, finished_step: u64) -> GenResult {
+        let now = Instant::now();
+        let new_tokens = self.tokens.len() - self.prompt_len;
+        let ttft_ms = self
+            .first_token
+            .map(|t| t.duration_since(self.submitted).as_secs_f64() * 1e3)
+            .unwrap_or(f64::NAN);
+        let decode_secs = self
+            .first_token
+            .map(|t| now.duration_since(t).as_secs_f64())
+            .unwrap_or(0.0);
+        GenResult {
+            id: self.id,
+            prompt_len: self.prompt_len,
+            tokens: self.tokens,
+            queued_ms: self.admitted.duration_since(self.submitted).as_secs_f64() * 1e3,
+            ttft_ms,
+            total_ms: now.duration_since(self.submitted).as_secs_f64() * 1e3,
+            decode_tok_per_sec: if decode_secs > 0.0 && new_tokens > 1 {
+                (new_tokens - 1) as f64 / decode_secs
+            } else {
+                f64::NAN
+            },
+            admitted_step: self.admitted_step,
+            finished_step,
+            error: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, prompt: Vec<i32>, max_new: usize) -> GenRequest {
+        GenRequest::new(id, prompt, max_new)
+    }
+
+    #[test]
+    fn done_conditions() {
+        let mut s = Session::admit(req(1, vec![1, 3], 2), 0);
+        assert!(!s.done(64));
+        s.push(40);
+        assert!(!s.done(64));
+        s.push(41);
+        assert!(s.done(64)); // budget
+        let mut s = Session::admit(req(2, vec![1], 8), 0);
+        s.push(EOS);
+        assert!(s.done(64)); // eos
+        let mut s = Session::admit(req(2, vec![1], 8).ignore_eos(), 0);
+        s.push(EOS);
+        assert!(!s.done(64)); // load-generator mode decodes through EOS
+        let mut s = Session::admit(req(3, vec![1, 2, 3], 8), 0);
+        s.push(9);
+        assert!(s.done(4)); // context window
+    }
+
+    #[test]
+    fn result_accounting() {
+        let mut s = Session::admit(req(7, vec![1, 3, 5], 4), 2);
+        s.push(10);
+        s.push(11);
+        let r = s.into_result(9);
+        assert_eq!(r.id, 7);
+        assert_eq!(r.generated(), &[10, 11]);
+        assert_eq!((r.admitted_step, r.finished_step), (2, 9));
+        assert!(r.ttft_ms >= 0.0 && r.total_ms >= r.ttft_ms);
+    }
+}

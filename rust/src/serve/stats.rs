@@ -1,0 +1,173 @@
+//! Serving telemetry: per-request latency records plus per-step scheduler
+//! gauges, aggregated into the throughput report `silq serve` prints.
+
+use crate::metrics::percentile;
+use crate::serve::GenResult;
+use crate::util::Timer;
+
+/// Aggregate statistics over one serve run.
+pub struct ServeStats {
+    /// wall-clock seconds of the run (stamped by `finish`)
+    pub wall_secs: f64,
+    pub steps: u64,
+    pub completed: usize,
+    /// requests rejected at admission (bad prompt, cache exhaustion)
+    pub rejected: usize,
+    pub total_new_tokens: usize,
+    /// per-step gauges (summed; divide by steps for means)
+    queue_depth_sum: f64,
+    active_lane_sum: f64,
+    lanes: usize,
+    /// peak deployment-format KV bytes resident in the pool
+    pub kv_bytes_peak: usize,
+    /// per-request records
+    pub ttft_ms: Vec<f64>,
+    pub queued_ms: Vec<f64>,
+    pub total_ms: Vec<f64>,
+    timer: Timer,
+}
+
+impl ServeStats {
+    pub fn new(lanes: usize) -> ServeStats {
+        ServeStats {
+            wall_secs: 0.0,
+            steps: 0,
+            completed: 0,
+            rejected: 0,
+            total_new_tokens: 0,
+            queue_depth_sum: 0.0,
+            active_lane_sum: 0.0,
+            lanes: lanes.max(1),
+            kv_bytes_peak: 0,
+            ttft_ms: vec![],
+            queued_ms: vec![],
+            total_ms: vec![],
+            timer: Timer::start(),
+        }
+    }
+
+    /// Record one scheduler step's gauges.
+    pub fn on_step(&mut self, queue_depth: usize, active_lanes: usize, kv_bytes: usize) {
+        self.steps += 1;
+        self.queue_depth_sum += queue_depth as f64;
+        self.active_lane_sum += active_lanes as f64;
+        self.kv_bytes_peak = self.kv_bytes_peak.max(kv_bytes);
+    }
+
+    /// Record one finished request.
+    pub fn on_complete(&mut self, r: &GenResult) {
+        self.completed += 1;
+        self.total_new_tokens += r.generated().len();
+        if r.ttft_ms.is_finite() {
+            self.ttft_ms.push(r.ttft_ms);
+        }
+        self.queued_ms.push(r.queued_ms);
+        self.total_ms.push(r.total_ms);
+    }
+
+    /// Record one request rejected at admission.
+    pub fn on_reject(&mut self) {
+        self.rejected += 1;
+    }
+
+    pub fn finish(&mut self) {
+        self.wall_secs = self.timer.secs();
+    }
+
+    /// Mean admission-queue depth sampled once per scheduler step.
+    pub fn mean_queue_depth(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.queue_depth_sum / self.steps as f64
+        }
+    }
+
+    /// Mean fraction of batch lanes holding a live session.
+    pub fn batch_occupancy(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.active_lane_sum / (self.steps as f64 * self.lanes as f64)
+        }
+    }
+
+    /// Aggregate generated-token throughput over the whole run.
+    pub fn tokens_per_sec(&self) -> f64 {
+        let secs = if self.wall_secs > 0.0 { self.wall_secs } else { self.timer.secs() };
+        self.total_new_tokens as f64 / secs.max(1e-9)
+    }
+
+    pub fn ttft_mean_ms(&self) -> f64 {
+        if self.ttft_ms.is_empty() {
+            f64::NAN
+        } else {
+            self.ttft_ms.iter().sum::<f64>() / self.ttft_ms.len() as f64
+        }
+    }
+
+    /// The report `silq serve` prints.
+    pub fn report(&self) -> String {
+        format!(
+            "served {} requests ({} rejected) / {} tokens in {:.2}s over {} steps\n\
+             throughput     {:>9.1} tok/s\n\
+             ttft           {:>9.2} ms mean   {:>8.2} ms p95\n\
+             queued         {:>9.2} ms mean\n\
+             queue depth    {:>9.2} mean\n\
+             batch occupancy{:>9.1} %\n\
+             kv pool peak   {:>9.1} KiB (deployment format)",
+            self.completed,
+            self.rejected,
+            self.total_new_tokens,
+            self.wall_secs,
+            self.steps,
+            self.tokens_per_sec(),
+            self.ttft_mean_ms(),
+            percentile(&self.ttft_ms, 95.0),
+            if self.queued_ms.is_empty() { 0.0 } else { self.queued_ms.iter().sum::<f64>() / self.queued_ms.len() as f64 },
+            self.mean_queue_depth(),
+            100.0 * self.batch_occupancy(),
+            self.kv_bytes_peak as f64 / 1024.0,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::GenRequest;
+    use crate::serve::session::Session;
+
+    #[test]
+    fn gauges_average_per_step() {
+        let mut st = ServeStats::new(4);
+        st.on_step(2, 4, 100);
+        st.on_step(0, 2, 50);
+        assert!((st.mean_queue_depth() - 1.0).abs() < 1e-9);
+        assert!((st.batch_occupancy() - 0.75).abs() < 1e-9);
+        assert_eq!(st.kv_bytes_peak, 100);
+    }
+
+    #[test]
+    fn completion_accounting() {
+        let mut st = ServeStats::new(2);
+        let mut s = Session::admit(GenRequest::new(1, vec![1, 2], 3), 0);
+        s.push(5);
+        s.push(6);
+        st.on_complete(&s.into_result(2));
+        st.finish();
+        assert_eq!(st.completed, 1);
+        assert_eq!(st.total_new_tokens, 2);
+        assert!(st.tokens_per_sec() > 0.0);
+        assert!(st.report().contains("served 1 requests"));
+    }
+
+    #[test]
+    fn empty_run_report_is_finite_enough() {
+        let mut st = ServeStats::new(1);
+        st.finish();
+        assert_eq!(st.mean_queue_depth(), 0.0);
+        assert_eq!(st.batch_occupancy(), 0.0);
+        let _ = st.report();
+    }
+}

@@ -9,6 +9,7 @@
 use anyhow::Result;
 
 use crate::data::vocab::{BOS, PAD};
+use crate::evalharness::decode::argmax;
 use crate::model::ParamStore;
 use crate::runtime::{build_inputs, literal_i32, to_f32_vec, Engine};
 use crate::util::{Rng, Timer};
@@ -65,10 +66,6 @@ pub fn self_generate(
         remaining -= bsz;
     }
     Ok((docs, t.secs()))
-}
-
-fn argmax(xs: &[f32]) -> usize {
-    xs.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).map(|(i, _)| i).unwrap()
 }
 
 fn sample(logits: &[f32], temperature: f32, rng: &mut Rng) -> usize {

@@ -125,6 +125,34 @@ fn prop_pack_dequant_lossless_vs_fake_quant() {
 }
 
 #[test]
+fn prop_pack_unpack_exactly_lossless_2_to_8_bits() {
+    // The deployability invariant the serve KV pool relies on: packing a
+    // tensor to integers and unpacking reproduces fake_quant_scalar
+    // *bit-exactly* (not approximately) at every bit width the integer
+    // representation covers.
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x20);
+        let bits = 2 + (seed % 7) as u32; // 2..=8 inclusive
+        let cols = [2usize, 4, 8, 16][rng.below(4)];
+        let rows = rng.range(1, 24);
+        let std = rng.uniform() + 0.05;
+        let w = rng.normal_vec(rows * cols, std);
+        let steps: Vec<f32> = (0..cols).map(|_| rng.uniform() * 0.2 + 1e-4).collect();
+        let packed = silq::quant::pack::PackedTensor::pack(&w, cols, &steps, bits).unwrap();
+        let deq = packed.dequant();
+        for (i, (&got, &x)) in deq.iter().zip(&w).enumerate() {
+            let want = quant::fake_quant_scalar(x, steps[i % cols], bits);
+            // exact equality, not a tolerance: the integer representation
+            // must reproduce the fake-quant value (±0.0 compare equal)
+            assert!(
+                got == want,
+                "seed {seed} bits {bits}: pack/unpack must be exact ({got} vs {want})"
+            );
+        }
+    }
+}
+
+#[test]
 fn prop_bundle_roundtrip_random() {
     use silq::model::{Tensor, TensorBundle};
     for seed in 0..10 {

@@ -1,0 +1,164 @@
+//! Integration: the continuous-batching serve engine end to end.
+//!
+//! The host decode backend needs no compiled artifacts, so unlike the
+//! runtime/eval integration suites everything here runs in a bare checkout;
+//! the one artifact-dependent test skips itself like the others do.
+
+use std::sync::Arc;
+
+use silq::model::ParamStore;
+use silq::serve::backend::host_test_params;
+use silq::serve::{
+    serve_inline, AdmissionQueue, ArtifactBackend, CacheStore, DecodeBackend, GenRequest,
+    HostBackend, HostCfg, Scheduler, ServeHandle, ServeStats,
+};
+use silq::util::Rng;
+
+fn host_cfg(act_dynamic: bool) -> HostCfg {
+    HostCfg {
+        vocab: 256,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 4,
+        d_ff: 64,
+        seq_len: 24,
+        quantized: true,
+        act_bits: 8,
+        act_dynamic,
+        cache_bits: 8,
+        weight_bits: 4,
+        head_bits: 8,
+        query_bits: 16,
+        rope_theta: 10000.0,
+    }
+}
+
+fn prompts(n: usize) -> Vec<Vec<i32>> {
+    (0..n).map(|i| vec![1, 3, 22 + (i % 4) as i32, 10, 128 + (i % 32) as i32, 4]).collect()
+}
+
+/// Continuous batching: with 2 lanes and 3 requests, the third must enter a
+/// lane as soon as the short request finishes — strictly before the long
+/// request (and therefore the initial batch) has drained.
+#[test]
+fn admits_queued_request_before_batch_drains() {
+    let cfg = host_cfg(true);
+    let params = host_test_params(&cfg, 11);
+    let backend = HostBackend::new(cfg, 2, &params, CacheStore::Int8).unwrap();
+    let ps = prompts(3);
+    // ignore_eos makes every request decode its exact budget, so the step
+    // accounting below is deterministic even for an untrained model
+    let reqs = vec![
+        GenRequest::new(1, ps[0].clone(), 10).ignore_eos(),
+        GenRequest::new(2, ps[1].clone(), 2).ignore_eos(),
+        GenRequest::new(3, ps[2].clone(), 2).ignore_eos(),
+    ];
+    let (results, stats) = serve_inline(backend, 2, reqs).unwrap();
+    assert_eq!(results.len(), 3);
+    let by = |id: u64| results.iter().find(|r| r.id == id).unwrap();
+    let (r1, r2, r3) = (by(1), by(2), by(3));
+    assert!(
+        r3.admitted_step < r1.finished_step,
+        "request 3 admitted at step {} but the batch only drained at step {}",
+        r3.admitted_step,
+        r1.finished_step
+    );
+    assert!(r3.admitted_step >= r2.finished_step);
+    assert!(stats.mean_queue_depth() > 0.0);
+    assert!(stats.batch_occupancy() > 0.0);
+}
+
+/// The INT8 KV pool must produce token-identical greedy output to the f32
+/// cache path — the pack/unpack losslessness invariant, end to end through
+/// the serve engine, in both the dynamic and static cache-step modes.
+#[test]
+fn int8_kv_pool_matches_f32_cache_token_for_token() {
+    for act_dynamic in [true, false] {
+        let cfg = host_cfg(act_dynamic);
+        let params = host_test_params(&cfg, 13);
+        let ps = prompts(6);
+        let mk_reqs =
+            || ps.iter().enumerate().map(|(i, p)| GenRequest::new(i as u64, p.clone(), 6)).collect();
+
+        let b_f32 = HostBackend::new(cfg.clone(), 3, &params, CacheStore::F32).unwrap();
+        let b_i8 = HostBackend::new(cfg.clone(), 3, &params, CacheStore::Int8).unwrap();
+        let (mut r_f32, _) = serve_inline(b_f32, 3, mk_reqs()).unwrap();
+        let (mut r_i8, _) = serve_inline(b_i8, 3, mk_reqs()).unwrap();
+        r_f32.sort_by_key(|r| r.id);
+        r_i8.sort_by_key(|r| r.id);
+        assert_eq!(r_f32.len(), 6);
+        for (a, b) in r_f32.iter().zip(&r_i8) {
+            assert!(!a.generated().is_empty());
+            assert_eq!(
+                a.generated(),
+                b.generated(),
+                "act_dynamic={act_dynamic} req {}: int8 KV pool diverged from f32 cache",
+                a.id
+            );
+        }
+    }
+}
+
+/// The engine is shared soundly across threads: multiple producers block on
+/// the bounded queue while the scheduler drains it from a worker thread.
+#[test]
+fn multithreaded_producers_share_the_engine() {
+    let cfg = host_cfg(true);
+    let params = host_test_params(&cfg, 17);
+    let backend = HostBackend::new(cfg, 4, &params, CacheStore::Int8).unwrap();
+    // queue cap far below the request count forces real backpressure
+    let handle = ServeHandle::spawn(backend, 4, 3).unwrap();
+    let mut producers = vec![];
+    for p in 0..4u64 {
+        let q = handle.queue();
+        producers.push(std::thread::spawn(move || {
+            for i in 0..8u64 {
+                let id = p * 8 + i;
+                let prompt = vec![1, 3, 22 + (id % 4) as i32, 10, 128 + (id % 16) as i32, 4];
+                q.submit(GenRequest::new(id, prompt, 3).ignore_eos()).unwrap();
+            }
+        }));
+    }
+    for t in producers {
+        t.join().unwrap();
+    }
+    let (results, stats) = handle.finish().unwrap();
+    assert_eq!(results.len(), 32);
+    assert_eq!(stats.completed, 32);
+    let mut ids: Vec<u64> = results.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), 32, "every request id served exactly once");
+    assert!(results.iter().all(|r| !r.generated().is_empty()));
+}
+
+/// Artifact-gated smoke: the compiled-graph backend serves a load run
+/// through the same scheduler (skips when artifacts are not built).
+#[test]
+fn artifact_backend_serves_when_built() {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let eng = silq::runtime::Engine::new("artifacts").expect("engine");
+    let art = "tiny_a8d-c8-w4_fwd";
+    let spec = eng.module(art).unwrap().spec.clone();
+    let mc = eng.manifest.model("tiny").unwrap().clone();
+    let mut rng = Rng::new(0);
+    let params = ParamStore::init(&spec, &mc, &mut rng);
+    let backend = ArtifactBackend::new(&eng, art, &params).unwrap();
+    let lanes = 4.min(backend.lanes());
+
+    let queue = Arc::new(AdmissionQueue::new(8));
+    for (i, p) in prompts(8).into_iter().enumerate() {
+        queue.submit(GenRequest::new(i as u64, p, 4)).unwrap();
+    }
+    queue.close();
+    let mut stats = ServeStats::new(lanes);
+    let mut sched = Scheduler::new(backend, lanes).unwrap();
+    let results = sched.run(&queue, &mut stats).unwrap();
+    assert_eq!(results.len(), 8);
+    // an untrained model may emit EOS early; the budget still bounds it
+    assert!(results.iter().all(|r| (1..=4).contains(&r.generated().len())));
+    assert!(stats.tokens_per_sec() > 0.0);
+}

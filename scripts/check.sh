@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Tier-1 verification gate (ROADMAP.md): release build, full Rust test
+# suite, and formatting. Run from the repository root: ./scripts/check.sh
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+echo "== cargo build --release =="
+cargo build --release --offline
+
+echo "== cargo test -q =="
+cargo test -q --offline
+
+echo "== cargo fmt --check =="
+cargo fmt --check
+
+echo "tier-1 check: OK"
