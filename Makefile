@@ -4,7 +4,7 @@
 
 .PHONY: check fmt artifacts bench pytest
 
-# tier-1: release build + full test suite + formatting
+# tier-1: release build + full test suite + clippy (-D warnings) + formatting
 check:
 	./scripts/check.sh
 

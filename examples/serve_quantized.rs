@@ -79,7 +79,7 @@ fn main() -> Result<()> {
     // 2) deployment path: host incremental decode, K/V cache resident as
     //    packed INT8 — must be token-identical to the f32 cache run
     println!("\n== host backend: int8 KV pool vs f32 cache ==");
-    let cfg = HostCfg::from_manifest(&mc, &pc)?;
+    let cfg = HostCfg::from_cfgs(&mc, &pc)?;
     let b_i8 = HostBackend::new(cfg.clone(), 4, &params, CacheStore::Int8)?;
     let b_f32 = HostBackend::new(cfg, 4, &params, CacheStore::F32)?;
     let (mut r_i8, s_i8) = serve_inline(b_i8, 4, requests(8, 4))?;

@@ -13,7 +13,9 @@ use silq::model::ParamStore;
 use silq::ptq::gptq::gptq_quantize_family;
 use silq::quant;
 use silq::runtime::{build_inputs, literal_i32, Engine};
-use silq::serve::backend::host_test_params;
+use silq::evalharness::decode::argmax;
+use silq::forward::{decode_greedy, HostForward};
+use silq::hostmodel::{host_test_params, HostModel};
 use silq::serve::{serve_inline, ArtifactBackend, CacheStore, GenRequest, HostBackend, HostCfg};
 use silq::util::{timer::bench_ms, Rng, Timer};
 
@@ -112,6 +114,47 @@ fn main() {
                 "({:.0} tok/s, occ {:.0}%, {} reqs)",
                 stats.tokens_per_sec(), 100.0 * stats.batch_occupancy(), results.len()
             ));
+        }
+    }
+
+    // ------- eval-style greedy decode: incremental vs full recompute ------
+    // the ISSUE-2 win, measured: host incremental decode does O(1) work per
+    // new token over the KV pool, while the old eval loop (and the
+    // stateless artifact graph) recomputes the whole prefix every step —
+    // O(n) per token, O(n^2) per generation. The ratio should grow with
+    // prompt length.
+    section("eval greedy decode (host): incremental KV vs full-sequence recompute");
+    {
+        let cfg = HostCfg {
+            vocab: 256, d_model: 64, n_layers: 2, n_heads: 4, d_ff: 128, seq_len: 96,
+            quantized: true, act_bits: 8, act_dynamic: true, cache_bits: 8,
+            weight_bits: 4, head_bits: 8, query_bits: 16, rope_theta: 10000.0,
+        };
+        let params = host_test_params(&cfg, 21);
+        let model = HostModel::new(cfg.clone(), &params).expect("model");
+        let mut fwd = HostForward::new(cfg.clone(), 1, &params, CacheStore::Int8).expect("fwd");
+        let max_new = 16usize;
+        for plen in [8usize, 32, 64] {
+            let prompt: Vec<i32> = (0..plen as i32).map(|i| 1 + i % 250).collect();
+            let ms_inc = bench_ms(1, 5, || {
+                let out = decode_greedy(&mut fwd, &[&prompt], max_new).expect("decode");
+                assert_eq!(out[0].len(), max_new);
+            });
+            let ms_full = bench_ms(1, 5, || {
+                // the pre-ISSUE-2 eval loop: full forward per emitted token
+                let mut row = prompt.clone();
+                for _ in 0..max_new {
+                    let lg = model.forward_seq(&row).expect("fwd");
+                    let last = &lg[(row.len() - 1) * cfg.vocab..row.len() * cfg.vocab];
+                    row.push(argmax(last) as i32);
+                }
+            });
+            report(&format!("greedy {max_new} tok, prompt {plen:>2}, incremental"), ms_inc, "");
+            report(
+                &format!("greedy {max_new} tok, prompt {plen:>2}, full recompute"),
+                ms_full,
+                &format!("({:.1}x slower)", ms_full / ms_inc.max(1e-9)),
+            );
         }
     }
 

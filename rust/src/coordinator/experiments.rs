@@ -166,12 +166,15 @@ fn table2(engine: &Engine, cfg: PipelineCfg) -> Result<()> {
     let mc = engine.manifest.model(&p.cfg.model)?.clone();
     let steps = n_samples / mc.train_batch;
 
-    // LLM-QAT: generate from the model, then QAT on the fixed set
+    // LLM-QAT: generate from the model, then QAT on the fixed set (the
+    // generation backend follows PipelineCfg::backend — host runs it
+    // incrementally over the KV pool, artifact-free)
     let gen_t = Timer::start();
+    let mut gen_backend = p.forward("fp16", &fp16)?;
     let (docs, gen_secs) = llm_qat::self_generate(
-        engine, &format!("{}_fp16_fwd", p.cfg.model), &fp16,
-        n_samples, mc.seq_len - 1, 3, 1.0, p.cfg.seed,
+        &mut gen_backend, n_samples, mc.seq_len - 1, 3, 1.0, p.cfg.seed,
     )?;
+    drop(gen_backend);
     let mut qs = p.calibrated_quant_store(prec, &fp16, &stats, "quantile", "mse")?;
     let tcfg = p.qat_cfg(steps);
     let st = p.qat(prec, &mut qs, &fp16, DataMix::Fixed(docs), tcfg.clone(), &mut log, None)?;

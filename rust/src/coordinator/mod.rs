@@ -5,4 +5,4 @@ pub mod experiments;
 pub mod pipeline;
 
 pub use experiments::run_experiment;
-pub use pipeline::{Pipeline, PipelineCfg};
+pub use pipeline::{BackendKind, Pipeline, PipelineCfg};

@@ -7,12 +7,35 @@ use anyhow::Result;
 use crate::config::TrainCfg;
 use crate::data::{DataMix, SftStyle, Vocab, World};
 use crate::evalharness::{EvalReport, Evaluator};
+use crate::forward::{ArtifactForward, ForwardBackend, HostForward};
+use crate::hostmodel::HostCfg;
 use crate::metrics::RunLog;
 use crate::model::ParamStore;
 use crate::ptq;
 use crate::runtime::Engine;
 use crate::train::calibrate::{calibrate_act_steps, calibrate_weight_steps, collect_stats, CalibStats};
 use crate::train::{init_model, quantize_store, Trainer, TrainStats};
+
+/// Which [`ForwardBackend`] the pipeline's logits-consuming workloads
+/// (eval scoring, generation, LLM-QAT self-generation) run behind.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BackendKind {
+    /// The compiled `*_fwd` artifact on PJRT (full-sequence recompute).
+    #[default]
+    Artifact,
+    /// The artifact-free host transformer with incremental KV decode.
+    Host,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s {
+            "artifact" => Ok(BackendKind::Artifact),
+            "host" => Ok(BackendKind::Host),
+            other => anyhow::bail!("unknown backend {other} (artifact|host)"),
+        }
+    }
+}
 
 /// Scaled-down defaults for the tiny experiment grid.
 #[derive(Clone, Debug)]
@@ -25,6 +48,8 @@ pub struct PipelineCfg {
     pub seed: u64,
     /// world seed shared by data and eval
     pub world_seed: u64,
+    /// forward backend for eval / generation workloads
+    pub backend: BackendKind,
 }
 
 impl Default for PipelineCfg {
@@ -37,6 +62,7 @@ impl Default for PipelineCfg {
             eval_items: 40,
             seed: 0,
             world_seed: 7,
+            backend: BackendKind::Artifact,
         }
     }
 }
@@ -188,6 +214,28 @@ impl<'e> Pipeline<'e> {
         trainer.run(qs, &self.world, mix, log, eval_hook)
     }
 
+    /// Bind `params` to the forward backend selected by
+    /// `PipelineCfg::backend` — the compiled artifact, or the artifact-free
+    /// host transformer (quantized precisions keep their KV cache in the
+    /// deployment INT8 representation, via `hostmodel::cache_store_for`).
+    pub fn forward(&self, prec: &str, params: &ParamStore) -> Result<Box<dyn ForwardBackend>> {
+        let pc = self.engine.manifest.prec(prec)?.clone();
+        // the host forward has no online-rotation implementation; rot
+        // precisions (Table 4 ablation) stay on the compiled graph rather
+        // than aborting a half-finished experiment at eval time
+        if self.cfg.backend == BackendKind::Artifact || pc.online_rot {
+            return Ok(Box::new(ArtifactForward::new(
+                self.engine,
+                &self.art(prec, "fwd"),
+                params,
+            )?));
+        }
+        let mc = self.engine.manifest.model(&self.cfg.model)?.clone();
+        let hc = HostCfg::from_cfgs(&mc, &pc)?;
+        let store = crate::hostmodel::cache_store_for(&pc);
+        Ok(Box::new(HostForward::new(hc, mc.fwd_batch, params, store)?))
+    }
+
     /// Evaluate a param store under a precision config.
     pub fn eval(
         &self,
@@ -195,8 +243,8 @@ impl<'e> Pipeline<'e> {
         params: &ParamStore,
         chat: bool,
     ) -> Result<EvalReport> {
-        let ev = Evaluator::new(self.engine, &self.art(prec, "fwd"), chat, self.cfg.eval_items)?;
-        ev.eval_all(params, &self.world, self.cfg.world_seed ^ 0xE7A1)
+        let mut ev = Evaluator::new(self.forward(prec, params)?, chat, self.cfg.eval_items);
+        ev.eval_all(&self.world, self.cfg.world_seed ^ crate::evalharness::EVAL_SEED_SALT)
     }
 
     /// PTQ baselines sharing the same artifacts.

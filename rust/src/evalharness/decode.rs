@@ -1,5 +1,6 @@
-//! Greedy-decode primitives shared by the eval harness and the serve
-//! engine, so `silq eval` and `silq serve` score and sample identically.
+//! Greedy-decode primitives shared by the eval harness, the forward
+//! backends and the serve engine, so `silq eval` and `silq serve` score
+//! and sample identically.
 
 use crate::data::vocab::PAD;
 

@@ -3,25 +3,33 @@
 //! Multiple choice: length-normalized continuation log-likelihood over the
 //! candidate answers (exactly the mechanics of ARC/HellaSwag/MMLU scoring).
 //! Generation: greedy decoding + exact match (GSM8K/IFEval mechanics).
+//!
+//! The harness is generic over [`ForwardBackend`], so the same scoring
+//! machinery runs against the compiled PJRT graph (`ArtifactForward`) or
+//! the artifact-free host transformer (`HostForward`) — `silq eval
+//! --backend host` needs nothing built. Generation goes through the shared
+//! incremental decode driver: one token of work per step on the host
+//! backend, early-exiting as soon as every row in a chunk is finished.
 
 pub mod decode;
 
 use anyhow::Result;
 use std::collections::BTreeMap;
-use std::sync::Arc;
 
-use crate::config::ModelCfg;
 use crate::data::{EvalItem, Suite, TaskKind, World};
-use crate::model::ParamStore;
-use crate::runtime::{build_inputs, literal_i32, to_f32_vec, Engine, Module};
+use crate::forward::{decode_greedy, ForwardBackend};
 
-use decode::{argmax, log_softmax_at, pack_rows};
+use decode::log_softmax_at;
 
-/// Scores one model (params + fwd artifact) on the benchmark registry.
-pub struct Evaluator<'e> {
-    pub engine: &'e Engine,
-    pub module: Arc<Module>,
-    pub mc: ModelCfg,
+/// Salt mixed into the world seed for eval item sampling — one constant so
+/// every eval entry point (`Pipeline::eval`, `silq eval --backend host`)
+/// scores the exact same items for a given world.
+pub const EVAL_SEED_SALT: u64 = 0xE7A1;
+
+/// Scores one bound model (a [`ForwardBackend`] with its parameters fixed
+/// at construction) on the benchmark registry.
+pub struct Evaluator<B: ForwardBackend> {
+    pub backend: B,
     /// apply the instruct chat template (paper's --apply_chat_template)
     pub chat: bool,
     /// items per task
@@ -55,43 +63,36 @@ impl EvalReport {
     }
 }
 
-impl<'e> Evaluator<'e> {
-    pub fn new(engine: &'e Engine, artifact: &str, chat: bool, n_items: usize) -> Result<Self> {
-        let module = engine.module(artifact)?;
-        let mc = engine.manifest.model(&module.spec.model)?.clone();
-        Ok(Evaluator { engine, module, mc, chat, n_items })
-    }
-
-    /// Run one [fwd_batch, seq_len] token batch -> logits (row-major).
-    fn logits(&self, params: &ParamStore, tokens: &[i32]) -> Result<Vec<f32>> {
-        let spec = &self.module.spec;
-        let tok_spec = &spec.inputs[spec.input_index("tokens")?];
-        let inputs =
-            build_inputs(spec, params, &[("tokens", literal_i32(&tok_spec.dims, tokens)?)])?;
-        let out = self.module.run(&inputs)?;
-        to_f32_vec(&out[0])
+impl<B: ForwardBackend> Evaluator<B> {
+    pub fn new(backend: B, chat: bool, n_items: usize) -> Self {
+        Evaluator { backend, chat, n_items }
     }
 
     /// Length-normalized log-likelihood of `cont` following `prompt` for a
     /// set of rows, evaluated in packed batches.
     fn continuation_scores(
-        &self,
-        params: &ParamStore,
+        &mut self,
         rows: &[(Vec<i32>, Vec<i32>)], // (prompt, continuation)
     ) -> Result<Vec<f32>> {
-        let (bsz, s, v) = (self.mc.fwd_batch, self.mc.seq_len, self.mc.vocab);
+        let (bsz, s, v) =
+            (self.backend.batch(), self.backend.seq_len(), self.backend.vocab());
         let mut scores = vec![0f32; rows.len()];
         for (chunk_idx, chunk) in rows.chunks(bsz).enumerate() {
             let joined: Vec<Vec<i32>> =
                 chunk.iter().map(|(p, c)| p.iter().chain(c.iter()).cloned().collect()).collect();
             let views: Vec<&[i32]> = joined.iter().map(|r| r.as_slice()).collect();
-            let tokens = pack_rows(&views, bsz, s);
-            let logits = self.logits(params, &tokens)?;
+            let logits = self.backend.batch_logits(&views)?;
             for (r, (p, c)) in chunk.iter().enumerate() {
                 let mut total = 0f32;
                 let mut n = 0usize;
                 for (k, &tok) in c.iter().enumerate() {
                     let pos = p.len() + k; // predicted from pos-1
+                    if pos == 0 {
+                        // empty prompt: no position predicts the first
+                        // continuation token — skip it instead of wrapping
+                        // the index below zero
+                        continue;
+                    }
                     if pos >= s {
                         break;
                     }
@@ -106,42 +107,21 @@ impl<'e> Evaluator<'e> {
         Ok(scores)
     }
 
-    /// Greedy-decode `max_new` tokens for each prompt.
-    pub fn generate(
-        &self,
-        params: &ParamStore,
-        prompts: &[Vec<i32>],
-        max_new: usize,
-    ) -> Result<Vec<Vec<i32>>> {
-        let (bsz, s, v) = (self.mc.fwd_batch, self.mc.seq_len, self.mc.vocab);
-        let mut outs: Vec<Vec<i32>> = vec![vec![]; prompts.len()];
-        for (chunk_idx, chunk) in prompts.chunks(bsz).enumerate() {
-            let mut rows: Vec<Vec<i32>> = chunk.to_vec();
-            for _ in 0..max_new {
-                let views: Vec<&[i32]> = rows.iter().map(|r| r.as_slice()).collect();
-                let tokens = pack_rows(&views, bsz, s);
-                let logits = self.logits(params, &tokens)?;
-                for (r, row) in rows.iter_mut().enumerate() {
-                    if row.len() >= s {
-                        continue;
-                    }
-                    let base = (r * s + row.len() - 1) * v;
-                    let next = argmax(&logits[base..base + v]) as i32;
-                    row.push(next);
-                    outs[chunk_idx * bsz + r].push(next);
-                }
-            }
+    /// Greedy-decode up to `max_new` tokens for each prompt through the
+    /// backend's incremental decode session (early-exits per chunk once
+    /// every row is finished or hit the context window).
+    pub fn generate(&mut self, prompts: &[Vec<i32>], max_new: usize) -> Result<Vec<Vec<i32>>> {
+        let bsz = self.backend.batch();
+        let mut outs = Vec::with_capacity(prompts.len());
+        for chunk in prompts.chunks(bsz) {
+            let views: Vec<&[i32]> = chunk.iter().map(|p| p.as_slice()).collect();
+            outs.extend(decode_greedy(&mut self.backend, &views, max_new)?);
         }
         Ok(outs)
     }
 
     /// Score one task's items.
-    pub fn score_task(
-        &self,
-        params: &ParamStore,
-        kind: TaskKind,
-        items: &[EvalItem],
-    ) -> Result<f32> {
+    pub fn score_task(&mut self, kind: TaskKind, items: &[EvalItem]) -> Result<f32> {
         match kind {
             TaskKind::MultipleChoice => {
                 let mut rows = vec![];
@@ -152,7 +132,7 @@ impl<'e> Evaluator<'e> {
                         rows.push((it.prompt.clone(), c.clone()));
                     }
                 }
-                let scores = self.continuation_scores(params, &rows)?;
+                let scores = self.continuation_scores(&rows)?;
                 let mut correct = 0usize;
                 for (it, (start, n)) in items.iter().zip(&spans) {
                     let best = (0..*n)
@@ -169,7 +149,7 @@ impl<'e> Evaluator<'e> {
             TaskKind::Generate => {
                 let prompts: Vec<Vec<i32>> = items.iter().map(|i| i.prompt.clone()).collect();
                 let max_new = items.iter().map(|i| i.answer.len()).max().unwrap_or(1);
-                let gens = self.generate(params, &prompts, max_new)?;
+                let gens = self.generate(&prompts, max_new)?;
                 let mut correct = 0usize;
                 for (it, g) in items.iter().zip(&gens) {
                     if g.len() >= it.answer.len() && g[..it.answer.len()] == it.answer[..] {
@@ -182,11 +162,11 @@ impl<'e> Evaluator<'e> {
     }
 
     /// Evaluate the full registry on a world.
-    pub fn eval_all(&self, params: &ParamStore, world: &World, seed: u64) -> Result<EvalReport> {
+    pub fn eval_all(&mut self, world: &World, seed: u64) -> Result<EvalReport> {
         let mut report = EvalReport::default();
         for task in crate::data::tasks::registry(self.n_items) {
             let items = task.items(world, self.chat, seed);
-            let acc = self.score_task(params, task.kind, &items)?;
+            let acc = self.score_task(task.kind, &items)?;
             report.per_task.push((task.name.to_string(), task.suite, acc));
         }
         Ok(report)
@@ -194,8 +174,7 @@ impl<'e> Evaluator<'e> {
 
     /// Evaluate only the named suites (faster loops, e.g. Figure 1 sweeps).
     pub fn eval_suites(
-        &self,
-        params: &ParamStore,
+        &mut self,
         world: &World,
         suites: &[Suite],
         seed: u64,
@@ -206,7 +185,7 @@ impl<'e> Evaluator<'e> {
                 continue;
             }
             let items = task.items(world, self.chat, seed);
-            let acc = self.score_task(params, task.kind, &items)?;
+            let acc = self.score_task(task.kind, &items)?;
             report.per_task.push((task.name.to_string(), task.suite, acc));
         }
         Ok(report)
@@ -256,5 +235,24 @@ mod tests {
         let b = EvalReport { per_task: vec![("t".into(), Suite::Csr, 0.6)] };
         let avg = average_reports(&[a, b]);
         assert!((avg.per_task[0].2 - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_prompt_continuation_does_not_underflow() {
+        // regression: an empty prompt made `pos == 0` and
+        // `(r*s + pos - 1) * v` wrapped the usize into a huge slice index
+        use crate::forward::HostForward;
+        use crate::hostmodel::{host_test_params, tiny_host_cfg, CacheStore};
+        let cfg = tiny_host_cfg(true, true);
+        let params = host_test_params(&cfg, 19);
+        let fwd = HostForward::new(cfg, 2, &params, CacheStore::F32).unwrap();
+        let mut ev = Evaluator::new(fwd, false, 2);
+        let rows = vec![
+            (vec![], vec![1i32, 3]),      // empty prompt: first token skipped
+            (vec![1i32], vec![3i32, 4]),  // normal row
+        ];
+        let scores = ev.continuation_scores(&rows).unwrap();
+        assert_eq!(scores.len(), 2);
+        assert!(scores.iter().all(|s| s.is_finite()));
     }
 }

@@ -1,0 +1,501 @@
+//! `forward` — the one abstraction every logits-consuming workload runs
+//! behind.
+//!
+//! [`ForwardBackend`] packages the two forward shapes the system needs:
+//! batched full-sequence logits (continuation log-likelihood scoring) and
+//! an incremental decode session (greedy generation, LLM-QAT hybrid
+//! sampling). Two implementations:
+//!
+//! * [`ArtifactForward`] — the compiled `*_fwd` artifact on PJRT. Batched
+//!   calls are one graph execution; incremental steps recompute the full
+//!   sequence each time (the graph is stateless), which is the O(n²)
+//!   behavior the host backend exists to beat.
+//! * [`HostForward`] — the [`HostModel`] host transformer: batched calls
+//!   run `forward_seq` per row, incremental steps advance a [`KvPool`]
+//!   session by exactly one token (O(n) total). Needs no artifacts at all.
+//!
+//! [`decode_with`]/[`decode_greedy`] drive an incremental session with
+//! early exit: the loop stops as soon as every row has its budget or hit
+//! the context window, instead of always burning `max_new` steps.
+
+use anyhow::{ensure, Context, Result};
+use std::sync::Arc;
+
+use crate::evalharness::decode::{argmax, pack_rows};
+use crate::hostmodel::{check_tokens, CacheStore, HostCfg, HostModel, KvPool};
+use crate::model::ParamStore;
+use crate::runtime::{build_inputs, literal_i32, to_f32_vec, Engine, Module};
+
+/// Batched logits + incremental decode over one bound model instance
+/// (parameters are fixed at construction).
+pub trait ForwardBackend {
+    /// Rows one batched call (or decode session) serves.
+    fn batch(&self) -> usize;
+    /// Model context window.
+    fn seq_len(&self) -> usize;
+    fn vocab(&self) -> usize;
+
+    /// Full-sequence logits for up to [`ForwardBackend::batch`] rows,
+    /// packed `[batch, seq_len, vocab]` row-major — the compiled fwd
+    /// artifact's layout. Values at positions past a row's length (or for
+    /// missing rows) are unspecified; callers index only real positions.
+    fn batch_logits(&mut self, rows: &[&[i32]]) -> Result<Vec<f32>>;
+
+    /// Open an incremental decode session over `rows` (prefill: every
+    /// prompt token but the last is folded into the backend's cache).
+    /// Rows must be non-empty and shorter than the context window.
+    fn begin_decode(&mut self, rows: &[&[i32]]) -> Result<()>;
+
+    /// Advance the session one position: `rows[r]` is row r's full token
+    /// prefix — its last token not yet folded into the cache — or `None`
+    /// for a finished row. Returns next-token logits per active row.
+    fn step_logits(&mut self, rows: &[Option<&[i32]>]) -> Result<Vec<Option<Vec<f32>>>>;
+
+    /// Close the decode session, releasing any cache resources.
+    fn end_decode(&mut self);
+}
+
+impl<'a> ForwardBackend for Box<dyn ForwardBackend + 'a> {
+    fn batch(&self) -> usize {
+        (**self).batch()
+    }
+    fn seq_len(&self) -> usize {
+        (**self).seq_len()
+    }
+    fn vocab(&self) -> usize {
+        (**self).vocab()
+    }
+    fn batch_logits(&mut self, rows: &[&[i32]]) -> Result<Vec<f32>> {
+        (**self).batch_logits(rows)
+    }
+    fn begin_decode(&mut self, rows: &[&[i32]]) -> Result<()> {
+        (**self).begin_decode(rows)
+    }
+    fn step_logits(&mut self, rows: &[Option<&[i32]>]) -> Result<Vec<Option<Vec<f32>>>> {
+        (**self).step_logits(rows)
+    }
+    fn end_decode(&mut self) {
+        (**self).end_decode()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// decode driver
+// ---------------------------------------------------------------------------
+
+/// Incremental decode driver: prefill once, then one step per new token,
+/// `pick(row, step, logits) -> token` choosing each next token. Rows that
+/// are empty or already fill the context window generate nothing. Returns
+/// the generated tokens per row (prompt excluded).
+///
+/// Early exit: the loop ends as soon as every row has `max_new` tokens or
+/// hit `seq_len`, so a chunk of short rows never pays for its budget.
+pub fn decode_with<B, F>(
+    backend: &mut B,
+    prompts: &[&[i32]],
+    max_new: usize,
+    mut pick: F,
+) -> Result<Vec<Vec<i32>>>
+where
+    B: ForwardBackend + ?Sized,
+    F: FnMut(usize, usize, &[f32]) -> i32,
+{
+    ensure!(prompts.len() <= backend.batch(), "more rows than the backend batch");
+    let s = backend.seq_len();
+    let mut out: Vec<Vec<i32>> = vec![vec![]; prompts.len()];
+    // rows that can decode at all; index mapping back to the caller's order
+    let viable: Vec<usize> = (0..prompts.len())
+        .filter(|&r| !prompts[r].is_empty() && prompts[r].len() < s)
+        .collect();
+    if viable.is_empty() || max_new == 0 {
+        return Ok(out);
+    }
+    let sub: Vec<&[i32]> = viable.iter().map(|&r| prompts[r]).collect();
+    backend.begin_decode(&sub)?;
+
+    let mut rows: Vec<Vec<i32>> = sub.iter().map(|p| p.to_vec()).collect();
+    let mut done = vec![false; rows.len()];
+    let stepped = (|| -> Result<()> {
+        for step in 0..max_new {
+            if done.iter().all(|&d| d) {
+                break; // every row finished early
+            }
+            let views: Vec<Option<&[i32]>> = rows
+                .iter()
+                .zip(&done)
+                .map(|(r, &d)| if d { None } else { Some(r.as_slice()) })
+                .collect();
+            let logits = backend.step_logits(&views)?;
+            ensure!(logits.len() == rows.len(), "backend returned a short step");
+            for (r, lg) in logits.into_iter().enumerate() {
+                let Some(lg) = lg else { continue };
+                let tok = pick(viable[r], step, &lg);
+                rows[r].push(tok);
+                out[viable[r]].push(tok);
+                if out[viable[r]].len() >= max_new || rows[r].len() >= s {
+                    done[r] = true;
+                }
+            }
+        }
+        Ok(())
+    })();
+    backend.end_decode();
+    stepped?;
+    Ok(out)
+}
+
+/// Greedy (argmax) decode through [`decode_with`] — the eval-harness and
+/// serve sampling rule.
+pub fn decode_greedy<B: ForwardBackend + ?Sized>(
+    backend: &mut B,
+    prompts: &[&[i32]],
+    max_new: usize,
+) -> Result<Vec<Vec<i32>>> {
+    decode_with(backend, prompts, max_new, |_, _, lg| argmax(lg) as i32)
+}
+
+// ---------------------------------------------------------------------------
+// ArtifactForward — the compiled PJRT graph
+// ---------------------------------------------------------------------------
+
+/// Forward through a compiled `*_fwd` artifact. Parameter literals are
+/// built once; only the token literal changes per call. Incremental steps
+/// recompute the full sequence (the graph holds no external cache).
+pub struct ArtifactForward {
+    module: Arc<Module>,
+    inputs: Vec<xla::Literal>,
+    tok_idx: usize,
+    batch: usize,
+    seq: usize,
+    vocab: usize,
+}
+
+impl ArtifactForward {
+    pub fn new(engine: &Engine, artifact: &str, params: &ParamStore) -> Result<ArtifactForward> {
+        let module = engine.module(artifact)?;
+        let spec = module.spec.clone();
+        let mc = engine.manifest.model(&spec.model)?;
+        let (batch, seq, vocab) = (mc.fwd_batch, mc.seq_len, mc.vocab);
+        let tok_idx = spec.input_index("tokens")?;
+        let zeros = vec![0i32; batch * seq];
+        let inputs = build_inputs(
+            &spec,
+            params,
+            &[("tokens", literal_i32(&spec.inputs[tok_idx].dims, &zeros)?)],
+        )?;
+        Ok(ArtifactForward { module, inputs, tok_idx, batch, seq, vocab })
+    }
+
+    /// One graph execution over packed rows; full `[batch, seq, vocab]`
+    /// logits out.
+    fn run_packed(&mut self, rows: &[&[i32]]) -> Result<Vec<f32>> {
+        let tokens = pack_rows(rows, self.batch, self.seq);
+        let tok_spec = &self.module.spec.inputs[self.tok_idx];
+        self.inputs[self.tok_idx] = literal_i32(&tok_spec.dims, &tokens)?;
+        let out = self.module.run(&self.inputs)?;
+        to_f32_vec(&out[0])
+    }
+}
+
+impl ForwardBackend for ArtifactForward {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn seq_len(&self) -> usize {
+        self.seq
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn batch_logits(&mut self, rows: &[&[i32]]) -> Result<Vec<f32>> {
+        ensure!(rows.len() <= self.batch, "more rows than the artifact batch");
+        self.run_packed(rows)
+    }
+
+    fn begin_decode(&mut self, rows: &[&[i32]]) -> Result<()> {
+        // stateless graph: the prefix is recomputed every step
+        ensure!(rows.len() <= self.batch, "more rows than the artifact batch");
+        for row in rows {
+            ensure!(!row.is_empty() && row.len() < self.seq, "bad decode row length");
+            check_tokens(row, self.vocab)?;
+        }
+        Ok(())
+    }
+
+    fn step_logits(&mut self, rows: &[Option<&[i32]>]) -> Result<Vec<Option<Vec<f32>>>> {
+        ensure!(rows.len() <= self.batch, "more rows than the artifact batch");
+        let packed: Vec<&[i32]> = rows.iter().map(|r| r.unwrap_or(&[])).collect();
+        let logits = self.run_packed(&packed)?;
+        let mut out = Vec::with_capacity(rows.len());
+        for (r, row) in rows.iter().enumerate() {
+            out.push(match row {
+                Some(toks) if !toks.is_empty() && toks.len() < self.seq => {
+                    let base = (r * self.seq + toks.len() - 1) * self.vocab;
+                    Some(logits[base..base + self.vocab].to_vec())
+                }
+                _ => None,
+            });
+        }
+        Ok(out)
+    }
+
+    fn end_decode(&mut self) {}
+}
+
+// ---------------------------------------------------------------------------
+// HostForward — the host transformer over a KvPool
+// ---------------------------------------------------------------------------
+
+/// Forward through the [`HostModel`] host transformer: batched calls run
+/// the full-sequence forward per row; incremental sessions keep the K/V
+/// cache resident in a quantized [`KvPool`] and advance one token per
+/// step. Runs with no artifacts built.
+pub struct HostForward {
+    model: HostModel,
+    pool: KvPool,
+    n_rows: usize,
+    slot_of_row: Vec<Option<usize>>,
+    /// tokens already folded into the cache, per row
+    processed: Vec<usize>,
+}
+
+impl HostForward {
+    pub fn new(
+        cfg: HostCfg,
+        n_rows: usize,
+        params: &ParamStore,
+        store: CacheStore,
+    ) -> Result<HostForward> {
+        ensure!(n_rows >= 1, "need at least one row");
+        let model = HostModel::new(cfg, params)?;
+        let pool = model.make_pool(n_rows, store)?;
+        Ok(HostForward {
+            model,
+            pool,
+            n_rows,
+            slot_of_row: vec![None; n_rows],
+            processed: vec![0; n_rows],
+        })
+    }
+
+    pub fn model(&self) -> &HostModel {
+        &self.model
+    }
+
+    /// Resident KV bytes of the in-use slots, in deployment format.
+    pub fn kv_bytes(&self) -> usize {
+        if self.pool.slots == 0 {
+            return 0;
+        }
+        self.pool.storage_bytes() * self.pool.slots_in_use() / self.pool.slots
+    }
+
+    /// Bind row `row` to a cache slot and prefill everything but the last
+    /// prompt token; the first step folds that one in and emits the first
+    /// generated token.
+    pub fn admit_row(&mut self, row: usize, prompt: &[i32]) -> Result<()> {
+        ensure!(row < self.n_rows, "row {row} out of range");
+        ensure!(self.slot_of_row[row].is_none(), "row {row} already occupied");
+        ensure!(
+            !prompt.is_empty() && prompt.len() < self.model.cfg.seq_len,
+            "bad prompt length"
+        );
+        // validate the WHOLE prompt here — a bad final token must be a
+        // per-request rejection, not an error out of the first step
+        check_tokens(prompt, self.model.cfg.vocab)?;
+        let slot = self.pool.alloc().context("KV pool exhausted")?;
+        self.slot_of_row[row] = Some(slot);
+        for (pos, &tok) in prompt[..prompt.len() - 1].iter().enumerate() {
+            if let Err(e) = self.model.forward_token(&mut self.pool, slot, tok, pos, false) {
+                self.evict_row(row);
+                return Err(e);
+            }
+        }
+        self.processed[row] = prompt.len() - 1;
+        Ok(())
+    }
+
+    /// Release row `row`'s cache slot (idempotent).
+    pub fn evict_row(&mut self, row: usize) {
+        if let Some(slot) = self.slot_of_row[row].take() {
+            self.pool.free(slot);
+        }
+        self.processed[row] = 0;
+    }
+
+    /// Advance row `row` by one position: fold `toks`'s last token into the
+    /// cache and return the next-token logits.
+    pub fn step_row(&mut self, row: usize, toks: &[i32]) -> Result<Vec<f32>> {
+        let slot = self.slot_of_row[row].context("row has no cache slot")?;
+        let pos = self.processed[row];
+        ensure!(
+            pos + 1 == toks.len(),
+            "row {row}: cache holds {pos} tokens, row has {}",
+            toks.len()
+        );
+        let logits = self
+            .model
+            .forward_token(&mut self.pool, slot, toks[pos], pos, true)?
+            .expect("logits requested");
+        self.processed[row] = pos + 1;
+        Ok(logits)
+    }
+}
+
+impl ForwardBackend for HostForward {
+    fn batch(&self) -> usize {
+        self.n_rows
+    }
+
+    fn seq_len(&self) -> usize {
+        self.model.cfg.seq_len
+    }
+
+    fn vocab(&self) -> usize {
+        self.model.cfg.vocab
+    }
+
+    fn batch_logits(&mut self, rows: &[&[i32]]) -> Result<Vec<f32>> {
+        ensure!(rows.len() <= self.n_rows, "more rows than the backend batch");
+        let (s, v) = (self.model.cfg.seq_len, self.model.cfg.vocab);
+        let mut logits = vec![0f32; self.n_rows * s * v];
+        for (r, row) in rows.iter().enumerate() {
+            if row.is_empty() {
+                continue;
+            }
+            let lg = self.model.forward_seq(row)?;
+            logits[r * s * v..r * s * v + lg.len()].copy_from_slice(&lg);
+        }
+        Ok(logits)
+    }
+
+    fn begin_decode(&mut self, rows: &[&[i32]]) -> Result<()> {
+        ensure!(rows.len() <= self.n_rows, "more rows than the backend batch");
+        for (r, row) in rows.iter().enumerate() {
+            if let Err(e) = self.admit_row(r, row) {
+                // leave no slots bound on a failed session open
+                self.end_decode();
+                return Err(e);
+            }
+        }
+        Ok(())
+    }
+
+    fn step_logits(&mut self, rows: &[Option<&[i32]>]) -> Result<Vec<Option<Vec<f32>>>> {
+        ensure!(rows.len() <= self.n_rows, "more rows than the backend batch");
+        let mut out = Vec::with_capacity(rows.len());
+        for (r, row) in rows.iter().enumerate() {
+            out.push(match row {
+                Some(toks) if !toks.is_empty() && toks.len() < self.model.cfg.seq_len => {
+                    Some(self.step_row(r, toks)?)
+                }
+                _ => None,
+            });
+        }
+        Ok(out)
+    }
+
+    fn end_decode(&mut self) {
+        for r in 0..self.n_rows {
+            self.evict_row(r);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hostmodel::{host_test_params, tiny_host_cfg};
+
+    fn host_fwd(rows: usize, seed: u64) -> HostForward {
+        let cfg = tiny_host_cfg(true, true);
+        let params = host_test_params(&cfg, seed);
+        HostForward::new(cfg, rows, &params, CacheStore::Int8).unwrap()
+    }
+
+    #[test]
+    fn decode_greedy_matches_manual_loop() {
+        let cfg = tiny_host_cfg(true, true);
+        let params = host_test_params(&cfg, 3);
+        let mut fwd = HostForward::new(cfg.clone(), 2, &params, CacheStore::F32).unwrap();
+        let prompt = [1i32, 3, 22, 10];
+        let gen = decode_greedy(&mut fwd, &[&prompt], 4).unwrap();
+        assert_eq!(gen.len(), 1);
+        assert_eq!(gen[0].len(), 4);
+
+        // reference: full-sequence recompute per token
+        let model = HostModel::new(cfg.clone(), &params).unwrap();
+        let mut row = prompt.to_vec();
+        for _ in 0..4 {
+            let lg = model.forward_seq(&row).unwrap();
+            let last = &lg[(row.len() - 1) * cfg.vocab..row.len() * cfg.vocab];
+            row.push(argmax(last) as i32);
+        }
+        assert_eq!(&row[prompt.len()..], &gen[0][..]);
+    }
+
+    #[test]
+    fn decode_early_exits_at_the_window() {
+        let mut fwd = host_fwd(1, 7);
+        let s = fwd.seq_len();
+        let prompt: Vec<i32> = (0..s as i32 - 2).map(|i| 1 + i % 200).collect();
+        // budget far beyond the window: only 2 tokens fit
+        let gen = decode_greedy(&mut fwd, &[&prompt], 100).unwrap();
+        assert_eq!(gen[0].len(), 2);
+        // the session must be fully released — a second decode succeeds
+        let gen2 = decode_greedy(&mut fwd, &[&[1i32, 2][..]], 3).unwrap();
+        assert_eq!(gen2[0].len(), 3);
+    }
+
+    #[test]
+    fn decode_skips_unviable_rows() {
+        let mut fwd = host_fwd(3, 9);
+        let s = fwd.seq_len();
+        let full: Vec<i32> = (0..s as i32).map(|i| 1 + i % 200).collect();
+        let prompts: Vec<&[i32]> = vec![&[], &[1, 3, 4], &full[..]];
+        let gen = decode_greedy(&mut fwd, &prompts, 2).unwrap();
+        assert!(gen[0].is_empty());
+        assert_eq!(gen[1].len(), 2);
+        assert!(gen[2].is_empty());
+    }
+
+    #[test]
+    fn decode_with_passes_row_and_step() {
+        let mut fwd = host_fwd(2, 11);
+        let mut seen: Vec<(usize, usize)> = vec![];
+        let prompts: Vec<&[i32]> = vec![&[1, 3], &[1, 4]];
+        let gen = decode_with(&mut fwd, &prompts, 2, |row, step, lg| {
+            seen.push((row, step));
+            argmax(lg) as i32
+        })
+        .unwrap();
+        assert_eq!(gen.iter().map(|g| g.len()).sum::<usize>(), 4);
+        assert_eq!(seen, vec![(0, 0), (1, 0), (0, 1), (1, 1)]);
+    }
+
+    #[test]
+    fn begin_decode_rejects_bad_rows_cleanly() {
+        let mut fwd = host_fwd(2, 13);
+        let prompts: Vec<&[i32]> = vec![&[1, 3], &[9999]];
+        assert!(fwd.begin_decode(&prompts).is_err());
+        // nothing left bound: a fresh session over both rows works
+        let ok: Vec<&[i32]> = vec![&[1, 3], &[1, 4]];
+        assert!(fwd.begin_decode(&ok).is_ok());
+        fwd.end_decode();
+    }
+
+    #[test]
+    fn batch_logits_layout_matches_artifact_shape() {
+        let mut fwd = host_fwd(2, 17);
+        let (s, v) = (fwd.seq_len(), fwd.vocab());
+        let rows: Vec<&[i32]> = vec![&[1, 3, 4], &[1, 5]];
+        let logits = fwd.batch_logits(&rows).unwrap();
+        assert_eq!(logits.len(), 2 * s * v);
+        // row 1's position-0 logits sit at the second row stride
+        let model_lg = fwd.model().forward_seq(&[1, 5]).unwrap();
+        assert_eq!(&logits[s * v..s * v + 2 * v], &model_lg[..2 * v]);
+    }
+}

@@ -1,11 +1,12 @@
 //! Slab-allocated KV-cache pool with quantized storage.
 //!
-//! Each session admitted by the scheduler owns one *slot*: a contiguous
-//! per-layer slab of K and V rows, one row of `dim` channels per generated
-//! position. The pool applies the paper's cache quantization **on write**
-//! (Figure 2: C-bit K/V tensors) and dequantizes **on read**, so the decode
-//! backend only ever sees f32 rows while the resident representation is the
-//! one a NorthPole-class deployment would hold.
+//! Each decode session (a serve lane, or an eval/self-generation row) owns
+//! one *slot*: a contiguous per-layer slab of K and V rows, one row of
+//! `dim` channels per generated position. The pool applies the paper's
+//! cache quantization **on write** (Figure 2: C-bit K/V tensors) and
+//! dequantizes **on read**, so the decode path only ever sees f32 rows
+//! while the resident representation is the one a NorthPole-class
+//! deployment would hold.
 //!
 //! Two storage modes share one quantization rule:
 //! * [`CacheStore::F32`] — the QAT "fake quant" view: quantized values kept
@@ -35,6 +36,39 @@ pub enum QuantRule {
     /// (one per attention head, matching `ste_dynamic_quantize`'s last-axis
     /// reduction on `[B, H, S, d_head]`). This is the dynamic ('d') mode.
     Dynamic { bits: u32, rows: usize },
+}
+
+impl QuantRule {
+    /// Apply this rule's fake quantization to one position's K and V rows
+    /// in place — the F32-store view of a cache write. Shared by
+    /// [`KvPool::write`] and `HostModel::forward_seq` so the pooled
+    /// incremental path and the batched full-sequence path quantize the
+    /// cache bit-identically.
+    pub fn quantize_f32(&self, layer: usize, k: &mut [f32], v: &mut [f32]) {
+        debug_assert_eq!(k.len(), v.len());
+        match self {
+            QuantRule::None => {}
+            QuantRule::Static { bits, k_steps, v_steps } => {
+                let sb = layer * k.len();
+                for c in 0..k.len() {
+                    k[c] = fake_quant_scalar(k[c], k_steps[sb + c], *bits);
+                    v[c] = fake_quant_scalar(v[c], v_steps[sb + c], *bits);
+                }
+            }
+            QuantRule::Dynamic { bits, rows } => {
+                let (_, qp) = qbounds(*bits);
+                let sub = k.len() / rows;
+                for r in 0..*rows {
+                    let ks = dyn_step(&k[r * sub..(r + 1) * sub], qp);
+                    let vs = dyn_step(&v[r * sub..(r + 1) * sub], qp);
+                    for c in r * sub..(r + 1) * sub {
+                        k[c] = fake_quant_scalar(k[c], ks, *bits);
+                        v[c] = fake_quant_scalar(v[c], vs, *bits);
+                    }
+                }
+            }
+        }
+    }
 }
 
 /// Resident representation of the quantized values.
@@ -161,34 +195,20 @@ impl KvPool {
         assert_eq!(v.len(), self.dim);
         let base = self.base(slot, layer, pos);
         match (&self.rule, self.store) {
-            (QuantRule::None, _) => {
+            (_, CacheStore::F32) => {
                 self.kf[base..base + self.dim].copy_from_slice(k);
                 self.vf[base..base + self.dim].copy_from_slice(v);
-            }
-            (QuantRule::Static { bits, k_steps, v_steps }, CacheStore::F32) => {
-                let sb = layer * self.dim;
-                for c in 0..self.dim {
-                    self.kf[base + c] = fake_quant_scalar(k[c], k_steps[sb + c], *bits);
-                    self.vf[base + c] = fake_quant_scalar(v[c], v_steps[sb + c], *bits);
-                }
+                self.rule.quantize_f32(
+                    layer,
+                    &mut self.kf[base..base + self.dim],
+                    &mut self.vf[base..base + self.dim],
+                );
             }
             (QuantRule::Static { bits, k_steps, v_steps }, CacheStore::Int8) => {
                 let sb = layer * self.dim;
                 for c in 0..self.dim {
                     self.ki[base + c] = qi(k[c], k_steps[sb + c], *bits);
                     self.vi[base + c] = qi(v[c], v_steps[sb + c], *bits);
-                }
-            }
-            (QuantRule::Dynamic { bits, rows }, CacheStore::F32) => {
-                let (_, qp) = qbounds(*bits);
-                let sub = self.dim / rows;
-                for r in 0..*rows {
-                    let ks = dyn_step(&k[r * sub..(r + 1) * sub], qp);
-                    let vs = dyn_step(&v[r * sub..(r + 1) * sub], qp);
-                    for c in r * sub..(r + 1) * sub {
-                        self.kf[base + c] = fake_quant_scalar(k[c], ks, *bits);
-                        self.vf[base + c] = fake_quant_scalar(v[c], vs, *bits);
-                    }
                 }
             }
             (QuantRule::Dynamic { bits, rows }, CacheStore::Int8) => {
@@ -206,6 +226,7 @@ impl KvPool {
                     }
                 }
             }
+            (QuantRule::None, CacheStore::Int8) => unreachable!("rejected by KvPool::new"),
         }
     }
 
@@ -328,6 +349,37 @@ mod tests {
         for c in 0..dim {
             assert_eq!(ko[c], fake_quant_scalar(k[c], steps[c], 8));
             assert_eq!(vo[c], fake_quant_scalar(v[c], steps[c], 8));
+        }
+    }
+
+    #[test]
+    fn quantize_f32_matches_pool_write() {
+        // the shared rule helper and the pooled write path must agree
+        // bit-for-bit — forward_seq leans on this
+        let mut rng = Rng::new(3);
+        let (dim, layers) = (16, 2);
+        for rule in [
+            QuantRule::None,
+            QuantRule::Dynamic { bits: 8, rows: 4 },
+            QuantRule::Static {
+                bits: 8,
+                k_steps: (0..layers * dim).map(|_| rng.uniform() * 0.05 + 1e-3).collect(),
+                v_steps: (0..layers * dim).map(|_| rng.uniform() * 0.05 + 1e-3).collect(),
+            },
+        ] {
+            let mut p = KvPool::new(1, layers, 2, dim, CacheStore::F32, rule.clone()).unwrap();
+            let s = p.alloc().unwrap();
+            for layer in 0..layers {
+                let (k, v) = (rand_row(&mut rng, dim), rand_row(&mut rng, dim));
+                p.write(s, layer, 0, &k, &v);
+                let (mut kq, mut vq) = (k.clone(), v.clone());
+                rule.quantize_f32(layer, &mut kq, &mut vq);
+                let mut ko = vec![0.0; dim];
+                let mut vo = vec![0.0; dim];
+                p.read_into(s, layer, 1, &mut ko, &mut vo).unwrap();
+                assert_eq!(ko, kq);
+                assert_eq!(vo, vq);
+            }
         }
     }
 

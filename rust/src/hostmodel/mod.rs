@@ -1,0 +1,791 @@
+//! `hostmodel` — the host quantized transformer.
+//!
+//! SiLQ's pitch is that quantization adds *no new operations* to the model,
+//! so the repo keeps exactly one artifact-free quantized forward and every
+//! workload (eval scoring, greedy generation, LLM-QAT self-generation,
+//! `silq serve`) runs on top of it. [`HostModel`] holds the folded weights
+//! (per-output-channel fake quant applied once at construction), the
+//! learned static activation steps, and the RoPE tables, and exposes two
+//! forwards that are bit-identical where they overlap:
+//!
+//! * [`HostModel::forward_token`] — incremental per-token decode with the
+//!   K/V cache resident in a [`KvPool`] (O(1) work per new token).
+//! * [`HostModel::forward_seq`] — batched full-sequence forward returning
+//!   logits at every position (continuation log-likelihood scoring).
+//!
+//! Both mirror `python/compile/model.py::forward` site for site (sans the
+//! online-rotation ablation). `proptests.rs` pins the incremental ==
+//! batched identity down; the serve integration suite pins INT8 == f32
+//! cache storage.
+//!
+//! [`builtin_model`] / [`builtin_prec`] mirror `python/compile/configs.py`
+//! so host-backend workloads run in a bare checkout, no manifest needed.
+
+pub mod kvpool;
+
+pub use kvpool::{CacheStore, KvPool, QuantRule};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::config::{ArtifactSpec, ModelCfg, PrecCfg, TensorSpec};
+use crate::model::ParamStore;
+use crate::quant::{dynamic_quant_rows, fake_quant, fake_quant_per_channel};
+
+/// Model + precision shape of the host forward, decoupled from the
+/// artifact manifest so tests, benches and `--backend host` runs work
+/// without built artifacts.
+#[derive(Clone, Debug)]
+pub struct HostCfg {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub quantized: bool,
+    pub act_bits: u32,
+    pub act_dynamic: bool,
+    pub cache_bits: u32,
+    pub weight_bits: u32,
+    pub head_bits: u32,
+    pub query_bits: u32,
+    /// `rope_theta` from `python/compile/configs.py` (all current models
+    /// use the default; the manifest does not carry it)
+    pub rope_theta: f32,
+}
+
+impl HostCfg {
+    /// Combine an architecture and a precision placement (from the
+    /// manifest, or from [`builtin_model`]/[`builtin_prec`]).
+    pub fn from_cfgs(mc: &ModelCfg, pc: &PrecCfg) -> Result<HostCfg> {
+        ensure!(!pc.online_rot, "host forward does not implement the online-rotation ablation");
+        Ok(HostCfg {
+            vocab: mc.vocab,
+            d_model: mc.d_model,
+            n_layers: mc.n_layers,
+            n_heads: mc.n_heads,
+            d_ff: mc.d_ff,
+            seq_len: mc.seq_len,
+            quantized: pc.quantized,
+            act_bits: pc.act_bits,
+            act_dynamic: pc.act_dynamic,
+            cache_bits: pc.cache_bits,
+            weight_bits: pc.weight_bits,
+            head_bits: pc.head_bits,
+            query_bits: pc.query_bits,
+            rope_theta: 10000.0,
+        })
+    }
+
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+}
+
+/// Built-in mirror of `python/compile/configs.py::MODELS` — lets the host
+/// backend describe a model with no artifact manifest on disk.
+pub fn builtin_model(name: &str) -> Option<ModelCfg> {
+    let mut mc = match name {
+        "tiny" | "tiny-pallas" => ModelCfg {
+            name: name.into(),
+            vocab: 256,
+            d_model: 128,
+            n_layers: 4,
+            n_heads: 4,
+            d_ff: 256,
+            seq_len: 64,
+            train_batch: 16,
+            fwd_batch: 32,
+            use_pallas: false,
+        },
+        "small" => ModelCfg {
+            name: name.into(),
+            vocab: 512,
+            d_model: 256,
+            n_layers: 8,
+            n_heads: 8,
+            d_ff: 512,
+            seq_len: 128,
+            train_batch: 8,
+            fwd_batch: 16,
+            use_pallas: false,
+        },
+        _ => return None,
+    };
+    if name == "tiny-pallas" {
+        mc.n_layers = 2;
+        mc.use_pallas = true;
+    }
+    Some(mc)
+}
+
+/// The cache storage a precision serves with: quantized precisions keep
+/// the K/V cache in the deployment INT8 representation, fp16 keeps f32.
+/// One rule shared by `Pipeline::forward` and `silq eval --backend host`
+/// so their scores stay comparable.
+pub fn cache_store_for(pc: &PrecCfg) -> CacheStore {
+    if pc.quantized {
+        CacheStore::Int8
+    } else {
+        CacheStore::F32
+    }
+}
+
+/// Built-in mirror of `python/compile/configs.py::PRECISIONS`.
+pub fn builtin_prec(name: &str) -> Option<PrecCfg> {
+    let mut pc = PrecCfg {
+        name: name.into(),
+        quantized: true,
+        act_bits: 8,
+        act_dynamic: true,
+        cache_bits: 8,
+        weight_bits: 4,
+        head_bits: 8,
+        query_bits: 16,
+        online_rot: false,
+    };
+    match name {
+        "fp16" => pc.quantized = false,
+        "a8d-c8-w4" => {}
+        "a8s-c8-w4" => pc.act_dynamic = false,
+        "a8d-c4-w4" => pc.cache_bits = 4,
+        "a8d-c8-w4-rot" => pc.online_rot = true,
+        _ => return None,
+    }
+    Some(pc)
+}
+
+/// Build the `ArtifactSpec` a host-served model's `ParamStore` follows —
+/// the same ordered contract as `python/compile/model.py::param_spec`.
+pub fn host_param_spec(cfg: &HostCfg) -> ArtifactSpec {
+    let (l, d, f, v) = (cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.vocab);
+    let mut inputs: Vec<(String, Vec<usize>)> = vec![
+        ("embed".into(), vec![v, d]),
+        ("ln1".into(), vec![l, d]),
+        ("wq".into(), vec![l, d, d]),
+        ("wk".into(), vec![l, d, d]),
+        ("wv".into(), vec![l, d, d]),
+        ("wo".into(), vec![l, d, d]),
+        ("ln2".into(), vec![l, d]),
+        ("wg".into(), vec![l, d, f]),
+        ("wu".into(), vec![l, d, f]),
+        ("wd".into(), vec![l, f, d]),
+        ("ln_f".into(), vec![d]),
+        ("head".into(), vec![d, v]),
+    ];
+    if cfg.quantized {
+        for (n, dims) in [
+            ("sw_q", vec![l, d]),
+            ("sw_k", vec![l, d]),
+            ("sw_v", vec![l, d]),
+            ("sw_o", vec![l, d]),
+            ("sw_g", vec![l, f]),
+            ("sw_u", vec![l, f]),
+            ("sw_d", vec![l, d]),
+            ("sw_head", vec![v]),
+        ] {
+            inputs.push((n.into(), dims));
+        }
+        if !cfg.act_dynamic {
+            for (n, dims) in [
+                ("sa_x1", vec![l]),
+                ("sa_q", vec![l]),
+                ("sc_k", vec![l]),
+                ("sc_v", vec![l]),
+                ("sa_o", vec![l]),
+                ("sa_x2", vec![l]),
+                ("sa_d", vec![l]),
+                ("sa_head", vec![]),
+            ] {
+                inputs.push((n.into(), dims));
+            }
+        }
+    }
+    ArtifactSpec {
+        name: "host_fwd".into(),
+        file: String::new(),
+        model: "host".into(),
+        prec: if cfg.quantized { "quantized" } else { "fp16" }.into(),
+        mode: "fwd".into(),
+        inputs: inputs
+            .into_iter()
+            .map(|(n, dims)| TensorSpec { name: format!("params.{n}"), dtype: "f32".into(), dims })
+            .collect(),
+        outputs: vec![],
+    }
+}
+
+/// Deterministic randomly-initialized parameters following
+/// [`host_param_spec`] — the bootstrap the tests and benches share (an
+/// untrained model generates noise, but latency/identity properties
+/// don't care).
+pub fn host_test_params(cfg: &HostCfg, seed: u64) -> ParamStore {
+    let spec = host_param_spec(cfg);
+    // ParamStore::init keys its rules off parameter names alone; the
+    // ModelCfg is only part of the signature
+    let mc = ModelCfg {
+        name: "host".into(),
+        vocab: cfg.vocab,
+        d_model: cfg.d_model,
+        n_layers: cfg.n_layers,
+        n_heads: cfg.n_heads,
+        d_ff: cfg.d_ff,
+        seq_len: cfg.seq_len,
+        train_batch: 1,
+        fwd_batch: 1,
+        use_pallas: false,
+    };
+    let mut rng = crate::util::Rng::new(seed);
+    ParamStore::init(&spec, &mc, &mut rng)
+}
+
+/// Admission-time prompt validation shared by every host/artifact entry
+/// point (serve admit, decode prefill, batched scoring).
+pub fn check_tokens(prompt: &[i32], vocab: usize) -> Result<()> {
+    for &t in prompt {
+        ensure!(t >= 0 && (t as usize) < vocab, "prompt token {t} outside the vocab (0..{vocab})");
+    }
+    Ok(())
+}
+
+/// Static (learned-scalar) activation steps per layer, when `act_dynamic`
+/// is off.
+struct StaticSteps {
+    sa_x1: Vec<f32>,
+    sa_q: Vec<f32>,
+    sa_o: Vec<f32>,
+    sa_x2: Vec<f32>,
+    sa_d: Vec<f32>,
+    sa_head: f32,
+}
+
+/// Per-layer weights with weight quantization folded in at construction
+/// (weights are static; per-output-channel fake quant is applied once).
+struct LayerWeights {
+    ln1: Vec<f32>,
+    wq: Vec<f32>,
+    wk: Vec<f32>,
+    wv: Vec<f32>,
+    wo: Vec<f32>,
+    ln2: Vec<f32>,
+    wg: Vec<f32>,
+    wu: Vec<f32>,
+    wd: Vec<f32>,
+}
+
+/// The host quantized transformer: folded weights + activation quantizers +
+/// RoPE tables. Pure host math over a `ParamStore`; the K/V cache lives in
+/// a caller-owned [`KvPool`] so one model instance can serve any number of
+/// concurrent sessions.
+pub struct HostModel {
+    pub cfg: HostCfg,
+    embed: Vec<f32>,
+    layers: Vec<LayerWeights>,
+    ln_f: Vec<f32>,
+    head: Vec<f32>,
+    sa: Option<StaticSteps>,
+    rule: QuantRule,
+    /// RoPE tables [seq, d_head/2]
+    cos: Vec<f32>,
+    sin: Vec<f32>,
+}
+
+impl HostModel {
+    pub fn new(cfg: HostCfg, params: &ParamStore) -> Result<HostModel> {
+        let (l, d, f, v) = (cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.vocab);
+        ensure!(d % cfg.n_heads == 0, "d_model must divide into heads");
+
+        let slice = |name: &str, layer: usize, per: usize| -> Result<Vec<f32>> {
+            let t = params.get(name)?;
+            ensure!(t.len() == l * per, "{name}: expected {} values, got {}", l * per, t.len());
+            Ok(t[layer * per..(layer + 1) * per].to_vec())
+        };
+
+        let mut layers = Vec::with_capacity(l);
+        for li in 0..l {
+            let mut w = LayerWeights {
+                ln1: slice("ln1", li, d)?,
+                wq: slice("wq", li, d * d)?,
+                wk: slice("wk", li, d * d)?,
+                wv: slice("wv", li, d * d)?,
+                wo: slice("wo", li, d * d)?,
+                ln2: slice("ln2", li, d)?,
+                wg: slice("wg", li, d * f)?,
+                wu: slice("wu", li, d * f)?,
+                wd: slice("wd", li, f * d)?,
+            };
+            if cfg.quantized {
+                let wb = cfg.weight_bits;
+                fake_quant_per_channel(&mut w.wq, d, &slice("sw_q", li, d)?, wb);
+                fake_quant_per_channel(&mut w.wk, d, &slice("sw_k", li, d)?, wb);
+                fake_quant_per_channel(&mut w.wv, d, &slice("sw_v", li, d)?, wb);
+                fake_quant_per_channel(&mut w.wo, d, &slice("sw_o", li, d)?, wb);
+                fake_quant_per_channel(&mut w.wg, f, &slice("sw_g", li, f)?, wb);
+                fake_quant_per_channel(&mut w.wu, f, &slice("sw_u", li, f)?, wb);
+                fake_quant_per_channel(&mut w.wd, d, &slice("sw_d", li, d)?, wb);
+            }
+            layers.push(w);
+        }
+
+        let mut head = params.get("head")?.to_vec();
+        if cfg.quantized {
+            fake_quant_per_channel(&mut head, v, params.get("sw_head")?, cfg.head_bits);
+        }
+
+        let sa = if cfg.quantized && !cfg.act_dynamic {
+            Some(StaticSteps {
+                sa_x1: params.get("sa_x1")?.to_vec(),
+                sa_q: params.get("sa_q")?.to_vec(),
+                sa_o: params.get("sa_o")?.to_vec(),
+                sa_x2: params.get("sa_x2")?.to_vec(),
+                sa_d: params.get("sa_d")?.to_vec(),
+                sa_head: params.get("sa_head")?[0],
+            })
+        } else {
+            None
+        };
+
+        // cache quantization rule: static steps come from the trained
+        // sc_k/sc_v scalars broadcast across channels; dynamic recomputes
+        // per head row on write (ste_dynamic_quantize's last-axis rule)
+        let rule = if !cfg.quantized {
+            QuantRule::None
+        } else if cfg.act_dynamic {
+            QuantRule::Dynamic { bits: cfg.cache_bits, rows: cfg.n_heads }
+        } else {
+            let bc = |name: &str| -> Result<Vec<f32>> {
+                let s = params.get(name)?;
+                ensure!(s.len() == l, "{name} must be one step per layer");
+                Ok(s.iter().flat_map(|&x| std::iter::repeat(x).take(d)).collect())
+            };
+            QuantRule::Static { bits: cfg.cache_bits, k_steps: bc("sc_k")?, v_steps: bc("sc_v")? }
+        };
+
+        // RoPE tables, as in model.py::rope_tables
+        let dh = cfg.d_head();
+        let half = dh / 2;
+        let mut cos = Vec::with_capacity(cfg.seq_len * half);
+        let mut sin = Vec::with_capacity(cfg.seq_len * half);
+        for p in 0..cfg.seq_len {
+            for i in 0..half {
+                let inv = 1.0 / cfg.rope_theta.powf(2.0 * i as f32 / dh as f32);
+                let ang = p as f32 * inv;
+                cos.push(ang.cos());
+                sin.push(ang.sin());
+            }
+        }
+
+        Ok(HostModel {
+            embed: params.get("embed")?.to_vec(),
+            ln_f: params.get("ln_f")?.to_vec(),
+            head,
+            layers,
+            sa,
+            rule,
+            cos,
+            sin,
+            cfg,
+        })
+    }
+
+    /// A KV pool sized for this model with `slots` concurrent sessions,
+    /// quantizing under this model's cache rule.
+    pub fn make_pool(&self, slots: usize, store: CacheStore) -> Result<KvPool> {
+        KvPool::new(
+            slots,
+            self.cfg.n_layers,
+            self.cfg.seq_len,
+            self.cfg.d_model,
+            store,
+            self.rule.clone(),
+        )
+        .context("building KV pool")
+    }
+
+    /// Quantize one activation vector at a site (mirrors `act_quant`):
+    /// dynamic per-`rows` sub-row (`ste_dynamic_quantize`'s last-axis
+    /// rule), or a static learned step, or identity.
+    fn act_quant(&self, x: &mut [f32], bits: u32, static_step: Option<f32>, rows: usize) {
+        if !self.cfg.quantized {
+            return;
+        }
+        match static_step {
+            Some(s) => fake_quant(x, s, bits),
+            None => dynamic_quant_rows(x, x.len() / rows, bits),
+        }
+    }
+
+    /// Apply RoPE at `pos` to one position's q and k rows (head-major
+    /// channel layout).
+    fn rope(&self, pos: usize, q: &mut [f32], k: &mut [f32]) {
+        let (h, dh) = (self.cfg.n_heads, self.cfg.d_head());
+        let half = dh / 2;
+        for head_i in 0..h {
+            for i in 0..half {
+                let (c, s) = (self.cos[pos * half + i], self.sin[pos * half + i]);
+                for t in [&mut *q, &mut *k] {
+                    let (a, b) = (t[head_i * dh + 2 * i], t[head_i * dh + 2 * i + 1]);
+                    t[head_i * dh + 2 * i] = a * c - b * s;
+                    t[head_i * dh + 2 * i + 1] = a * s + b * c;
+                }
+            }
+        }
+    }
+
+    /// Causal attention for one query position over `pos + 1` cached K/V
+    /// rows ([pos+1, d_model], head-major). Returns the context vector.
+    fn attend(&self, q: &[f32], k_cache: &[f32], v_cache: &[f32], pos: usize) -> Vec<f32> {
+        let (d, h, dh) = (self.cfg.d_model, self.cfg.n_heads, self.cfg.d_head());
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut ctx = vec![0f32; d];
+        let mut scores = vec![0f32; pos + 1];
+        for head_i in 0..h {
+            let qh = &q[head_i * dh..(head_i + 1) * dh];
+            for (j, sc) in scores.iter_mut().enumerate() {
+                let kh = &k_cache[j * d + head_i * dh..j * d + (head_i + 1) * dh];
+                *sc = qh.iter().zip(kh).map(|(a, b)| a * b).sum::<f32>() * scale;
+            }
+            softmax_inplace(&mut scores);
+            let ch = &mut ctx[head_i * dh..(head_i + 1) * dh];
+            for (j, &p_j) in scores.iter().enumerate() {
+                let vh = &v_cache[j * d + head_i * dh..j * d + (head_i + 1) * dh];
+                for (cv, &vv) in ch.iter_mut().zip(vh) {
+                    *cv += p_j * vv;
+                }
+            }
+        }
+        ctx
+    }
+
+    /// Static activation steps of layer `li` (None at every site when the
+    /// precision is dynamic or unquantized).
+    fn steps(&self, li: usize) -> LayerSteps {
+        match &self.sa {
+            Some(s) => LayerSteps {
+                sa_x1: Some(s.sa_x1[li]),
+                sa_q: Some(s.sa_q[li]),
+                sa_o: Some(s.sa_o[li]),
+                sa_x2: Some(s.sa_x2[li]),
+                sa_d: Some(s.sa_d[li]),
+            },
+            None => LayerSteps::default(),
+        }
+    }
+
+    /// Run one token through the stack at position `pos` of session `slot`,
+    /// reading and extending the K/V cache in `pool`; returns logits only
+    /// when asked (prefill positions skip the head matmul).
+    pub fn forward_token(
+        &self,
+        pool: &mut KvPool,
+        slot: usize,
+        tok: i32,
+        pos: usize,
+        want_logits: bool,
+    ) -> Result<Option<Vec<f32>>> {
+        let cfg = &self.cfg;
+        let (d, f, h) = (cfg.d_model, cfg.d_ff, cfg.n_heads);
+        ensure!(pos < cfg.seq_len, "position {pos} outside the context window");
+        ensure!(tok >= 0 && (tok as usize) < cfg.vocab, "token {tok} outside the vocab");
+
+        let mut x = self.embed[tok as usize * d..(tok as usize + 1) * d].to_vec();
+        let mut k_cache = vec![0f32; (pos + 1) * d];
+        let mut v_cache = vec![0f32; (pos + 1) * d];
+
+        for li in 0..cfg.n_layers {
+            let st = self.steps(li);
+            let lw = &self.layers[li];
+            let mut hnorm = rmsnorm(&x, &lw.ln1);
+            self.act_quant(&mut hnorm, cfg.act_bits, st.sa_x1, 1);
+            let mut q = matvec(&hnorm, &lw.wq, d);
+            let mut k = matvec(&hnorm, &lw.wk, d);
+            let v = matvec(&hnorm, &lw.wv, d);
+
+            self.rope(pos, &mut q, &mut k);
+
+            // INT16 query; K/V are quantized by the pool on write
+            self.act_quant(&mut q, cfg.query_bits, st.sa_q, h);
+            pool.write(slot, li, pos, &k, &v);
+            pool.read_into(slot, li, pos + 1, &mut k_cache, &mut v_cache)?;
+
+            // causal attention over the cached prefix
+            let mut ctx = self.attend(&q, &k_cache, &v_cache, pos);
+
+            self.act_quant(&mut ctx, cfg.act_bits, st.sa_o, 1);
+            let o = matvec(&ctx, &lw.wo, d);
+            for (xv, ov) in x.iter_mut().zip(&o) {
+                *xv += ov;
+            }
+
+            let mut h2 = rmsnorm(&x, &lw.ln2);
+            self.act_quant(&mut h2, cfg.act_bits, st.sa_x2, 1);
+            let g = matvec(&h2, &lw.wg, f);
+            let u = matvec(&h2, &lw.wu, f);
+            let mut a: Vec<f32> = g.iter().zip(&u).map(|(&gv, &uv)| silu(gv) * uv).collect();
+            self.act_quant(&mut a, cfg.act_bits, st.sa_d, 1);
+            let dn = matvec(&a, &lw.wd, d);
+            for (xv, dv) in x.iter_mut().zip(&dn) {
+                *xv += dv;
+            }
+        }
+
+        if !want_logits {
+            return Ok(None);
+        }
+        let mut hf = rmsnorm(&x, &self.ln_f);
+        self.act_quant(&mut hf, cfg.head_bits, self.sa.as_ref().map(|s| s.sa_head), 1);
+        Ok(Some(matvec(&hf, &self.head, cfg.vocab)))
+    }
+
+    /// Batched full-sequence forward of one row: logits at **every**
+    /// position, `[len * vocab]` row-major (rows longer than the context
+    /// window are truncated, matching `pack_rows`). Independent math from
+    /// [`HostModel::forward_token`] — whole-sequence attention with K/V
+    /// fake-quantized through the shared [`QuantRule`] — and bit-identical
+    /// to it position for position (the property test's subject).
+    pub fn forward_seq(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let cfg = &self.cfg;
+        let (d, f, h, v) = (cfg.d_model, cfg.d_ff, cfg.n_heads, cfg.vocab);
+        let n = tokens.len().min(cfg.seq_len);
+        ensure!(n > 0, "empty sequence");
+        check_tokens(&tokens[..n], v)?;
+
+        let mut x = vec![0f32; n * d];
+        for (p, &t) in tokens[..n].iter().enumerate() {
+            x[p * d..(p + 1) * d].copy_from_slice(&self.embed[t as usize * d..(t as usize + 1) * d]);
+        }
+
+        for li in 0..cfg.n_layers {
+            let st = self.steps(li);
+            let lw = &self.layers[li];
+
+            // attention inputs for every position (the "prefill" that the
+            // incremental path amortizes across steps)
+            let mut q_all = vec![0f32; n * d];
+            let mut k_all = vec![0f32; n * d];
+            let mut v_all = vec![0f32; n * d];
+            for p in 0..n {
+                let mut hnorm = rmsnorm(&x[p * d..(p + 1) * d], &lw.ln1);
+                self.act_quant(&mut hnorm, cfg.act_bits, st.sa_x1, 1);
+                let mut q = matvec(&hnorm, &lw.wq, d);
+                let mut k = matvec(&hnorm, &lw.wk, d);
+                let mut vv = matvec(&hnorm, &lw.wv, d);
+                self.rope(p, &mut q, &mut k);
+                self.act_quant(&mut q, cfg.query_bits, st.sa_q, h);
+                // cache quantization, same rule as the pool's write path
+                self.rule.quantize_f32(li, &mut k, &mut vv);
+                q_all[p * d..(p + 1) * d].copy_from_slice(&q);
+                k_all[p * d..(p + 1) * d].copy_from_slice(&k);
+                v_all[p * d..(p + 1) * d].copy_from_slice(&vv);
+            }
+
+            // causal attention + output projection per position (attention
+            // reads only q/k/v, so updating x in place is safe)
+            for p in 0..n {
+                let mut ctx = self.attend(&q_all[p * d..(p + 1) * d], &k_all, &v_all, p);
+                self.act_quant(&mut ctx, cfg.act_bits, st.sa_o, 1);
+                let o = matvec(&ctx, &lw.wo, d);
+                for (xv, ov) in x[p * d..(p + 1) * d].iter_mut().zip(&o) {
+                    *xv += ov;
+                }
+            }
+
+            // FFN per position
+            for p in 0..n {
+                let mut h2 = rmsnorm(&x[p * d..(p + 1) * d], &lw.ln2);
+                self.act_quant(&mut h2, cfg.act_bits, st.sa_x2, 1);
+                let g = matvec(&h2, &lw.wg, f);
+                let u = matvec(&h2, &lw.wu, f);
+                let mut a: Vec<f32> = g.iter().zip(&u).map(|(&gv, &uv)| silu(gv) * uv).collect();
+                self.act_quant(&mut a, cfg.act_bits, st.sa_d, 1);
+                let dn = matvec(&a, &lw.wd, d);
+                for (xv, dv) in x[p * d..(p + 1) * d].iter_mut().zip(&dn) {
+                    *xv += dv;
+                }
+            }
+        }
+
+        let mut logits = vec![0f32; n * v];
+        for p in 0..n {
+            let mut hf = rmsnorm(&x[p * d..(p + 1) * d], &self.ln_f);
+            self.act_quant(&mut hf, cfg.head_bits, self.sa.as_ref().map(|s| s.sa_head), 1);
+            logits[p * v..(p + 1) * v].copy_from_slice(&matvec(&hf, &self.head, v));
+        }
+        Ok(logits)
+    }
+}
+
+/// One layer's static activation steps, or all-None for dynamic precisions.
+#[derive(Clone, Copy, Default)]
+struct LayerSteps {
+    sa_x1: Option<f32>,
+    sa_q: Option<f32>,
+    sa_o: Option<f32>,
+    sa_x2: Option<f32>,
+    sa_d: Option<f32>,
+}
+
+fn rmsnorm(x: &[f32], g: &[f32]) -> Vec<f32> {
+    // model.py uses EPS=1e-6 inside rmsnorm (quant EPS is 1e-9)
+    let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let r = 1.0 / (ms + 1e-6).sqrt();
+    x.iter().zip(g).map(|(&v, &gv)| v * gv * r).collect()
+}
+
+/// `out[o] = sum_i x[i] * w[i * out_dim + o]` — the `x @ W` layout of the
+/// row-major `[in, out]` weight matrices in the param contract.
+fn matvec(x: &[f32], w: &[f32], out_dim: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len() * out_dim, w.len());
+    let mut out = vec![0f32; out_dim];
+    for (i, &xv) in x.iter().enumerate() {
+        if xv == 0.0 {
+            continue;
+        }
+        let row = &w[i * out_dim..(i + 1) * out_dim];
+        for (o, &wv) in out.iter_mut().zip(row) {
+            *o += xv * wv;
+        }
+    }
+    out
+}
+
+fn softmax_inplace(xs: &mut [f32]) {
+    let m = xs.iter().fold(f32::MIN, |a, &b| a.max(b));
+    let mut sum = 0f32;
+    for v in xs.iter_mut() {
+        *v = (*v - m).exp();
+        sum += *v;
+    }
+    for v in xs.iter_mut() {
+        *v /= sum;
+    }
+}
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Small host config the unit tests across modules share.
+#[cfg(test)]
+pub(crate) fn tiny_host_cfg(quantized: bool, act_dynamic: bool) -> HostCfg {
+    HostCfg {
+        vocab: 256,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 4,
+        d_ff: 64,
+        seq_len: 16,
+        quantized,
+        act_bits: 8,
+        act_dynamic,
+        cache_bits: 8,
+        weight_bits: 4,
+        head_bits: 8,
+        query_bits: 16,
+        rope_theta: 10000.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::evalharness::decode::argmax;
+
+    #[test]
+    fn host_spec_matches_python_param_spec() {
+        let spec = host_param_spec(&tiny_host_cfg(true, false));
+        let names = spec.param_names();
+        assert_eq!(names.len(), 12 + 8 + 8);
+        assert_eq!(names[0], "embed");
+        assert!(names.contains(&"sc_k".to_string()));
+        let spec_dyn = host_param_spec(&tiny_host_cfg(true, true));
+        assert_eq!(spec_dyn.param_names().len(), 12 + 8);
+    }
+
+    #[test]
+    fn builtin_cfgs_mirror_configs_py() {
+        let tiny = builtin_model("tiny").unwrap();
+        assert_eq!((tiny.d_model, tiny.n_layers, tiny.seq_len, tiny.fwd_batch), (128, 4, 64, 32));
+        let tp = builtin_model("tiny-pallas").unwrap();
+        assert!(tp.use_pallas);
+        assert_eq!(tp.n_layers, 2);
+        assert_eq!(builtin_model("small").unwrap().vocab, 512);
+        assert!(builtin_model("huge").is_none());
+
+        assert!(!builtin_prec("fp16").unwrap().quantized);
+        assert!(!builtin_prec("a8s-c8-w4").unwrap().act_dynamic);
+        assert_eq!(builtin_prec("a8d-c4-w4").unwrap().cache_bits, 4);
+        assert!(builtin_prec("a8d-c8-w4-rot").unwrap().online_rot);
+        assert!(builtin_prec("a8d-c8-w4").is_some());
+        assert!(builtin_prec("int1").is_none());
+        // the rotation ablation has no host forward
+        let mc = builtin_model("tiny").unwrap();
+        assert!(HostCfg::from_cfgs(&mc, &builtin_prec("a8d-c8-w4-rot").unwrap()).is_err());
+    }
+
+    #[test]
+    fn incremental_and_seq_forwards_agree_exactly() {
+        // the core identity forward_seq is built to satisfy; swept more
+        // broadly by proptests.rs
+        for (quantized, act_dynamic) in [(true, true), (true, false), (false, true)] {
+            let cfg = tiny_host_cfg(quantized, act_dynamic);
+            let params = host_test_params(&cfg, 41);
+            let model = HostModel::new(cfg.clone(), &params).unwrap();
+            let mut pool = model.make_pool(1, CacheStore::F32).unwrap();
+            let slot = pool.alloc().unwrap();
+            let prompt = [1i32, 7, 130, 22, 4];
+            let batched = model.forward_seq(&prompt).unwrap();
+            for (pos, &tok) in prompt.iter().enumerate() {
+                let inc = model.forward_token(&mut pool, slot, tok, pos, true).unwrap().unwrap();
+                assert_eq!(
+                    &batched[pos * cfg.vocab..(pos + 1) * cfg.vocab],
+                    &inc[..],
+                    "quantized={quantized} act_dynamic={act_dynamic} pos={pos}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn forward_seq_truncates_at_the_window() {
+        let cfg = tiny_host_cfg(true, true);
+        let params = host_test_params(&cfg, 5);
+        let model = HostModel::new(cfg.clone(), &params).unwrap();
+        let long: Vec<i32> = (0..cfg.seq_len as i32 + 4).map(|i| i % 200).collect();
+        let logits = model.forward_seq(&long).unwrap();
+        assert_eq!(logits.len(), cfg.seq_len * cfg.vocab);
+        assert!(logits.iter().all(|l| l.is_finite()));
+        assert!(model.forward_seq(&[]).is_err());
+        assert!(model.forward_seq(&[9999]).is_err());
+    }
+
+    #[test]
+    fn greedy_continuations_agree_between_paths() {
+        let cfg = tiny_host_cfg(true, true);
+        let params = host_test_params(&cfg, 9);
+        let model = HostModel::new(cfg.clone(), &params).unwrap();
+        let v = cfg.vocab;
+
+        // batched: full recompute per emitted token
+        let mut row_b = vec![1i32, 3, 22, 10];
+        for _ in 0..4 {
+            let lg = model.forward_seq(&row_b).unwrap();
+            let last = &lg[(row_b.len() - 1) * v..row_b.len() * v];
+            row_b.push(argmax(last) as i32);
+        }
+
+        // incremental: one token per step over the pool
+        let mut pool = model.make_pool(1, CacheStore::F32).unwrap();
+        let slot = pool.alloc().unwrap();
+        let mut row_i = vec![1i32, 3, 22, 10];
+        for (pos, &tok) in row_i.clone().iter().enumerate().take(row_i.len() - 1) {
+            model.forward_token(&mut pool, slot, tok, pos, false).unwrap();
+        }
+        for _ in 0..4 {
+            let pos = row_i.len() - 1;
+            let lg = model.forward_token(&mut pool, slot, row_i[pos], pos, true).unwrap().unwrap();
+            row_i.push(argmax(&lg) as i32);
+        }
+        assert_eq!(row_b, row_i);
+    }
+}

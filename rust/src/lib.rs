@@ -7,18 +7,29 @@
 //!
 //! Layer map:
 //! * [`runtime`] — PJRT engine loading `artifacts/*.hlo.txt`
+//! * [`hostmodel`] — the host quantized transformer + slab KV pool
+//! * [`forward`] — `ForwardBackend`: batched logits + incremental decode,
+//!   artifact (PJRT) and host implementations
 //! * [`train`] — the SiLQ QAT pipeline (calibrate -> LSQ + KD end-to-end)
 //! * [`ptq`] — baselines: RTN, SmoothQuant, GPTQ, SpinQuant-analog
 //! * [`evalharness`] — CSR / OLLMv1 / OLLMv2 synthetic benchmark suites
-//! * [`serve`] — continuous-batching inference engine + quantized KV pool
+//! * [`serve`] — continuous-batching inference engine over either backend
 //! * [`data`] — SynthLang corpus + SFT dataset generators
 //! * [`coordinator`] — one runner per paper table/figure
+
+// Numeric-kernel idioms — explicit index loops over multiple parallel
+// buffers, manual ceil-div on bit counts — trip these style lints without
+// being clearer rewritten; the clippy gate stays at -D warnings for
+// everything else.
+#![allow(clippy::needless_range_loop, clippy::manual_div_ceil, clippy::too_many_arguments)]
 
 pub mod analysis;
 pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod evalharness;
+pub mod forward;
+pub mod hostmodel;
 pub mod linalg;
 pub mod metrics;
 pub mod model;

@@ -12,14 +12,16 @@ use anyhow::{bail, Context, Result};
 use std::sync::Arc;
 
 use silq::config::TrainCfg;
-use silq::coordinator::{run_experiment, Pipeline, PipelineCfg};
+use silq::coordinator::{run_experiment, BackendKind, Pipeline, PipelineCfg};
 use silq::data::{vocab, DataMix, SftStyle, Vocab, World};
+use silq::evalharness::Evaluator;
+use silq::forward::HostForward;
+use silq::hostmodel::{self, CacheStore, HostCfg};
 use silq::metrics::RunLog;
 use silq::model::ParamStore;
 use silq::runtime::Engine;
 use silq::serve::{
-    AdmissionQueue, ArtifactBackend, CacheStore, DecodeBackend, GenRequest, HostBackend, HostCfg,
-    Scheduler, ServeStats,
+    AdmissionQueue, ArtifactBackend, DecodeBackend, GenRequest, HostBackend, Scheduler, ServeStats,
 };
 use silq::train::init_model;
 use silq::util::Timer;
@@ -79,7 +81,7 @@ impl Args {
         self.get("_pos")
     }
 
-    fn pipeline_cfg(&self) -> PipelineCfg {
+    fn pipeline_cfg(&self) -> Result<PipelineCfg> {
         let mut c = PipelineCfg::default();
         if let Some(m) = self.get("model") {
             c.model = m.into();
@@ -92,10 +94,13 @@ impl Args {
                 "eval_items" => c.eval_items = v.parse().unwrap_or(c.eval_items),
                 "seed" => c.seed = v.parse().unwrap_or(c.seed),
                 "world_seed" => c.world_seed = v.parse().unwrap_or(c.world_seed),
+                // a mistyped backend must fail loudly, not silently run a
+                // different compute path than the user asked for
+                "backend" => c.backend = BackendKind::parse(v)?,
                 _ => {}
             }
         }
-        c
+        Ok(c)
     }
 
     fn train_cfg(&self) -> TrainCfg {
@@ -120,8 +125,11 @@ fn main() -> Result<()> {
                  flags: --model tiny|small  --prec a8d-c8-w4|...  --ckpt path\n\
                         --set key=value (training hyper-params)\n\
                         --qat_steps N --pretrain_steps N --sft_steps N --eval_items N\n\
+                        --backend artifact|host (eval/qat/serve; host needs no\n\
+                        compiled artifacts and decodes incrementally over the\n\
+                        quantized KV pool)\n\
                  serve: --requests N --batch B --max_new M --queue_cap C --producers P\n\
-                        --backend artifact|host  --cache int8|f32 (host backend)\n\
+                        --cache int8|f32 (host backend)\n\
                  note:  `--flag value` and `--flag=value` are equivalent; use\n\
                         `--flag=value` when the value itself starts with `--`"
             );
@@ -143,7 +151,7 @@ fn main() -> Result<()> {
         }
         "pretrain" => {
             let eng = Engine::new(&art_dir)?;
-            let p = Pipeline::new(&eng, args.pipeline_cfg())?;
+            let p = Pipeline::new(&eng, args.pipeline_cfg()?)?;
             let mut log = RunLog::new("runs/pretrain");
             let params = p.base_model(&mut log)?;
             println!("base model ready ({} params)", params.numel());
@@ -151,7 +159,7 @@ fn main() -> Result<()> {
         }
         "sft" => {
             let eng = Engine::new(&art_dir)?;
-            let p = Pipeline::new(&eng, args.pipeline_cfg())?;
+            let p = Pipeline::new(&eng, args.pipeline_cfg()?)?;
             let mut log = RunLog::new("runs/sft");
             let style = match args.get("style").unwrap_or("tulu") {
                 "original" => SftStyle::Original,
@@ -163,7 +171,7 @@ fn main() -> Result<()> {
         }
         "qat" => {
             let eng = Engine::new(&art_dir)?;
-            let p = Pipeline::new(&eng, args.pipeline_cfg())?;
+            let p = Pipeline::new(&eng, args.pipeline_cfg()?)?;
             let mut log = RunLog::new("runs/qat");
             let prec = args.get("prec").unwrap_or("a8d-c8-w4").to_string();
             let fp16 = p.instruct_model(SftStyle::TuluSynth, "instruct", &mut log)?;
@@ -188,14 +196,18 @@ fn main() -> Result<()> {
             Ok(())
         }
         "eval" => {
+            // the host backend is fully artifact-free: no engine, no
+            // manifest, no PJRT — built-in config mirrors describe the model
+            if args.pipeline_cfg()?.backend == BackendKind::Host {
+                return host_eval_cmd(&args);
+            }
             let eng = Engine::new(&art_dir)?;
-            let p = Pipeline::new(&eng, args.pipeline_cfg())?;
+            let p = Pipeline::new(&eng, args.pipeline_cfg()?)?;
             let prec = args.get("prec").unwrap_or("fp16").to_string();
             let ckpt = args.get("ckpt").context("--ckpt required")?;
-            let spec = eng
-                .module(&format!("{}_{prec}_fwd", p.cfg.model))?
-                .spec
-                .clone();
+            // spec comes from the manifest, not eng.module(): loading a
+            // checkpoint must not pay a PJRT compile of the fwd artifact
+            let spec = eng.manifest.artifact(&format!("{}_{prec}_fwd", p.cfg.model))?.clone();
             let params = silq::model::ParamStore::load(&spec, ckpt)?;
             let chat = args.get("chat").map(|v| v == "1").unwrap_or(true);
             let r = p.eval(&prec, &params, chat)?;
@@ -212,18 +224,61 @@ fn main() -> Result<()> {
         "exp" => {
             let id = args.pos().context("exp needs an id: table1..table4, fig1..fig3")?;
             let eng = Engine::new(&art_dir)?;
-            run_experiment(&eng, id, args.pipeline_cfg())
+            run_experiment(&eng, id, args.pipeline_cfg()?)
         }
         "e2e" => {
             // delegated to the example so `cargo run --example qat_e2e` and
             // `silq e2e` share one code path
             let eng = Engine::new(&art_dir)?;
-            silq::coordinator::experiments::run_experiment(&eng, "fig2", args.pipeline_cfg())?;
+            silq::coordinator::experiments::run_experiment(&eng, "fig2", args.pipeline_cfg()?)?;
             println!("(full e2e lives in examples/qat_e2e.rs — `cargo run --release --example qat_e2e`)");
             Ok(())
         }
         other => bail!("unknown command {other}; try `silq help`"),
     }
+}
+
+/// `silq eval --backend host`: score a checkpoint through the host
+/// transformer — no compiled artifacts, no manifest, no PJRT. The model
+/// and precision come from the built-in mirrors of
+/// `python/compile/configs.py`; quantized precisions keep the K/V cache in
+/// the deployment INT8 representation and decode incrementally.
+fn host_eval_cmd(args: &Args) -> Result<()> {
+    let model = args.get("model").unwrap_or("tiny");
+    // same default precision as the artifact eval path, so flipping only
+    // --backend never changes what is evaluated
+    let prec = args.get("prec").unwrap_or("fp16");
+    let mc = hostmodel::builtin_model(model)
+        .with_context(|| format!("unknown model {model} (host backend knows tiny|small|tiny-pallas)"))?;
+    let pc = hostmodel::builtin_prec(prec)
+        .with_context(|| format!("unknown precision {prec}"))?;
+    let hc = HostCfg::from_cfgs(&mc, &pc)?;
+    let spec = hostmodel::host_param_spec(&hc);
+    let params = match args.get("ckpt") {
+        Some(path) => {
+            println!("loading checkpoint {path}");
+            ParamStore::load(&spec, path)?
+        }
+        None => {
+            let seed = args.get("seed").and_then(|s| s.parse().ok()).unwrap_or(0);
+            println!("no --ckpt given; evaluating a fresh random-init model (scores ~ chance)");
+            hostmodel::host_test_params(&hc, seed)
+        }
+    };
+    let store = hostmodel::cache_store_for(&pc);
+    let fwd = HostForward::new(hc, mc.fwd_batch, &params, store)?;
+    let chat = args.get("chat").map(|v| v == "1").unwrap_or(true);
+    let n_items: usize = args.get("eval_items").unwrap_or("40").parse()?;
+    let world_seed: u64 = args.get("world_seed").unwrap_or("7").parse()?;
+    let world = World::generate(Vocab::new(mc.vocab), world_seed);
+    let mut ev = Evaluator::new(fwd, chat, n_items);
+    let r = ev.eval_all(&world, world_seed ^ silq::evalharness::EVAL_SEED_SALT)?;
+    println!("backend=host model={model} prec={prec} (artifact-free)");
+    println!("{}", r.summary());
+    for (name, suite, acc) in &r.per_task {
+        println!("  {:<16} {:8} {:.2}", name, suite.label(), 100.0 * acc);
+    }
+    Ok(())
 }
 
 /// `silq serve`: self-driving load run — producer threads push synthetic
@@ -335,7 +390,7 @@ fn serve_cmd(eng: &Engine, args: &Args) -> Result<()> {
                 (false, _) | (_, "f32") => CacheStore::F32,
                 _ => CacheStore::Int8,
             };
-            let b = HostBackend::new(HostCfg::from_manifest(&mc, &pc)?, batch, &params, store)?;
+            let b = HostBackend::new(HostCfg::from_cfgs(&mc, &pc)?, batch, &params, store)?;
             let mut stats = ServeStats::new(batch);
             let mut sched = Scheduler::new(b, batch)?;
             let results = sched.run(&queue, &mut stats)?;

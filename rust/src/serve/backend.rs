@@ -1,28 +1,31 @@
 //! Decode backends: how one scheduler step turns token prefixes into next
 //! tokens.
 //!
-//! * [`ArtifactBackend`] — packs the active lanes into the compiled
-//!   `*_fwd` artifact's fixed `[fwd_batch, seq_len]` shape and recomputes
-//!   the full sequence on PJRT each step (the graph holds its cache
-//!   internally). This is the throughput path when artifacts are built.
-//! * [`HostBackend`] — incremental single-token decode with an explicit
-//!   [`KvPool`]: the host mirror of the deployment loop, where the K/V
-//!   cache is resident in the paper's integer representation. Runs with no
-//!   artifacts at all, which is what lets the serve integration tests
-//!   execute everywhere.
+//! The transformer forwards themselves live elsewhere — the host quantized
+//! model in [`crate::hostmodel`], the PJRT graph plumbing in
+//! [`crate::forward`] — and both backends here are thin [`DecodeBackend`]
+//! adapters over the shared [`crate::forward::ForwardBackend`]
+//! implementations, so `silq eval`, LLM-QAT self-generation and
+//! `silq serve` run the exact same forward:
 //!
-//! Both backends share the greedy-decode helpers extracted from the eval
-//! harness so `silq eval` and `silq serve` argmax identically.
+//! * [`ArtifactBackend`] — over [`ArtifactForward`]: packs the active lanes
+//!   into the compiled `*_fwd` artifact's fixed `[fwd_batch, seq_len]`
+//!   shape and recomputes the full sequence on PJRT each step (the graph
+//!   holds its cache internally). The throughput path when artifacts are
+//!   built.
+//! * [`HostBackend`] — over [`HostForward`]: incremental single-token
+//!   decode with an explicit [`crate::hostmodel::KvPool`], the host mirror
+//!   of the deployment loop where the K/V cache is resident in the paper's
+//!   integer representation. Runs with no artifacts at all, which is what
+//!   lets the serve integration tests execute everywhere.
 
-use anyhow::{ensure, Context, Result};
-use std::sync::Arc;
+use anyhow::{ensure, Result};
 
-use crate::config::{ArtifactSpec, ModelCfg, PrecCfg, TensorSpec};
-use crate::evalharness::decode::{argmax, pack_rows};
+use crate::evalharness::decode::argmax;
+use crate::forward::{ArtifactForward, ForwardBackend, HostForward};
+use crate::hostmodel::{CacheStore, HostCfg};
 use crate::model::ParamStore;
-use crate::quant::{dynamic_quant_rows, fake_quant, fake_quant_per_channel};
-use crate::runtime::{build_inputs, literal_i32, to_f32_vec, Engine, Module};
-use crate::serve::kvpool::{CacheStore, KvPool, QuantRule};
+use crate::runtime::Engine;
 
 /// One decode step over a fixed set of lanes.
 pub trait DecodeBackend {
@@ -49,70 +52,39 @@ pub trait DecodeBackend {
 // ArtifactBackend — full-sequence recompute through the compiled graph
 // ---------------------------------------------------------------------------
 
-/// Serves through a compiled `*_fwd` artifact. Parameter literals are built
-/// once; only the token literal changes per step.
+/// Serves through a compiled `*_fwd` artifact (a [`ArtifactForward`] in
+/// lane clothing).
 pub struct ArtifactBackend {
-    module: Arc<Module>,
-    inputs: Vec<xla::Literal>,
-    tok_idx: usize,
-    batch: usize,
-    seq: usize,
-    vocab: usize,
+    inner: ArtifactForward,
 }
 
 impl ArtifactBackend {
     pub fn new(engine: &Engine, artifact: &str, params: &ParamStore) -> Result<ArtifactBackend> {
-        let module = engine.module(artifact)?;
-        let spec = module.spec.clone();
-        let mc = engine.manifest.model(&spec.model)?;
-        let (batch, seq, vocab) = (mc.fwd_batch, mc.seq_len, mc.vocab);
-        let tok_idx = spec.input_index("tokens")?;
-        let zeros = vec![0i32; batch * seq];
-        let inputs = build_inputs(
-            &spec,
-            params,
-            &[("tokens", literal_i32(&spec.inputs[tok_idx].dims, &zeros)?)],
-        )?;
-        Ok(ArtifactBackend { module, inputs, tok_idx, batch, seq, vocab })
+        Ok(ArtifactBackend { inner: ArtifactForward::new(engine, artifact, params)? })
     }
 }
 
 impl DecodeBackend for ArtifactBackend {
     fn lanes(&self) -> usize {
-        self.batch
+        self.inner.batch()
     }
 
     fn seq_len(&self) -> usize {
-        self.seq
+        self.inner.seq_len()
     }
 
     fn admit(&mut self, _lane: usize, prompt: &[i32]) -> Result<()> {
-        ensure!(prompt.len() < self.seq, "prompt does not fit the context window");
-        check_tokens(prompt, self.vocab)?;
-        Ok(()) // stateless graph: the prefix is recomputed every step
+        // stateless graph: the prefix is recomputed every step, so
+        // admission is pure validation
+        self.inner.begin_decode(&[prompt])
     }
 
     fn evict(&mut self, _lane: usize) {}
 
     fn step(&mut self, lanes: &[Option<&[i32]>]) -> Result<Vec<Option<i32>>> {
-        ensure!(lanes.len() <= self.batch, "more lanes than the artifact batch");
-        let rows: Vec<&[i32]> = lanes.iter().map(|l| l.unwrap_or(&[])).collect();
-        let tokens = pack_rows(&rows, self.batch, self.seq);
-        let tok_spec = &self.module.spec.inputs[self.tok_idx];
-        self.inputs[self.tok_idx] = literal_i32(&tok_spec.dims, &tokens)?;
-        let out = self.module.run(&self.inputs)?;
-        let logits = to_f32_vec(&out[0])?;
-        let mut next = Vec::with_capacity(lanes.len());
-        for (r, lane) in lanes.iter().enumerate() {
-            next.push(match lane {
-                Some(toks) if !toks.is_empty() && toks.len() < self.seq => {
-                    let base = (r * self.seq + toks.len() - 1) * self.vocab;
-                    Some(argmax(&logits[base..base + self.vocab]) as i32)
-                }
-                _ => None,
-            });
-        }
-        Ok(next)
+        ensure!(lanes.len() <= self.inner.batch(), "more lanes than the artifact batch");
+        let logits = self.inner.step_logits(lanes)?;
+        Ok(logits.into_iter().map(|l| l.map(|lg| argmax(&lg) as i32)).collect())
     }
 }
 
@@ -120,181 +92,11 @@ impl DecodeBackend for ArtifactBackend {
 // HostBackend — incremental decode with an explicit quantized KV pool
 // ---------------------------------------------------------------------------
 
-/// Model + precision shape of the host decode path, decoupled from the
-/// artifact manifest so tests and benches run without built artifacts.
-#[derive(Clone, Debug)]
-pub struct HostCfg {
-    pub vocab: usize,
-    pub d_model: usize,
-    pub n_layers: usize,
-    pub n_heads: usize,
-    pub d_ff: usize,
-    pub seq_len: usize,
-    pub quantized: bool,
-    pub act_bits: u32,
-    pub act_dynamic: bool,
-    pub cache_bits: u32,
-    pub weight_bits: u32,
-    pub head_bits: u32,
-    pub query_bits: u32,
-    /// `rope_theta` from `python/compile/configs.py` (all current models
-    /// use the default; the manifest does not carry it)
-    pub rope_theta: f32,
-}
-
-impl HostCfg {
-    pub fn from_manifest(mc: &ModelCfg, pc: &PrecCfg) -> Result<HostCfg> {
-        ensure!(!pc.online_rot, "host decode does not implement the online-rotation ablation");
-        Ok(HostCfg {
-            vocab: mc.vocab,
-            d_model: mc.d_model,
-            n_layers: mc.n_layers,
-            n_heads: mc.n_heads,
-            d_ff: mc.d_ff,
-            seq_len: mc.seq_len,
-            quantized: pc.quantized,
-            act_bits: pc.act_bits,
-            act_dynamic: pc.act_dynamic,
-            cache_bits: pc.cache_bits,
-            weight_bits: pc.weight_bits,
-            head_bits: pc.head_bits,
-            query_bits: pc.query_bits,
-            rope_theta: 10000.0,
-        })
-    }
-
-    pub fn d_head(&self) -> usize {
-        self.d_model / self.n_heads
-    }
-}
-
-/// Build the `ArtifactSpec` a host-served model's `ParamStore` follows —
-/// the same ordered contract as `python/compile/model.py::param_spec`.
-pub fn host_param_spec(cfg: &HostCfg) -> ArtifactSpec {
-    let (l, d, f, v) = (cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.vocab);
-    let mut inputs: Vec<(String, Vec<usize>)> = vec![
-        ("embed".into(), vec![v, d]),
-        ("ln1".into(), vec![l, d]),
-        ("wq".into(), vec![l, d, d]),
-        ("wk".into(), vec![l, d, d]),
-        ("wv".into(), vec![l, d, d]),
-        ("wo".into(), vec![l, d, d]),
-        ("ln2".into(), vec![l, d]),
-        ("wg".into(), vec![l, d, f]),
-        ("wu".into(), vec![l, d, f]),
-        ("wd".into(), vec![l, f, d]),
-        ("ln_f".into(), vec![d]),
-        ("head".into(), vec![d, v]),
-    ];
-    if cfg.quantized {
-        for (n, dims) in [
-            ("sw_q", vec![l, d]),
-            ("sw_k", vec![l, d]),
-            ("sw_v", vec![l, d]),
-            ("sw_o", vec![l, d]),
-            ("sw_g", vec![l, f]),
-            ("sw_u", vec![l, f]),
-            ("sw_d", vec![l, d]),
-            ("sw_head", vec![v]),
-        ] {
-            inputs.push((n.into(), dims));
-        }
-        if !cfg.act_dynamic {
-            for (n, dims) in [
-                ("sa_x1", vec![l]),
-                ("sa_q", vec![l]),
-                ("sc_k", vec![l]),
-                ("sc_v", vec![l]),
-                ("sa_o", vec![l]),
-                ("sa_x2", vec![l]),
-                ("sa_d", vec![l]),
-                ("sa_head", vec![]),
-            ] {
-                inputs.push((n.into(), dims));
-            }
-        }
-    }
-    ArtifactSpec {
-        name: "host_fwd".into(),
-        file: String::new(),
-        model: "host".into(),
-        prec: if cfg.quantized { "quantized" } else { "fp16" }.into(),
-        mode: "fwd".into(),
-        inputs: inputs
-            .into_iter()
-            .map(|(n, dims)| TensorSpec { name: format!("params.{n}"), dtype: "f32".into(), dims })
-            .collect(),
-        outputs: vec![],
-    }
-}
-
-/// Deterministic randomly-initialized parameters following
-/// [`host_param_spec`] — the bootstrap the serve tests and benches share
-/// (an untrained model generates noise, but latency/identity properties
-/// don't care).
-pub fn host_test_params(cfg: &HostCfg, seed: u64) -> ParamStore {
-    let spec = host_param_spec(cfg);
-    // ParamStore::init keys its rules off parameter names alone; the
-    // ModelCfg is only part of the signature
-    let mc = ModelCfg {
-        name: "host".into(),
-        vocab: cfg.vocab,
-        d_model: cfg.d_model,
-        n_layers: cfg.n_layers,
-        n_heads: cfg.n_heads,
-        d_ff: cfg.d_ff,
-        seq_len: cfg.seq_len,
-        train_batch: 1,
-        fwd_batch: 1,
-        use_pallas: false,
-    };
-    let mut rng = crate::util::Rng::new(seed);
-    ParamStore::init(&spec, &mc, &mut rng)
-}
-
-/// Static (learned-scalar) activation steps per layer, when `act_dynamic`
-/// is off.
-struct StaticSteps {
-    sa_x1: Vec<f32>,
-    sa_q: Vec<f32>,
-    sa_o: Vec<f32>,
-    sa_x2: Vec<f32>,
-    sa_d: Vec<f32>,
-    sa_head: f32,
-}
-
-/// Per-layer weights with weight quantization folded in at construction
-/// (weights are static; per-output-channel fake quant is applied once).
-struct LayerWeights {
-    ln1: Vec<f32>,
-    wq: Vec<f32>,
-    wk: Vec<f32>,
-    wv: Vec<f32>,
-    wo: Vec<f32>,
-    ln2: Vec<f32>,
-    wg: Vec<f32>,
-    wu: Vec<f32>,
-    wd: Vec<f32>,
-}
-
-/// Incremental greedy decoder over a `ParamStore`, with the K/V cache
-/// resident in a [`KvPool`]. Pure host math — mirrors
-/// `python/compile/model.py::forward` site for site (sans online rotation).
+/// Incremental greedy decoder over a `ParamStore` (a [`HostForward`] in
+/// lane clothing): scheduler lanes map one-to-one onto the forward's cache
+/// rows.
 pub struct HostBackend {
-    pub cfg: HostCfg,
-    n_lanes: usize,
-    embed: Vec<f32>,
-    layers: Vec<LayerWeights>,
-    ln_f: Vec<f32>,
-    head: Vec<f32>,
-    sa: Option<StaticSteps>,
-    /// RoPE tables [seq, d_head/2]
-    cos: Vec<f32>,
-    sin: Vec<f32>,
-    pool: KvPool,
-    slot_of_lane: Vec<Option<usize>>,
-    /// tokens already folded into the cache, per lane
-    processed: Vec<usize>,
+    inner: HostForward,
 }
 
 impl HostBackend {
@@ -304,354 +106,50 @@ impl HostBackend {
         params: &ParamStore,
         store: CacheStore,
     ) -> Result<HostBackend> {
-        let (l, d, f, v) = (cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.vocab);
-        ensure!(d % cfg.n_heads == 0, "d_model must divide into heads");
-
-        let slice = |name: &str, layer: usize, per: usize| -> Result<Vec<f32>> {
-            let t = params.get(name)?;
-            ensure!(t.len() == l * per, "{name}: expected {} values, got {}", l * per, t.len());
-            Ok(t[layer * per..(layer + 1) * per].to_vec())
-        };
-
-        let mut layers = Vec::with_capacity(l);
-        for li in 0..l {
-            let mut w = LayerWeights {
-                ln1: slice("ln1", li, d)?,
-                wq: slice("wq", li, d * d)?,
-                wk: slice("wk", li, d * d)?,
-                wv: slice("wv", li, d * d)?,
-                wo: slice("wo", li, d * d)?,
-                ln2: slice("ln2", li, d)?,
-                wg: slice("wg", li, d * f)?,
-                wu: slice("wu", li, d * f)?,
-                wd: slice("wd", li, f * d)?,
-            };
-            if cfg.quantized {
-                let wb = cfg.weight_bits;
-                fake_quant_per_channel(&mut w.wq, d, &slice("sw_q", li, d)?, wb);
-                fake_quant_per_channel(&mut w.wk, d, &slice("sw_k", li, d)?, wb);
-                fake_quant_per_channel(&mut w.wv, d, &slice("sw_v", li, d)?, wb);
-                fake_quant_per_channel(&mut w.wo, d, &slice("sw_o", li, d)?, wb);
-                fake_quant_per_channel(&mut w.wg, f, &slice("sw_g", li, f)?, wb);
-                fake_quant_per_channel(&mut w.wu, f, &slice("sw_u", li, f)?, wb);
-                fake_quant_per_channel(&mut w.wd, d, &slice("sw_d", li, d)?, wb);
-            }
-            layers.push(w);
-        }
-
-        let mut head = params.get("head")?.to_vec();
-        if cfg.quantized {
-            fake_quant_per_channel(&mut head, v, params.get("sw_head")?, cfg.head_bits);
-        }
-
-        let sa = if cfg.quantized && !cfg.act_dynamic {
-            Some(StaticSteps {
-                sa_x1: params.get("sa_x1")?.to_vec(),
-                sa_q: params.get("sa_q")?.to_vec(),
-                sa_o: params.get("sa_o")?.to_vec(),
-                sa_x2: params.get("sa_x2")?.to_vec(),
-                sa_d: params.get("sa_d")?.to_vec(),
-                sa_head: params.get("sa_head")?[0],
-            })
-        } else {
-            None
-        };
-
-        // cache quantization rule: static steps come from the trained
-        // sc_k/sc_v scalars broadcast across channels; dynamic recomputes
-        // per head row on write (ste_dynamic_quantize's last-axis rule)
-        let rule = if !cfg.quantized {
-            QuantRule::None
-        } else if cfg.act_dynamic {
-            QuantRule::Dynamic { bits: cfg.cache_bits, rows: cfg.n_heads }
-        } else {
-            let bc = |name: &str| -> Result<Vec<f32>> {
-                let s = params.get(name)?;
-                ensure!(s.len() == l, "{name} must be one step per layer");
-                Ok(s.iter().flat_map(|&x| std::iter::repeat(x).take(d)).collect())
-            };
-            QuantRule::Static { bits: cfg.cache_bits, k_steps: bc("sc_k")?, v_steps: bc("sc_v")? }
-        };
-        let pool = KvPool::new(n_lanes, l, cfg.seq_len, d, store, rule)
-            .context("building serve KV pool")?;
-
-        // RoPE tables, as in model.py::rope_tables
-        let dh = cfg.d_head();
-        let half = dh / 2;
-        let mut cos = Vec::with_capacity(cfg.seq_len * half);
-        let mut sin = Vec::with_capacity(cfg.seq_len * half);
-        for p in 0..cfg.seq_len {
-            for i in 0..half {
-                let inv = 1.0 / cfg.rope_theta.powf(2.0 * i as f32 / dh as f32);
-                let ang = p as f32 * inv;
-                cos.push(ang.cos());
-                sin.push(ang.sin());
-            }
-        }
-
-        Ok(HostBackend {
-            embed: params.get("embed")?.to_vec(),
-            ln_f: params.get("ln_f")?.to_vec(),
-            head,
-            layers,
-            sa,
-            cos,
-            sin,
-            pool,
-            slot_of_lane: vec![None; n_lanes],
-            processed: vec![0; n_lanes],
-            n_lanes,
-            cfg,
-        })
-    }
-
-    /// Quantize one activation vector at a site (mirrors `act_quant`):
-    /// dynamic per-`rows` sub-row (`ste_dynamic_quantize`'s last-axis
-    /// rule), or a static learned step, or identity.
-    fn act_quant(&self, x: &mut [f32], bits: u32, static_step: Option<f32>, rows: usize) {
-        if !self.cfg.quantized {
-            return;
-        }
-        match static_step {
-            Some(s) => fake_quant(x, s, bits),
-            None => dynamic_quant_rows(x, x.len() / rows, bits),
-        }
-    }
-
-    /// Run one token through the stack; returns logits only when asked
-    /// (prefill positions skip the head matmul).
-    fn forward_token(&mut self, lane: usize, tok: i32, pos: usize, want_logits: bool) -> Result<Option<Vec<f32>>> {
-        let cfg = self.cfg.clone();
-        let (d, f, h, dh) = (cfg.d_model, cfg.d_ff, cfg.n_heads, cfg.d_head());
-        let half = dh / 2;
-        let slot = self.slot_of_lane[lane].context("lane has no cache slot")?;
-        ensure!(pos < cfg.seq_len, "position {pos} outside the context window");
-        ensure!((tok as usize) < cfg.vocab, "token {tok} outside the vocab");
-
-        let mut x = self.embed[tok as usize * d..(tok as usize + 1) * d].to_vec();
-        let mut k_cache = vec![0f32; (pos + 1) * d];
-        let mut v_cache = vec![0f32; (pos + 1) * d];
-
-        for li in 0..cfg.n_layers {
-            // copy this layer's static activation steps out so no borrow of
-            // `self.sa` is live across the mutable pool accesses below
-            let (sa_x1, sa_q, sa_o, sa_x2, sa_d) = match &self.sa {
-                Some(s) => (
-                    Some(s.sa_x1[li]),
-                    Some(s.sa_q[li]),
-                    Some(s.sa_o[li]),
-                    Some(s.sa_x2[li]),
-                    Some(s.sa_d[li]),
-                ),
-                None => (None, None, None, None, None),
-            };
-            let mut hnorm = rmsnorm(&x, &self.layers[li].ln1);
-            self.act_quant(&mut hnorm, cfg.act_bits, sa_x1, 1);
-            let lw = &self.layers[li];
-            let mut q = matvec(&hnorm, &lw.wq, d);
-            let mut k = matvec(&hnorm, &lw.wk, d);
-            let v = matvec(&hnorm, &lw.wv, d);
-
-            // RoPE at this position, per head (channel layout is head-major)
-            for head_i in 0..h {
-                for i in 0..half {
-                    let (c, s) = (self.cos[pos * half + i], self.sin[pos * half + i]);
-                    for t in [&mut q, &mut k] {
-                        let (a, b) = (t[head_i * dh + 2 * i], t[head_i * dh + 2 * i + 1]);
-                        t[head_i * dh + 2 * i] = a * c - b * s;
-                        t[head_i * dh + 2 * i + 1] = a * s + b * c;
-                    }
-                }
-            }
-
-            // INT16 query; K/V are quantized by the pool on write
-            self.act_quant(&mut q, cfg.query_bits, sa_q, h);
-            self.pool.write(slot, li, pos, &k, &v);
-            self.pool.read_into(slot, li, pos + 1, &mut k_cache, &mut v_cache)?;
-
-            // causal attention over the cached prefix
-            let mut ctx = vec![0f32; d];
-            let scale = 1.0 / (dh as f32).sqrt();
-            let mut scores = vec![0f32; pos + 1];
-            for head_i in 0..h {
-                let qh = &q[head_i * dh..(head_i + 1) * dh];
-                for (j, sc) in scores.iter_mut().enumerate() {
-                    let kh = &k_cache[j * d + head_i * dh..j * d + (head_i + 1) * dh];
-                    *sc = qh.iter().zip(kh).map(|(a, b)| a * b).sum::<f32>() * scale;
-                }
-                softmax_inplace(&mut scores);
-                let ch = &mut ctx[head_i * dh..(head_i + 1) * dh];
-                for (j, &p_j) in scores.iter().enumerate() {
-                    let vh = &v_cache[j * d + head_i * dh..j * d + (head_i + 1) * dh];
-                    for (cv, &vv) in ch.iter_mut().zip(vh) {
-                        *cv += p_j * vv;
-                    }
-                }
-            }
-
-            self.act_quant(&mut ctx, cfg.act_bits, sa_o, 1);
-            let o = matvec(&ctx, &self.layers[li].wo, d);
-            for (xv, ov) in x.iter_mut().zip(&o) {
-                *xv += ov;
-            }
-
-            let mut h2 = rmsnorm(&x, &self.layers[li].ln2);
-            self.act_quant(&mut h2, cfg.act_bits, sa_x2, 1);
-            let lw = &self.layers[li];
-            let g = matvec(&h2, &lw.wg, f);
-            let u = matvec(&h2, &lw.wu, f);
-            let mut a: Vec<f32> = g.iter().zip(&u).map(|(&gv, &uv)| silu(gv) * uv).collect();
-            self.act_quant(&mut a, cfg.act_bits, sa_d, 1);
-            let dn = matvec(&a, &self.layers[li].wd, d);
-            for (xv, dv) in x.iter_mut().zip(&dn) {
-                *xv += dv;
-            }
-        }
-
-        if !want_logits {
-            return Ok(None);
-        }
-        let mut hf = rmsnorm(&x, &self.ln_f);
-        self.act_quant(&mut hf, cfg.head_bits, self.sa.as_ref().map(|s| s.sa_head), 1);
-        Ok(Some(matvec(&hf, &self.head, cfg.vocab)))
+        Ok(HostBackend { inner: HostForward::new(cfg, n_lanes, params, store)? })
     }
 }
 
 impl DecodeBackend for HostBackend {
     fn lanes(&self) -> usize {
-        self.n_lanes
+        self.inner.batch()
     }
 
     fn seq_len(&self) -> usize {
-        self.cfg.seq_len
+        self.inner.seq_len()
     }
 
     fn admit(&mut self, lane: usize, prompt: &[i32]) -> Result<()> {
-        ensure!(self.slot_of_lane[lane].is_none(), "lane {lane} already occupied");
-        ensure!(!prompt.is_empty() && prompt.len() < self.cfg.seq_len, "bad prompt length");
-        // validate the WHOLE prompt here — a bad final token must be a
-        // per-request rejection, not an error out of the first step()
-        check_tokens(prompt, self.cfg.vocab)?;
-        let slot = self.pool.alloc().context("KV pool exhausted")?;
-        self.slot_of_lane[lane] = Some(slot);
-        // prefill everything but the last prompt token; the first step()
-        // folds that one in and emits the first generated token
-        for (pos, &tok) in prompt[..prompt.len() - 1].iter().enumerate() {
-            self.forward_token(lane, tok, pos, false)?;
-        }
-        self.processed[lane] = prompt.len() - 1;
-        Ok(())
+        self.inner.admit_row(lane, prompt)
     }
 
     fn evict(&mut self, lane: usize) {
-        if let Some(slot) = self.slot_of_lane[lane].take() {
-            self.pool.free(slot);
-        }
-        self.processed[lane] = 0;
+        self.inner.evict_row(lane);
     }
 
     fn step(&mut self, lanes: &[Option<&[i32]>]) -> Result<Vec<Option<i32>>> {
-        ensure!(lanes.len() <= self.n_lanes, "more lanes than configured");
+        ensure!(lanes.len() <= self.inner.batch(), "more lanes than configured");
         let mut next = Vec::with_capacity(lanes.len());
         for (lane, toks) in lanes.iter().enumerate() {
-            let Some(toks) = toks else {
-                next.push(None);
-                continue;
-            };
-            let pos = self.processed[lane];
-            ensure!(pos + 1 == toks.len(), "lane {lane}: cache holds {pos} tokens, lane has {}", toks.len());
-            if toks.len() >= self.cfg.seq_len {
-                next.push(None);
-                continue;
-            }
-            let logits = self
-                .forward_token(lane, toks[pos], pos, true)?
-                .expect("logits requested");
-            self.processed[lane] = pos + 1;
-            next.push(Some(argmax(&logits) as i32));
+            next.push(match toks {
+                Some(toks) if toks.len() < self.inner.seq_len() => {
+                    Some(argmax(&self.inner.step_row(lane, toks)?) as i32)
+                }
+                _ => None,
+            });
         }
         Ok(next)
     }
 
     fn kv_bytes(&self) -> usize {
-        // resident bytes of the in-use slots, in deployment format
-        if self.pool.slots == 0 {
-            return 0;
-        }
-        self.pool.storage_bytes() * self.pool.slots_in_use() / self.pool.slots
+        self.inner.kv_bytes()
     }
-}
-
-/// Admission-time validation shared by both backends.
-fn check_tokens(prompt: &[i32], vocab: usize) -> Result<()> {
-    for &t in prompt {
-        ensure!((t as usize) < vocab, "prompt token {t} outside the vocab (0..{vocab})");
-    }
-    Ok(())
-}
-
-fn rmsnorm(x: &[f32], g: &[f32]) -> Vec<f32> {
-    // model.py uses EPS=1e-6 inside rmsnorm (quant EPS is 1e-9)
-    let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
-    let r = 1.0 / (ms + 1e-6).sqrt();
-    x.iter().zip(g).map(|(&v, &gv)| v * gv * r).collect()
-}
-
-/// `out[o] = sum_i x[i] * w[i * out_dim + o]` — the `x @ W` layout of the
-/// row-major `[in, out]` weight matrices in the param contract.
-fn matvec(x: &[f32], w: &[f32], out_dim: usize) -> Vec<f32> {
-    debug_assert_eq!(x.len() * out_dim, w.len());
-    let mut out = vec![0f32; out_dim];
-    for (i, &xv) in x.iter().enumerate() {
-        if xv == 0.0 {
-            continue;
-        }
-        let row = &w[i * out_dim..(i + 1) * out_dim];
-        for (o, &wv) in out.iter_mut().zip(row) {
-            *o += xv * wv;
-        }
-    }
-    out
-}
-
-fn softmax_inplace(xs: &mut [f32]) {
-    let m = xs.iter().fold(f32::MIN, |a, &b| a.max(b));
-    let mut sum = 0f32;
-    for v in xs.iter_mut() {
-        *v = (*v - m).exp();
-        sum += *v;
-    }
-    for v in xs.iter_mut() {
-        *v /= sum;
-    }
-}
-
-fn silu(x: f32) -> f32 {
-    x / (1.0 + (-x).exp())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    pub fn tiny_host_cfg(quantized: bool, act_dynamic: bool) -> HostCfg {
-        HostCfg {
-            vocab: 256,
-            d_model: 32,
-            n_layers: 2,
-            n_heads: 4,
-            d_ff: 64,
-            seq_len: 16,
-            quantized,
-            act_bits: 8,
-            act_dynamic,
-            cache_bits: 8,
-            weight_bits: 4,
-            head_bits: 8,
-            query_bits: 16,
-            rope_theta: 10000.0,
-        }
-    }
+    use crate::hostmodel::{host_param_spec, host_test_params, tiny_host_cfg};
 
     fn backend(cfg: &HostCfg, lanes: usize, store: CacheStore, seed: u64) -> HostBackend {
         let params = host_test_params(cfg, seed);
@@ -704,5 +202,15 @@ mod tests {
         b.admit(0, &[1, 3, 4]).unwrap();
         let n = b.step(&[Some(&[1, 3, 4])]).unwrap();
         assert!(n[0].is_some());
+    }
+
+    #[test]
+    fn bad_prompt_is_rejected_at_admission() {
+        let cfg = tiny_host_cfg(true, true);
+        let mut b = backend(&cfg, 1, CacheStore::Int8, 9);
+        assert!(b.admit(0, &[]).is_err());
+        assert!(b.admit(0, &[1, 9999]).is_err());
+        // rejection leaves the lane free
+        b.admit(0, &[1, 3]).unwrap();
     }
 }

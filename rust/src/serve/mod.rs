@@ -10,10 +10,16 @@
 //!             DecodeBackend: ArtifactBackend (PJRT full-sequence)  (backend.rs)
 //!                            HostBackend (incremental + KvPool)
 //!                   |
-//!             KvPool: slab K/V cache, INT8 quantize-on-write      (kvpool.rs)
+//!             hostmodel::KvPool: slab K/V cache, INT8 quantize-on-write
 //!                   |
 //!             ServeStats: TTFT / tok/s / queue depth / occupancy  (stats.rs)
 //! ```
+//!
+//! The transformer forwards behind both backends live in
+//! [`crate::hostmodel`] (host quantized model + KV pool) and
+//! [`crate::forward`] (the shared `ForwardBackend` abstraction); this
+//! module only owns the serving mechanics — queueing, lane scheduling and
+//! latency accounting.
 //!
 //! The engine is deliberately network-free: in this offline environment the
 //! "clients" are load-generator threads (`silq serve` drives itself), but
@@ -21,15 +27,17 @@
 //! on top of.
 
 pub mod backend;
-pub mod kvpool;
 pub mod scheduler;
 pub mod session;
 pub mod stats;
 
-pub use backend::{ArtifactBackend, DecodeBackend, HostBackend, HostCfg};
-pub use kvpool::{CacheStore, KvPool, QuantRule};
+pub use backend::{ArtifactBackend, DecodeBackend, HostBackend};
 pub use scheduler::Scheduler;
 pub use stats::ServeStats;
+
+// the pool and host config moved to `hostmodel`; re-exported here because
+// they are part of the serve construction surface
+pub use crate::hostmodel::{CacheStore, HostCfg, KvPool, QuantRule};
 
 use anyhow::{bail, ensure, Result};
 use std::collections::VecDeque;

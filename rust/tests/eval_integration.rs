@@ -1,7 +1,10 @@
-//! Eval harness integration: scoring machinery sanity on real artifacts.
+//! Eval harness integration: scoring machinery sanity on real artifacts,
+//! plus the artifact-free host-backend path that runs in a bare checkout.
 
 use silq::data::{Suite, Vocab, World};
 use silq::evalharness::Evaluator;
+use silq::forward::{ArtifactForward, HostForward};
+use silq::hostmodel::{builtin_model, builtin_prec, host_test_params, CacheStore, HostCfg};
 use silq::runtime::Engine;
 use silq::train::init_model;
 
@@ -17,8 +20,9 @@ fn untrained_model_scores_near_chance() {
     let engine = Engine::new("artifacts").unwrap();
     let params = init_model(&engine, "tiny_fp16_fwd", 11).unwrap();
     let world = World::generate(Vocab::new(256), 5);
-    let ev = Evaluator::new(&engine, "tiny_fp16_fwd", false, 24).unwrap();
-    let r = ev.eval_suites(&params, &world, &[Suite::Csr], 1).unwrap();
+    let fwd = ArtifactForward::new(&engine, "tiny_fp16_fwd", &params).unwrap();
+    let mut ev = Evaluator::new(fwd, false, 24);
+    let r = ev.eval_suites(&world, &[Suite::Csr], 1).unwrap();
     // 8 CSR tasks with 2-4 choices: chance is 0.25-0.5; an untrained model
     // must sit in a broad band around it (not 0, not high)
     let avg = r.suite_avg(Suite::Csr);
@@ -32,9 +36,10 @@ fn generation_returns_requested_tokens() {
     }
     let engine = Engine::new("artifacts").unwrap();
     let params = init_model(&engine, "tiny_fp16_fwd", 12).unwrap();
-    let ev = Evaluator::new(&engine, "tiny_fp16_fwd", false, 4).unwrap();
+    let fwd = ArtifactForward::new(&engine, "tiny_fp16_fwd", &params).unwrap();
+    let mut ev = Evaluator::new(fwd, false, 4);
     let prompts = vec![vec![1i32, 40, 12, 41, 15], vec![1i32, 50, 12, 33, 15]];
-    let outs = ev.generate(&params, &prompts, 3).unwrap();
+    let outs = ev.generate(&prompts, 3).unwrap();
     assert_eq!(outs.len(), 2);
     assert!(outs.iter().all(|o| o.len() == 3));
     assert!(outs.iter().flatten().all(|&t| (0..256).contains(&t)));
@@ -48,10 +53,32 @@ fn report_covers_all_suites() {
     let engine = Engine::new("artifacts").unwrap();
     let params = init_model(&engine, "tiny_fp16_fwd", 13).unwrap();
     let world = World::generate(Vocab::new(256), 5);
-    let ev = Evaluator::new(&engine, "tiny_fp16_fwd", true, 8).unwrap();
-    let r = ev.eval_all(&params, &world, 2).unwrap();
+    let fwd = ArtifactForward::new(&engine, "tiny_fp16_fwd", &params).unwrap();
+    let mut ev = Evaluator::new(fwd, true, 8);
+    let r = ev.eval_all(&world, 2).unwrap();
     assert_eq!(r.per_task.len(), 20);
     assert_eq!(r.per_task.iter().filter(|(_, s, _)| *s == Suite::Csr).count(), 8);
     assert_eq!(r.per_task.iter().filter(|(_, s, _)| *s == Suite::OllmV1).count(), 6);
     assert_eq!(r.per_task.iter().filter(|(_, s, _)| *s == Suite::OllmV2).count(), 6);
+}
+
+/// The acceptance-criterion path: a full `EvalReport` out of the host
+/// backend with nothing compiled on disk — built-in configs describe the
+/// model, scoring runs the batched host forward, generation runs the
+/// incremental KV decode.
+#[test]
+fn host_backend_produces_full_report_without_artifacts() {
+    let mc = builtin_model("tiny").unwrap();
+    let pc = builtin_prec("a8d-c8-w4").unwrap();
+    let hc = HostCfg::from_cfgs(&mc, &pc).unwrap();
+    let params = host_test_params(&hc, 31);
+    let fwd = HostForward::new(hc, mc.fwd_batch, &params, CacheStore::Int8).unwrap();
+    let world = World::generate(Vocab::new(mc.vocab), 5);
+    let mut ev = Evaluator::new(fwd, false, 2);
+    let r = ev.eval_all(&world, 2).unwrap();
+    assert_eq!(r.per_task.len(), 20, "every registry task must be scored");
+    assert!(r.per_task.iter().all(|(_, _, a)| (0.0..=1.0).contains(a)));
+    // summary covers all three suites without panicking
+    let s = r.summary();
+    assert!(s.contains("CSR"));
 }

@@ -6,8 +6,9 @@
 
 use std::sync::Arc;
 
+use silq::forward::{decode_greedy, ForwardBackend, HostForward};
+use silq::hostmodel::host_test_params;
 use silq::model::ParamStore;
-use silq::serve::backend::host_test_params;
 use silq::serve::{
     serve_inline, AdmissionQueue, ArtifactBackend, CacheStore, DecodeBackend, GenRequest,
     HostBackend, HostCfg, Scheduler, ServeHandle, ServeStats,
@@ -96,6 +97,62 @@ fn int8_kv_pool_matches_f32_cache_token_for_token() {
                 a.id
             );
         }
+    }
+}
+
+/// The serve engine and the eval-style `ForwardBackend` decode driver are
+/// two fronts over the same hostmodel forward: the same prompts greedy-
+/// decoded through both must emit identical tokens.
+#[test]
+fn serve_engine_matches_forward_trait_decode() {
+    for store in [CacheStore::Int8, CacheStore::F32] {
+        let cfg = host_cfg(true);
+        let params = host_test_params(&cfg, 23);
+        let ps = prompts(4);
+
+        // (a) through the continuous-batching scheduler
+        let reqs = ps
+            .iter()
+            .enumerate()
+            .map(|(i, p)| GenRequest::new(i as u64, p.clone(), 5).ignore_eos())
+            .collect();
+        let serve_backend = HostBackend::new(cfg.clone(), 4, &params, store).unwrap();
+        let (mut served, _) = serve_inline(serve_backend, 4, reqs).unwrap();
+        served.sort_by_key(|r| r.id);
+
+        // (b) through the shared incremental decode driver
+        let mut fwd = HostForward::new(cfg, 4, &params, store).unwrap();
+        let views: Vec<&[i32]> = ps.iter().map(|p| p.as_slice()).collect();
+        let gen = decode_greedy(&mut fwd, &views, 5).unwrap();
+
+        for (r, g) in served.iter().zip(&gen) {
+            assert_eq!(
+                r.generated(),
+                &g[..],
+                "store {store:?}: serve engine diverged from the forward-trait driver"
+            );
+        }
+    }
+}
+
+/// Batched full-sequence scoring and incremental decode agree through the
+/// trait surface: the next token after a prefix is the argmax of the
+/// batched logits at the prefix's last position.
+#[test]
+fn batch_logits_agree_with_incremental_next_token() {
+    let cfg = host_cfg(false); // static steps: the trained-scalar cache mode
+    let params = host_test_params(&cfg, 29);
+    let mut fwd = HostForward::new(cfg, 2, &params, CacheStore::F32).unwrap();
+    let (s, v) = (fwd.seq_len(), fwd.vocab());
+    let ps = prompts(2);
+    let views: Vec<&[i32]> = ps.iter().map(|p| p.as_slice()).collect();
+
+    let logits = fwd.batch_logits(&views).unwrap();
+    let gen = decode_greedy(&mut fwd, &views, 1).unwrap();
+    for (r, p) in ps.iter().enumerate() {
+        let base = (r * s + p.len() - 1) * v;
+        let batch_next = silq::evalharness::decode::argmax(&logits[base..base + v]) as i32;
+        assert_eq!(gen[r][0], batch_next, "row {r}");
     }
 }
 

@@ -10,6 +10,9 @@ cargo build --release --offline
 echo "== cargo test -q =="
 cargo test -q --offline
 
+echo "== cargo clippy -D warnings =="
+cargo clippy --offline --all-targets -- -D warnings
+
 echo "== cargo fmt --check =="
 cargo fmt --check
 
