@@ -38,7 +38,7 @@ fn main() -> Result<()> {
     }
 
     log.note("[ptq] silq (QAT)...");
-    let mut qs = p.calibrated_quant_store(prec, &fp16, &stats, "quantile", "mse")?;
+    let mut qs = p.calibrated_quant_store(prec, &fp16, &stats)?;
     let tcfg = p.qat_cfg(qat_steps);
     p.qat(prec, &mut qs, &fp16, DataMix::Instruct { style: SftStyle::TuluSynth, dclm_ratio: 0.25 }, tcfg, &mut log, None)?;
     add("silq (QAT+KD)", &p.eval(prec, &qs, true)?);

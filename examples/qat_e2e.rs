@@ -39,7 +39,7 @@ fn main() -> Result<()> {
     log.note("[e2e] collecting calibration statistics (quantile + Gram)...");
     let stats = p.calib_stats(&fp16, 4)?;
     let prec = "a8d-c8-w4";
-    let mut qs = p.calibrated_quant_store(prec, &fp16, &stats, "quantile", "mse")?;
+    let mut qs = p.calibrated_quant_store(prec, &fp16, &stats)?;
 
     // ---- phase 4: SiLQ QAT with KD ----
     log.note("[e2e] QAT with knowledge distillation...");

@@ -41,7 +41,7 @@ fn main() -> Result<()> {
     let mut log = RunLog::ephemeral();
     log.note("calibrating quantizers (percentile + convex-MSE)...");
     let stats = p.calib_stats(&params, 2)?;
-    let qs = p.calibrated_quant_store("a8d-c8-w4", &params, &stats, "quantile", "mse")?;
+    let qs = p.calibrated_quant_store("a8d-c8-w4", &params, &stats)?;
 
     let mq = engine.module("tiny_a8d-c8-w4_fwd")?;
     let outq = mq.run(&build_inputs(&mq.spec, &qs, &[("tokens", literal_i32(&tok_spec.dims, &tokens)?)])?)?;

@@ -40,7 +40,7 @@ fn main() -> Result<()> {
             let mut log = RunLog::ephemeral();
             log.note("calibrating...");
             let stats = p.calib_stats(&fp16, 2)?;
-            p.calibrated_quant_store(prec, &fp16, &stats, "quantile", "mse")?
+            p.calibrated_quant_store(prec, &fp16, &stats)?
         }
     };
 

@@ -27,6 +27,37 @@ fn report(name: &str, ms: f64, extra: &str) {
     println!("{name:<44} {ms:>10.3} ms  {extra}");
 }
 
+/// One serve measurement as a JSON object (serde is unavailable offline;
+/// the fields are flat scalars so hand-rolled formatting is safe).
+fn bench_serve_entry(
+    label: &str,
+    backend: &str,
+    policy: &str,
+    stats: &silq::serve::ServeStats,
+) -> String {
+    let ttft = stats.ttft_mean_ms();
+    let ttft = if ttft.is_finite() { format!("{ttft:.3}") } else { "null".into() };
+    format!(
+        "  {{\"label\": \"{label}\", \"backend\": \"{backend}\", \"policy\": \"{policy}\", \
+         \"tok_per_s\": {:.2}, \"ttft_ms_mean\": {ttft}, \"wall_secs\": {:.4}, \
+         \"completed\": {}, \"occupancy\": {:.3}}}",
+        stats.tokens_per_sec(),
+        stats.wall_secs,
+        stats.completed,
+        stats.batch_occupancy(),
+    )
+}
+
+/// Machine-readable serve perf trajectory: benches run from `rust/`, so
+/// the JSON lands next to bench_output.txt at the repo root.
+fn write_bench_serve_json(entries: &[String]) {
+    let body = format!("[\n{}\n]\n", entries.join(",\n"));
+    match std::fs::write("../BENCH_serve.json", &body) {
+        Ok(()) => println!("(serve metrics -> BENCH_serve.json)"),
+        Err(e) => eprintln!("warning: could not write ../BENCH_serve.json: {e}"),
+    }
+}
+
 fn main() {
     println!("silq bench harness (warmup+avg wall-clock; CPU PJRT)");
 
@@ -90,13 +121,15 @@ fn main() {
 
     // ---------------- serve throughput (host backend) ---------------------
     // continuous-batching engine over the host incremental decoder; no
-    // artifacts needed, so this section always runs
+    // artifacts needed, so this section always runs. Each run also lands in
+    // BENCH_serve.json (repo root) so the perf trajectory is machine-
+    // readable across PRs.
     section("serve throughput (host backend, quantized KV pool)");
+    let mut serve_json: Vec<String> = vec![];
     {
         let cfg = HostCfg {
             vocab: 256, d_model: 64, n_layers: 2, n_heads: 4, d_ff: 128, seq_len: 48,
-            quantized: true, act_bits: 8, act_dynamic: true, cache_bits: 8,
-            weight_bits: 4, head_bits: 8, query_bits: 16, rope_theta: 10000.0,
+            policy: "w4a8kv8".parse().expect("policy spec"), rope_theta: 10000.0,
         };
         let params = host_test_params(&cfg, 9);
         for (label, store) in
@@ -114,6 +147,7 @@ fn main() {
                 "({:.0} tok/s, occ {:.0}%, {} reqs)",
                 stats.tokens_per_sec(), 100.0 * stats.batch_occupancy(), results.len()
             ));
+            serve_json.push(bench_serve_entry(label, "host", "w4a8kv8", &stats));
         }
     }
 
@@ -127,8 +161,7 @@ fn main() {
     {
         let cfg = HostCfg {
             vocab: 256, d_model: 64, n_layers: 2, n_heads: 4, d_ff: 128, seq_len: 96,
-            quantized: true, act_bits: 8, act_dynamic: true, cache_bits: 8,
-            weight_bits: 4, head_bits: 8, query_bits: 16, rope_theta: 10000.0,
+            policy: "w4a8kv8".parse().expect("policy spec"), rope_theta: 10000.0,
         };
         let params = host_test_params(&cfg, 21);
         let model = HostModel::new(cfg.clone(), &params).expect("model");
@@ -160,6 +193,7 @@ fn main() {
 
     // ---------------- PJRT execution (every experiment) ------------------
     if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        write_bench_serve_json(&serve_json);
         println!("\nartifacts not built; skipping PJRT benches (run `make artifacts`)");
         return;
     }
@@ -201,6 +235,9 @@ fn main() {
             "({:.0} tok/s, occ {:.0}%, {} reqs)",
             stats.tokens_per_sec(), 100.0 * stats.batch_occupancy(), results.len()
         ));
+        serve_json.push(bench_serve_entry(
+            "serve 16 reqs x4 tok via PJRT fwd", "artifact", "w4a8kv8", &stats,
+        ));
     }
 
     // train step (the QAT hot path — Table 1/2/3/4 inner loop)
@@ -233,5 +270,6 @@ fn main() {
         report(&format!("train_step {art}"), ms, &format!("({:.0} tok/s)", batch_tokens as f64 / ms * 1e3));
     }
 
+    write_bench_serve_json(&serve_json);
     println!("\nbench harness done");
 }

@@ -27,6 +27,10 @@ pub struct ModelCfg {
 }
 
 /// Quantization placement mirrored from `python/compile/configs.py`.
+///
+/// This is the wire form only — every in-process precision decision goes
+/// through the typed [`crate::policy::QuantPolicy`] this parses into (see
+/// [`PrecCfg::policy`]); `Manifest::parse` validates each entry against it.
 #[derive(Clone, Debug)]
 pub struct PrecCfg {
     pub name: String,
@@ -38,6 +42,13 @@ pub struct PrecCfg {
     pub head_bits: u32,
     pub query_bits: u32,
     pub online_rot: bool,
+}
+
+impl PrecCfg {
+    /// Lift into the typed policy (lossless; see `QuantPolicy::from_prec`).
+    pub fn policy(&self) -> Result<crate::policy::QuantPolicy> {
+        crate::policy::QuantPolicy::from_prec(self)
+    }
 }
 
 /// One tensor in an artifact signature.
@@ -160,20 +171,21 @@ impl Manifest {
                 }
                 "prec" => {
                     let name = rest.first().ok_or_else(|| anyhow!("line {lineno}: prec name"))?;
-                    m.precs.insert(
-                        name.to_string(),
-                        PrecCfg {
-                            name: name.to_string(),
-                            quantized: get(&kv, "quantized")? == "1",
-                            act_bits: get(&kv, "act_bits")?.parse()?,
-                            act_dynamic: get(&kv, "act_dynamic")? == "1",
-                            cache_bits: get(&kv, "cache_bits")?.parse()?,
-                            weight_bits: get(&kv, "weight_bits")?.parse()?,
-                            head_bits: get(&kv, "head_bits")?.parse()?,
-                            query_bits: get(&kv, "query_bits")?.parse()?,
-                            online_rot: get(&kv, "online_rot")? == "1",
-                        },
-                    );
+                    let pc = PrecCfg {
+                        name: name.to_string(),
+                        quantized: get(&kv, "quantized")? == "1",
+                        act_bits: get(&kv, "act_bits")?.parse()?,
+                        act_dynamic: get(&kv, "act_dynamic")? == "1",
+                        cache_bits: get(&kv, "cache_bits")?.parse()?,
+                        weight_bits: get(&kv, "weight_bits")?.parse()?,
+                        head_bits: get(&kv, "head_bits")?.parse()?,
+                        query_bits: get(&kv, "query_bits")?.parse()?,
+                        online_rot: get(&kv, "online_rot")? == "1",
+                    };
+                    // a manifest precision the typed policy layer rejects
+                    // must fail at parse time, not deep inside a run
+                    pc.policy().with_context(|| format!("line {lineno}: invalid precision {name}"))?;
+                    m.precs.insert(name.to_string(), pc);
                 }
                 "artifact" => {
                     let name = rest.first().ok_or_else(|| anyhow!("line {lineno}: artifact name"))?;
@@ -279,6 +291,20 @@ endartifact
     fn rejects_garbage() {
         assert!(Manifest::parse("bogus line", PathBuf::new()).is_err());
         assert!(Manifest::parse("in x f32 2", PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn prec_lines_validate_against_the_policy_layer() {
+        // cache bits past the INT8 slab envelope must fail at parse time
+        let bad = "prec weird quantized=1 act_bits=8 act_dynamic=1 cache_bits=32 \
+                   weight_bits=4 head_bits=8 query_bits=16 online_rot=0";
+        assert!(Manifest::parse(bad, PathBuf::new()).is_err());
+        // the sample's fp16 precision lifts into a policy and lowers back
+        // without loss
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        let pc = &m.precs["fp16"];
+        let back = pc.policy().unwrap().to_prec(&pc.name).unwrap();
+        assert_eq!(format!("{pc:?}"), format!("{back:?}"));
     }
 
     #[test]

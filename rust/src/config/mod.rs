@@ -4,7 +4,11 @@
 
 pub mod manifest;
 
+use anyhow::{anyhow, Result};
+
 pub use manifest::{ArtifactSpec, Manifest, ModelCfg, PrecCfg, TensorSpec};
+
+use crate::policy::CalibMethod;
 
 /// Training hyper-parameters (paper Appendix B defaults).
 #[derive(Clone, Debug)]
@@ -28,10 +32,10 @@ pub struct TrainCfg {
     pub eval_every: usize,
     /// calibration batches (paper: 5 x 128 samples; scaled down here)
     pub calib_batches: usize,
-    /// activation calibration: "quantile" (paper) or "max" (ablation)
-    pub act_calib: String,
-    /// weight calibration: "mse" (paper Eq. 2) or "lsq" (LSQ-paper init)
-    pub wgt_calib: String,
+    /// activation calibration: `Quantile` (paper) or `Max` (ablation)
+    pub act_calib: CalibMethod,
+    /// weight calibration: `Mse` (paper Eq. 2) or `Lsq` (LSQ-paper init)
+    pub wgt_calib: CalibMethod,
 }
 
 impl Default for TrainCfg {
@@ -49,33 +53,43 @@ impl Default for TrainCfg {
             seed: 0,
             eval_every: 0,
             calib_batches: 4,
-            act_calib: "quantile".into(),
-            wgt_calib: "mse".into(),
+            act_calib: CalibMethod::Quantile,
+            wgt_calib: CalibMethod::Mse,
         }
     }
 }
 
+/// Parse a numeric override value, naming the key in the error.
+fn num<T: std::str::FromStr>(key: &str, value: &str) -> Result<T>
+where
+    T::Err: std::fmt::Display,
+{
+    value.parse().map_err(|e| anyhow!("{key}={value}: {e}"))
+}
+
 impl TrainCfg {
-    /// Apply a `key=value` override; returns false for unknown keys.
-    pub fn set(&mut self, key: &str, value: &str) -> bool {
+    /// Apply a `key=value` override. `Ok(false)` means the key is not a
+    /// training hyper-parameter; a known key with an unparseable value is
+    /// a hard error naming the key (never silently kept at its default).
+    pub fn set(&mut self, key: &str, value: &str) -> Result<bool> {
         match key {
-            "base_lr" => self.base_lr = value.parse().unwrap_or(self.base_lr),
-            "ref_steps" => self.ref_steps = value.parse().unwrap_or(self.ref_steps),
-            "steps" => self.steps = value.parse().unwrap_or(self.steps),
-            "weight_decay" => self.weight_decay = value.parse().unwrap_or(self.weight_decay),
-            "act_lrx" => self.act_lrx = value.parse().unwrap_or(self.act_lrx),
-            "kd_ratio" => self.kd_ratio = value.parse().unwrap_or(self.kd_ratio),
-            "kd_temp" => self.kd_temp = value.parse().unwrap_or(self.kd_temp),
-            "dclm_ratio" => self.dclm_ratio = value.parse().unwrap_or(self.dclm_ratio),
-            "min_lr_frac" => self.min_lr_frac = value.parse().unwrap_or(self.min_lr_frac),
-            "seed" => self.seed = value.parse().unwrap_or(self.seed),
-            "eval_every" => self.eval_every = value.parse().unwrap_or(self.eval_every),
-            "calib_batches" => self.calib_batches = value.parse().unwrap_or(self.calib_batches),
-            "act_calib" => self.act_calib = value.into(),
-            "wgt_calib" => self.wgt_calib = value.into(),
-            _ => return false,
+            "base_lr" => self.base_lr = num(key, value)?,
+            "ref_steps" => self.ref_steps = num(key, value)?,
+            "steps" => self.steps = num(key, value)?,
+            "weight_decay" => self.weight_decay = num(key, value)?,
+            "act_lrx" => self.act_lrx = num(key, value)?,
+            "kd_ratio" => self.kd_ratio = num(key, value)?,
+            "kd_temp" => self.kd_temp = num(key, value)?,
+            "dclm_ratio" => self.dclm_ratio = num(key, value)?,
+            "min_lr_frac" => self.min_lr_frac = num(key, value)?,
+            "seed" => self.seed = num(key, value)?,
+            "eval_every" => self.eval_every = num(key, value)?,
+            "calib_batches" => self.calib_batches = num(key, value)?,
+            "act_calib" => self.act_calib = CalibMethod::parse_act(value)?,
+            "wgt_calib" => self.wgt_calib = CalibMethod::parse_weight(value)?,
+            _ => return Ok(false),
         }
-        true
+        Ok(true)
     }
 
     /// The paper's LR transfer rule (Appendix B / power scheduler): when the
@@ -115,11 +129,25 @@ mod tests {
     #[test]
     fn set_overrides() {
         let mut c = TrainCfg::default();
-        assert!(c.set("steps", "100"));
-        assert!(c.set("kd_ratio", "0.5"));
-        assert!(!c.set("nope", "1"));
+        assert!(c.set("steps", "100").unwrap());
+        assert!(c.set("kd_ratio", "0.5").unwrap());
+        assert!(!c.set("nope", "1").unwrap());
         assert_eq!(c.steps, 100);
         assert_eq!(c.kd_ratio, 0.5);
+    }
+
+    #[test]
+    fn set_rejects_bad_values_for_known_keys() {
+        let mut c = TrainCfg::default();
+        let e = c.set("steps", "notanumber").unwrap_err().to_string();
+        assert!(e.contains("steps"), "error must name the key: {e}");
+        assert_eq!(c.steps, TrainCfg::default().steps, "value must be untouched");
+        assert!(c.set("act_calib", "bogus").is_err());
+        assert!(c.set("wgt_calib", "quantile").is_err(), "quantile is act-side only");
+        assert!(c.set("act_calib", "max").unwrap());
+        assert!(c.set("wgt_calib", "lsq").unwrap());
+        assert_eq!(c.act_calib, CalibMethod::Max);
+        assert_eq!(c.wgt_calib, CalibMethod::Lsq);
     }
 
     #[test]

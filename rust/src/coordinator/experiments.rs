@@ -8,6 +8,7 @@ use std::io::Write;
 use crate::data::{DataMix, SftStyle, Suite};
 use crate::evalharness::EvalReport;
 use crate::metrics::{pct, RunLog, Table};
+use crate::policy::CalibMethod;
 use crate::runtime::Engine;
 use crate::train::llm_qat;
 use crate::util::Timer;
@@ -74,7 +75,7 @@ fn table1(engine: &Engine, cfg: PipelineCfg) -> Result<()> {
         for prec in precs {
             for method in ["smoothquant", "spinquant", "silq"] {
                 let report = if method == "silq" {
-                    let mut qs = p.calibrated_quant_store(prec, &fp16, &stats, "quantile", "mse")?;
+                    let mut qs = p.calibrated_quant_store(prec, &fp16, &stats)?;
                     let mut tcfg = p.qat_cfg(p.cfg.qat_steps);
                     tcfg.seed = p.cfg.seed;
                     let mix = if chat {
@@ -124,7 +125,7 @@ fn fig1(engine: &Engine, cfg: PipelineCfg) -> Result<()> {
 
     // one long QAT run, evaluated at checkpoints (like the paper's curve)
     let steps_grid = [p.cfg.qat_steps / 8, p.cfg.qat_steps / 4, p.cfg.qat_steps / 2, p.cfg.qat_steps];
-    let mut qs = p.calibrated_quant_store(prec, &fp16, &stats, "quantile", "mse")?;
+    let mut qs = p.calibrated_quant_store(prec, &fp16, &stats)?;
     let mut tcfg = p.qat_cfg(p.cfg.qat_steps);
     tcfg.eval_every = (p.cfg.qat_steps / 8).max(1);
     let mut rows: Vec<(usize, EvalReport)> = vec![];
@@ -175,7 +176,7 @@ fn table2(engine: &Engine, cfg: PipelineCfg) -> Result<()> {
         &mut gen_backend, n_samples, mc.seq_len - 1, 3, 1.0, p.cfg.seed,
     )?;
     drop(gen_backend);
-    let mut qs = p.calibrated_quant_store(prec, &fp16, &stats, "quantile", "mse")?;
+    let mut qs = p.calibrated_quant_store(prec, &fp16, &stats)?;
     let tcfg = p.qat_cfg(steps);
     let st = p.qat(prec, &mut qs, &fp16, DataMix::Fixed(docs), tcfg.clone(), &mut log, None)?;
     let r_llmqat = p.eval(prec, &qs, false)?;
@@ -190,7 +191,7 @@ fn table2(engine: &Engine, cfg: PipelineCfg) -> Result<()> {
 
     // SiLQ on the open corpus, same samples
     let silq_t = Timer::start();
-    let mut qs2 = p.calibrated_quant_store(prec, &fp16, &stats, "quantile", "mse")?;
+    let mut qs2 = p.calibrated_quant_store(prec, &fp16, &stats)?;
     p.qat(prec, &mut qs2, &fp16, DataMix::Corpus, tcfg, &mut log, None)?;
     let r_silq = p.eval(prec, &qs2, false)?;
     let c = report_cells(&r_silq);
@@ -204,7 +205,7 @@ fn table2(engine: &Engine, cfg: PipelineCfg) -> Result<()> {
     // SiLQ given the baseline's *total* wall-clock (gen time converted to
     // extra training steps) — the paper's last row
     let tcfg2 = p.qat_cfg(steps * 3);
-    let mut qs3 = p.calibrated_quant_store(prec, &fp16, &stats, "quantile", "mse")?;
+    let mut qs3 = p.calibrated_quant_store(prec, &fp16, &stats)?;
     let st3 = p.qat(prec, &mut qs3, &fp16, DataMix::Corpus, tcfg2, &mut log, None)?;
     let r3 = p.eval(prec, &qs3, false)?;
     let c = report_cells(&r3);
@@ -228,7 +229,7 @@ fn table3(engine: &Engine, cfg: PipelineCfg) -> Result<()> {
     let fp16 = p.instruct_model(SftStyle::Original, "instruct-orig", &mut log)?;
     let stats = p.calib_stats(&fp16, 4)?;
     for (tag, style) in [("Original", SftStyle::Original), ("Tulu3-synth", SftStyle::TuluSynth)] {
-        let mut qs = p.calibrated_quant_store(prec, &fp16, &stats, "quantile", "mse")?;
+        let mut qs = p.calibrated_quant_store(prec, &fp16, &stats)?;
         let tcfg = p.qat_cfg(p.cfg.qat_steps);
         p.qat(prec, &mut qs, &fp16, DataMix::Instruct { style, dclm_ratio: 0.25 }, tcfg, &mut log, None)?;
         let r = p.eval(prec, &qs, true)?;
@@ -251,11 +252,11 @@ fn table4(engine: &Engine, cfg: PipelineCfg) -> Result<()> {
         kd_temp: f32,
         dclm: f32,
         act_lrx: f32,
-        act_calib: &'static str,
-        wgt_calib: &'static str,
+        act_calib: CalibMethod,
+        wgt_calib: CalibMethod,
         prec: &'static str,
     }
-    let b = Abl { name: "baseline", kd_ratio: 1.0, kd_temp: 1.0, dclm: 0.25, act_lrx: 50.0, act_calib: "quantile", wgt_calib: "mse", prec: "a8s-c8-w4" };
+    let b = Abl { name: "baseline", kd_ratio: 1.0, kd_temp: 1.0, dclm: 0.25, act_lrx: 50.0, act_calib: CalibMethod::Quantile, wgt_calib: CalibMethod::Mse, prec: "a8s-c8-w4" };
     let abls = vec![
         Abl { name: "kd_ratio=0 (pure NTP)", kd_ratio: 0.0, ..cfgcopy(&b) },
         Abl { name: "kd_ratio=0.5", kd_ratio: 0.5, ..cfgcopy(&b) },
@@ -264,8 +265,8 @@ fn table4(engine: &Engine, cfg: PipelineCfg) -> Result<()> {
         Abl { name: "dclm=0.0", dclm: 0.0, ..cfgcopy(&b) },
         Abl { name: "dclm=0.5", dclm: 0.5, ..cfgcopy(&b) },
         Abl { name: "act_lrx=1", act_lrx: 1.0, ..cfgcopy(&b) },
-        Abl { name: "act_calib=max", act_calib: "max", ..cfgcopy(&b) },
-        Abl { name: "wgt_calib=lsq", wgt_calib: "lsq", ..cfgcopy(&b) },
+        Abl { name: "act_calib=max", act_calib: CalibMethod::Max, ..cfgcopy(&b) },
+        Abl { name: "wgt_calib=lsq", wgt_calib: CalibMethod::Lsq, ..cfgcopy(&b) },
         Abl { name: "online_rot=yes", prec: "a8d-c8-w4-rot", ..cfgcopy(&b) },
     ];
     fn cfgcopy(b: &Abl) -> Abl {
@@ -274,7 +275,7 @@ fn table4(engine: &Engine, cfg: PipelineCfg) -> Result<()> {
 
     let mut t = Table::new(&["config", "OLLMv1", "OLLMv2"]);
     let run_one = |a: &Abl, log: &mut RunLog| -> Result<(f32, f32)> {
-        let mut qs = p.calibrated_quant_store(a.prec, &fp16, &stats, a.act_calib, a.wgt_calib)?;
+        let mut qs = p.calibrated_quant_store_with(a.prec, &fp16, &stats, a.act_calib, a.wgt_calib)?;
         let mut tcfg = p.qat_cfg(p.cfg.qat_steps);
         tcfg.kd_ratio = a.kd_ratio;
         tcfg.kd_temp = a.kd_temp;
@@ -302,9 +303,10 @@ fn fig2(engine: &Engine, cfg: PipelineCfg) -> Result<()> {
     let mut out = String::new();
     for prec in ["a8d-c8-w4", "a8s-c8-w4", "a8d-c4-w4"] {
         let pc = engine.manifest.prec(prec)?;
+        let spec = pc.policy()?;
         let d = if pc.act_dynamic { "dynamic/token" } else { "static/tensor (LSQ)" };
         out += &format!(
-            "[{prec}]\n  embedding            : fp16\n  linear inputs (acts) : INT{} {d}\n  query / softmax-out  : INT{} / unquantized-in-training\n  KV cache             : INT{}\n  linear weights       : INT{} per-output-channel (LSQ)\n  head (in/weights)    : INT{}\n  online Hadamard      : {}\n\n",
+            "[{prec}] (spec {spec})\n  embedding            : fp16\n  linear inputs (acts) : INT{} {d}\n  query / softmax-out  : INT{} / unquantized-in-training\n  KV cache             : INT{}\n  linear weights       : INT{} per-output-channel (LSQ)\n  head (in/weights)    : INT{}\n  online Hadamard      : {}\n\n",
             pc.act_bits, pc.query_bits, pc.cache_bits, pc.weight_bits, pc.head_bits,
             if pc.online_rot { "yes" } else { "no" },
         );
@@ -329,7 +331,7 @@ fn fig3(engine: &Engine, cfg: PipelineCfg) -> Result<()> {
     let spin_split = crate::analysis::analyze_rotation(&folded, &spin, &mc)?;
 
     // SiLQ QAT
-    let mut qs = p.calibrated_quant_store(prec, &fp16, &stats, "quantile", "mse")?;
+    let mut qs = p.calibrated_quant_store(prec, &fp16, &stats)?;
     let before = qs.clone();
     let tcfg = p.qat_cfg(p.cfg.qat_steps);
     p.qat(prec, &mut qs, &fp16, DataMix::Instruct { style: SftStyle::TuluSynth, dclm_ratio: 0.25 }, tcfg, &mut log, None)?;

@@ -8,9 +8,10 @@ use crate::config::TrainCfg;
 use crate::data::{DataMix, SftStyle, Vocab, World};
 use crate::evalharness::{EvalReport, Evaluator};
 use crate::forward::{ArtifactForward, ForwardBackend, HostForward};
-use crate::hostmodel::HostCfg;
+use crate::hostmodel::{CacheStore, HostCfg};
 use crate::metrics::RunLog;
 use crate::model::ParamStore;
+use crate::policy::{CalibMethod, QuantPolicy};
 use crate::ptq;
 use crate::runtime::Engine;
 use crate::train::calibrate::{calibrate_act_steps, calibrate_weight_steps, collect_stats, CalibStats};
@@ -176,19 +177,49 @@ impl<'e> Pipeline<'e> {
         )
     }
 
-    /// Build + calibrate a quantized store from fp16 weights (SiLQ init).
+    /// Build + calibrate a quantized store from fp16 weights (SiLQ init)
+    /// with the manifest precision's default calibrations.
     pub fn calibrated_quant_store(
         &self,
         prec: &str,
         fp16: &ParamStore,
         stats: &CalibStats,
-        act_calib: &str,
-        wgt_calib: &str,
     ) -> Result<ParamStore> {
-        let pc = self.engine.manifest.prec(prec)?.clone();
+        let policy = self.engine.manifest.prec(prec)?.policy()?;
+        self.calibrated_store_for_policy(prec, fp16, stats, &policy)
+    }
+
+    /// Like [`Pipeline::calibrated_quant_store`] but with explicit
+    /// calibration overrides (the Table-4 ablation knobs).
+    pub fn calibrated_quant_store_with(
+        &self,
+        prec: &str,
+        fp16: &ParamStore,
+        stats: &CalibStats,
+        act_calib: CalibMethod,
+        wgt_calib: CalibMethod,
+    ) -> Result<ParamStore> {
+        let policy = self
+            .engine
+            .manifest
+            .prec(prec)?
+            .policy()?
+            .with_act_calib(act_calib)
+            .with_weight_calib(wgt_calib);
+        policy.validate()?;
+        self.calibrated_store_for_policy(prec, fp16, stats, &policy)
+    }
+
+    fn calibrated_store_for_policy(
+        &self,
+        prec: &str,
+        fp16: &ParamStore,
+        stats: &CalibStats,
+        policy: &QuantPolicy,
+    ) -> Result<ParamStore> {
         let mut qs = quantize_store(self.engine, &self.art(prec, "fwd"), fp16)?;
-        calibrate_act_steps(&mut qs, &pc, stats, act_calib == "max")?;
-        calibrate_weight_steps(&mut qs, &pc, wgt_calib)?;
+        calibrate_act_steps(&mut qs, policy, stats)?;
+        calibrate_weight_steps(&mut qs, policy)?;
         Ok(qs)
     }
 
@@ -216,14 +247,14 @@ impl<'e> Pipeline<'e> {
 
     /// Bind `params` to the forward backend selected by
     /// `PipelineCfg::backend` — the compiled artifact, or the artifact-free
-    /// host transformer (quantized precisions keep their KV cache in the
-    /// deployment INT8 representation, via `hostmodel::cache_store_for`).
+    /// host transformer (quantized policies keep their KV cache in the
+    /// deployment INT8 representation, via `CacheStore::for_policy`).
     pub fn forward(&self, prec: &str, params: &ParamStore) -> Result<Box<dyn ForwardBackend>> {
-        let pc = self.engine.manifest.prec(prec)?.clone();
+        let policy = self.engine.manifest.prec(prec)?.policy()?;
         // the host forward has no online-rotation implementation; rot
         // precisions (Table 4 ablation) stay on the compiled graph rather
         // than aborting a half-finished experiment at eval time
-        if self.cfg.backend == BackendKind::Artifact || pc.online_rot {
+        if self.cfg.backend == BackendKind::Artifact || policy.online_rot {
             return Ok(Box::new(ArtifactForward::new(
                 self.engine,
                 &self.art(prec, "fwd"),
@@ -231,8 +262,8 @@ impl<'e> Pipeline<'e> {
             )?));
         }
         let mc = self.engine.manifest.model(&self.cfg.model)?.clone();
-        let hc = HostCfg::from_cfgs(&mc, &pc)?;
-        let store = crate::hostmodel::cache_store_for(&pc);
+        let hc = HostCfg::from_policy(&mc, &policy)?;
+        let store = CacheStore::for_policy(&policy);
         Ok(Box::new(HostForward::new(hc, mc.fwd_batch, params, store)?))
     }
 
@@ -255,15 +286,15 @@ impl<'e> Pipeline<'e> {
         fp16: &ParamStore,
         stats: &CalibStats,
     ) -> Result<ParamStore> {
-        let pc = self.engine.manifest.prec(prec)?.clone();
+        let policy = self.engine.manifest.prec(prec)?.policy()?;
         let mc = self.engine.manifest.model(&self.cfg.model)?.clone();
         let mut qs = quantize_store(self.engine, &self.art(prec, "fwd"), fp16)?;
-        calibrate_act_steps(&mut qs, &pc, stats, false)?;
+        calibrate_act_steps(&mut qs, &policy, stats)?;
         match method {
-            "rtn" => ptq::rtn(&mut qs, &pc)?,
-            "smoothquant" => ptq::smoothquant(&mut qs, &mc, &pc, stats, 0.4)?,
-            "gptq" => ptq::gptq(&mut qs, &mc, &pc, stats)?,
-            "spinquant" => ptq::spinquant(&mut qs, &mc, &pc, stats, 3, self.cfg.seed)?,
+            "rtn" => ptq::rtn(&mut qs, &policy)?,
+            "smoothquant" => ptq::smoothquant(&mut qs, &mc, &policy, stats, 0.4)?,
+            "gptq" => ptq::gptq(&mut qs, &mc, &policy, stats)?,
+            "spinquant" => ptq::spinquant(&mut qs, &mc, &policy, stats, 3, self.cfg.seed)?,
             other => anyhow::bail!("unknown ptq method {other}"),
         }
         // weight changes (smoothquant/rotation) shift activation ranges:

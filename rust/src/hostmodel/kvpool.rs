@@ -78,6 +78,30 @@ pub enum CacheStore {
     Int8,
 }
 
+impl CacheStore {
+    /// The store a policy serves with: quantized policies keep the K/V
+    /// cache in the deployment INT8 representation, fp16 keeps f32. One
+    /// rule shared by every host entry point (pipeline eval, `silq eval
+    /// --backend host`, `silq serve`) so their outputs stay comparable.
+    pub fn for_policy(policy: &crate::policy::QuantPolicy) -> CacheStore {
+        if policy.quantized {
+            CacheStore::Int8
+        } else {
+            CacheStore::F32
+        }
+    }
+
+    /// Parse a `--cache` flag value; unknown values are a hard error
+    /// naming the accepted set (never silently coerced to a store).
+    pub fn parse(s: &str) -> Result<CacheStore> {
+        match s {
+            "int8" => Ok(CacheStore::Int8),
+            "f32" => Ok(CacheStore::F32),
+            other => bail!("unknown cache store {other:?} (accepted: int8|f32)"),
+        }
+    }
+}
+
 /// Slab pool: `slots` sessions x `layers` x `seq` positions x `dim` channels
 /// for K and V each.
 pub struct KvPool {
@@ -418,6 +442,17 @@ mod tests {
         let pf = KvPool::new(4, 2, 8, 16, CacheStore::F32, rule.clone()).unwrap();
         let pi = KvPool::new(4, 2, 8, 16, CacheStore::Int8, rule).unwrap();
         assert!(pi.storage_bytes() * 2 < pf.storage_bytes());
+    }
+
+    #[test]
+    fn cache_store_parse_and_policy_rule() {
+        use crate::policy::QuantPolicy;
+        assert_eq!(CacheStore::parse("int8").unwrap(), CacheStore::Int8);
+        assert_eq!(CacheStore::parse("f32").unwrap(), CacheStore::F32);
+        let e = CacheStore::parse("fp8").unwrap_err().to_string();
+        assert!(e.contains("int8|f32"), "error must list the accepted set: {e}");
+        assert_eq!(CacheStore::for_policy(&QuantPolicy::w4a8kv8()), CacheStore::Int8);
+        assert_eq!(CacheStore::for_policy(&QuantPolicy::fp16()), CacheStore::F32);
     }
 
     #[test]

@@ -29,11 +29,14 @@ use anyhow::{ensure, Context, Result};
 
 use crate::config::{ArtifactSpec, ModelCfg, PrecCfg, TensorSpec};
 use crate::model::ParamStore;
+use crate::policy::{QuantMode, QuantPolicy};
 use crate::quant::{dynamic_quant_rows, fake_quant, fake_quant_per_channel};
 
-/// Model + precision shape of the host forward, decoupled from the
-/// artifact manifest so tests, benches and `--backend host` runs work
-/// without built artifacts.
+/// Model shape + typed precision policy of the host forward, decoupled
+/// from the artifact manifest so tests, benches and `--backend host` runs
+/// work without built artifacts. Every quantization decision in the host
+/// stack (fold widths, activation quantizers, the KV pool's `QuantRule`)
+/// derives from `policy`.
 #[derive(Clone, Debug)]
 pub struct HostCfg {
     pub vocab: usize,
@@ -42,23 +45,22 @@ pub struct HostCfg {
     pub n_heads: usize,
     pub d_ff: usize,
     pub seq_len: usize,
-    pub quantized: bool,
-    pub act_bits: u32,
-    pub act_dynamic: bool,
-    pub cache_bits: u32,
-    pub weight_bits: u32,
-    pub head_bits: u32,
-    pub query_bits: u32,
+    /// the typed precision policy (see [`crate::policy`])
+    pub policy: QuantPolicy,
     /// `rope_theta` from `python/compile/configs.py` (all current models
     /// use the default; the manifest does not carry it)
     pub rope_theta: f32,
 }
 
 impl HostCfg {
-    /// Combine an architecture and a precision placement (from the
-    /// manifest, or from [`builtin_model`]/[`builtin_prec`]).
-    pub fn from_cfgs(mc: &ModelCfg, pc: &PrecCfg) -> Result<HostCfg> {
-        ensure!(!pc.online_rot, "host forward does not implement the online-rotation ablation");
+    /// Combine an architecture with a typed precision policy — the one
+    /// constructor every host entry point funnels through.
+    pub fn from_policy(mc: &ModelCfg, policy: &QuantPolicy) -> Result<HostCfg> {
+        ensure!(
+            !policy.online_rot,
+            "host forward does not implement the online-rotation ablation"
+        );
+        policy.validate()?;
         Ok(HostCfg {
             vocab: mc.vocab,
             d_model: mc.d_model,
@@ -66,19 +68,28 @@ impl HostCfg {
             n_heads: mc.n_heads,
             d_ff: mc.d_ff,
             seq_len: mc.seq_len,
-            quantized: pc.quantized,
-            act_bits: pc.act_bits,
-            act_dynamic: pc.act_dynamic,
-            cache_bits: pc.cache_bits,
-            weight_bits: pc.weight_bits,
-            head_bits: pc.head_bits,
-            query_bits: pc.query_bits,
+            policy: policy.clone(),
             rope_theta: 10000.0,
         })
     }
 
+    /// Combine an architecture and a manifest precision placement (from
+    /// the manifest, or from [`builtin_model`]/[`builtin_prec`]).
+    pub fn from_cfgs(mc: &ModelCfg, pc: &PrecCfg) -> Result<HostCfg> {
+        Self::from_policy(mc, &pc.policy()?)
+    }
+
     pub fn d_head(&self) -> usize {
         self.d_model / self.n_heads
+    }
+
+    pub fn quantized(&self) -> bool {
+        self.policy.quantized
+    }
+
+    /// Whether the runtime-quantized slots use dynamic per-token steps.
+    pub fn act_dynamic(&self) -> bool {
+        self.policy.acts.mode == QuantMode::Dynamic
     }
 }
 
@@ -119,40 +130,14 @@ pub fn builtin_model(name: &str) -> Option<ModelCfg> {
     Some(mc)
 }
 
-/// The cache storage a precision serves with: quantized precisions keep
-/// the K/V cache in the deployment INT8 representation, fp16 keeps f32.
-/// One rule shared by `Pipeline::forward` and `silq eval --backend host`
-/// so their scores stay comparable.
-pub fn cache_store_for(pc: &PrecCfg) -> CacheStore {
-    if pc.quantized {
-        CacheStore::Int8
-    } else {
-        CacheStore::F32
-    }
-}
-
-/// Built-in mirror of `python/compile/configs.py::PRECISIONS`.
+/// Built-in mirror of `python/compile/configs.py::PRECISIONS`, now a thin
+/// veneer over the typed policy grammar: the legacy manifest names
+/// (`a8d-c8-w4`, ...), the policy presets and inline spec strings all
+/// resolve; anything else is `None`. The cache storage rule that used to
+/// live here is [`CacheStore::for_policy`].
 pub fn builtin_prec(name: &str) -> Option<PrecCfg> {
-    let mut pc = PrecCfg {
-        name: name.into(),
-        quantized: true,
-        act_bits: 8,
-        act_dynamic: true,
-        cache_bits: 8,
-        weight_bits: 4,
-        head_bits: 8,
-        query_bits: 16,
-        online_rot: false,
-    };
-    match name {
-        "fp16" => pc.quantized = false,
-        "a8d-c8-w4" => {}
-        "a8s-c8-w4" => pc.act_dynamic = false,
-        "a8d-c4-w4" => pc.cache_bits = 4,
-        "a8d-c8-w4-rot" => pc.online_rot = true,
-        _ => return None,
-    }
-    Some(pc)
+    let p = QuantPolicy::resolve(name).ok()?;
+    p.to_prec(name).ok()
 }
 
 /// Build the `ArtifactSpec` a host-served model's `ParamStore` follows —
@@ -173,7 +158,7 @@ pub fn host_param_spec(cfg: &HostCfg) -> ArtifactSpec {
         ("ln_f".into(), vec![d]),
         ("head".into(), vec![d, v]),
     ];
-    if cfg.quantized {
+    if cfg.quantized() {
         for (n, dims) in [
             ("sw_q", vec![l, d]),
             ("sw_k", vec![l, d]),
@@ -186,7 +171,7 @@ pub fn host_param_spec(cfg: &HostCfg) -> ArtifactSpec {
         ] {
             inputs.push((n.into(), dims));
         }
-        if !cfg.act_dynamic {
+        if !cfg.act_dynamic() {
             for (n, dims) in [
                 ("sa_x1", vec![l]),
                 ("sa_q", vec![l]),
@@ -205,7 +190,7 @@ pub fn host_param_spec(cfg: &HostCfg) -> ArtifactSpec {
         name: "host_fwd".into(),
         file: String::new(),
         model: "host".into(),
-        prec: if cfg.quantized { "quantized" } else { "fp16" }.into(),
+        prec: if cfg.quantized() { "quantized" } else { "fp16" }.into(),
         mode: "fwd".into(),
         inputs: inputs
             .into_iter()
@@ -314,8 +299,8 @@ impl HostModel {
                 wu: slice("wu", li, d * f)?,
                 wd: slice("wd", li, f * d)?,
             };
-            if cfg.quantized {
-                let wb = cfg.weight_bits;
+            if cfg.quantized() {
+                let wb = cfg.policy.weights.bits;
                 fake_quant_per_channel(&mut w.wq, d, &slice("sw_q", li, d)?, wb);
                 fake_quant_per_channel(&mut w.wk, d, &slice("sw_k", li, d)?, wb);
                 fake_quant_per_channel(&mut w.wv, d, &slice("sw_v", li, d)?, wb);
@@ -328,11 +313,11 @@ impl HostModel {
         }
 
         let mut head = params.get("head")?.to_vec();
-        if cfg.quantized {
-            fake_quant_per_channel(&mut head, v, params.get("sw_head")?, cfg.head_bits);
+        if cfg.quantized() {
+            fake_quant_per_channel(&mut head, v, params.get("sw_head")?, cfg.policy.head.bits);
         }
 
-        let sa = if cfg.quantized && !cfg.act_dynamic {
+        let sa = if cfg.quantized() && !cfg.act_dynamic() {
             Some(StaticSteps {
                 sa_x1: params.get("sa_x1")?.to_vec(),
                 sa_q: params.get("sa_q")?.to_vec(),
@@ -345,20 +330,30 @@ impl HostModel {
             None
         };
 
-        // cache quantization rule: static steps come from the trained
-        // sc_k/sc_v scalars broadcast across channels; dynamic recomputes
-        // per head row on write (ste_dynamic_quantize's last-axis rule)
-        let rule = if !cfg.quantized {
+        // cache quantization rule, derived from the policy's cache slot:
+        // static steps come from the trained sc_k/sc_v scalars broadcast
+        // across channels; dynamic recomputes per head row on write
+        // (ste_dynamic_quantize's last-axis rule)
+        let rule = if !cfg.quantized() {
             QuantRule::None
-        } else if cfg.act_dynamic {
-            QuantRule::Dynamic { bits: cfg.cache_bits, rows: cfg.n_heads }
         } else {
-            let bc = |name: &str| -> Result<Vec<f32>> {
-                let s = params.get(name)?;
-                ensure!(s.len() == l, "{name} must be one step per layer");
-                Ok(s.iter().flat_map(|&x| std::iter::repeat(x).take(d)).collect())
-            };
-            QuantRule::Static { bits: cfg.cache_bits, k_steps: bc("sc_k")?, v_steps: bc("sc_v")? }
+            match cfg.policy.cache.mode {
+                QuantMode::Dynamic => {
+                    QuantRule::Dynamic { bits: cfg.policy.cache.bits, rows: cfg.n_heads }
+                }
+                QuantMode::Static => {
+                    let bc = |name: &str| -> Result<Vec<f32>> {
+                        let s = params.get(name)?;
+                        ensure!(s.len() == l, "{name} must be one step per layer");
+                        Ok(s.iter().flat_map(|&x| std::iter::repeat(x).take(d)).collect())
+                    };
+                    QuantRule::Static {
+                        bits: cfg.policy.cache.bits,
+                        k_steps: bc("sc_k")?,
+                        v_steps: bc("sc_v")?,
+                    }
+                }
+            }
         };
 
         // RoPE tables, as in model.py::rope_tables
@@ -406,7 +401,7 @@ impl HostModel {
     /// dynamic per-`rows` sub-row (`ste_dynamic_quantize`'s last-axis
     /// rule), or a static learned step, or identity.
     fn act_quant(&self, x: &mut [f32], bits: u32, static_step: Option<f32>, rows: usize) {
-        if !self.cfg.quantized {
+        if !self.cfg.quantized() {
             return;
         }
         match static_step {
@@ -496,7 +491,7 @@ impl HostModel {
             let st = self.steps(li);
             let lw = &self.layers[li];
             let mut hnorm = rmsnorm(&x, &lw.ln1);
-            self.act_quant(&mut hnorm, cfg.act_bits, st.sa_x1, 1);
+            self.act_quant(&mut hnorm, cfg.policy.acts.bits, st.sa_x1, 1);
             let mut q = matvec(&hnorm, &lw.wq, d);
             let mut k = matvec(&hnorm, &lw.wk, d);
             let v = matvec(&hnorm, &lw.wv, d);
@@ -504,25 +499,25 @@ impl HostModel {
             self.rope(pos, &mut q, &mut k);
 
             // INT16 query; K/V are quantized by the pool on write
-            self.act_quant(&mut q, cfg.query_bits, st.sa_q, h);
+            self.act_quant(&mut q, cfg.policy.query.bits, st.sa_q, h);
             pool.write(slot, li, pos, &k, &v);
             pool.read_into(slot, li, pos + 1, &mut k_cache, &mut v_cache)?;
 
             // causal attention over the cached prefix
             let mut ctx = self.attend(&q, &k_cache, &v_cache, pos);
 
-            self.act_quant(&mut ctx, cfg.act_bits, st.sa_o, 1);
+            self.act_quant(&mut ctx, cfg.policy.acts.bits, st.sa_o, 1);
             let o = matvec(&ctx, &lw.wo, d);
             for (xv, ov) in x.iter_mut().zip(&o) {
                 *xv += ov;
             }
 
             let mut h2 = rmsnorm(&x, &lw.ln2);
-            self.act_quant(&mut h2, cfg.act_bits, st.sa_x2, 1);
+            self.act_quant(&mut h2, cfg.policy.acts.bits, st.sa_x2, 1);
             let g = matvec(&h2, &lw.wg, f);
             let u = matvec(&h2, &lw.wu, f);
             let mut a: Vec<f32> = g.iter().zip(&u).map(|(&gv, &uv)| silu(gv) * uv).collect();
-            self.act_quant(&mut a, cfg.act_bits, st.sa_d, 1);
+            self.act_quant(&mut a, cfg.policy.acts.bits, st.sa_d, 1);
             let dn = matvec(&a, &lw.wd, d);
             for (xv, dv) in x.iter_mut().zip(&dn) {
                 *xv += dv;
@@ -533,7 +528,7 @@ impl HostModel {
             return Ok(None);
         }
         let mut hf = rmsnorm(&x, &self.ln_f);
-        self.act_quant(&mut hf, cfg.head_bits, self.sa.as_ref().map(|s| s.sa_head), 1);
+        self.act_quant(&mut hf, cfg.policy.head.bits, self.sa.as_ref().map(|s| s.sa_head), 1);
         Ok(Some(matvec(&hf, &self.head, cfg.vocab)))
     }
 
@@ -566,12 +561,12 @@ impl HostModel {
             let mut v_all = vec![0f32; n * d];
             for p in 0..n {
                 let mut hnorm = rmsnorm(&x[p * d..(p + 1) * d], &lw.ln1);
-                self.act_quant(&mut hnorm, cfg.act_bits, st.sa_x1, 1);
+                self.act_quant(&mut hnorm, cfg.policy.acts.bits, st.sa_x1, 1);
                 let mut q = matvec(&hnorm, &lw.wq, d);
                 let mut k = matvec(&hnorm, &lw.wk, d);
                 let mut vv = matvec(&hnorm, &lw.wv, d);
                 self.rope(p, &mut q, &mut k);
-                self.act_quant(&mut q, cfg.query_bits, st.sa_q, h);
+                self.act_quant(&mut q, cfg.policy.query.bits, st.sa_q, h);
                 // cache quantization, same rule as the pool's write path
                 self.rule.quantize_f32(li, &mut k, &mut vv);
                 q_all[p * d..(p + 1) * d].copy_from_slice(&q);
@@ -583,7 +578,7 @@ impl HostModel {
             // reads only q/k/v, so updating x in place is safe)
             for p in 0..n {
                 let mut ctx = self.attend(&q_all[p * d..(p + 1) * d], &k_all, &v_all, p);
-                self.act_quant(&mut ctx, cfg.act_bits, st.sa_o, 1);
+                self.act_quant(&mut ctx, cfg.policy.acts.bits, st.sa_o, 1);
                 let o = matvec(&ctx, &lw.wo, d);
                 for (xv, ov) in x[p * d..(p + 1) * d].iter_mut().zip(&o) {
                     *xv += ov;
@@ -593,11 +588,11 @@ impl HostModel {
             // FFN per position
             for p in 0..n {
                 let mut h2 = rmsnorm(&x[p * d..(p + 1) * d], &lw.ln2);
-                self.act_quant(&mut h2, cfg.act_bits, st.sa_x2, 1);
+                self.act_quant(&mut h2, cfg.policy.acts.bits, st.sa_x2, 1);
                 let g = matvec(&h2, &lw.wg, f);
                 let u = matvec(&h2, &lw.wu, f);
                 let mut a: Vec<f32> = g.iter().zip(&u).map(|(&gv, &uv)| silu(gv) * uv).collect();
-                self.act_quant(&mut a, cfg.act_bits, st.sa_d, 1);
+                self.act_quant(&mut a, cfg.policy.acts.bits, st.sa_d, 1);
                 let dn = matvec(&a, &lw.wd, d);
                 for (xv, dv) in x[p * d..(p + 1) * d].iter_mut().zip(&dn) {
                     *xv += dv;
@@ -608,7 +603,7 @@ impl HostModel {
         let mut logits = vec![0f32; n * v];
         for p in 0..n {
             let mut hf = rmsnorm(&x[p * d..(p + 1) * d], &self.ln_f);
-            self.act_quant(&mut hf, cfg.head_bits, self.sa.as_ref().map(|s| s.sa_head), 1);
+            self.act_quant(&mut hf, cfg.policy.head.bits, self.sa.as_ref().map(|s| s.sa_head), 1);
             logits[p * v..(p + 1) * v].copy_from_slice(&matvec(&hf, &self.head, v));
         }
         Ok(logits)
@@ -668,6 +663,11 @@ fn silu(x: f32) -> f32 {
 /// Small host config the unit tests across modules share.
 #[cfg(test)]
 pub(crate) fn tiny_host_cfg(quantized: bool, act_dynamic: bool) -> HostCfg {
+    let policy = match (quantized, act_dynamic) {
+        (false, _) => QuantPolicy::fp16(),
+        (true, true) => QuantPolicy::w4a8kv8(),
+        (true, false) => QuantPolicy::w4a8kv8().with_static_acts(),
+    };
     HostCfg {
         vocab: 256,
         d_model: 32,
@@ -675,13 +675,7 @@ pub(crate) fn tiny_host_cfg(quantized: bool, act_dynamic: bool) -> HostCfg {
         n_heads: 4,
         d_ff: 64,
         seq_len: 16,
-        quantized,
-        act_bits: 8,
-        act_dynamic,
-        cache_bits: 8,
-        weight_bits: 4,
-        head_bits: 8,
-        query_bits: 16,
+        policy,
         rope_theta: 10000.0,
     }
 }
@@ -718,6 +712,10 @@ mod tests {
         assert!(builtin_prec("a8d-c8-w4-rot").unwrap().online_rot);
         assert!(builtin_prec("a8d-c8-w4").is_some());
         assert!(builtin_prec("int1").is_none());
+        // the typed grammar means inline specs and presets resolve too
+        let spec = builtin_prec("w4a8kv8").unwrap();
+        assert!(spec.act_dynamic && spec.cache_bits == 8 && spec.weight_bits == 4);
+        assert!(!builtin_prec("w4a8kv8:statacts").unwrap().act_dynamic);
         // the rotation ablation has no host forward
         let mc = builtin_model("tiny").unwrap();
         assert!(HostCfg::from_cfgs(&mc, &builtin_prec("a8d-c8-w4-rot").unwrap()).is_err());

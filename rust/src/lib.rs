@@ -7,6 +7,8 @@
 //!
 //! Layer map:
 //! * [`runtime`] — PJRT engine loading `artifacts/*.hlo.txt`
+//! * [`policy`] — the typed `QuantPolicy` precision API (spec strings,
+//!   presets, manifest conversions) every layer below keys off
 //! * [`hostmodel`] — the host quantized transformer + slab KV pool
 //! * [`forward`] — `ForwardBackend`: batched logits + incremental decode,
 //!   artifact (PJRT) and host implementations
@@ -33,6 +35,7 @@ pub mod hostmodel;
 pub mod linalg;
 pub mod metrics;
 pub mod model;
+pub mod policy;
 pub mod ptq;
 pub mod quant;
 pub mod runtime;

@@ -2,16 +2,23 @@
 //!
 //! Subcommands (clap is unavailable offline; parsing is hand-rolled):
 //!   silq info                          # artifacts + configs
+//!   silq prec [list|<spec>]            # precision presets / spec inspector
 //!   silq pretrain|sft|qat [--set k=v]  # pipeline stages
 //!   silq eval --ckpt path --prec p     # evaluate a checkpoint
 //!   silq exp <table1|...|fig3>         # regenerate a paper table/figure
 //!   silq e2e                           # full end-to-end demo (small model)
 //!   silq serve                         # continuous-batching load run
+//!
+//! `--prec` accepts one currency everywhere: a manifest precision name
+//! (`a8d-c8-w4`), a policy preset (`w4a8kv8-base`) or an inline spec
+//! string (`w4a8kv8:statacts`) — see `silq prec list` and README
+//! §Precision policies. Inline specs need no manifest entry and run on
+//! the host backend.
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 use std::sync::Arc;
 
-use silq::config::TrainCfg;
+use silq::config::{Manifest, TrainCfg};
 use silq::coordinator::{run_experiment, BackendKind, Pipeline, PipelineCfg};
 use silq::data::{vocab, DataMix, SftStyle, Vocab, World};
 use silq::evalharness::Evaluator;
@@ -19,6 +26,7 @@ use silq::forward::HostForward;
 use silq::hostmodel::{self, CacheStore, HostCfg};
 use silq::metrics::RunLog;
 use silq::model::ParamStore;
+use silq::policy::{QuantPolicy, PRESETS};
 use silq::runtime::Engine;
 use silq::serve::{
     AdmissionQueue, ArtifactBackend, DecodeBackend, GenRequest, HostBackend, Scheduler, ServeStats,
@@ -43,20 +51,11 @@ fn parse_argv(argv: Vec<String>) -> Args {
         if let Some(name) = argv[i].strip_prefix("--") {
             if let Some((k, v)) = name.split_once('=') {
                 // `--flag=value`: the unambiguous form — use it for values
-                // that start with `--` or look like another flag
-                if k == "set" {
-                    if let Some((sk, sv)) = v.split_once('=') {
-                        flags.push((sk.into(), sv.into()));
-                    }
-                } else {
-                    flags.push((k.into(), v.into()));
-                }
+                // that start with `--` or look like another flag. `--set`
+                // overrides stay as ("set", "key=value") pairs so bad
+                // values can be rejected with the key named.
+                flags.push((k.into(), v.into()));
                 i += 1;
-            } else if name == "set" && i + 1 < argv.len() {
-                if let Some((k, v)) = argv[i + 1].split_once('=') {
-                    flags.push((k.into(), v.into()));
-                }
-                i += 2;
             } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
                 flags.push((name.into(), argv[i + 1].clone()));
                 i += 2;
@@ -72,9 +71,49 @@ fn parse_argv(argv: Vec<String>) -> Args {
     Args { cmd, flags }
 }
 
+/// Parse a numeric flag value, naming the flag in the error instead of
+/// silently keeping a default.
+fn parse_flag<T: std::str::FromStr>(key: &str, value: &str) -> Result<T>
+where
+    T::Err: std::fmt::Display,
+{
+    value.parse().map_err(|e| anyhow!("--{key} {value}: {e}"))
+}
+
+/// Keys `--set` may target besides the training hyper-parameters
+/// (consumed by [`Args::pipeline_cfg`]).
+const PIPELINE_KEYS: &[&str] = &[
+    "model", "backend", "pretrain_steps", "sft_steps", "qat_steps", "eval_items", "seed",
+    "world_seed",
+];
+
 impl Args {
     fn get(&self, key: &str) -> Option<&str> {
         self.flags.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    /// Flags with `--set key=value` entries expanded into (key, value)
+    /// pairs (a malformed `--set` is a hard error).
+    fn overrides(&self) -> Result<Vec<(&str, &str)>> {
+        let mut out = Vec::with_capacity(self.flags.len());
+        for (k, v) in &self.flags {
+            if k == "set" {
+                let (sk, sv) = v
+                    .split_once('=')
+                    .with_context(|| format!("--set needs key=value, got {v:?}"))?;
+                out.push((sk, sv));
+            } else {
+                out.push((k.as_str(), v.as_str()));
+            }
+        }
+        Ok(out)
+    }
+
+    fn get_num<T: std::str::FromStr>(&self, key: &str, default: &str) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        parse_flag(key, self.get(key).unwrap_or(default))
     }
 
     fn pos(&self) -> Option<&str> {
@@ -83,17 +122,17 @@ impl Args {
 
     fn pipeline_cfg(&self) -> Result<PipelineCfg> {
         let mut c = PipelineCfg::default();
-        if let Some(m) = self.get("model") {
-            c.model = m.into();
-        }
-        for (k, v) in &self.flags {
-            match k.as_str() {
-                "pretrain_steps" => c.pretrain_steps = v.parse().unwrap_or(c.pretrain_steps),
-                "sft_steps" => c.sft_steps = v.parse().unwrap_or(c.sft_steps),
-                "qat_steps" => c.qat_steps = v.parse().unwrap_or(c.qat_steps),
-                "eval_items" => c.eval_items = v.parse().unwrap_or(c.eval_items),
-                "seed" => c.seed = v.parse().unwrap_or(c.seed),
-                "world_seed" => c.world_seed = v.parse().unwrap_or(c.world_seed),
+        // `--set key=value` and `--key value` are interchangeable here,
+        // as they are for the training keys
+        for (k, v) in self.overrides()? {
+            match k {
+                "model" => c.model = v.into(),
+                "pretrain_steps" => c.pretrain_steps = parse_flag(k, v)?,
+                "sft_steps" => c.sft_steps = parse_flag(k, v)?,
+                "qat_steps" => c.qat_steps = parse_flag(k, v)?,
+                "eval_items" => c.eval_items = parse_flag(k, v)?,
+                "seed" => c.seed = parse_flag(k, v)?,
+                "world_seed" => c.world_seed = parse_flag(k, v)?,
                 // a mistyped backend must fail loudly, not silently run a
                 // different compute path than the user asked for
                 "backend" => c.backend = BackendKind::parse(v)?,
@@ -103,13 +142,41 @@ impl Args {
         Ok(c)
     }
 
-    fn train_cfg(&self) -> TrainCfg {
+    fn train_cfg(&self) -> Result<TrainCfg> {
         let mut t = TrainCfg::default();
         for (k, v) in &self.flags {
-            t.set(k, v);
+            if k == "set" {
+                let (sk, sv) = v
+                    .split_once('=')
+                    .with_context(|| format!("--set needs key=value, got {v:?}"))?;
+                // an explicit --set must land somewhere: a training key
+                // (applied here) or a pipeline key (applied by
+                // pipeline_cfg); anything else is a typo
+                ensure!(
+                    t.set(sk, sv)? || PIPELINE_KEYS.contains(&sk),
+                    "--set {sk}: unknown key"
+                );
+            } else {
+                // direct flags double as overrides when they name a
+                // training key; a bad value for a known key is still a
+                // hard error (TrainCfg::set names the key)
+                t.set(k, v)?;
+            }
         }
-        t
+        Ok(t)
     }
+}
+
+/// Resolve a `--prec` string into a typed policy: a manifest precision
+/// (when a manifest is at hand), a preset name, a legacy name, or an
+/// inline spec.
+fn resolve_policy(prec: &str, manifest: Option<&Manifest>) -> Result<QuantPolicy> {
+    if let Some(pc) = manifest.and_then(|m| m.precs.get(prec)) {
+        return pc.policy();
+    }
+    QuantPolicy::resolve(prec).with_context(|| {
+        format!("--prec {prec}: not a manifest precision, preset or spec (try `silq prec list`)")
+    })
 }
 
 fn main() -> Result<()> {
@@ -121,17 +188,23 @@ fn main() -> Result<()> {
             println!(
                 "silq — SiLQ reproduction coordinator\n\
                  usage: silq <cmd> [flags]\n\
-                 cmds:  info | pretrain | sft | qat | eval | exp <id> | e2e | serve\n\
-                 flags: --model tiny|small  --prec a8d-c8-w4|...  --ckpt path\n\
-                        --set key=value (training hyper-params)\n\
-                        --qat_steps N --pretrain_steps N --sft_steps N --eval_items N\n\
-                        --backend artifact|host (eval/qat/serve; host needs no\n\
-                        compiled artifacts and decodes incrementally over the\n\
-                        quantized KV pool)\n\
+                 cmds:  info | prec [list|<spec>] | pretrain | sft | qat | eval\n\
+                 \x20      | exp <id> | e2e | serve\n\
+                 flags: --model tiny|small\n\
+                 \x20      --prec <manifest name | preset | spec>  e.g. a8d-c8-w4,\n\
+                 \x20        w4a8kv8, w4a8kv8:statacts, fp16 (see `silq prec list`)\n\
+                 \x20      --ckpt path\n\
+                 \x20      --set key=value (training hyper-params; bad values are errors)\n\
+                 \x20      --qat_steps N --pretrain_steps N --sft_steps N --eval_items N\n\
+                 \x20      --backend artifact|host (eval/qat/serve; host needs no\n\
+                 \x20      compiled artifacts and decodes incrementally over the\n\
+                 \x20      quantized KV pool; on eval/serve an inline --prec spec\n\
+                 \x20      selects host automatically — qat trains through compiled\n\
+                 \x20      graphs, so it takes manifest precision names only)\n\
                  serve: --requests N --batch B --max_new M --queue_cap C --producers P\n\
-                        --cache int8|f32 (host backend)\n\
+                 \x20      --cache int8|f32 (host backend)\n\
                  note:  `--flag value` and `--flag=value` are equivalent; use\n\
-                        `--flag=value` when the value itself starts with `--`"
+                 \x20      `--flag=value` when the value itself starts with `--`"
             );
             Ok(())
         }
@@ -145,10 +218,14 @@ fn main() -> Result<()> {
                     m.name, m.vocab, m.d_model, m.n_layers, m.n_heads, m.d_ff, m.seq_len, m.use_pallas
                 );
             }
-            println!("precisions: {:?}", eng.manifest.precs.keys().collect::<Vec<_>>());
+            println!("precisions:");
+            for pc in eng.manifest.precs.values() {
+                println!("  {:<16} spec {}", pc.name, pc.policy()?);
+            }
             println!("artifacts:  {}", eng.manifest.artifacts.len());
             Ok(())
         }
+        "prec" => prec_cmd(&args),
         "pretrain" => {
             let eng = Engine::new(&art_dir)?;
             let p = Pipeline::new(&eng, args.pipeline_cfg()?)?;
@@ -176,10 +253,10 @@ fn main() -> Result<()> {
             let prec = args.get("prec").unwrap_or("a8d-c8-w4").to_string();
             let fp16 = p.instruct_model(SftStyle::TuluSynth, "instruct", &mut log)?;
             let stats = p.calib_stats(&fp16, 4)?;
-            let tcfg = args.train_cfg();
-            let act_calib = tcfg.act_calib.clone();
-            let wgt_calib = tcfg.wgt_calib.clone();
-            let mut qs = p.calibrated_quant_store(&prec, &fp16, &stats, &act_calib, &wgt_calib)?;
+            let tcfg = args.train_cfg()?;
+            let mut qs = p.calibrated_quant_store_with(
+                &prec, &fp16, &stats, tcfg.act_calib, tcfg.wgt_calib,
+            )?;
             let stats_t = p.qat(
                 &prec, &mut qs, &fp16,
                 DataMix::Instruct { style: SftStyle::TuluSynth, dclm_ratio: tcfg.dclm_ratio },
@@ -197,13 +274,33 @@ fn main() -> Result<()> {
         }
         "eval" => {
             // the host backend is fully artifact-free: no engine, no
-            // manifest, no PJRT — built-in config mirrors describe the model
-            if args.pipeline_cfg()?.backend == BackendKind::Host {
-                return host_eval_cmd(&args);
+            // PJRT — built-in config mirrors describe the model. Explicit
+            // --backend host selects it; so does a --prec the built
+            // manifest doesn't know (inline specs, bare checkout)
+            let prec = args.get("prec").unwrap_or("fp16").to_string();
+            let cfg = args.pipeline_cfg()?;
+            let manifest_has_prec = Manifest::load(&art_dir)
+                .map(|m| m.precs.contains_key(&prec))
+                .unwrap_or(false);
+            let auto_host = args.get("backend").is_none() && !manifest_has_prec;
+            if cfg.backend == BackendKind::Host || auto_host {
+                if auto_host {
+                    println!(
+                        "--prec {prec} is not a built manifest precision; evaluating \
+                         on the artifact-free host backend"
+                    );
+                }
+                return host_eval_cmd(&args, &art_dir);
             }
             let eng = Engine::new(&art_dir)?;
-            let p = Pipeline::new(&eng, args.pipeline_cfg()?)?;
-            let prec = args.get("prec").unwrap_or("fp16").to_string();
+            let p = Pipeline::new(&eng, cfg)?;
+            if eng.manifest.prec(&prec).is_err() {
+                bail!(
+                    "--prec {prec} is not a manifest precision (the artifact backend \
+                     needs a compiled graph per precision); inline policy specs run \
+                     artifact-free with --backend host"
+                );
+            }
             let ckpt = args.get("ckpt").context("--ckpt required")?;
             // spec comes from the manifest, not eng.module(): loading a
             // checkpoint must not pay a PJRT compile of the fwd artifact
@@ -217,10 +314,7 @@ fn main() -> Result<()> {
             }
             Ok(())
         }
-        "serve" => {
-            let eng = Engine::new(&art_dir)?;
-            serve_cmd(&eng, &args)
-        }
+        "serve" => serve_cmd(&args, &art_dir),
         "exp" => {
             let id = args.pos().context("exp needs an id: table1..table4, fig1..fig3")?;
             let eng = Engine::new(&art_dir)?;
@@ -238,21 +332,58 @@ fn main() -> Result<()> {
     }
 }
 
+/// `silq prec list` / `silq prec <spec>`: the policy inspector — prints
+/// the preset table, or parses any precision string and pretty-prints the
+/// resulting policy.
+fn prec_cmd(args: &Args) -> Result<()> {
+    match args.pos() {
+        None | Some("list") => {
+            println!("{:<14} {:<20} {:<14} note", "preset", "spec", "manifest prec");
+            for p in PRESETS {
+                println!(
+                    "{:<14} {:<20} {:<14} {}",
+                    p.name,
+                    p.spec,
+                    p.manifest_prec.unwrap_or("-"),
+                    p.note
+                );
+            }
+            println!(
+                "\nany inline spec works too: w<bits>a<bits>kv<bits>[:mods] with mods\n\
+                 statacts|dynacts, h<bits>, q<bits>, rot, acal=quantile|max, wcal=mse|lsq\n\
+                 (`silq prec <spec>` pretty-prints one)"
+            );
+        }
+        Some(spec) => {
+            let p = QuantPolicy::resolve(spec)?;
+            println!("{spec} -> {p}");
+            print!("{}", p.describe());
+            println!(
+                "  serve cache store: {:?}",
+                CacheStore::for_policy(&p)
+            );
+        }
+    }
+    Ok(())
+}
+
 /// `silq eval --backend host`: score a checkpoint through the host
-/// transformer — no compiled artifacts, no manifest, no PJRT. The model
-/// and precision come from the built-in mirrors of
-/// `python/compile/configs.py`; quantized precisions keep the K/V cache in
-/// the deployment INT8 representation and decode incrementally.
-fn host_eval_cmd(args: &Args) -> Result<()> {
+/// transformer — no compiled artifacts, no PJRT. The model comes from the
+/// built-in mirrors of `python/compile/configs.py`; the precision is any
+/// policy string (manifest name, preset or inline spec — a manifest on
+/// disk is consulted when present, but never required). Quantized
+/// policies keep the K/V cache in the deployment INT8 representation and
+/// decode incrementally.
+fn host_eval_cmd(args: &Args, art_dir: &str) -> Result<()> {
     let model = args.get("model").unwrap_or("tiny");
     // same default precision as the artifact eval path, so flipping only
     // --backend never changes what is evaluated
     let prec = args.get("prec").unwrap_or("fp16");
     let mc = hostmodel::builtin_model(model)
         .with_context(|| format!("unknown model {model} (host backend knows tiny|small|tiny-pallas)"))?;
-    let pc = hostmodel::builtin_prec(prec)
-        .with_context(|| format!("unknown precision {prec}"))?;
-    let hc = HostCfg::from_cfgs(&mc, &pc)?;
+    let manifest = Manifest::load(art_dir).ok();
+    let policy = resolve_policy(prec, manifest.as_ref())?;
+    let hc = HostCfg::from_policy(&mc, &policy)?;
     let spec = hostmodel::host_param_spec(&hc);
     let params = match args.get("ckpt") {
         Some(path) => {
@@ -260,20 +391,20 @@ fn host_eval_cmd(args: &Args) -> Result<()> {
             ParamStore::load(&spec, path)?
         }
         None => {
-            let seed = args.get("seed").and_then(|s| s.parse().ok()).unwrap_or(0);
+            let seed = args.get_num("seed", "0")?;
             println!("no --ckpt given; evaluating a fresh random-init model (scores ~ chance)");
             hostmodel::host_test_params(&hc, seed)
         }
     };
-    let store = hostmodel::cache_store_for(&pc);
-    let fwd = HostForward::new(hc, mc.fwd_batch, &params, store)?;
+    let store = CacheStore::for_policy(&hc.policy);
+    let fwd = HostForward::new(hc.clone(), mc.fwd_batch, &params, store)?;
     let chat = args.get("chat").map(|v| v == "1").unwrap_or(true);
-    let n_items: usize = args.get("eval_items").unwrap_or("40").parse()?;
-    let world_seed: u64 = args.get("world_seed").unwrap_or("7").parse()?;
+    let n_items: usize = args.get_num("eval_items", "40")?;
+    let world_seed: u64 = args.get_num("world_seed", "7")?;
     let world = World::generate(Vocab::new(mc.vocab), world_seed);
     let mut ev = Evaluator::new(fwd, chat, n_items);
     let r = ev.eval_all(&world, world_seed ^ silq::evalharness::EVAL_SEED_SALT)?;
-    println!("backend=host model={model} prec={prec} (artifact-free)");
+    println!("backend=host model={model} prec={prec} policy={} (artifact-free)", hc.policy);
     println!("{}", r.summary());
     for (name, suite, acc) in &r.per_task {
         println!("  {:<16} {:8} {:.2}", name, suite.label(), 100.0 * acc);
@@ -285,45 +416,41 @@ fn host_eval_cmd(args: &Args) -> Result<()> {
 /// chat requests through the bounded admission queue while the
 /// continuous-batching scheduler drains it (there is no network stack in
 /// this offline environment; the load generator stands in for clients).
-fn serve_cmd(eng: &Engine, args: &Args) -> Result<()> {
+///
+/// Backend choice: `--backend` wins; otherwise the compiled artifact is
+/// used when the manifest knows `--prec`, and the artifact-free host
+/// backend otherwise (inline specs, bare checkouts).
+fn serve_cmd(args: &Args, art_dir: &str) -> Result<()> {
     let model = args.get("model").unwrap_or("tiny").to_string();
     let prec = args.get("prec").unwrap_or("a8d-c8-w4").to_string();
-    let backend_kind = args.get("backend").unwrap_or("artifact").to_string();
-    let n_requests: usize = args.get("requests").unwrap_or("64").parse()?;
-    let batch: usize = args.get("batch").unwrap_or("8").parse()?;
-    let max_new: usize = args.get("max_new").unwrap_or("8").parse()?;
-    let queue_cap: usize = args.get("queue_cap").unwrap_or("16").parse()?;
-    let producers: usize = args.get("producers").unwrap_or("2").parse::<usize>()?.max(1);
+    let n_requests: usize = args.get_num("requests", "64")?;
+    let batch: usize = args.get_num("batch", "8")?;
+    let max_new: usize = args.get_num("max_new", "8")?;
+    let queue_cap: usize = args.get_num("queue_cap", "16")?;
+    let producers: usize = args.get_num::<usize>("producers", "2")?.max(1);
 
-    let mc = eng.manifest.model(&model)?.clone();
-    let art = format!("{model}_{prec}_fwd");
-    // spec comes from the manifest, not eng.module(): the host backend must
-    // not pay (or depend on) a PJRT compile of the fwd artifact
-    let spec = eng.manifest.artifact(&art)?.clone();
-
-    // trained checkpoint if given, else a freshly calibrated model (noise
-    // answers, but the latency/throughput trajectory is what we measure)
-    let params: ParamStore = match args.get("ckpt") {
-        Some(path) => {
-            println!("loading checkpoint {path}");
-            ParamStore::load(&spec, path)?
-        }
-        None if prec == "fp16" => {
-            // init straight from the manifest spec — no PJRT compile needed
-            let mut rng = silq::util::Rng::new(0);
-            ParamStore::init(&spec, &mc, &mut rng)
+    let manifest = Manifest::load(art_dir).ok();
+    let backend_kind = match args.get("backend") {
+        Some(b) => b.to_string(),
+        None if manifest.as_ref().map(|m| m.precs.contains_key(&prec)).unwrap_or(false) => {
+            "artifact".into()
         }
         None => {
-            println!("no checkpoint given; calibrating a fresh (untrained) model");
-            let p = Pipeline::new(
-                eng,
-                PipelineCfg { model: model.clone(), eval_items: 4, ..Default::default() },
-            )?;
-            let fp16 = init_model(eng, &format!("{model}_fp16_fwd"), 0)?;
-            let cstats = p.calib_stats(&fp16, 2)?;
-            p.calibrated_quant_store(&prec, &fp16, &cstats, "quantile", "mse")?
+            println!(
+                "--prec {prec} is not a built manifest precision; serving on the \
+                 artifact-free host backend"
+            );
+            "host".into()
         }
     };
+    let policy = resolve_policy(&prec, manifest.as_ref())?;
+
+    // model shape: manifest entry when built, built-in mirror otherwise
+    let mc = manifest
+        .as_ref()
+        .and_then(|m| m.models.get(&model).cloned())
+        .or_else(|| hostmodel::builtin_model(&model))
+        .with_context(|| format!("unknown model {model}"))?;
 
     // synthetic chat traffic: questions about the world's entities
     let world = World::generate(Vocab::new(mc.vocab), 7);
@@ -339,7 +466,7 @@ fn serve_cmd(eng: &Engine, args: &Args) -> Result<()> {
         .collect();
 
     println!(
-        "serving {n_requests} requests: backend={backend_kind} prec={prec} \
+        "serving {n_requests} requests: backend={backend_kind} prec={prec} policy={policy} \
          batch={batch} max_new={max_new} queue_cap={queue_cap} producers={producers}"
     );
 
@@ -375,7 +502,41 @@ fn serve_cmd(eng: &Engine, args: &Args) -> Result<()> {
     let t = Timer::start();
     let (results, stats) = match backend_kind.as_str() {
         "artifact" => {
-            let b = ArtifactBackend::new(eng, &art, &params)?;
+            let eng = Engine::new(art_dir)?;
+            ensure!(
+                eng.manifest.precs.contains_key(&prec),
+                "--prec {prec} is not a manifest precision (the artifact backend needs a \
+                 compiled graph); inline policy specs serve with --backend host"
+            );
+            let art = format!("{model}_{prec}_fwd");
+            // spec comes from the manifest, not eng.module(): loading a
+            // checkpoint must not pay a PJRT compile of the fwd artifact
+            let spec = eng.manifest.artifact(&art)?.clone();
+            // trained checkpoint if given, else a freshly calibrated model
+            // (noise answers, but the latency/throughput trajectory is what
+            // we measure)
+            let params: ParamStore = match args.get("ckpt") {
+                Some(path) => {
+                    println!("loading checkpoint {path}");
+                    ParamStore::load(&spec, path)?
+                }
+                None if !policy.quantized => {
+                    // init straight from the manifest spec — no PJRT compile
+                    let mut rng = silq::util::Rng::new(0);
+                    ParamStore::init(&spec, &mc, &mut rng)
+                }
+                None => {
+                    println!("no checkpoint given; calibrating a fresh (untrained) model");
+                    let p = Pipeline::new(
+                        &eng,
+                        PipelineCfg { model: model.clone(), eval_items: 4, ..Default::default() },
+                    )?;
+                    let fp16 = init_model(&eng, &format!("{model}_fp16_fwd"), 0)?;
+                    let cstats = p.calib_stats(&fp16, 2)?;
+                    p.calibrated_quant_store(&prec, &fp16, &cstats)?
+                }
+            };
+            let b = ArtifactBackend::new(&eng, &art, &params)?;
             let lanes = batch.min(b.lanes());
             let mut stats = ServeStats::new(lanes);
             let mut sched = Scheduler::new(b, lanes)?;
@@ -383,14 +544,39 @@ fn serve_cmd(eng: &Engine, args: &Args) -> Result<()> {
             (results, stats)
         }
         "host" => {
-            let pc = eng.manifest.prec(&prec)?.clone();
-            // integer storage only exists for quantized precisions; fp16
-            // serving degrades to the f32 cache
-            let store = match (pc.quantized, args.get("cache").unwrap_or("int8")) {
-                (false, _) | (_, "f32") => CacheStore::F32,
-                _ => CacheStore::Int8,
+            let hc = HostCfg::from_policy(&mc, &policy)?;
+            let spec = hostmodel::host_param_spec(&hc);
+            let params = match args.get("ckpt") {
+                Some(path) => {
+                    println!("loading checkpoint {path}");
+                    ParamStore::load(&spec, path)?
+                }
+                None => {
+                    let seed = args.get_num("seed", "0")?;
+                    println!(
+                        "no --ckpt given; serving a fresh random-init model (noise \
+                         answers; the latency/throughput trajectory is the measurement)"
+                    );
+                    hostmodel::host_test_params(&hc, seed)
+                }
             };
-            let b = HostBackend::new(HostCfg::from_cfgs(&mc, &pc)?, batch, &params, store)?;
+            // --cache folds into the policy-derived store; unknown values
+            // are rejected with the accepted set named
+            let store = match args.get("cache") {
+                None => CacheStore::for_policy(&policy),
+                Some(c) => {
+                    let c = CacheStore::parse(c)?;
+                    if c == CacheStore::Int8 && !policy.quantized {
+                        // integer storage only exists for quantized
+                        // policies; fp16 serving degrades to the f32 cache
+                        println!("fp16 policy has no integer cache; serving with the f32 cache");
+                        CacheStore::F32
+                    } else {
+                        c
+                    }
+                }
+            };
+            let b = HostBackend::new(hc, batch, &params, store)?;
             let mut stats = ServeStats::new(batch);
             let mut sched = Scheduler::new(b, batch)?;
             let results = sched.run(&queue, &mut stats)?;
@@ -441,8 +627,38 @@ mod tests {
     #[test]
     fn set_works_in_both_forms() {
         assert_eq!(args_of(&["x", "--set", "kd_ratio=0.5"]), args_of(&["x", "--set=kd_ratio=0.5"]));
+        // --set entries stay unflattened so bad values can be rejected
+        // with the key named
         assert_eq!(args_of(&["x", "--set", "kd_ratio=0.5"]),
-                   vec![("kd_ratio".to_string(), "0.5".to_string())]);
+                   vec![("set".to_string(), "kd_ratio=0.5".to_string())]);
+    }
+
+    #[test]
+    fn train_cfg_applies_and_rejects_set_overrides() {
+        let args = parse_argv(vec!["qat".into(), "--set".into(), "kd_ratio=0.5".into()]);
+        assert_eq!(args.train_cfg().unwrap().kd_ratio, 0.5);
+        // a bad value for a known key is a hard error naming the key
+        let args = parse_argv(vec!["qat".into(), "--set".into(), "steps=notanumber".into()]);
+        let e = args.train_cfg().unwrap_err().to_string();
+        assert!(e.contains("steps"), "{e}");
+        // an unknown --set key is a hard error
+        let args = parse_argv(vec!["qat".into(), "--set".into(), "typo_key=1".into()]);
+        assert!(args.train_cfg().is_err());
+        // non-set flags that don't name training keys pass through
+        let args = parse_argv(vec!["qat".into(), "--prec".into(), "fp16".into()]);
+        assert!(args.train_cfg().is_ok());
+    }
+
+    #[test]
+    fn set_reaches_pipeline_keys_too() {
+        // the pre-policy behavior `--set qat_steps=200` must keep working
+        let args = parse_argv(vec!["exp".into(), "--set".into(), "qat_steps=200".into()]);
+        assert_eq!(args.pipeline_cfg().unwrap().qat_steps, 200);
+        // train_cfg tolerates pipeline-only keys under --set...
+        assert!(args.train_cfg().is_ok());
+        // ...but a bad value still fails loudly where the key is consumed
+        let args = parse_argv(vec!["exp".into(), "--set".into(), "qat_steps=abc".into()]);
+        assert!(args.pipeline_cfg().is_err());
     }
 
     #[test]

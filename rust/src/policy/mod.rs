@@ -1,0 +1,696 @@
+//! `policy` — the typed quantization-policy API.
+//!
+//! SiLQ's central claim is that **one** simple recipe (which tensors are
+//! quantized, to how many bits, with which step rule) covers weights,
+//! activations and cache across model variants. This module makes that
+//! recipe a first-class value instead of a spray of loose `bits: u32`
+//! parameters, calib strings and ad-hoc CLI matches:
+//!
+//! * [`TensorPolicy`] — one tensor class's scheme: bit width,
+//!   [`Granularity`] (per-tensor / per-channel / per-token),
+//!   [`QuantMode`] (static calibrated steps vs dynamic per-write steps)
+//!   and [`CalibMethod`] (how static steps are initialized).
+//! * [`QuantPolicy`] — the five slots the paper's Figure 2 places
+//!   (`weights`, `acts`, `cache`, `head`, `query`) plus the
+//!   online-rotation ablation flag.
+//!
+//! A [`QuantPolicy`] round-trips through a compact **spec string**
+//! (`Display`/`FromStr`):
+//!
+//! ```text
+//! spec := "fp16" | core [":" mod ("," mod)*]
+//! core := "w" BITS "a" BITS "kv" BITS          (weights / acts / KV cache)
+//! mod  := "statacts" | "dynacts"               (activation step mode)
+//!       | "h" BITS                             (head bits, default 8)
+//!       | "q" BITS                             (query bits, default 16)
+//!       | "rot"                                (online-rotation ablation)
+//!       | "acal=" ("quantile" | "max")         (activation calibration)
+//!       | "wcal=" ("mse" | "lsq")              (weight calibration)
+//! ```
+//!
+//! `w4a8kv8` is the paper's main recipe; `w4a8kv8:statacts` its
+//! base-model variant; `fp16` the unquantized baseline. [`PRESETS`] names
+//! the ablation-table configurations and maps them onto the manifest
+//! precision names (`a8d-c8-w4`, ...), which [`QuantPolicy::resolve`]
+//! also parses directly — so every entry point (`--prec` on
+//! `eval`/`qat`/`serve`, `silq prec`, the manifest, the hostmodel
+//! builtins) speaks one currency.
+//!
+//! Conversions: [`QuantPolicy::from_prec`] / [`QuantPolicy::to_prec`]
+//! bridge to the manifest's [`PrecCfg`] losslessly (the manifest carries
+//! no calibration choice, so calib defaults survive one direction only).
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use std::fmt;
+use std::str::FromStr;
+
+use crate::config::PrecCfg;
+
+/// Step-size granularity of one tensor class.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Granularity {
+    /// One step per tensor (per layer) — static activation sites.
+    PerTensor,
+    /// One step per output channel — weights and the head.
+    PerChannel,
+    /// One step per token row (per head sub-row for cache/query) computed
+    /// at run time — the dynamic ('d') activation mode.
+    PerToken,
+}
+
+impl fmt::Display for Granularity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Granularity::PerTensor => "per-tensor",
+            Granularity::PerChannel => "per-channel",
+            Granularity::PerToken => "per-token",
+        })
+    }
+}
+
+/// When step sizes are decided.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuantMode {
+    /// Steps are calibrated offline (and learned during QAT).
+    Static,
+    /// Steps are recomputed from each value row at run time.
+    Dynamic,
+}
+
+impl fmt::Display for QuantMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            QuantMode::Static => "static",
+            QuantMode::Dynamic => "dynamic",
+        })
+    }
+}
+
+/// How static steps are initialized from calibration statistics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CalibMethod {
+    /// Percentile rule for activations (paper section 3.1).
+    Quantile,
+    /// Plain max-abs for activations (Table 4 ablation).
+    Max,
+    /// Convex-MSE search for weights (paper Eq. 2).
+    Mse,
+    /// LSQ-paper initialization for weights (Table 4 ablation).
+    Lsq,
+}
+
+impl CalibMethod {
+    /// Parse an activation-side calibration name.
+    pub fn parse_act(s: &str) -> Result<CalibMethod> {
+        match s {
+            "quantile" => Ok(CalibMethod::Quantile),
+            "max" => Ok(CalibMethod::Max),
+            other => bail!("unknown activation calibration {other:?} (quantile|max)"),
+        }
+    }
+
+    /// Parse a weight-side calibration name.
+    pub fn parse_weight(s: &str) -> Result<CalibMethod> {
+        match s {
+            "mse" => Ok(CalibMethod::Mse),
+            "lsq" => Ok(CalibMethod::Lsq),
+            other => bail!("unknown weight calibration {other:?} (mse|lsq)"),
+        }
+    }
+}
+
+impl fmt::Display for CalibMethod {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            CalibMethod::Quantile => "quantile",
+            CalibMethod::Max => "max",
+            CalibMethod::Mse => "mse",
+            CalibMethod::Lsq => "lsq",
+        })
+    }
+}
+
+/// The quantization scheme of one tensor class.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TensorPolicy {
+    pub bits: u32,
+    pub granularity: Granularity,
+    pub mode: QuantMode,
+    pub calib: CalibMethod,
+}
+
+impl TensorPolicy {
+    /// A weight-class slot: per-output-channel static steps.
+    pub const fn weight(bits: u32, calib: CalibMethod) -> TensorPolicy {
+        TensorPolicy { bits, granularity: Granularity::PerChannel, mode: QuantMode::Static, calib }
+    }
+
+    /// An activation-class slot; granularity follows the mode (dynamic
+    /// steps are per token row, static steps are per tensor).
+    pub const fn act(bits: u32, mode: QuantMode, calib: CalibMethod) -> TensorPolicy {
+        let granularity = match mode {
+            QuantMode::Dynamic => Granularity::PerToken,
+            QuantMode::Static => Granularity::PerTensor,
+        };
+        TensorPolicy { bits, granularity, mode, calib }
+    }
+}
+
+/// The full precision policy: one [`TensorPolicy`] per Figure-2 slot.
+///
+/// `quantized == false` is the fp16 baseline; the slots then keep their
+/// default values so conversion with the manifest's [`PrecCfg`] (which
+/// carries default bit fields even for fp16) stays lossless.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct QuantPolicy {
+    pub quantized: bool,
+    /// Linear-layer weights (per-output-channel).
+    pub weights: TensorPolicy,
+    /// Activations feeding every linear / matmul.
+    pub acts: TensorPolicy,
+    /// K/V cache rows (quantize-on-write in the pool).
+    pub cache: TensorPolicy,
+    /// Final head: input activation and weights share this width.
+    pub head: TensorPolicy,
+    /// Attention query rows (INT16 in the paper).
+    pub query: TensorPolicy,
+    /// QuaRot-style online Hadamard ablation (artifact backend only).
+    pub online_rot: bool,
+}
+
+impl QuantPolicy {
+    /// The unquantized baseline.
+    pub fn fp16() -> QuantPolicy {
+        QuantPolicy { quantized: false, ..QuantPolicy::integer(4, 8, 8) }
+    }
+
+    /// A canonical integer policy: `weight_bits` per-channel weights,
+    /// dynamic per-token `act_bits` activations, `cache_bits` KV cache,
+    /// 8-bit head, 16-bit query, default calibrations.
+    pub fn integer(weight_bits: u32, act_bits: u32, cache_bits: u32) -> QuantPolicy {
+        QuantPolicy {
+            quantized: true,
+            weights: TensorPolicy::weight(weight_bits, CalibMethod::Mse),
+            acts: TensorPolicy::act(act_bits, QuantMode::Dynamic, CalibMethod::Quantile),
+            cache: TensorPolicy::act(cache_bits, QuantMode::Dynamic, CalibMethod::Quantile),
+            head: TensorPolicy::weight(8, CalibMethod::Mse),
+            query: TensorPolicy::act(16, QuantMode::Dynamic, CalibMethod::Quantile),
+            online_rot: false,
+        }
+    }
+
+    /// The paper's main recipe (W4A8KV8, dynamic per-token acts).
+    pub fn w4a8kv8() -> QuantPolicy {
+        QuantPolicy::integer(4, 8, 8)
+    }
+
+    /// Switch the runtime-quantized slots (acts, cache, query) to static
+    /// calibrated per-tensor steps — the base-model ('s') recipe.
+    pub fn with_static_acts(mut self) -> QuantPolicy {
+        for slot in [&mut self.acts, &mut self.cache, &mut self.query] {
+            slot.mode = QuantMode::Static;
+            slot.granularity = Granularity::PerTensor;
+        }
+        self
+    }
+
+    /// Switch the runtime-quantized slots to dynamic per-token steps.
+    pub fn with_dynamic_acts(mut self) -> QuantPolicy {
+        for slot in [&mut self.acts, &mut self.cache, &mut self.query] {
+            slot.mode = QuantMode::Dynamic;
+            slot.granularity = Granularity::PerToken;
+        }
+        self
+    }
+
+    /// Set the activation-side calibration (acts, cache and query share
+    /// one trained step-parameter family, so they calibrate together).
+    pub fn with_act_calib(mut self, calib: CalibMethod) -> QuantPolicy {
+        for slot in [&mut self.acts, &mut self.cache, &mut self.query] {
+            slot.calib = calib;
+        }
+        self
+    }
+
+    /// Set the weight-side calibration (weights and head share it).
+    pub fn with_weight_calib(mut self, calib: CalibMethod) -> QuantPolicy {
+        self.weights.calib = calib;
+        self.head.calib = calib;
+        self
+    }
+
+    /// Check the policy against the hardware envelope the codebase
+    /// implements (the paper's deployment constraints).
+    pub fn validate(&self) -> Result<()> {
+        if !self.quantized {
+            ensure!(!self.online_rot, "the fp16 baseline has no online rotation");
+            return Ok(());
+        }
+        let range = |name: &str, bits: u32, lo: u32, hi: u32| -> Result<()> {
+            ensure!(
+                (lo..=hi).contains(&bits),
+                "{name} bits must be {lo}..={hi}, got {bits}"
+            );
+            Ok(())
+        };
+        range("weight", self.weights.bits, 2, 16)?;
+        range("act", self.acts.bits, 2, 16)?;
+        // KvPool stores cache integers in i8 slabs
+        range("cache", self.cache.bits, 2, 8)?;
+        range("head", self.head.bits, 2, 16)?;
+        range("query", self.query.bits, 2, 16)?;
+        for (name, slot) in [("weights", &self.weights), ("head", &self.head)] {
+            ensure!(
+                slot.granularity == Granularity::PerChannel && slot.mode == QuantMode::Static,
+                "{name} must be static per-output-channel (hardware constraint)"
+            );
+            ensure!(
+                matches!(slot.calib, CalibMethod::Mse | CalibMethod::Lsq),
+                "{name} calibration must be mse|lsq"
+            );
+        }
+        for (name, slot) in [("acts", &self.acts), ("cache", &self.cache), ("query", &self.query)] {
+            let want = match slot.mode {
+                QuantMode::Dynamic => Granularity::PerToken,
+                QuantMode::Static => Granularity::PerTensor,
+            };
+            ensure!(
+                slot.granularity == want,
+                "{name}: {} granularity must be {want}",
+                slot.mode
+            );
+            ensure!(
+                matches!(slot.calib, CalibMethod::Quantile | CalibMethod::Max),
+                "{name} calibration must be quantile|max"
+            );
+        }
+        // one trained step-parameter set (sa_*/sc_*) covers all three
+        // runtime slots, so their modes and calibrations must agree — this
+        // also keeps the spec string an unambiguous encoding
+        ensure!(
+            self.cache.mode == self.acts.mode && self.query.mode == self.acts.mode,
+            "cache/query step mode must match the activation mode"
+        );
+        ensure!(
+            self.cache.calib == self.acts.calib && self.query.calib == self.acts.calib,
+            "cache/query calibration must match the activation calibration"
+        );
+        ensure!(
+            self.head.calib == self.weights.calib,
+            "head calibration must match the weight calibration"
+        );
+        Ok(())
+    }
+
+    /// Lift a manifest precision into a typed policy. The manifest carries
+    /// no calibration choice, so calib fields take their defaults.
+    pub fn from_prec(pc: &PrecCfg) -> Result<QuantPolicy> {
+        let mode = if pc.act_dynamic { QuantMode::Dynamic } else { QuantMode::Static };
+        let p = QuantPolicy {
+            quantized: pc.quantized,
+            weights: TensorPolicy::weight(pc.weight_bits, CalibMethod::Mse),
+            acts: TensorPolicy::act(pc.act_bits, mode, CalibMethod::Quantile),
+            cache: TensorPolicy::act(pc.cache_bits, mode, CalibMethod::Quantile),
+            head: TensorPolicy::weight(pc.head_bits, CalibMethod::Mse),
+            query: TensorPolicy::act(pc.query_bits, mode, CalibMethod::Quantile),
+            online_rot: pc.online_rot,
+        };
+        if p.quantized {
+            p.validate().with_context(|| format!("precision {}", pc.name))?;
+        }
+        Ok(p)
+    }
+
+    /// Lower the policy back to manifest form under `name`. Fails when the
+    /// policy uses a shape `PrecCfg` cannot carry; the calibration choice
+    /// is dropped (the manifest does not record it).
+    pub fn to_prec(&self, name: &str) -> Result<PrecCfg> {
+        ensure!(
+            self.cache.mode == self.acts.mode && self.query.mode == self.acts.mode,
+            "PrecCfg has a single act_dynamic switch; cache/query mode must match acts"
+        );
+        Ok(PrecCfg {
+            name: name.to_string(),
+            quantized: self.quantized,
+            act_bits: self.acts.bits,
+            act_dynamic: self.acts.mode == QuantMode::Dynamic,
+            cache_bits: self.cache.bits,
+            weight_bits: self.weights.bits,
+            head_bits: self.head.bits,
+            query_bits: self.query.bits,
+            online_rot: self.online_rot,
+        })
+    }
+
+    /// Resolve any user-facing precision string: a preset name
+    /// (`w4a8kv8-base`), a manifest-style legacy name (`a8d-c4-w4`), or an
+    /// inline spec string (`w4a8kv8:statacts,h6`).
+    pub fn resolve(s: &str) -> Result<QuantPolicy> {
+        if let Some(p) = QuantPolicy::preset(s) {
+            return Ok(p);
+        }
+        if let Some(p) = QuantPolicy::from_legacy_name(s) {
+            return Ok(p);
+        }
+        s.parse()
+    }
+
+    /// Look up a named preset (see [`PRESETS`]).
+    pub fn preset(name: &str) -> Option<QuantPolicy> {
+        let p = PRESETS.iter().find(|p| p.name == name)?;
+        Some(p.spec.parse().expect("preset specs are canonical"))
+    }
+
+    /// Parse the legacy manifest naming scheme `a<A><d|s>-c<C>-w<W>[-rot]`
+    /// (plus `fp16`, which [`QuantPolicy::preset`] already covers).
+    fn from_legacy_name(s: &str) -> Option<QuantPolicy> {
+        let (s, rot) = match s.strip_suffix("-rot") {
+            Some(rest) => (rest, true),
+            None => (s, false),
+        };
+        let mut it = s.split('-');
+        let (a, c, w) = (it.next()?, it.next()?, it.next()?);
+        if it.next().is_some() {
+            return None;
+        }
+        let a = a.strip_prefix('a')?;
+        // match the trailing mode byte first: d/s are ASCII, so the slice
+        // below is always on a char boundary (split_at would panic on a
+        // multi-byte final char)
+        let dynamic = match a.as_bytes().last()? {
+            b'd' => true,
+            b's' => false,
+            _ => return None,
+        };
+        let abits: u32 = a[..a.len() - 1].parse().ok()?;
+        let cbits: u32 = c.strip_prefix('c')?.parse().ok()?;
+        let wbits: u32 = w.strip_prefix('w')?.parse().ok()?;
+        let mut p = QuantPolicy::integer(wbits, abits, cbits);
+        if !dynamic {
+            p = p.with_static_acts();
+        }
+        p.online_rot = rot;
+        p.validate().ok()?;
+        Some(p)
+    }
+
+    /// Multi-line human rendering for `silq prec`.
+    pub fn describe(&self) -> String {
+        if !self.quantized {
+            return "fp16: unquantized baseline (f32 host math, f32 KV cache)\n".into();
+        }
+        let slot = |name: &str, t: &TensorPolicy| {
+            format!(
+                "  {name:<8} INT{:<2} {:<12} {:<8} calib={}\n",
+                t.bits,
+                t.granularity.to_string(),
+                t.mode.to_string(),
+                t.calib
+            )
+        };
+        let mut out = String::new();
+        out += &slot("weights", &self.weights);
+        out += &slot("acts", &self.acts);
+        out += &slot("cache", &self.cache);
+        out += &slot("head", &self.head);
+        out += &slot("query", &self.query);
+        out += &format!(
+            "  online rotation: {}\n",
+            if self.online_rot { "yes (artifact backend only)" } else { "no" }
+        );
+        out
+    }
+}
+
+impl fmt::Display for QuantPolicy {
+    /// The canonical spec string; `FromStr` inverts it exactly.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if !self.quantized {
+            return f.write_str("fp16");
+        }
+        write!(f, "w{}a{}kv{}", self.weights.bits, self.acts.bits, self.cache.bits)?;
+        let mut mods: Vec<String> = vec![];
+        if self.acts.mode == QuantMode::Static {
+            mods.push("statacts".into());
+        }
+        if self.head.bits != 8 {
+            mods.push(format!("h{}", self.head.bits));
+        }
+        if self.query.bits != 16 {
+            mods.push(format!("q{}", self.query.bits));
+        }
+        if self.online_rot {
+            mods.push("rot".into());
+        }
+        if self.acts.calib == CalibMethod::Max {
+            mods.push("acal=max".into());
+        }
+        if self.weights.calib == CalibMethod::Lsq {
+            mods.push("wcal=lsq".into());
+        }
+        if !mods.is_empty() {
+            write!(f, ":{}", mods.join(","))?;
+        }
+        Ok(())
+    }
+}
+
+/// Take a leading decimal number off `s`.
+fn take_num(s: &str) -> Result<(u32, &str)> {
+    let end = s.find(|c: char| !c.is_ascii_digit()).unwrap_or(s.len());
+    ensure!(end > 0, "expected a number at {s:?}");
+    Ok((s[..end].parse().map_err(|e| anyhow!("bad number in {s:?}: {e}"))?, &s[end..]))
+}
+
+/// Parse the `w<W>a<A>kv<KV>` core.
+fn parse_core(core: &str) -> Result<(u32, u32, u32)> {
+    let rest = core.strip_prefix('w').context("spec core must start with w<bits>")?;
+    let (w, rest) = take_num(rest)?;
+    let rest = rest.strip_prefix('a').context("expected a<bits> after the weight width")?;
+    let (a, rest) = take_num(rest)?;
+    let rest = rest.strip_prefix("kv").context("expected kv<bits> after the act width")?;
+    let (kv, rest) = take_num(rest)?;
+    ensure!(rest.is_empty(), "trailing garbage {rest:?} in spec core");
+    Ok((w, a, kv))
+}
+
+impl FromStr for QuantPolicy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<QuantPolicy> {
+        let s = s.trim();
+        ensure!(!s.is_empty(), "empty precision spec");
+        let (core, mods) = match s.split_once(':') {
+            Some((c, m)) => {
+                ensure!(!m.is_empty(), "empty modifier list after ':' in {s:?}");
+                (c, m)
+            }
+            None => (s, ""),
+        };
+        let mut p = if core == "fp16" {
+            ensure!(mods.is_empty(), "fp16 takes no modifiers");
+            QuantPolicy::fp16()
+        } else {
+            let (w, a, kv) = parse_core(core)
+                .with_context(|| format!("bad precision spec {s:?} (grammar: w4a8kv8[:mods] | fp16)"))?;
+            QuantPolicy::integer(w, a, kv)
+        };
+        for m in mods.split(',').filter(|m| !m.is_empty()) {
+            if let Some(v) = m.strip_prefix("acal=") {
+                p = p.with_act_calib(CalibMethod::parse_act(v)?);
+            } else if let Some(v) = m.strip_prefix("wcal=") {
+                p = p.with_weight_calib(CalibMethod::parse_weight(v)?);
+            } else if m == "dynacts" {
+                p = p.with_dynamic_acts();
+            } else if m == "statacts" || m == "staticacts" {
+                p = p.with_static_acts();
+            } else if m == "rot" {
+                p.online_rot = true;
+            } else if let Some(v) = m.strip_prefix('h') {
+                p.head.bits = take_num(v).and_then(|(b, rest)| {
+                    ensure!(rest.is_empty(), "trailing garbage in h modifier");
+                    Ok(b)
+                })?;
+            } else if let Some(v) = m.strip_prefix('q') {
+                p.query.bits = take_num(v).and_then(|(b, rest)| {
+                    ensure!(rest.is_empty(), "trailing garbage in q modifier");
+                    Ok(b)
+                })?;
+            } else {
+                bail!(
+                    "unknown policy modifier {m:?} \
+                     (dynacts|statacts|h<bits>|q<bits>|rot|acal=quantile|max|wcal=mse|lsq)"
+                );
+            }
+        }
+        p.validate()?;
+        Ok(p)
+    }
+}
+
+/// One named preset in the paper's ablation table.
+pub struct PolicyPreset {
+    pub name: &'static str,
+    /// canonical spec string (parses via `QuantPolicy`'s `FromStr`)
+    pub spec: &'static str,
+    /// equivalent artifact-manifest precision name, when one exists
+    pub manifest_prec: Option<&'static str>,
+    pub note: &'static str,
+}
+
+/// The preset table `silq prec list` prints, mirroring the paper's
+/// ablations (Table 4) plus the serving baselines.
+pub const PRESETS: &[PolicyPreset] = &[
+    PolicyPreset {
+        name: "fp16",
+        spec: "fp16",
+        manifest_prec: Some("fp16"),
+        note: "unquantized deployment baseline",
+    },
+    PolicyPreset {
+        name: "w4a8kv8",
+        spec: "w4a8kv8",
+        manifest_prec: Some("a8d-c8-w4"),
+        note: "paper main recipe: INT4 weights, dynamic per-token INT8 acts, INT8 KV (instruct)",
+    },
+    PolicyPreset {
+        name: "w4a8kv8-base",
+        spec: "w4a8kv8:statacts",
+        manifest_prec: Some("a8s-c8-w4"),
+        note: "static per-tensor activation steps (base-model recipe, LSQ-trained)",
+    },
+    PolicyPreset {
+        name: "w4a8kv4",
+        spec: "w4a8kv4",
+        manifest_prec: Some("a8d-c4-w4"),
+        note: "4-bit KV-cache ablation",
+    },
+    PolicyPreset {
+        name: "w4a8kv8-rot",
+        spec: "w4a8kv8:rot",
+        manifest_prec: Some("a8d-c8-w4-rot"),
+        note: "online-rotation ablation (artifact backend only)",
+    },
+    PolicyPreset {
+        name: "w8a8kv8",
+        spec: "w8a8kv8",
+        manifest_prec: None,
+        note: "8-bit weights everywhere — accuracy headroom check",
+    },
+    PolicyPreset {
+        name: "kv8-only",
+        spec: "w16a16kv8:h16",
+        manifest_prec: None,
+        note: "cache-only quantization: near-fp 16-bit weights/acts, INT8 KV",
+    },
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_core_round_trips() {
+        for s in ["fp16", "w4a8kv8", "w4a8kv4", "w8a8kv8", "w2a4kv2"] {
+            let p: QuantPolicy = s.parse().unwrap();
+            assert_eq!(p.to_string(), s, "canonical spec must round-trip");
+        }
+    }
+
+    #[test]
+    fn modifiers_round_trip_in_canonical_order() {
+        let p: QuantPolicy = "w4a8kv8:statacts,h6,q8,rot,acal=max,wcal=lsq".parse().unwrap();
+        assert_eq!(p.acts.mode, QuantMode::Static);
+        assert_eq!(p.head.bits, 6);
+        assert_eq!(p.query.bits, 8);
+        assert!(p.online_rot);
+        assert_eq!(p.acts.calib, CalibMethod::Max);
+        assert_eq!(p.weights.calib, CalibMethod::Lsq);
+        let s = p.to_string();
+        assert_eq!(s.parse::<QuantPolicy>().unwrap(), p);
+        // non-canonical order parses to the same policy
+        let q: QuantPolicy = "w4a8kv8:wcal=lsq,rot,acal=max,q8,h6,statacts".parse().unwrap();
+        assert_eq!(q, p);
+    }
+
+    #[test]
+    fn dynacts_is_the_default() {
+        let a: QuantPolicy = "w4a8kv8".parse().unwrap();
+        let b: QuantPolicy = "w4a8kv8:dynacts".parse().unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.acts.granularity, Granularity::PerToken);
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        for s in [
+            "", "w4", "w4a8", "w4a8kv", "a8w4kv8", "w4a8kv8:", "w4a8kv8:turbo",
+            "w4a8kv99", "w1a8kv8", "fp16:rot", "w4a8kv8x", "w4a8kv8:h",
+        ] {
+            assert!(s.parse::<QuantPolicy>().is_err(), "{s:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn legacy_manifest_names_resolve() {
+        let p = QuantPolicy::resolve("a8d-c8-w4").unwrap();
+        assert_eq!(p, "w4a8kv8".parse().unwrap());
+        let p = QuantPolicy::resolve("a8s-c8-w4").unwrap();
+        assert_eq!(p, "w4a8kv8:statacts".parse().unwrap());
+        let p = QuantPolicy::resolve("a8d-c4-w4").unwrap();
+        assert_eq!(p.cache.bits, 4);
+        let p = QuantPolicy::resolve("a8d-c8-w4-rot").unwrap();
+        assert!(p.online_rot);
+        assert!(QuantPolicy::resolve("int1").is_err());
+        assert!(QuantPolicy::resolve("a8x-c8-w4").is_err());
+        // malformed multi-byte input must error, not panic on a byte slice
+        assert!(QuantPolicy::resolve("a8µ-c8-w4").is_err());
+        assert!(QuantPolicy::resolve("aµd-c8-w4").is_err());
+    }
+
+    #[test]
+    fn presets_parse_and_match_manifest_names() {
+        for preset in PRESETS {
+            let p = QuantPolicy::preset(preset.name).unwrap();
+            p.validate().unwrap();
+            if let Some(legacy) = preset.manifest_prec {
+                assert_eq!(
+                    p,
+                    QuantPolicy::resolve(legacy).unwrap(),
+                    "preset {} must equal manifest precision {legacy}",
+                    preset.name
+                );
+            }
+        }
+        assert!(QuantPolicy::preset("nope").is_none());
+    }
+
+    #[test]
+    fn prec_cfg_round_trip_is_lossless() {
+        let pc = PrecCfg {
+            name: "a8s-c8-w4".into(),
+            quantized: true,
+            act_bits: 8,
+            act_dynamic: false,
+            cache_bits: 8,
+            weight_bits: 4,
+            head_bits: 8,
+            query_bits: 16,
+            online_rot: false,
+        };
+        let p = QuantPolicy::from_prec(&pc).unwrap();
+        let back = p.to_prec(&pc.name).unwrap();
+        assert_eq!(format!("{pc:?}"), format!("{back:?}"));
+    }
+
+    #[test]
+    fn validation_catches_inconsistent_modes() {
+        let mut p = QuantPolicy::w4a8kv8();
+        p.cache.mode = QuantMode::Static;
+        p.cache.granularity = Granularity::PerTensor;
+        assert!(p.validate().is_err());
+        let mut p = QuantPolicy::w4a8kv8();
+        p.weights.calib = CalibMethod::Quantile;
+        assert!(p.validate().is_err());
+    }
+}

@@ -15,9 +15,10 @@
 
 use anyhow::Result;
 
-use crate::config::{ModelCfg, PrecCfg};
+use crate::config::ModelCfg;
 use crate::linalg::{hadamard, random_rotation, Mat};
 use crate::model::ParamStore;
+use crate::policy::QuantPolicy;
 use crate::quant;
 use crate::train::calibrate::{calibrate_weight_steps, CalibStats};
 use crate::util::Rng;
@@ -25,10 +26,11 @@ use crate::util::Rng;
 pub mod gptq;
 pub use gptq::gptq_quantize_family;
 
-/// RTN: calibrate per-channel weight steps (convex MSE). The quantization
-/// itself happens inside the model's fake-quant ops at run time.
-pub fn rtn(qs: &mut ParamStore, prec: &PrecCfg) -> Result<()> {
-    calibrate_weight_steps(qs, prec, "mse")
+/// RTN: calibrate per-channel weight steps under the policy's weight
+/// calibration. The quantization itself happens inside the model's
+/// fake-quant ops at run time.
+pub fn rtn(qs: &mut ParamStore, policy: &QuantPolicy) -> Result<()> {
+    calibrate_weight_steps(qs, policy)
 }
 
 /// SmoothQuant α-migration: for each norm-fed linear family, scale channel
@@ -38,7 +40,7 @@ pub fn rtn(qs: &mut ParamStore, prec: &PrecCfg) -> Result<()> {
 pub fn smoothquant(
     qs: &mut ParamStore,
     mc: &ModelCfg,
-    prec: &PrecCfg,
+    policy: &QuantPolicy,
     stats: &CalibStats,
     alpha: f32,
 ) -> Result<()> {
@@ -91,21 +93,26 @@ pub fn smoothquant(
             }
         }
     }
-    calibrate_weight_steps(qs, prec, "mse")
+    calibrate_weight_steps(qs, policy)
 }
 
 /// GPTQ over every linear family using the calib Gram matrices as Hessians.
-pub fn gptq(qs: &mut ParamStore, _mc: &ModelCfg, prec: &PrecCfg, stats: &CalibStats) -> Result<()> {
-    calibrate_weight_steps(qs, prec, "mse")?;
+pub fn gptq(
+    qs: &mut ParamStore,
+    _mc: &ModelCfg,
+    policy: &QuantPolicy,
+    stats: &CalibStats,
+) -> Result<()> {
+    calibrate_weight_steps(qs, policy)?;
     let fams: [(&str, &str, &str, u32); 8] = [
-        ("wq", "sw_q", "gram_x1", prec.weight_bits),
-        ("wk", "sw_k", "gram_x1", prec.weight_bits),
-        ("wv", "sw_v", "gram_x1", prec.weight_bits),
-        ("wo", "sw_o", "gram_o", prec.weight_bits),
-        ("wg", "sw_g", "gram_x2", prec.weight_bits),
-        ("wu", "sw_u", "gram_x2", prec.weight_bits),
-        ("wd", "sw_d", "gram_d", prec.weight_bits),
-        ("head", "sw_head", "gram_head", prec.head_bits),
+        ("wq", "sw_q", "gram_x1", policy.weights.bits),
+        ("wk", "sw_k", "gram_x1", policy.weights.bits),
+        ("wv", "sw_v", "gram_x1", policy.weights.bits),
+        ("wo", "sw_o", "gram_o", policy.weights.bits),
+        ("wg", "sw_g", "gram_x2", policy.weights.bits),
+        ("wu", "sw_u", "gram_x2", policy.weights.bits),
+        ("wd", "sw_d", "gram_d", policy.weights.bits),
+        ("head", "sw_head", "gram_head", policy.head.bits),
     ];
     for (wn, sn, gn, bits) in fams {
         let (gdims, gdata) = stats.get(gn).clone();
@@ -212,16 +219,17 @@ pub fn apply_rotation(qs: &mut ParamStore, mc: &ModelCfg, r: &Mat) -> Result<()>
 
 /// Total per-channel weight quantization MSE of the store (rotation
 /// candidate selection objective).
-pub fn total_weight_mse(qs: &ParamStore, prec: &PrecCfg) -> Result<f64> {
+pub fn total_weight_mse(qs: &ParamStore, policy: &QuantPolicy) -> Result<f64> {
+    let wb = policy.weights.bits;
     let mut total = 0f64;
     for wn in ["wq", "wk", "wv", "wo", "wg", "wu", "wd"] {
         let shape = qs.shape(wn)?.to_vec();
         let n = shape[shape.len() - 1];
         let w = qs.get(wn)?;
         for chunk in w.chunks(shape[shape.len() - 2] * n) {
-            let steps = quant::calib::weight_step_mse_per_channel(chunk, n, prec.weight_bits);
+            let steps = quant::calib::weight_step_mse_per_channel(chunk, n, wb);
             let mut q = chunk.to_vec();
-            quant::fake_quant_per_channel(&mut q, n, &steps, prec.weight_bits);
+            quant::fake_quant_per_channel(&mut q, n, &steps, wb);
             total += q.iter().zip(chunk).map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>();
         }
     }
@@ -234,7 +242,7 @@ pub fn total_weight_mse(qs: &ParamStore, prec: &PrecCfg) -> Result<f64> {
 pub fn spinquant(
     qs: &mut ParamStore,
     mc: &ModelCfg,
-    prec: &PrecCfg,
+    policy: &QuantPolicy,
     stats: &CalibStats,
     n_candidates: usize,
     seed: u64,
@@ -251,7 +259,7 @@ pub fn spinquant(
     for r in cands {
         let mut trial = qs.clone();
         apply_rotation(&mut trial, mc, &r)?;
-        let mse = total_weight_mse(&trial, prec)?;
+        let mse = total_weight_mse(&trial, policy)?;
         if best.as_ref().map(|(b, _)| mse < *b).unwrap_or(true) {
             best = Some((mse, r));
         }
@@ -277,7 +285,7 @@ pub fn spinquant(
         }
         stats2.tensors.insert(gn.to_string(), (dims, out));
     }
-    gptq(qs, mc, prec, &stats2)
+    gptq(qs, mc, policy, &stats2)
 }
 
 #[cfg(test)]

@@ -5,9 +5,9 @@
 use anyhow::Result;
 use std::collections::BTreeMap;
 
-use crate::config::PrecCfg;
 use crate::data::{Batcher, DataMix, World};
 use crate::model::ParamStore;
+use crate::policy::{CalibMethod, QuantPolicy};
 use crate::quant::{self, qbounds};
 use crate::runtime::{build_inputs, literal_i32, to_f32_vec, Engine};
 
@@ -84,23 +84,24 @@ pub fn quantile_col(bits: u32, use_max: bool) -> usize {
 }
 
 /// Set the static activation/cache/query steps of a quantized store from
-/// calib statistics. No-op entries are skipped for dynamic configs (they
-/// have no `sa_*`/`sc_*` params).
+/// calib statistics, per the policy's activation-side calibration
+/// (`Quantile` = paper percentile rule, `Max` = ablation). No-op entries
+/// are skipped for dynamic configs (they have no `sa_*`/`sc_*` params).
 pub fn calibrate_act_steps(
     qs: &mut ParamStore,
-    prec: &PrecCfg,
+    policy: &QuantPolicy,
     stats: &CalibStats,
-    use_max: bool,
 ) -> Result<()> {
+    let use_max = policy.acts.calib == CalibMethod::Max;
     let site_bits: [(&str, &str, u32); 8] = [
-        ("sa_x1", "qs_x1", prec.act_bits),
-        ("sa_q", "qs_q", prec.query_bits),
-        ("sc_k", "qs_k", prec.cache_bits),
-        ("sc_v", "qs_v", prec.cache_bits),
-        ("sa_o", "qs_o", prec.act_bits),
-        ("sa_x2", "qs_x2", prec.act_bits),
-        ("sa_d", "qs_d", prec.act_bits),
-        ("sa_head", "qs_head", prec.head_bits),
+        ("sa_x1", "qs_x1", policy.acts.bits),
+        ("sa_q", "qs_q", policy.query.bits),
+        ("sc_k", "qs_k", policy.cache.bits),
+        ("sc_v", "qs_v", policy.cache.bits),
+        ("sa_o", "qs_o", policy.acts.bits),
+        ("sa_x2", "qs_x2", policy.acts.bits),
+        ("sa_d", "qs_d", policy.acts.bits),
+        ("sa_head", "qs_head", policy.head.bits),
     ];
     for (param, stat, bits) in site_bits {
         if !qs.has(param) {
@@ -122,19 +123,24 @@ pub fn calibrate_act_steps(
     Ok(())
 }
 
-/// Set per-output-channel weight steps by the paper's convex-MSE rule
-/// (`mse`) or the LSQ-paper rule (`lsq`). Handles stacked [L, K, N] weights.
-pub fn calibrate_weight_steps(qs: &mut ParamStore, prec: &PrecCfg, method: &str) -> Result<()> {
+/// Set per-output-channel weight steps by the policy's weight-side
+/// calibration: the paper's convex-MSE rule (`Mse`) or the LSQ-paper rule
+/// (`Lsq`). Handles stacked [L, K, N] weights.
+pub fn calibrate_weight_steps(qs: &mut ParamStore, policy: &QuantPolicy) -> Result<()> {
     let families: [(&str, &str, u32); 8] = [
-        ("wq", "sw_q", prec.weight_bits),
-        ("wk", "sw_k", prec.weight_bits),
-        ("wv", "sw_v", prec.weight_bits),
-        ("wo", "sw_o", prec.weight_bits),
-        ("wg", "sw_g", prec.weight_bits),
-        ("wu", "sw_u", prec.weight_bits),
-        ("wd", "sw_d", prec.weight_bits),
-        ("head", "sw_head", prec.head_bits),
+        ("wq", "sw_q", policy.weights.bits),
+        ("wk", "sw_k", policy.weights.bits),
+        ("wv", "sw_v", policy.weights.bits),
+        ("wo", "sw_o", policy.weights.bits),
+        ("wg", "sw_g", policy.weights.bits),
+        ("wu", "sw_u", policy.weights.bits),
+        ("wd", "sw_d", policy.weights.bits),
+        ("head", "sw_head", policy.head.bits),
     ];
+    let per_channel = |slice: &[f32], n: usize, bits: u32| match policy.weights.calib {
+        CalibMethod::Lsq => quant::calib::weight_step_lsq_per_channel(slice, n, bits),
+        _ => quant::calib::weight_step_mse_per_channel(slice, n, bits),
+    };
     for (wname, sname, bits) in families {
         if !qs.has(sname) {
             continue;
@@ -145,20 +151,11 @@ pub fn calibrate_weight_steps(qs: &mut ParamStore, prec: &PrecCfg, method: &str)
             let (l, k, n) = (wshape[0], wshape[1], wshape[2]);
             let mut all = Vec::with_capacity(l * n);
             for li in 0..l {
-                let slice = &w[li * k * n..(li + 1) * k * n];
-                let s = match method {
-                    "lsq" => quant::calib::weight_step_lsq_per_channel(slice, n, bits),
-                    _ => quant::calib::weight_step_mse_per_channel(slice, n, bits),
-                };
-                all.extend(s);
+                all.extend(per_channel(&w[li * k * n..(li + 1) * k * n], n, bits));
             }
             all
         } else {
-            let n = wshape[1];
-            match method {
-                "lsq" => quant::calib::weight_step_lsq_per_channel(&w, n, bits),
-                _ => quant::calib::weight_step_mse_per_channel(&w, n, bits),
-            }
+            per_channel(&w, wshape[1], bits)
         };
         qs.set(sname, steps)?;
     }

@@ -44,10 +44,10 @@ fn quantized_kd_training_decreases_loss_and_moves_steps() {
 
     // calibrate a static-quant store
     let stats = collect_stats(&engine, "tiny_fp16_calib", &fp16, &world, 2, 0).unwrap();
-    let pc = engine.manifest.prec("a8s-c8-w4").unwrap().clone();
+    let policy = engine.manifest.prec("a8s-c8-w4").unwrap().policy().unwrap();
     let mut qs = quantize_store(&engine, "tiny_a8s-c8-w4_fwd", &fp16).unwrap();
-    calibrate_act_steps(&mut qs, &pc, &stats, false).unwrap();
-    calibrate_weight_steps(&mut qs, &pc, "mse").unwrap();
+    calibrate_act_steps(&mut qs, &policy, &stats).unwrap();
+    calibrate_weight_steps(&mut qs, &policy).unwrap();
     for name in ["sa_x1", "sa_q", "sc_k", "sa_head", "sw_q", "sw_head"] {
         assert!(qs.get(name).unwrap().iter().all(|&v| v > 0.0), "{name} uncalibrated");
     }

@@ -1,0 +1,98 @@
+//! Integration: the typed `QuantPolicy` API against the manifest contract.
+//!
+//! Everything here runs in a bare checkout (no compiled artifacts): the
+//! fixture below mirrors the `prec` lines `python -m compile.aot` writes
+//! for `python/compile/configs.py::PRECISIONS`, which is the full set of
+//! precisions the Python side can emit.
+
+use std::path::PathBuf;
+
+use silq::config::Manifest;
+use silq::hostmodel::{builtin_model, builtin_prec, HostCfg};
+use silq::policy::{CalibMethod, QuantMode, QuantPolicy, PRESETS};
+
+/// The `prec` lines of a real manifest (mirroring configs.py PRECISIONS).
+const FIXTURE_PRECS: &str = "\
+# silq artifact manifest v1 (precision fixture)
+prec fp16 quantized=0 act_bits=8 act_dynamic=1 cache_bits=8 weight_bits=4 head_bits=8 query_bits=16 online_rot=0
+prec a8d-c8-w4 quantized=1 act_bits=8 act_dynamic=1 cache_bits=8 weight_bits=4 head_bits=8 query_bits=16 online_rot=0
+prec a8s-c8-w4 quantized=1 act_bits=8 act_dynamic=0 cache_bits=8 weight_bits=4 head_bits=8 query_bits=16 online_rot=0
+prec a8d-c4-w4 quantized=1 act_bits=8 act_dynamic=1 cache_bits=4 weight_bits=4 head_bits=8 query_bits=16 online_rot=0
+prec a8d-c8-w4-rot quantized=1 act_bits=8 act_dynamic=1 cache_bits=8 weight_bits=4 head_bits=8 query_bits=16 online_rot=1
+";
+
+#[test]
+fn every_fixture_prec_converts_to_policy_and_back_without_loss() {
+    let m = Manifest::parse(FIXTURE_PRECS, PathBuf::new()).unwrap();
+    assert_eq!(m.precs.len(), 5, "fixture must cover all configs.py precisions");
+    for pc in m.precs.values() {
+        let policy = pc.policy().unwrap_or_else(|e| panic!("{}: {e}", pc.name));
+        let back = policy.to_prec(&pc.name).unwrap();
+        // PrecCfg derives no PartialEq; the Debug rendering covers every
+        // field, so identical renderings mean identical configs
+        assert_eq!(
+            format!("{pc:?}"),
+            format!("{back:?}"),
+            "{}: policy round trip must be lossless",
+            pc.name
+        );
+        // the legacy name resolves to the same policy through the grammar
+        assert_eq!(
+            QuantPolicy::resolve(&pc.name).unwrap(),
+            policy,
+            "{}: name resolution must agree with the manifest entry",
+            pc.name
+        );
+    }
+}
+
+#[test]
+fn fixture_precs_agree_with_builtin_mirrors() {
+    let m = Manifest::parse(FIXTURE_PRECS, PathBuf::new()).unwrap();
+    for pc in m.precs.values() {
+        let builtin = builtin_prec(&pc.name)
+            .unwrap_or_else(|| panic!("{} must have a builtin mirror", pc.name));
+        assert_eq!(format!("{pc:?}"), format!("{builtin:?}"), "{} mirror drifted", pc.name);
+    }
+}
+
+#[test]
+fn presets_cover_the_fixture_and_extend_it() {
+    let m = Manifest::parse(FIXTURE_PRECS, PathBuf::new()).unwrap();
+    // every manifest-mapped preset matches its manifest entry
+    for preset in PRESETS {
+        let policy = QuantPolicy::preset(preset.name).unwrap();
+        if let Some(name) = preset.manifest_prec {
+            let pc = &m.precs[name];
+            assert_eq!(pc.policy().unwrap(), policy, "preset {} vs {name}", preset.name);
+        }
+    }
+    // and at least one preset goes beyond what the manifest can name
+    assert!(PRESETS.iter().any(|p| p.manifest_prec.is_none()));
+}
+
+#[test]
+fn inline_specs_build_host_configs_without_any_manifest() {
+    let mc = builtin_model("tiny").unwrap();
+    for spec in ["fp16", "w4a8kv8", "w4a8kv8:statacts", "w4a8kv4", "w8a8kv8:q8,acal=max"] {
+        let policy = QuantPolicy::resolve(spec).unwrap();
+        let hc = HostCfg::from_policy(&mc, &policy).unwrap_or_else(|e| panic!("{spec}: {e}"));
+        assert_eq!(hc.policy, policy);
+    }
+    // the rotation ablation stays artifact-only
+    let rot = QuantPolicy::resolve("w4a8kv8:rot").unwrap();
+    assert!(HostCfg::from_policy(&mc, &rot).is_err());
+}
+
+#[test]
+fn calibration_survives_spec_round_trip_but_not_prec_cfg() {
+    // calib choices are policy-level: the spec string keeps them, the
+    // manifest form (which never carried them) drops them by design
+    let p: QuantPolicy = "w4a8kv8:acal=max,wcal=lsq".parse().unwrap();
+    assert_eq!(p.to_string().parse::<QuantPolicy>().unwrap(), p);
+    let back = p.to_prec("x").unwrap().policy().unwrap();
+    assert_eq!(back.acts.calib, CalibMethod::Quantile);
+    assert_eq!(back.weights.calib, CalibMethod::Mse);
+    assert_eq!(back.acts.bits, p.acts.bits);
+    assert_eq!(back.acts.mode, QuantMode::Dynamic);
+}

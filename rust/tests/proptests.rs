@@ -169,6 +169,11 @@ fn prop_host_incremental_decode_matches_batched_forward() {
             1 => (true, false),
             _ => (false, true),
         };
+        let policy = match (quantized, act_dynamic) {
+            (false, _) => silq::policy::QuantPolicy::fp16(),
+            (true, true) => "w4a8kv8".parse().unwrap(),
+            (true, false) => "w4a8kv8:statacts".parse().unwrap(),
+        };
         let cfg = HostCfg {
             vocab: 64,
             d_model: 16,
@@ -176,13 +181,7 @@ fn prop_host_incremental_decode_matches_batched_forward() {
             n_heads: 2,
             d_ff: 32,
             seq_len: 12,
-            quantized,
-            act_bits: 8,
-            act_dynamic,
-            cache_bits: 8,
-            weight_bits: 4,
-            head_bits: 8,
-            query_bits: 16,
+            policy,
             rope_theta: 10000.0,
         };
         let params = host_test_params(&cfg, seed);
@@ -243,5 +242,44 @@ fn prop_bundle_roundtrip_random() {
         let c = TensorBundle::load(&path).unwrap();
         assert_eq!(b.tensors, c.tensors);
         let _ = std::fs::remove_file(path);
+    }
+}
+
+#[test]
+fn prop_policy_spec_display_fromstr_roundtrip() {
+    // The policy API's contract: the canonical spec string (`Display`) is
+    // a lossless encoding — `FromStr` inverts it exactly for every valid
+    // policy, and re-rendering is idempotent.
+    use silq::policy::{CalibMethod, QuantPolicy};
+    for seed in 0..200u64 {
+        let mut rng = Rng::new(seed ^ 0x7011C7);
+        let p = if rng.below(8) == 0 {
+            QuantPolicy::fp16()
+        } else {
+            let w = 2 + rng.below(15) as u32; // 2..=16
+            let a = 2 + rng.below(15) as u32; // 2..=16
+            let kv = 2 + rng.below(7) as u32; // 2..=8
+            let mut p = QuantPolicy::integer(w, a, kv);
+            if rng.below(2) == 0 {
+                p = p.with_static_acts();
+            }
+            p.head.bits = 2 + rng.below(15) as u32;
+            p.query.bits = 2 + rng.below(15) as u32;
+            if rng.below(4) == 0 {
+                p.online_rot = true;
+            }
+            if rng.below(3) == 0 {
+                p = p.with_act_calib(CalibMethod::Max);
+            }
+            if rng.below(3) == 0 {
+                p = p.with_weight_calib(CalibMethod::Lsq);
+            }
+            p
+        };
+        p.validate().unwrap_or_else(|e| panic!("seed {seed}: generated invalid policy: {e}"));
+        let s = p.to_string();
+        let q: QuantPolicy = s.parse().unwrap_or_else(|e| panic!("seed {seed}: {s:?}: {e}"));
+        assert_eq!(q, p, "seed {seed}: spec {s:?} must round-trip exactly");
+        assert_eq!(q.to_string(), s, "seed {seed}: re-rendering must be idempotent");
     }
 }

@@ -88,10 +88,10 @@ fn smoothquant_reduces_act_range_on_outlier_channels() {
     let cfg = PipelineCfg { eval_items: 4, ..Default::default() };
     let p = Pipeline::new(&engine, cfg).unwrap();
     let stats = p.calib_stats(&fp16, 1).unwrap();
-    let pc = engine.manifest.prec("a8d-c8-w4").unwrap().clone();
+    let policy = engine.manifest.prec("a8d-c8-w4").unwrap().policy().unwrap();
     let mut qs = quantize_store(&engine, "tiny_a8d-c8-w4_fwd", &fp16).unwrap();
     let ln_before = qs.get("ln1").unwrap().to_vec();
-    ptq::smoothquant(&mut qs, &mc, &pc, &stats, 0.5).unwrap();
+    ptq::smoothquant(&mut qs, &mc, &policy, &stats, 0.5).unwrap();
     let ln_after = qs.get("ln1").unwrap().to_vec();
     assert!(ln_before.iter().zip(&ln_after).any(|(a, b)| (a - b).abs() > 1e-6),
         "smoothquant must migrate scales into the norm");

@@ -16,6 +16,7 @@ use silq::serve::{
 use silq::util::Rng;
 
 fn host_cfg(act_dynamic: bool) -> HostCfg {
+    let spec = if act_dynamic { "w4a8kv8" } else { "w4a8kv8:statacts" };
     HostCfg {
         vocab: 256,
         d_model: 32,
@@ -23,13 +24,7 @@ fn host_cfg(act_dynamic: bool) -> HostCfg {
         n_heads: 4,
         d_ff: 64,
         seq_len: 24,
-        quantized: true,
-        act_bits: 8,
-        act_dynamic,
-        cache_bits: 8,
-        weight_bits: 4,
-        head_bits: 8,
-        query_bits: 16,
+        policy: spec.parse().unwrap(),
         rope_theta: 10000.0,
     }
 }

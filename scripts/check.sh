@@ -13,6 +13,11 @@ cargo test -q --offline
 echo "== cargo clippy -D warnings =="
 cargo clippy --offline --all-targets -- -D warnings
 
+echo "== cargo doc -D warnings =="
+# the public policy/forward/serve APIs must stay documented (broken
+# intra-doc links and missing docs fail the gate)
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --offline --quiet
+
 echo "== cargo fmt --check =="
 cargo fmt --check
 
