@@ -2,7 +2,7 @@
 #
 # `make check` is the tier-1 gate every PR must keep green (see ROADMAP.md).
 
-.PHONY: check fmt artifacts bench pytest
+.PHONY: check fmt artifacts bench bench-quick pytest
 
 # tier-1: release build + full test suite + clippy (-D warnings) + formatting
 check:
@@ -18,6 +18,12 @@ artifacts:
 
 bench:
 	cd rust && cargo bench --offline 2>&1 | tee ../bench_output.txt
+
+# smoke bench: only the sections that regenerate the machine-readable perf
+# trajectory (BENCH_serve.json + BENCH_hostmodel.json) — runs in seconds,
+# suitable for CI
+bench-quick:
+	cd rust && cargo bench --offline -- --quick
 
 pytest:
 	cd python && python3 -m pytest tests/ -q

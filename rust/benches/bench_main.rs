@@ -3,11 +3,14 @@
 //! the compute that regenerates it, plus the §Perf hot-path microbenches.
 //!
 //! Run: `cargo bench --offline` (results also land in bench_output.txt via
-//! the Makefile).
+//! the Makefile). `cargo bench --offline -- --quick` (`make bench-quick`)
+//! runs only the sections that regenerate the machine-readable perf
+//! trajectory (BENCH_serve.json + BENCH_hostmodel.json) — the CI smoke.
 
 use silq::config::Manifest;
 use silq::data::vocab::Vocab;
 use silq::data::{Batcher, DataMix, World};
+use silq::kernels::DecodeScratch;
 use silq::linalg::{hadamard, Mat};
 use silq::model::ParamStore;
 use silq::ptq::gptq::gptq_quantize_family;
@@ -15,7 +18,7 @@ use silq::quant;
 use silq::runtime::{build_inputs, literal_i32, Engine};
 use silq::evalharness::decode::argmax;
 use silq::forward::{decode_greedy, HostForward};
-use silq::hostmodel::{host_test_params, HostModel};
+use silq::hostmodel::{builtin_model, host_test_params, HostModel, KvPool};
 use silq::serve::{serve_inline, ArtifactBackend, CacheStore, GenRequest, HostBackend, HostCfg};
 use silq::util::{timer::bench_ms, Rng, Timer};
 
@@ -58,8 +61,179 @@ fn write_bench_serve_json(entries: &[String]) {
     }
 }
 
+/// Prefill `prompt` into a fresh slot, then decode `steps` tokens through
+/// the scratch-reusing incremental forward; returns mean ms per decoded
+/// token over `reps` repetitions (after one warmup rep).
+fn decode_ms_per_tok(
+    model: &HostModel,
+    pool: &mut KvPool,
+    prompt: &[i32],
+    steps: usize,
+    reps: usize,
+) -> f64 {
+    let mut scratch = DecodeScratch::for_cfg(&model.cfg);
+    let mut total_ms = 0.0;
+    for rep in 0..reps + 1 {
+        let slot = pool.alloc().expect("pool slot");
+        let mut tok = 0i32;
+        for (pos, &t) in prompt.iter().enumerate() {
+            let lg = model
+                .forward_token_into(pool, slot, t, pos, true, &mut scratch)
+                .expect("prefill")
+                .expect("logits");
+            tok = argmax(lg) as i32;
+        }
+        let t0 = Timer::start();
+        for i in 0..steps {
+            let lg = model
+                .forward_token_into(pool, slot, tok, prompt.len() + i, true, &mut scratch)
+                .expect("decode")
+                .expect("logits");
+            tok = argmax(lg) as i32;
+        }
+        if rep > 0 {
+            total_ms += t0.millis();
+        }
+        pool.free(slot);
+    }
+    total_ms / (reps * steps) as f64
+}
+
+/// Integer-kernel vs f32-reference hostmodel benches on one builtin model;
+/// returns the JSON entry for BENCH_hostmodel.json.
+fn bench_hostmodel_entry(model_name: &str, policy: &str, seed: u64) -> String {
+    let mc = builtin_model(model_name).expect("builtin model");
+    let cfg = HostCfg::from_policy(&mc, &policy.parse().expect("policy")).expect("host cfg");
+    let params = host_test_params(&cfg, seed);
+    let int_model = HostModel::new(cfg.clone(), &params).expect("model");
+    let ref_model = HostModel::new_reference(cfg.clone(), &params).expect("reference");
+    assert!(int_model.integer_path(), "{model_name}/{policy} must run the integer kernels");
+
+    // prefill / scoring: batched forward_seq over a half-window prompt
+    let plen = cfg.seq_len / 2;
+    let prompt: Vec<i32> = (0..plen as i32).map(|i| 1 + (i * 13) % (cfg.vocab as i32 - 1)).collect();
+    let ms_prefill_int = bench_ms(1, 3, || {
+        let _ = int_model.forward_seq(&prompt).expect("fwd");
+    });
+    let ms_prefill_ref = bench_ms(1, 3, || {
+        let _ = ref_model.forward_seq(&prompt).expect("fwd");
+    });
+    let prefill_tok_s = plen as f64 / ms_prefill_int * 1e3;
+    let prefill_tok_s_ref = plen as f64 / ms_prefill_ref * 1e3;
+
+    // decode: steady-state forward_token over the deployment Int8 pool —
+    // the reference pays the dequantize-and-copy read path on the same
+    // resident representation (the pre-kernels behavior)
+    let steps = (cfg.seq_len - plen - 1).min(32);
+    let mut int_pool = int_model.make_pool(1, CacheStore::Int8).expect("pool");
+    let mut ref_pool = ref_model.make_pool(1, CacheStore::Int8).expect("pool");
+    let ms_tok_int = decode_ms_per_tok(&int_model, &mut int_pool, &prompt, steps, 3);
+    let ms_tok_ref = decode_ms_per_tok(&ref_model, &mut ref_pool, &prompt, steps, 3);
+    let decode_tok_s = 1e3 / ms_tok_int;
+    let decode_tok_s_ref = 1e3 / ms_tok_ref;
+    let speedup = ms_tok_ref / ms_tok_int.max(1e-9);
+
+    // bytes the attention read path touches per decoded token, mid-decode
+    let kv_len = plen + steps / 2;
+    let kv_bytes_int = int_pool.read_bytes_per_token(kv_len);
+    let kv_bytes_f32 = cfg.n_layers * 2 * kv_len * cfg.d_model * 4;
+    report(
+        &format!("decode {model_name} {policy} integer kernels"),
+        ms_tok_int,
+        &format!("({decode_tok_s:.0} tok/s)"),
+    );
+    report(
+        &format!("decode {model_name} {policy} f32 reference"),
+        ms_tok_ref,
+        &format!("({decode_tok_s_ref:.0} tok/s, int is {speedup:.1}x faster)"),
+    );
+    report(
+        &format!("prefill {model_name} {policy} integer GEMM"),
+        ms_prefill_int,
+        &format!("({prefill_tok_s:.0} tok/s vs {prefill_tok_s_ref:.0} f32)"),
+    );
+    format!(
+        "  {{\"model\": \"{model_name}\", \"policy\": \"{policy}\", \
+         \"prefill_tok_s\": {prefill_tok_s:.2}, \"prefill_tok_s_ref\": {prefill_tok_s_ref:.2}, \
+         \"decode_tok_s\": {decode_tok_s:.2}, \"decode_tok_s_ref\": {decode_tok_s_ref:.2}, \
+         \"decode_speedup\": {speedup:.3}, \
+         \"kv_read_bytes_per_token\": {kv_bytes_int}, \
+         \"kv_read_bytes_per_token_f32\": {kv_bytes_f32}, \
+         \"weight_bytes\": {}, \"weight_bytes_ref\": {}}}",
+        int_model.weight_bytes(),
+        ref_model.weight_bytes(),
+    )
+}
+
+/// Serve throughput through the host backend (quantized KV pool), int8 vs
+/// f32 store — the always-runnable serve trajectory entries.
+fn serve_host_entries() -> Vec<String> {
+    let mut serve_json: Vec<String> = vec![];
+    let cfg = HostCfg {
+        vocab: 256, d_model: 64, n_layers: 2, n_heads: 4, d_ff: 128, seq_len: 48,
+        policy: "w4a8kv8".parse().expect("policy spec"), rope_theta: 10000.0,
+    };
+    let params = host_test_params(&cfg, 9);
+    for (label, store) in
+        [("serve 32 reqs x8 tok, int8 kv pool", CacheStore::Int8),
+         ("serve 32 reqs x8 tok, f32 kv cache", CacheStore::F32)]
+    {
+        let reqs: Vec<GenRequest> = (0..32)
+            .map(|i| GenRequest::new(i, vec![1, 3, 22 + (i % 4) as i32, 10, 4], 8).ignore_eos())
+            .collect();
+        let backend = HostBackend::new(cfg.clone(), 8, &params, store).expect("backend");
+        let t = Timer::start();
+        let (results, stats) = serve_inline(backend, 8, reqs).expect("serve run");
+        let ms = t.millis();
+        report(label, ms, &format!(
+            "({:.0} tok/s, occ {:.0}%, {} reqs)",
+            stats.tokens_per_sec(), 100.0 * stats.batch_occupancy(), results.len()
+        ));
+        serve_json.push(bench_serve_entry(label, "host", "w4a8kv8", &stats));
+    }
+    serve_json
+}
+
+/// The `--quick` serve pass: host-backend entries only, straight to JSON.
+fn quick_serve_section() {
+    section("serve throughput (host backend, quantized KV pool)");
+    let entries = serve_host_entries();
+    write_bench_serve_json(&entries);
+}
+
+/// Machine-readable hostmodel perf trajectory, next to BENCH_serve.json.
+fn write_bench_hostmodel_json(entries: &[String]) {
+    let body = format!("[\n{}\n]\n", entries.join(",\n"));
+    match std::fs::write("../BENCH_hostmodel.json", &body) {
+        Ok(()) => println!("(hostmodel metrics -> BENCH_hostmodel.json)"),
+        Err(e) => eprintln!("warning: could not write ../BENCH_hostmodel.json: {e}"),
+    }
+}
+
 fn main() {
-    println!("silq bench harness (warmup+avg wall-clock; CPU PJRT)");
+    // --quick (make bench-quick): only the JSON-writing trajectory
+    // sections, so CI can regenerate BENCH_*.json in seconds
+    let quick = std::env::args().any(|a| a == "--quick");
+    println!("silq bench harness (warmup+avg wall-clock; CPU PJRT{})",
+             if quick { "; --quick" } else { "" });
+
+    // ---------------- integer decode kernels (BENCH_hostmodel.json) ------
+    // the deployment claim measured: packed-i8 GEMV/GEMM + zero-copy int8
+    // attention vs the f32 fake-quant reference on the same params
+    section("integer decode kernels (hostmodel hot loop)");
+    let mut hostmodel_json: Vec<String> = vec![];
+    hostmodel_json.push(bench_hostmodel_entry("small", "w4a8kv8", 33));
+    hostmodel_json.push(bench_hostmodel_entry("tiny", "w4a8kv8", 35));
+    if !quick {
+        hostmodel_json.push(bench_hostmodel_entry("small", "w4a8kv8:statacts", 37));
+    }
+    write_bench_hostmodel_json(&hostmodel_json);
+
+    if quick {
+        quick_serve_section();
+        println!("\nbench harness done (--quick)");
+        return;
+    }
 
     // ---------------- host-side quantization (L3 substrate) --------------
     section("quant substrate (feeds every PTQ table)");
@@ -125,31 +299,7 @@ fn main() {
     // BENCH_serve.json (repo root) so the perf trajectory is machine-
     // readable across PRs.
     section("serve throughput (host backend, quantized KV pool)");
-    let mut serve_json: Vec<String> = vec![];
-    {
-        let cfg = HostCfg {
-            vocab: 256, d_model: 64, n_layers: 2, n_heads: 4, d_ff: 128, seq_len: 48,
-            policy: "w4a8kv8".parse().expect("policy spec"), rope_theta: 10000.0,
-        };
-        let params = host_test_params(&cfg, 9);
-        for (label, store) in
-            [("serve 32 reqs x8 tok, int8 kv pool", CacheStore::Int8),
-             ("serve 32 reqs x8 tok, f32 kv cache", CacheStore::F32)]
-        {
-            let reqs: Vec<GenRequest> = (0..32)
-                .map(|i| GenRequest::new(i, vec![1, 3, 22 + (i % 4) as i32, 10, 4], 8).ignore_eos())
-                .collect();
-            let backend = HostBackend::new(cfg.clone(), 8, &params, store).expect("backend");
-            let t = Timer::start();
-            let (results, stats) = serve_inline(backend, 8, reqs).expect("serve run");
-            let ms = t.millis();
-            report(label, ms, &format!(
-                "({:.0} tok/s, occ {:.0}%, {} reqs)",
-                stats.tokens_per_sec(), 100.0 * stats.batch_occupancy(), results.len()
-            ));
-            serve_json.push(bench_serve_entry(label, "host", "w4a8kv8", &stats));
-        }
-    }
+    let mut serve_json = serve_host_entries();
 
     // ------- eval-style greedy decode: incremental vs full recompute ------
     // the ISSUE-2 win, measured: host incremental decode does O(1) work per

@@ -9,9 +9,11 @@ pub fn argmax(xs: &[f32]) -> usize {
     xs.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).map(|(i, _)| i).unwrap()
 }
 
-/// Log-probability of token `idx` under a softmax over `logits`.
+/// Log-probability of token `idx` under a softmax over `logits`. The max
+/// fold seeds with `f32::NEG_INFINITY` (the identity element of `max`),
+/// matching `kernels::softmax_inplace`.
 pub fn log_softmax_at(logits: &[f32], idx: usize) -> f32 {
-    let m = logits.iter().fold(f32::MIN, |a, &b| a.max(b));
+    let m = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
     let lse = logits.iter().map(|&x| (x - m).exp()).sum::<f32>().ln() + m;
     logits[idx] - lse
 }

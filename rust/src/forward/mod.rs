@@ -23,6 +23,7 @@ use std::sync::Arc;
 
 use crate::evalharness::decode::{argmax, pack_rows};
 use crate::hostmodel::{check_tokens, CacheStore, HostCfg, HostModel, KvPool};
+use crate::kernels::DecodeScratch;
 use crate::model::ParamStore;
 use crate::runtime::{build_inputs, literal_i32, to_f32_vec, Engine, Module};
 
@@ -252,7 +253,10 @@ impl ForwardBackend for ArtifactForward {
 /// Forward through the [`HostModel`] host transformer: batched calls run
 /// the full-sequence forward per row; incremental sessions keep the K/V
 /// cache resident in a quantized [`KvPool`] and advance one token per
-/// step. Runs with no artifacts built.
+/// step. Runs with no artifacts built. Lanes step serially through one
+/// persistent [`DecodeScratch`], so the steady-state decode loop (serve
+/// lanes and eval generation alike) performs no heap allocation inside
+/// the forward.
 pub struct HostForward {
     model: HostModel,
     pool: KvPool,
@@ -260,6 +264,8 @@ pub struct HostForward {
     slot_of_row: Vec<Option<usize>>,
     /// tokens already folded into the cache, per row
     processed: Vec<usize>,
+    /// every decode intermediate, reused across steps and rows
+    scratch: DecodeScratch,
 }
 
 impl HostForward {
@@ -269,15 +275,22 @@ impl HostForward {
         params: &ParamStore,
         store: CacheStore,
     ) -> Result<HostForward> {
+        Self::from_model(HostModel::new(cfg, params)?, n_rows, store)
+    }
+
+    /// Wrap an already-built model (e.g. a [`HostModel::new_reference`]
+    /// build for the f32-baseline benches) in a decode frontend.
+    pub fn from_model(model: HostModel, n_rows: usize, store: CacheStore) -> Result<HostForward> {
         ensure!(n_rows >= 1, "need at least one row");
-        let model = HostModel::new(cfg, params)?;
         let pool = model.make_pool(n_rows, store)?;
+        let scratch = DecodeScratch::for_cfg(&model.cfg);
         Ok(HostForward {
             model,
             pool,
             n_rows,
             slot_of_row: vec![None; n_rows],
             processed: vec![0; n_rows],
+            scratch,
         })
     }
 
@@ -309,7 +322,10 @@ impl HostForward {
         let slot = self.pool.alloc().context("KV pool exhausted")?;
         self.slot_of_row[row] = Some(slot);
         for (pos, &tok) in prompt[..prompt.len() - 1].iter().enumerate() {
-            if let Err(e) = self.model.forward_token(&mut self.pool, slot, tok, pos, false) {
+            let stepped = self
+                .model
+                .forward_token_into(&mut self.pool, slot, tok, pos, false, &mut self.scratch);
+            if let Err(e) = stepped {
                 self.evict_row(row);
                 return Err(e);
             }
@@ -327,8 +343,9 @@ impl HostForward {
     }
 
     /// Advance row `row` by one position: fold `toks`'s last token into the
-    /// cache and return the next-token logits.
-    pub fn step_row(&mut self, row: usize, toks: &[i32]) -> Result<Vec<f32>> {
+    /// cache and return the next-token logits (borrowed from the scratch —
+    /// valid until the next step).
+    pub fn step_row_borrowed(&mut self, row: usize, toks: &[i32]) -> Result<&[f32]> {
         let slot = self.slot_of_row[row].context("row has no cache slot")?;
         let pos = self.processed[row];
         ensure!(
@@ -338,10 +355,22 @@ impl HostForward {
         );
         let logits = self
             .model
-            .forward_token(&mut self.pool, slot, toks[pos], pos, true)?
+            .forward_token_into(&mut self.pool, slot, toks[pos], pos, true, &mut self.scratch)?
             .expect("logits requested");
         self.processed[row] = pos + 1;
         Ok(logits)
+    }
+
+    /// [`HostForward::step_row_borrowed`] returning owned logits.
+    pub fn step_row(&mut self, row: usize, toks: &[i32]) -> Result<Vec<f32>> {
+        Ok(self.step_row_borrowed(row, toks)?.to_vec())
+    }
+
+    /// Advance row `row` one position and pick the greedy token — the
+    /// serve hot path: no logits vector is materialized, the argmax reads
+    /// the scratch directly.
+    pub fn step_row_greedy(&mut self, row: usize, toks: &[i32]) -> Result<i32> {
+        Ok(argmax(self.step_row_borrowed(row, toks)?) as i32)
     }
 }
 

@@ -3,10 +3,15 @@
 //! Each decode session (a serve lane, or an eval/self-generation row) owns
 //! one *slot*: a contiguous per-layer slab of K and V rows, one row of
 //! `dim` channels per generated position. The pool applies the paper's
-//! cache quantization **on write** (Figure 2: C-bit K/V tensors) and
-//! dequantizes **on read**, so the decode path only ever sees f32 rows
-//! while the resident representation is the one a NorthPole-class
-//! deployment would hold.
+//! cache quantization **on write** (Figure 2: C-bit K/V tensors). Readers
+//! have two views:
+//!
+//! * [`KvPool::read_into`] — dequantize positions `0..len` into f32
+//!   buffers (the fake-quant view; the f32 fallback decode path).
+//! * [`KvPool::slab`] — the raw `i8` rows + their write steps, borrowed
+//!   straight out of the slab with **no copy and no dequantization**; the
+//!   integer attention kernel (`kernels::attend_i8`) computes `q·k` in
+//!   `i32` directly over this view.
 //!
 //! Two storage modes share one quantization rule:
 //! * [`CacheStore::F32`] — the QAT "fake quant" view: quantized values kept
@@ -14,13 +19,19 @@
 //! * [`CacheStore::Int8`] — the deployment view: the integers themselves
 //!   plus their steps. By the pack/unpack losslessness invariant (see
 //!   `quant::pack` and `prop_pack_unpack_exactly_lossless_2_to_8_bits`) both
-//!   modes dequantize to bit-identical f32, which is exactly the paper's
-//!   deployability claim — the serve integration test asserts greedy decode
-//!   is token-identical across the two.
+//!   modes **dequantize** to bit-identical f32 — the paper's deployability
+//!   claim at the value level, pinned by the unit tests below. Since the
+//!   integer-kernel PR, *decode* over the Int8 store runs exact `i32` q·k
+//!   over the slab while the F32 store attends over the fake-quant floats,
+//!   so end-to-end logits agree to float-rounding (~1e-5 relative) rather
+//!   than bit-for-bit; the serve integration test pins greedy decode
+//!   token-identical across the two on the builtin models, where top-logit
+//!   margins dwarf that rounding.
 
 use anyhow::{bail, ensure, Result};
 
-use crate::quant::{fake_quant_scalar, qbounds, round_half_even, EPS};
+use crate::kernels::{dyn_step, qint};
+use crate::quant::{fake_quant_prefloored, qbounds, EPS};
 
 /// How cache rows are quantized on write.
 #[derive(Clone, Debug)]
@@ -30,20 +41,48 @@ pub enum QuantRule {
     /// Fixed calibrated steps, one per (layer, channel); `k_steps` and
     /// `v_steps` are `[layers * dim]` row-major. This is the static ('s')
     /// cache mode: steps come from the trained `sc_k`/`sc_v` parameters or
-    /// from offline calibration.
-    Static { bits: u32, k_steps: Vec<f32>, v_steps: Vec<f32> },
+    /// from offline calibration. Steps must be pre-floored at `quant::EPS`
+    /// — build through [`QuantRule::floored`] (the floor is hoisted out of
+    /// the per-channel write/read loops).
+    Static {
+        /// cache bit width
+        bits: u32,
+        /// per-(layer, channel) K steps, `[layers * dim]`
+        k_steps: Vec<f32>,
+        /// per-(layer, channel) V steps, `[layers * dim]`
+        v_steps: Vec<f32>,
+    },
     /// Per-write dynamic steps over `rows` equal sub-rows of each cache row
     /// (one per attention head, matching `ste_dynamic_quantize`'s last-axis
     /// reduction on `[B, H, S, d_head]`). This is the dynamic ('d') mode.
-    Dynamic { bits: u32, rows: usize },
+    Dynamic {
+        /// cache bit width
+        bits: u32,
+        /// sub-rows per cache row (attention heads)
+        rows: usize,
+    },
 }
 
 impl QuantRule {
+    /// Floor the static step vectors at `quant::EPS` once, so the write,
+    /// read and attention inner loops can use them directly. Bit-identical
+    /// (`s.max(EPS)` is idempotent and the dynamic step is floored at
+    /// computation); both [`KvPool::new`] and `HostModel::new` apply this.
+    pub fn floored(mut self) -> QuantRule {
+        if let QuantRule::Static { k_steps, v_steps, .. } = &mut self {
+            for s in k_steps.iter_mut().chain(v_steps.iter_mut()) {
+                *s = s.max(EPS);
+            }
+        }
+        self
+    }
+
     /// Apply this rule's fake quantization to one position's K and V rows
     /// in place — the F32-store view of a cache write. Shared by
     /// [`KvPool::write`] and `HostModel::forward_seq` so the pooled
     /// incremental path and the batched full-sequence path quantize the
-    /// cache bit-identically.
+    /// cache bit-identically. Static steps must be pre-floored
+    /// ([`QuantRule::floored`]).
     pub fn quantize_f32(&self, layer: usize, k: &mut [f32], v: &mut [f32]) {
         debug_assert_eq!(k.len(), v.len());
         match self {
@@ -51,8 +90,8 @@ impl QuantRule {
             QuantRule::Static { bits, k_steps, v_steps } => {
                 let sb = layer * k.len();
                 for c in 0..k.len() {
-                    k[c] = fake_quant_scalar(k[c], k_steps[sb + c], *bits);
-                    v[c] = fake_quant_scalar(v[c], v_steps[sb + c], *bits);
+                    k[c] = fake_quant_prefloored(k[c], k_steps[sb + c], *bits);
+                    v[c] = fake_quant_prefloored(v[c], v_steps[sb + c], *bits);
                 }
             }
             QuantRule::Dynamic { bits, rows } => {
@@ -62,8 +101,54 @@ impl QuantRule {
                     let ks = dyn_step(&k[r * sub..(r + 1) * sub], qp);
                     let vs = dyn_step(&v[r * sub..(r + 1) * sub], qp);
                     for c in r * sub..(r + 1) * sub {
-                        k[c] = fake_quant_scalar(k[c], ks, *bits);
-                        v[c] = fake_quant_scalar(v[c], vs, *bits);
+                        k[c] = fake_quant_prefloored(k[c], ks, *bits);
+                        v[c] = fake_quant_prefloored(v[c], vs, *bits);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Integer twin of [`QuantRule::quantize_f32`]: quantize one position's
+    /// K and V rows into `i8` buffers — the representation the Int8 store
+    /// keeps and `kernels::attend_i8` consumes. For the dynamic rule the
+    /// per-sub-row steps land in `k_sc`/`v_sc` (`rows` values each); the
+    /// static rule reads its pre-floored step vectors and leaves the scale
+    /// slices untouched (its attention steps are per layer — see
+    /// `HostModel`). Shared by [`KvPool::write`] and
+    /// `HostModel::forward_seq`, which is what makes the incremental and
+    /// batched integer paths bit-identical. No-op for [`QuantRule::None`].
+    pub fn quantize_i8(
+        &self,
+        layer: usize,
+        k: &[f32],
+        v: &[f32],
+        kq: &mut [i8],
+        vq: &mut [i8],
+        k_sc: &mut [f32],
+        v_sc: &mut [f32],
+    ) {
+        debug_assert_eq!(k.len(), v.len());
+        match self {
+            QuantRule::None => {}
+            QuantRule::Static { bits, k_steps, v_steps } => {
+                let sb = layer * k.len();
+                for c in 0..k.len() {
+                    kq[c] = qint(k[c], k_steps[sb + c], *bits) as i8;
+                    vq[c] = qint(v[c], v_steps[sb + c], *bits) as i8;
+                }
+            }
+            QuantRule::Dynamic { bits, rows } => {
+                let (_, qp) = qbounds(*bits);
+                let sub = k.len() / rows;
+                for r in 0..*rows {
+                    let ks = dyn_step(&k[r * sub..(r + 1) * sub], qp);
+                    let vs = dyn_step(&v[r * sub..(r + 1) * sub], qp);
+                    k_sc[r] = ks;
+                    v_sc[r] = vs;
+                    for c in r * sub..(r + 1) * sub {
+                        kq[c] = qint(k[c], ks, *bits) as i8;
+                        vq[c] = qint(v[c], vs, *bits) as i8;
                     }
                 }
             }
@@ -74,7 +159,9 @@ impl QuantRule {
 /// Resident representation of the quantized values.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CacheStore {
+    /// fake-quant view: quantized values kept as f32
     F32,
+    /// deployment view: the integers + their steps
     Int8,
 }
 
@@ -102,13 +189,36 @@ impl CacheStore {
     }
 }
 
+/// Borrowed view of one (slot, layer)'s raw quantized K/V rows — what
+/// [`KvPool::slab`] hands the integer attention kernel. No copy is made:
+/// the slices alias the resident slab.
+pub struct KvSlabRef<'a> {
+    /// `i8` K rows, `[len * dim]` row-major by position
+    pub k: &'a [i8],
+    /// `i8` V rows, `[len * dim]` row-major by position
+    pub v: &'a [i8],
+    /// per-(position, head) K write steps `[len * rows]` — empty for the
+    /// static rule (whose steps live in the `QuantRule` / the model)
+    pub k_scales: &'a [f32],
+    /// per-(position, head) V write steps `[len * rows]` — empty for the
+    /// static rule
+    pub v_scales: &'a [f32],
+    /// sub-rows (heads) per position for the dynamic rule; 0 for static
+    pub rows: usize,
+}
+
 /// Slab pool: `slots` sessions x `layers` x `seq` positions x `dim` channels
 /// for K and V each.
 pub struct KvPool {
+    /// concurrent sessions
     pub slots: usize,
+    /// model layers
     pub layers: usize,
+    /// context window (positions per slot)
     pub seq: usize,
+    /// channels per row (`d_model`)
     pub dim: usize,
+    /// resident representation
     pub store: CacheStore,
     rule: QuantRule,
     // F32 storage (quantized values kept as floats)
@@ -124,6 +234,8 @@ pub struct KvPool {
 }
 
 impl KvPool {
+    /// Build a pool; the rule's static steps are floored here once
+    /// ([`QuantRule::floored`]).
     pub fn new(
         slots: usize,
         layers: usize,
@@ -160,7 +272,7 @@ impl KvPool {
             seq,
             dim,
             store,
-            rule,
+            rule: rule.floored(),
             kf: if int8 { vec![] } else { vec![0.0; n] },
             vf: if int8 { vec![] } else { vec![0.0; n] },
             ki: if int8 { vec![0; n] } else { vec![] },
@@ -172,6 +284,11 @@ impl KvPool {
         })
     }
 
+    /// The (floored) quantization rule this pool writes with.
+    pub fn rule(&self) -> &QuantRule {
+        &self.rule
+    }
+
     /// Claim a session slot; `None` when the pool is exhausted.
     pub fn alloc(&mut self) -> Option<usize> {
         let s = self.free.pop()?;
@@ -181,12 +298,20 @@ impl KvPool {
 
     /// Return a slot to the free list. Contents need no zeroing: positions
     /// are only ever read up to the owning session's length.
+    ///
+    /// Out-of-range slots and double frees are hard errors (release
+    /// asserts, not `debug_assert!`): in release either would silently
+    /// corrupt the free list and surface as a confusing panic far from the
+    /// bug — a lane double-freeing under load must fail *here*. The
+    /// double-free scan is O(free slots), noise next to a decode step.
     pub fn free(&mut self, slot: usize) {
-        debug_assert!(!self.free.contains(&slot), "double free of slot {slot}");
+        assert!(slot < self.slots, "free of out-of-range slot {slot} (pool has {})", self.slots);
+        assert!(!self.free.contains(&slot), "double free of slot {slot}");
         self.free.push(slot);
         self.in_use -= 1;
     }
 
+    /// Sessions currently holding a slot.
     pub fn slots_in_use(&self) -> usize {
         self.in_use
     }
@@ -207,6 +332,20 @@ impl KvPool {
         }
     }
 
+    /// Bytes the attention read path touches per decoded token when the
+    /// prefix holds `len` positions: K and V rows across every layer, plus
+    /// the dynamic write steps on the Int8 store. The integer slab reads
+    /// one byte per channel where the f32 path reads four — the bench
+    /// harness reports this next to decode tok/s.
+    pub fn read_bytes_per_token(&self, len: usize) -> usize {
+        let rows = match (&self.rule, self.store) {
+            (QuantRule::Dynamic { rows, .. }, CacheStore::Int8) => *rows,
+            _ => 0,
+        };
+        let elem = if self.store == CacheStore::Int8 { 1 } else { 4 };
+        self.layers * (2 * len * self.dim * elem + 2 * len * rows * 4)
+    }
+
     #[inline]
     fn base(&self, slot: usize, layer: usize, pos: usize) -> usize {
         debug_assert!(slot < self.slots && layer < self.layers && pos < self.seq);
@@ -218,40 +357,63 @@ impl KvPool {
         assert_eq!(k.len(), self.dim);
         assert_eq!(v.len(), self.dim);
         let base = self.base(slot, layer, pos);
-        match (&self.rule, self.store) {
-            (_, CacheStore::F32) => {
-                self.kf[base..base + self.dim].copy_from_slice(k);
-                self.vf[base..base + self.dim].copy_from_slice(v);
-                self.rule.quantize_f32(
-                    layer,
-                    &mut self.kf[base..base + self.dim],
-                    &mut self.vf[base..base + self.dim],
-                );
-            }
-            (QuantRule::Static { bits, k_steps, v_steps }, CacheStore::Int8) => {
-                let sb = layer * self.dim;
-                for c in 0..self.dim {
-                    self.ki[base + c] = qi(k[c], k_steps[sb + c], *bits);
-                    self.vi[base + c] = qi(v[c], v_steps[sb + c], *bits);
-                }
-            }
-            (QuantRule::Dynamic { bits, rows }, CacheStore::Int8) => {
-                let (_, qp) = qbounds(*bits);
-                let sub = self.dim / rows;
-                let scale_base = ((slot * self.layers + layer) * self.seq + pos) * rows;
-                for r in 0..*rows {
-                    let ks = dyn_step(&k[r * sub..(r + 1) * sub], qp);
-                    let vs = dyn_step(&v[r * sub..(r + 1) * sub], qp);
-                    self.k_scales[scale_base + r] = ks;
-                    self.v_scales[scale_base + r] = vs;
-                    for c in r * sub..(r + 1) * sub {
-                        self.ki[base + c] = qi(k[c], ks, *bits);
-                        self.vi[base + c] = qi(v[c], vs, *bits);
-                    }
-                }
-            }
-            (QuantRule::None, CacheStore::Int8) => unreachable!("rejected by KvPool::new"),
+        if self.store == CacheStore::F32 {
+            self.kf[base..base + self.dim].copy_from_slice(k);
+            self.vf[base..base + self.dim].copy_from_slice(v);
+            self.rule.quantize_f32(
+                layer,
+                &mut self.kf[base..base + self.dim],
+                &mut self.vf[base..base + self.dim],
+            );
+            return;
         }
+        // Int8 store: quantize straight into the slab. The static rule has
+        // no per-write scales (`rows == 0` slices an empty range).
+        let rows = match &self.rule {
+            QuantRule::Dynamic { rows, .. } => *rows,
+            _ => 0,
+        };
+        let sb = ((slot * self.layers + layer) * self.seq + pos) * rows;
+        self.rule.quantize_i8(
+            layer,
+            k,
+            v,
+            &mut self.ki[base..base + self.dim],
+            &mut self.vi[base..base + self.dim],
+            &mut self.k_scales[sb..sb + rows],
+            &mut self.v_scales[sb..sb + rows],
+        );
+    }
+
+    /// Borrow the raw `i8` K/V rows (and dynamic write steps) of positions
+    /// `0..len` — zero-copy input for `kernels::attend_i8`. `None` on the
+    /// F32 store, which keeps no integers. `len` past the window is a hard
+    /// error (like [`KvPool::free`]): the slab is contiguous across layers,
+    /// so a release over-read would silently attend over the next layer's
+    /// rows.
+    pub fn slab(&self, slot: usize, layer: usize, len: usize) -> Option<KvSlabRef<'_>> {
+        if self.store != CacheStore::Int8 {
+            return None;
+        }
+        assert!(len <= self.seq, "slab read past the window: {len} > {}", self.seq);
+        let base = self.base(slot, layer, 0);
+        let rows = match &self.rule {
+            QuantRule::Dynamic { rows, .. } => *rows,
+            _ => 0,
+        };
+        let (k_scales, v_scales) = if rows > 0 {
+            let sb = (slot * self.layers + layer) * self.seq * rows;
+            (&self.k_scales[sb..sb + len * rows], &self.v_scales[sb..sb + len * rows])
+        } else {
+            (&[][..], &[][..])
+        };
+        Some(KvSlabRef {
+            k: &self.ki[base..base + len * self.dim],
+            v: &self.vi[base..base + len * self.dim],
+            k_scales,
+            v_scales,
+            rows,
+        })
     }
 
     /// Dequantize-on-read positions `0..len` into `k_out`/`v_out`
@@ -277,8 +439,8 @@ impl KvPool {
                 for p in 0..len {
                     for c in 0..self.dim {
                         let i = p * self.dim + c;
-                        k_out[i] = self.ki[base + i] as f32 * k_steps[sb + c].max(EPS);
-                        v_out[i] = self.vi[base + i] as f32 * v_steps[sb + c].max(EPS);
+                        k_out[i] = self.ki[base + i] as f32 * k_steps[sb + c];
+                        v_out[i] = self.vi[base + i] as f32 * v_steps[sb + c];
                     }
                 }
             }
@@ -302,24 +464,6 @@ impl KvPool {
     }
 }
 
-/// The integer half of `fake_quant_scalar` (same EPS floor, clamp and
-/// round, minus the final multiply) — what the deployment target stores.
-/// Kept next to the dequant paths so the pair stays bit-consistent with
-/// `quant::fake_quant_scalar`.
-#[inline]
-fn qi(x: f32, s: f32, bits: u32) -> i8 {
-    let (qn, qp) = qbounds(bits);
-    let s = s.max(EPS);
-    round_half_even((x / s).clamp(qn as f32, qp as f32)) as i8
-}
-
-/// Dynamic per-row step: max|x| / q_p, floored at EPS (the 'd' mode rule).
-#[inline]
-fn dyn_step(row: &[f32], qp: i64) -> f32 {
-    let maxabs = row.iter().fold(0f32, |a, &b| a.max(b.abs()));
-    (maxabs / qp as f32).max(EPS)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -332,8 +476,7 @@ mod tests {
 
     #[test]
     fn alloc_free_slab_cycle() {
-        let mut p =
-            KvPool::new(2, 1, 4, 8, CacheStore::F32, QuantRule::None).unwrap();
+        let mut p = KvPool::new(2, 1, 4, 8, CacheStore::F32, QuantRule::None).unwrap();
         let a = p.alloc().unwrap();
         let b = p.alloc().unwrap();
         assert_ne!(a, b);
@@ -341,6 +484,24 @@ mod tests {
         assert_eq!(p.slots_in_use(), 2);
         p.free(a);
         assert_eq!(p.alloc(), Some(a));
+    }
+
+    #[test]
+    #[should_panic(expected = "double free of slot")]
+    fn double_free_is_a_hard_error() {
+        // regression: a debug_assert! let release builds corrupt the free
+        // list (the slot handed to two sessions) and panic far away
+        let mut p = KvPool::new(2, 1, 4, 8, CacheStore::F32, QuantRule::None).unwrap();
+        let a = p.alloc().unwrap();
+        p.free(a);
+        p.free(a);
+    }
+
+    #[test]
+    #[should_panic(expected = "out-of-range slot")]
+    fn out_of_range_free_is_a_hard_error() {
+        let mut p = KvPool::new(2, 1, 4, 8, CacheStore::F32, QuantRule::None).unwrap();
+        p.free(7);
     }
 
     #[test]
@@ -393,6 +554,7 @@ mod tests {
         ] {
             let mut p = KvPool::new(1, layers, 2, dim, CacheStore::F32, rule.clone()).unwrap();
             let s = p.alloc().unwrap();
+            let rule = rule.floored();
             for layer in 0..layers {
                 let (k, v) = (rand_row(&mut rng, dim), rand_row(&mut rng, dim));
                 p.write(s, layer, 0, &k, &v);
@@ -405,6 +567,49 @@ mod tests {
                 assert_eq!(vo, vq);
             }
         }
+    }
+
+    #[test]
+    fn slab_exposes_the_resident_integers() {
+        // the zero-copy view must agree exactly with the dequantizing read
+        let mut rng = Rng::new(7);
+        let (dim, rows, layers, seq) = (16usize, 4usize, 2usize, 4usize);
+        for rule in [
+            QuantRule::Dynamic { bits: 8, rows },
+            QuantRule::Static {
+                bits: 8,
+                k_steps: (0..layers * dim).map(|_| rng.uniform() * 0.05 + 1e-3).collect(),
+                v_steps: (0..layers * dim).map(|_| rng.uniform() * 0.05 + 1e-3).collect(),
+            },
+        ] {
+            let mut p = KvPool::new(1, layers, seq, dim, CacheStore::Int8, rule).unwrap();
+            let s = p.alloc().unwrap();
+            for layer in 0..layers {
+                for pos in 0..3 {
+                    let (k, v) = (rand_row(&mut rng, dim), rand_row(&mut rng, dim));
+                    p.write(s, layer, pos, &k, &v);
+                }
+            }
+            for layer in 0..layers {
+                let slab = p.slab(s, layer, 3).unwrap();
+                assert_eq!(slab.k.len(), 3 * dim);
+                let mut ko = vec![0.0; 3 * dim];
+                let mut vo = vec![0.0; 3 * dim];
+                p.read_into(s, layer, 3, &mut ko, &mut vo).unwrap();
+                for (i, &kq) in slab.k.iter().enumerate() {
+                    let scale = match p.rule() {
+                        QuantRule::Dynamic { .. } => slab.k_scales[(i / dim) * slab.rows
+                            + (i % dim) / (dim / slab.rows)],
+                        QuantRule::Static { k_steps, .. } => k_steps[layer * dim + i % dim],
+                        QuantRule::None => unreachable!(),
+                    };
+                    assert_eq!(kq as f32 * scale, ko[i], "rule {:?} idx {i}", p.rule());
+                }
+            }
+        }
+        // the f32 store keeps no integers
+        let p = KvPool::new(1, 1, 2, 8, CacheStore::F32, QuantRule::None).unwrap();
+        assert!(p.slab(0, 0, 1).is_none());
     }
 
     #[test]
@@ -442,6 +647,11 @@ mod tests {
         let pf = KvPool::new(4, 2, 8, 16, CacheStore::F32, rule.clone()).unwrap();
         let pi = KvPool::new(4, 2, 8, 16, CacheStore::Int8, rule).unwrap();
         assert!(pi.storage_bytes() * 2 < pf.storage_bytes());
+        // the integer slab reads 4x fewer row bytes; at this tiny dim/rows
+        // ratio the dynamic per-(position, head) scales claw half of that
+        // back, so the end-to-end ratio lands at exactly 2x (realistic
+        // shapes with dim >> rows approach 4x)
+        assert!(pf.read_bytes_per_token(8) >= 2 * pi.read_bytes_per_token(8));
     }
 
     #[test]

@@ -1,0 +1,613 @@
+//! `kernels` — integer decode kernels for the host forward.
+//!
+//! SiLQ's deployment claim is that the quantized model adds *no extra
+//! operations*, so an integer accelerator runs it strictly faster. Before
+//! this module the host path simulated quantization in f32: weights were
+//! fake-quantized but stored as 4-byte floats, and every decode step
+//! dequantized the whole cached prefix into fresh f32 buffers. These
+//! kernels make the claim real on the host:
+//!
+//! * [`QLinear`] — a linear weight folded to `i8` integers + one f32 step
+//!   per output channel (the `quant::pack` representation), with a fused
+//!   [`QLinear::gemv`] (one activation row) and a blocked
+//!   [`QLinear::gemm`] (many rows, one pass over the weights). Both
+//!   accumulate `i8×i8` products in `i32` — *exact* integer arithmetic —
+//!   and apply `scale_x · scale_w[c]` once per output channel, so GEMV and
+//!   GEMM are bit-identical by construction.
+//! * [`attend_i8`] — causal attention computed directly over the `i8` K/V
+//!   rows of the [`crate::hostmodel::KvPool`] slab: `q·k` in `i32`, then
+//!   softmax·V accumulated over the `i8` V rows. The per-token
+//!   `O(pos·d)` dequantize-and-copy of the old read path disappears.
+//! * [`DecodeScratch`] — every intermediate of one decode step, sized once
+//!   per model, so steady-state `forward_token` performs no heap
+//!   allocation (pinned by `tests/kernels_zero_alloc.rs`).
+//! * The integer/f32 *twins* ([`quant_rows_i8`] vs
+//!   [`crate::quant::dynamic_quant_rows`], [`qint`] vs
+//!   `quant::fake_quant_scalar`) share the step rules bit-for-bit: a
+//!   fake-quantized value is exactly `q · s` for the integer `q` these
+//!   kernels store, which is the pack/unpack losslessness invariant the
+//!   repo pins in `proptests.rs`.
+//!
+//! Why integer accumulation is exact: an `i8×i8` product is at most
+//! `2^14`, and the hot-path contraction lengths (`d_model`, `d_ff`,
+//! `d_head` times the quantization ranges) keep the running sum far below
+//! `2^31`, so the `i32` accumulator never rounds — eligibility is checked
+//! against exactly this bound in `HostModel::new`. The only f32 rounding
+//! left is the single per-channel descale multiply, which is why the
+//! integer path tracks the f32 fake-quant reference to ~1e-5 relative
+//! (and greedy decode is token-identical on the builtin models) without
+//! being bit-equal to it.
+
+pub mod scratch;
+
+pub use scratch::DecodeScratch;
+
+use crate::quant::{qbounds, round_half_even, EPS};
+
+// ---------------------------------------------------------------------------
+// quantization primitives (integer twins of quant::fake_quant_*)
+// ---------------------------------------------------------------------------
+
+/// The integer half of `quant::fake_quant_scalar`: clamp, round half to
+/// even, keep the integer. The step `s` must already be floored at
+/// [`EPS`] (see `QuantRule::floored` — the floor is hoisted out of the
+/// per-element inner loops).
+#[inline]
+pub fn qint(x: f32, s: f32, bits: u32) -> i32 {
+    let (qn, qp) = qbounds(bits);
+    round_half_even((x / s).clamp(qn as f32, qp as f32)) as i32
+}
+
+/// Dynamic per-sub-row step: `max|x| / q_p`, floored at [`EPS`] (the 'd'
+/// mode rule shared by activations, queries and the KV cache).
+#[inline]
+pub fn dyn_step(row: &[f32], qp: i64) -> f32 {
+    let maxabs = row.iter().fold(0f32, |a, &b| a.max(b.abs()));
+    (maxabs / qp as f32).max(EPS)
+}
+
+/// One quantization loop for every integer width: dynamic per-group steps
+/// when `step` is `None`, one static (pre-floored) step otherwise. Both
+/// public row quantizers delegate here so the step rule can never drift
+/// between the activation (`i8`) and query (`i32`) paths.
+fn quant_rows_impl<T: Copy>(
+    x: &[f32],
+    sub: usize,
+    bits: u32,
+    step: Option<f32>,
+    q: &mut [T],
+    scales: &mut [f32],
+    to: impl Fn(i32) -> T,
+) {
+    debug_assert_eq!(x.len() % sub, 0);
+    debug_assert_eq!(q.len(), x.len());
+    debug_assert_eq!(scales.len(), x.len() / sub);
+    let (_, qp) = qbounds(bits);
+    for (g, (xg, qg)) in x.chunks(sub).zip(q.chunks_mut(sub)).enumerate() {
+        let s = match step {
+            Some(s) => s,
+            None => dyn_step(xg, qp),
+        };
+        scales[g] = s;
+        for (qv, &xv) in qg.iter_mut().zip(xg) {
+            *qv = to(qint(xv, s, bits));
+        }
+    }
+}
+
+/// Quantize one activation row to `i8` over `sub`-sized groups.
+/// `scales[g]` receives group g's step, so `q[i] as f32 * scales[i / sub]`
+/// reproduces the fake-quant value bit-exactly.
+pub fn quant_rows_i8(
+    x: &[f32],
+    sub: usize,
+    bits: u32,
+    step: Option<f32>,
+    q: &mut [i8],
+    scales: &mut [f32],
+) {
+    quant_rows_impl(x, sub, bits, step, q, scales, |v| v as i8);
+}
+
+/// [`quant_rows_i8`] widened to `i32` values — the query row, which the
+/// paper keeps at 16 bits, does not fit an `i8`.
+pub fn quant_rows_i32(
+    x: &[f32],
+    sub: usize,
+    bits: u32,
+    step: Option<f32>,
+    q: &mut [i32],
+    scales: &mut [f32],
+) {
+    quant_rows_impl(x, sub, bits, step, q, scales, |v| v);
+}
+
+// ---------------------------------------------------------------------------
+// packed linear weights + fused GEMV / GEMM
+// ---------------------------------------------------------------------------
+
+/// A linear weight folded to integers at model construction: row-major
+/// `[in_dim, out_dim]` `i8` values (matching the f32 matrices' `x @ W`
+/// layout) plus one pre-floored f32 step per output channel — the
+/// `quant::pack::PackedTensor` representation, shaped for the decode hot
+/// loop. A 4-bit weight matrix holds the same integers an accelerator
+/// would bit-pack; the host keeps one byte per value, still quartering
+/// the f32 path's weight traffic.
+pub struct QLinear {
+    /// contraction (input) dimension
+    pub in_dim: usize,
+    /// output channels
+    pub out_dim: usize,
+    /// row-major `[in_dim, out_dim]` quantized values
+    pub q: Vec<i8>,
+    /// per-output-channel steps, pre-floored at [`EPS`]
+    pub scales: Vec<f32>,
+}
+
+impl QLinear {
+    /// Fold a raw row-major `[in_dim, out_dim]` f32 matrix with per-output
+    /// -channel steps into the packed representation. Produces exactly the
+    /// integers `quant::pack::PackedTensor::pack` would (same clamp and
+    /// round-half-even), so dequantizing reproduces the fake-quant matrix
+    /// bit-for-bit.
+    pub fn pack(w: &[f32], out_dim: usize, steps: &[f32], bits: u32) -> QLinear {
+        assert!(bits <= 8, "QLinear packs <=8-bit weights");
+        assert_eq!(steps.len(), out_dim);
+        assert_eq!(w.len() % out_dim, 0);
+        let scales: Vec<f32> = steps.iter().map(|&s| s.max(EPS)).collect();
+        let mut q = Vec::with_capacity(w.len());
+        for row in w.chunks(out_dim) {
+            for (&x, &s) in row.iter().zip(&scales) {
+                q.push(qint(x, s, bits) as i8);
+            }
+        }
+        QLinear { in_dim: w.len() / out_dim, out_dim, q, scales }
+    }
+
+    /// Fused quantized GEMV: `out[o] = (Σ_i xq[i]·q[i,o]) · (sx·scales[o])`.
+    /// The contraction is exact `i32` arithmetic; `acc` is caller-provided
+    /// scratch (`>= out_dim`) so the decode loop never allocates.
+    pub fn gemv(&self, xq: &[i8], sx: f32, acc: &mut [i32], out: &mut [f32]) {
+        debug_assert_eq!(xq.len(), self.in_dim);
+        debug_assert_eq!(out.len(), self.out_dim);
+        let od = self.out_dim;
+        let acc = &mut acc[..od];
+        acc.fill(0);
+        for (i, &a) in xq.iter().enumerate() {
+            if a == 0 {
+                continue; // a zero activation contributes exactly nothing
+            }
+            let a = a as i32;
+            let row = &self.q[i * od..(i + 1) * od];
+            for (s, &w) in acc.iter_mut().zip(row) {
+                *s += a * w as i32;
+            }
+        }
+        for ((y, &s), &sw) in out.iter_mut().zip(acc.iter()).zip(&self.scales) {
+            *y = s as f32 * (sx * sw);
+        }
+    }
+
+    /// Blocked multi-row GEMM: `sxs.len()` activation rows (`xq` row-major
+    /// `[n, in_dim]`, one scale per row) through one pass over the weight
+    /// matrix, `BLOCK` rows at a time — prefill/scoring stops paying n
+    /// independent weight streams. Bit-identical to [`QLinear::gemv`] per
+    /// row (the `i32` contraction is exact, so blocking cannot change it;
+    /// the descale expression is the same).
+    pub fn gemm(&self, xq: &[i8], sxs: &[f32], out: &mut [f32]) {
+        const BLOCK: usize = 4;
+        let n = sxs.len();
+        let od = self.out_dim;
+        debug_assert_eq!(xq.len(), n * self.in_dim);
+        debug_assert_eq!(out.len(), n * od);
+        let mut acc = vec![0i32; BLOCK * od];
+        let mut r = 0;
+        while r < n {
+            let b = (n - r).min(BLOCK);
+            acc[..b * od].fill(0);
+            for i in 0..self.in_dim {
+                let row = &self.q[i * od..(i + 1) * od];
+                for (br, accr) in acc.chunks_mut(od).enumerate().take(b) {
+                    let a = xq[(r + br) * self.in_dim + i] as i32;
+                    if a == 0 {
+                        continue;
+                    }
+                    for (s, &w) in accr.iter_mut().zip(row) {
+                        *s += a * w as i32;
+                    }
+                }
+            }
+            for (br, accr) in acc.chunks(od).enumerate().take(b) {
+                let sx = sxs[r + br];
+                let o = &mut out[(r + br) * od..(r + br + 1) * od];
+                for ((y, &s), &sw) in o.iter_mut().zip(accr).zip(&self.scales) {
+                    *y = s as f32 * (sx * sw);
+                }
+            }
+            r += b;
+        }
+    }
+
+    /// Packed storage footprint in bytes (bit-packed values + scales),
+    /// matching `PackedTensor::storage_bytes` accounting at `bits`.
+    pub fn storage_bytes(&self, bits: u32) -> usize {
+        (self.q.len() * bits as usize + 7) / 8 + self.scales.len() * 4
+    }
+}
+
+/// One model weight in whichever representation the policy earned:
+/// packed integers on the deployment path, (fake-quantized) f32 on the
+/// reference/fallback path.
+pub enum Linear {
+    /// row-major `[in, out]` f32 weights — unquantized, >8-bit, or the
+    /// explicit f32 reference build
+    F32 {
+        /// the weight matrix (fake-quantized when the policy asks)
+        w: Vec<f32>,
+        /// output channels
+        out_dim: usize,
+    },
+    /// packed integers + per-output-channel scales
+    Int8(QLinear),
+}
+
+/// One activation row prepared for a [`Linear`]'s representation.
+#[derive(Clone, Copy)]
+pub enum ActRow<'a> {
+    /// (fake-quantized) f32 row for [`Linear::F32`]
+    F32(&'a [f32]),
+    /// quantized `i8` row + its step for [`Linear::Int8`]
+    I8 {
+        /// quantized values
+        q: &'a [i8],
+        /// the row's step
+        scale: f32,
+    },
+}
+
+impl Linear {
+    /// Output channels of this weight.
+    pub fn out_dim(&self) -> usize {
+        match self {
+            Linear::F32 { out_dim, .. } => *out_dim,
+            Linear::Int8(ql) => ql.out_dim,
+        }
+    }
+
+    /// Resident host bytes of this representation: one byte per packed
+    /// value + 4-byte scales, or 4 bytes per f32 — the "quarter the weight
+    /// traffic" accounting the bench harness reports.
+    pub fn resident_bytes(&self) -> usize {
+        match self {
+            Linear::F32 { w, .. } => w.len() * 4,
+            Linear::Int8(ql) => ql.q.len() + ql.scales.len() * 4,
+        }
+    }
+
+    /// One activation row through this weight into `out`. The caller
+    /// prepares `act` in the matching representation (the model decides
+    /// once per site); `acc` is `i32` scratch for the packed path.
+    pub fn forward(&self, act: ActRow<'_>, acc: &mut [i32], out: &mut [f32]) {
+        match (self, act) {
+            (Linear::F32 { w, out_dim }, ActRow::F32(x)) => {
+                debug_assert_eq!(out.len(), *out_dim);
+                matvec_into(x, w, out);
+            }
+            (Linear::Int8(ql), ActRow::I8 { q, scale }) => ql.gemv(q, scale, acc, out),
+            _ => unreachable!("activation representation does not match the weight"),
+        }
+    }
+}
+
+/// f32 matvec `out[o] = Σ_i x[i]·w[i·out_dim+o]` into a caller buffer —
+/// the reference-path twin of [`QLinear::gemv`] (same zero-skip, same
+/// accumulation order as the pre-kernels `matvec`).
+pub fn matvec_into(x: &[f32], w: &[f32], out: &mut [f32]) {
+    let od = out.len();
+    debug_assert_eq!(x.len() * od, w.len());
+    out.fill(0.0);
+    for (i, &xv) in x.iter().enumerate() {
+        if xv == 0.0 {
+            continue;
+        }
+        let row = &w[i * od..(i + 1) * od];
+        for (o, &wv) in out.iter_mut().zip(row) {
+            *o += xv * wv;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// attention kernels
+// ---------------------------------------------------------------------------
+
+/// Zero-copy causal attention for one query position directly over `i8`
+/// K/V rows (`len` positions, `[len·dim]` head-major — the `KvPool` slab
+/// layout, or `forward_seq`'s own quantized rows).
+///
+/// Per head `h` and position `j`: `q·k` is an exact `i32` contraction of
+/// the quantized query (`qq`, step `q_scales[h]`) against the `i8` K row,
+/// descaled once: `score = acc · (q_scale·k_scale) / sqrt(d_head)`. After
+/// the softmax, the context accumulates `p_j·v_scale` against the raw
+/// `i8` V row. `scale_stride` selects the K/V step layout: `rows` (=
+/// heads) for per-(position, head) dynamic steps, `0` for per-head steps
+/// constant across positions (the static per-layer rule).
+pub fn attend_i8(
+    qq: &[i32],
+    q_scales: &[f32],
+    k: &[i8],
+    v: &[i8],
+    k_scales: &[f32],
+    v_scales: &[f32],
+    scale_stride: usize,
+    heads: usize,
+    dim: usize,
+    len: usize,
+    scores: &mut [f32],
+    ctx: &mut [f32],
+) {
+    debug_assert_eq!(qq.len(), dim);
+    debug_assert_eq!(ctx.len(), dim);
+    debug_assert!(k.len() >= len * dim && v.len() >= len * dim);
+    let dh = dim / heads;
+    let inv = 1.0 / (dh as f32).sqrt();
+    let scores = &mut scores[..len];
+    ctx.fill(0.0);
+    for h in 0..heads {
+        let off = h * dh;
+        let qh = &qq[off..off + dh];
+        let sq = q_scales[h];
+        for (j, sc) in scores.iter_mut().enumerate() {
+            let kh = &k[j * dim + off..j * dim + off + dh];
+            let mut acc = 0i32;
+            for (&a, &b) in qh.iter().zip(kh) {
+                acc += a * b as i32;
+            }
+            *sc = acc as f32 * (sq * k_scales[j * scale_stride + h]) * inv;
+        }
+        softmax_inplace(scores);
+        let ch = &mut ctx[off..off + dh];
+        for (j, &p) in scores.iter().enumerate() {
+            let w = p * v_scales[j * scale_stride + h];
+            let vh = &v[j * dim + off..j * dim + off + dh];
+            for (cv, &vv) in ch.iter_mut().zip(vh) {
+                *cv += w * vv as f32;
+            }
+        }
+    }
+}
+
+/// f32 causal attention into caller buffers — the reference/fallback twin
+/// of [`attend_i8`], bit-identical to the pre-kernels `HostModel::attend`
+/// (same per-head loop and accumulation order).
+pub fn attend_f32(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    heads: usize,
+    dim: usize,
+    len: usize,
+    scores: &mut [f32],
+    ctx: &mut [f32],
+) {
+    debug_assert_eq!(q.len(), dim);
+    debug_assert_eq!(ctx.len(), dim);
+    debug_assert!(k.len() >= len * dim && v.len() >= len * dim);
+    let dh = dim / heads;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let scores = &mut scores[..len];
+    ctx.fill(0.0);
+    for h in 0..heads {
+        let off = h * dh;
+        let qh = &q[off..off + dh];
+        for (j, sc) in scores.iter_mut().enumerate() {
+            let kh = &k[j * dim + off..j * dim + off + dh];
+            *sc = qh.iter().zip(kh).map(|(a, b)| a * b).sum::<f32>() * scale;
+        }
+        softmax_inplace(scores);
+        let ch = &mut ctx[off..off + dh];
+        for (j, &p) in scores.iter().enumerate() {
+            let vh = &v[j * dim + off..j * dim + off + dh];
+            for (cv, &vv) in ch.iter_mut().zip(vh) {
+                *cv += p * vv;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// shared elementwise math
+// ---------------------------------------------------------------------------
+
+/// In-place softmax. The max fold seeds with `f32::NEG_INFINITY` — the
+/// identity element of `max` — so fully masked score rows (everything at
+/// or below `f32::MIN`) still normalize instead of exploding.
+pub fn softmax_inplace(xs: &mut [f32]) {
+    let m = xs.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let mut sum = 0f32;
+    for v in xs.iter_mut() {
+        *v = (*v - m).exp();
+        sum += *v;
+    }
+    for v in xs.iter_mut() {
+        *v /= sum;
+    }
+}
+
+/// RMSNorm into a caller buffer (model.py uses EPS=1e-6 inside rmsnorm;
+/// the quant EPS is 1e-9).
+pub fn rmsnorm_into(x: &[f32], g: &[f32], out: &mut [f32]) {
+    let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let r = 1.0 / (ms + 1e-6).sqrt();
+    for ((o, &v), &gv) in out.iter_mut().zip(x).zip(g) {
+        *o = v * gv * r;
+    }
+}
+
+/// SiLU gate activation.
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{dynamic_quant_rows, fake_quant_per_channel, fake_quant_scalar};
+    use crate::util::Rng;
+
+    #[test]
+    fn quant_rows_i8_is_the_integer_twin_of_dynamic_quant_rows() {
+        let mut rng = Rng::new(1);
+        for sub in [4usize, 8, 16] {
+            let x = rng.normal_vec(32, 0.7);
+            let mut q = vec![0i8; 32];
+            let mut s = vec![0f32; 32 / sub];
+            quant_rows_i8(&x, sub, 8, None, &mut q, &mut s);
+            let mut fq = x.clone();
+            dynamic_quant_rows(&mut fq, sub, 8);
+            for (i, &qv) in q.iter().enumerate() {
+                assert_eq!(qv as f32 * s[i / sub], fq[i], "sub {sub} idx {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn quant_rows_static_matches_fake_quant_scalar() {
+        let mut rng = Rng::new(2);
+        let x = rng.normal_vec(24, 1.2);
+        let step = 0.021f32;
+        let mut q = vec![0i32; 24];
+        let mut s = vec![0f32; 1];
+        quant_rows_i32(&x, 24, 16, Some(step), &mut q, &mut s);
+        assert_eq!(s[0], step);
+        for (&qv, &xv) in q.iter().zip(&x) {
+            assert_eq!(qv as f32 * step, fake_quant_scalar(xv, step, 16));
+        }
+    }
+
+    #[test]
+    fn qlinear_pack_dequants_to_fake_quant() {
+        let mut rng = Rng::new(3);
+        let (din, dout) = (16usize, 8usize);
+        let w = rng.normal_vec(din * dout, 0.2);
+        let steps: Vec<f32> = (0..dout).map(|_| rng.uniform() * 0.05 + 1e-3).collect();
+        let ql = QLinear::pack(&w, dout, &steps, 4);
+        let mut fq = w.clone();
+        fake_quant_per_channel(&mut fq, dout, &steps, 4);
+        for (i, &qv) in ql.q.iter().enumerate() {
+            assert_eq!(qv as f32 * ql.scales[i % dout], fq[i]);
+        }
+        assert!(ql.storage_bytes(4) < din * dout * 4);
+    }
+
+    #[test]
+    fn gemv_matches_f32_matvec_of_dequant_closely() {
+        let mut rng = Rng::new(4);
+        let (din, dout) = (32usize, 12usize);
+        let w = rng.normal_vec(din * dout, 0.2);
+        let steps: Vec<f32> = (0..dout).map(|_| rng.uniform() * 0.05 + 1e-3).collect();
+        let ql = QLinear::pack(&w, dout, &steps, 4);
+        let x = rng.normal_vec(din, 1.0);
+        let mut xq = vec![0i8; din];
+        let mut sx = vec![0f32; 1];
+        quant_rows_i8(&x, din, 8, None, &mut xq, &mut sx);
+        let mut acc = vec![0i32; dout];
+        let mut out = vec![0f32; dout];
+        ql.gemv(&xq, sx[0], &mut acc, &mut out);
+        // f32 reference over the dequantized operands
+        let mut fq = w.clone();
+        fake_quant_per_channel(&mut fq, dout, &steps, 4);
+        let xf: Vec<f32> = xq.iter().map(|&q| q as f32 * sx[0]).collect();
+        let mut want = vec![0f32; dout];
+        matvec_into(&xf, &fq, &mut want);
+        for (a, b) in out.iter().zip(&want) {
+            assert!((a - b).abs() <= 1e-4 * a.abs().max(b.abs()).max(1.0), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn gemm_is_bit_identical_to_gemv_per_row() {
+        let mut rng = Rng::new(5);
+        let (din, dout, n) = (24usize, 16usize, 7usize);
+        let w = rng.normal_vec(din * dout, 0.3);
+        let steps: Vec<f32> = (0..dout).map(|_| rng.uniform() * 0.05 + 1e-3).collect();
+        let ql = QLinear::pack(&w, dout, &steps, 8);
+        let mut xq = vec![0i8; n * din];
+        for q in xq.iter_mut() {
+            *q = (rng.below(255) as i32 - 127) as i8;
+        }
+        let sxs: Vec<f32> = (0..n).map(|_| rng.uniform() * 0.1 + 1e-3).collect();
+        let mut out = vec![0f32; n * dout];
+        ql.gemm(&xq, &sxs, &mut out);
+        let mut acc = vec![0i32; dout];
+        let mut row = vec![0f32; dout];
+        for r in 0..n {
+            ql.gemv(&xq[r * din..(r + 1) * din], sxs[r], &mut acc, &mut row);
+            assert_eq!(&out[r * dout..(r + 1) * dout], &row[..], "row {r}");
+        }
+    }
+
+    #[test]
+    fn attend_i8_tracks_attend_f32_on_dequantized_rows() {
+        let mut rng = Rng::new(6);
+        let (heads, dim, len) = (2usize, 8usize, 5usize);
+        let q = rng.normal_vec(dim, 1.0);
+        let mut qq = vec![0i32; dim];
+        let mut qs = vec![0f32; heads];
+        quant_rows_i32(&q, dim / heads, 16, None, &mut qq, &mut qs);
+        // dynamic per-(pos, head) K/V
+        let mut k = vec![0i8; len * dim];
+        let mut v = vec![0i8; len * dim];
+        let mut ksc = vec![0f32; len * heads];
+        let mut vsc = vec![0f32; len * heads];
+        for j in 0..len {
+            let kr = rng.normal_vec(dim, 0.5);
+            let vr = rng.normal_vec(dim, 0.5);
+            let (ks, vs) = (j * heads, (j + 1) * heads);
+            quant_rows_i8(&kr, dim / heads, 8, None, &mut k[j * dim..(j + 1) * dim], &mut ksc[ks..vs]);
+            quant_rows_i8(&vr, dim / heads, 8, None, &mut v[j * dim..(j + 1) * dim], &mut vsc[ks..vs]);
+        }
+        let mut scores = vec![0f32; len];
+        let mut ctx = vec![0f32; dim];
+        attend_i8(&qq, &qs, &k, &v, &ksc, &vsc, heads, heads, dim, len, &mut scores, &mut ctx);
+        // f32 reference over the dequantized rows
+        let dh = dim / heads;
+        let qf: Vec<f32> = qq.iter().enumerate().map(|(i, &x)| x as f32 * qs[i / dh]).collect();
+        let deq = |q: &[i8], sc: &[f32]| -> Vec<f32> {
+            q.iter()
+                .enumerate()
+                .map(|(i, &x)| x as f32 * sc[(i / dim) * heads + (i % dim) / dh])
+                .collect()
+        };
+        let (kf, vf) = (deq(&k, &ksc), deq(&v, &vsc));
+        let mut scores2 = vec![0f32; len];
+        let mut want = vec![0f32; dim];
+        attend_f32(&qf, &kf, &vf, heads, dim, len, &mut scores2, &mut want);
+        for (a, b) in ctx.iter().zip(&want) {
+            assert!((a - b).abs() <= 1e-4 * a.abs().max(b.abs()).max(1.0), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn softmax_handles_uniform_and_extreme_rows() {
+        let mut xs = vec![3.0f32, 3.0, 3.0];
+        softmax_inplace(&mut xs);
+        for v in &xs {
+            assert!((v - 1.0 / 3.0).abs() < 1e-6);
+        }
+        // deeply negative scores (masked-out extensions) still normalize
+        let mut lo = vec![f32::MIN, f32::MIN];
+        softmax_inplace(&mut lo);
+        assert!((lo[0] - 0.5).abs() < 1e-6 && (lo[1] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn matvec_into_matches_manual() {
+        let x = [1.0f32, 0.0, 2.0];
+        let w = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]; // [3, 2]
+        let mut out = [0f32; 2];
+        matvec_into(&x, &w, &mut out);
+        assert_eq!(out, [1.0 + 10.0, 2.0 + 12.0]);
+    }
+}

@@ -1,0 +1,124 @@
+//! `DecodeScratch` — the zero-alloc working set of one decode step.
+//!
+//! Every intermediate of `HostModel::forward_token_into` (normed rows,
+//! attention inputs, quantized rows and their steps, scores, the f32
+//! fallback dequant buffers, the logits) lives here, sized once from the
+//! model config. A serve lane or an eval decode session carries one and
+//! reuses it every step, so the steady-state decode loop performs **no
+//! heap allocation** — `tests/kernels_zero_alloc.rs` pins this with a
+//! counting global allocator.
+
+use crate::hostmodel::HostCfg;
+
+/// Pre-sized buffers for one incremental decode step. Buffers are sized
+/// for the *largest* site they serve (e.g. `xq` covers both `d_model` and
+/// `d_ff` rows), so one scratch serves every layer and the head.
+pub struct DecodeScratch {
+    /// residual stream `[d_model]`
+    pub x: Vec<f32>,
+    /// normed row `[d_model]` (reused for `h2` and the final `hf`)
+    pub hnorm: Vec<f32>,
+    /// attention query row `[d_model]`
+    pub q: Vec<f32>,
+    /// attention key row `[d_model]`
+    pub k: Vec<f32>,
+    /// attention value row `[d_model]`
+    pub v: Vec<f32>,
+    /// attention context `[d_model]`
+    pub ctx: Vec<f32>,
+    /// projection output row `[d_model]` (`wo` and `wd` results)
+    pub o: Vec<f32>,
+    /// FFN gate row `[d_ff]` (reused for the gated product `a`)
+    pub g: Vec<f32>,
+    /// FFN up row `[d_ff]`
+    pub u: Vec<f32>,
+    /// quantized activation row `[max(d_model, d_ff)]`
+    pub xq: Vec<i8>,
+    /// activation row steps (one per quant group; `[n_heads]` covers all)
+    pub xs: Vec<f32>,
+    /// quantized query row `[d_model]` (i32: the query is 16-bit)
+    pub qq: Vec<i32>,
+    /// per-head query steps `[n_heads]`
+    pub qs: Vec<f32>,
+    /// integer GEMV accumulator `[max(d_model, d_ff, vocab)]`
+    pub acc: Vec<i32>,
+    /// attention scores `[seq_len]`
+    pub scores: Vec<f32>,
+    /// f32 K dequant buffer `[seq_len · d_model]` (fallback path only)
+    pub kc: Vec<f32>,
+    /// f32 V dequant buffer `[seq_len · d_model]` (fallback path only)
+    pub vc: Vec<f32>,
+    /// next-token logits `[vocab]`
+    pub logits: Vec<f32>,
+}
+
+impl DecodeScratch {
+    /// Size every buffer for `cfg` (the only allocations the decode path
+    /// ever makes).
+    pub fn for_cfg(cfg: &HostCfg) -> DecodeScratch {
+        let (d, f, v) = (cfg.d_model, cfg.d_ff, cfg.vocab);
+        let wide = d.max(f);
+        DecodeScratch {
+            x: vec![0.0; d],
+            hnorm: vec![0.0; d],
+            q: vec![0.0; d],
+            k: vec![0.0; d],
+            v: vec![0.0; d],
+            ctx: vec![0.0; d],
+            o: vec![0.0; d],
+            g: vec![0.0; f],
+            u: vec![0.0; f],
+            xq: vec![0; wide],
+            xs: vec![0.0; cfg.n_heads.max(1)],
+            qq: vec![0; d],
+            qs: vec![0.0; cfg.n_heads.max(1)],
+            acc: vec![0; wide.max(v)],
+            scores: vec![0.0; cfg.seq_len],
+            kc: vec![0.0; cfg.seq_len * d],
+            vc: vec![0.0; cfg.seq_len * d],
+            logits: vec![0.0; v],
+        }
+    }
+
+    /// Assert this scratch fits `cfg` (a scratch built for a different
+    /// model is a programming error, caught before any buffer indexing).
+    pub fn check(&self, cfg: &HostCfg) {
+        let (d, f, v) = (cfg.d_model, cfg.d_ff, cfg.vocab);
+        assert!(
+            self.x.len() >= d
+                && self.g.len() >= f
+                && self.xq.len() >= d.max(f)
+                && self.acc.len() >= d.max(f).max(v)
+                && self.qs.len() >= cfg.n_heads
+                && self.scores.len() >= cfg.seq_len
+                && self.kc.len() >= cfg.seq_len * d
+                && self.logits.len() >= v,
+            "DecodeScratch was sized for a different model"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hostmodel::tiny_host_cfg;
+
+    #[test]
+    fn scratch_fits_its_own_cfg() {
+        let cfg = tiny_host_cfg(true, true);
+        let s = DecodeScratch::for_cfg(&cfg);
+        s.check(&cfg);
+        assert_eq!(s.logits.len(), cfg.vocab);
+        assert_eq!(s.kc.len(), cfg.seq_len * cfg.d_model);
+    }
+
+    #[test]
+    #[should_panic(expected = "different model")]
+    fn scratch_rejects_a_bigger_model() {
+        let cfg = tiny_host_cfg(true, true);
+        let mut big = cfg.clone();
+        big.d_model *= 2;
+        big.d_ff *= 2;
+        DecodeScratch::for_cfg(&cfg).check(&big);
+    }
+}

@@ -10,6 +10,8 @@
 //! * [`policy`] — the typed `QuantPolicy` precision API (spec strings,
 //!   presets, manifest conversions) every layer below keys off
 //! * [`hostmodel`] — the host quantized transformer + slab KV pool
+//! * [`kernels`] — integer decode kernels: packed `i8` weights, fused
+//!   quantized GEMV/GEMM, zero-copy int8 attention, `DecodeScratch`
 //! * [`forward`] — `ForwardBackend`: batched logits + incremental decode,
 //!   artifact (PJRT) and host implementations
 //! * [`train`] — the SiLQ QAT pipeline (calibrate -> LSQ + KD end-to-end)
@@ -32,6 +34,7 @@ pub mod data;
 pub mod evalharness;
 pub mod forward;
 pub mod hostmodel;
+pub mod kernels;
 pub mod linalg;
 pub mod metrics;
 pub mod model;

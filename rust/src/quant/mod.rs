@@ -46,22 +46,35 @@ pub fn round_half_even(v: f32) -> f32 {
     }
 }
 
-/// Fake-quantize a slice in place with one step.
+/// [`fake_quant_scalar`] for a step already floored at [`EPS`] — hoists
+/// the per-element floor out of inner loops (bit-identical results, since
+/// `s.max(EPS)` is idempotent). Callers guarantee `s >= EPS` (see
+/// `QuantRule::floored` and the hoisted loops below).
+#[inline]
+pub fn fake_quant_prefloored(x: f32, s: f32, bits: u32) -> f32 {
+    let (qn, qp) = qbounds(bits);
+    round_half_even((x / s).clamp(qn as f32, qp as f32)) * s
+}
+
+/// Fake-quantize a slice in place with one step (floored once, not per
+/// element).
 pub fn fake_quant(xs: &mut [f32], s: f32, bits: u32) {
+    let s = s.max(EPS);
     for x in xs.iter_mut() {
-        *x = fake_quant_scalar(*x, s, bits);
+        *x = fake_quant_prefloored(*x, s, bits);
     }
 }
 
 /// Per-token (row) dynamic symmetric quantization of a row-major [rows, cols]
-/// matrix, as the 'd' activation mode does at runtime.
+/// matrix, as the 'd' activation mode does at runtime. The per-row step is
+/// floored at [`EPS`] once; the inner loop uses the prefloored form.
 pub fn dynamic_quant_rows(xs: &mut [f32], cols: usize, bits: u32) {
     let (_, qp) = qbounds(bits);
     for row in xs.chunks_mut(cols) {
         let maxabs = row.iter().fold(0f32, |a, &b| a.max(b.abs()));
         let s = (maxabs / qp as f32).max(EPS);
         for x in row.iter_mut() {
-            *x = fake_quant_scalar(*x, s, bits);
+            *x = fake_quant_prefloored(*x, s, bits);
         }
     }
 }
@@ -135,6 +148,17 @@ mod tests {
         fake_quant_per_channel(&mut w, 2, &[0.1, 0.2], 4);
         assert!((w[0] - 0.3).abs() < 1e-6); // 0.3/0.1=3 exact
         assert!((w[1] - 0.4).abs() < 1e-6); // round(1.5)=2 (half-even), 2*0.2=0.4
+    }
+
+    #[test]
+    fn prefloored_matches_fake_quant_for_floored_steps() {
+        for &x in &[0.26f32, -3.4, 0.0, 17.0, -0.49] {
+            for &s in &[EPS, 0.1, 0.5, 2.0] {
+                for bits in [2u32, 4, 8] {
+                    assert_eq!(fake_quant_prefloored(x, s, bits), fake_quant_scalar(x, s, bits));
+                }
+            }
+        }
     }
 
     #[test]

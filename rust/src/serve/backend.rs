@@ -133,7 +133,9 @@ impl DecodeBackend for HostBackend {
         for (lane, toks) in lanes.iter().enumerate() {
             next.push(match toks {
                 Some(toks) if toks.len() < self.inner.seq_len() => {
-                    Some(argmax(&self.inner.step_row(lane, toks)?) as i32)
+                    // greedy pick straight off the scratch logits — the
+                    // serve hot loop materializes no per-token vector
+                    Some(self.inner.step_row_greedy(lane, toks)?)
                 }
                 _ => None,
             });

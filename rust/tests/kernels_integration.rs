@@ -1,0 +1,180 @@
+//! Integration: the integer decode kernels against the f32 fake-quant
+//! reference, swept over precision policies × cache stores.
+//!
+//! Three pinned properties (the integer-kernel PR's acceptance bar):
+//! 1. integer-kernel incremental == integer-kernel batched, **bit-exact**,
+//!    on the store matching the policy's deployment representation;
+//! 2. greedy decode is **token-identical** between the integer path and
+//!    the f32 fake-quant reference on the builtin `tiny`/`small` models;
+//! 3. logits agree within 1e-4 relative between the two paths.
+//!
+//! Everything runs artifact-free (builtin configs + seeded params).
+
+use silq::evalharness::decode::argmax;
+use silq::forward::{decode_greedy, HostForward};
+use silq::hostmodel::{builtin_model, host_test_params, CacheStore, HostCfg, HostModel};
+use silq::kernels::DecodeScratch;
+use silq::policy::QuantPolicy;
+use silq::util::Rng;
+
+/// Small sweep config — big enough to exercise multi-head attention and
+/// distinct d_model/d_ff, small enough for debug-build test time.
+fn sweep_cfg(spec: &str) -> HostCfg {
+    HostCfg {
+        vocab: 64,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 4,
+        d_ff: 48,
+        seq_len: 16,
+        policy: QuantPolicy::resolve(spec).unwrap(),
+        rope_theta: 10000.0,
+    }
+}
+
+fn rel_close(a: f32, b: f32, tol: f32) -> bool {
+    (a - b).abs() <= tol * a.abs().max(b.abs()).max(1.0)
+}
+
+/// Property 1: for every policy × admissible store, the incremental
+/// decode over the pool and the batched full-sequence forward agree — bit
+/// exactly when the store matches the path's resident representation
+/// (Int8 for quantized integer kernels, F32 for fp16), and at greedy-token
+/// + 1e-4-logit granularity on the off-diagonal (a quantized model over an
+/// F32 pool falls back to f32 attention while the batched path stays
+/// integer).
+#[test]
+fn prop_incremental_matches_batched_across_policies_and_stores() {
+    let combos: &[(&str, CacheStore, bool)] = &[
+        ("w4a8kv8", CacheStore::Int8, true),
+        ("w4a8kv8", CacheStore::F32, false),
+        ("w4a8kv8:statacts", CacheStore::Int8, true),
+        ("w4a8kv8:statacts", CacheStore::F32, false),
+        ("fp16", CacheStore::F32, true),
+    ];
+    for &(spec, store, exact) in combos {
+        for seed in 0..6u64 {
+            let cfg = sweep_cfg(spec);
+            let params = host_test_params(&cfg, seed);
+            let model = HostModel::new(cfg.clone(), &params).unwrap();
+            let mut pool = model.make_pool(1, store).unwrap();
+            let slot = pool.alloc().unwrap();
+            let mut scratch = DecodeScratch::for_cfg(&cfg);
+
+            let mut rng = Rng::new(seed ^ 0x51);
+            let plen = rng.range(1, 8);
+            let prompt: Vec<i32> = (0..plen).map(|_| rng.below(cfg.vocab) as i32).collect();
+
+            let batched = model.forward_seq(&prompt).unwrap();
+            let v = cfg.vocab;
+            for (pos, &tok) in prompt.iter().enumerate() {
+                let inc = model
+                    .forward_token_into(&mut pool, slot, tok, pos, true, &mut scratch)
+                    .unwrap()
+                    .unwrap();
+                let bat = &batched[pos * v..(pos + 1) * v];
+                if exact {
+                    assert_eq!(
+                        bat, inc,
+                        "{spec} {store:?} seed {seed} pos {pos}: must be bit-exact"
+                    );
+                } else {
+                    // greedy choices agree unless the contested logits are
+                    // a genuine near-tie (the paths differ only by float
+                    // rounding, so any flip must sit inside the tolerance)
+                    let (gb, gi) = (argmax(bat), argmax(inc));
+                    assert!(
+                        gb == gi || rel_close(bat[gb], bat[gi], 1e-4),
+                        "{spec} {store:?} seed {seed} pos {pos}: greedy diverged beyond a tie"
+                    );
+                    for (a, b) in bat.iter().zip(inc.iter()) {
+                        assert!(
+                            rel_close(*a, *b, 1e-4),
+                            "{spec} {store:?} seed {seed} pos {pos}: {a} vs {b}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Properties 2 + 3 on the builtin models: the integer path and the f32
+/// fake-quant reference decode the same greedy tokens end to end through
+/// the `ForwardBackend` driver, and their full-sequence logits track
+/// within 1e-4 relative.
+#[test]
+fn prop_integer_path_matches_f32_reference_on_builtin_models() {
+    for (model_name, plen, gen) in [("tiny", 6usize, 5usize), ("small", 5, 4)] {
+        for spec in ["w4a8kv8", "w4a8kv8:statacts"] {
+            let mc = builtin_model(model_name).unwrap();
+            let policy = QuantPolicy::resolve(spec).unwrap();
+            let cfg = HostCfg::from_policy(&mc, &policy).unwrap();
+            let params = host_test_params(&cfg, 71);
+
+            let int_model = HostModel::new(cfg.clone(), &params).unwrap();
+            assert!(int_model.integer_path(), "{model_name}/{spec} must earn the integer path");
+            let ref_model = HostModel::new_reference(cfg.clone(), &params).unwrap();
+
+            let prompt: Vec<i32> = (0..plen as i32).map(|i| 1 + (i * 37) % 200).collect();
+
+            // (3) full-sequence logits within 1e-4 relative
+            let li = int_model.forward_seq(&prompt).unwrap();
+            let lr = ref_model.forward_seq(&prompt).unwrap();
+            assert_eq!(li.len(), lr.len());
+            for (i, (a, b)) in li.iter().zip(lr.iter()).enumerate() {
+                assert!(
+                    rel_close(*a, *b, 1e-4),
+                    "{model_name}/{spec} logit {i}: {a} vs {b}"
+                );
+            }
+
+            // (2) greedy decode token-identical through the decode driver:
+            // integer path over the deployment Int8 pool, reference over
+            // the fake-quant F32 pool
+            let mut int_fwd = HostForward::from_model(int_model, 1, CacheStore::Int8).unwrap();
+            let mut ref_fwd = HostForward::from_model(ref_model, 1, CacheStore::F32).unwrap();
+            let gi = decode_greedy(&mut int_fwd, &[&prompt], gen).unwrap();
+            let gr = decode_greedy(&mut ref_fwd, &[&prompt], gen).unwrap();
+            assert_eq!(gi[0].len(), gen);
+            assert_eq!(
+                gi, gr,
+                "{model_name}/{spec}: integer kernels diverged from the f32 reference"
+            );
+        }
+    }
+}
+
+/// The reference build really is the f32 path (no packed weights), and the
+/// auto build really is the integer path — guards against silently
+/// benchmarking the same kernels twice.
+#[test]
+fn reference_and_auto_builds_take_different_paths() {
+    let mc = builtin_model("tiny").unwrap();
+    let cfg = HostCfg::from_policy(&mc, &QuantPolicy::w4a8kv8()).unwrap();
+    let params = host_test_params(&cfg, 5);
+    let int_model = HostModel::new(cfg.clone(), &params).unwrap();
+    let ref_model = HostModel::new_reference(cfg, &params).unwrap();
+    assert!(int_model.integer_path());
+    assert!(!ref_model.integer_path());
+    assert!(int_model.weight_bytes() < ref_model.weight_bytes());
+}
+
+/// A scratch travels across rows and sessions: interleaved decoding of two
+/// lanes through one `HostForward` matches two independent single-lane
+/// decodes (the scratch holds no cross-step state).
+#[test]
+fn shared_scratch_is_stateless_across_lanes() {
+    let cfg = sweep_cfg("w4a8kv8");
+    let params = host_test_params(&cfg, 23);
+    let prompts: [&[i32]; 2] = [&[1, 9, 33], &[2, 40, 7, 11]];
+
+    let mut both = HostForward::new(cfg.clone(), 2, &params, CacheStore::Int8).unwrap();
+    let interleaved = decode_greedy(&mut both, &prompts, 4).unwrap();
+
+    for (r, p) in prompts.iter().enumerate() {
+        let mut solo = HostForward::new(cfg.clone(), 1, &params, CacheStore::Int8).unwrap();
+        let alone = decode_greedy(&mut solo, &[*p], 4).unwrap();
+        assert_eq!(alone[0], interleaved[r], "lane {r} depends on scratch history");
+    }
+}

@@ -1,0 +1,115 @@
+//! Steady-state decode performs **zero heap allocations** — the
+//! `DecodeScratch` acceptance criterion of the integer-kernel PR, pinned
+//! with a counting global allocator.
+//!
+//! This file is its own test binary on purpose: the allocator counter is
+//! global, so no unrelated tests may run concurrently while the decode
+//! loop is being measured.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use silq::hostmodel::{host_test_params, CacheStore, HostCfg, HostModel};
+use silq::kernels::DecodeScratch;
+use silq::policy::QuantPolicy;
+
+/// System allocator with an allocation-event counter (frees are not
+/// counted — only acquiring fresh memory violates the budget).
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn cfg_for(spec: &str) -> HostCfg {
+    HostCfg {
+        vocab: 64,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 4,
+        d_ff: 48,
+        seq_len: 32,
+        policy: QuantPolicy::resolve(spec).unwrap(),
+        rope_theta: 10000.0,
+    }
+}
+
+/// Decode `steps` tokens through `forward_token_into` and return how many
+/// allocation events the loop performed.
+fn allocs_during_decode(spec: &str, store: CacheStore, steps: usize) -> u64 {
+    let cfg = cfg_for(spec);
+    let params = host_test_params(&cfg, 7);
+    let model = HostModel::new(cfg.clone(), &params).unwrap();
+    let mut pool = model.make_pool(1, store).unwrap();
+    let slot = pool.alloc().unwrap();
+    let mut scratch = DecodeScratch::for_cfg(&cfg);
+
+    // prefill a short prompt, keeping the last logits to seed the loop
+    let prompt = [1i32, 9, 33, 2];
+    let mut tok = 0i32;
+    for (pos, &t) in prompt.iter().enumerate() {
+        let lg = model
+            .forward_token_into(&mut pool, slot, t, pos, true, &mut scratch)
+            .unwrap()
+            .unwrap();
+        tok = silq::evalharness::decode::argmax(lg) as i32;
+    }
+
+    let before = ALLOCS.load(Ordering::Relaxed);
+    let mut pos = prompt.len();
+    for _ in 0..steps {
+        let lg = model
+            .forward_token_into(&mut pool, slot, tok, pos, true, &mut scratch)
+            .unwrap()
+            .unwrap();
+        tok = silq::evalharness::decode::argmax(lg) as i32;
+        pos += 1;
+    }
+    ALLOCS.load(Ordering::Relaxed) - before
+}
+
+/// One test on purpose: the counter is global, so the instrument check and
+/// the measured decode loops must never run on sibling test threads.
+#[test]
+fn steady_state_decode_allocates_nothing() {
+    // first prove the instrument counts at all — otherwise a broken hook
+    // would green-light everything below
+    let before = ALLOCS.load(Ordering::Relaxed);
+    let v: Vec<u8> = Vec::with_capacity(4096);
+    std::hint::black_box(&v);
+    drop(v);
+    assert!(ALLOCS.load(Ordering::Relaxed) > before, "allocation counter is not wired up");
+
+    // every path through forward_token_into: integer kernels over the int8
+    // slab, quantized fallback over the f32 store, static-act steps, and
+    // the unquantized fp16 path
+    for (spec, store) in [
+        ("w4a8kv8", CacheStore::Int8),
+        ("w4a8kv8", CacheStore::F32),
+        ("w4a8kv8:statacts", CacheStore::Int8),
+        ("fp16", CacheStore::F32),
+    ] {
+        let n = allocs_during_decode(spec, store, 20);
+        assert_eq!(
+            n, 0,
+            "{spec}/{store:?}: steady-state forward_token_into performed {n} heap allocations"
+        );
+    }
+}

@@ -155,11 +155,16 @@ fn prop_pack_unpack_exactly_lossless_2_to_8_bits() {
 #[test]
 fn prop_host_incremental_decode_matches_batched_forward() {
     // The ISSUE-2 identity: HostModel's incremental decode (KV cache in a
-    // pool, f32 store) and its batched full-sequence forward are two
-    // independent implementations of the same math, and must agree
-    // *exactly* — logits bit-for-bit at every prompt position, and greedy
-    // continuations token-for-token — for random prompts across quantized
-    // (dynamic + static cache steps) and fp16 configs.
+    // pool, on the store matching the policy's deployment representation)
+    // and its batched full-sequence forward are two independent
+    // implementations of the same math, and must agree *exactly* — logits
+    // bit-for-bit at every prompt position, and greedy continuations
+    // token-for-token — for random prompts across quantized (dynamic +
+    // static cache steps) and fp16 configs. Since the integer-kernel PR
+    // both paths run the packed GEMV/GEMM + int8-slab attention for
+    // quantized policies, so the pinned store is Int8 there (fp16 keeps
+    // f32); tests/kernels_integration.rs sweeps the off-diagonal
+    // store/policy combinations at greedy-token granularity.
     use silq::evalharness::decode::argmax;
     use silq::hostmodel::{host_test_params, CacheStore, HostCfg, HostModel};
     for seed in 0..10u64 {
@@ -186,7 +191,7 @@ fn prop_host_incremental_decode_matches_batched_forward() {
         };
         let params = host_test_params(&cfg, seed);
         let model = HostModel::new(cfg.clone(), &params).unwrap();
-        let mut pool = model.make_pool(1, CacheStore::F32).unwrap();
+        let mut pool = model.make_pool(1, CacheStore::for_policy(&cfg.policy)).unwrap();
         let slot = pool.alloc().unwrap();
 
         let plen = rng.range(1, 7);
