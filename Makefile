@@ -2,7 +2,7 @@
 #
 # `make check` is the tier-1 gate every PR must keep green (see ROADMAP.md).
 
-.PHONY: check fmt artifacts bench bench-quick pytest
+.PHONY: check fmt artifacts bench bench-quick pytest soak
 
 # tier-1: release build + full test suite + clippy (-D warnings) + formatting
 check:
@@ -27,3 +27,9 @@ bench-quick:
 
 pytest:
 	cd python && python3 -m pytest tests/ -q
+
+# long-seed serve soak (thousands of requests, forced rejections and
+# evictions, KV-pool leak + stats-exactness invariants) — deliberately
+# NOT part of tier-1; run locally before serve/scheduler changes
+soak:
+	cd rust && SILQ_SOAK=long cargo test --offline --release --test serve_soak -- --nocapture

@@ -38,13 +38,14 @@ fn bench_serve_entry(
     policy: &str,
     stats: &silq::serve::ServeStats,
 ) -> String {
-    let ttft = stats.ttft_mean_ms();
-    let ttft = if ttft.is_finite() { format!("{ttft:.3}") } else { "null".into() };
+    // ttft_mean_ms is 0 (never NaN) on runs with no first token, so the
+    // value is always a valid JSON number
     format!(
         "  {{\"label\": \"{label}\", \"backend\": \"{backend}\", \"policy\": \"{policy}\", \
-         \"tok_per_s\": {:.2}, \"ttft_ms_mean\": {ttft}, \"wall_secs\": {:.4}, \
+         \"tok_per_s\": {:.2}, \"ttft_ms_mean\": {:.3}, \"wall_secs\": {:.4}, \
          \"completed\": {}, \"occupancy\": {:.3}}}",
         stats.tokens_per_sec(),
+        stats.ttft_mean_ms(),
         stats.wall_secs,
         stats.completed,
         stats.batch_occupancy(),
@@ -194,10 +195,69 @@ fn serve_host_entries() -> Vec<String> {
     serve_json
 }
 
-/// The `--quick` serve pass: host-backend entries only, straight to JSON.
+/// Cross-lane batched vs per-lane sequential serve decode on the builtin
+/// `small` model at batch widths B ∈ {1, 4, 8} — the PR-5 throughput
+/// figure. One scheduler step is one fused GEMM per weight matrix across
+/// all live lanes (`HostBackend::new`) against B independent GEMV passes
+/// (`HostBackend::new_sequential`); the two decode token-identically (the
+/// batched≡sequential identity suite pins it), so the ratio is pure
+/// batching — each weight matrix streams once per GEMM block per step
+/// instead of once per lane.
+fn batched_decode_entries() -> Vec<String> {
+    let mc = builtin_model("small").expect("builtin model");
+    let cfg = HostCfg::from_policy(&mc, &"w4a8kv8".parse().expect("policy")).expect("host cfg");
+    let params = host_test_params(&cfg, 41);
+    // short prompts, long budgets: both backends pay the same sequential
+    // per-token prefill at admission, so keeping it ~1/8 of the run stops
+    // it diluting the decode-phase ratio the JSON reports
+    let mk_reqs = |n: usize| -> Vec<GenRequest> {
+        (0..n)
+            .map(|i| {
+                let prompt: Vec<i32> =
+                    (0..4usize).map(|p| 1 + ((i * 29 + p * 13) % (cfg.vocab - 1)) as i32).collect();
+                GenRequest::new(i as u64, prompt, 24).ignore_eos()
+            })
+            .collect()
+    };
+    let mut out = vec![];
+    for b in [1usize, 4, 8] {
+        let n_req = 2 * b;
+        let seq_backend = HostBackend::new_sequential(cfg.clone(), b, &params, CacheStore::Int8)
+            .expect("backend");
+        let (_, st_seq) = serve_inline(seq_backend, b, mk_reqs(n_req)).expect("serve run");
+        let bat_backend =
+            HostBackend::new(cfg.clone(), b, &params, CacheStore::Int8).expect("backend");
+        let (_, st_bat) = serve_inline(bat_backend, b, mk_reqs(n_req)).expect("serve run");
+        let speedup = st_bat.tokens_per_sec() / st_seq.tokens_per_sec().max(1e-9);
+        report(
+            &format!("serve decode small w4a8kv8, B={b} batched"),
+            st_bat.wall_secs * 1e3,
+            &format!(
+                "({:.0} tok/s vs {:.0} sequential, {speedup:.2}x)",
+                st_bat.tokens_per_sec(),
+                st_seq.tokens_per_sec()
+            ),
+        );
+        out.push(format!(
+            "  {{\"label\": \"batched decode small w4a8kv8 B={b}\", \"backend\": \"host\", \
+             \"policy\": \"w4a8kv8\", \"batch\": {b}, \"tok_per_s\": {:.2}, \
+             \"tok_per_s_sequential\": {:.2}, \"batched_speedup\": {speedup:.3}, \
+             \"completed\": {}}}",
+            st_bat.tokens_per_sec(),
+            st_seq.tokens_per_sec(),
+            st_bat.completed,
+        ));
+    }
+    out
+}
+
+/// The `--quick` serve pass: host-backend + batched-decode entries,
+/// straight to JSON.
 fn quick_serve_section() {
     section("serve throughput (host backend, quantized KV pool)");
-    let entries = serve_host_entries();
+    let mut entries = serve_host_entries();
+    section("cross-lane batched decode (one fused GEMM per matrix per step)");
+    entries.extend(batched_decode_entries());
     write_bench_serve_json(&entries);
 }
 
@@ -300,6 +360,11 @@ fn main() {
     // readable across PRs.
     section("serve throughput (host backend, quantized KV pool)");
     let mut serve_json = serve_host_entries();
+
+    // cross-lane batched decode: the PR-5 lever, batched vs sequential at
+    // several batch widths (also part of --quick; lands in BENCH_serve.json)
+    section("cross-lane batched decode (one fused GEMM per matrix per step)");
+    serve_json.extend(batched_decode_entries());
 
     // ------- eval-style greedy decode: incremental vs full recompute ------
     // the ISSUE-2 win, measured: host incremental decode does O(1) work per

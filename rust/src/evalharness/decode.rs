@@ -9,6 +9,15 @@ pub fn argmax(xs: &[f32]) -> usize {
     xs.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).map(|(i, _)| i).unwrap()
 }
 
+/// [`argmax`] over each `width`-sized row of a flat `[rows * width]`
+/// buffer — the greedy pick for a batched decode step's stacked logits
+/// (`HostForward::step_greedy` reads its scratch through this, so serve's
+/// batched hot path and the single-row path share one tie-break rule).
+pub fn argmax_rows(flat: &[f32], width: usize) -> Vec<usize> {
+    debug_assert!(width > 0 && flat.len() % width == 0);
+    flat.chunks(width).map(argmax).collect()
+}
+
 /// Log-probability of token `idx` under a softmax over `logits`. The max
 /// fold seeds with `f32::NEG_INFINITY` (the identity element of `max`),
 /// matching `kernels::softmax_inplace`.
@@ -45,6 +54,13 @@ mod tests {
     #[test]
     fn argmax_works() {
         assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
+    }
+
+    #[test]
+    fn argmax_rows_matches_per_row_argmax() {
+        let flat = [0.1f32, 0.9, 0.5, 2.0, -1.0, 0.0];
+        assert_eq!(argmax_rows(&flat, 3), vec![1, 0]);
+        assert!(argmax_rows(&[], 4).is_empty());
     }
 
     #[test]

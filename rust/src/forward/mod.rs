@@ -11,8 +11,11 @@
 //!   sequence each time (the graph is stateless), which is the O(n²)
 //!   behavior the host backend exists to beat.
 //! * [`HostForward`] — the [`HostModel`] host transformer: batched calls
-//!   run `forward_seq` per row, incremental steps advance a [`KvPool`]
-//!   session by exactly one token (O(n) total). Needs no artifacts at all.
+//!   run `forward_seq` per row; incremental steps advance every active
+//!   [`KvPool`] session by one token through **one cross-lane batched
+//!   forward** (one fused `i8` GEMM per weight matrix across all rows —
+//!   O(n) total per row, and the weights stream once per GEMM block per
+//!   step instead of once per row). Needs no artifacts at all.
 //!
 //! [`decode_with`]/[`decode_greedy`] drive an incremental session with
 //! early exit: the loop stops as soon as every row has its budget or hit
@@ -21,9 +24,9 @@
 use anyhow::{ensure, Context, Result};
 use std::sync::Arc;
 
-use crate::evalharness::decode::{argmax, pack_rows};
-use crate::hostmodel::{check_tokens, CacheStore, HostCfg, HostModel, KvPool};
-use crate::kernels::DecodeScratch;
+use crate::evalharness::decode::{argmax, argmax_rows, pack_rows};
+use crate::hostmodel::{check_tokens, BatchLane, CacheStore, HostCfg, HostModel, KvPool};
+use crate::kernels::{BatchScratch, DecodeScratch};
 use crate::model::ParamStore;
 use crate::runtime::{build_inputs, literal_i32, to_f32_vec, Engine, Module};
 
@@ -52,6 +55,22 @@ pub trait ForwardBackend {
     /// for a finished row. Returns next-token logits per active row.
     fn step_logits(&mut self, rows: &[Option<&[i32]>]) -> Result<Vec<Option<Vec<f32>>>>;
 
+    /// Advance the session one position for every active row and return
+    /// the greedy next token per row — semantically [`step_logits`]
+    /// followed by argmax, without materializing per-row logits vectors.
+    /// The serve hot path; the host backend overrides this to run one
+    /// **cross-lane batched** forward (one fused GEMM per weight matrix
+    /// across all live rows) instead of B sequential steps.
+    ///
+    /// [`step_logits`]: ForwardBackend::step_logits
+    fn step_greedy(&mut self, rows: &[Option<&[i32]>]) -> Result<Vec<Option<i32>>> {
+        Ok(self
+            .step_logits(rows)?
+            .into_iter()
+            .map(|l| l.map(|lg| argmax(&lg) as i32))
+            .collect())
+    }
+
     /// Close the decode session, releasing any cache resources.
     fn end_decode(&mut self);
 }
@@ -74,6 +93,9 @@ impl<'a> ForwardBackend for Box<dyn ForwardBackend + 'a> {
     }
     fn step_logits(&mut self, rows: &[Option<&[i32]>]) -> Result<Vec<Option<Vec<f32>>>> {
         (**self).step_logits(rows)
+    }
+    fn step_greedy(&mut self, rows: &[Option<&[i32]>]) -> Result<Vec<Option<i32>>> {
+        (**self).step_greedy(rows)
     }
     fn end_decode(&mut self) {
         (**self).end_decode()
@@ -253,10 +275,19 @@ impl ForwardBackend for ArtifactForward {
 /// Forward through the [`HostModel`] host transformer: batched calls run
 /// the full-sequence forward per row; incremental sessions keep the K/V
 /// cache resident in a quantized [`KvPool`] and advance one token per
-/// step. Runs with no artifacts built. Lanes step serially through one
-/// persistent [`DecodeScratch`], so the steady-state decode loop (serve
-/// lanes and eval generation alike) performs no heap allocation inside
-/// the forward.
+/// step. Runs with no artifacts built.
+///
+/// Decode steps through the trait surface (`step_logits` / `step_greedy`)
+/// gather every active row into **one cross-lane batched forward**
+/// ([`HostModel::forward_tokens_batch`]): the rows' activation vectors
+/// stack into one fused blocked GEMM per weight matrix, so at batch width
+/// B each matrix streams once per `GEMM_BLOCK` rows per step instead of B
+/// times — bit-identical per row to the per-lane
+/// [`HostForward::step_row_greedy`] path (exact `i32` accumulation), which
+/// remains the sequential reference. All intermediates live in persistent scratches
+/// ([`DecodeScratch`] for prefill/per-row steps, [`BatchScratch`] for the
+/// batched step), so the steady-state decode loop performs no heap
+/// allocation inside the forward.
 pub struct HostForward {
     model: HostModel,
     pool: KvPool,
@@ -264,8 +295,15 @@ pub struct HostForward {
     slot_of_row: Vec<Option<usize>>,
     /// tokens already folded into the cache, per row
     processed: Vec<usize>,
-    /// every decode intermediate, reused across steps and rows
+    /// every per-row decode intermediate, reused across steps and rows
     scratch: DecodeScratch,
+    /// every batched-step intermediate, sized once for `n_rows` lanes
+    batch_scratch: BatchScratch,
+    /// gathered lanes of the current batched step (persistent so the
+    /// steady-state gather allocates nothing)
+    lane_buf: Vec<BatchLane>,
+    /// caller row index of each gathered lane
+    lane_rows: Vec<usize>,
 }
 
 impl HostForward {
@@ -284,6 +322,7 @@ impl HostForward {
         ensure!(n_rows >= 1, "need at least one row");
         let pool = model.make_pool(n_rows, store)?;
         let scratch = DecodeScratch::for_cfg(&model.cfg);
+        let batch_scratch = BatchScratch::for_cfg(&model.cfg, n_rows);
         Ok(HostForward {
             model,
             pool,
@@ -291,6 +330,9 @@ impl HostForward {
             slot_of_row: vec![None; n_rows],
             processed: vec![0; n_rows],
             scratch,
+            batch_scratch,
+            lane_buf: Vec::with_capacity(n_rows),
+            lane_rows: Vec::with_capacity(n_rows),
         })
     }
 
@@ -361,16 +403,61 @@ impl HostForward {
         Ok(logits)
     }
 
-    /// [`HostForward::step_row_borrowed`] returning owned logits.
-    pub fn step_row(&mut self, row: usize, toks: &[i32]) -> Result<Vec<f32>> {
-        Ok(self.step_row_borrowed(row, toks)?.to_vec())
-    }
-
     /// Advance row `row` one position and pick the greedy token — the
-    /// serve hot path: no logits vector is materialized, the argmax reads
-    /// the scratch directly.
+    /// per-lane sequential path: no logits vector is materialized, the
+    /// argmax reads the scratch directly. Since the cross-lane batching
+    /// PR the serve hot loop runs [`ForwardBackend::step_greedy`] (one
+    /// fused forward across all rows) instead; this remains the
+    /// bit-identical sequential reference it is measured against.
     pub fn step_row_greedy(&mut self, row: usize, toks: &[i32]) -> Result<i32> {
         Ok(argmax(self.step_row_borrowed(row, toks)?) as i32)
+    }
+
+    /// Whether every cache slot is back in the pool — the shutdown
+    /// invariant the serve soak test pins.
+    pub fn all_slots_free(&self) -> bool {
+        self.pool.all_slots_free()
+    }
+
+    /// Gather every active row into one [`HostModel::forward_tokens_batch`]
+    /// call. After return, gathered lane `i` (caller row `lane_rows[i]`)
+    /// has its logits at `batch_scratch.logits[i*vocab..]`. Rows that are
+    /// `None`, empty, or already fill the context window are skipped (they
+    /// stay `None` in the callers' outputs, matching `step_logits`'
+    /// historical semantics); mismatched prefixes are hard errors.
+    fn step_rows_batched(&mut self, rows: &[Option<&[i32]>]) -> Result<()> {
+        ensure!(rows.len() <= self.n_rows, "more rows than the backend batch");
+        let seq = self.model.cfg.seq_len;
+        self.lane_buf.clear();
+        self.lane_rows.clear();
+        for (r, row) in rows.iter().enumerate() {
+            let Some(toks) = row else { continue };
+            if toks.is_empty() || toks.len() >= seq {
+                continue;
+            }
+            let slot = self.slot_of_row[r].context("row has no cache slot")?;
+            let pos = self.processed[r];
+            ensure!(
+                pos + 1 == toks.len(),
+                "row {r}: cache holds {pos} tokens, row has {}",
+                toks.len()
+            );
+            self.lane_buf.push(BatchLane { slot, tok: toks[pos], pos });
+            self.lane_rows.push(r);
+        }
+        if self.lane_buf.is_empty() {
+            return Ok(());
+        }
+        self.model.forward_tokens_batch(
+            &mut self.pool,
+            &self.lane_buf,
+            true,
+            &mut self.batch_scratch,
+        )?;
+        for &r in &self.lane_rows {
+            self.processed[r] += 1;
+        }
+        Ok(())
     }
 }
 
@@ -414,15 +501,25 @@ impl ForwardBackend for HostForward {
     }
 
     fn step_logits(&mut self, rows: &[Option<&[i32]>]) -> Result<Vec<Option<Vec<f32>>>> {
-        ensure!(rows.len() <= self.n_rows, "more rows than the backend batch");
-        let mut out = Vec::with_capacity(rows.len());
-        for (r, row) in rows.iter().enumerate() {
-            out.push(match row {
-                Some(toks) if !toks.is_empty() && toks.len() < self.model.cfg.seq_len => {
-                    Some(self.step_row(r, toks)?)
-                }
-                _ => None,
-            });
+        self.step_rows_batched(rows)?;
+        let v = self.model.cfg.vocab;
+        let mut out = vec![None; rows.len()];
+        for (i, &r) in self.lane_rows.iter().enumerate() {
+            out[r] = Some(self.batch_scratch.logits[i * v..(i + 1) * v].to_vec());
+        }
+        Ok(out)
+    }
+
+    fn step_greedy(&mut self, rows: &[Option<&[i32]>]) -> Result<Vec<Option<i32>>> {
+        // one fused forward across every live row; the greedy picks read
+        // the stacked scratch logits directly — no per-row vectors
+        self.step_rows_batched(rows)?;
+        let v = self.model.cfg.vocab;
+        let b = self.lane_rows.len();
+        let picks = argmax_rows(&self.batch_scratch.logits[..b * v], v);
+        let mut out = vec![None; rows.len()];
+        for (&r, &p) in self.lane_rows.iter().zip(&picks) {
+            out[r] = Some(p as i32);
         }
         Ok(out)
     }

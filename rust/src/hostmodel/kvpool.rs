@@ -316,6 +316,13 @@ impl KvPool {
         self.in_use
     }
 
+    /// Whether every session slot has been returned — the shutdown
+    /// invariant the serve soak test pins (a lane leak shows up here long
+    /// before it shows up as pool exhaustion under load).
+    pub fn all_slots_free(&self) -> bool {
+        self.in_use == 0 && self.free.len() == self.slots
+    }
+
     /// Deployment storage footprint in bytes (bit-packed integers + scales,
     /// matching `PackedTensor::storage_bytes` accounting).
     pub fn storage_bytes(&self) -> usize {

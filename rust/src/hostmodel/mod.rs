@@ -17,17 +17,25 @@
 //!   loop performs **no heap allocation**. On the integer path the linear
 //!   layers run the fused `i8` GEMV and attention reads the pool's raw
 //!   int8 slab zero-copy (`q·k` in `i32` — see [`crate::kernels`]).
+//! * [`HostModel::forward_tokens_batch`] — **cross-lane batched decode**:
+//!   several independent [`KvPool`] sessions (serve lanes at ragged
+//!   positions) advance one token each through one fused blocked GEMM per
+//!   weight matrix, bit-identical per lane to `forward_token_into` (exact
+//!   `i32` accumulation makes GEMV ≡ GEMM; attention stays per lane over
+//!   each lane's own slab rows).
 //! * [`HostModel::forward_seq`] — batched full-sequence forward returning
 //!   logits at every position (continuation log-likelihood scoring),
 //!   running the same kernels in blocked multi-row GEMM form — one pass
 //!   over each weight matrix instead of n independent matvecs.
 //!
-//! Both mirror `python/compile/model.py::forward` site for site (sans the
+//! All mirror `python/compile/model.py::forward` site for site (sans the
 //! online-rotation ablation). `proptests.rs` and
 //! `tests/kernels_integration.rs` pin the incremental == batched identity
 //! bit-exactly on the deployment store, and pin the integer path against
 //! the f32 fake-quant reference ([`HostModel::new_reference`]) at the
-//! greedy-token and 1e-4-relative-logit level.
+//! greedy-token and 1e-4-relative-logit level; the batched≡sequential
+//! cross-lane identity is swept through the real serve scheduler in
+//! `proptests.rs`.
 //!
 //! [`builtin_model`] / [`builtin_prec`] mirror `python/compile/configs.py`
 //! so host-backend workloads run in a bare checkout, no manifest needed.
@@ -41,7 +49,7 @@ use anyhow::{ensure, Context, Result};
 use crate::config::{ArtifactSpec, ModelCfg, PrecCfg, TensorSpec};
 use crate::kernels::{
     attend_f32, attend_i8, matvec_into, quant_rows_i32, quant_rows_i8, rmsnorm_into, silu, ActRow,
-    DecodeScratch, Linear, QLinear,
+    BatchScratch, DecodeScratch, Linear, QLinear, GEMM_BLOCK,
 };
 use crate::model::ParamStore;
 use crate::policy::{QuantMode, QuantPolicy};
@@ -280,6 +288,19 @@ struct LayerWeights {
     wg: Linear,
     wu: Linear,
     wd: Linear,
+}
+
+/// One lane of a cross-lane batched decode step: pool session `slot`
+/// advances by token `tok` at position `pos`. Positions may be ragged
+/// across lanes — staggered admissions are the normal serve state.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchLane {
+    /// the lane's [`KvPool`] session slot
+    pub slot: usize,
+    /// the token to fold into the cache this step
+    pub tok: i32,
+    /// the position `tok` lands at (== tokens already cached)
+    pub pos: usize,
 }
 
 /// The host quantized transformer: folded weights + activation quantizers +
@@ -774,6 +795,221 @@ impl HostModel {
             .map(|lg| lg.to_vec()))
     }
 
+    /// **Cross-lane batched decode**: advance several independent [`KvPool`]
+    /// sessions by one token each through **one fused pass per weight
+    /// matrix**. The B lanes' activation rows are stacked `[B, dim]` and
+    /// run through the blocked `i8` GEMM ([`QLinear::gemm_into`]) instead
+    /// of B sequential GEMVs, so at batch width B every weight matrix is
+    /// streamed once per [`GEMM_BLOCK`] lanes per step instead of B times —
+    /// the memory-bound lever `silq serve` rides. Attention stays per lane
+    /// (each lane owns its own slab rows at its own — possibly ragged —
+    /// position), exactly as in [`HostModel::forward_token_into`].
+    ///
+    /// Bit-exactness: per lane this computes *exactly* what
+    /// `forward_token_into` computes — row quantization is per lane row
+    /// (same steps), the GEMM's `i32` contraction is exact so blocking
+    /// cannot change any row's result (GEMV ≡ GEMM, pinned in
+    /// `kernels::tests`), and RoPE/norms/residuals/attention are per-lane
+    /// scalar loops. The batched≡sequential proptest and the serve
+    /// identity suite pin this end to end.
+    ///
+    /// Logits land in `scratch.logits` as `[B, vocab]` row-major, ordered
+    /// as `lanes`; `None` when `want_logits` is off (prefill). Lanes must
+    /// target distinct pool slots.
+    pub fn forward_tokens_batch<'s>(
+        &self,
+        pool: &mut KvPool,
+        lanes: &[BatchLane],
+        want_logits: bool,
+        scratch: &'s mut BatchScratch,
+    ) -> Result<Option<&'s [f32]>> {
+        let cfg = &self.cfg;
+        let (d, f, h, v) = (cfg.d_model, cfg.d_ff, cfg.n_heads, cfg.vocab);
+        let b = lanes.len();
+        ensure!(b > 0, "batched step over zero lanes");
+        scratch.check(cfg, b);
+        for (i, ln) in lanes.iter().enumerate() {
+            ensure!(
+                ln.pos < cfg.seq_len,
+                "lane {i}: position {} outside the context window",
+                ln.pos
+            );
+            ensure!(
+                ln.tok >= 0 && (ln.tok as usize) < v,
+                "lane {i}: token {} outside the vocab",
+                ln.tok
+            );
+            ensure!(
+                !lanes[..i].iter().any(|o| o.slot == ln.slot),
+                "lane {i}: slot {} stepped twice in one batch",
+                ln.slot
+            );
+        }
+        // attention can only read integers the pool actually stores
+        let int_attn = self.int_attn && pool.store == CacheStore::Int8;
+
+        let s = &mut *scratch;
+        for (l, ln) in lanes.iter().enumerate() {
+            let t = ln.tok as usize;
+            s.x[l * d..(l + 1) * d].copy_from_slice(&self.embed[t * d..(t + 1) * d]);
+        }
+
+        for li in 0..cfg.n_layers {
+            let st = self.steps(li);
+            let lw = &self.layers[li];
+
+            // attention-input projections: one fused GEMM per matrix over
+            // the B stacked (normed, quantized) lane rows
+            for l in 0..b {
+                rmsnorm_into(&s.x[l * d..(l + 1) * d], &lw.ln1, &mut s.hnorm[l * d..(l + 1) * d]);
+            }
+            self.seq_linear(
+                self.int_linear,
+                &mut s.hnorm[..b * d],
+                b,
+                d,
+                cfg.policy.acts.bits,
+                st.sa_x1,
+                &mut s.xq,
+                &mut s.sx,
+                &mut s.acc,
+                &mut [
+                    (&lw.wq, &mut s.q[..b * d]),
+                    (&lw.wk, &mut s.k[..b * d]),
+                    (&lw.wv, &mut s.v[..b * d]),
+                ],
+            );
+
+            // per-lane: RoPE at the lane's own position, query quantization,
+            // cache write, and attention over the lane's slab rows
+            for (l, ln) in lanes.iter().enumerate() {
+                let qr = l * d;
+                self.rope(ln.pos, &mut s.q[qr..qr + d], &mut s.k[qr..qr + d]);
+                if int_attn {
+                    quant_rows_i32(
+                        &s.q[qr..qr + d],
+                        cfg.d_head(),
+                        cfg.policy.query.bits,
+                        st.sa_q,
+                        &mut s.qq[l * d..(l + 1) * d],
+                        &mut s.qs[l * h..(l + 1) * h],
+                    );
+                } else {
+                    self.act_quant(&mut s.q[qr..qr + d], cfg.policy.query.bits, st.sa_q, h);
+                }
+                pool.write(ln.slot, li, ln.pos, &s.k[qr..qr + d], &s.v[qr..qr + d]);
+
+                let len = ln.pos + 1;
+                if int_attn {
+                    let slab = pool.slab(ln.slot, li, len).expect("Int8 store keeps a slab");
+                    let (ksc, vsc, stride): (&[f32], &[f32], usize) = if slab.rows > 0 {
+                        (slab.k_scales, slab.v_scales, slab.rows)
+                    } else {
+                        (&self.k_attn[li * h..(li + 1) * h], &self.v_attn[li * h..(li + 1) * h], 0)
+                    };
+                    attend_i8(
+                        &s.qq[l * d..(l + 1) * d],
+                        &s.qs[l * h..(l + 1) * h],
+                        slab.k,
+                        slab.v,
+                        ksc,
+                        vsc,
+                        stride,
+                        h,
+                        d,
+                        len,
+                        &mut s.scores[..len],
+                        &mut s.ctx[l * d..(l + 1) * d],
+                    );
+                } else {
+                    pool.read_into(ln.slot, li, len, &mut s.kc[..len * d], &mut s.vc[..len * d])?;
+                    attend_f32(
+                        &s.q[qr..qr + d],
+                        &s.kc[..len * d],
+                        &s.vc[..len * d],
+                        h,
+                        d,
+                        len,
+                        &mut s.scores[..len],
+                        &mut s.ctx[l * d..(l + 1) * d],
+                    );
+                }
+            }
+
+            // output projection + residual, fused across lanes
+            self.seq_linear(
+                self.int_linear,
+                &mut s.ctx[..b * d],
+                b,
+                d,
+                cfg.policy.acts.bits,
+                st.sa_o,
+                &mut s.xq,
+                &mut s.sx,
+                &mut s.acc,
+                &mut [(&lw.wo, &mut s.o[..b * d])],
+            );
+            for (xv, ov) in s.x[..b * d].iter_mut().zip(&s.o[..b * d]) {
+                *xv += *ov;
+            }
+
+            // FFN, fused across lanes
+            for l in 0..b {
+                rmsnorm_into(&s.x[l * d..(l + 1) * d], &lw.ln2, &mut s.hnorm[l * d..(l + 1) * d]);
+            }
+            self.seq_linear(
+                self.int_linear,
+                &mut s.hnorm[..b * d],
+                b,
+                d,
+                cfg.policy.acts.bits,
+                st.sa_x2,
+                &mut s.xq,
+                &mut s.sx,
+                &mut s.acc,
+                &mut [(&lw.wg, &mut s.g[..b * f]), (&lw.wu, &mut s.u[..b * f])],
+            );
+            for (gv, uv) in s.g[..b * f].iter_mut().zip(&s.u[..b * f]) {
+                *gv = silu(*gv) * *uv;
+            }
+            self.seq_linear(
+                self.int_linear,
+                &mut s.g[..b * f],
+                b,
+                f,
+                cfg.policy.acts.bits,
+                st.sa_d,
+                &mut s.xq,
+                &mut s.sx,
+                &mut s.acc,
+                &mut [(&lw.wd, &mut s.o[..b * d])],
+            );
+            for (xv, dv) in s.x[..b * d].iter_mut().zip(&s.o[..b * d]) {
+                *xv += *dv;
+            }
+        }
+
+        if !want_logits {
+            return Ok(None);
+        }
+        for l in 0..b {
+            rmsnorm_into(&s.x[l * d..(l + 1) * d], &self.ln_f, &mut s.hnorm[l * d..(l + 1) * d]);
+        }
+        self.seq_linear(
+            self.int_head,
+            &mut s.hnorm[..b * d],
+            b,
+            d,
+            cfg.policy.head.bits,
+            self.sa.as_ref().map(|st| st.sa_head),
+            &mut s.xq,
+            &mut s.sx,
+            &mut s.acc,
+            &mut [(&self.head, &mut s.logits[..b * v])],
+        );
+        Ok(Some(&scratch.logits[..b * v]))
+    }
+
     /// Batched full-sequence forward of one row: logits at **every**
     /// position, `[len * vocab]` row-major (rows longer than the context
     /// window are truncated, matching `pack_rows`). Independent math from
@@ -809,6 +1045,7 @@ impl HostModel {
         let int_rows = self.int_linear || self.int_head;
         let mut xq = vec![0i8; if int_rows { n * d.max(f) } else { 0 }];
         let mut sx = vec![0f32; if int_rows { n } else { 0 }];
+        let mut acc = vec![0i32; if int_rows { GEMM_BLOCK * d.max(f).max(v) } else { 0 }];
         let attn_n = if self.int_attn { n } else { 0 };
         let mut qq = vec![0i32; attn_n * d];
         let mut qs = vec![0f32; attn_n * h];
@@ -836,6 +1073,7 @@ impl HostModel {
                 st.sa_x1,
                 &mut xq,
                 &mut sx,
+                &mut acc,
                 &mut [
                     (&lw.wq, &mut q_all[..n * d]),
                     (&lw.wk, &mut k_all[..n * d]),
@@ -929,6 +1167,7 @@ impl HostModel {
                 st.sa_o,
                 &mut xq,
                 &mut sx,
+                &mut acc,
                 &mut [(&lw.wo, &mut o_all[..n * d])],
             );
             for (xv, ov) in x.iter_mut().zip(&o_all) {
@@ -948,6 +1187,7 @@ impl HostModel {
                 st.sa_x2,
                 &mut xq,
                 &mut sx,
+                &mut acc,
                 &mut [(&lw.wg, &mut g_all[..n * f]), (&lw.wu, &mut u_all[..n * f])],
             );
             for (gv, uv) in g_all.iter_mut().zip(&u_all) {
@@ -962,6 +1202,7 @@ impl HostModel {
                 st.sa_d,
                 &mut xq,
                 &mut sx,
+                &mut acc,
                 &mut [(&lw.wd, &mut o_all[..n * d])],
             );
             for (xv, dv) in x.iter_mut().zip(&o_all) {
@@ -982,6 +1223,7 @@ impl HostModel {
             self.sa.as_ref().map(|st| st.sa_head),
             &mut xq,
             &mut sx,
+            &mut acc,
             &mut [(&self.head, &mut logits[..n * v])],
         );
         Ok(logits)
@@ -989,7 +1231,11 @@ impl HostModel {
 
     /// Quantize `n` activation rows (`[n, in_dim]`, in place on the f32
     /// path) once, then run them through each `(weight, out)` pair —
-    /// blocked GEMM on the packed path, per-row matvec on the f32 path.
+    /// blocked GEMM on the packed path (`acc` is `i32` scratch, at least
+    /// `GEMM_BLOCK · out_dim`), per-row matvec on the f32 path. Shared by
+    /// the full-sequence forward and the cross-lane batched decode step:
+    /// per row it quantizes exactly as `prep_act` and contracts exactly as
+    /// the GEMV, which is what makes batched ≡ sequential bit-exact.
     fn seq_linear(
         &self,
         int: bool,
@@ -1000,6 +1246,7 @@ impl HostModel {
         step: Option<f32>,
         xq: &mut [i8],
         sx: &mut [f32],
+        acc: &mut [i32],
         outs: &mut [(&Linear, &mut [f32])],
     ) {
         if int {
@@ -1015,7 +1262,7 @@ impl HostModel {
             }
             for (lin, out) in outs.iter_mut() {
                 match lin {
-                    Linear::Int8(ql) => ql.gemm(&xq[..n * in_dim], &sx[..n], out),
+                    Linear::Int8(ql) => ql.gemm_into(&xq[..n * in_dim], &sx[..n], acc, out),
                     Linear::F32 { .. } => unreachable!("packed path with an f32 weight"),
                 }
             }
@@ -1153,6 +1400,106 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn batched_cross_lane_step_is_bit_identical_to_sequential() {
+        // the PR-5 tentpole identity at unit scale: three lanes at ragged
+        // positions advanced through forward_tokens_batch (one fused GEMM
+        // per matrix) produce *bit-identical* logits to three sequential
+        // forward_token_into calls, on every policy family. Swept through
+        // the real scheduler by proptests.rs.
+        use crate::kernels::BatchScratch;
+        for (quantized, act_dynamic) in [(true, true), (true, false), (false, true)] {
+            let cfg = tiny_host_cfg(quantized, act_dynamic);
+            let params = host_test_params(&cfg, 51);
+            let model = HostModel::new(cfg.clone(), &params).unwrap();
+            let store = CacheStore::for_policy(&cfg.policy);
+            let mut pool_s = model.make_pool(3, store).unwrap();
+            let mut pool_b = model.make_pool(3, store).unwrap();
+            let mut scratch = DecodeScratch::for_cfg(&cfg);
+            let mut bscratch = BatchScratch::for_cfg(&cfg, 3);
+            // ragged prefixes — staggered admissions are the normal state
+            let prompts: [&[i32]; 3] = [&[1, 7, 130], &[2, 9], &[3, 5, 22, 10, 4]];
+            let mut slots_s = vec![];
+            let mut slots_b = vec![];
+            for p in prompts.iter() {
+                let (ss, sb) = (pool_s.alloc().unwrap(), pool_b.alloc().unwrap());
+                for (pos, &t) in p[..p.len() - 1].iter().enumerate() {
+                    model
+                        .forward_token_into(&mut pool_s, ss, t, pos, false, &mut scratch)
+                        .unwrap();
+                    model
+                        .forward_token_into(&mut pool_b, sb, t, pos, false, &mut scratch)
+                        .unwrap();
+                }
+                slots_s.push(ss);
+                slots_b.push(sb);
+            }
+            let v = cfg.vocab;
+            let mut rows: Vec<Vec<i32>> = prompts.iter().map(|p| p.to_vec()).collect();
+            for step in 0..4 {
+                let lanes: Vec<BatchLane> = rows
+                    .iter()
+                    .zip(&slots_b)
+                    .map(|(r, &slot)| BatchLane {
+                        slot,
+                        tok: *r.last().unwrap(),
+                        pos: r.len() - 1,
+                    })
+                    .collect();
+                let blg = model
+                    .forward_tokens_batch(&mut pool_b, &lanes, true, &mut bscratch)
+                    .unwrap()
+                    .unwrap()
+                    .to_vec();
+                for (l, row) in rows.iter_mut().enumerate() {
+                    let (tok, pos) = (*row.last().unwrap(), row.len() - 1);
+                    let slg = model
+                        .forward_token_into(&mut pool_s, slots_s[l], tok, pos, true, &mut scratch)
+                        .unwrap()
+                        .unwrap();
+                    assert_eq!(
+                        &blg[l * v..(l + 1) * v],
+                        slg,
+                        "quantized={quantized} act_dynamic={act_dynamic} step={step} lane={l}: \
+                         batched logits diverged from sequential"
+                    );
+                    row.push(argmax(slg) as i32);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_step_rejects_bad_lanes() {
+        use crate::kernels::BatchScratch;
+        let cfg = tiny_host_cfg(true, true);
+        let params = host_test_params(&cfg, 53);
+        let model = HostModel::new(cfg.clone(), &params).unwrap();
+        let mut pool = model.make_pool(2, CacheStore::Int8).unwrap();
+        let (a, b) = (pool.alloc().unwrap(), pool.alloc().unwrap());
+        let mut s = BatchScratch::for_cfg(&cfg, 2);
+        let lane = |slot, tok, pos| BatchLane { slot, tok, pos };
+        // empty batch, out-of-window position, out-of-vocab token, and a
+        // slot stepped twice in one batch are all hard errors
+        assert!(model.forward_tokens_batch(&mut pool, &[], true, &mut s).is_err());
+        assert!(model
+            .forward_tokens_batch(&mut pool, &[lane(a, 1, cfg.seq_len)], true, &mut s)
+            .is_err());
+        assert!(model
+            .forward_tokens_batch(&mut pool, &[lane(a, 9999, 0)], true, &mut s)
+            .is_err());
+        assert!(model
+            .forward_tokens_batch(&mut pool, &[lane(a, 1, 0), lane(a, 2, 1)], true, &mut s)
+            .is_err());
+        // a well-formed two-lane batch still works after the rejections
+        let lg = model
+            .forward_tokens_batch(&mut pool, &[lane(a, 1, 0), lane(b, 2, 0)], true, &mut s)
+            .unwrap()
+            .unwrap();
+        assert_eq!(lg.len(), 2 * cfg.vocab);
+        assert!(lg.iter().all(|x| x.is_finite()));
     }
 
     #[test]

@@ -40,7 +40,7 @@
 
 pub mod scratch;
 
-pub use scratch::DecodeScratch;
+pub use scratch::{BatchScratch, DecodeScratch};
 
 use crate::quant::{qbounds, round_half_even, EPS};
 
@@ -126,6 +126,11 @@ pub fn quant_rows_i32(
 // packed linear weights + fused GEMV / GEMM
 // ---------------------------------------------------------------------------
 
+/// Activation rows processed per accumulator block in [`QLinear::gemm`] /
+/// [`QLinear::gemm_into`] — public so scratch buffers can size their
+/// accumulators (`GEMM_BLOCK · out_dim`) without knowing kernel internals.
+pub const GEMM_BLOCK: usize = 4;
+
 /// A linear weight folded to integers at model construction: row-major
 /// `[in_dim, out_dim]` `i8` values (matching the f32 matrices' `x @ W`
 /// layout) plus one pre-floored f32 step per output channel — the
@@ -190,20 +195,31 @@ impl QLinear {
 
     /// Blocked multi-row GEMM: `sxs.len()` activation rows (`xq` row-major
     /// `[n, in_dim]`, one scale per row) through one pass over the weight
-    /// matrix, `BLOCK` rows at a time — prefill/scoring stops paying n
-    /// independent weight streams. Bit-identical to [`QLinear::gemv`] per
-    /// row (the `i32` contraction is exact, so blocking cannot change it;
-    /// the descale expression is the same).
+    /// matrix, [`GEMM_BLOCK`] rows at a time — prefill/scoring (and, since
+    /// the cross-lane batching PR, every batched decode step) stops paying
+    /// n independent weight streams. Bit-identical to [`QLinear::gemv`]
+    /// per row (the `i32` contraction is exact, so blocking cannot change
+    /// it; the descale expression is the same). Allocates its own
+    /// accumulator; hot loops use [`QLinear::gemm_into`] instead.
     pub fn gemm(&self, xq: &[i8], sxs: &[f32], out: &mut [f32]) {
-        const BLOCK: usize = 4;
+        let mut acc = vec![0i32; GEMM_BLOCK.min(sxs.len().max(1)) * self.out_dim];
+        self.gemm_into(xq, sxs, &mut acc, out);
+    }
+
+    /// [`QLinear::gemm`] with a caller-provided `i32` accumulator
+    /// (`>= min(n, GEMM_BLOCK) · out_dim`) — the multi-row decode entry:
+    /// B stacked activation rows through one pass over the weights with no
+    /// heap allocation, so the cross-lane batched decode step stays as
+    /// zero-alloc as the single-lane GEMV path.
+    pub fn gemm_into(&self, xq: &[i8], sxs: &[f32], acc: &mut [i32], out: &mut [f32]) {
         let n = sxs.len();
         let od = self.out_dim;
         debug_assert_eq!(xq.len(), n * self.in_dim);
         debug_assert_eq!(out.len(), n * od);
-        let mut acc = vec![0i32; BLOCK * od];
+        debug_assert!(acc.len() >= GEMM_BLOCK.min(n) * od);
         let mut r = 0;
         while r < n {
-            let b = (n - r).min(BLOCK);
+            let b = (n - r).min(GEMM_BLOCK);
             acc[..b * od].fill(0);
             for i in 0..self.in_dim {
                 let row = &self.q[i * od..(i + 1) * od];
@@ -546,6 +562,12 @@ mod tests {
             ql.gemv(&xq[r * din..(r + 1) * din], sxs[r], &mut acc, &mut row);
             assert_eq!(&out[r * dout..(r + 1) * dout], &row[..], "row {r}");
         }
+        // the caller-scratch entry is the same kernel (the batched decode
+        // path rides on this)
+        let mut acc2 = vec![0i32; GEMM_BLOCK * dout];
+        let mut out2 = vec![0f32; n * dout];
+        ql.gemm_into(&xq, &sxs, &mut acc2, &mut out2);
+        assert_eq!(out, out2);
     }
 
     #[test]

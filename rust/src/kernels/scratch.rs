@@ -1,14 +1,23 @@
-//! `DecodeScratch` — the zero-alloc working set of one decode step.
+//! `DecodeScratch` / `BatchScratch` — the zero-alloc working sets of one
+//! decode step.
 //!
 //! Every intermediate of `HostModel::forward_token_into` (normed rows,
 //! attention inputs, quantized rows and their steps, scores, the f32
-//! fallback dequant buffers, the logits) lives here, sized once from the
-//! model config. A serve lane or an eval decode session carries one and
-//! reuses it every step, so the steady-state decode loop performs **no
-//! heap allocation** — `tests/kernels_zero_alloc.rs` pins this with a
-//! counting global allocator.
+//! fallback dequant buffers, the logits) lives in a [`DecodeScratch`],
+//! sized once from the model config. A serve lane or an eval decode
+//! session carries one and reuses it every step, so the steady-state
+//! decode loop performs **no heap allocation** —
+//! `tests/kernels_zero_alloc.rs` pins this with a counting global
+//! allocator.
+//!
+//! [`BatchScratch`] is the cross-lane twin: the same buffers widened to
+//! `rows` stacked lanes, feeding `HostModel::forward_tokens_batch` (one
+//! fused GEMM per weight matrix across every live serve lane). Attention
+//! stays per lane, so the score and f32-fallback dequant buffers keep a
+//! single lane's shape and are reused lane by lane.
 
 use crate::hostmodel::HostCfg;
+use crate::kernels::GEMM_BLOCK;
 
 /// Pre-sized buffers for one incremental decode step. Buffers are sized
 /// for the *largest* site they serve (e.g. `xq` covers both `d_model` and
@@ -98,6 +107,102 @@ impl DecodeScratch {
     }
 }
 
+/// Pre-sized buffers for one **cross-lane batched** decode step: up to
+/// `rows` lanes advance together, each intermediate stacked row-major
+/// `[rows, dim]`. The linear layers run one fused GEMM per matrix over
+/// the stack; attention runs per lane (each lane owns its own KV slab),
+/// reusing the single-lane `scores`/`kc`/`vc` buffers.
+pub struct BatchScratch {
+    /// lanes this scratch was sized for
+    pub rows: usize,
+    /// residual stream `[rows * d_model]`
+    pub x: Vec<f32>,
+    /// normed rows `[rows * d_model]`
+    pub hnorm: Vec<f32>,
+    /// query rows `[rows * d_model]`
+    pub q: Vec<f32>,
+    /// key rows `[rows * d_model]`
+    pub k: Vec<f32>,
+    /// value rows `[rows * d_model]`
+    pub v: Vec<f32>,
+    /// attention contexts `[rows * d_model]`
+    pub ctx: Vec<f32>,
+    /// projection outputs `[rows * d_model]`
+    pub o: Vec<f32>,
+    /// FFN gate rows `[rows * d_ff]` (reused for the gated product)
+    pub g: Vec<f32>,
+    /// FFN up rows `[rows * d_ff]`
+    pub u: Vec<f32>,
+    /// quantized activation rows `[rows * max(d_model, d_ff)]`
+    pub xq: Vec<i8>,
+    /// one activation step per lane row `[rows]`
+    pub sx: Vec<f32>,
+    /// quantized query rows `[rows * d_model]` (i32: the query is 16-bit)
+    pub qq: Vec<i32>,
+    /// per-(lane, head) query steps `[rows * n_heads]`
+    pub qs: Vec<f32>,
+    /// blocked-GEMM accumulator `[GEMM_BLOCK * max(d_model, d_ff, vocab)]`
+    pub acc: Vec<i32>,
+    /// attention scores `[seq_len]` (per lane, reused)
+    pub scores: Vec<f32>,
+    /// f32 K dequant buffer `[seq_len · d_model]` (fallback path, per lane)
+    pub kc: Vec<f32>,
+    /// f32 V dequant buffer `[seq_len · d_model]` (fallback path, per lane)
+    pub vc: Vec<f32>,
+    /// next-token logits `[rows * vocab]`
+    pub logits: Vec<f32>,
+}
+
+impl BatchScratch {
+    /// Size every buffer for up to `rows` lanes of `cfg` (the only
+    /// allocations the batched decode path ever makes).
+    pub fn for_cfg(cfg: &HostCfg, rows: usize) -> BatchScratch {
+        let (d, f, v) = (cfg.d_model, cfg.d_ff, cfg.vocab);
+        let wide = d.max(f);
+        let rows = rows.max(1);
+        BatchScratch {
+            rows,
+            x: vec![0.0; rows * d],
+            hnorm: vec![0.0; rows * d],
+            q: vec![0.0; rows * d],
+            k: vec![0.0; rows * d],
+            v: vec![0.0; rows * d],
+            ctx: vec![0.0; rows * d],
+            o: vec![0.0; rows * d],
+            g: vec![0.0; rows * f],
+            u: vec![0.0; rows * f],
+            xq: vec![0; rows * wide],
+            sx: vec![0.0; rows],
+            qq: vec![0; rows * d],
+            qs: vec![0.0; rows * cfg.n_heads.max(1)],
+            acc: vec![0; GEMM_BLOCK * wide.max(v)],
+            scores: vec![0.0; cfg.seq_len],
+            kc: vec![0.0; cfg.seq_len * d],
+            vc: vec![0.0; cfg.seq_len * d],
+            logits: vec![0.0; rows * v],
+        }
+    }
+
+    /// Assert this scratch holds `b` lanes of `cfg` (a scratch sized for a
+    /// different model, or stepped with more lanes than it was built for,
+    /// is a programming error caught before any buffer indexing).
+    pub fn check(&self, cfg: &HostCfg, b: usize) {
+        let (d, f, v) = (cfg.d_model, cfg.d_ff, cfg.vocab);
+        assert!(
+            b <= self.rows
+                && self.x.len() >= b * d
+                && self.g.len() >= b * f
+                && self.xq.len() >= b * d.max(f)
+                && self.acc.len() >= GEMM_BLOCK * d.max(f).max(v)
+                && self.qs.len() >= b * cfg.n_heads
+                && self.scores.len() >= cfg.seq_len
+                && self.kc.len() >= cfg.seq_len * d
+                && self.logits.len() >= b * v,
+            "BatchScratch was sized for a different model or fewer lanes"
+        );
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -120,5 +225,23 @@ mod tests {
         big.d_model *= 2;
         big.d_ff *= 2;
         DecodeScratch::for_cfg(&cfg).check(&big);
+    }
+
+    #[test]
+    fn batch_scratch_fits_its_lane_count() {
+        let cfg = tiny_host_cfg(true, true);
+        let s = BatchScratch::for_cfg(&cfg, 4);
+        s.check(&cfg, 4);
+        s.check(&cfg, 1);
+        assert_eq!(s.logits.len(), 4 * cfg.vocab);
+        assert_eq!(s.sx.len(), 4);
+        assert!(s.acc.len() >= GEMM_BLOCK * cfg.vocab);
+    }
+
+    #[test]
+    #[should_panic(expected = "fewer lanes")]
+    fn batch_scratch_rejects_more_lanes_than_sized() {
+        let cfg = tiny_host_cfg(true, true);
+        BatchScratch::for_cfg(&cfg, 2).check(&cfg, 3);
     }
 }

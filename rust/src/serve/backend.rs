@@ -13,11 +13,19 @@
 //!   shape and recomputes the full sequence on PJRT each step (the graph
 //!   holds its cache internally). The throughput path when artifacts are
 //!   built.
-//! * [`HostBackend`] — over [`HostForward`]: incremental single-token
-//!   decode with an explicit [`crate::hostmodel::KvPool`], the host mirror
-//!   of the deployment loop where the K/V cache is resident in the paper's
-//!   integer representation. Runs with no artifacts at all, which is what
-//!   lets the serve integration tests execute everywhere.
+//! * [`HostBackend`] — over [`HostForward`]: incremental decode with an
+//!   explicit [`crate::hostmodel::KvPool`], the host mirror of the
+//!   deployment loop where the K/V cache is resident in the paper's
+//!   integer representation. One scheduler step is **one cross-lane
+//!   batched forward**: every live lane's activation row stacks into one
+//!   fused `i8` GEMM per weight matrix
+//!   (`ForwardBackend::step_greedy` → `HostModel::forward_tokens_batch`),
+//!   so at batch width B each matrix streams once per GEMM block per step
+//!   instead of B times. [`HostBackend::new_sequential`] keeps the
+//!   per-lane GEMV loop as the bit-identical reference the
+//!   batched≡sequential identity suite and the bench baseline run
+//!   against. Runs with no artifacts at all, which is what lets the serve
+//!   integration tests execute everywhere.
 
 use anyhow::{ensure, Result};
 
@@ -94,19 +102,51 @@ impl DecodeBackend for ArtifactBackend {
 
 /// Incremental greedy decoder over a `ParamStore` (a [`HostForward`] in
 /// lane clothing): scheduler lanes map one-to-one onto the forward's cache
-/// rows.
+/// rows, and one scheduler step is one cross-lane batched forward.
 pub struct HostBackend {
     inner: HostForward,
+    /// step lanes one at a time through the per-lane GEMV path instead of
+    /// the fused cross-lane GEMM — the bit-identical sequential reference
+    sequential: bool,
 }
 
 impl HostBackend {
+    /// The production backend: every scheduler step advances all live
+    /// lanes through one fused batched forward.
     pub fn new(
         cfg: HostCfg,
         n_lanes: usize,
         params: &ParamStore,
         store: CacheStore,
     ) -> Result<HostBackend> {
-        Ok(HostBackend { inner: HostForward::new(cfg, n_lanes, params, store)? })
+        Ok(HostBackend {
+            inner: HostForward::new(cfg, n_lanes, params, store)?,
+            sequential: false,
+        })
+    }
+
+    /// The **sequential reference**: lanes step one at a time through
+    /// [`HostForward::step_row_greedy`] (the pre-batching serve loop).
+    /// Bit-identical to [`HostBackend::new`] by the exact-integer GEMV ≡
+    /// GEMM invariant — the batched≡sequential proptest runs both through
+    /// the real scheduler and requires token-exact agreement, and the
+    /// bench harness measures the batched speedup against this.
+    pub fn new_sequential(
+        cfg: HostCfg,
+        n_lanes: usize,
+        params: &ParamStore,
+        store: CacheStore,
+    ) -> Result<HostBackend> {
+        Ok(HostBackend {
+            inner: HostForward::new(cfg, n_lanes, params, store)?,
+            sequential: true,
+        })
+    }
+
+    /// Whether every KV slot is back in the pool (serve-soak shutdown
+    /// invariant).
+    pub fn all_slots_free(&self) -> bool {
+        self.inner.all_slots_free()
     }
 }
 
@@ -129,12 +169,18 @@ impl DecodeBackend for HostBackend {
 
     fn step(&mut self, lanes: &[Option<&[i32]>]) -> Result<Vec<Option<i32>>> {
         ensure!(lanes.len() <= self.inner.batch(), "more lanes than configured");
+        if !self.sequential {
+            // the hot path: gather every live lane into ONE batched
+            // forward — one fused GEMM per weight matrix per step across
+            // the whole batch, greedy picks straight off the stacked
+            // scratch logits
+            return self.inner.step_greedy(lanes);
+        }
+        // sequential reference: B independent GEMV passes, one per lane
         let mut next = Vec::with_capacity(lanes.len());
         for (lane, toks) in lanes.iter().enumerate() {
             next.push(match toks {
-                Some(toks) if toks.len() < self.inner.seq_len() => {
-                    // greedy pick straight off the scratch logits — the
-                    // serve hot loop materializes no per-token vector
+                Some(toks) if !toks.is_empty() && toks.len() < self.inner.seq_len() => {
                     Some(self.inner.step_row_greedy(lane, toks)?)
                 }
                 _ => None,
@@ -184,6 +230,34 @@ mod tests {
             assert_eq!(n1, n2);
             toks.push(n1);
         }
+    }
+
+    #[test]
+    fn batched_step_matches_sequential_reference_token_for_token() {
+        // two lanes at ragged positions: one fused cross-lane step must
+        // pick exactly the tokens two per-lane GEMV steps pick
+        let cfg = tiny_host_cfg(true, true);
+        let params = host_test_params(&cfg, 3);
+        let mut bat = HostBackend::new(cfg.clone(), 2, &params, CacheStore::Int8).unwrap();
+        let mut seq =
+            HostBackend::new_sequential(cfg.clone(), 2, &params, CacheStore::Int8).unwrap();
+        let mut rows: Vec<Vec<i32>> = vec![vec![1, 3, 22], vec![4, 130, 9, 17, 2]];
+        for (lane, row) in rows.iter().enumerate() {
+            bat.admit(lane, row).unwrap();
+            seq.admit(lane, row).unwrap();
+        }
+        for _ in 0..4 {
+            let views: Vec<Option<&[i32]>> = rows.iter().map(|r| Some(r.as_slice())).collect();
+            let nb = bat.step(&views).unwrap();
+            let ns = seq.step(&views).unwrap();
+            assert_eq!(nb, ns, "batched step diverged from the sequential reference");
+            for (row, tok) in rows.iter_mut().zip(nb) {
+                row.push(tok.unwrap());
+            }
+        }
+        bat.evict(0);
+        bat.evict(1);
+        assert!(bat.all_slots_free());
     }
 
     #[test]

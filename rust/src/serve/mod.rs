@@ -8,7 +8,9 @@
 //!             Scheduler: evict finished / admit queued / step   (scheduler.rs)
 //!                   |
 //!             DecodeBackend: ArtifactBackend (PJRT full-sequence)  (backend.rs)
-//!                            HostBackend (incremental + KvPool)
+//!                            HostBackend (cross-lane batched decode
+//!                            over the KvPool — one fused GEMM per
+//!                            weight matrix per step across all lanes)
 //!                   |
 //!             hostmodel::KvPool: slab K/V cache, INT8 quantize-on-write
 //!                   |

@@ -98,11 +98,35 @@ impl ServeStats {
         self.total_new_tokens as f64 / secs.max(1e-9)
     }
 
+    /// Mean TTFT over requests that produced a first token. Degenerate
+    /// runs (nothing completed, or only zero-budget/rejected requests)
+    /// report 0, not NaN — a dashboard averaging these must not poison
+    /// every downstream aggregate.
     pub fn ttft_mean_ms(&self) -> f64 {
         if self.ttft_ms.is_empty() {
-            f64::NAN
+            0.0
         } else {
             self.ttft_ms.iter().sum::<f64>() / self.ttft_ms.len() as f64
+        }
+    }
+
+    /// p95 TTFT. `metrics::percentile` is NaN on an empty sample by
+    /// contract; this guards the degenerate serve run to 0 like the mean
+    /// (`empty_run_report_has_no_nans` pins all three zero-sample gauges).
+    pub fn ttft_p95_ms(&self) -> f64 {
+        if self.ttft_ms.is_empty() {
+            0.0
+        } else {
+            percentile(&self.ttft_ms, 95.0)
+        }
+    }
+
+    /// Mean queue wait across completed requests (0 when none completed).
+    pub fn queued_mean_ms(&self) -> f64 {
+        if self.queued_ms.is_empty() {
+            0.0
+        } else {
+            self.queued_ms.iter().sum::<f64>() / self.queued_ms.len() as f64
         }
     }
 
@@ -123,8 +147,8 @@ impl ServeStats {
             self.steps,
             self.tokens_per_sec(),
             self.ttft_mean_ms(),
-            percentile(&self.ttft_ms, 95.0),
-            if self.queued_ms.is_empty() { 0.0 } else { self.queued_ms.iter().sum::<f64>() / self.queued_ms.len() as f64 },
+            self.ttft_p95_ms(),
+            self.queued_mean_ms(),
             self.mean_queue_depth(),
             100.0 * self.batch_occupancy(),
             self.kv_bytes_peak as f64 / 1024.0,
@@ -163,11 +187,40 @@ mod tests {
     }
 
     #[test]
-    fn empty_run_report_is_finite_enough() {
+    fn empty_run_report_has_no_nans() {
+        // degenerate run: zero completed requests, zero scheduler steps.
+        // Every gauge must report 0 — the step-normalized means guard
+        // steps == 0, and the TTFT mean/p95 guard the empty sample that
+        // metrics::percentile maps to NaN by contract.
         let mut st = ServeStats::new(1);
         st.finish();
         assert_eq!(st.mean_queue_depth(), 0.0);
         assert_eq!(st.batch_occupancy(), 0.0);
-        let _ = st.report();
+        assert_eq!(st.ttft_mean_ms(), 0.0);
+        assert_eq!(st.ttft_p95_ms(), 0.0);
+        assert_eq!(st.queued_mean_ms(), 0.0);
+        assert!(st.tokens_per_sec().is_finite());
+        let report = st.report();
+        assert!(!report.contains("NaN"), "degenerate report leaked a NaN:\n{report}");
+    }
+
+    #[test]
+    fn zero_budget_completions_leave_ttft_at_zero_not_nan() {
+        // a request that completes without ever emitting a token records
+        // no TTFT sample (its per-request ttft_ms is NaN by contract);
+        // the aggregates over the empty sample must still be 0
+        let mut st = ServeStats::new(1);
+        let s = Session::admit(GenRequest::new(1, vec![1, 2], 0), 0);
+        let r = s.into_result(0);
+        assert!(r.ttft_ms.is_nan());
+        st.on_complete(&r);
+        st.on_reject();
+        st.finish();
+        assert_eq!(st.completed, 1);
+        assert_eq!(st.rejected, 1);
+        assert_eq!(st.total_new_tokens, 0);
+        assert_eq!(st.ttft_mean_ms(), 0.0);
+        assert_eq!(st.ttft_p95_ms(), 0.0);
+        assert!(!st.report().contains("NaN"));
     }
 }

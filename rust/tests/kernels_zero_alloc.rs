@@ -85,6 +85,47 @@ fn allocs_during_decode(spec: &str, store: CacheStore, steps: usize) -> u64 {
     ALLOCS.load(Ordering::Relaxed) - before
 }
 
+/// Advance `lanes` pool sessions `steps` times through the cross-lane
+/// batched forward and return the allocation events of the steady-state
+/// loop (the lane array and both scratches are built before counting).
+fn allocs_during_batched_decode(spec: &str, store: CacheStore, lanes: usize, steps: usize) -> u64 {
+    use silq::hostmodel::BatchLane;
+    use silq::kernels::BatchScratch;
+    let cfg = cfg_for(spec);
+    let params = host_test_params(&cfg, 11);
+    let model = HostModel::new(cfg.clone(), &params).unwrap();
+    let mut pool = model.make_pool(lanes, store).unwrap();
+    let mut scratch = DecodeScratch::for_cfg(&cfg);
+    let mut bscratch = BatchScratch::for_cfg(&cfg, lanes);
+
+    // ragged prefixes: lane l prefill length 1 + l
+    let mut lane_state: Vec<BatchLane> = (0..lanes)
+        .map(|l| {
+            let slot = pool.alloc().unwrap();
+            for pos in 0..l {
+                model
+                    .forward_token_into(&mut pool, slot, (1 + pos) as i32, pos, false, &mut scratch)
+                    .unwrap();
+            }
+            BatchLane { slot, tok: (1 + l) as i32, pos: l }
+        })
+        .collect();
+
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for _ in 0..steps {
+        let lg = model
+            .forward_tokens_batch(&mut pool, &lane_state, true, &mut bscratch)
+            .unwrap()
+            .unwrap();
+        let v = cfg.vocab;
+        for (l, ln) in lane_state.iter_mut().enumerate() {
+            ln.tok = silq::evalharness::decode::argmax(&lg[l * v..(l + 1) * v]) as i32;
+            ln.pos += 1;
+        }
+    }
+    ALLOCS.load(Ordering::Relaxed) - before
+}
+
 /// One test on purpose: the counter is global, so the instrument check and
 /// the measured decode loops must never run on sibling test threads.
 #[test]
@@ -110,6 +151,20 @@ fn steady_state_decode_allocates_nothing() {
         assert_eq!(
             n, 0,
             "{spec}/{store:?}: steady-state forward_token_into performed {n} heap allocations"
+        );
+    }
+
+    // the cross-lane batched step inherits the budget: one fused forward
+    // across 3 ragged lanes, zero allocations in steady state
+    for (spec, store) in [
+        ("w4a8kv8", CacheStore::Int8),
+        ("w4a8kv8:statacts", CacheStore::Int8),
+        ("fp16", CacheStore::F32),
+    ] {
+        let n = allocs_during_batched_decode(spec, store, 3, 20);
+        assert_eq!(
+            n, 0,
+            "{spec}/{store:?}: steady-state forward_tokens_batch performed {n} heap allocations"
         );
     }
 }

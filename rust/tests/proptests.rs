@@ -233,6 +233,84 @@ fn prop_host_incremental_decode_matches_batched_forward() {
 }
 
 #[test]
+fn prop_batched_cross_lane_decode_matches_sequential() {
+    // The PR-5 tentpole identity, swept through the REAL continuous-
+    // batching scheduler: a serve run whose every step is one fused
+    // cross-lane batched forward (`HostBackend::new`) must produce
+    // *token-exact* output against the per-lane sequential reference
+    // (`HostBackend::new_sequential`) — random lane counts, more requests
+    // than lanes (so admissions stagger and lanes sit at ragged
+    // positions), random prompt lengths and budgets (some spilling past
+    // the context window to force window evictions), across the w4/w8
+    // integer policies and the fp16 fallback. Exactness is by
+    // construction — the blocked GEMM's i32 accumulation is exact, so
+    // fusing lanes cannot change any lane's row — and this sweep is the
+    // end-to-end statement of it. Case count drops in debug builds; the
+    // release gate in scripts/check.sh runs the full sweep.
+    use silq::hostmodel::{host_test_params, CacheStore, HostCfg};
+    use silq::serve::{serve_inline, GenRequest, HostBackend};
+    let cases = if cfg!(debug_assertions) { 9 } else { 24 };
+    for seed in 0..cases {
+        let mut rng = Rng::new(seed ^ 0x51);
+        let spec = ["w4a8kv8", "w8a8kv8", "fp16"][(seed % 3) as usize];
+        let lanes = rng.range(1, 5);
+        let cfg = HostCfg {
+            vocab: 64,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 32,
+            seq_len: 16,
+            policy: spec.parse().unwrap(),
+            rope_theta: 10000.0,
+        };
+        let params = host_test_params(&cfg, seed);
+        let store = CacheStore::for_policy(&cfg.policy);
+        let n_req = rng.range(lanes + 1, 3 * lanes + 6);
+        let reqs: Vec<(Vec<i32>, usize)> = (0..n_req)
+            .map(|_| {
+                let plen = rng.range(1, 10);
+                let prompt = (0..plen).map(|_| rng.below(cfg.vocab) as i32).collect();
+                (prompt, rng.range(1, 12))
+            })
+            .collect();
+        let mk = |reqs: &[(Vec<i32>, usize)]| -> Vec<GenRequest> {
+            reqs.iter()
+                .enumerate()
+                .map(|(i, (p, b))| GenRequest::new(i as u64, p.clone(), *b).ignore_eos())
+                .collect()
+        };
+        let bat = HostBackend::new(cfg.clone(), lanes, &params, store).unwrap();
+        let seq = HostBackend::new_sequential(cfg.clone(), lanes, &params, store).unwrap();
+        let (mut rb, stats_b) = serve_inline(bat, lanes, mk(&reqs)).unwrap();
+        let (mut rs, stats_s) = serve_inline(seq, lanes, mk(&reqs)).unwrap();
+        rb.sort_by_key(|r| r.id);
+        rs.sort_by_key(|r| r.id);
+        assert_eq!(rb.len(), n_req, "seed {seed}: a request went missing");
+        assert_eq!(rs.len(), n_req);
+        for (a, b) in rb.iter().zip(&rs) {
+            assert_eq!(a.id, b.id);
+            assert!(a.error.is_none() && b.error.is_none(), "seed {seed} req {}", a.id);
+            assert_eq!(
+                a.tokens, b.tokens,
+                "seed {seed} spec {spec} lanes {lanes} req {}: \
+                 batched cross-lane decode diverged from the sequential reference",
+                a.id
+            );
+            // identical decode paths must also schedule identically
+            assert_eq!(
+                (a.admitted_step, a.finished_step),
+                (b.admitted_step, b.finished_step),
+                "seed {seed} req {}: scheduling diverged",
+                a.id
+            );
+        }
+        assert_eq!(stats_b.total_new_tokens, stats_s.total_new_tokens, "seed {seed}");
+        assert_eq!(stats_b.steps, stats_s.steps, "seed {seed}");
+    }
+}
+
+#[test]
 fn prop_bundle_roundtrip_random() {
     use silq::model::{Tensor, TensorBundle};
     for seed in 0..10 {

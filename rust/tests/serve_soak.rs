@@ -1,0 +1,161 @@
+//! Serve soak: a deterministic seeded load-generation run — hundreds of
+//! requests through the multi-threaded continuous-batching engine with
+//! forced admission rejections (out-of-vocab prompts), zero-budget
+//! completions, and context-window evictions — asserting the shutdown
+//! invariants that only show up under churn:
+//!
+//! * the `KvPool` is **fully freed** at shutdown (no lane leaks a slot,
+//!   no slot is double-admitted — the pool's free-list hard errors catch
+//!   the latter mid-run);
+//! * every submitted request comes back exactly once, completed or
+//!   rejected, never both and never lost;
+//! * `ServeStats` accounting is exact: `total_new_tokens` equals the sum
+//!   of per-request generated lengths, and every reported gauge is
+//!   finite (no NaNs from degenerate samples).
+//!
+//! The default run is sized to stay cheap in debug builds; the release
+//! gate (`scripts/check.sh`) runs a larger sweep, and `make soak` runs
+//! the long-seed version (`SILQ_SOAK=long`) without gating tier-1.
+
+use std::sync::Arc;
+
+use silq::hostmodel::host_test_params;
+use silq::serve::{
+    AdmissionQueue, CacheStore, DecodeBackend, GenRequest, HostBackend, HostCfg, Scheduler,
+    ServeStats,
+};
+
+fn soak_cfg() -> HostCfg {
+    HostCfg {
+        vocab: 256,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 4,
+        d_ff: 64,
+        seq_len: 24,
+        policy: "w4a8kv8".parse().unwrap(),
+        rope_theta: 10000.0,
+    }
+}
+
+/// Whether request `id` is intentionally malformed (admission must reject
+/// it without disturbing the run).
+fn is_bad(id: u64) -> bool {
+    id % 17 == 3
+}
+
+/// Deterministic request stream: the id alone decides prompt, budget, and
+/// malformedness, so every soak run over the same id range generates the
+/// same load regardless of producer interleaving.
+fn request(id: u64, seq_len: usize) -> GenRequest {
+    let plen = 1 + (id % 7) as usize;
+    let mut prompt: Vec<i32> =
+        (0..plen as i32).map(|p| 1 + (id as i32 * 31 + p * 7) % 250).collect();
+    if is_bad(id) {
+        prompt.push(9999); // out of vocab: rejected at admission
+    }
+    let budget = match id % 13 {
+        0 => 0,           // zero-budget: completes without a decode step
+        1 => seq_len * 2, // window-bounded: forced eviction at the context window
+        m => m as usize % 6 + 1,
+    };
+    GenRequest::new(id, prompt, budget).ignore_eos()
+}
+
+#[test]
+fn soak_frees_every_slot_and_keeps_stats_exact() {
+    // SILQ_SOAK=long (make soak) runs the long seed; the default stays
+    // cheap enough for the debug tier-1 run, and scripts/check.sh repeats
+    // the suite in release where the full-size run is fast
+    let long = std::env::var("SILQ_SOAK").map(|v| v == "long").unwrap_or(false);
+    let n_requests: u64 = if long {
+        2400
+    } else if cfg!(debug_assertions) {
+        160
+    } else {
+        480
+    };
+    let producers_n: u64 = 4;
+    let lanes = 4;
+    let cfg = soak_cfg();
+    let seq_len = cfg.seq_len;
+    let params = host_test_params(&cfg, 71);
+    let backend = HostBackend::new(cfg, lanes, &params, CacheStore::Int8).unwrap();
+
+    // multi-threaded producers over a deliberately small queue, so the
+    // scheduler drains against real backpressure while lanes churn
+    let queue = Arc::new(AdmissionQueue::new(8));
+    let producers: Vec<_> = (0..producers_n)
+        .map(|p| {
+            let q = queue.clone();
+            let n = n_requests / producers_n;
+            std::thread::spawn(move || {
+                for i in 0..n {
+                    q.submit(request(p * n + i, seq_len)).unwrap();
+                }
+            })
+        })
+        .collect();
+    let closer = {
+        let q = queue.clone();
+        std::thread::spawn(move || {
+            for t in producers {
+                t.join().unwrap();
+            }
+            q.close();
+        })
+    };
+
+    let mut sched = Scheduler::new(backend, lanes).unwrap();
+    let mut stats = ServeStats::new(lanes);
+    let results = sched.run(&queue, &mut stats).unwrap();
+    closer.join().unwrap();
+
+    // --- no request lost, duplicated, or both completed and rejected ---
+    assert_eq!(results.len(), n_requests as usize, "a request was lost or duplicated");
+    let mut ids: Vec<u64> = results.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), n_requests as usize, "duplicate request ids in the results");
+
+    let n_bad = (0..n_requests).filter(|&id| is_bad(id)).count();
+    for r in &results {
+        if is_bad(r.id) {
+            let Some(err) = r.error.as_deref() else {
+                panic!("malformed request {} was not rejected", r.id);
+            };
+            assert!(err.contains("vocab"), "request {}: unexpected rejection: {err}", r.id);
+            assert!(r.generated().is_empty());
+        } else {
+            assert!(r.error.is_none(), "request {} failed: {:?}", r.id, r.error);
+            let want = match r.id % 13 {
+                0 => 0,
+                1 => seq_len - r.prompt_len, // clipped at the window
+                m => m as usize % 6 + 1,
+            };
+            assert_eq!(r.generated().len(), want, "request {}: wrong budget accounting", r.id);
+        }
+    }
+
+    // --- stats invariants ---
+    assert_eq!(stats.rejected, n_bad);
+    assert_eq!(stats.completed + stats.rejected, n_requests as usize);
+    let generated_sum: usize = results.iter().map(|r| r.generated().len()).sum();
+    assert_eq!(
+        stats.total_new_tokens, generated_sum,
+        "total_new_tokens diverged from the per-request generated lengths"
+    );
+    assert!(stats.steps > 0);
+    assert!(stats.tokens_per_sec().is_finite() && stats.tokens_per_sec() > 0.0);
+    assert!(stats.ttft_mean_ms().is_finite() && stats.ttft_mean_ms() >= 0.0);
+    assert!(stats.ttft_p95_ms().is_finite() && stats.ttft_p95_ms() >= 0.0);
+    assert!(stats.batch_occupancy() > 0.0 && stats.batch_occupancy() <= 1.0);
+    assert!(!stats.report().contains("NaN"), "soak report leaked a NaN");
+
+    // --- shutdown: the KV pool is fully freed, nothing resident ---
+    assert!(
+        sched.backend().all_slots_free(),
+        "a lane leaked its KV slot past shutdown"
+    );
+    assert_eq!(sched.backend().kv_bytes(), 0, "resident KV bytes after shutdown");
+}

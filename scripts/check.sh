@@ -10,6 +10,16 @@ cargo build --release --offline
 echo "== cargo test -q =="
 cargo test -q --offline
 
+echo "== cargo test -q --release (integration + property suites) =="
+# the identity sweeps and the serve soak are too slow to size fully in
+# debug (the batched≡sequential sweep and the soak scale down via
+# cfg!(debug_assertions)); this release pass runs the suites where the
+# integer kernels are fast. The long-seed soak stays out of the gate —
+# run it via `make soak`.
+cargo test -q --offline --release \
+  --test proptests --test serve_integration --test serve_soak \
+  --test kernels_integration --test kernels_zero_alloc
+
 echo "== cargo clippy -D warnings =="
 cargo clippy --offline --all-targets -- -D warnings
 
