@@ -20,7 +20,8 @@ use silq::evalharness::decode::argmax;
 use silq::forward::{decode_greedy, HostForward};
 use silq::hostmodel::{builtin_model, host_test_params, HostModel, KvPool};
 use silq::serve::{serve_inline, ArtifactBackend, CacheStore, GenRequest, HostBackend, HostCfg};
-use silq::util::{timer::bench_ms, Rng, Timer};
+use silq::util::timer::{bench_ms, BenchMs};
+use silq::util::{Rng, Timer};
 
 fn section(name: &str) {
     println!("\n== {name} ==");
@@ -28,6 +29,13 @@ fn section(name: &str) {
 
 fn report(name: &str, ms: f64, extra: &str) {
     println!("{name:<44} {ms:>10.3} ms  {extra}");
+}
+
+/// Report a min/mean measurement. The JSON trajectories use the min
+/// (noise-robust: jitter only pushes samples up); the mean rides along
+/// here so the console shows the spread.
+fn report_bench(name: &str, b: BenchMs, extra: &str) {
+    println!("{name:<44} {:>10.3} ms min ({:.3} mean)  {extra}", b.min_ms, b.mean_ms);
 }
 
 /// One serve measurement as a JSON object (serde is unavailable offline;
@@ -63,16 +71,17 @@ fn write_bench_serve_json(entries: &[String]) {
 }
 
 /// Prefill `prompt` into a fresh slot, then decode `steps` tokens through
-/// the scratch-reusing incremental forward; returns mean ms per decoded
-/// token over `reps` repetitions (after one warmup rep).
+/// the scratch-reusing incremental forward; returns min/mean ms per
+/// decoded token over `reps` repetitions (after one warmup rep).
 fn decode_ms_per_tok(
     model: &HostModel,
     pool: &mut KvPool,
     prompt: &[i32],
     steps: usize,
     reps: usize,
-) -> f64 {
+) -> BenchMs {
     let mut scratch = DecodeScratch::for_cfg(&model.cfg);
+    let mut min_ms = f64::INFINITY;
     let mut total_ms = 0.0;
     for rep in 0..reps + 1 {
         let slot = pool.alloc().expect("pool slot");
@@ -93,11 +102,13 @@ fn decode_ms_per_tok(
             tok = argmax(lg) as i32;
         }
         if rep > 0 {
-            total_ms += t0.millis();
+            let rep_ms = t0.millis() / steps as f64;
+            min_ms = min_ms.min(rep_ms);
+            total_ms += rep_ms;
         }
         pool.free(slot);
     }
-    total_ms / (reps * steps) as f64
+    BenchMs { min_ms, mean_ms: total_ms / reps as f64 }
 }
 
 /// Integer-kernel vs f32-reference hostmodel benches on one builtin model;
@@ -119,8 +130,9 @@ fn bench_hostmodel_entry(model_name: &str, policy: &str, seed: u64) -> String {
     let ms_prefill_ref = bench_ms(1, 3, || {
         let _ = ref_model.forward_seq(&prompt).expect("fwd");
     });
-    let prefill_tok_s = plen as f64 / ms_prefill_int * 1e3;
-    let prefill_tok_s_ref = plen as f64 / ms_prefill_ref * 1e3;
+    // the JSON trajectory rates/ratios use the min iteration (noise-robust)
+    let prefill_tok_s = plen as f64 / ms_prefill_int.min_ms * 1e3;
+    let prefill_tok_s_ref = plen as f64 / ms_prefill_ref.min_ms * 1e3;
 
     // decode: steady-state forward_token over the deployment Int8 pool —
     // the reference pays the dequantize-and-copy read path on the same
@@ -130,25 +142,25 @@ fn bench_hostmodel_entry(model_name: &str, policy: &str, seed: u64) -> String {
     let mut ref_pool = ref_model.make_pool(1, CacheStore::Int8).expect("pool");
     let ms_tok_int = decode_ms_per_tok(&int_model, &mut int_pool, &prompt, steps, 3);
     let ms_tok_ref = decode_ms_per_tok(&ref_model, &mut ref_pool, &prompt, steps, 3);
-    let decode_tok_s = 1e3 / ms_tok_int;
-    let decode_tok_s_ref = 1e3 / ms_tok_ref;
-    let speedup = ms_tok_ref / ms_tok_int.max(1e-9);
+    let decode_tok_s = 1e3 / ms_tok_int.min_ms;
+    let decode_tok_s_ref = 1e3 / ms_tok_ref.min_ms;
+    let speedup = ms_tok_ref.min_ms / ms_tok_int.min_ms.max(1e-9);
 
     // bytes the attention read path touches per decoded token, mid-decode
     let kv_len = plen + steps / 2;
     let kv_bytes_int = int_pool.read_bytes_per_token(kv_len);
     let kv_bytes_f32 = cfg.n_layers * 2 * kv_len * cfg.d_model * 4;
-    report(
+    report_bench(
         &format!("decode {model_name} {policy} integer kernels"),
         ms_tok_int,
         &format!("({decode_tok_s:.0} tok/s)"),
     );
-    report(
+    report_bench(
         &format!("decode {model_name} {policy} f32 reference"),
         ms_tok_ref,
         &format!("({decode_tok_s_ref:.0} tok/s, int is {speedup:.1}x faster)"),
     );
-    report(
+    report_bench(
         &format!("prefill {model_name} {policy} integer GEMM"),
         ms_prefill_int,
         &format!("({prefill_tok_s:.0} tok/s vs {prefill_tok_s_ref:.0} f32)"),
@@ -299,16 +311,16 @@ fn main() {
     section("quant substrate (feeds every PTQ table)");
     let mut rng = Rng::new(0);
     let w: Vec<f32> = rng.normal_vec(256 * 256, 0.1);
-    report("weight_step_mse_per_channel 256x256 int4", bench_ms(2, 10, || {
+    report_bench("weight_step_mse_per_channel 256x256 int4", bench_ms(2, 10, || {
         let _ = quant::calib::weight_step_mse_per_channel(&w, 256, 4);
     }), "(paper Eq. 2, ternary search)");
     let steps = quant::calib::weight_step_mse_per_channel(&w, 256, 4);
-    report("fake_quant_per_channel 256x256 int4", bench_ms(2, 50, || {
+    report_bench("fake_quant_per_channel 256x256 int4", bench_ms(2, 50, || {
         let mut c = w.clone();
         quant::fake_quant_per_channel(&mut c, 256, &steps, 4);
     }), "");
     let mut x = rng.normal_vec(1024 * 256, 1.0);
-    report("dynamic_quant_rows 1024x256 int8", bench_ms(2, 50, || {
+    report_bench("dynamic_quant_rows 1024x256 int8", bench_ms(2, 50, || {
         let mut c = x.clone();
         quant::dynamic_quant_rows(&mut c, 256, 8);
     }), "(A8d runtime path)");
@@ -332,16 +344,16 @@ fn main() {
     };
     let wk: Vec<f32> = rng.normal_vec(k * 128, 0.1);
     let sk = quant::calib::weight_step_mse_per_channel(&wk, 128, 4);
-    report("gptq_quantize_family 128x128 int4", bench_ms(1, 5, || {
+    report_bench("gptq_quantize_family 128x128 int4", bench_ms(1, 5, || {
         let mut c = wk.clone();
         let _ = gptq_quantize_family(&mut c, k, 128, &gram, &sk, 4);
     }), "(Cholesky + OBS updates)");
-    report("hadamard(128) construction", bench_ms(2, 50, || {
+    report_bench("hadamard(128) construction", bench_ms(2, 50, || {
         let _ = hadamard(128);
     }), "(SpinQuant rotation)");
     let a = Mat::from_vec(128, 128, rng.normal_vec(128 * 128, 1.0));
     let b = Mat::from_vec(128, 128, rng.normal_vec(128 * 128, 1.0));
-    report("procrustes rotation_decomposition 128x128", bench_ms(1, 3, || {
+    report_bench("procrustes rotation_decomposition 128x128", bench_ms(1, 3, || {
         let _ = silq::linalg::rotation_decomposition(&a, &b);
     }), "(Figure 3, Jacobi SVD)");
 
@@ -349,7 +361,7 @@ fn main() {
     section("data pipeline");
     let world = World::generate(Vocab::new(256), 7);
     let mut batcher = Batcher::new(&world, DataMix::Corpus, 16, 64, 0);
-    report("corpus batch 16x64", bench_ms(10, 200, || {
+    report_bench("corpus batch 16x64", bench_ms(10, 200, || {
         let _ = batcher.next_batch();
     }), "(must be << exec time)");
 
@@ -397,11 +409,11 @@ fn main() {
                     row.push(argmax(last) as i32);
                 }
             });
-            report(&format!("greedy {max_new} tok, prompt {plen:>2}, incremental"), ms_inc, "");
-            report(
+            report_bench(&format!("greedy {max_new} tok, prompt {plen:>2}, incremental"), ms_inc, "");
+            report_bench(
                 &format!("greedy {max_new} tok, prompt {plen:>2}, full recompute"),
                 ms_full,
-                &format!("({:.1}x slower)", ms_full / ms_inc.max(1e-9)),
+                &format!("({:.1}x slower)", ms_full.min_ms / ms_inc.min_ms.max(1e-9)),
             );
         }
     }
@@ -427,7 +439,7 @@ fn main() {
         let ms = bench_ms(2, 10, || {
             let _ = m.run(&inputs).unwrap();
         });
-        report(&format!("fwd {art}"), ms, &format!("({:.0} tok/s)", toks_per / ms * 1e3));
+        report_bench(&format!("fwd {art}"), ms, &format!("({:.0} tok/s)", toks_per / ms.min_ms * 1e3));
     }
 
     // serve throughput through the compiled graph (continuous batching,
@@ -482,7 +494,11 @@ fn main() {
         let ms = bench_ms(1, 5, || {
             let _ = m.run(&inputs).unwrap();
         });
-        report(&format!("train_step {art}"), ms, &format!("({:.0} tok/s)", batch_tokens as f64 / ms * 1e3));
+        report_bench(
+            &format!("train_step {art}"),
+            ms,
+            &format!("({:.0} tok/s)", batch_tokens as f64 / ms.min_ms * 1e3),
+        );
     }
 
     write_bench_serve_json(&serve_json);

@@ -28,6 +28,7 @@ use crate::evalharness::decode::{argmax, argmax_rows, pack_rows};
 use crate::hostmodel::{check_tokens, BatchLane, CacheStore, HostCfg, HostModel, KvPool};
 use crate::kernels::{BatchScratch, DecodeScratch};
 use crate::model::ParamStore;
+use crate::obs;
 use crate::runtime::{build_inputs, literal_i32, to_f32_vec, Engine, Module};
 
 /// Batched logits + incremental decode over one bound model instance
@@ -361,6 +362,7 @@ impl HostForward {
         // validate the WHOLE prompt here — a bad final token must be a
         // per-request rejection, not an error out of the first step
         check_tokens(prompt, self.model.cfg.vocab)?;
+        let _span = obs::span("prefill", "serve", row as u32 + 1, prompt.len() as u64);
         let slot = self.pool.alloc().context("KV pool exhausted")?;
         self.slot_of_row[row] = Some(slot);
         for (pos, &tok) in prompt[..prompt.len() - 1].iter().enumerate() {

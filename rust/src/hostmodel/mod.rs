@@ -52,6 +52,7 @@ use crate::kernels::{
     BatchScratch, DecodeScratch, Linear, QLinear, GEMM_BLOCK,
 };
 use crate::model::ParamStore;
+use crate::obs;
 use crate::policy::{QuantMode, QuantPolicy};
 use crate::quant::{dynamic_quant_rows, fake_quant, fake_quant_per_channel, EPS};
 
@@ -642,6 +643,15 @@ impl HostModel {
         ensure!(pos < cfg.seq_len, "position {pos} outside the context window");
         ensure!(tok >= 0 && (tok as usize) < cfg.vocab, "token {tok} outside the vocab");
         scratch.check(cfg);
+        // phase telemetry: prefill folds the token without logits, decode
+        // pays the head matmul; the guard lives for the whole forward
+        let _span = if want_logits {
+            obs::add(obs::Counter::DecodeTokens, 1);
+            obs::span("decode_token", "hostmodel", slot as u32 + 1, pos as u64)
+        } else {
+            obs::add(obs::Counter::PrefillTokens, 1);
+            obs::span("prefill_token", "hostmodel", slot as u32 + 1, pos as u64)
+        };
         // attention can only read integers the pool actually stores
         let int_attn = self.int_attn && pool.store == CacheStore::Int8;
 
@@ -845,6 +855,12 @@ impl HostModel {
                 ln.slot
             );
         }
+        let _span = obs::span("batch_decode", "hostmodel", 0, b as u64);
+        obs::add(obs::Counter::BatchSteps, 1);
+        obs::add(
+            if want_logits { obs::Counter::DecodeTokens } else { obs::Counter::PrefillTokens },
+            b as u64,
+        );
         // attention can only read integers the pool actually stores
         let int_attn = self.int_attn && pool.store == CacheStore::Int8;
 

@@ -42,6 +42,7 @@ pub mod scratch;
 
 pub use scratch::{BatchScratch, DecodeScratch};
 
+use crate::obs;
 use crate::quant::{qbounds, round_half_even, EPS};
 
 // ---------------------------------------------------------------------------
@@ -175,6 +176,8 @@ impl QLinear {
     pub fn gemv(&self, xq: &[i8], sx: f32, acc: &mut [i32], out: &mut [f32]) {
         debug_assert_eq!(xq.len(), self.in_dim);
         debug_assert_eq!(out.len(), self.out_dim);
+        obs::add(obs::Counter::GemvCalls, 1);
+        obs::add(obs::Counter::I8Macs, (self.in_dim * self.out_dim) as u64);
         let od = self.out_dim;
         let acc = &mut acc[..od];
         acc.fill(0);
@@ -214,6 +217,8 @@ impl QLinear {
     pub fn gemm_into(&self, xq: &[i8], sxs: &[f32], acc: &mut [i32], out: &mut [f32]) {
         let n = sxs.len();
         let od = self.out_dim;
+        obs::add(obs::Counter::GemmCalls, 1);
+        obs::add(obs::Counter::I8Macs, (n * self.in_dim * od) as u64);
         debug_assert_eq!(xq.len(), n * self.in_dim);
         debug_assert_eq!(out.len(), n * od);
         debug_assert!(acc.len() >= GEMM_BLOCK.min(n) * od);
@@ -365,6 +370,8 @@ pub fn attend_i8(
     debug_assert_eq!(qq.len(), dim);
     debug_assert_eq!(ctx.len(), dim);
     debug_assert!(k.len() >= len * dim && v.len() >= len * dim);
+    obs::add(obs::Counter::AttendI8Calls, 1);
+    obs::add(obs::Counter::KvBytesRead, 2 * (len * dim) as u64);
     let dh = dim / heads;
     let inv = 1.0 / (dh as f32).sqrt();
     let scores = &mut scores[..len];

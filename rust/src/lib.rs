@@ -18,6 +18,8 @@
 //! * [`ptq`] — baselines: RTN, SmoothQuant, GPTQ, SpinQuant-analog
 //! * [`evalharness`] — CSR / OLLMv1 / OLLMv2 synthetic benchmark suites
 //! * [`serve`] — continuous-batching inference engine over either backend
+//! * [`obs`] — end-to-end telemetry: atomic counter registry, zero-alloc
+//!   spans + trace ring, latency histograms, Chrome-trace export
 //! * [`data`] — SynthLang corpus + SFT dataset generators
 //! * [`coordinator`] — one runner per paper table/figure
 
@@ -38,6 +40,7 @@ pub mod kernels;
 pub mod linalg;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod policy;
 pub mod ptq;
 pub mod quant;

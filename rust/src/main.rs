@@ -24,8 +24,9 @@ use silq::data::{vocab, DataMix, SftStyle, Vocab, World};
 use silq::evalharness::Evaluator;
 use silq::forward::HostForward;
 use silq::hostmodel::{self, CacheStore, HostCfg};
-use silq::metrics::RunLog;
+use silq::metrics::{RunLog, Table};
 use silq::model::ParamStore;
+use silq::obs;
 use silq::policy::{QuantPolicy, PRESETS};
 use silq::runtime::Engine;
 use silq::serve::{
@@ -203,6 +204,10 @@ fn main() -> Result<()> {
                  \x20      graphs, so it takes manifest precision names only)\n\
                  serve: --requests N --batch B --max_new M --queue_cap C --producers P\n\
                  \x20      --cache int8|f32 (host backend)\n\
+                 obs:   --trace out.trace.json (Chrome trace_event JSON — load in\n\
+                 \x20      ui.perfetto.dev; serve + eval) and, serve only,\n\
+                 \x20      --metrics-out metrics.json (per-step time series; see\n\
+                 \x20      README §Observability for the schema)\n\
                  note:  `--flag value` and `--flag=value` are equivalent; use\n\
                  \x20      `--flag=value` when the value itself starts with `--`"
             );
@@ -376,6 +381,11 @@ fn prec_cmd(args: &Args) -> Result<()> {
 /// decode incrementally.
 fn host_eval_cmd(args: &Args, art_dir: &str) -> Result<()> {
     let model = args.get("model").unwrap_or("tiny");
+    let trace_path = args.get("trace").map(str::to_string);
+    if trace_path.is_some() {
+        obs::enable_tracing(1 << 18);
+    }
+    let build_t = Timer::start();
     // same default precision as the artifact eval path, so flipping only
     // --backend never changes what is evaluated
     let prec = args.get("prec").unwrap_or("fp16");
@@ -403,11 +413,23 @@ fn host_eval_cmd(args: &Args, art_dir: &str) -> Result<()> {
     let world_seed: u64 = args.get_num("world_seed", "7")?;
     let world = World::generate(Vocab::new(mc.vocab), world_seed);
     let mut ev = Evaluator::new(fwd, chat, n_items);
+    let build_secs = build_t.secs();
+    let eval_t = Timer::start();
     let r = ev.eval_all(&world, world_seed ^ silq::evalharness::EVAL_SEED_SALT)?;
+    let eval_secs = eval_t.secs();
     println!("backend=host model={model} prec={prec} policy={} (artifact-free)", hc.policy);
     println!("{}", r.summary());
     for (name, suite, acc) in &r.per_task {
         println!("  {:<16} {:8} {:.2}", name, suite.label(), 100.0 * acc);
+    }
+    let wall = (build_secs + eval_secs).max(1e-9);
+    let mut t = Table::new(&["phase", "secs", "% wall"]);
+    t.row(&["build+load".into(), format!("{build_secs:.3}"), format!("{:.1}", 100.0 * build_secs / wall)]);
+    t.row(&["eval".into(), format!("{eval_secs:.3}"), format!("{:.1}", 100.0 * eval_secs / wall)]);
+    println!("phase breakdown:\n{}", t.render());
+    if let Some(p) = &trace_path {
+        obs::export::write_chrome_trace(p).with_context(|| format!("writing --trace {p}"))?;
+        println!("(chrome trace -> {p}; load in ui.perfetto.dev or chrome://tracing)");
     }
     Ok(())
 }
@@ -428,6 +450,15 @@ fn serve_cmd(args: &Args, art_dir: &str) -> Result<()> {
     let max_new: usize = args.get_num("max_new", "8")?;
     let queue_cap: usize = args.get_num("queue_cap", "16")?;
     let producers: usize = args.get_num::<usize>("producers", "2")?.max(1);
+    let trace_path = args.get("trace").map(str::to_string);
+    let metrics_path = args.get("metrics-out").map(str::to_string);
+    if trace_path.is_some() {
+        // ring sized for the whole run: per-token hostmodel spans dominate
+        // (prefill + decode per request), plus per-step and lifecycle spans
+        obs::enable_tracing(n_requests * (max_new + 16) * 4 + 4096);
+    } else if metrics_path.is_some() {
+        obs::set_enabled(true);
+    }
 
     let manifest = Manifest::load(art_dir).ok();
     let backend_kind = match args.get("backend") {
@@ -598,7 +629,17 @@ fn serve_cmd(args: &Args, art_dir: &str) -> Result<()> {
         println!("  ... and {} more", results.len() - 4);
     }
     println!("{}", stats.report());
+    println!("phase breakdown:\n{}", stats.breakdown());
     println!("wall time {wall:.2}s");
+    if let Some(p) = &metrics_path {
+        std::fs::write(p, stats.metrics_json())
+            .with_context(|| format!("writing --metrics-out {p}"))?;
+        println!("(per-step metrics -> {p})");
+    }
+    if let Some(p) = &trace_path {
+        obs::export::write_chrome_trace(p).with_context(|| format!("writing --trace {p}"))?;
+        println!("(chrome trace -> {p}; load in ui.perfetto.dev or chrome://tracing)");
+    }
     Ok(())
 }
 

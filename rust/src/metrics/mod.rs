@@ -1,13 +1,16 @@
 //! Run logging and report formatting (EXPERIMENTS.md rows come from here).
 
-use std::io::Write;
+use std::io::{BufWriter, Write};
 use std::path::{Path, PathBuf};
 
 /// Append-only run log: step metrics + free-form notes, flushed to
 /// `runs/<name>/log.txt`.
 pub struct RunLog {
     pub dir: PathBuf,
-    file: Option<std::fs::File>,
+    file: Option<BufWriter<std::fs::File>>,
+    /// first failed write already warned (later failures stay quiet — a
+    /// dead disk must not turn a training run into a warning firehose)
+    write_failed: bool,
     pub losses: Vec<(usize, f32)>,
 }
 
@@ -16,6 +19,7 @@ impl RunLog {
         let dir = dir.as_ref().to_path_buf();
         let file = std::fs::create_dir_all(&dir)
             .and_then(|_| std::fs::File::create(dir.join("log.txt")))
+            .map(BufWriter::new)
             .map_err(|e| {
                 eprintln!(
                     "warning: RunLog: cannot create {}/log.txt ({e}); \
@@ -24,26 +28,39 @@ impl RunLog {
                 )
             })
             .ok();
-        RunLog { dir, file, losses: vec![] }
+        RunLog { dir, file, write_failed: false, losses: vec![] }
     }
 
     /// In-memory only (tests, throwaway runs).
     pub fn ephemeral() -> RunLog {
-        RunLog { dir: PathBuf::new(), file: None, losses: vec![] }
+        RunLog { dir: PathBuf::new(), file: None, write_failed: false, losses: vec![] }
+    }
+
+    /// Write one log line, warning on the *first* failure instead of
+    /// silently dropping every write forever.
+    fn write_line(&mut self, line: std::fmt::Arguments<'_>) {
+        if let Some(f) = &mut self.file {
+            if let Err(e) = f.write_fmt(line).and_then(|()| f.write_all(b"\n")) {
+                if !self.write_failed {
+                    self.write_failed = true;
+                    eprintln!(
+                        "warning: RunLog: write to {}/log.txt failed ({e}); \
+                         further log lines may be lost",
+                        self.dir.display()
+                    );
+                }
+            }
+        }
     }
 
     pub fn note(&mut self, msg: &str) {
         println!("{msg}");
-        if let Some(f) = &mut self.file {
-            let _ = writeln!(f, "{msg}");
-        }
+        self.write_line(format_args!("{msg}"));
     }
 
     pub fn step(&mut self, step: usize, loss: f32, extra: &str) {
         self.losses.push((step, loss));
-        if let Some(f) = &mut self.file {
-            let _ = writeln!(f, "step {step} loss {loss:.5} {extra}");
-        }
+        self.write_line(format_args!("step {step} loss {loss:.5} {extra}"));
     }
 
     /// Mean loss over the last `n` recorded steps.
@@ -53,6 +70,16 @@ impl RunLog {
             return f32::NAN;
         }
         tail.iter().map(|(_, l)| l).sum::<f32>() / tail.len() as f32
+    }
+}
+
+impl Drop for RunLog {
+    /// Flush the buffered tail — a short run that exits right after its
+    /// last `note` must not lose the end of `log.txt`.
+    fn drop(&mut self) {
+        if let Some(f) = &mut self.file {
+            let _ = f.flush();
+        }
     }
 }
 
@@ -104,15 +131,19 @@ pub fn pct(x: f32) -> String {
 }
 
 /// Nearest-rank percentile of an unsorted sample (NaN for empty input).
-/// Used by the serve stats for TTFT/latency tails.
+///
+/// Selection instead of a full sort (`select_nth_unstable_by`, expected
+/// O(n) vs the old clone-and-sort's O(n log n)), ordered by `total_cmp`
+/// so NaN samples order deterministically (after +inf) instead of
+/// panicking in `partial_cmp().unwrap()`.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let idx = ((p / 100.0 * v.len() as f64).ceil() as usize).clamp(1, v.len()) - 1;
-    v[idx]
+    let (_, x, _) = v.select_nth_unstable_by(idx, f64::total_cmp);
+    *x
 }
 
 #[cfg(test)]
@@ -153,5 +184,33 @@ mod tests {
         assert_eq!(percentile(&xs, 100.0), 100.0);
         assert_eq!(percentile(&[3.0], 99.0), 3.0);
         assert!(percentile(&[], 50.0).is_nan());
+    }
+
+    #[test]
+    fn percentile_survives_nan_input() {
+        // regression: partial_cmp().unwrap() panicked on any NaN sample.
+        // total_cmp orders NaN after +inf, so finite percentiles of a
+        // mostly-finite sample stay finite and correct.
+        let xs = [5.0, f64::NAN, 1.0, 3.0];
+        let p50 = percentile(&xs, 50.0);
+        assert_eq!(p50, 3.0);
+        assert!(percentile(&xs, 100.0).is_nan(), "NaN sorts last under total_cmp");
+        assert!(percentile(&[f64::NAN], 50.0).is_nan());
+    }
+
+    #[test]
+    fn runlog_warns_once_and_flushes_on_drop() {
+        // a RunLog pointed at a real directory must land its buffered tail
+        // on disk by Drop (short runs exit right after the last note)
+        let dir = std::env::temp_dir().join(format!("silq_runlog_{}", std::process::id()));
+        {
+            let mut l = RunLog::new(&dir);
+            l.note("tail line");
+            l.step(1, 0.5, "extra");
+        } // drop flushes
+        let text = std::fs::read_to_string(dir.join("log.txt")).unwrap();
+        assert!(text.contains("tail line"));
+        assert!(text.contains("step 1 loss 0.50000 extra"));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

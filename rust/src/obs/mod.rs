@@ -1,0 +1,545 @@
+//! `obs` — end-to-end telemetry: a global, runtime-toggleable registry of
+//! preregistered atomic counters and fixed-bucket latency histograms, plus
+//! scoped span timers feeding a preallocated trace-event ring.
+//!
+//! Design constraints (they explain every choice below):
+//!
+//! * **Allocation-free recording.** The decode hot loop is pinned to zero
+//!   heap allocations (`tests/kernels_zero_alloc.rs`) *with telemetry
+//!   enabled*, so nothing on the record path may allocate: counters are a
+//!   fixed static array of `AtomicU64` indexed by the [`Counter`] enum,
+//!   histogram buckets are fixed at compile time, span names are
+//!   `&'static str`, and trace events land in a ring whose capacity is
+//!   reserved once at [`enable_tracing`] — a full ring drops new events
+//!   (counted in [`Counter::TraceDropped`]) rather than growing.
+//! * **Near-zero disabled cost.** Every record call starts with one
+//!   relaxed atomic load and a branch; when disabled that is the whole
+//!   cost, so instrumentation can stay unconditionally compiled into the
+//!   kernels.
+//! * **No dependencies.** `obs` sits below every instrumented layer
+//!   (kernels, hostmodel, serve, train) and uses only `std`, so nothing
+//!   can cycle back into it.
+//!
+//! Exporters live in [`export`]: Chrome `trace_event` JSON for
+//! Perfetto / `chrome://tracing` (`silq serve --trace out.trace.json`).
+//! The per-step serve time series is owned by `serve::ServeStats` (it is
+//! per-run state, not global) and exported by `--metrics-out`.
+
+pub mod export;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// counter registry
+// ---------------------------------------------------------------------------
+
+/// Every counter the system records, preregistered so recording is one
+/// array index — no map lookups, no string hashing, no allocation.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+#[repr(usize)]
+pub enum Counter {
+    /// span scopes entered ([`span`]); balanced against [`Counter::SpanExit`]
+    SpanEnter,
+    /// span scopes exited (guard drops)
+    SpanExit,
+    /// trace events dropped because the ring was full
+    TraceDropped,
+    /// requests accepted into the admission queue
+    ServeEnqueued,
+    /// requests admitted into a scheduler lane
+    ServeAdmitted,
+    /// requests completed (includes zero-budget completions)
+    ServeCompleted,
+    /// requests rejected at admission
+    ServeRejected,
+    /// lane evictions (one per completion by construction)
+    ServeEvicted,
+    /// scheduler decode steps
+    ServeSteps,
+    /// tokens generated across all serve lanes
+    ServeNewTokens,
+    /// prompt tokens folded into a KV cache without logits (prefill)
+    PrefillTokens,
+    /// single-lane decode forwards (`forward_token_into` with logits)
+    DecodeTokens,
+    /// cross-lane batched decode forwards (`forward_tokens_batch` calls)
+    BatchSteps,
+    /// fused quantized GEMV calls (`QLinear::gemv`)
+    GemvCalls,
+    /// blocked quantized GEMM calls (`QLinear::gemm_into`)
+    GemmCalls,
+    /// zero-copy int8 attention calls (`attend_i8`)
+    AttendI8Calls,
+    /// `i8×i8` multiply-accumulates issued by GEMV/GEMM (dense count;
+    /// the zero-activation skip is an optimization, not fewer MACs owed)
+    I8Macs,
+    /// K/V cache bytes read by `attend_i8` (the memory-bound decode metric)
+    KvBytesRead,
+    /// QAT/PTQ optimizer steps executed
+    QatSteps,
+}
+
+/// Number of registered counters (the registry array size).
+pub const N_COUNTERS: usize = 19;
+
+impl Counter {
+    /// Every counter, in declaration order — drives [`snapshot`].
+    pub const ALL: [Counter; N_COUNTERS] = [
+        Counter::SpanEnter,
+        Counter::SpanExit,
+        Counter::TraceDropped,
+        Counter::ServeEnqueued,
+        Counter::ServeAdmitted,
+        Counter::ServeCompleted,
+        Counter::ServeRejected,
+        Counter::ServeEvicted,
+        Counter::ServeSteps,
+        Counter::ServeNewTokens,
+        Counter::PrefillTokens,
+        Counter::DecodeTokens,
+        Counter::BatchSteps,
+        Counter::GemvCalls,
+        Counter::GemmCalls,
+        Counter::AttendI8Calls,
+        Counter::I8Macs,
+        Counter::KvBytesRead,
+        Counter::QatSteps,
+    ];
+
+    /// Stable snake_case name (report keys, JSON fields).
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::SpanEnter => "span_enter",
+            Counter::SpanExit => "span_exit",
+            Counter::TraceDropped => "trace_dropped",
+            Counter::ServeEnqueued => "serve_enqueued",
+            Counter::ServeAdmitted => "serve_admitted",
+            Counter::ServeCompleted => "serve_completed",
+            Counter::ServeRejected => "serve_rejected",
+            Counter::ServeEvicted => "serve_evicted",
+            Counter::ServeSteps => "serve_steps",
+            Counter::ServeNewTokens => "serve_new_tokens",
+            Counter::PrefillTokens => "prefill_tokens",
+            Counter::DecodeTokens => "decode_tokens",
+            Counter::BatchSteps => "batch_steps",
+            Counter::GemvCalls => "gemv_calls",
+            Counter::GemmCalls => "gemm_calls",
+            Counter::AttendI8Calls => "attend_i8_calls",
+            Counter::I8Macs => "i8_macs",
+            Counter::KvBytesRead => "kv_bytes_read",
+            Counter::QatSteps => "qat_steps",
+        }
+    }
+}
+
+const ZERO: AtomicU64 = AtomicU64::new(0);
+static COUNTERS: [AtomicU64; N_COUNTERS] = [ZERO; N_COUNTERS];
+static ENABLED: AtomicBool = AtomicBool::new(false);
+/// Trace-ring capacity; 0 means tracing is off (events are not recorded).
+static TRACE_CAP: AtomicUsize = AtomicUsize::new(0);
+static EVENTS: Mutex<Vec<TraceEvent>> = Mutex::new(Vec::new());
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Timestamps are microseconds since this process-wide epoch (first
+/// telemetry activation).
+pub fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Turn counter/span recording on or off at runtime. Disabled recording
+/// costs one relaxed atomic load + branch per call site.
+pub fn set_enabled(on: bool) {
+    if on {
+        epoch(); // pin the timebase before the first record
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether telemetry recording is on.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Enable span tracing with a ring of `capacity` events (also enables
+/// telemetry). The ring is reserved here, once — recording never grows
+/// it, so the record path stays allocation-free; when full, new events
+/// are dropped and counted in [`Counter::TraceDropped`].
+pub fn enable_tracing(capacity: usize) {
+    let capacity = capacity.max(16);
+    {
+        let mut ev = EVENTS.lock().unwrap();
+        let have = ev.capacity();
+        if have < capacity {
+            ev.reserve_exact(capacity - have);
+        }
+    }
+    TRACE_CAP.store(capacity, Ordering::Relaxed);
+    set_enabled(true);
+}
+
+/// Whether span tracing (the event ring) is active.
+#[inline]
+pub fn tracing_enabled() -> bool {
+    TRACE_CAP.load(Ordering::Relaxed) > 0
+}
+
+/// Add `n` to a counter (no-op while telemetry is disabled).
+#[inline]
+pub fn add(c: Counter, n: u64) {
+    if enabled() {
+        COUNTERS[c as usize].fetch_add(n, Ordering::Relaxed);
+    }
+}
+
+/// Current value of a counter.
+pub fn get(c: Counter) -> u64 {
+    COUNTERS[c as usize].load(Ordering::Relaxed)
+}
+
+/// Every counter with its stable name, in declaration order.
+pub fn snapshot() -> Vec<(&'static str, u64)> {
+    Counter::ALL.iter().map(|&c| (c.name(), get(c))).collect()
+}
+
+/// Reset all counters and clear the event ring (tests and fresh runs;
+/// the ring keeps its reserved capacity).
+pub fn reset() {
+    for c in &COUNTERS {
+        c.store(0, Ordering::Relaxed);
+    }
+    EVENTS.lock().unwrap().clear();
+}
+
+// ---------------------------------------------------------------------------
+// spans + trace events
+// ---------------------------------------------------------------------------
+
+/// One completed span in Chrome `trace_event` terms: a `ph: "X"` complete
+/// event. Fixed-size on purpose — names are `&'static str` so recording
+/// one never allocates.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceEvent {
+    /// event name (the trace row label)
+    pub name: &'static str,
+    /// category (`serve`, `hostmodel`, `train`, ...)
+    pub cat: &'static str,
+    /// track id — serve lanes map to distinct tids so ragged multi-lane
+    /// steps render as separate tracks
+    pub tid: u32,
+    /// microseconds since [`epoch`]
+    pub ts_us: u64,
+    /// duration in microseconds
+    pub dur_us: u64,
+    /// one free integer argument (request id, token count, ...)
+    pub arg0: u64,
+}
+
+fn push_event(ev: TraceEvent) {
+    let cap = TRACE_CAP.load(Ordering::Relaxed);
+    if cap == 0 {
+        return;
+    }
+    let mut events = EVENTS.lock().unwrap();
+    if events.len() < cap {
+        events.push(ev);
+    } else {
+        drop(events);
+        add(Counter::TraceDropped, 1);
+    }
+}
+
+fn us_since_epoch(t: Instant) -> u64 {
+    t.checked_duration_since(epoch()).unwrap_or_default().as_micros() as u64
+}
+
+/// Record a complete event retroactively from instants the caller already
+/// holds (e.g. a request's queued→admitted interval at completion time).
+pub fn event_at(name: &'static str, cat: &'static str, tid: u32, start: Instant, dur_us: u64, arg0: u64) {
+    if !enabled() {
+        return;
+    }
+    push_event(TraceEvent { name, cat, tid, ts_us: us_since_epoch(start), dur_us, arg0 });
+}
+
+/// Scoped span timer: construction stamps the start (and counts
+/// [`Counter::SpanEnter`]); dropping records the duration as a trace
+/// event and counts [`Counter::SpanExit`]. The enabled decision is
+/// latched at entry so a mid-span toggle can never unbalance the
+/// enter/exit counters.
+pub struct SpanGuard {
+    name: &'static str,
+    cat: &'static str,
+    tid: u32,
+    arg0: u64,
+    start: Instant,
+    armed: bool,
+}
+
+/// Open a span (see [`SpanGuard`]). When telemetry is disabled this is a
+/// branch and a cheap `Instant` read; nothing is recorded.
+#[inline]
+pub fn span(name: &'static str, cat: &'static str, tid: u32, arg0: u64) -> SpanGuard {
+    let armed = enabled();
+    if armed {
+        add(Counter::SpanEnter, 1);
+    }
+    SpanGuard { name, cat, tid, arg0, start: Instant::now(), armed }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        COUNTERS[Counter::SpanExit as usize].fetch_add(1, Ordering::Relaxed);
+        let dur_us = self.start.elapsed().as_micros() as u64;
+        push_event(TraceEvent {
+            name: self.name,
+            cat: self.cat,
+            tid: self.tid,
+            ts_us: us_since_epoch(self.start),
+            dur_us,
+            arg0: self.arg0,
+        });
+    }
+}
+
+/// Copy the recorded events out of the ring (export-time only; the hot
+/// path never calls this).
+pub fn events() -> Vec<TraceEvent> {
+    EVENTS.lock().unwrap().clone()
+}
+
+// ---------------------------------------------------------------------------
+// fixed-bucket latency histogram
+// ---------------------------------------------------------------------------
+
+/// Histogram bucket count: power-of-two µs buckets, bucket `b` holding
+/// values in `[2^(b-1), 2^b)` µs (bucket 0 holds 0), covering sub-µs up
+/// to ~2^39 µs (≈ 6 days) — every latency this system can produce.
+pub const HIST_BUCKETS: usize = 40;
+
+/// Fixed-bucket latency histogram with atomic cells: recording is a
+/// couple of relaxed atomic adds — no allocation, no sorting, usable
+/// through `&self` from any thread. Quantiles are read from the bucket
+/// boundaries (upper edge, clamped to the observed min/max), so a
+/// percentile costs one bucket walk instead of the clone-and-sort of a
+/// raw sample vector; the bound is exact-to-the-bucket (≤ 2× relative,
+/// and never outside `[min, max]` actually recorded). Means are exact
+/// (sum/count in integer µs).
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    min_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub const fn new() -> Histogram {
+        Histogram {
+            buckets: [ZERO; HIST_BUCKETS],
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            min_us: AtomicU64::new(u64::MAX),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    fn bucket_of(us: u64) -> usize {
+        (64 - us.leading_zeros() as usize).min(HIST_BUCKETS - 1)
+    }
+
+    /// Record one latency in milliseconds. Non-finite and negative inputs
+    /// record as 0 (the caller-side contract already filters NaN TTFTs;
+    /// this is the don't-poison-the-aggregate backstop).
+    pub fn record_ms(&self, ms: f64) {
+        let us = if ms.is_finite() && ms > 0.0 { (ms * 1e3) as u64 } else { 0 };
+        self.buckets[Self::bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.min_us.fetch_min(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count() == 0
+    }
+
+    /// Exact mean in ms (0 for an empty histogram — the serve gauges'
+    /// degenerate-run contract).
+    pub fn mean_ms(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / n as f64 / 1e3
+        }
+    }
+
+    pub fn min_ms(&self) -> f64 {
+        if self.is_empty() {
+            0.0
+        } else {
+            self.min_us.load(Ordering::Relaxed) as f64 / 1e3
+        }
+    }
+
+    pub fn max_ms(&self) -> f64 {
+        if self.is_empty() {
+            0.0
+        } else {
+            self.max_us.load(Ordering::Relaxed) as f64 / 1e3
+        }
+    }
+
+    /// Nearest-rank percentile over the buckets: the upper edge of the
+    /// bucket holding the target rank, clamped to the observed `[min,
+    /// max]`. 0 for an empty histogram.
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let target = ((p / 100.0 * n as f64).ceil() as u64).clamp(1, n);
+        let mut cum = 0u64;
+        for b in 0..HIST_BUCKETS {
+            cum += self.buckets[b].load(Ordering::Relaxed);
+            if cum >= target {
+                // bucket b holds [2^(b-1), 2^b) µs; report the upper edge
+                let upper = if b == 0 { 0 } else { 1u64 << b };
+                let lo = self.min_us.load(Ordering::Relaxed);
+                let hi = self.max_us.load(Ordering::Relaxed);
+                return upper.clamp(lo, hi) as f64 / 1e3;
+            }
+        }
+        self.max_ms()
+    }
+}
+
+/// Serialize unit tests that toggle the global enable flag or trace ring
+/// (lib tests run on parallel threads; without this, one test's flood can
+/// break another's capacity assertion). Poisoning is ignored — a failed
+/// sibling test must not cascade.
+#[cfg(test)]
+pub(crate) fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The registry is process-global and lib tests run in parallel, so
+    // these assertions are monotone (deltas, balance-or-better) rather
+    // than exact — and every test that toggles the enable flag or the
+    // trace ring holds `test_guard`; the serve soak and obs integration
+    // binaries own the exact-accounting assertions in isolation.
+
+    #[test]
+    fn counters_record_only_when_enabled() {
+        let _g = test_guard();
+        set_enabled(false);
+        let before = get(Counter::QatSteps);
+        add(Counter::QatSteps, 5);
+        assert_eq!(get(Counter::QatSteps), before, "disabled add must be a no-op");
+        set_enabled(true);
+        add(Counter::QatSteps, 5);
+        assert!(get(Counter::QatSteps) >= before + 5);
+        set_enabled(false);
+    }
+
+    #[test]
+    fn span_guard_counts_enter_and_exit() {
+        let _g = test_guard();
+        set_enabled(true);
+        let e0 = get(Counter::SpanEnter);
+        let x0 = get(Counter::SpanExit);
+        {
+            let _g = span("test", "obs", 0, 7);
+            assert!(get(Counter::SpanEnter) >= e0 + 1);
+        }
+        assert!(get(Counter::SpanExit) >= x0 + 1);
+        set_enabled(false);
+    }
+
+    #[test]
+    fn tracing_ring_caps_and_counts_drops() {
+        let _g = test_guard();
+        enable_tracing(16);
+        let base = events().len();
+        for i in 0..64u64 {
+            event_at("flood", "obs", 0, Instant::now(), 1, i);
+        }
+        let ev = events();
+        assert!(ev.len() <= 16, "ring exceeded its capacity: {}", ev.len());
+        assert!(ev.len() >= base.min(16));
+        assert!(get(Counter::TraceDropped) > 0, "a full ring must count drops");
+        set_enabled(false);
+    }
+
+    #[test]
+    fn histogram_mean_and_percentiles() {
+        let h = Histogram::new();
+        assert_eq!(h.mean_ms(), 0.0);
+        assert_eq!(h.percentile_ms(95.0), 0.0);
+        for ms in [1.0f64, 2.0, 3.0, 4.0] {
+            h.record_ms(ms);
+        }
+        assert_eq!(h.count(), 4);
+        assert!((h.mean_ms() - 2.5).abs() < 1e-6);
+        let p95 = h.percentile_ms(95.0);
+        assert!(p95.is_finite() && p95 >= h.min_ms() && p95 <= h.max_ms());
+        // NaN / negative inputs are clamped into bucket 0, never poisoning
+        h.record_ms(f64::NAN);
+        h.record_ms(-3.0);
+        assert_eq!(h.count(), 6);
+        assert!(h.mean_ms().is_finite());
+        assert!(h.percentile_ms(50.0).is_finite());
+    }
+
+    #[test]
+    fn histogram_percentile_stays_within_observed_range() {
+        let h = Histogram::new();
+        for i in 1..=100u64 {
+            h.record_ms(i as f64);
+        }
+        for p in [10.0, 50.0, 90.0, 99.0, 100.0] {
+            let v = h.percentile_ms(p);
+            assert!(
+                (h.min_ms()..=h.max_ms()).contains(&v),
+                "p{p} = {v} outside [{}, {}]",
+                h.min_ms(),
+                h.max_ms()
+            );
+        }
+        // bucket resolution: p100 lands in the top bucket, clamped to max
+        assert!(h.percentile_ms(100.0) <= 100.0 + 1e-9);
+    }
+
+    #[test]
+    fn counter_names_are_unique_and_total() {
+        let names: Vec<&str> = Counter::ALL.iter().map(|c| c.name()).collect();
+        assert_eq!(names.len(), N_COUNTERS);
+        let mut dedup = names.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), N_COUNTERS, "duplicate counter names");
+    }
+}

@@ -136,6 +136,7 @@ impl AdmissionQueue {
             bail!("admission queue is closed");
         }
         g.q.push_back(req);
+        crate::obs::add(crate::obs::Counter::ServeEnqueued, 1);
         self.avail.notify_one();
         Ok(())
     }

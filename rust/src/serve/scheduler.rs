@@ -10,10 +10,12 @@
 use anyhow::{ensure, Result};
 use std::time::Duration;
 
+use crate::obs::{self, Counter};
 use crate::serve::backend::DecodeBackend;
 use crate::serve::session::Session;
 use crate::serve::stats::ServeStats;
 use crate::serve::{AdmissionQueue, GenResult};
+use crate::util::Timer;
 
 pub struct Scheduler<B: DecodeBackend> {
     backend: B,
@@ -43,6 +45,39 @@ impl<B: DecodeBackend> Scheduler<B> {
         self.lanes.iter().filter(|l| l.is_some()).count()
     }
 
+    /// Complete session `s` out of `lane`: evict, convert, record — and
+    /// emit the request's retroactive lifecycle trace events ("queued" =
+    /// submit→admit on the lane track, "request" = admit→now, "ttft" =
+    /// submit→first token) now that the whole timeline is known.
+    fn complete(
+        &mut self,
+        lane: usize,
+        s: Session,
+        stats: &mut ServeStats,
+        results: &mut Vec<GenResult>,
+    ) {
+        self.backend.evict(lane);
+        obs::add(Counter::ServeCompleted, 1);
+        obs::add(Counter::ServeEvicted, 1);
+        if obs::enabled() {
+            let tid = lane as u32 + 1;
+            let queued_us =
+                s.admitted.checked_duration_since(s.submitted).unwrap_or_default().as_micros()
+                    as u64;
+            obs::event_at("queued", "serve", tid, s.submitted, queued_us, s.id);
+            let active_us = s.admitted.elapsed().as_micros() as u64;
+            obs::event_at("request", "serve", tid, s.admitted, active_us, s.id);
+            if let Some(ft) = s.first_token {
+                let ttft_us =
+                    ft.checked_duration_since(s.submitted).unwrap_or_default().as_micros() as u64;
+                obs::event_at("ttft", "serve", tid, s.submitted, ttft_us, s.id);
+            }
+        }
+        let r = s.into_result(self.step_no);
+        stats.on_complete(&r);
+        results.push(r);
+    }
+
     /// Drain the queue to completion: runs until the queue is closed and
     /// every admitted session has finished. Returns results in completion
     /// order.
@@ -50,15 +85,13 @@ impl<B: DecodeBackend> Scheduler<B> {
         let mut results = vec![];
         let seq_len = self.backend.seq_len();
         loop {
+            let admit_timer = Timer::start();
             // 1. evict finished sessions, freeing their lane + cache slot
             for lane in 0..self.lanes.len() {
                 let done = matches!(&self.lanes[lane], Some(s) if s.done(seq_len));
                 if done {
                     let s = self.lanes[lane].take().unwrap();
-                    self.backend.evict(lane);
-                    let r = s.into_result(self.step_no);
-                    stats.on_complete(&r);
-                    results.push(r);
+                    self.complete(lane, s, stats, &mut results);
                 }
             }
 
@@ -71,13 +104,11 @@ impl<B: DecodeBackend> Scheduler<B> {
                 let Some(req) = queue.try_pop() else { break };
                 match self.backend.admit(lane, &req.prompt) {
                     Ok(()) => {
+                        obs::add(Counter::ServeAdmitted, 1);
                         let sess = Session::admit(req, self.step_no);
                         if sess.done(seq_len) {
                             // zero-budget request: complete without a step
-                            self.backend.evict(lane);
-                            let r = sess.into_result(self.step_no);
-                            stats.on_complete(&r);
-                            results.push(r);
+                            self.complete(lane, sess, stats, &mut results);
                         } else {
                             self.lanes[lane] = Some(sess);
                         }
@@ -86,6 +117,7 @@ impl<B: DecodeBackend> Scheduler<B> {
                         // reject just this request — one bad prompt must not
                         // take down the run (or lose the other sessions)
                         self.backend.evict(lane); // release any partial admit
+                        obs::add(Counter::ServeRejected, 1);
                         let mut r = Session::admit(req, self.step_no).into_result(self.step_no);
                         r.error = Some(e.to_string());
                         stats.on_reject();
@@ -93,27 +125,40 @@ impl<B: DecodeBackend> Scheduler<B> {
                     }
                 }
             }
+            stats.add_admit_secs(admit_timer.secs());
 
             if self.active() == 0 {
                 if queue.is_drained() {
                     break;
                 }
                 // idle: block until a request arrives or the queue closes
+                let idle_timer = Timer::start();
                 queue.wait_nonempty(Duration::from_millis(50));
+                stats.add_idle_secs(idle_timer.secs());
                 continue;
             }
 
             // 3. one decode step across all live lanes
+            let active = self.active();
             let views: Vec<Option<&[i32]>> =
                 self.lanes.iter().map(|l| l.as_ref().map(|s| s.tokens.as_slice())).collect();
-            let next = self.backend.step(&views)?;
+            let step_timer = Timer::start();
+            let next = {
+                let _span = obs::span("step", "serve", 0, active as u64);
+                self.backend.step(&views)?
+            };
+            let step_ms = step_timer.millis();
             self.step_no += 1;
+            let mut new_tokens = 0usize;
             for (lane, tok) in next.into_iter().enumerate() {
                 if let (Some(s), Some(t)) = (self.lanes[lane].as_mut(), tok) {
                     s.push(t);
+                    new_tokens += 1;
                 }
             }
-            stats.on_step(queue.depth(), self.active(), self.backend.kv_bytes());
+            obs::add(Counter::ServeSteps, 1);
+            obs::add(Counter::ServeNewTokens, new_tokens as u64);
+            stats.on_step(queue.depth(), active, self.backend.kv_bytes(), step_ms, new_tokens);
         }
         stats.finish();
         Ok(results)

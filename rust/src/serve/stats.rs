@@ -1,9 +1,41 @@
-//! Serving telemetry: per-request latency records plus per-step scheduler
-//! gauges, aggregated into the throughput report `silq serve` prints.
+//! Serving telemetry: per-request latency histograms plus a per-step
+//! scheduler time series, aggregated into the throughput report, phase
+//! breakdown, and `--metrics-out` JSON `silq serve` emits.
+//!
+//! Latency aggregates sit on [`obs::Histogram`] — fixed power-of-two
+//! buckets, so recording is O(1) without retaining samples and a
+//! percentile is one bucket walk instead of the clone-and-sort per query
+//! the old `Vec<f64>` records paid. Quantiles are bucket-resolution
+//! (upper edge, clamped to the observed min/max); means stay exact.
 
-use crate::metrics::percentile;
+use crate::metrics::Table;
+use crate::obs::Histogram;
 use crate::serve::GenResult;
 use crate::util::Timer;
+
+/// One scheduler step of the `--metrics-out` time series.
+#[derive(Clone, Copy, Debug)]
+pub struct StepRow {
+    /// scheduler step number (0-based)
+    pub step: u64,
+    /// admission-queue depth after this step's admissions
+    pub queue_depth: usize,
+    /// lanes holding a live session during the step
+    pub active_lanes: usize,
+    /// deployment-format KV bytes resident after the step
+    pub kv_bytes: usize,
+    /// wall milliseconds of the backend step call
+    pub step_ms: f64,
+    /// tokens emitted by this step across all lanes
+    pub new_tokens: usize,
+}
+
+impl StepRow {
+    /// Instantaneous throughput of this step.
+    pub fn tok_per_s(&self) -> f64 {
+        self.new_tokens as f64 / (self.step_ms / 1e3).max(1e-9)
+    }
+}
 
 /// Aggregate statistics over one serve run.
 pub struct ServeStats {
@@ -20,10 +52,17 @@ pub struct ServeStats {
     lanes: usize,
     /// peak deployment-format KV bytes resident in the pool
     pub kv_bytes_peak: usize,
-    /// per-request records
-    pub ttft_ms: Vec<f64>,
-    pub queued_ms: Vec<f64>,
-    pub total_ms: Vec<f64>,
+    /// per-request latency histograms (TTFT records only finite samples —
+    /// zero-budget completions never produce a first token)
+    pub ttft: Histogram,
+    pub queued: Histogram,
+    pub total: Histogram,
+    /// per-step time series for `--metrics-out`
+    pub series: Vec<StepRow>,
+    /// phase wall-time sums for the breakdown report (seconds)
+    admit_secs: f64,
+    step_secs: f64,
+    idle_secs: f64,
     timer: Timer,
 }
 
@@ -39,19 +78,40 @@ impl ServeStats {
             active_lane_sum: 0.0,
             lanes: lanes.max(1),
             kv_bytes_peak: 0,
-            ttft_ms: vec![],
-            queued_ms: vec![],
-            total_ms: vec![],
+            ttft: Histogram::new(),
+            queued: Histogram::new(),
+            total: Histogram::new(),
+            series: Vec::new(),
+            admit_secs: 0.0,
+            step_secs: 0.0,
+            idle_secs: 0.0,
             timer: Timer::start(),
         }
     }
 
-    /// Record one scheduler step's gauges.
-    pub fn on_step(&mut self, queue_depth: usize, active_lanes: usize, kv_bytes: usize) {
+    /// Record one scheduler step: gauges plus the step's wall time and
+    /// token yield for the time series.
+    pub fn on_step(
+        &mut self,
+        queue_depth: usize,
+        active_lanes: usize,
+        kv_bytes: usize,
+        step_ms: f64,
+        new_tokens: usize,
+    ) {
+        self.series.push(StepRow {
+            step: self.steps,
+            queue_depth,
+            active_lanes,
+            kv_bytes,
+            step_ms,
+            new_tokens,
+        });
         self.steps += 1;
         self.queue_depth_sum += queue_depth as f64;
         self.active_lane_sum += active_lanes as f64;
         self.kv_bytes_peak = self.kv_bytes_peak.max(kv_bytes);
+        self.step_secs += step_ms / 1e3;
     }
 
     /// Record one finished request.
@@ -59,15 +119,25 @@ impl ServeStats {
         self.completed += 1;
         self.total_new_tokens += r.generated().len();
         if r.ttft_ms.is_finite() {
-            self.ttft_ms.push(r.ttft_ms);
+            self.ttft.record_ms(r.ttft_ms);
         }
-        self.queued_ms.push(r.queued_ms);
-        self.total_ms.push(r.total_ms);
+        self.queued.record_ms(r.queued_ms);
+        self.total.record_ms(r.total_ms);
     }
 
     /// Record one request rejected at admission.
     pub fn on_reject(&mut self) {
         self.rejected += 1;
+    }
+
+    /// Attribute wall time spent admitting/evicting (includes prefill).
+    pub fn add_admit_secs(&mut self, secs: f64) {
+        self.admit_secs += secs;
+    }
+
+    /// Attribute wall time spent parked on an empty queue.
+    pub fn add_idle_secs(&mut self, secs: f64) {
+        self.idle_secs += secs;
     }
 
     pub fn finish(&mut self) {
@@ -101,33 +171,21 @@ impl ServeStats {
     /// Mean TTFT over requests that produced a first token. Degenerate
     /// runs (nothing completed, or only zero-budget/rejected requests)
     /// report 0, not NaN — a dashboard averaging these must not poison
-    /// every downstream aggregate.
+    /// every downstream aggregate. Exact (histogram means do not bucket).
     pub fn ttft_mean_ms(&self) -> f64 {
-        if self.ttft_ms.is_empty() {
-            0.0
-        } else {
-            self.ttft_ms.iter().sum::<f64>() / self.ttft_ms.len() as f64
-        }
+        self.ttft.mean_ms()
     }
 
-    /// p95 TTFT. `metrics::percentile` is NaN on an empty sample by
-    /// contract; this guards the degenerate serve run to 0 like the mean
-    /// (`empty_run_report_has_no_nans` pins all three zero-sample gauges).
+    /// p95 TTFT at histogram-bucket resolution (0 on the degenerate
+    /// empty-sample run; `empty_run_report_has_no_nans` pins all the
+    /// zero-sample gauges).
     pub fn ttft_p95_ms(&self) -> f64 {
-        if self.ttft_ms.is_empty() {
-            0.0
-        } else {
-            percentile(&self.ttft_ms, 95.0)
-        }
+        self.ttft.percentile_ms(95.0)
     }
 
     /// Mean queue wait across completed requests (0 when none completed).
     pub fn queued_mean_ms(&self) -> f64 {
-        if self.queued_ms.is_empty() {
-            0.0
-        } else {
-            self.queued_ms.iter().sum::<f64>() / self.queued_ms.len() as f64
-        }
+        self.queued.mean_ms()
     }
 
     /// The report `silq serve` prints.
@@ -154,22 +212,86 @@ impl ServeStats {
             self.kv_bytes_peak as f64 / 1024.0,
         )
     }
+
+    /// Phase attribution of the run's wall time, as a fixed-width table:
+    /// admit/evict (incl. prefill), backend decode steps, idle queue
+    /// waits, and the unattributed remainder (result plumbing, gauges).
+    pub fn breakdown(&self) -> String {
+        let wall = if self.wall_secs > 0.0 { self.wall_secs } else { self.timer.secs() };
+        let other = (wall - self.admit_secs - self.step_secs - self.idle_secs).max(0.0);
+        let mut t = Table::new(&["phase", "secs", "% wall"]);
+        let pct = |s: f64| format!("{:.1}", 100.0 * s / wall.max(1e-9));
+        t.row(&[
+            "admit+prefill".into(),
+            format!("{:.3}", self.admit_secs),
+            pct(self.admit_secs),
+        ]);
+        t.row(&["decode steps".into(), format!("{:.3}", self.step_secs), pct(self.step_secs)]);
+        t.row(&["idle wait".into(), format!("{:.3}", self.idle_secs), pct(self.idle_secs)]);
+        t.row(&["other".into(), format!("{other:.3}"), pct(other)]);
+        t.row(&["total".into(), format!("{wall:.3}"), "100.0".into()]);
+        t.render()
+    }
+
+    /// The `--metrics-out` document: the per-step time series plus the
+    /// aggregate totals, hand-rolled JSON (this repo takes no serializer
+    /// dependency). Schema is documented in README §Observability.
+    pub fn metrics_json(&self) -> String {
+        let mut out = String::with_capacity(64 + self.series.len() * 96);
+        out.push_str("{\"schema\":\"silq.metrics.v1\",\"steps\":[");
+        for (i, r) in self.series.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"step\":{},\"queue_depth\":{},\"active_lanes\":{},\"kv_bytes\":{},\
+                 \"step_ms\":{:.4},\"new_tokens\":{},\"tok_per_s\":{:.2}}}",
+                r.step, r.queue_depth, r.active_lanes, r.kv_bytes, r.step_ms, r.new_tokens,
+                r.tok_per_s()
+            ));
+        }
+        out.push_str(&format!(
+            "],\"totals\":{{\"steps\":{},\"completed\":{},\"rejected\":{},\"new_tokens\":{},\
+             \"wall_secs\":{:.4},\"tok_per_s\":{:.2},\"ttft_ms_mean\":{:.3},\
+             \"ttft_ms_p95\":{:.3},\"queued_ms_mean\":{:.3},\"kv_bytes_peak\":{},\
+             \"mean_queue_depth\":{:.3},\"batch_occupancy\":{:.4}}}}}",
+            self.steps,
+            self.completed,
+            self.rejected,
+            self.total_new_tokens,
+            self.wall_secs,
+            self.tokens_per_sec(),
+            self.ttft_mean_ms(),
+            self.ttft_p95_ms(),
+            self.queued_mean_ms(),
+            self.kv_bytes_peak,
+            self.mean_queue_depth(),
+            self.batch_occupancy(),
+        ));
+        out
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::serve::GenRequest;
     use crate::serve::session::Session;
+    use crate::serve::GenRequest;
 
     #[test]
     fn gauges_average_per_step() {
         let mut st = ServeStats::new(4);
-        st.on_step(2, 4, 100);
-        st.on_step(0, 2, 50);
+        st.on_step(2, 4, 100, 1.5, 4);
+        st.on_step(0, 2, 50, 0.5, 2);
         assert!((st.mean_queue_depth() - 1.0).abs() < 1e-9);
         assert!((st.batch_occupancy() - 0.75).abs() < 1e-9);
         assert_eq!(st.kv_bytes_peak, 100);
+        // the series mirrors the gauges row for row
+        assert_eq!(st.series.len(), 2);
+        assert_eq!(st.series[0].step, 0);
+        assert_eq!(st.series[1].queue_depth, 0);
+        assert_eq!(st.series.iter().map(|r| r.new_tokens).sum::<usize>(), 6);
+        assert!(st.series[0].tok_per_s() > 0.0);
     }
 
     #[test]
@@ -184,14 +306,16 @@ mod tests {
         assert_eq!(st.total_new_tokens, 2);
         assert!(st.tokens_per_sec() > 0.0);
         assert!(st.report().contains("served 1 requests"));
+        assert_eq!(st.ttft.count(), 1);
+        assert_eq!(st.total.count(), 1);
     }
 
     #[test]
     fn empty_run_report_has_no_nans() {
         // degenerate run: zero completed requests, zero scheduler steps.
         // Every gauge must report 0 — the step-normalized means guard
-        // steps == 0, and the TTFT mean/p95 guard the empty sample that
-        // metrics::percentile maps to NaN by contract.
+        // steps == 0, and the TTFT histogram maps the empty sample to 0
+        // by contract (metrics::percentile would be NaN on empty).
         let mut st = ServeStats::new(1);
         st.finish();
         assert_eq!(st.mean_queue_depth(), 0.0);
@@ -202,6 +326,11 @@ mod tests {
         assert!(st.tokens_per_sec().is_finite());
         let report = st.report();
         assert!(!report.contains("NaN"), "degenerate report leaked a NaN:\n{report}");
+        assert!(!st.breakdown().contains("NaN"));
+        // the metrics document stays well-formed on the empty run
+        let doc = st.metrics_json();
+        assert!(doc.contains("\"steps\":[]"));
+        assert!(!doc.contains("NaN"));
     }
 
     #[test]
@@ -219,8 +348,39 @@ mod tests {
         assert_eq!(st.completed, 1);
         assert_eq!(st.rejected, 1);
         assert_eq!(st.total_new_tokens, 0);
+        assert_eq!(st.ttft.count(), 0, "a NaN TTFT must not enter the histogram");
         assert_eq!(st.ttft_mean_ms(), 0.0);
         assert_eq!(st.ttft_p95_ms(), 0.0);
         assert!(!st.report().contains("NaN"));
+    }
+
+    #[test]
+    fn breakdown_attributes_phases() {
+        let mut st = ServeStats::new(2);
+        st.add_admit_secs(0.25);
+        st.add_idle_secs(0.1);
+        st.on_step(0, 2, 10, 100.0, 2);
+        st.finish();
+        let b = st.breakdown();
+        assert!(b.contains("admit+prefill"));
+        assert!(b.contains("decode steps"));
+        assert!(b.contains("idle wait"));
+        assert!(b.contains("total"));
+    }
+
+    #[test]
+    fn metrics_json_totals_match_fields() {
+        let mut st = ServeStats::new(2);
+        st.on_step(1, 2, 64, 2.0, 2);
+        let mut s = Session::admit(GenRequest::new(7, vec![1], 2), 0);
+        s.push(3);
+        s.push(4);
+        st.on_complete(&s.into_result(1));
+        st.finish();
+        let doc = st.metrics_json();
+        assert!(doc.contains("\"schema\":\"silq.metrics.v1\""));
+        assert!(doc.contains("\"completed\":1"));
+        assert!(doc.contains("\"new_tokens\":2"));
+        assert!(doc.contains("\"kv_bytes_peak\":64"));
     }
 }

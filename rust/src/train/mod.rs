@@ -10,8 +10,9 @@ use std::sync::Arc;
 use crate::config::{ModelCfg, TrainCfg};
 use crate::data::{Batcher, DataMix, World};
 use crate::data::vocab::PAD;
-use crate::metrics::RunLog;
+use crate::metrics::{RunLog, Table};
 use crate::model::ParamStore;
+use crate::obs;
 use crate::runtime::{literal_f32, literal_i32, literal_scalar, to_f32_scalar, to_f32_vec, Engine, Module};
 use crate::util::{Rng, Timer};
 
@@ -55,6 +56,27 @@ pub struct TrainStats {
 impl TrainStats {
     pub fn steps_per_sec(&self) -> f64 {
         self.steps as f64 / self.total_secs.max(1e-9)
+    }
+
+    /// Phase attribution of the run as a fixed-width table: data batching,
+    /// teacher forwards, host marshalling, artifact execution, and the
+    /// unattributed remainder.
+    pub fn breakdown(&self) -> String {
+        let wall = self.total_secs.max(1e-9);
+        let other =
+            (self.total_secs - self.data_secs - self.teacher_secs - self.host_secs - self.exec_secs)
+                .max(0.0);
+        let mut t = Table::new(&["phase", "secs", "% wall"]);
+        let mut row = |name: &str, s: f64| {
+            t.row(&[name.into(), format!("{s:.3}"), format!("{:.1}", 100.0 * s / wall)]);
+        };
+        row("data", self.data_secs);
+        row("teacher", self.teacher_secs);
+        row("host marshal", self.host_secs);
+        row("exec", self.exec_secs);
+        row("other", other);
+        row("total", self.total_secs);
+        t.render()
     }
 }
 
@@ -125,6 +147,8 @@ impl<'e> Trainer<'e> {
         let (tb, s, v) = (self.mc.train_batch, self.mc.seq_len, self.mc.vocab);
 
         for step in 0..self.cfg.steps {
+            let _step_span = obs::span("train_step", "train", 0, step as u64);
+            let step_t = Timer::start();
             let dt = Timer::start();
             let tokens = batcher.next_batch();
             stats.data_secs += dt.secs();
@@ -179,7 +203,16 @@ impl<'e> Trainer<'e> {
             let gnorm = to_f32_scalar(&out[spec.output_index("gnorm")?])?;
             stats.host_secs += ht2.secs();
             anyhow::ensure!(loss.is_finite(), "loss diverged at step {step}");
-            log.step(step, loss, &format!("gnorm {gnorm:.4} lr {:.2e}", self.cfg.lr_at(step)));
+            obs::add(obs::Counter::QatSteps, 1);
+            log.step(
+                step,
+                loss,
+                &format!(
+                    "gnorm {gnorm:.4} lr {:.2e} step_ms {:.1}",
+                    self.cfg.lr_at(step),
+                    step_t.millis()
+                ),
+            );
 
             if let Some(hook) = eval_hook.as_deref_mut() {
                 if self.cfg.eval_every > 0 && (step + 1) % self.cfg.eval_every == 0 {
@@ -190,6 +223,7 @@ impl<'e> Trainer<'e> {
         }
         stats.steps = self.cfg.steps;
         stats.total_secs = total_t.secs();
+        log.note(&format!("phase breakdown:\n{}", stats.breakdown()));
         Ok(stats)
     }
 }
@@ -240,5 +274,24 @@ mod tests {
     fn stats_steps_per_sec() {
         let s = TrainStats { steps: 10, total_secs: 2.0, ..Default::default() };
         assert!((s.steps_per_sec() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stats_breakdown_attributes_phases() {
+        let s = TrainStats {
+            steps: 4,
+            total_secs: 2.0,
+            exec_secs: 1.0,
+            teacher_secs: 0.4,
+            data_secs: 0.1,
+            host_secs: 0.2,
+            final_loss: 1.0,
+        };
+        let b = s.breakdown();
+        for phase in ["data", "teacher", "host marshal", "exec", "other", "total"] {
+            assert!(b.contains(phase), "breakdown missing {phase}:\n{b}");
+        }
+        assert!(b.contains("50.0"), "exec should be half the wall:\n{b}");
+        assert!(!b.contains("NaN"));
     }
 }

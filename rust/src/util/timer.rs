@@ -20,16 +20,36 @@ impl Timer {
     }
 }
 
-/// Measure the average milliseconds of `f` over `iters` runs after `warmup`.
-pub fn bench_ms<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> f64 {
+/// One `bench_ms` measurement: per-iteration minimum and mean wall ms.
+///
+/// The min is the noise-robust statistic — scheduler preemptions and
+/// cache-cold iterations only ever push a sample *up*, so the fastest
+/// iteration is the best estimate of the code's intrinsic cost and is
+/// what the `BENCH_*.json` speedup ratios use. The mean rides along for
+/// console reports where jitter context is useful.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchMs {
+    pub min_ms: f64,
+    pub mean_ms: f64,
+}
+
+/// Measure `f` over `iters` timed runs after `warmup` untimed ones,
+/// timing each iteration separately (min and mean, see [`BenchMs`]).
+pub fn bench_ms<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> BenchMs {
     for _ in 0..warmup {
         f();
     }
-    let t = Timer::start();
+    let iters = iters.max(1);
+    let mut min = f64::INFINITY;
+    let mut sum = 0.0;
     for _ in 0..iters {
+        let t = Timer::start();
         f();
+        let ms = t.millis();
+        min = min.min(ms);
+        sum += ms;
     }
-    t.millis() / iters as f64
+    BenchMs { min_ms: min, mean_ms: sum / iters as f64 }
 }
 
 #[cfg(test)]
@@ -46,7 +66,9 @@ mod tests {
     #[test]
     fn bench_runs() {
         let mut n = 0;
-        let _ = bench_ms(1, 3, || n += 1);
+        let b = bench_ms(1, 3, || n += 1);
         assert_eq!(n, 4);
+        assert!(b.min_ms <= b.mean_ms, "the min iteration cannot exceed the mean");
+        assert!(b.min_ms >= 0.0 && b.mean_ms.is_finite());
     }
 }

@@ -138,6 +138,13 @@ fn steady_state_decode_allocates_nothing() {
     drop(v);
     assert!(ALLOCS.load(Ordering::Relaxed) > before, "allocation counter is not wired up");
 
+    // telemetry ON for the whole measurement: counters, spans and the
+    // trace ring must all record allocation-free in steady state (the ring
+    // is reserved here, before any counted window)
+    silq::obs::enable_tracing(1 << 16);
+    let gemv_before = silq::obs::get(silq::obs::Counter::GemvCalls);
+    let attend_before = silq::obs::get(silq::obs::Counter::AttendI8Calls);
+
     // every path through forward_token_into: integer kernels over the int8
     // slab, quantized fallback over the f32 store, static-act steps, and
     // the unquantized fp16 path
@@ -167,4 +174,22 @@ fn steady_state_decode_allocates_nothing() {
             "{spec}/{store:?}: steady-state forward_tokens_batch performed {n} heap allocations"
         );
     }
+
+    // the zero-alloc loops above ran with telemetry live — prove the
+    // instrumentation actually recorded (a disabled hook passing the pin
+    // would be vacuous) and that every span closed
+    assert!(
+        silq::obs::get(silq::obs::Counter::GemvCalls) > gemv_before,
+        "integer decode recorded no GEMV calls with telemetry enabled"
+    );
+    assert!(
+        silq::obs::get(silq::obs::Counter::AttendI8Calls) > attend_before,
+        "integer decode recorded no int8 attention calls with telemetry enabled"
+    );
+    assert_eq!(
+        silq::obs::get(silq::obs::Counter::SpanEnter),
+        silq::obs::get(silq::obs::Counter::SpanExit),
+        "unbalanced telemetry spans"
+    );
+    assert!(!silq::obs::events().is_empty(), "tracing recorded no span events");
 }

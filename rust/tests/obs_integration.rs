@@ -1,0 +1,114 @@
+//! End-to-end telemetry integration: one serve run with tracing live,
+//! asserting the acceptance contract of the obs PR — the counter registry
+//! totals exactly match the `ServeStats` accounting, the `--metrics-out`
+//! per-step series sums to the aggregates, and the Chrome-trace export is
+//! well-formed trace_event JSON.
+//!
+//! Single-test binary on purpose: the counter registry is process-global,
+//! so exact-delta assertions are only sound when nothing else records
+//! concurrently (the lib unit tests stay tolerant for the same reason).
+
+use silq::hostmodel::host_test_params;
+use silq::obs::{self, Counter};
+use silq::serve::{serve_inline, CacheStore, GenRequest, HostBackend, HostCfg};
+
+fn cfg() -> HostCfg {
+    HostCfg {
+        vocab: 256,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 4,
+        d_ff: 64,
+        seq_len: 32,
+        policy: "w4a8kv8".parse().unwrap(),
+        rope_theta: 10000.0,
+    }
+}
+
+/// Count occurrences of `needle` in `hay` (step-row counting in the
+/// metrics document without a JSON parser).
+fn occurrences(hay: &str, needle: &str) -> usize {
+    hay.match_indices(needle).count()
+}
+
+#[test]
+fn serve_run_exports_consistent_trace_and_metrics() {
+    obs::enable_tracing(1 << 14);
+    let c0: Vec<u64> = Counter::ALL.iter().map(|&c| obs::get(c)).collect();
+    let delta = |c: Counter| obs::get(c) - c0[c as usize];
+
+    let cfg = cfg();
+    let params = host_test_params(&cfg, 17);
+    let backend = HostBackend::new(cfg, 4, &params, CacheStore::Int8).unwrap();
+    let n_requests = 24u64;
+    let reqs: Vec<GenRequest> = (0..n_requests)
+        .map(|i| {
+            let prompt: Vec<i32> = (0..3 + (i % 3) as i32).map(|p| 1 + (i as i32 * 7 + p) % 250).collect();
+            GenRequest::new(i, prompt, 2 + (i as usize % 5)).ignore_eos()
+        })
+        .collect();
+    let (results, stats) = serve_inline(backend, 4, reqs).unwrap();
+    assert_eq!(results.len(), n_requests as usize);
+    assert_eq!(stats.completed, n_requests as usize);
+
+    // --- counter registry vs ServeStats: exact accounting ---
+    assert_eq!(delta(Counter::ServeEnqueued), n_requests);
+    assert_eq!(delta(Counter::ServeAdmitted), n_requests);
+    assert_eq!(delta(Counter::ServeCompleted), stats.completed as u64);
+    assert_eq!(delta(Counter::ServeRejected), stats.rejected as u64);
+    assert_eq!(delta(Counter::ServeEvicted), stats.completed as u64);
+    assert_eq!(delta(Counter::ServeSteps), stats.steps);
+    assert_eq!(delta(Counter::ServeNewTokens), stats.total_new_tokens as u64);
+    // the integer decode actually went through the instrumented kernels
+    assert!(delta(Counter::GemvCalls) + delta(Counter::GemmCalls) > 0);
+    assert!(delta(Counter::AttendI8Calls) > 0);
+    assert!(delta(Counter::KvBytesRead) > 0);
+    assert_eq!(obs::get(Counter::SpanEnter), obs::get(Counter::SpanExit), "unbalanced spans");
+
+    // --- per-step series: one row per step, sums match the aggregates ---
+    assert_eq!(stats.series.len() as u64, stats.steps);
+    assert_eq!(
+        stats.series.iter().map(|r| r.new_tokens).sum::<usize>(),
+        stats.total_new_tokens
+    );
+    assert_eq!(stats.series.iter().map(|r| r.kv_bytes).max().unwrap_or(0), stats.kv_bytes_peak);
+
+    // --- metrics JSON: schema + totals literally match the stats ---
+    let doc = stats.metrics_json();
+    assert!(doc.starts_with('{') && doc.ends_with('}'));
+    assert!(doc.contains("\"schema\":\"silq.metrics.v1\""));
+    assert_eq!(occurrences(&doc, "\"step\":"), stats.steps as usize, "one series row per step");
+    for needle in [
+        format!("\"steps\":{}", stats.steps),
+        format!("\"completed\":{}", stats.completed),
+        format!("\"rejected\":{}", stats.rejected),
+        format!("\"new_tokens\":{}", stats.total_new_tokens),
+        format!("\"kv_bytes_peak\":{}", stats.kv_bytes_peak),
+    ] {
+        assert!(doc.contains(&needle), "metrics JSON missing `{needle}`:\n{doc}");
+    }
+    assert!(!doc.contains("NaN") && !doc.contains("inf"), "non-JSON numbers leaked:\n{doc}");
+
+    // --- Chrome trace: well-formed, complete events on lane tracks ---
+    let trace = obs::export::chrome_trace_json();
+    assert!(trace.starts_with('{') && trace.ends_with('}'));
+    assert!(trace.contains("\"traceEvents\":["));
+    assert!(trace.contains("\"ph\":\"X\""));
+    assert!(trace.contains("\"name\":\"step\""), "missing scheduler step spans");
+    assert!(trace.contains("\"name\":\"request\""), "missing request lifecycle events");
+    assert!(trace.contains("\"name\":\"prefill\""), "missing prefill spans");
+    assert!(trace.contains("\"cat\":\"hostmodel\""), "missing hostmodel phase spans");
+    assert!(trace.contains("\"counters\":{") && trace.contains("\"serve_steps\":"));
+
+    // --- both writers land on disk and round-trip ---
+    let dir = std::env::temp_dir();
+    let trace_path = dir.join(format!("silq_obs_{}.trace.json", std::process::id()));
+    let metrics_path = dir.join(format!("silq_obs_{}.metrics.json", std::process::id()));
+    obs::export::write_chrome_trace(trace_path.to_str().unwrap()).unwrap();
+    std::fs::write(&metrics_path, &doc).unwrap();
+    let trace_back = std::fs::read_to_string(&trace_path).unwrap();
+    assert!(trace_back.contains("\"traceEvents\":["));
+    assert_eq!(std::fs::read_to_string(&metrics_path).unwrap(), doc);
+    let _ = std::fs::remove_file(&trace_path);
+    let _ = std::fs::remove_file(&metrics_path);
+}

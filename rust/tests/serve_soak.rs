@@ -64,6 +64,11 @@ fn request(id: u64, seq_len: usize) -> GenRequest {
 
 #[test]
 fn soak_frees_every_slot_and_keeps_stats_exact() {
+    // telemetry live for the whole run — this binary is single-test, so
+    // the global counters can be asserted exactly against ServeStats
+    silq::obs::set_enabled(true);
+    let c0: Vec<u64> = silq::obs::Counter::ALL.iter().map(|&c| silq::obs::get(c)).collect();
+    let delta = move |c: silq::obs::Counter| silq::obs::get(c) - c0[c as usize];
     // SILQ_SOAK=long (make soak) runs the long seed; the default stays
     // cheap enough for the debug tier-1 run, and scripts/check.sh repeats
     // the suite in release where the full-size run is fast
@@ -151,6 +156,35 @@ fn soak_frees_every_slot_and_keeps_stats_exact() {
     assert!(stats.ttft_p95_ms().is_finite() && stats.ttft_p95_ms() >= 0.0);
     assert!(stats.batch_occupancy() > 0.0 && stats.batch_occupancy() <= 1.0);
     assert!(!stats.report().contains("NaN"), "soak report leaked a NaN");
+
+    // --- telemetry: counter totals match the exact stats accounting ---
+    use silq::obs::Counter;
+    assert_eq!(delta(Counter::ServeEnqueued), n_requests, "every submit counts once");
+    assert_eq!(delta(Counter::ServeSteps), stats.steps, "step counter diverged from stats");
+    assert_eq!(delta(Counter::ServeCompleted), stats.completed as u64);
+    assert_eq!(delta(Counter::ServeRejected), stats.rejected as u64);
+    assert_eq!(delta(Counter::ServeEvicted), stats.completed as u64, "one evict per completion");
+    assert_eq!(
+        delta(Counter::ServeNewTokens),
+        stats.total_new_tokens as u64,
+        "token counter diverged from stats"
+    );
+    // admissions = completions (rejects never admit; zero-budget admits
+    // complete immediately)
+    assert_eq!(delta(Counter::ServeAdmitted), stats.completed as u64);
+    // spans balance under churn: every enter has its exit by shutdown
+    assert_eq!(
+        silq::obs::get(Counter::SpanEnter),
+        silq::obs::get(Counter::SpanExit),
+        "unbalanced spans after the soak"
+    );
+    // the per-step series mirrors the counters row for row
+    assert_eq!(stats.series.len() as u64, stats.steps);
+    assert_eq!(
+        stats.series.iter().map(|r| r.new_tokens).sum::<usize>(),
+        stats.total_new_tokens,
+        "series token sum diverged from the aggregate"
+    );
 
     // --- shutdown: the KV pool is fully freed, nothing resident ---
     assert!(

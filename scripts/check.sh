@@ -18,7 +18,30 @@ echo "== cargo test -q --release (integration + property suites) =="
 # run it via `make soak`.
 cargo test -q --offline --release \
   --test proptests --test serve_integration --test serve_soak \
-  --test kernels_integration --test kernels_zero_alloc
+  --test kernels_integration --test kernels_zero_alloc --test obs_integration
+
+echo "== trace export smoke (--trace / --metrics-out) =="
+# a real serve run must emit valid Chrome-trace and metrics JSON whose
+# top-level shape downstream tooling (Perfetto, dashboards) can load
+TRACE_OUT="$(mktemp /tmp/silq_smoke.XXXXXX.trace.json)"
+METRICS_OUT="$(mktemp /tmp/silq_smoke.XXXXXX.metrics.json)"
+cargo run -q --release --offline -- serve \
+  --requests 8 --batch 2 --max_new 4 --producers 1 --prec w4a8kv8 \
+  --trace "$TRACE_OUT" --metrics-out "$METRICS_OUT" > /dev/null
+python3 - "$TRACE_OUT" "$METRICS_OUT" <<'EOF'
+import json, sys
+trace = json.load(open(sys.argv[1]))
+assert trace["traceEvents"], "trace has no events"
+assert all(e["ph"] == "X" for e in trace["traceEvents"]), "non-complete event"
+assert trace["counters"]["serve_completed"] == 8, trace["counters"]
+metrics = json.load(open(sys.argv[2]))
+assert metrics["schema"] == "silq.metrics.v1", metrics.get("schema")
+assert len(metrics["steps"]) == metrics["totals"]["steps"], "series/total mismatch"
+assert metrics["totals"]["completed"] == 8, metrics["totals"]
+print("trace smoke: OK "
+      f"({len(trace['traceEvents'])} events, {len(metrics['steps'])} steps)")
+EOF
+rm -f "$TRACE_OUT" "$METRICS_OUT"
 
 echo "== cargo clippy -D warnings =="
 cargo clippy --offline --all-targets -- -D warnings
