@@ -10,7 +10,7 @@
 use silq::config::Manifest;
 use silq::data::vocab::Vocab;
 use silq::data::{Batcher, DataMix, World};
-use silq::kernels::DecodeScratch;
+use silq::kernels::{pool, simd, DecodeScratch};
 use silq::linalg::{hadamard, Mat};
 use silq::model::ParamStore;
 use silq::ptq::gptq::gptq_quantize_family;
@@ -50,8 +50,11 @@ fn bench_serve_entry(
     // value is always a valid JSON number
     format!(
         "  {{\"label\": \"{label}\", \"backend\": \"{backend}\", \"policy\": \"{policy}\", \
+         \"threads\": {}, \"kernel\": \"{}\", \
          \"tok_per_s\": {:.2}, \"ttft_ms_mean\": {:.3}, \"wall_secs\": {:.4}, \
          \"completed\": {}, \"occupancy\": {:.3}}}",
+        pool::active_threads(),
+        simd::active_name(),
         stats.tokens_per_sec(),
         stats.ttft_mean_ms(),
         stats.wall_secs,
@@ -167,15 +170,58 @@ fn bench_hostmodel_entry(model_name: &str, policy: &str, seed: u64) -> String {
     );
     format!(
         "  {{\"model\": \"{model_name}\", \"policy\": \"{policy}\", \
+         \"threads\": {}, \"kernel\": \"{}\", \
          \"prefill_tok_s\": {prefill_tok_s:.2}, \"prefill_tok_s_ref\": {prefill_tok_s_ref:.2}, \
          \"decode_tok_s\": {decode_tok_s:.2}, \"decode_tok_s_ref\": {decode_tok_s_ref:.2}, \
          \"decode_speedup\": {speedup:.3}, \
          \"kv_read_bytes_per_token\": {kv_bytes_int}, \
          \"kv_read_bytes_per_token_f32\": {kv_bytes_f32}, \
          \"weight_bytes\": {}, \"weight_bytes_ref\": {}}}",
+        pool::active_threads(),
+        simd::active_name(),
         int_model.weight_bytes(),
         ref_model.weight_bytes(),
     )
+}
+
+/// Decode tok/s vs worker-pool width on the builtin `small` model — the
+/// thread-scaling table. Same model, same tokens, bit-identical output at
+/// every width (the kernels shard exact `i32` contractions by output
+/// channel); the only thing that moves is throughput.
+fn thread_scaling_entries(base_threads: usize) -> Vec<String> {
+    let mc = builtin_model("small").expect("builtin model");
+    let cfg = HostCfg::from_policy(&mc, &"w4a8kv8".parse().expect("policy")).expect("host cfg");
+    let params = host_test_params(&cfg, 33);
+    let model = HostModel::new(cfg.clone(), &params).expect("model");
+    let plen = cfg.seq_len / 2;
+    let prompt: Vec<i32> =
+        (0..plen as i32).map(|i| 1 + (i * 13) % (cfg.vocab as i32 - 1)).collect();
+    let steps = (cfg.seq_len - plen - 1).min(32);
+    let mut kv = model.make_pool(1, CacheStore::Int8).expect("pool");
+    let mut out = vec![];
+    let mut tok_s_1t = 0.0f64;
+    for t in [1usize, 2, 4, 8] {
+        pool::configure(t);
+        let ms = decode_ms_per_tok(&model, &mut kv, &prompt, steps, 3);
+        let tok_s = 1e3 / ms.min_ms;
+        if t == 1 {
+            tok_s_1t = tok_s;
+        }
+        let scaling = tok_s / tok_s_1t.max(1e-9);
+        report_bench(
+            &format!("decode small w4a8kv8, {t} thread(s)"),
+            ms,
+            &format!("({tok_s:.0} tok/s, {scaling:.2}x vs 1t, kernel {})", simd::active_name()),
+        );
+        out.push(format!(
+            "  {{\"model\": \"small\", \"policy\": \"w4a8kv8\", \"section\": \"thread_scaling\", \
+             \"threads\": {t}, \"kernel\": \"{}\", \"decode_tok_s\": {tok_s:.2}, \
+             \"scaling_vs_1t\": {scaling:.3}}}",
+            simd::active_name(),
+        ));
+    }
+    pool::configure(base_threads);
+    out
 }
 
 /// Serve throughput through the host backend (quantized KV pool), int8 vs
@@ -252,9 +298,12 @@ fn batched_decode_entries() -> Vec<String> {
         );
         out.push(format!(
             "  {{\"label\": \"batched decode small w4a8kv8 B={b}\", \"backend\": \"host\", \
-             \"policy\": \"w4a8kv8\", \"batch\": {b}, \"tok_per_s\": {:.2}, \
+             \"policy\": \"w4a8kv8\", \"batch\": {b}, \"threads\": {}, \"kernel\": \"{}\", \
+             \"tok_per_s\": {:.2}, \
              \"tok_per_s_sequential\": {:.2}, \"batched_speedup\": {speedup:.3}, \
              \"completed\": {}}}",
+            pool::active_threads(),
+            simd::active_name(),
             st_bat.tokens_per_sec(),
             st_seq.tokens_per_sec(),
             st_bat.completed,
@@ -263,13 +312,63 @@ fn batched_decode_entries() -> Vec<String> {
     out
 }
 
-/// The `--quick` serve pass: host-backend + batched-decode entries,
-/// straight to JSON.
-fn quick_serve_section() {
+/// Batched serve decode at B=8 across worker-pool widths {1, 2, 4, 8}:
+/// the fused cross-lane step shards its GEMMs by output channel and its
+/// int8 attention by lane, so one scheduler step itself scales with the
+/// pool — token-identical at every width.
+fn batched_decode_thread_entries(base_threads: usize) -> Vec<String> {
+    let mc = builtin_model("small").expect("builtin model");
+    let cfg = HostCfg::from_policy(&mc, &"w4a8kv8".parse().expect("policy")).expect("host cfg");
+    let params = host_test_params(&cfg, 41);
+    let b = 8usize;
+    let mk_reqs = || -> Vec<GenRequest> {
+        (0..2 * b)
+            .map(|i| {
+                let prompt: Vec<i32> =
+                    (0..4usize).map(|p| 1 + ((i * 29 + p * 13) % (cfg.vocab - 1)) as i32).collect();
+                GenRequest::new(i as u64, prompt, 24).ignore_eos()
+            })
+            .collect()
+    };
+    let mut out = vec![];
+    let mut tok_s_1t = 0.0f64;
+    for t in [1usize, 2, 4, 8] {
+        pool::configure(t);
+        let backend =
+            HostBackend::new(cfg.clone(), b, &params, CacheStore::Int8).expect("backend");
+        let (_, st) = serve_inline(backend, b, mk_reqs()).expect("serve run");
+        let tok_s = st.tokens_per_sec();
+        if t == 1 {
+            tok_s_1t = tok_s;
+        }
+        let speedup = tok_s / tok_s_1t.max(1e-9);
+        report(
+            &format!("serve decode small w4a8kv8, B={b}, {t} thread(s)"),
+            st.wall_secs * 1e3,
+            &format!("({tok_s:.0} tok/s, {speedup:.2}x vs 1t)"),
+        );
+        out.push(format!(
+            "  {{\"label\": \"batched decode small w4a8kv8 B={b} threads={t}\", \
+             \"backend\": \"host\", \"policy\": \"w4a8kv8\", \"batch\": {b}, \"threads\": {t}, \
+             \"kernel\": \"{}\", \"tok_per_s\": {tok_s:.2}, \"scaling_vs_1t\": {speedup:.3}, \
+             \"completed\": {}}}",
+            simd::active_name(),
+            st.completed,
+        ));
+    }
+    pool::configure(base_threads);
+    out
+}
+
+/// The `--quick` serve pass: host-backend + batched-decode + thread-
+/// scaling entries, straight to JSON.
+fn quick_serve_section(base_threads: usize) {
     section("serve throughput (host backend, quantized KV pool)");
     let mut entries = serve_host_entries();
     section("cross-lane batched decode (one fused GEMM per matrix per step)");
     entries.extend(batched_decode_entries());
+    section("batched decode vs worker-pool width (B=8)");
+    entries.extend(batched_decode_thread_entries(base_threads));
     write_bench_serve_json(&entries);
 }
 
@@ -286,8 +385,18 @@ fn main() {
     // --quick (make bench-quick): only the JSON-writing trajectory
     // sections, so CI can regenerate BENCH_*.json in seconds
     let quick = std::env::args().any(|a| a == "--quick");
-    println!("silq bench harness (warmup+avg wall-clock; CPU PJRT{})",
-             if quick { "; --quick" } else { "" });
+    // worker-pool width: $SILQ_THREADS, else every core. The scaling
+    // sections sweep widths explicitly and restore this afterwards, so
+    // every JSON entry's recorded "threads" is what actually ran it.
+    let base_threads = pool::env_threads()
+        .unwrap_or_else(|| std::thread::available_parallelism().map_or(1, |n| n.get()));
+    pool::configure(base_threads);
+    println!(
+        "silq bench harness (warmup+avg wall-clock; CPU PJRT{}; threads={} kernel={})",
+        if quick { "; --quick" } else { "" },
+        pool::active_threads(),
+        simd::active_name(),
+    );
 
     // ---------------- integer decode kernels (BENCH_hostmodel.json) ------
     // the deployment claim measured: packed-i8 GEMV/GEMM + zero-copy int8
@@ -299,10 +408,12 @@ fn main() {
     if !quick {
         hostmodel_json.push(bench_hostmodel_entry("small", "w4a8kv8:statacts", 37));
     }
+    section("decode vs worker-pool width (small, w4a8kv8)");
+    hostmodel_json.extend(thread_scaling_entries(base_threads));
     write_bench_hostmodel_json(&hostmodel_json);
 
     if quick {
-        quick_serve_section();
+        quick_serve_section(base_threads);
         println!("\nbench harness done (--quick)");
         return;
     }
@@ -377,6 +488,10 @@ fn main() {
     // several batch widths (also part of --quick; lands in BENCH_serve.json)
     section("cross-lane batched decode (one fused GEMM per matrix per step)");
     serve_json.extend(batched_decode_entries());
+
+    // one fused step scales with the worker pool too: B=8, widths 1..8
+    section("batched decode vs worker-pool width (B=8)");
+    serve_json.extend(batched_decode_thread_entries(base_threads));
 
     // ------- eval-style greedy decode: incremental vs full recompute ------
     // the ISSUE-2 win, measured: host incremental decode does O(1) work per

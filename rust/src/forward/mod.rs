@@ -289,6 +289,13 @@ impl ForwardBackend for ArtifactForward {
 /// ([`DecodeScratch`] for prefill/per-row steps, [`BatchScratch`] for the
 /// batched step), so the steady-state decode loop performs no heap
 /// allocation inside the forward.
+///
+/// Execution width and micro-kernel choice live one level down: the GEMMs
+/// shard by output channel (and the batched step's integer attention by
+/// lane) across the persistent [`crate::kernels::pool`] worker pool, and
+/// the inner `i8` dot products run through the runtime-dispatched
+/// [`crate::kernels::simd`] kernel. Both are bit-exact — every identity in
+/// this module holds at any `--threads` / `--kernel` setting.
 pub struct HostForward {
     model: HostModel,
     pool: KvPool,

@@ -47,6 +47,7 @@ pub use kvpool::{CacheStore, KvPool, KvSlabRef, QuantRule};
 use anyhow::{ensure, Context, Result};
 
 use crate::config::{ArtifactSpec, ModelCfg, PrecCfg, TensorSpec};
+use crate::kernels::pool as wpool;
 use crate::kernels::{
     attend_f32, attend_i8, matvec_into, quant_rows_i32, quant_rows_i8, rmsnorm_into, silu, ActRow,
     BatchScratch, DecodeScratch, Linear, QLinear, GEMM_BLOCK,
@@ -813,7 +814,11 @@ impl HostModel {
     /// streamed once per [`GEMM_BLOCK`] lanes per step instead of B times —
     /// the memory-bound lever `silq serve` rides. Attention stays per lane
     /// (each lane owns its own slab rows at its own — possibly ragged —
-    /// position), exactly as in [`HostModel::forward_token_into`].
+    /// position), exactly as in [`HostModel::forward_token_into`] — and on
+    /// the integer path the lanes fan out across the kernels worker pool
+    /// (`kernels::pool`), each into its own score/context windows, while
+    /// the fused GEMMs shard by output channel inside the kernel; both
+    /// fan-outs are bit-exact at any thread count.
     ///
     /// Bit-exactness: per lane this computes *exactly* what
     /// `forward_token_into` computes — row quantization is per lane row
@@ -896,8 +901,9 @@ impl HostModel {
                 ],
             );
 
-            // per-lane: RoPE at the lane's own position, query quantization,
-            // cache write, and attention over the lane's slab rows
+            // per-lane prologue (sequential — the cache write needs the
+            // pool mutably): RoPE at the lane's own position, query
+            // quantization, cache write
             for (l, ln) in lanes.iter().enumerate() {
                 let qr = l * d;
                 self.rope(ln.pos, &mut s.q[qr..qr + d], &mut s.k[qr..qr + d]);
@@ -914,30 +920,70 @@ impl HostModel {
                     self.act_quant(&mut s.q[qr..qr + d], cfg.policy.query.bits, st.sa_q, h);
                 }
                 pool.write(ln.slot, li, ln.pos, &s.k[qr..qr + d], &s.v[qr..qr + d]);
+            }
 
-                let len = ln.pos + 1;
-                if int_attn {
-                    let slab = pool.slab(ln.slot, li, len).expect("Int8 store keeps a slab");
-                    let (ksc, vsc, stride): (&[f32], &[f32], usize) = if slab.rows > 0 {
-                        (slab.k_scales, slab.v_scales, slab.rows)
-                    } else {
-                        (&self.k_attn[li * h..(li + 1) * h], &self.v_attn[li * h..(li + 1) * h], 0)
-                    };
-                    attend_i8(
-                        &s.qq[l * d..(l + 1) * d],
-                        &s.qs[l * h..(l + 1) * h],
-                        slab.k,
-                        slab.v,
-                        ksc,
-                        vsc,
-                        stride,
-                        h,
-                        d,
-                        len,
-                        &mut s.scores[..len],
-                        &mut s.ctx[l * d..(l + 1) * d],
-                    );
-                } else {
+            if int_attn {
+                // integer attention fans whole lanes across the worker
+                // pool: every lane reads its own (now written) slab rows
+                // through `&KvPool` and owns disjoint score/context
+                // windows, and each lane's math is exactly the sequential
+                // loop's — per-lane order is untouched, so parallel ≡
+                // sequential bit-for-bit at any thread count.
+                let seq = cfg.seq_len;
+                let attn_work: usize = lanes.iter().map(|ln| 2 * (ln.pos + 1) * d).sum();
+                let shards = wpool::shard_count(attn_work, b);
+                let qq = &s.qq[..b * d];
+                let qs = &s.qs[..b * h];
+                let scoresp = wpool::SendPtr(s.scores.as_mut_ptr());
+                let ctxp = wpool::SendPtr(s.ctx.as_mut_ptr());
+                let kv: &KvPool = pool;
+                wpool::run(shards, &|sh| {
+                    let (l0, l1) = wpool::shard_range(b, shards, sh);
+                    for (l, ln) in lanes.iter().enumerate().take(l1).skip(l0) {
+                        let len = ln.pos + 1;
+                        let slab =
+                            kv.slab(ln.slot, li, len).expect("Int8 store keeps a slab");
+                        let (ksc, vsc, stride): (&[f32], &[f32], usize) = if slab.rows > 0 {
+                            (slab.k_scales, slab.v_scales, slab.rows)
+                        } else {
+                            (
+                                &self.k_attn[li * h..(li + 1) * h],
+                                &self.v_attn[li * h..(li + 1) * h],
+                                0,
+                            )
+                        };
+                        // SAFETY: lane l's score row `[l·seq, l·seq+len)`
+                        // and context row `[l·d, (l+1)·d)` — shards own
+                        // disjoint lane ranges and the pool joins every
+                        // shard before `run` returns.
+                        let scores = unsafe {
+                            std::slice::from_raw_parts_mut(scoresp.0.add(l * seq), len)
+                        };
+                        let ctx = unsafe {
+                            std::slice::from_raw_parts_mut(ctxp.0.add(l * d), d)
+                        };
+                        attend_i8(
+                            &qq[l * d..(l + 1) * d],
+                            &qs[l * h..(l + 1) * h],
+                            slab.k,
+                            slab.v,
+                            ksc,
+                            vsc,
+                            stride,
+                            h,
+                            d,
+                            len,
+                            scores,
+                            ctx,
+                        );
+                    }
+                });
+            } else {
+                // f32 fallback: shares the single-lane dequant buffers, so
+                // it stays sequential (same order as the reference path)
+                for (l, ln) in lanes.iter().enumerate() {
+                    let qr = l * d;
+                    let len = ln.pos + 1;
                     pool.read_into(ln.slot, li, len, &mut s.kc[..len * d], &mut s.vc[..len * d])?;
                     attend_f32(
                         &s.q[qr..qr + d],

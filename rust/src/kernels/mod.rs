@@ -37,8 +37,32 @@
 //! integer path tracks the f32 fake-quant reference to ~1e-5 relative
 //! (and greedy decode is token-identical on the builtin models) without
 //! being bit-equal to it.
+//!
+//! Exactness is also what makes the kernels **parallel and vectorized for
+//! free**: because every output channel's contraction is exact `i32`
+//! arithmetic, sharding channels across the persistent worker [`pool`]
+//! and running the inner loops through the runtime-dispatched SIMD
+//! [`simd::DotKernel`] cannot change a single bit — `gemv`/`gemm_into`
+//! fan out by output-channel range ([`pool::shard_range`]: disjoint,
+//! deterministic) whenever `pool::configure` raised the thread count and
+//! the call clears [`pool::MIN_WORK_PER_SHARD`], and every identity pin
+//! (int≡reference, batched≡sequential, parallel≡scalar) holds bit-exact
+//! at any thread count and under either kernel. The f32 reductions the
+//! module does *not* own (softmax·V accumulation inside [`attend_i8`],
+//! residual adds) are order-dependent, so they never cross a shard
+//! boundary: attention parallelism happens one level up, per lane, in
+//! `HostModel::forward_tokens_batch`.
+//!
+//! Observability contract: each kernel call adds its *whole* cost to the
+//! [`obs`] counters **once at entry** (`i8_macs = n·in·out` for a GEMM,
+//! `kv_bytes_read = 2·len·dim` for an attend) — never per element, never
+//! per shard — so counter totals are exact closed-form functions of the
+//! work submitted, independent of thread count, zero-skips, and SIMD
+//! width, and the disabled cost stays one relaxed load + branch per call.
 
+pub mod pool;
 pub mod scratch;
+pub mod simd;
 
 pub use scratch::{BatchScratch, DecodeScratch};
 
@@ -127,10 +151,28 @@ pub fn quant_rows_i32(
 // packed linear weights + fused GEMV / GEMM
 // ---------------------------------------------------------------------------
 
-/// Activation rows processed per accumulator block in [`QLinear::gemm`] /
-/// [`QLinear::gemm_into`] — public so scratch buffers can size their
-/// accumulators (`GEMM_BLOCK · out_dim`) without knowing kernel internals.
-pub const GEMM_BLOCK: usize = 4;
+/// The **maximum** activation rows processed per accumulator block in
+/// [`QLinear::gemm`] / [`QLinear::gemm_into`] — public so scratch buffers
+/// can size their accumulators (`GEMM_BLOCK · out_dim`) for the largest
+/// block the kernel will ever pick. The block size actually used is a
+/// tunable selected per call shape by [`gemm_block_for`]; because the
+/// `i32` contraction is exact, **every** block size produces bit-identical
+/// output (pinned by `gemm_all_block_sizes_are_bit_identical`), so the
+/// choice is purely a locality trade-off: a larger block amortizes each
+/// streamed weight row over more activation rows, a smaller one keeps the
+/// accumulator window hot in L1.
+pub const GEMM_BLOCK: usize = 8;
+
+/// Block size [`QLinear::gemm_into`] uses for an `n`-row call: the largest
+/// power of two `≤ min(n, GEMM_BLOCK)`. Never larger than `n` (a partial
+/// final block would waste accumulator traffic) and never larger than
+/// [`GEMM_BLOCK`] (the scratch sizing contract). Deterministic in `n`
+/// alone so a given call shape always takes the same path.
+pub fn gemm_block_for(n: usize) -> usize {
+    let cap = n.clamp(1, GEMM_BLOCK);
+    // largest power of two <= cap
+    1 << (usize::BITS - 1 - cap.leading_zeros())
+}
 
 /// A linear weight folded to integers at model construction: row-major
 /// `[in_dim, out_dim]` `i8` values (matching the f32 matrices' `x @ W`
@@ -172,38 +214,68 @@ impl QLinear {
 
     /// Fused quantized GEMV: `out[o] = (Σ_i xq[i]·q[i,o]) · (sx·scales[o])`.
     /// The contraction is exact `i32` arithmetic; `acc` is caller-provided
-    /// scratch (`>= out_dim`) so the decode loop never allocates.
+    /// scratch (`>= out_dim`) so the decode loop never allocates. The
+    /// output channels are sharded across the worker [`pool`] when it is
+    /// configured and the call clears the work floor — each shard owns a
+    /// disjoint channel range, and every channel's sum is exact integer
+    /// math fully contained in one shard, so the result is bit-identical
+    /// at any thread count (and under either [`simd`] kernel).
     pub fn gemv(&self, xq: &[i8], sx: f32, acc: &mut [i32], out: &mut [f32]) {
         debug_assert_eq!(xq.len(), self.in_dim);
         debug_assert_eq!(out.len(), self.out_dim);
         obs::add(obs::Counter::GemvCalls, 1);
         obs::add(obs::Counter::I8Macs, (self.in_dim * self.out_dim) as u64);
         let od = self.out_dim;
-        let acc = &mut acc[..od];
+        let acc = &mut acc[..od]; // bounds-check the scratch before raw windows
+        let kern = simd::active();
+        let shards = pool::shard_count(self.in_dim * od, od);
+        let accp = pool::SendPtr(acc.as_mut_ptr());
+        let outp = pool::SendPtr(out.as_mut_ptr());
+        pool::run(shards, &|s| {
+            let (c0, c1) = pool::shard_range(od, shards, s);
+            // SAFETY: shard_range windows are disjoint per shard and the
+            // pool joins every shard before `run` returns, so these are
+            // non-overlapping borrows that end inside this call.
+            let acc = unsafe { std::slice::from_raw_parts_mut(accp.0.add(c0), c1 - c0) };
+            let out = unsafe { std::slice::from_raw_parts_mut(outp.0.add(c0), c1 - c0) };
+            self.gemv_cols(xq, sx, kern, c0, c1, acc, out);
+        });
+    }
+
+    /// One GEMV shard: output channels `[c0, c1)`. `acc`/`out` are that
+    /// window's slices. The serial call is the single shard `[0, od)`.
+    fn gemv_cols(
+        &self,
+        xq: &[i8],
+        sx: f32,
+        kern: &dyn simd::DotKernel,
+        c0: usize,
+        c1: usize,
+        acc: &mut [i32],
+        out: &mut [f32],
+    ) {
+        let od = self.out_dim;
         acc.fill(0);
         for (i, &a) in xq.iter().enumerate() {
             if a == 0 {
                 continue; // a zero activation contributes exactly nothing
             }
-            let a = a as i32;
-            let row = &self.q[i * od..(i + 1) * od];
-            for (s, &w) in acc.iter_mut().zip(row) {
-                *s += a * w as i32;
-            }
+            kern.axpy_i8(a as i32, &self.q[i * od + c0..i * od + c1], acc);
         }
-        for ((y, &s), &sw) in out.iter_mut().zip(acc.iter()).zip(&self.scales) {
+        for ((y, &s), &sw) in out.iter_mut().zip(acc.iter()).zip(&self.scales[c0..c1]) {
             *y = s as f32 * (sx * sw);
         }
     }
 
     /// Blocked multi-row GEMM: `sxs.len()` activation rows (`xq` row-major
     /// `[n, in_dim]`, one scale per row) through one pass over the weight
-    /// matrix, [`GEMM_BLOCK`] rows at a time — prefill/scoring (and, since
-    /// the cross-lane batching PR, every batched decode step) stops paying
-    /// n independent weight streams. Bit-identical to [`QLinear::gemv`]
-    /// per row (the `i32` contraction is exact, so blocking cannot change
-    /// it; the descale expression is the same). Allocates its own
-    /// accumulator; hot loops use [`QLinear::gemm_into`] instead.
+    /// matrix, [`gemm_block_for`]`(n)` rows at a time — prefill/scoring
+    /// (and, since the cross-lane batching PR, every batched decode step)
+    /// stops paying n independent weight streams. Bit-identical to
+    /// [`QLinear::gemv`] per row (the `i32` contraction is exact, so
+    /// blocking cannot change it; the descale expression is the same).
+    /// Allocates its own accumulator; hot loops use
+    /// [`QLinear::gemm_into`] instead.
     pub fn gemm(&self, xq: &[i8], sxs: &[f32], out: &mut [f32]) {
         let mut acc = vec![0i32; GEMM_BLOCK.min(sxs.len().max(1)) * self.out_dim];
         self.gemm_into(xq, sxs, &mut acc, out);
@@ -213,35 +285,96 @@ impl QLinear {
     /// (`>= min(n, GEMM_BLOCK) · out_dim`) — the multi-row decode entry:
     /// B stacked activation rows through one pass over the weights with no
     /// heap allocation, so the cross-lane batched decode step stays as
-    /// zero-alloc as the single-lane GEMV path.
+    /// zero-alloc as the single-lane GEMV path. Like [`QLinear::gemv`],
+    /// the output channels are sharded across the worker [`pool`]; each
+    /// shard streams its channel window of the weights for all rows, so
+    /// parallel output is bit-identical to serial at any thread count.
     pub fn gemm_into(&self, xq: &[i8], sxs: &[f32], acc: &mut [i32], out: &mut [f32]) {
+        self.gemm_into_blocked(xq, sxs, acc, out, gemm_block_for(sxs.len()));
+    }
+
+    /// [`QLinear::gemm_into`] at an explicit block size `1..=GEMM_BLOCK`
+    /// (the accumulator must hold `block · out_dim`). Exposed so the block
+    /// tunable can be swept — all block sizes produce bit-identical output
+    /// (exact `i32` accumulation), which the kernel test suite pins.
+    pub fn gemm_into_blocked(
+        &self,
+        xq: &[i8],
+        sxs: &[f32],
+        acc: &mut [i32],
+        out: &mut [f32],
+        block: usize,
+    ) {
         let n = sxs.len();
         let od = self.out_dim;
         obs::add(obs::Counter::GemmCalls, 1);
         obs::add(obs::Counter::I8Macs, (n * self.in_dim * od) as u64);
         debug_assert_eq!(xq.len(), n * self.in_dim);
         debug_assert_eq!(out.len(), n * od);
-        debug_assert!(acc.len() >= GEMM_BLOCK.min(n) * od);
+        assert!((1..=GEMM_BLOCK).contains(&block), "block size {block} out of range");
+        if n == 0 {
+            return;
+        }
+        let block = block.min(n);
+        let acc = &mut acc[..block * od]; // bounds-check before raw windows
+        let kern = simd::active();
+        let shards = pool::shard_count(n * self.in_dim * od, od);
+        let accp = pool::SendPtr(acc.as_mut_ptr());
+        let outp = pool::SendPtr(out.as_mut_ptr());
+        pool::run(shards, &|s| {
+            let (c0, c1) = pool::shard_range(od, shards, s);
+            // SAFETY: shard s owns channels [c0, c1) — its accumulator
+            // window `acc[c0·block, c1·block)` and its per-row output
+            // windows `out[r·od+c0, r·od+c1)` are disjoint across shards,
+            // and the pool joins every shard before `run` returns.
+            let acc = unsafe {
+                std::slice::from_raw_parts_mut(accp.0.add(c0 * block), (c1 - c0) * block)
+            };
+            self.gemm_cols(xq, sxs, kern, block, c0, c1, acc, outp.0);
+        });
+    }
+
+    /// One GEMM shard: output channels `[c0, c1)` of every activation row,
+    /// `block` rows per accumulator pass. `acc` is this shard's private
+    /// `[block · (c1-c0)]` window; `out` is the raw base of the full
+    /// `[n, out_dim]` output (each row's `[c0, c1)` window is written).
+    #[allow(clippy::too_many_arguments)]
+    fn gemm_cols(
+        &self,
+        xq: &[i8],
+        sxs: &[f32],
+        kern: &dyn simd::DotKernel,
+        block: usize,
+        c0: usize,
+        c1: usize,
+        acc: &mut [i32],
+        out: *mut f32,
+    ) {
+        let n = sxs.len();
+        let od = self.out_dim;
+        let w = c1 - c0;
         let mut r = 0;
         while r < n {
-            let b = (n - r).min(GEMM_BLOCK);
-            acc[..b * od].fill(0);
+            let b = (n - r).min(block);
+            let accb = &mut acc[..b * w];
+            accb.fill(0);
             for i in 0..self.in_dim {
-                let row = &self.q[i * od..(i + 1) * od];
-                for (br, accr) in acc.chunks_mut(od).enumerate().take(b) {
+                let row = &self.q[i * od + c0..i * od + c1];
+                for (br, accr) in accb.chunks_mut(w).enumerate() {
                     let a = xq[(r + br) * self.in_dim + i] as i32;
                     if a == 0 {
                         continue;
                     }
-                    for (s, &w) in accr.iter_mut().zip(row) {
-                        *s += a * w as i32;
-                    }
+                    kern.axpy_i8(a, row, accr);
                 }
             }
-            for (br, accr) in acc.chunks(od).enumerate().take(b) {
+            for (br, accr) in accb.chunks(w).enumerate() {
                 let sx = sxs[r + br];
-                let o = &mut out[(r + br) * od..(r + br + 1) * od];
-                for ((y, &s), &sw) in o.iter_mut().zip(accr).zip(&self.scales) {
+                // SAFETY: this shard's disjoint column window of row r+br.
+                let o = unsafe {
+                    std::slice::from_raw_parts_mut(out.add((r + br) * od + c0), w)
+                };
+                for ((y, &s), &sw) in o.iter_mut().zip(accr).zip(&self.scales[c0..c1]) {
                     *y = s as f32 * (sx * sw);
                 }
             }
@@ -353,6 +486,12 @@ pub fn matvec_into(x: &[f32], w: &[f32], out: &mut [f32]) {
 /// `i8` V row. `scale_stride` selects the K/V step layout: `rows` (=
 /// heads) for per-(position, head) dynamic steps, `0` for per-head steps
 /// constant across positions (the static per-layer rule).
+///
+/// The q·k dot runs through the dispatched [`simd`] kernel (exact), but
+/// the call itself never shards internally: the softmax·V accumulation is
+/// **f32 and order-dependent**, so splitting it would change bits.
+/// Attention parallelism lives one level up — the batched forward fans
+/// whole lanes (one `attend_i8` each) across the [`pool`].
 pub fn attend_i8(
     qq: &[i32],
     q_scales: &[f32],
@@ -372,6 +511,7 @@ pub fn attend_i8(
     debug_assert!(k.len() >= len * dim && v.len() >= len * dim);
     obs::add(obs::Counter::AttendI8Calls, 1);
     obs::add(obs::Counter::KvBytesRead, 2 * (len * dim) as u64);
+    let kern = simd::active();
     let dh = dim / heads;
     let inv = 1.0 / (dh as f32).sqrt();
     let scores = &mut scores[..len];
@@ -382,10 +522,9 @@ pub fn attend_i8(
         let sq = q_scales[h];
         for (j, sc) in scores.iter_mut().enumerate() {
             let kh = &k[j * dim + off..j * dim + off + dh];
-            let mut acc = 0i32;
-            for (&a, &b) in qh.iter().zip(kh) {
-                acc += a * b as i32;
-            }
+            // exact i32 q·k (quantized queries fit i16 — the policy caps
+            // query bits at 16 — so the SIMD narrowing is lossless)
+            let acc = kern.dot_q_i8(qh, kh);
             *sc = acc as f32 * (sq * k_scales[j * scale_stride + h]) * inv;
         }
         softmax_inplace(scores);
@@ -638,5 +777,83 @@ mod tests {
         let mut out = [0f32; 2];
         matvec_into(&x, &w, &mut out);
         assert_eq!(out, [1.0 + 10.0, 2.0 + 12.0]);
+    }
+
+    fn random_qlinear(rng: &mut Rng, din: usize, dout: usize, bits: u32) -> QLinear {
+        let w = rng.normal_vec(din * dout, 0.3);
+        let steps: Vec<f32> = (0..dout).map(|_| rng.uniform() * 0.05 + 1e-3).collect();
+        QLinear::pack(&w, dout, &steps, bits)
+    }
+
+    fn random_act_rows(rng: &mut Rng, n: usize, din: usize) -> (Vec<i8>, Vec<f32>) {
+        let mut xq = vec![0i8; n * din];
+        for q in xq.iter_mut() {
+            // include zeros so the zero-skip path is exercised
+            *q = (rng.below(257) as i32 - 128).clamp(-127, 127) as i8;
+        }
+        let sxs: Vec<f32> = (0..n).map(|_| rng.uniform() * 0.1 + 1e-3).collect();
+        (xq, sxs)
+    }
+
+    #[test]
+    fn gemm_all_block_sizes_are_bit_identical() {
+        let mut rng = Rng::new(7);
+        let (din, dout) = (24usize, 20usize);
+        let ql = random_qlinear(&mut rng, din, dout, 8);
+        for n in [1usize, 2, 5, 7, 8, 11] {
+            let (xq, sxs) = random_act_rows(&mut rng, n, din);
+            let mut want = vec![0f32; n * dout];
+            ql.gemm_into_blocked(&xq, &sxs, &mut vec![0i32; dout], &mut want, 1);
+            for block in [2usize, 3, 4, GEMM_BLOCK] {
+                let mut acc = vec![0i32; block * dout];
+                let mut out = vec![0f32; n * dout];
+                ql.gemm_into_blocked(&xq, &sxs, &mut acc, &mut out, block);
+                assert_eq!(want, out, "n={n} block={block}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_block_for_is_bounded_and_deterministic() {
+        for n in 1..=32 {
+            let b = gemm_block_for(n);
+            assert!(b >= 1 && b <= GEMM_BLOCK && b <= n, "n={n} -> {b}");
+            assert!(b.is_power_of_two());
+            assert_eq!(b, gemm_block_for(n), "deterministic in n");
+        }
+        assert_eq!(gemm_block_for(0), 1);
+        assert_eq!(gemm_block_for(usize::MAX), GEMM_BLOCK);
+    }
+
+    #[test]
+    fn sharded_gemv_and_gemm_match_serial_at_any_thread_count() {
+        // the pool is process-global: serialize against its unit tests
+        let _g = pool::test_guard();
+        let mut rng = Rng::new(8);
+        // big enough to clear the pool's per-shard work floor
+        let (din, dout, n) = (96usize, 768usize, 5usize);
+        let ql = random_qlinear(&mut rng, din, dout, 4);
+        let (xq, sxs) = random_act_rows(&mut rng, n, din);
+        // serial reference (library default: pool off)
+        pool::shutdown();
+        let mut acc = vec![0i32; GEMM_BLOCK * dout];
+        let mut gv_want = vec![0f32; dout];
+        ql.gemv(&xq[..din], sxs[0], &mut acc, &mut gv_want);
+        let mut gm_want = vec![0f32; n * dout];
+        ql.gemm_into(&xq, &sxs, &mut acc, &mut gm_want);
+        for threads in [2usize, 4, 7] {
+            pool::configure(threads);
+            assert!(
+                pool::shard_count(n * din * dout, dout) > 1,
+                "test shape must actually fan out at {threads} threads"
+            );
+            let mut gv = vec![0f32; dout];
+            ql.gemv(&xq[..din], sxs[0], &mut acc, &mut gv);
+            assert_eq!(gv_want, gv, "gemv threads={threads}");
+            let mut gm = vec![0f32; n * dout];
+            ql.gemm_into(&xq, &sxs, &mut acc, &mut gm);
+            assert_eq!(gm_want, gm, "gemm threads={threads}");
+        }
+        pool::shutdown();
     }
 }

@@ -1,0 +1,470 @@
+//! `pool` — a persistent worker pool for sharded integer kernels.
+//!
+//! Workers are spawned **once** ([`configure`]) and reused by every kernel
+//! call; the hot path never spawns a thread. A job is a `Fn(usize)` shard
+//! closure: [`run`]`(shards, job)` publishes it, the caller and every
+//! worker claim shard indices from a shared atomic cursor, and `run`
+//! returns only when all shards finished **and every worker is quiescent
+//! again** (the per-worker ack protocol below), so the borrowed closure
+//! never outlives the call.
+//!
+//! ### Determinism
+//! Sharding never changes results: shards own **disjoint** output ranges
+//! (output channels for GEMV/GEMM, lanes for the batched forward) and the
+//! accumulation inside one output channel is exact `i32` arithmetic fully
+//! contained in one shard. Which thread runs a shard is scheduling, not
+//! math — the identity pins (int≡reference, batched≡sequential,
+//! parallel≡scalar) hold bit-exact at any thread count.
+//!
+//! ### Steady-state allocation
+//! Publishing a job is lock + atomics + park/unpark — no allocation — so
+//! the `kernels_zero_alloc` pins hold with the pool active. Spawning and
+//! the one-time warm-up job happen inside [`configure`], outside any
+//! measured window.
+//!
+//! ### Concurrency protocol
+//! One job runs at a time (the global pool mutex is held for the whole
+//! call — concurrent `run`s serialize). Publication: store the erased
+//! closure pointer and shard/cursor state, then bump `generation`
+//! (Release) and unpark. Workers sleep on `generation` (spin-then-park),
+//! and on a new value: read the closure under the job lock, claim shards
+//! until the cursor runs out, then store the generation into their `ack`
+//! slot (Release) and go back to waiting — a worker only ever touches the
+//! cursor **between observing a new generation and acking it**, and the
+//! caller only mutates job state while no `run` is in flight, so a
+//! straggler can never claim into the next job's cursor. The caller claims
+//! shards too, then waits for every ack; acks (Acquire) also publish the
+//! workers' shard writes back to the caller.
+
+use std::cell::Cell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::obs;
+
+/// Minimum i8 MACs (or comparable work units) per shard — below this,
+/// fan-out overhead beats the win and the call stays serial.
+pub const MIN_WORK_PER_SHARD: usize = 16 * 1024;
+
+/// Spins before a worker parks (jobs arrive back-to-back during decode,
+/// so the common wake is a spin hit, not a futex round-trip).
+const SPIN_LIMIT: u32 = 1 << 14;
+
+thread_local! {
+    /// Set while this thread executes pool shards. Nested [`run`] calls
+    /// from inside a shard go serial inline — no re-entry on the pool
+    /// mutex, no deadlock. Const-init so the first check in a zero-alloc
+    /// window doesn't lazily allocate TLS.
+    static IN_POOL_JOB: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Erased shard closure; only dereferenced while the owning [`run`] call
+/// blocks on completion, which keeps the borrow alive.
+struct JobPtr(*const (dyn Fn(usize) + Sync));
+unsafe impl Send for JobPtr {}
+
+struct Shared {
+    /// Bumped once per published job (workers sleep on this).
+    generation: AtomicU64,
+    /// Shard count of the current job.
+    shards: AtomicUsize,
+    /// Next shard index to claim.
+    next: AtomicUsize,
+    /// The current job; `None` between jobs.
+    job: Mutex<Option<JobPtr>>,
+    /// One worker ack slot per worker: the last generation it finished.
+    acks: Vec<AtomicU64>,
+    /// A shard panicked; re-raised on the caller after quiescence.
+    panicked: AtomicBool,
+    /// Workers exit on the next wake.
+    shutdown: AtomicBool,
+}
+
+struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+/// Configured thread count (1 = serial). Read lock-free on the hot path.
+static ACTIVE: AtomicUsize = AtomicUsize::new(1);
+
+/// The pool itself; the mutex doubles as the one-job-at-a-time lock.
+static POOL: Mutex<Option<WorkerPool>> = Mutex::new(None);
+
+fn lock_pool() -> std::sync::MutexGuard<'static, Option<WorkerPool>> {
+    // A panicking job poisons this mutex by design (the panic is re-raised
+    // inside `run`); the state it guards stays consistent, so keep going.
+    POOL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Claim and execute shards of the current job until the cursor runs out.
+fn claim_shards(shared: &Shared, job: *const (dyn Fn(usize) + Sync)) {
+    let total = shared.shards.load(Ordering::Acquire);
+    loop {
+        let i = shared.next.fetch_add(1, Ordering::Relaxed);
+        if i >= total {
+            break;
+        }
+        // Isolate each shard so one panicking shard can't unwind through
+        // a worker (or past the caller while workers still run).
+        if catch_unwind(AssertUnwindSafe(|| unsafe { (*job)(i) })).is_err() {
+            shared.panicked.store(true, Ordering::Release);
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, me: usize) {
+    // Workers only ever run shard bodies — a nested `run` from inside a
+    // shard must go serial on this thread.
+    IN_POOL_JOB.with(|f| f.set(true));
+    let mut seen = 0u64;
+    loop {
+        // Wait for a new generation: spin briefly, then park.
+        let mut spins = 0u32;
+        let gen = loop {
+            let g = shared.generation.load(Ordering::Acquire);
+            if g != seen {
+                break g;
+            }
+            if shared.shutdown.load(Ordering::Acquire) {
+                return;
+            }
+            if spins < SPIN_LIMIT {
+                spins += 1;
+                std::hint::spin_loop();
+            } else {
+                std::thread::park();
+            }
+        };
+        seen = gen;
+        if shared.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        let job = shared
+            .job
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .as_ref()
+            .map(|p| p.0);
+        if let Some(job) = job {
+            claim_shards(&shared, job);
+        }
+        // Ack even when the job was already gone: the caller waits for
+        // every worker to reach this line before reusing the cursor.
+        shared.acks[me].store(gen, Ordering::Release);
+    }
+}
+
+impl WorkerPool {
+    fn spawn(workers: usize) -> WorkerPool {
+        let shared = Arc::new(Shared {
+            generation: AtomicU64::new(0),
+            shards: AtomicUsize::new(0),
+            next: AtomicUsize::new(0),
+            job: Mutex::new(None),
+            acks: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+            panicked: AtomicBool::new(false),
+            shutdown: AtomicBool::new(false),
+        });
+        let handles = (0..workers)
+            .map(|me| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("silq-pool-{me}"))
+                    .spawn(move || worker_loop(shared, me))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool { shared, handles }
+    }
+
+    /// Publish `job`, participate, and block until all shards ran and
+    /// every worker acked. Caller must hold the `POOL` lock.
+    fn run(&self, shards: usize, job: &(dyn Fn(usize) + Sync)) {
+        let s = &*self.shared;
+        // Erase the borrow: the pointer is only dereferenced before the
+        // ack wait below completes, while `job` is still live.
+        let ptr: *const (dyn Fn(usize) + Sync) = job;
+        *s.job.lock().unwrap_or_else(|e| e.into_inner()) = Some(JobPtr(ptr));
+        s.shards.store(shards, Ordering::Relaxed);
+        s.next.store(0, Ordering::Relaxed);
+        let gen = s.generation.load(Ordering::Relaxed) + 1;
+        s.generation.store(gen, Ordering::Release);
+        for h in &self.handles {
+            h.thread().unpark();
+        }
+        // The caller is a full participant.
+        IN_POOL_JOB.with(|f| f.set(true));
+        claim_shards(s, ptr);
+        IN_POOL_JOB.with(|f| f.set(false));
+        // Quiescence barrier: every worker back in its wait loop. Workers
+        // that raced past the claim cursor still ack, and all shard writes
+        // are published by these Acquire loads.
+        for ack in &s.acks {
+            let mut spins = 0u32;
+            while ack.load(Ordering::Acquire) != gen {
+                spins += 1;
+                if spins < SPIN_LIMIT {
+                    std::hint::spin_loop();
+                } else {
+                    std::thread::yield_now();
+                }
+            }
+        }
+        *s.job.lock().unwrap_or_else(|e| e.into_inner()) = None;
+        if s.panicked.swap(false, Ordering::AcqRel) {
+            panic!("worker pool: a kernel shard panicked");
+        }
+    }
+
+    fn shutdown_and_join(self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        // Bump generation so spinning workers notice without a park wake.
+        self.shared.generation.fetch_add(1, Ordering::Release);
+        for h in &self.handles {
+            h.thread().unpark();
+        }
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Set the execution width: `threads` total participants (the caller
+/// counts as one, so `threads - 1` workers are kept). `1` (the library
+/// default) is pure serial — no pool, no atomics beyond one load per
+/// kernel call. Re-configuring with the same count is a no-op; changing
+/// it joins the old workers and spawns fresh ones, then runs a warm-up
+/// job so lazy thread state is faulted in before any measured
+/// (zero-alloc) window.
+pub fn configure(threads: usize) {
+    let threads = threads.max(1);
+    let mut guard = lock_pool();
+    let current = ACTIVE.load(Ordering::Relaxed);
+    if current == threads {
+        return;
+    }
+    if let Some(pool) = guard.take() {
+        pool.shutdown_and_join();
+    }
+    if threads > 1 {
+        let pool = WorkerPool::spawn(threads - 1);
+        pool.run(threads * 2, &|_shard| {});
+        *guard = Some(pool);
+    }
+    ACTIVE.store(threads, Ordering::Relaxed);
+}
+
+/// Join all workers and return to serial execution ([`configure`]`(1)`).
+pub fn shutdown() {
+    configure(1);
+}
+
+/// Configured execution width (1 = serial).
+pub fn active_threads() -> usize {
+    ACTIVE.load(Ordering::Relaxed)
+}
+
+/// Live worker threads (0 when serial — `active_threads() - 1` otherwise).
+pub fn worker_count() -> usize {
+    lock_pool().as_ref().map_or(0, |p| p.handles.len())
+}
+
+/// `SILQ_THREADS` from the environment, if set to a positive integer.
+pub fn env_threads() -> Option<usize> {
+    std::env::var("SILQ_THREADS")
+        .ok()?
+        .trim()
+        .parse::<usize>()
+        .ok()
+        .filter(|&n| n >= 1)
+}
+
+/// How many shards to cut `units` independent output units (channels,
+/// lanes) into, given `work` total MACs: never more than the configured
+/// threads, never more than the units, and never so many that a shard
+/// falls under [`MIN_WORK_PER_SHARD`].
+pub fn shard_count(work: usize, units: usize) -> usize {
+    let t = active_threads();
+    if t <= 1 || units <= 1 {
+        return 1;
+    }
+    t.min(work / MIN_WORK_PER_SHARD).min(units).max(1)
+}
+
+/// Shard `s` of `shards` over `[0, n)`: the half-open range
+/// `[s·n/shards, (s+1)·n/shards)` — contiguous, disjoint, exhaustive, and
+/// a pure function of `(n, shards, s)` so partitioning is deterministic.
+pub fn shard_range(n: usize, shards: usize, s: usize) -> (usize, usize) {
+    (n * s / shards, n * (s + 1) / shards)
+}
+
+/// Run `job(0..shards)` across the pool. Serial inline when the pool is
+/// off, the job is single-shard, or we're already inside a shard (nested
+/// calls must not re-enter the pool lock). Counts one `pool_jobs` /
+/// `shards` `pool_shards` per actually-fanned-out job and wraps it in a
+/// `pool_job` span.
+pub fn run(shards: usize, job: &(dyn Fn(usize) + Sync)) {
+    if shards <= 1 || active_threads() <= 1 || IN_POOL_JOB.with(|f| f.get()) {
+        for i in 0..shards {
+            job(i);
+        }
+        return;
+    }
+    let guard = lock_pool();
+    let Some(pool) = guard.as_ref() else {
+        // configured serial between our fast-path check and the lock
+        drop(guard);
+        for i in 0..shards {
+            job(i);
+        }
+        return;
+    };
+    obs::add(obs::Counter::PoolJobs, 1);
+    obs::add(obs::Counter::PoolShards, shards as u64);
+    let _span = obs::span("pool_job", "kernels", 0, shards as u64);
+    pool.run(shards, job);
+}
+
+/// A raw pointer that crosses the shard boundary. Safety contract: every
+/// shard derives **disjoint** slices from it (disjointness comes from
+/// [`shard_range`]), and the pool's ack barrier keeps all derived
+/// references inside the `run` call's lifetime.
+pub(crate) struct SendPtr<T>(pub *mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// Serializes in-crate tests that reconfigure the global pool (the
+/// configuration is process-wide; results are bit-identical at any width,
+/// but tests asserting on `active_threads`/`shard_count` need a stable
+/// configuration while they run).
+#[cfg(test)]
+pub(crate) fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Restore the library-default serial configuration on drop so these
+    /// global-state tests don't leak a pool into sibling tests (kernels
+    /// stay bit-identical either way; this is about tidiness, not
+    /// correctness).
+    struct SerialAfter;
+    impl Drop for SerialAfter {
+        fn drop(&mut self) {
+            shutdown();
+        }
+    }
+
+    #[test]
+    fn sharded_fill_covers_every_index_once_at_any_width() {
+        let _g = test_guard();
+        let _restore = SerialAfter;
+        for threads in [1usize, 2, 4, 7] {
+            configure(threads);
+            let n = 1013; // prime: ragged shard boundaries
+            let mut hits = vec![0u32; n];
+            let shards = threads.min(n);
+            let p = SendPtr(hits.as_mut_ptr());
+            run(shards, &|s| {
+                let (lo, hi) = shard_range(n, shards, s);
+                let mine =
+                    unsafe { std::slice::from_raw_parts_mut(p.0.add(lo), hi - lo) };
+                for (k, h) in mine.iter_mut().enumerate() {
+                    *h += (lo + k) as u32 + 1;
+                }
+            });
+            for (i, &h) in hits.iter().enumerate() {
+                assert_eq!(h, i as u32 + 1, "threads={threads} index {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn shard_range_partitions_exactly() {
+        for n in [0usize, 1, 5, 64, 1013] {
+            for shards in [1usize, 2, 3, 7, 16] {
+                let mut prev = 0;
+                for s in 0..shards {
+                    let (lo, hi) = shard_range(n, shards, s);
+                    assert_eq!(lo, prev);
+                    assert!(hi >= lo);
+                    prev = hi;
+                }
+                assert_eq!(prev, n);
+            }
+        }
+    }
+
+    #[test]
+    fn nested_run_goes_serial_inline() {
+        let _g = test_guard();
+        let _restore = SerialAfter;
+        configure(4);
+        let flags: Vec<AtomicUsize> = (0..4).map(|_| AtomicUsize::new(0)).collect();
+        run(4, &|s| {
+            // a kernel called from inside a shard fans out serially
+            run(2, &|_inner| {
+                flags[s].fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        for f in &flags {
+            assert_eq!(f.load(Ordering::Relaxed), 2);
+        }
+    }
+
+    #[test]
+    fn panicking_shard_panics_caller_and_pool_survives() {
+        let _g = test_guard();
+        let _restore = SerialAfter;
+        configure(4);
+        let r = std::panic::catch_unwind(|| {
+            run(4, &|s| {
+                if s == 2 {
+                    panic!("boom");
+                }
+            });
+        });
+        assert!(r.is_err(), "shard panic must reach the caller");
+        // the pool still works after a panicked job
+        let total = AtomicUsize::new(0);
+        run(8, &|_s| {
+            total.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn configure_and_shutdown_manage_workers() {
+        let _g = test_guard();
+        let _restore = SerialAfter;
+        configure(4);
+        assert_eq!(active_threads(), 4);
+        assert_eq!(worker_count(), 3);
+        configure(4); // no-op
+        assert_eq!(worker_count(), 3);
+        shutdown();
+        assert_eq!(active_threads(), 1);
+        assert_eq!(worker_count(), 0);
+    }
+
+    #[test]
+    fn shard_count_respects_floor_and_units() {
+        let _g = test_guard();
+        let _restore = SerialAfter;
+        configure(4);
+        // tiny work stays serial
+        assert_eq!(shard_count(100, 64), 1);
+        // plentiful work uses every thread
+        assert_eq!(shard_count(MIN_WORK_PER_SHARD * 64, 64), 4);
+        // never more shards than independent units
+        assert_eq!(shard_count(MIN_WORK_PER_SHARD * 64, 2), 2);
+        shutdown();
+        assert_eq!(shard_count(MIN_WORK_PER_SHARD * 64, 64), 1);
+    }
+}

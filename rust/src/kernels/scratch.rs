@@ -13,8 +13,11 @@
 //! [`BatchScratch`] is the cross-lane twin: the same buffers widened to
 //! `rows` stacked lanes, feeding `HostModel::forward_tokens_batch` (one
 //! fused GEMM per weight matrix across every live serve lane). Attention
-//! stays per lane, so the score and f32-fallback dequant buffers keep a
-//! single lane's shape and are reused lane by lane.
+//! stays per lane, but each lane owns its **own** score row (`scores` is
+//! `[rows · seq_len]`) so the integer attention phase can fan whole lanes
+//! across the worker pool; only the f32-fallback dequant buffers keep a
+//! single lane's shape (that path runs sequentially — its accumulation
+//! order must match the per-lane reference exactly).
 
 use crate::hostmodel::HostCfg;
 use crate::kernels::GEMM_BLOCK;
@@ -110,8 +113,10 @@ impl DecodeScratch {
 /// Pre-sized buffers for one **cross-lane batched** decode step: up to
 /// `rows` lanes advance together, each intermediate stacked row-major
 /// `[rows, dim]`. The linear layers run one fused GEMM per matrix over
-/// the stack; attention runs per lane (each lane owns its own KV slab),
-/// reusing the single-lane `scores`/`kc`/`vc` buffers.
+/// the stack; attention runs per lane (each lane owns its own KV slab)
+/// with a private score row per lane so lanes can run in parallel; only
+/// the f32-fallback `kc`/`vc` dequant buffers are single-lane (that path
+/// stays sequential).
 pub struct BatchScratch {
     /// lanes this scratch was sized for
     pub rows: usize,
@@ -143,7 +148,8 @@ pub struct BatchScratch {
     pub qs: Vec<f32>,
     /// blocked-GEMM accumulator `[GEMM_BLOCK * max(d_model, d_ff, vocab)]`
     pub acc: Vec<i32>,
-    /// attention scores `[seq_len]` (per lane, reused)
+    /// attention scores `[rows * seq_len]` — one private row per lane so
+    /// the attention phase can shard by lane
     pub scores: Vec<f32>,
     /// f32 K dequant buffer `[seq_len · d_model]` (fallback path, per lane)
     pub kc: Vec<f32>,
@@ -176,7 +182,7 @@ impl BatchScratch {
             qq: vec![0; rows * d],
             qs: vec![0.0; rows * cfg.n_heads.max(1)],
             acc: vec![0; GEMM_BLOCK * wide.max(v)],
-            scores: vec![0.0; cfg.seq_len],
+            scores: vec![0.0; rows * cfg.seq_len],
             kc: vec![0.0; cfg.seq_len * d],
             vc: vec![0.0; cfg.seq_len * d],
             logits: vec![0.0; rows * v],
@@ -195,7 +201,7 @@ impl BatchScratch {
                 && self.xq.len() >= b * d.max(f)
                 && self.acc.len() >= GEMM_BLOCK * d.max(f).max(v)
                 && self.qs.len() >= b * cfg.n_heads
-                && self.scores.len() >= cfg.seq_len
+                && self.scores.len() >= b * cfg.seq_len
                 && self.kc.len() >= cfg.seq_len * d
                 && self.logits.len() >= b * v,
             "BatchScratch was sized for a different model or fewer lanes"
@@ -235,6 +241,7 @@ mod tests {
         s.check(&cfg, 1);
         assert_eq!(s.logits.len(), 4 * cfg.vocab);
         assert_eq!(s.sx.len(), 4);
+        assert_eq!(s.scores.len(), 4 * cfg.seq_len, "one score row per lane");
         assert!(s.acc.len() >= GEMM_BLOCK * cfg.vocab);
     }
 

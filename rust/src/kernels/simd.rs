@@ -1,0 +1,375 @@
+//! `simd` — runtime-dispatched SIMD i8 dot-product micro-kernels.
+//!
+//! The integer GEMV/GEMM inner loop is an `i8×i8→i32` multiply-accumulate
+//! over contiguous output channels, and the int8 attention score loop is
+//! an `i32(≤i16)×i8→i32` dot over one head's K row. Both are exact integer
+//! arithmetic, so a vectorized implementation that widens every product to
+//! `i32` before adding produces **bit-identical** accumulators to the
+//! scalar loop — integer addition is associative, unlike the f32 math this
+//! module never touches.
+//!
+//! Dispatch is a process-global kernel choice ([`set_kernel`], `--kernel
+//! scalar|simd` on the CLI): hot kernels load the active implementation
+//! once per call ([`active`], one relaxed atomic load) and run every inner
+//! loop through it. The SIMD implementation is selected per target at
+//! compile time — SSE2 on `x86_64` and NEON on `aarch64` are baseline
+//! target features, so no CPUID probing is needed — and falls back to the
+//! scalar loops on other architectures.
+//!
+//! Exactness arguments, per micro-kernel:
+//! * [`DotKernel::axpy_i8`]: `|a·w| ≤ 127·127 < 2^15`, so the 16-bit lane
+//!   products (`_mm_mullo_epi16` / `vmull_s16`) never wrap; they are then
+//!   sign-extended to `i32` and added — the same additions the scalar loop
+//!   performs, in a different order, on exact integers.
+//! * [`DotKernel::dot_q_i8`]: callers quantize the query to at most 16
+//!   bits (the policy grammar caps `q<bits>` at 16), so narrowing the
+//!   `i32` query lanes to `i16` (`_mm_packs_epi32` / `vmovn_s32`) is
+//!   lossless and the widening multiply-accumulate is exact.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use anyhow::{bail, Result};
+
+/// A dot-product implementation the integer kernels dispatch through.
+/// Every implementation must produce **bit-identical** results to
+/// [`ScalarKernel`] — the contractions are exact `i32` arithmetic, so this
+/// is an implementable contract, and `prop_parallel_gemm_matches_scalar`
+/// pins it.
+pub trait DotKernel: Sync {
+    /// Stable name for reports and bench JSON (`scalar`, `simd-sse2`, ...).
+    fn name(&self) -> &'static str;
+
+    /// `acc[j] += a · row[j]` over one contiguous output-channel window.
+    /// `a` is an `i8`-range activation (the caller already skipped zeros).
+    fn axpy_i8(&self, a: i32, row: &[i8], acc: &mut [i32]);
+
+    /// `Σ_j q[j] · k[j]` in exact `i32` — the attention score contraction.
+    /// Contract: every `q[j]` fits an `i16` (query bits are capped at 16
+    /// by the policy grammar), so 16-bit lane narrowing is lossless.
+    fn dot_q_i8(&self, q: &[i32], k: &[i8]) -> i32;
+}
+
+/// The reference scalar loops — exactly the pre-SIMD kernel inner loops.
+pub struct ScalarKernel;
+
+impl DotKernel for ScalarKernel {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    #[inline]
+    fn axpy_i8(&self, a: i32, row: &[i8], acc: &mut [i32]) {
+        debug_assert_eq!(row.len(), acc.len());
+        for (s, &w) in acc.iter_mut().zip(row) {
+            *s += a * w as i32;
+        }
+    }
+
+    #[inline]
+    fn dot_q_i8(&self, q: &[i32], k: &[i8]) -> i32 {
+        debug_assert_eq!(q.len(), k.len());
+        q.iter().zip(k).map(|(&a, &b)| a * b as i32).sum()
+    }
+}
+
+/// The vectorized implementation for this target (SSE2 on `x86_64`, NEON
+/// on `aarch64`, scalar elsewhere).
+pub struct SimdKernel;
+
+impl DotKernel for SimdKernel {
+    fn name(&self) -> &'static str {
+        if cfg!(target_arch = "x86_64") {
+            "simd-sse2"
+        } else if cfg!(target_arch = "aarch64") {
+            "simd-neon"
+        } else {
+            "scalar"
+        }
+    }
+
+    #[inline]
+    fn axpy_i8(&self, a: i32, row: &[i8], acc: &mut [i32]) {
+        debug_assert_eq!(row.len(), acc.len());
+        arch::axpy_i8(a, row, acc);
+    }
+
+    #[inline]
+    fn dot_q_i8(&self, q: &[i32], k: &[i8]) -> i32 {
+        debug_assert_eq!(q.len(), k.len());
+        debug_assert!(
+            q.iter().all(|&x| (i16::MIN as i32..=i16::MAX as i32).contains(&x)),
+            "dot_q_i8 contract: query values must fit i16 (query bits <= 16)"
+        );
+        arch::dot_q_i8(q, k)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// dispatch
+// ---------------------------------------------------------------------------
+
+static SCALAR: ScalarKernel = ScalarKernel;
+static SIMD: SimdKernel = SimdKernel;
+
+/// Active kernel index; SIMD (index 1) is the default — it is bit-exact
+/// with scalar, so there is no correctness reason to opt in.
+static ACTIVE: AtomicUsize = AtomicUsize::new(1);
+
+/// A user-selectable kernel family (`--kernel scalar|simd`).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum KernelChoice {
+    /// the reference scalar loops
+    Scalar,
+    /// the vectorized loops for this target (scalar fallback elsewhere)
+    Simd,
+}
+
+impl KernelChoice {
+    /// Parse a `--kernel` value, naming the accepted set on failure.
+    pub fn parse(s: &str) -> Result<KernelChoice> {
+        match s {
+            "scalar" => Ok(KernelChoice::Scalar),
+            "simd" => Ok(KernelChoice::Simd),
+            other => bail!("unknown kernel {other:?} (scalar|simd)"),
+        }
+    }
+}
+
+/// Select the process-global dot kernel (normally once, at startup /
+/// model build; safe at any time — every choice is bit-identical).
+pub fn set_kernel(c: KernelChoice) {
+    ACTIVE.store(
+        match c {
+            KernelChoice::Scalar => 0,
+            KernelChoice::Simd => 1,
+        },
+        Ordering::Relaxed,
+    );
+}
+
+/// The active kernel — hot paths load this once per kernel call (one
+/// relaxed atomic load) and run every inner loop through it.
+#[inline]
+pub fn active() -> &'static dyn DotKernel {
+    match ACTIVE.load(Ordering::Relaxed) {
+        0 => &SCALAR,
+        _ => &SIMD,
+    }
+}
+
+/// Name of the dispatched implementation (bench JSON, serve banner).
+pub fn active_name() -> &'static str {
+    active().name()
+}
+
+// ---------------------------------------------------------------------------
+// x86_64: SSE2 (baseline — no runtime detection needed)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod arch {
+    use std::arch::x86_64::*;
+
+    #[inline]
+    pub fn axpy_i8(a: i32, row: &[i8], acc: &mut [i32]) {
+        // SAFETY: SSE2 is a baseline x86_64 target feature; all loads and
+        // stores below stay inside `row`/`acc` bounds.
+        unsafe {
+            let n = row.len();
+            let va = _mm_set1_epi16(a as i16);
+            let zero = _mm_setzero_si128();
+            let mut j = 0;
+            while j + 16 <= n {
+                let w = _mm_loadu_si128(row.as_ptr().add(j) as *const __m128i);
+                // sign-extend 16×i8 → 2×8×i16 (SSE2 has no cvtepi8)
+                let neg = _mm_cmpgt_epi8(zero, w);
+                let w_lo = _mm_unpacklo_epi8(w, neg);
+                let w_hi = _mm_unpackhi_epi8(w, neg);
+                // |a·w| ≤ 127·127 < 2^15 — the 16-bit products are exact
+                let p_lo = _mm_mullo_epi16(w_lo, va);
+                let p_hi = _mm_mullo_epi16(w_hi, va);
+                for (off, p) in [(0usize, p_lo), (8usize, p_hi)] {
+                    // sign-extend i16 → i32: interleave-with-self then
+                    // arithmetic-shift the 32-bit lanes right by 16
+                    let e_lo = _mm_srai_epi32(_mm_unpacklo_epi16(p, p), 16);
+                    let e_hi = _mm_srai_epi32(_mm_unpackhi_epi16(p, p), 16);
+                    let a0 = acc.as_mut_ptr().add(j + off) as *mut __m128i;
+                    _mm_storeu_si128(a0, _mm_add_epi32(_mm_loadu_si128(a0), e_lo));
+                    let a1 = acc.as_mut_ptr().add(j + off + 4) as *mut __m128i;
+                    _mm_storeu_si128(a1, _mm_add_epi32(_mm_loadu_si128(a1), e_hi));
+                }
+                j += 16;
+            }
+            for jj in j..n {
+                *acc.get_unchecked_mut(jj) += a * *row.get_unchecked(jj) as i32;
+            }
+        }
+    }
+
+    #[inline]
+    pub fn dot_q_i8(q: &[i32], k: &[i8]) -> i32 {
+        // SAFETY: SSE2 baseline; loads stay inside `q`/`k` bounds. The
+        // caller guarantees every q value fits i16, so the saturating
+        // `_mm_packs_epi32` narrowing is exact.
+        unsafe {
+            let n = q.len();
+            let zero = _mm_setzero_si128();
+            let mut accv = zero;
+            let mut j = 0;
+            while j + 8 <= n {
+                let q0 = _mm_loadu_si128(q.as_ptr().add(j) as *const __m128i);
+                let q1 = _mm_loadu_si128(q.as_ptr().add(j + 4) as *const __m128i);
+                let qv = _mm_packs_epi32(q0, q1);
+                let kb = _mm_loadl_epi64(k.as_ptr().add(j) as *const __m128i);
+                let kv = _mm_unpacklo_epi8(kb, _mm_cmpgt_epi8(zero, kb));
+                // madd: exact i16×i16 products, adjacent pairs summed in i32
+                accv = _mm_add_epi32(accv, _mm_madd_epi16(qv, kv));
+                j += 8;
+            }
+            let mut lanes = [0i32; 4];
+            _mm_storeu_si128(lanes.as_mut_ptr() as *mut __m128i, accv);
+            let mut acc = lanes[0] + lanes[1] + lanes[2] + lanes[3];
+            for jj in j..n {
+                acc += *q.get_unchecked(jj) * *k.get_unchecked(jj) as i32;
+            }
+            acc
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// aarch64: NEON (baseline — no runtime detection needed)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod arch {
+    use std::arch::aarch64::*;
+
+    #[inline]
+    pub fn axpy_i8(a: i32, row: &[i8], acc: &mut [i32]) {
+        // SAFETY: NEON is a baseline aarch64 target feature; all loads and
+        // stores below stay inside `row`/`acc` bounds.
+        unsafe {
+            let n = row.len();
+            let va = vdup_n_s16(a as i16);
+            let mut j = 0;
+            while j + 8 <= n {
+                let w16 = vmovl_s8(vld1_s8(row.as_ptr().add(j)));
+                // widening multiply: exact i32 products of i16 lanes
+                let p_lo = vmull_s16(vget_low_s16(w16), va);
+                let p_hi = vmull_s16(vget_high_s16(w16), va);
+                let a0 = vld1q_s32(acc.as_ptr().add(j));
+                vst1q_s32(acc.as_mut_ptr().add(j), vaddq_s32(a0, p_lo));
+                let a1 = vld1q_s32(acc.as_ptr().add(j + 4));
+                vst1q_s32(acc.as_mut_ptr().add(j + 4), vaddq_s32(a1, p_hi));
+                j += 8;
+            }
+            for jj in j..n {
+                *acc.get_unchecked_mut(jj) += a * *row.get_unchecked(jj) as i32;
+            }
+        }
+    }
+
+    #[inline]
+    pub fn dot_q_i8(q: &[i32], k: &[i8]) -> i32 {
+        // SAFETY: NEON baseline; loads stay inside `q`/`k` bounds. The
+        // caller guarantees every q value fits i16, so the truncating
+        // `vmovn_s32` narrowing is exact.
+        unsafe {
+            let n = q.len();
+            let mut accv = vdupq_n_s32(0);
+            let mut j = 0;
+            while j + 8 <= n {
+                let q0 = vmovn_s32(vld1q_s32(q.as_ptr().add(j)));
+                let q1 = vmovn_s32(vld1q_s32(q.as_ptr().add(j + 4)));
+                let qv = vcombine_s16(q0, q1);
+                let k16 = vmovl_s8(vld1_s8(k.as_ptr().add(j)));
+                accv = vmlal_s16(accv, vget_low_s16(qv), vget_low_s16(k16));
+                accv = vmlal_s16(accv, vget_high_s16(qv), vget_high_s16(k16));
+                j += 8;
+            }
+            let mut acc = vaddvq_s32(accv);
+            for jj in j..n {
+                acc += *q.get_unchecked(jj) * *k.get_unchecked(jj) as i32;
+            }
+            acc
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// other targets: the scalar loops under the simd name
+// ---------------------------------------------------------------------------
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod arch {
+    #[inline]
+    pub fn axpy_i8(a: i32, row: &[i8], acc: &mut [i32]) {
+        for (s, &w) in acc.iter_mut().zip(row) {
+            *s += a * w as i32;
+        }
+    }
+
+    #[inline]
+    pub fn dot_q_i8(q: &[i32], k: &[i8]) -> i32 {
+        q.iter().zip(k).map(|(&a, &b)| a * b as i32).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn simd_axpy_is_bit_identical_to_scalar() {
+        let mut rng = Rng::new(91);
+        // lengths straddling every vector-width remainder, plus extremes
+        for n in [0usize, 1, 3, 7, 8, 15, 16, 17, 31, 33, 64, 100] {
+            for &a in &[1i32, -1, 127, -128, 7, -23] {
+                let row: Vec<i8> =
+                    (0..n).map(|_| (rng.below(256) as i32 - 128) as i8).collect();
+                let mut acc_s: Vec<i32> =
+                    (0..n).map(|_| rng.below(1 << 20) as i32 - (1 << 19)).collect();
+                let mut acc_v = acc_s.clone();
+                ScalarKernel.axpy_i8(a, &row, &mut acc_s);
+                SimdKernel.axpy_i8(a, &row, &mut acc_v);
+                assert_eq!(acc_s, acc_v, "n={n} a={a}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_dot_is_bit_identical_to_scalar() {
+        let mut rng = Rng::new(92);
+        for n in [0usize, 1, 5, 8, 9, 16, 24, 31, 40] {
+            let q: Vec<i32> = (0..n)
+                .map(|i| match i % 5 {
+                    // exercise the full i16 envelope the narrowing must keep
+                    0 => i16::MAX as i32,
+                    1 => i16::MIN as i32,
+                    _ => rng.below(1 << 16) as i32 - (1 << 15),
+                })
+                .collect();
+            let k: Vec<i8> = (0..n).map(|_| (rng.below(256) as i32 - 128) as i8).collect();
+            assert_eq!(
+                ScalarKernel.dot_q_i8(&q, &k),
+                SimdKernel.dot_q_i8(&q, &k),
+                "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn kernel_choice_parses_and_dispatches() {
+        assert_eq!(KernelChoice::parse("scalar").unwrap(), KernelChoice::Scalar);
+        assert_eq!(KernelChoice::parse("simd").unwrap(), KernelChoice::Simd);
+        assert!(KernelChoice::parse("avx512").is_err());
+        // selection is process-global; restore the default afterwards so
+        // sibling tests see the shipped configuration
+        set_kernel(KernelChoice::Scalar);
+        assert_eq!(active_name(), "scalar");
+        set_kernel(KernelChoice::Simd);
+        assert_eq!(active_name(), SimdKernel.name());
+    }
+}

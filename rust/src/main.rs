@@ -24,6 +24,8 @@ use silq::data::{vocab, DataMix, SftStyle, Vocab, World};
 use silq::evalharness::Evaluator;
 use silq::forward::HostForward;
 use silq::hostmodel::{self, CacheStore, HostCfg};
+use silq::kernels::pool;
+use silq::kernels::simd;
 use silq::metrics::{RunLog, Table};
 use silq::model::ParamStore;
 use silq::obs;
@@ -204,6 +206,11 @@ fn main() -> Result<()> {
                  \x20      graphs, so it takes manifest precision names only)\n\
                  serve: --requests N --batch B --max_new M --queue_cap C --producers P\n\
                  \x20      --cache int8|f32 (host backend)\n\
+                 exec:  --threads N (eval/qat/serve; kernel worker-pool width —\n\
+                 \x20      default $SILQ_THREADS, else all cores; 1 = serial) and\n\
+                 \x20      --kernel scalar|simd (dot micro-kernel dispatch; default\n\
+                 \x20      simd). Both are bit-exact: thread count and kernel choice\n\
+                 \x20      never change any result, only throughput\n\
                  obs:   --trace out.trace.json (Chrome trace_event JSON — load in\n\
                  \x20      ui.perfetto.dev; serve + eval) and, serve only,\n\
                  \x20      --metrics-out metrics.json (per-step time series; see\n\
@@ -252,6 +259,7 @@ fn main() -> Result<()> {
             Ok(())
         }
         "qat" => {
+            configure_execution(&args)?;
             let eng = Engine::new(&art_dir)?;
             let p = Pipeline::new(&eng, args.pipeline_cfg()?)?;
             let mut log = RunLog::new("runs/qat");
@@ -278,6 +286,7 @@ fn main() -> Result<()> {
             Ok(())
         }
         "eval" => {
+            configure_execution(&args)?;
             // the host backend is fully artifact-free: no engine, no
             // PJRT — built-in config mirrors describe the model. Explicit
             // --backend host selects it; so does a --prec the built
@@ -335,6 +344,25 @@ fn main() -> Result<()> {
         }
         other => bail!("unknown command {other}; try `silq help`"),
     }
+}
+
+/// Apply the execution-layer flags shared by eval/qat/serve: `--threads`
+/// (default: `SILQ_THREADS`, else every available core) sizes the
+/// persistent kernel worker pool, `--kernel scalar|simd` picks the dot
+/// micro-kernel. Every setting is bit-exact — results never depend on
+/// either choice — so this only moves throughput.
+fn configure_execution(args: &Args) -> Result<()> {
+    let threads = match args.get("threads") {
+        Some(_) => args.get_num::<usize>("threads", "1")?.max(1),
+        None => pool::env_threads().unwrap_or_else(|| {
+            std::thread::available_parallelism().map_or(1, |n| n.get())
+        }),
+    };
+    pool::configure(threads);
+    if let Some(k) = args.get("kernel") {
+        simd::set_kernel(simd::KernelChoice::parse(k)?);
+    }
+    Ok(())
 }
 
 /// `silq prec list` / `silq prec <spec>`: the policy inspector — prints
@@ -417,7 +445,12 @@ fn host_eval_cmd(args: &Args, art_dir: &str) -> Result<()> {
     let eval_t = Timer::start();
     let r = ev.eval_all(&world, world_seed ^ silq::evalharness::EVAL_SEED_SALT)?;
     let eval_secs = eval_t.secs();
-    println!("backend=host model={model} prec={prec} policy={} (artifact-free)", hc.policy);
+    println!(
+        "backend=host model={model} prec={prec} policy={} threads={} kernel={} (artifact-free)",
+        hc.policy,
+        pool::active_threads(),
+        simd::active_name()
+    );
     println!("{}", r.summary());
     for (name, suite, acc) in &r.per_task {
         println!("  {:<16} {:8} {:.2}", name, suite.label(), 100.0 * acc);
@@ -443,6 +476,7 @@ fn host_eval_cmd(args: &Args, art_dir: &str) -> Result<()> {
 /// used when the manifest knows `--prec`, and the artifact-free host
 /// backend otherwise (inline specs, bare checkouts).
 fn serve_cmd(args: &Args, art_dir: &str) -> Result<()> {
+    configure_execution(args)?;
     let model = args.get("model").unwrap_or("tiny").to_string();
     let prec = args.get("prec").unwrap_or("a8d-c8-w4").to_string();
     let n_requests: usize = args.get_num("requests", "64")?;
@@ -498,7 +532,10 @@ fn serve_cmd(args: &Args, art_dir: &str) -> Result<()> {
 
     println!(
         "serving {n_requests} requests: backend={backend_kind} prec={prec} policy={policy} \
-         batch={batch} max_new={max_new} queue_cap={queue_cap} producers={producers}"
+         batch={batch} max_new={max_new} queue_cap={queue_cap} producers={producers} \
+         threads={} kernel={}",
+        pool::active_threads(),
+        simd::active_name()
     );
 
     let queue = Arc::new(AdmissionQueue::new(queue_cap));

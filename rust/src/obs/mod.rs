@@ -79,10 +79,16 @@ pub enum Counter {
     KvBytesRead,
     /// QAT/PTQ optimizer steps executed
     QatSteps,
+    /// kernel jobs actually fanned out across the worker pool (serial
+    /// fast-path calls are not jobs)
+    PoolJobs,
+    /// shards claimed across all pool jobs (`pool_shards / pool_jobs` =
+    /// mean fan-out width)
+    PoolShards,
 }
 
 /// Number of registered counters (the registry array size).
-pub const N_COUNTERS: usize = 19;
+pub const N_COUNTERS: usize = 21;
 
 impl Counter {
     /// Every counter, in declaration order — drives [`snapshot`].
@@ -106,6 +112,8 @@ impl Counter {
         Counter::I8Macs,
         Counter::KvBytesRead,
         Counter::QatSteps,
+        Counter::PoolJobs,
+        Counter::PoolShards,
     ];
 
     /// Stable snake_case name (report keys, JSON fields).
@@ -130,6 +138,8 @@ impl Counter {
             Counter::I8Macs => "i8_macs",
             Counter::KvBytesRead => "kv_bytes_read",
             Counter::QatSteps => "qat_steps",
+            Counter::PoolJobs => "pool_jobs",
+            Counter::PoolShards => "pool_shards",
         }
     }
 }

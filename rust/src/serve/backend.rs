@@ -102,7 +102,11 @@ impl DecodeBackend for ArtifactBackend {
 
 /// Incremental greedy decoder over a `ParamStore` (a [`HostForward`] in
 /// lane clothing): scheduler lanes map one-to-one onto the forward's cache
-/// rows, and one scheduler step is one cross-lane batched forward.
+/// rows, and one scheduler step is one cross-lane batched forward. When
+/// the [`crate::kernels::pool`] worker pool is configured wider than one
+/// thread, that fused forward additionally shards its GEMMs by output
+/// channel and its integer attention by lane — still token-exact against
+/// [`HostBackend::new_sequential`] at any width.
 pub struct HostBackend {
     inner: HostForward,
     /// step lanes one at a time through the per-lane GEMV path instead of

@@ -36,6 +36,14 @@ fn rel_close(a: f32, b: f32, tol: f32) -> bool {
     (a - b).abs() <= tol * a.abs().max(b.abs()).max(1.0)
 }
 
+/// Pick up `SILQ_THREADS` so the release gate's sharded pass
+/// (scripts/check.sh re-runs this suite at widths 1 and 4) exercises every
+/// identity over the worker pool; the default stays serial. Idempotent, so
+/// concurrent test threads configuring the same width are fine.
+fn pool_from_env() {
+    silq::kernels::pool::configure(silq::kernels::pool::env_threads().unwrap_or(1));
+}
+
 /// Property 1: for every policy × admissible store, the incremental
 /// decode over the pool and the batched full-sequence forward agree — bit
 /// exactly when the store matches the path's resident representation
@@ -45,6 +53,7 @@ fn rel_close(a: f32, b: f32, tol: f32) -> bool {
 /// integer).
 #[test]
 fn prop_incremental_matches_batched_across_policies_and_stores() {
+    pool_from_env();
     let combos: &[(&str, CacheStore, bool)] = &[
         ("w4a8kv8", CacheStore::Int8, true),
         ("w4a8kv8", CacheStore::F32, false),
@@ -105,6 +114,7 @@ fn prop_incremental_matches_batched_across_policies_and_stores() {
 /// within 1e-4 relative.
 #[test]
 fn prop_integer_path_matches_f32_reference_on_builtin_models() {
+    pool_from_env();
     for (model_name, plen, gen) in [("tiny", 6usize, 5usize), ("small", 5, 4)] {
         for spec in ["w4a8kv8", "w4a8kv8:statacts"] {
             let mc = builtin_model(model_name).unwrap();
@@ -165,6 +175,7 @@ fn reference_and_auto_builds_take_different_paths() {
 /// decodes (the scratch holds no cross-step state).
 #[test]
 fn shared_scratch_is_stateless_across_lanes() {
+    pool_from_env();
     let cfg = sweep_cfg("w4a8kv8");
     let params = host_test_params(&cfg, 23);
     let prompts: [&[i32]; 2] = [&[1, 9, 33], &[2, 40, 7, 11]];

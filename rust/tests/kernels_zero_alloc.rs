@@ -175,6 +175,27 @@ fn steady_state_decode_allocates_nothing() {
         );
     }
 
+    // the same sweeps with the worker pool active: thread spawn and the
+    // lazy per-worker state are paid inside configure() (it runs a warm-up
+    // job), before any counted window, so steady-state sharded decode must
+    // stay allocation-free too — the pool's publish path is a mutex +
+    // atomics + park/unpark, no heap. The counting allocator is global
+    // across threads, so worker-side allocations would be caught here.
+    silq::kernels::pool::configure(4);
+    for (spec, store) in [("w4a8kv8", CacheStore::Int8), ("fp16", CacheStore::F32)] {
+        let n = allocs_during_decode(spec, store, 20);
+        assert_eq!(
+            n, 0,
+            "{spec}/{store:?}: pooled forward_token_into performed {n} heap allocations"
+        );
+        let n = allocs_during_batched_decode(spec, store, 3, 20);
+        assert_eq!(
+            n, 0,
+            "{spec}/{store:?}: pooled forward_tokens_batch performed {n} heap allocations"
+        );
+    }
+    silq::kernels::pool::shutdown();
+
     // the zero-alloc loops above ran with telemetry live — prove the
     // instrumentation actually recorded (a disabled hook passing the pin
     // would be vacuous) and that every span closed

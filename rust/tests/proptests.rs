@@ -8,6 +8,14 @@ use silq::util::Rng;
 
 const CASES: u64 = 40;
 
+/// Serializes the tests that drive hostmodel traffic while reading the
+/// global obs counters or reconfiguring the global worker pool — the test
+/// binary runs tests on sibling threads, and those are process-wide.
+fn hostmodel_traffic_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 #[test]
 fn prop_fake_quant_idempotent() {
     for seed in 0..CASES {
@@ -167,6 +175,10 @@ fn prop_host_incremental_decode_matches_batched_forward() {
     // store/policy combinations at greedy-token granularity.
     use silq::evalharness::decode::argmax;
     use silq::hostmodel::{host_test_params, CacheStore, HostCfg, HostModel};
+    let _traffic = hostmodel_traffic_lock();
+    // honor the gate's SILQ_THREADS pass: this identity must hold at any
+    // worker-pool width (scripts/check.sh re-runs the suite at 1 and 4)
+    silq::kernels::pool::configure(silq::kernels::pool::env_threads().unwrap_or(1));
     for seed in 0..10u64 {
         let mut rng = Rng::new(seed ^ 0x30);
         let (quantized, act_dynamic) = match seed % 3 {
@@ -249,6 +261,8 @@ fn prop_batched_cross_lane_decode_matches_sequential() {
     // release gate in scripts/check.sh runs the full sweep.
     use silq::hostmodel::{host_test_params, CacheStore, HostCfg};
     use silq::serve::{serve_inline, GenRequest, HostBackend};
+    let _traffic = hostmodel_traffic_lock();
+    silq::kernels::pool::configure(silq::kernels::pool::env_threads().unwrap_or(1));
     let cases = if cfg!(debug_assertions) { 9 } else { 24 };
     for seed in 0..cases {
         let mut rng = Rng::new(seed ^ 0x51);
@@ -308,6 +322,132 @@ fn prop_batched_cross_lane_decode_matches_sequential() {
         assert_eq!(stats_b.total_new_tokens, stats_s.total_new_tokens, "seed {seed}");
         assert_eq!(stats_b.steps, stats_s.steps, "seed {seed}");
     }
+}
+
+#[test]
+fn prop_parallel_gemm_matches_scalar() {
+    // The parallel-kernels tentpole identity: worker-pool width and dot-
+    // kernel choice are pure throughput knobs. The same ragged serve
+    // traffic run at threads {1, 2, 4, 7} × {scalar, simd} kernels ×
+    // {w4, w8} integer policies must produce bit-identical tokens AND
+    // identical totals on every thread-count-invariant obs counter
+    // (kernel work is counted once at call entry, never per shard).
+    // `pool_jobs`/`pool_shards` are deliberately excluded — they measure
+    // the fan-out itself.
+    use silq::hostmodel::{host_test_params, CacheStore, HostCfg};
+    use silq::kernels::{pool, simd, QLinear};
+    use silq::obs;
+    use silq::serve::{serve_inline, GenRequest, HostBackend};
+
+    let _traffic = hostmodel_traffic_lock();
+    obs::set_enabled(true);
+
+    const INVARIANT: &[&str] = &[
+        "gemv_calls",
+        "gemm_calls",
+        "attend_i8_calls",
+        "i8_macs",
+        "kv_bytes_read",
+        "batch_steps",
+        "decode_tokens",
+        "prefill_tokens",
+    ];
+    let invariant = || -> Vec<(&'static str, u64)> {
+        obs::snapshot().into_iter().filter(|(n, _)| INVARIANT.contains(n)).collect()
+    };
+
+    for spec in ["w4a8kv8", "w8a8kv8"] {
+        let cfg = HostCfg {
+            vocab: 64,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 4,
+            d_ff: 48,
+            seq_len: 16,
+            policy: spec.parse().unwrap(),
+            rope_theta: 10000.0,
+        };
+        let params = host_test_params(&cfg, 0xC0FFEE ^ spec.len() as u64);
+        let lanes = 3;
+        let mut rng = Rng::new(0x707);
+        let reqs: Vec<(Vec<i32>, usize)> = (0..9)
+            .map(|_| {
+                let plen = rng.range(1, 10);
+                ((0..plen).map(|_| rng.below(cfg.vocab) as i32).collect(), rng.range(1, 12))
+            })
+            .collect();
+        let mk = |reqs: &[(Vec<i32>, usize)]| -> Vec<GenRequest> {
+            reqs.iter()
+                .enumerate()
+                .map(|(i, (p, b))| GenRequest::new(i as u64, p.clone(), *b).ignore_eos())
+                .collect()
+        };
+
+        // reference: serial pool, scalar dot kernel
+        pool::shutdown();
+        simd::set_kernel(simd::KernelChoice::Scalar);
+        obs::reset();
+        let be = HostBackend::new(cfg.clone(), lanes, &params, CacheStore::Int8).unwrap();
+        let (mut ref_out, ref_stats) = serve_inline(be, lanes, mk(&reqs)).unwrap();
+        ref_out.sort_by_key(|r| r.id);
+        let ref_counters = invariant();
+
+        for threads in [1usize, 2, 4, 7] {
+            for (kname, kernel) in
+                [("scalar", simd::KernelChoice::Scalar), ("simd", simd::KernelChoice::Simd)]
+            {
+                pool::configure(threads);
+                simd::set_kernel(kernel);
+                obs::reset();
+                let be =
+                    HostBackend::new(cfg.clone(), lanes, &params, CacheStore::Int8).unwrap();
+                let (mut out, stats) = serve_inline(be, lanes, mk(&reqs)).unwrap();
+                out.sort_by_key(|r| r.id);
+                assert_eq!(out.len(), ref_out.len());
+                for (a, b) in ref_out.iter().zip(&out) {
+                    assert_eq!(a.id, b.id);
+                    assert_eq!(
+                        a.tokens, b.tokens,
+                        "{spec} threads={threads} kernel={kname} req {}: output diverged \
+                         from the serial scalar reference",
+                        a.id
+                    );
+                }
+                assert_eq!(stats.total_new_tokens, ref_stats.total_new_tokens);
+                assert_eq!(
+                    invariant(),
+                    ref_counters,
+                    "{spec} threads={threads} kernel={kname}: kernel work counters moved \
+                     with the execution config"
+                );
+            }
+        }
+    }
+
+    // the aggregate-once closed form: one gemv bumps I8Macs by exactly
+    // in·out — once per call, never per shard — at any pool width
+    for threads in [1usize, 4] {
+        pool::configure(threads);
+        let (din, dout) = (128usize, 512usize);
+        let w = vec![0.25f32; din * dout];
+        let steps = vec![0.25f32; dout];
+        let q = QLinear::pack(&w, dout, &steps, 8);
+        let xq = vec![1i8; din];
+        let mut acc = vec![0i32; dout];
+        let mut out = vec![0f32; dout];
+        let macs0 = obs::get(obs::Counter::I8Macs);
+        let calls0 = obs::get(obs::Counter::GemvCalls);
+        q.gemv(&xq, 0.5, &mut acc, &mut out);
+        assert_eq!(obs::get(obs::Counter::GemvCalls) - calls0, 1);
+        assert_eq!(
+            obs::get(obs::Counter::I8Macs) - macs0,
+            (din * dout) as u64,
+            "threads={threads}: I8Macs must be the per-call closed form, not per-shard"
+        );
+    }
+
+    pool::shutdown();
+    simd::set_kernel(simd::KernelChoice::Simd);
 }
 
 #[test]

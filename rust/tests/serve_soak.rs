@@ -67,6 +67,10 @@ fn soak_frees_every_slot_and_keeps_stats_exact() {
     // telemetry live for the whole run — this binary is single-test, so
     // the global counters can be asserted exactly against ServeStats
     silq::obs::set_enabled(true);
+    // the soak runs with the worker pool live ($SILQ_THREADS, default 4):
+    // decode sharding must survive hundreds of admissions/evictions, and
+    // shutdown must leave no workers behind (asserted at the end)
+    silq::kernels::pool::configure(silq::kernels::pool::env_threads().unwrap_or(4));
     let c0: Vec<u64> = silq::obs::Counter::ALL.iter().map(|&c| silq::obs::get(c)).collect();
     let delta = move |c: silq::obs::Counter| silq::obs::get(c) - c0[c as usize];
     // SILQ_SOAK=long (make soak) runs the long seed; the default stays
@@ -192,4 +196,13 @@ fn soak_frees_every_slot_and_keeps_stats_exact() {
         "a lane leaked its KV slot past shutdown"
     );
     assert_eq!(sched.backend().kv_bytes(), 0, "resident KV bytes after shutdown");
+
+    // --- worker pool: clean shutdown, no leaked worker threads ---
+    silq::kernels::pool::shutdown();
+    assert_eq!(
+        silq::kernels::pool::worker_count(),
+        0,
+        "worker pool leaked threads past shutdown"
+    );
+    assert_eq!(silq::kernels::pool::active_threads(), 1, "pool did not return to serial");
 }

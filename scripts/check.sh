@@ -20,6 +20,15 @@ cargo test -q --offline --release \
   --test proptests --test serve_integration --test serve_soak \
   --test kernels_integration --test kernels_zero_alloc --test obs_integration
 
+echo "== kernel identity + serve suites at SILQ_THREADS=1 and =4 =="
+# every identity pin must hold bit-exactly at any worker-pool width: run
+# the kernel identity and serve property suites serial and sharded
+for t in 1 4; do
+  echo "-- SILQ_THREADS=$t --"
+  SILQ_THREADS=$t cargo test -q --offline --release \
+    --test proptests --test kernels_integration --test serve_soak
+done
+
 echo "== trace export smoke (--trace / --metrics-out) =="
 # a real serve run must emit valid Chrome-trace and metrics JSON whose
 # top-level shape downstream tooling (Perfetto, dashboards) can load
