@@ -18,6 +18,9 @@
 //! * [`ptq`] — baselines: RTN, SmoothQuant, GPTQ, SpinQuant-analog
 //! * [`evalharness`] — CSR / OLLMv1 / OLLMv2 synthetic benchmark suites
 //! * [`serve`] — continuous-batching inference engine over either backend
+//! * [`net`] — HTTP/1.1 front-end over `serve` (streaming SSE
+//!   completions, disconnect-as-cancellation, 429 backpressure) + the
+//!   wire bench client
 //! * [`obs`] — end-to-end telemetry: atomic counter registry, zero-alloc
 //!   spans + trace ring, latency histograms, Chrome-trace export
 //! * [`data`] — SynthLang corpus + SFT dataset generators
@@ -40,6 +43,7 @@ pub mod kernels;
 pub mod linalg;
 pub mod metrics;
 pub mod model;
+pub mod net;
 pub mod obs;
 pub mod policy;
 pub mod ptq;

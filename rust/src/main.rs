@@ -8,6 +8,8 @@
 //!   silq exp <table1|...|fig3>         # regenerate a paper table/figure
 //!   silq e2e                           # full end-to-end demo (small model)
 //!   silq serve                         # continuous-batching load run
+//!   silq serve --listen ADDR           # HTTP front-end (streaming SSE)
+//!   silq bench-serve                   # wire-level TTFT/throughput bench
 //!
 //! `--prec` accepts one currency everywhere: a manifest precision name
 //! (`a8d-c8-w4`), a policy preset (`w4a8kv8-base`) or an inline spec
@@ -18,7 +20,7 @@
 use anyhow::{anyhow, bail, ensure, Context, Result};
 use std::sync::Arc;
 
-use silq::config::{Manifest, TrainCfg};
+use silq::config::{Manifest, ModelCfg, TrainCfg};
 use silq::coordinator::{run_experiment, BackendKind, Pipeline, PipelineCfg};
 use silq::data::{vocab, DataMix, SftStyle, Vocab, World};
 use silq::evalharness::Evaluator;
@@ -26,8 +28,9 @@ use silq::forward::HostForward;
 use silq::hostmodel::{self, CacheStore, HostCfg};
 use silq::kernels::pool;
 use silq::kernels::simd;
-use silq::metrics::{RunLog, Table};
+use silq::metrics::{percentile, RunLog, Table};
 use silq::model::ParamStore;
+use silq::net::{client as netclient, install_sigint_drain, Server, ServerCfg};
 use silq::obs;
 use silq::policy::{QuantPolicy, PRESETS};
 use silq::runtime::Engine;
@@ -192,7 +195,7 @@ fn main() -> Result<()> {
                 "silq — SiLQ reproduction coordinator\n\
                  usage: silq <cmd> [flags]\n\
                  cmds:  info | prec [list|<spec>] | pretrain | sft | qat | eval\n\
-                 \x20      | exp <id> | e2e | serve\n\
+                 \x20      | exp <id> | e2e | serve | bench-serve\n\
                  flags: --model tiny|small\n\
                  \x20      --prec <manifest name | preset | spec>  e.g. a8d-c8-w4,\n\
                  \x20        w4a8kv8, w4a8kv8:statacts, fp16 (see `silq prec list`)\n\
@@ -206,6 +209,13 @@ fn main() -> Result<()> {
                  \x20      graphs, so it takes manifest precision names only)\n\
                  serve: --requests N --batch B --max_new M --queue_cap C --producers P\n\
                  \x20      --cache int8|f32 (host backend)\n\
+                 \x20      --listen ADDR (HTTP front-end instead of the load run; host\n\
+                 \x20      backend only; port 0 binds an ephemeral port; drain with\n\
+                 \x20      POST /shutdown or ^C) --max_conns N (handler cap)\n\
+                 bench-serve: wire-level bench over real sockets —\n\
+                 \x20      --clients 1,4,8 --per_client N --mode closed|open --rate R\n\
+                 \x20      [--addr host:port] (default: self-host on 127.0.0.1:0)\n\
+                 \x20      --out FILE (default BENCH_serve.json, rows appended)\n\
                  exec:  --threads N (eval/qat/serve; kernel worker-pool width —\n\
                  \x20      default $SILQ_THREADS, else all cores; 1 = serial) and\n\
                  \x20      --kernel scalar|simd (dot micro-kernel dispatch; default\n\
@@ -329,6 +339,7 @@ fn main() -> Result<()> {
             Ok(())
         }
         "serve" => serve_cmd(&args, &art_dir),
+        "bench-serve" => bench_serve_cmd(&args, &art_dir),
         "exp" => {
             let id = args.pos().context("exp needs an id: table1..table4, fig1..fig3")?;
             let eng = Engine::new(&art_dir)?;
@@ -469,13 +480,17 @@ fn host_eval_cmd(args: &Args, art_dir: &str) -> Result<()> {
 
 /// `silq serve`: self-driving load run — producer threads push synthetic
 /// chat requests through the bounded admission queue while the
-/// continuous-batching scheduler drains it (there is no network stack in
-/// this offline environment; the load generator stands in for clients).
+/// continuous-batching scheduler drains it (the load generator stands in
+/// for clients; `--listen ADDR` swaps it for the real HTTP front-end,
+/// [`serve_http_cmd`]).
 ///
 /// Backend choice: `--backend` wins; otherwise the compiled artifact is
 /// used when the manifest knows `--prec`, and the artifact-free host
 /// backend otherwise (inline specs, bare checkouts).
 fn serve_cmd(args: &Args, art_dir: &str) -> Result<()> {
+    if args.get("listen").is_some() {
+        return serve_http_cmd(args, art_dir);
+    }
     configure_execution(args)?;
     let model = args.get("model").unwrap_or("tiny").to_string();
     let prec = args.get("prec").unwrap_or("a8d-c8-w4").to_string();
@@ -612,39 +627,7 @@ fn serve_cmd(args: &Args, art_dir: &str) -> Result<()> {
             (results, stats)
         }
         "host" => {
-            let hc = HostCfg::from_policy(&mc, &policy)?;
-            let spec = hostmodel::host_param_spec(&hc);
-            let params = match args.get("ckpt") {
-                Some(path) => {
-                    println!("loading checkpoint {path}");
-                    ParamStore::load(&spec, path)?
-                }
-                None => {
-                    let seed = args.get_num("seed", "0")?;
-                    println!(
-                        "no --ckpt given; serving a fresh random-init model (noise \
-                         answers; the latency/throughput trajectory is the measurement)"
-                    );
-                    hostmodel::host_test_params(&hc, seed)
-                }
-            };
-            // --cache folds into the policy-derived store; unknown values
-            // are rejected with the accepted set named
-            let store = match args.get("cache") {
-                None => CacheStore::for_policy(&policy),
-                Some(c) => {
-                    let c = CacheStore::parse(c)?;
-                    if c == CacheStore::Int8 && !policy.quantized {
-                        // integer storage only exists for quantized
-                        // policies; fp16 serving degrades to the f32 cache
-                        println!("fp16 policy has no integer cache; serving with the f32 cache");
-                        CacheStore::F32
-                    } else {
-                        c
-                    }
-                }
-            };
-            let b = HostBackend::new(hc, batch, &params, store)?;
+            let b = build_host_backend(args, &mc, &policy, batch)?;
             let mut stats = ServeStats::new(batch);
             let mut sched = Scheduler::new(b, batch)?;
             let results = sched.run(&queue, &mut stats)?;
@@ -677,6 +660,329 @@ fn serve_cmd(args: &Args, art_dir: &str) -> Result<()> {
         obs::export::write_chrome_trace(p).with_context(|| format!("writing --trace {p}"))?;
         println!("(chrome trace -> {p}; load in ui.perfetto.dev or chrome://tracing)");
     }
+    Ok(())
+}
+
+/// Build the artifact-free host serving backend shared by the load run,
+/// the HTTP front-end and the wire bench: model shape + policy ->
+/// `HostCfg`, params from `--ckpt` or a seeded random init, cache store
+/// from `--cache` (with the fp16 degradation rule).
+fn build_host_backend(
+    args: &Args,
+    mc: &ModelCfg,
+    policy: &QuantPolicy,
+    lanes: usize,
+) -> Result<HostBackend> {
+    let hc = HostCfg::from_policy(mc, policy)?;
+    let spec = hostmodel::host_param_spec(&hc);
+    let params = match args.get("ckpt") {
+        Some(path) => {
+            println!("loading checkpoint {path}");
+            ParamStore::load(&spec, path)?
+        }
+        None => {
+            let seed = args.get_num("seed", "0")?;
+            println!(
+                "no --ckpt given; serving a fresh random-init model (noise \
+                 answers; the latency/throughput trajectory is the measurement)"
+            );
+            hostmodel::host_test_params(&hc, seed)
+        }
+    };
+    // --cache folds into the policy-derived store; unknown values
+    // are rejected with the accepted set named
+    let store = match args.get("cache") {
+        None => CacheStore::for_policy(policy),
+        Some(c) => {
+            let c = CacheStore::parse(c)?;
+            if c == CacheStore::Int8 && !policy.quantized {
+                // integer storage only exists for quantized
+                // policies; fp16 serving degrades to the f32 cache
+                println!("fp16 policy has no integer cache; serving with the f32 cache");
+                CacheStore::F32
+            } else {
+                c
+            }
+        }
+    };
+    HostBackend::new(hc, lanes, &params, store)
+}
+
+/// `silq serve --listen ADDR`: the HTTP front-end. Host backend only (the
+/// artifact backend holds PJRT state that cannot cross to the scheduler
+/// worker thread). Serves until drained — `POST /shutdown` or SIGINT —
+/// then proves clean teardown: every lane free, zero KV bytes resident.
+fn serve_http_cmd(args: &Args, art_dir: &str) -> Result<()> {
+    configure_execution(args)?;
+    if args.get("backend").is_some_and(|b| b != "host") {
+        bail!(
+            "--listen serves on the host backend only (the artifact backend cannot \
+             move to the scheduler worker thread)"
+        );
+    }
+    let listen = args.get("listen").unwrap_or("127.0.0.1:8090").to_string();
+    let model = args.get("model").unwrap_or("tiny").to_string();
+    let prec = args.get("prec").unwrap_or("w4a8kv8").to_string();
+    let lanes: usize = args.get_num::<usize>("batch", "4")?.max(1);
+    let queue_cap: usize = args.get_num("queue_cap", "16")?;
+    let max_conns: usize = args.get_num::<usize>("max_conns", "32")?.max(1);
+    let default_max_new: usize = args.get_num("max_new", "16")?;
+    let trace_path = args.get("trace").map(str::to_string);
+    let metrics_path = args.get("metrics-out").map(str::to_string);
+    if trace_path.is_some() {
+        obs::enable_tracing(1 << 18);
+    } else {
+        // GET /metrics reads the live counter registry; keep it on
+        obs::set_enabled(true);
+    }
+
+    let manifest = Manifest::load(art_dir).ok();
+    let policy = resolve_policy(&prec, manifest.as_ref())?;
+    let mc = manifest
+        .as_ref()
+        .and_then(|m| m.models.get(&model).cloned())
+        .or_else(|| hostmodel::builtin_model(&model))
+        .with_context(|| format!("unknown model {model}"))?;
+    let backend = build_host_backend(args, &mc, &policy, lanes)?;
+
+    let server = Server::bind(ServerCfg {
+        addr: listen,
+        lanes,
+        queue_cap,
+        max_conns,
+        default_max_new,
+    })?;
+    install_sigint_drain();
+    let addr = server.local_addr();
+    println!(
+        "listening on {addr} (prec={prec} policy={policy} lanes={lanes} \
+         queue_cap={queue_cap} max_conns={max_conns} threads={} kernel={})",
+        pool::active_threads(),
+        simd::active_name()
+    );
+    println!(
+        "endpoints: POST /v1/completions | GET /healthz | GET /metrics | POST /shutdown \
+         (graceful drain; ^C does the same)"
+    );
+    // the check.sh smoke tails this output for the bound address; it must
+    // be on disk before the accept loop starts blocking
+    {
+        use std::io::Write as _;
+        let _ = std::io::stdout().flush();
+    }
+
+    let t = Timer::start();
+    let ((results, stats, backend), net) = server.run(backend)?;
+    let wall = t.secs();
+
+    println!("{}", stats.report());
+    println!("phase breakdown:\n{}", stats.breakdown());
+    println!(
+        "wire: {} connections, {} requests ({} streaming, {} disconnects, {} x 429) \
+         in {wall:.2}s",
+        net.connections, net.requests, net.streams, net.disconnects, net.rejected_429
+    );
+    if let Some(p) = &metrics_path {
+        std::fs::write(p, stats.metrics_json())
+            .with_context(|| format!("writing --metrics-out {p}"))?;
+        println!("(per-step metrics -> {p})");
+    }
+    if let Some(p) = &trace_path {
+        obs::export::write_chrome_trace(p).with_context(|| format!("writing --trace {p}"))?;
+        println!("(chrome trace -> {p}; load in ui.perfetto.dev or chrome://tracing)");
+    }
+    ensure!(backend.all_slots_free(), "drain left a KV slot allocated");
+    ensure!(backend.kv_bytes() == 0, "drain left KV bytes resident");
+    println!("drained clean ({} results)", results.len());
+    Ok(())
+}
+
+/// `silq bench-serve`: wire-level serving bench over real sockets. For
+/// each client count B, drive the HTTP front-end with B streaming
+/// clients — closed loop (each client fires its next request when the
+/// previous finishes) or open loop (requests launch at `--rate` per
+/// second regardless of completions; queue-full 429s count as drops, not
+/// failures). Rows append to `--out` with client-measured TTFT p50/p95,
+/// wire throughput, and threads/kernel provenance.
+fn bench_serve_cmd(args: &Args, art_dir: &str) -> Result<()> {
+    configure_execution(args)?;
+    let mode = args.get("mode").unwrap_or("closed").to_string();
+    ensure!(mode == "closed" || mode == "open", "--mode {mode}: closed|open");
+    let clients: Vec<usize> = args
+        .get("clients")
+        .unwrap_or("1,4,8")
+        .split(',')
+        .map(|s| parse_flag("clients", s.trim()))
+        .collect::<Result<_>>()?;
+    ensure!(!clients.is_empty() && clients.iter().all(|&b| b > 0), "--clients needs counts >= 1");
+    let per_client: usize = args.get_num::<usize>("per_client", "8")?.max(1);
+    let max_tokens: usize = args.get_num::<usize>("max_new", "16")?.max(1);
+    let rate: f64 = args.get_num("rate", "32")?;
+    let out_path = args.get("out").unwrap_or("BENCH_serve.json").to_string();
+    let prec = args.get("prec").unwrap_or("w4a8kv8").to_string();
+    let model = args.get("model").unwrap_or("tiny").to_string();
+
+    let manifest = Manifest::load(art_dir).ok();
+    let policy = resolve_policy(&prec, manifest.as_ref())?;
+    let mc = manifest
+        .as_ref()
+        .and_then(|m| m.models.get(&model).cloned())
+        .or_else(|| hostmodel::builtin_model(&model))
+        .with_context(|| format!("unknown model {model}"))?;
+
+    // same synthetic chat traffic as the load run, generated client-side
+    let world = World::generate(Vocab::new(mc.vocab), 7);
+    let n_entities = world.n_entities();
+    let v = world.vocab.clone();
+    let prompt = move |i: usize| -> Vec<i32> {
+        vec![
+            vocab::BOS, vocab::Q,
+            Vocab::attr_type(i % 4), vocab::OF, v.entity(i * 3 % n_entities),
+            vocab::A,
+        ]
+    };
+
+    // target: --addr for a server already running, else self-host on an
+    // ephemeral port and drain it after the sweep
+    let (addr, hosted) = match args.get("addr") {
+        Some(a) => (a.to_string(), None),
+        None => {
+            obs::set_enabled(true);
+            let lanes: usize = args.get_num::<usize>("batch", "8")?.max(1);
+            let backend = build_host_backend(args, &mc, &policy, lanes)?;
+            let server = Server::bind(ServerCfg {
+                addr: "127.0.0.1:0".into(),
+                lanes,
+                queue_cap: args.get_num("queue_cap", "32")?,
+                max_conns: 64,
+                default_max_new: max_tokens,
+            })?;
+            let flag = server.shutdown_flag();
+            let addr = server.local_addr().to_string();
+            println!("self-hosted server on {addr} (lanes={lanes})");
+            let worker = std::thread::spawn(move || server.run(backend));
+            (addr, Some((flag, worker)))
+        }
+    };
+
+    println!(
+        "bench-serve: mode={mode} clients={clients:?} per_client={per_client} \
+         max_tokens={max_tokens} prec={prec} threads={} kernel={}",
+        pool::active_threads(),
+        simd::active_name()
+    );
+    let mut rows = Vec::new();
+    for &b in &clients {
+        let t = Timer::start();
+        // (client-measured ttft_ms, tokens streamed); NaN ttft = dropped
+        let outcomes: Vec<(f64, usize)> = if mode == "closed" {
+            let mut hs = Vec::new();
+            for c in 0..b {
+                let addr = addr.clone();
+                let prompt = prompt.clone();
+                hs.push(std::thread::spawn(move || -> Result<Vec<(f64, usize)>> {
+                    let mut out = Vec::with_capacity(per_client);
+                    for k in 0..per_client {
+                        let i = c * per_client + k;
+                        let body = netclient::completion_body(
+                            i as u64, &prompt(i), max_tokens, true, true,
+                        );
+                        let o = netclient::complete_streaming(&addr, &body, None)?;
+                        out.push(if o.status == 200 {
+                            (o.ttft_ms, o.tokens.len())
+                        } else {
+                            (f64::NAN, 0)
+                        });
+                    }
+                    Ok(out)
+                }));
+            }
+            let mut all = Vec::new();
+            for h in hs {
+                all.extend(h.join().map_err(|_| anyhow!("bench client panicked"))??);
+            }
+            all
+        } else {
+            let gap = std::time::Duration::from_secs_f64(1.0 / rate.max(1e-3));
+            let mut hs = Vec::new();
+            for i in 0..b * per_client {
+                let addr = addr.clone();
+                let prompt = prompt.clone();
+                hs.push(std::thread::spawn(move || -> Result<(f64, usize)> {
+                    let body = netclient::completion_body(
+                        i as u64, &prompt(i), max_tokens, true, true,
+                    );
+                    let o = netclient::complete_streaming(&addr, &body, None)?;
+                    Ok(if o.status == 200 { (o.ttft_ms, o.tokens.len()) } else { (f64::NAN, 0) })
+                }));
+                std::thread::sleep(gap);
+            }
+            let mut all = Vec::new();
+            for h in hs {
+                all.push(h.join().map_err(|_| anyhow!("bench client panicked"))??);
+            }
+            all
+        };
+        let wall = t.secs().max(1e-9);
+        let ttfts: Vec<f64> = outcomes.iter().map(|o| o.0).filter(|t| t.is_finite()).collect();
+        let completed = ttfts.len();
+        let dropped = outcomes.len() - completed;
+        let tokens: usize = outcomes.iter().map(|o| o.1).sum();
+        let tok_per_s = tokens as f64 / wall;
+        let (p50, p95) = if ttfts.is_empty() {
+            (0.0, 0.0)
+        } else {
+            (percentile(&ttfts, 50.0), percentile(&ttfts, 95.0))
+        };
+        println!(
+            "  B={b:<3} completed {completed}/{} ttft p50 {p50:.2}ms p95 {p95:.2}ms \
+             {tok_per_s:.1} tok/s ({wall:.2}s)",
+            outcomes.len()
+        );
+        rows.push(format!(
+            "  {{\"label\": \"wire {mode}-loop B={b}\", \"backend\": \"host+http\", \
+             \"policy\": \"{prec}\", \"threads\": {}, \"kernel\": \"{}\", \
+             \"clients\": {b}, \"mode\": \"{mode}\", \"completed\": {completed}, \
+             \"dropped\": {dropped}, \"tok_per_s\": {tok_per_s:.2}, \
+             \"wire_ttft_ms_p50\": {p50:.3}, \"wire_ttft_ms_p95\": {p95:.3}, \
+             \"wall_secs\": {wall:.3}}}",
+            pool::active_threads(),
+            simd::active_name(),
+        ));
+    }
+
+    if let Some((flag, worker)) = hosted {
+        flag.store(true, std::sync::atomic::Ordering::SeqCst);
+        let ((results, _stats, backend), net) =
+            worker.join().map_err(|_| anyhow!("server worker panicked"))??;
+        ensure!(backend.all_slots_free(), "bench drain left a KV slot allocated");
+        println!(
+            "server drained clean: {} results, {} connections, {} x 429",
+            results.len(), net.connections, net.rejected_429
+        );
+    }
+    append_bench_rows(&out_path, &rows)?;
+    println!("({} rows -> {out_path})", rows.len());
+    Ok(())
+}
+
+/// Append rows to a JSON-array bench file, preserving existing rows —
+/// the same splice `BENCH.json` gets from the kernel bench. A missing or
+/// empty file starts a fresh array.
+fn append_bench_rows(path: &str, rows: &[String]) -> Result<()> {
+    let joined = rows.join(",\n");
+    let text = match std::fs::read_to_string(path) {
+        Ok(existing) => {
+            let head = existing.trim_end().trim_end_matches(']').trim_end().to_string();
+            if head.trim() == "[" || head.trim().is_empty() {
+                format!("[\n{joined}\n]\n")
+            } else {
+                format!("{},\n{joined}\n]\n", head.trim_end_matches(','))
+            }
+        }
+        Err(_) => format!("[\n{joined}\n]\n"),
+    };
+    std::fs::write(path, text).with_context(|| format!("writing {path}"))?;
     Ok(())
 }
 

@@ -1,0 +1,175 @@
+//! Minimal blocking HTTP/1.1 client for the wire bench (`silq
+//! bench-serve`), the integration tests, and the soak — std `TcpStream`
+//! only, one request per connection, chunked/SSE decoding via
+//! [`http::SseAssembler`].
+//!
+//! Latency here is measured **client-side**: [`WireOutcome::ttft_ms`] is
+//! request-written → first token frame parsed, i.e. the full wire round
+//! trip a user feels, independent of the server's own accounting.
+
+use std::io::{BufReader, Write};
+use std::net::TcpStream;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::net::http;
+use crate::net::json::Json;
+
+/// What one completion request produced, as observed on the wire.
+#[derive(Debug)]
+pub struct WireOutcome {
+    pub status: u16,
+    /// token frames in arrival order (streaming) or the `generated` field
+    /// of the buffered response
+    pub tokens: Vec<i32>,
+    /// the terminal document: the buffered response body, or the
+    /// streaming `done` frame (`None` when the client disconnected early
+    /// or the request was refused)
+    pub done: Option<Json>,
+    /// client-measured time-to-first-token in ms (`NaN` when no token
+    /// frame arrived)
+    pub ttft_ms: f64,
+    /// the client hung up on purpose before the stream finished
+    pub disconnected: bool,
+}
+
+/// Build a `/v1/completions` request body.
+pub fn completion_body(
+    id: u64,
+    prompt: &[i32],
+    max_tokens: usize,
+    ignore_eos: bool,
+    stream: bool,
+) -> String {
+    let p = prompt.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(",");
+    format!(
+        "{{\"id\":{id},\"prompt\":[{p}],\"max_tokens\":{max_tokens},\
+         \"ignore_eos\":{ignore_eos},\"stream\":{stream}}}"
+    )
+}
+
+fn connect(addr: &str) -> Result<TcpStream> {
+    TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))
+}
+
+fn send_request(stream: &mut TcpStream, method: &str, path: &str, body: &str) -> Result<()> {
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: silq\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// One non-streaming request; returns status + body text.
+pub fn request(addr: &str, method: &str, path: &str, body: &str) -> Result<(u16, String)> {
+    let mut stream = connect(addr)?;
+    send_request(&mut stream, method, path, body)?;
+    let mut r = BufReader::new(stream);
+    let (status, headers) = http::read_response_head(&mut r).context("response head")?;
+    let body = http::read_response_body(&mut r, &headers).context("response body")?;
+    Ok((status, String::from_utf8_lossy(&body).into_owned()))
+}
+
+/// `GET` convenience (healthz, metrics).
+pub fn get(addr: &str, path: &str) -> Result<(u16, String)> {
+    request(addr, "GET", path, "")
+}
+
+/// Buffered completion: POST, parse the one-document answer.
+pub fn complete_buffered(addr: &str, body: &str) -> Result<WireOutcome> {
+    let (status, text) = request(addr, "POST", "/v1/completions", body)?;
+    let done = Json::parse(&text).ok();
+    let tokens = done
+        .as_ref()
+        .and_then(|d| d.get("generated"))
+        .and_then(Json::as_i32_arr)
+        .unwrap_or_default();
+    Ok(WireOutcome { status, tokens, done, ttft_ms: f64::NAN, disconnected: false })
+}
+
+/// Streaming completion: POST with `"stream":true`, consume SSE frames as
+/// they arrive. `disconnect_after: Some(k)` hangs up after `k` token
+/// frames (the forced-disconnect path the cancellation tests drive);
+/// `None` consumes through the terminal `done` frame.
+pub fn complete_streaming(
+    addr: &str,
+    body: &str,
+    disconnect_after: Option<usize>,
+) -> Result<WireOutcome> {
+    let mut stream = connect(addr)?;
+    let t0 = Instant::now();
+    send_request(&mut stream, "POST", "/v1/completions", body)?;
+    let mut r = BufReader::new(stream);
+    let (status, headers) = http::read_response_head(&mut r).context("response head")?;
+    if status != 200 {
+        let text = http::read_response_body(&mut r, &headers).unwrap_or_default();
+        return Ok(WireOutcome {
+            status,
+            tokens: Vec::new(),
+            done: Json::parse(&String::from_utf8_lossy(&text)).ok(),
+            ttft_ms: f64::NAN,
+            disconnected: false,
+        });
+    }
+    if !http::header(&headers, "Transfer-Encoding")
+        .is_some_and(|v| v.eq_ignore_ascii_case("chunked"))
+    {
+        bail!("streaming response is not chunked");
+    }
+    let mut sse = http::SseAssembler::new();
+    let mut out = WireOutcome {
+        status,
+        tokens: Vec::new(),
+        done: None,
+        ttft_ms: f64::NAN,
+        disconnected: false,
+    };
+    while let Some(chunk) = http::read_chunk(&mut r).context("reading chunk")? {
+        for payload in sse.push(&chunk) {
+            let Ok(doc) = Json::parse(&payload) else { continue };
+            if let Some(t) = doc.get("token").and_then(Json::as_f64) {
+                if out.tokens.is_empty() {
+                    out.ttft_ms = t0.elapsed().as_secs_f64() * 1e3;
+                }
+                out.tokens.push(t as i32);
+            } else if doc.get("done").and_then(Json::as_bool) == Some(true) {
+                out.done = Some(doc);
+                return Ok(out);
+            }
+        }
+        if let Some(k) = disconnect_after {
+            if out.tokens.len() >= k {
+                // drop the socket mid-stream: the server's next frame
+                // write fails and cancels the lane
+                out.disconnected = true;
+                return Ok(out);
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Ask a live server to drain and exit.
+pub fn shutdown(addr: &str) -> Result<u16> {
+    Ok(request(addr, "POST", "/shutdown", "")?.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn completion_body_is_valid_json() {
+        let body = completion_body(7, &[1, 2, 3], 8, true, false);
+        let doc = Json::parse(&body).unwrap();
+        assert_eq!(doc.get("id").unwrap().as_u64(), Some(7));
+        assert_eq!(doc.get("prompt").unwrap().as_i32_arr(), Some(vec![1, 2, 3]));
+        assert_eq!(doc.get("max_tokens").unwrap().as_u64(), Some(8));
+        assert_eq!(doc.get("ignore_eos").unwrap().as_bool(), Some(true));
+        assert_eq!(doc.get("stream").unwrap().as_bool(), Some(false));
+    }
+}

@@ -1,0 +1,348 @@
+//! HTTP/1.1 wire framing: request parsing, response writing, chunked
+//! transfer encoding, and SSE event framing — generic over `Read`/`Write`
+//! so every parser unit-tests on byte slices without a socket.
+//!
+//! Scope is deliberately narrow (this is a model server, not a web
+//! framework): one request per connection (`Connection: close`),
+//! `Content-Length` bodies in, `Content-Length` or chunked bodies out.
+//! Streaming completions go out as Server-Sent Events where **one chunk
+//! is one complete `data:` frame** — a reader that just de-chunks gets
+//! whole events; the client-side [`SseAssembler`] additionally tolerates
+//! frames split across chunk boundaries.
+
+use std::io::{self, BufRead, Read, Write};
+
+/// Parsed-input hard limits: a malformed or hostile peer must cost a
+/// bounded read, never an unbounded allocation.
+const MAX_HEADER_LINE: usize = 8 * 1024;
+const MAX_HEADERS: usize = 64;
+const MAX_BODY: usize = 1 << 20;
+
+/// One parsed HTTP request.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    /// request target as sent (path only; this server ignores queries)
+    pub target: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Case-insensitive header lookup.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        header(&self.headers, name)
+    }
+}
+
+/// Case-insensitive lookup in a header list.
+pub fn header<'a>(headers: &'a [(String, String)], name: &str) -> Option<&'a str> {
+    headers
+        .iter()
+        .find(|(k, _)| k.eq_ignore_ascii_case(name))
+        .map(|(_, v)| v.as_str())
+}
+
+fn bad(msg: impl Into<String>) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.into())
+}
+
+/// Read one bounded CRLF-terminated line (without the terminator).
+fn read_line<R: BufRead>(r: &mut R) -> io::Result<String> {
+    let mut line = String::new();
+    let n = r.take(MAX_HEADER_LINE as u64 + 2).read_line(&mut line)?;
+    if n > MAX_HEADER_LINE {
+        return Err(bad("header line too long"));
+    }
+    while line.ends_with('\n') || line.ends_with('\r') {
+        line.pop();
+    }
+    Ok(line)
+}
+
+fn read_headers<R: BufRead>(r: &mut R) -> io::Result<Vec<(String, String)>> {
+    let mut headers = Vec::new();
+    loop {
+        let line = read_line(r)?;
+        if line.is_empty() {
+            return Ok(headers);
+        }
+        if headers.len() >= MAX_HEADERS {
+            return Err(bad("too many headers"));
+        }
+        let (k, v) = line.split_once(':').ok_or_else(|| bad("malformed header"))?;
+        headers.push((k.trim().to_string(), v.trim().to_string()));
+    }
+}
+
+fn read_body<R: BufRead>(r: &mut R, headers: &[(String, String)]) -> io::Result<Vec<u8>> {
+    let len = match header(headers, "Content-Length") {
+        Some(v) => v.trim().parse::<usize>().map_err(|_| bad("bad Content-Length"))?,
+        None => 0,
+    };
+    if len > MAX_BODY {
+        return Err(bad("body too large"));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Ok(body)
+}
+
+/// Parse one request. `Ok(None)` is the clean end of the connection (EOF
+/// before any request line); malformed input is `InvalidData` (the server
+/// answers 400).
+pub fn read_request<R: BufRead>(r: &mut R) -> io::Result<Option<Request>> {
+    let line = read_line(r)?;
+    if line.is_empty() {
+        return Ok(None);
+    }
+    let mut parts = line.split_whitespace();
+    let (method, target, version) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(t), Some(v)) => (m, t, v),
+        _ => return Err(bad("malformed request line")),
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(bad("unsupported HTTP version"));
+    }
+    let headers = read_headers(r)?;
+    let body = read_body(r, &headers)?;
+    Ok(Some(Request {
+        method: method.to_string(),
+        target: target.to_string(),
+        headers,
+        body,
+    }))
+}
+
+/// Canonical reason phrases for the statuses this server emits.
+pub fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write one complete `Content-Length` response and flush.
+pub fn write_response<W: Write>(
+    w: &mut W,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+) -> io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        status,
+        status_reason(status),
+        content_type,
+        body.len()
+    )?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Open a chunked response (status line + headers); the body follows as
+/// [`write_chunk`] calls terminated by [`end_chunked`].
+pub fn start_chunked<W: Write>(w: &mut W, status: u16, content_type: &str) -> io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nTransfer-Encoding: chunked\r\n\
+         Connection: close\r\n\r\n",
+        status,
+        status_reason(status),
+        content_type,
+    )?;
+    w.flush()
+}
+
+/// Write one chunk and flush — each token frame must hit the socket the
+/// step it decodes, not sit in a buffer until the run ends.
+pub fn write_chunk<W: Write>(w: &mut W, payload: &[u8]) -> io::Result<()> {
+    write!(w, "{:x}\r\n", payload.len())?;
+    w.write_all(payload)?;
+    w.write_all(b"\r\n")?;
+    w.flush()
+}
+
+/// Terminate a chunked response.
+pub fn end_chunked<W: Write>(w: &mut W) -> io::Result<()> {
+    w.write_all(b"0\r\n\r\n")?;
+    w.flush()
+}
+
+/// Frame a JSON payload as one SSE event (`data: {...}\n\n`).
+pub fn sse_frame(json: &str) -> Vec<u8> {
+    let mut out = Vec::with_capacity(json.len() + 8);
+    out.extend_from_slice(b"data: ");
+    out.extend_from_slice(json.as_bytes());
+    out.extend_from_slice(b"\n\n");
+    out
+}
+
+// ---------------------------------------------------------------------------
+// client-side response reading
+// ---------------------------------------------------------------------------
+
+/// Read a response status line + headers (the body framing differs by
+/// endpoint, so it stays with the caller).
+pub fn read_response_head<R: BufRead>(r: &mut R) -> io::Result<(u16, Vec<(String, String)>)> {
+    let line = read_line(r)?;
+    let status = line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse::<u16>().ok())
+        .ok_or_else(|| bad("malformed status line"))?;
+    Ok((status, read_headers(r)?))
+}
+
+/// Read one chunk of a chunked body; `Ok(None)` at the terminator.
+pub fn read_chunk<R: BufRead>(r: &mut R) -> io::Result<Option<Vec<u8>>> {
+    let line = read_line(r)?;
+    let len = usize::from_str_radix(line.trim(), 16).map_err(|_| bad("bad chunk size"))?;
+    if len > MAX_BODY {
+        return Err(bad("chunk too large"));
+    }
+    let mut data = vec![0u8; len + 2];
+    r.read_exact(&mut data)?;
+    if &data[len..] != b"\r\n" {
+        return Err(bad("missing chunk terminator"));
+    }
+    data.truncate(len);
+    if len == 0 {
+        // the zero chunk's trailing CRLF was the two bytes just consumed
+        return Ok(None);
+    }
+    Ok(Some(data))
+}
+
+/// Read a whole response body: `Content-Length` or chunked (assembled).
+pub fn read_response_body<R: BufRead>(
+    r: &mut R,
+    headers: &[(String, String)],
+) -> io::Result<Vec<u8>> {
+    if header(headers, "Transfer-Encoding").is_some_and(|v| v.eq_ignore_ascii_case("chunked")) {
+        let mut body = Vec::new();
+        while let Some(chunk) = read_chunk(r)? {
+            if body.len() + chunk.len() > MAX_BODY {
+                return Err(bad("chunked body too large"));
+            }
+            body.extend_from_slice(&chunk);
+        }
+        return Ok(body);
+    }
+    read_body(r, headers)
+}
+
+/// Reassemble SSE `data:` payloads from an arbitrary byte stream — the
+/// server sends one frame per chunk, but a correct client must not rely
+/// on that alignment.
+#[derive(Default)]
+pub struct SseAssembler {
+    buf: Vec<u8>,
+}
+
+impl SseAssembler {
+    pub fn new() -> SseAssembler {
+        SseAssembler::default()
+    }
+
+    /// Feed bytes; returns every complete event payload they finish.
+    pub fn push(&mut self, bytes: &[u8]) -> Vec<String> {
+        self.buf.extend_from_slice(bytes);
+        let mut out = Vec::new();
+        while let Some(pos) = self.buf.windows(2).position(|w| w == b"\n\n") {
+            let event: Vec<u8> = self.buf.drain(..pos + 2).collect();
+            let text = String::from_utf8_lossy(&event[..pos]);
+            for line in text.lines() {
+                if let Some(payload) = line.strip_prefix("data: ") {
+                    out.push(payload.to_string());
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_a_post_with_body() {
+        let raw = b"POST /v1/completions HTTP/1.1\r\nHost: x\r\ncontent-length: 4\r\n\r\nabcd";
+        let req = read_request(&mut Cursor::new(&raw[..])).unwrap().unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.target, "/v1/completions");
+        assert_eq!(req.header("Content-Length"), Some("4"));
+        assert_eq!(req.body, b"abcd");
+    }
+
+    #[test]
+    fn eof_before_a_request_is_a_clean_none() {
+        assert!(read_request(&mut Cursor::new(&b""[..])).unwrap().is_none());
+    }
+
+    #[test]
+    fn malformed_requests_error() {
+        for raw in [
+            &b"GARBAGE\r\n\r\n"[..],
+            &b"GET /x SPDY/3\r\n\r\n"[..],
+            &b"GET /x HTTP/1.1\r\nno-colon-here\r\n\r\n"[..],
+            &b"GET /x HTTP/1.1\r\nContent-Length: nope\r\n\r\n"[..],
+        ] {
+            assert!(read_request(&mut Cursor::new(raw)).is_err());
+        }
+        // a body larger than the cap is refused before allocation
+        let raw = format!("POST /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY + 1);
+        assert!(read_request(&mut Cursor::new(raw.as_bytes())).is_err());
+    }
+
+    #[test]
+    fn response_writer_round_trips_through_the_reader() {
+        let mut wire = Vec::new();
+        write_response(&mut wire, 429, "application/json", b"{\"error\":\"full\"}").unwrap();
+        let mut r = Cursor::new(&wire[..]);
+        let (status, headers) = read_response_head(&mut r).unwrap();
+        assert_eq!(status, 429);
+        let body = read_response_body(&mut r, &headers).unwrap();
+        assert_eq!(body, b"{\"error\":\"full\"}");
+    }
+
+    #[test]
+    fn chunked_stream_round_trips() {
+        let mut wire = Vec::new();
+        start_chunked(&mut wire, 200, "text/event-stream").unwrap();
+        write_chunk(&mut wire, &sse_frame("{\"token\":5}")).unwrap();
+        write_chunk(&mut wire, &sse_frame("{\"done\":true}")).unwrap();
+        end_chunked(&mut wire).unwrap();
+        let mut r = Cursor::new(&wire[..]);
+        let (status, headers) = read_response_head(&mut r).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(header(&headers, "transfer-encoding"), Some("chunked"));
+        let mut sse = SseAssembler::new();
+        let mut events = Vec::new();
+        while let Some(chunk) = read_chunk(&mut r).unwrap() {
+            events.extend(sse.push(&chunk));
+        }
+        assert_eq!(events, vec!["{\"token\":5}", "{\"done\":true}"]);
+    }
+
+    #[test]
+    fn sse_assembler_survives_split_frames() {
+        let mut sse = SseAssembler::new();
+        let frame = sse_frame("{\"token\":12}");
+        let (a, b) = frame.split_at(7);
+        assert!(sse.push(a).is_empty(), "half a frame must not emit");
+        assert_eq!(sse.push(b), vec!["{\"token\":12}"]);
+        // two frames in one push both come out, in order
+        let mut two = sse_frame("{\"token\":1}");
+        two.extend_from_slice(&sse_frame("{\"token\":2}"));
+        assert_eq!(sse.push(&two), vec!["{\"token\":1}", "{\"token\":2}"]);
+    }
+}

@@ -1,0 +1,34 @@
+//! `net` — serving over the wire: a dependency-light HTTP/1.1 front-end
+//! for the continuous-batching engine, plus the client the wire bench and
+//! tests drive it with.
+//!
+//! ```text
+//!   TcpListener (non-blocking accept, drain flags polled)     (server.rs)
+//!        |  bounded handler threads (max_conns slots)
+//!   HTTP/1.1 parse / respond / chunked+SSE framing            (http.rs)
+//!        |  POST /v1/completions -> GenRequest{sink, cancel}
+//!   AdmissionQueue::try_submit  (full -> 429, closed -> 503)  (serve)
+//!        |
+//!   Scheduler lanes: StreamEvent::Token per decode step back
+//!   through the sink; a failed frame write sets the cancel
+//!   flag -> lane + KV slot freed mid-decode
+//! ```
+//!
+//! Everything is std: `TcpListener`/`TcpStream`, thread-per-connection
+//! over a bounded slot count, hand-rolled HTTP and JSON ([`json`] is the
+//! one real parser in the repo — the wire is where untrusted bytes come
+//! in). The serving semantics (queueing, scheduling, cancellation,
+//! accounting) all live in [`crate::serve`]; this layer only maps them
+//! onto sockets: backpressure to `429`, disconnect to cancellation,
+//! drain (`/shutdown` or SIGINT) to finish-in-flight-then-exit.
+//!
+//! Request/response schemas and the streaming frame format are documented
+//! in README §Serving over HTTP.
+
+pub mod client;
+pub mod http;
+pub mod json;
+pub mod server;
+
+pub use json::Json;
+pub use server::{drain_requested, install_sigint_drain, NetReport, Server, ServerCfg};

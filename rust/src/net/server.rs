@@ -1,0 +1,550 @@
+//! The HTTP front-end: a dependency-light HTTP/1.1 server on std
+//! `TcpListener` in front of the continuous-batching engine.
+//!
+//! Shape: a non-blocking accept loop (so the shutdown flag and SIGINT are
+//! polled between accepts) hands each connection to its own handler
+//! thread, bounded by `max_conns` slots — beyond that, connections queue
+//! in the OS backlog, which is backpressure a load balancer understands.
+//! Handlers submit into the shared [`AdmissionQueue`] with
+//! [`AdmissionQueue::try_submit`], so a full queue becomes `429 Too Many
+//! Requests` on the wire instead of a stalled socket.
+//!
+//! Endpoints:
+//!
+//! * `POST /v1/completions` — body `{"prompt":[...], "max_tokens":N,
+//!   "ignore_eos":bool, "stream":bool, "id":N}` (all but `prompt`
+//!   optional). Buffered mode answers one JSON result; streaming mode
+//!   answers SSE-over-chunked, one `data: {"token":T}` frame per decoded
+//!   token and a terminal `data: {"done":true, ...}` frame. A failed
+//!   frame write (client disconnect) sets the request's cancel flag: the
+//!   scheduler evicts the lane and frees its KV slot at the next step
+//!   boundary — mid-decode, not at drain.
+//! * `GET /healthz` — liveness.
+//! * `GET /metrics` — live `silq.metrics.v1` counters + wire-TTFT summary
+//!   ([`crate::obs::export::metrics_live_json`]).
+//! * `POST /shutdown` — graceful drain: stop accepting, finish in-flight
+//!   lanes, return. SIGINT triggers the same path when
+//!   [`install_sigint_drain`] was called.
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::net::http;
+use crate::net::json::{escape, Json};
+use crate::obs::{add, Counter};
+use crate::serve::{
+    AdmissionQueue, DecodeBackend, GenRequest, GenResult, ServeHandle, ServeOutcome, StreamEvent,
+    SubmitError,
+};
+
+const JSON_TYPE: &str = "application/json";
+const SSE_TYPE: &str = "text/event-stream";
+/// Accept-loop poll interval: how fast drain/SIGINT are noticed.
+const POLL: Duration = Duration::from_millis(5);
+/// Per-socket read/write timeout — a dead peer must not pin a handler
+/// slot forever (one blocked write of a token frame times out and takes
+/// the disconnect path).
+const SOCKET_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Server construction parameters.
+pub struct ServerCfg {
+    /// listen address (`host:port`; port 0 binds an ephemeral port —
+    /// read it back from [`Server::local_addr`])
+    pub addr: String,
+    /// scheduler batch lanes
+    pub lanes: usize,
+    /// admission-queue capacity (beyond it: 429)
+    pub queue_cap: usize,
+    /// concurrent connection-handler cap (beyond it: OS backlog)
+    pub max_conns: usize,
+    /// `max_tokens` when the request body does not set one
+    pub default_max_new: usize,
+}
+
+/// Wire-side totals for one server run, tallied locally (always on,
+/// independent of the global telemetry toggle) and mirrored into the
+/// [`Counter`] registry when telemetry is enabled.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NetReport {
+    pub connections: u64,
+    pub requests: u64,
+    /// streaming completions opened
+    pub streams: u64,
+    /// mid-stream client disconnects that triggered a cancellation
+    pub disconnects: u64,
+    /// requests answered 429 (admission queue full)
+    pub rejected_429: u64,
+}
+
+#[derive(Default)]
+struct Tallies {
+    connections: AtomicU64,
+    requests: AtomicU64,
+    streams: AtomicU64,
+    disconnects: AtomicU64,
+    rejected_429: AtomicU64,
+}
+
+impl Tallies {
+    fn bump(&self, local: &AtomicU64, counter: Counter) {
+        local.fetch_add(1, Ordering::Relaxed);
+        add(counter, 1);
+    }
+
+    fn report(&self) -> NetReport {
+        NetReport {
+            connections: self.connections.load(Ordering::Relaxed),
+            requests: self.requests.load(Ordering::Relaxed),
+            streams: self.streams.load(Ordering::Relaxed),
+            disconnects: self.disconnects.load(Ordering::Relaxed),
+            rejected_429: self.rejected_429.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Everything a connection handler needs, behind one `Arc`.
+struct Ctx {
+    queue: Arc<AdmissionQueue>,
+    tallies: Tallies,
+    shutdown: Arc<AtomicBool>,
+    /// ids for bodies that do not pick their own
+    next_id: AtomicU64,
+    default_max_new: usize,
+}
+
+/// A bound listener, ready to [`Server::run`].
+pub struct Server {
+    listener: TcpListener,
+    addr: SocketAddr,
+    cfg: ServerCfg,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl Server {
+    /// Bind `cfg.addr` (non-blocking, so the accept loop can poll the
+    /// drain flags).
+    pub fn bind(cfg: ServerCfg) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding {}", cfg.addr))?;
+        listener.set_nonblocking(true).context("non-blocking listener")?;
+        let addr = listener.local_addr().context("listener address")?;
+        Ok(Server { listener, addr, cfg, shutdown: Arc::new(AtomicBool::new(false)) })
+    }
+
+    /// The bound address (resolves port 0 to the actual ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The drain flag: set it (from any thread) to stop accepting and
+    /// finish in-flight work — what `POST /shutdown` does internally.
+    pub fn shutdown_flag(&self) -> Arc<AtomicBool> {
+        self.shutdown.clone()
+    }
+
+    /// Serve until drained (`/shutdown`, the shutdown flag, or SIGINT):
+    /// spawns the scheduler worker, accepts connections into bounded
+    /// handler threads, then joins every handler, closes the queue, and
+    /// hands back the scheduler outcome (results, stats, backend — for
+    /// the shutdown invariants) plus the wire-side [`NetReport`].
+    pub fn run<B: DecodeBackend + Send + 'static>(
+        self,
+        backend: B,
+    ) -> Result<(ServeOutcome<B>, NetReport)> {
+        let handle = ServeHandle::spawn(backend, self.cfg.lanes, self.cfg.queue_cap)?;
+        let ctx = Arc::new(Ctx {
+            queue: handle.queue(),
+            tallies: Tallies::default(),
+            shutdown: self.shutdown.clone(),
+            next_id: AtomicU64::new(1),
+            default_max_new: self.cfg.default_max_new.max(1),
+        });
+
+        // handler-slot accounting: slot acquired before spawn, released by
+        // the guard when the handler thread exits (however it exits)
+        let slots = Arc::new((Mutex::new(0usize), Condvar::new()));
+        struct SlotGuard(Arc<(Mutex<usize>, Condvar)>);
+        impl Drop for SlotGuard {
+            fn drop(&mut self) {
+                *self.0 .0.lock().unwrap() -= 1;
+                self.0 .1.notify_one();
+            }
+        }
+
+        let mut handlers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        while !self.shutdown.load(Ordering::SeqCst) && !drain_requested() {
+            {
+                let (lock, cv) = &*slots;
+                let n = lock.lock().unwrap();
+                if *n >= self.cfg.max_conns {
+                    // all slots busy: wait for one, re-checking the drain
+                    // flags on a bounded cadence
+                    let _ = cv.wait_timeout(n, Duration::from_millis(50)).unwrap();
+                    continue;
+                }
+            }
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    *slots.0.lock().unwrap() += 1;
+                    let guard = SlotGuard(slots.clone());
+                    let ctx = ctx.clone();
+                    ctx.tallies.bump(&ctx.tallies.connections, Counter::NetConnections);
+                    handlers.push(std::thread::spawn(move || {
+                        let _slot = guard;
+                        handle_conn(stream, &ctx);
+                    }));
+                    if handlers.len() >= 2 * self.cfg.max_conns.max(8) {
+                        handlers.retain(|h| !h.is_finished());
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => std::thread::sleep(POLL),
+                // transient accept failures (e.g. ECONNABORTED): keep serving
+                Err(_) => std::thread::sleep(POLL),
+            }
+        }
+
+        // drain: refuse new connections, let every in-flight handler run
+        // to its Done (the scheduler is still stepping), then stop the
+        // scheduler and collect the outcome
+        drop(self.listener);
+        for h in handlers {
+            let _ = h.join();
+        }
+        let outcome = handle.finish_all()?;
+        Ok((outcome, ctx.tallies.report()))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// connection handling
+// ---------------------------------------------------------------------------
+
+fn handle_conn(stream: TcpStream, ctx: &Ctx) {
+    let _ = stream.set_read_timeout(Some(SOCKET_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(SOCKET_TIMEOUT));
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut w = stream;
+    let req = match http::read_request(&mut reader) {
+        Ok(Some(r)) => r,
+        Ok(None) => return, // peer connected and left
+        Err(_) => {
+            let _ = http::write_response(&mut w, 400, JSON_TYPE, br#"{"error":"malformed request"}"#);
+            return;
+        }
+    };
+    ctx.tallies.bump(&ctx.tallies.requests, Counter::NetRequests);
+    match (req.method.as_str(), req.target.as_str()) {
+        ("GET", "/healthz") => {
+            let _ = http::write_response(&mut w, 200, JSON_TYPE, br#"{"status":"ok"}"#);
+        }
+        ("GET", "/metrics") => {
+            let body = crate::obs::export::metrics_live_json();
+            let _ = http::write_response(&mut w, 200, JSON_TYPE, body.as_bytes());
+        }
+        ("POST", "/shutdown") => {
+            ctx.shutdown.store(true, Ordering::SeqCst);
+            let _ = http::write_response(&mut w, 200, JSON_TYPE, br#"{"draining":true}"#);
+        }
+        ("POST", "/v1/completions") => completions(&mut w, &req, ctx),
+        _ => {
+            let _ = http::write_response(&mut w, 404, JSON_TYPE, br#"{"error":"no such endpoint"}"#);
+        }
+    }
+}
+
+/// Parse, submit, and answer one completion request (buffered or
+/// streaming).
+fn completions(w: &mut TcpStream, req: &http::Request, ctx: &Ctx) {
+    let parsed = std::str::from_utf8(&req.body)
+        .map_err(|_| "body is not utf-8".to_string())
+        .and_then(Json::parse);
+    let doc = match parsed {
+        Ok(d) => d,
+        Err(e) => {
+            let body = format!("{{\"error\":\"bad json: {}\"}}", escape(&e));
+            let _ = http::write_response(w, 400, JSON_TYPE, body.as_bytes());
+            return;
+        }
+    };
+    let Some(prompt) = doc.get("prompt").and_then(Json::as_i32_arr) else {
+        let _ = http::write_response(
+            w,
+            400,
+            JSON_TYPE,
+            br#"{"error":"'prompt' must be an array of integer token ids"}"#,
+        );
+        return;
+    };
+    let id = doc
+        .get("id")
+        .and_then(Json::as_u64)
+        .unwrap_or_else(|| ctx.next_id.fetch_add(1, Ordering::Relaxed));
+    let max_new = doc
+        .get("max_tokens")
+        .and_then(Json::as_u64)
+        .map(|n| n as usize)
+        .unwrap_or(ctx.default_max_new);
+    let ignore_eos = doc.get("ignore_eos").and_then(Json::as_bool).unwrap_or(false);
+    let stream_mode = doc.get("stream").and_then(Json::as_bool).unwrap_or(false);
+
+    let received = Instant::now();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let cancel = Arc::new(AtomicBool::new(false));
+    let mut gr = GenRequest::new(id, prompt, max_new).with_sink(tx).with_cancel(cancel.clone());
+    if ignore_eos {
+        gr = gr.ignore_eos();
+    }
+    match ctx.queue.try_submit(gr) {
+        Err(SubmitError::Full(_)) => {
+            ctx.tallies.bump(&ctx.tallies.rejected_429, Counter::Net429);
+            let _ = http::write_response(
+                w,
+                429,
+                JSON_TYPE,
+                br#"{"error":"admission queue is full, retry later"}"#,
+            );
+        }
+        Err(SubmitError::Closed(_)) => {
+            let _ = http::write_response(
+                w,
+                503,
+                JSON_TYPE,
+                br#"{"error":"server is draining"}"#,
+            );
+        }
+        Err(SubmitError::Invalid { reason, .. }) => {
+            let body = format!("{{\"error\":\"{}\"}}", escape(&reason));
+            let _ = http::write_response(w, 400, JSON_TYPE, body.as_bytes());
+        }
+        Ok(()) => {
+            if stream_mode {
+                stream_response(w, &rx, &cancel, received, ctx);
+            } else {
+                buffered_response(w, &rx);
+            }
+        }
+    }
+}
+
+/// Buffered mode: wait for the terminal event, answer one JSON document.
+/// (Token events are drained and dropped; the terminal result carries the
+/// full token vector.)
+fn buffered_response(w: &mut TcpStream, rx: &Receiver<StreamEvent>) {
+    match drain_to_done(rx) {
+        Some(r) => {
+            let _ = http::write_response(w, 200, JSON_TYPE, result_json(&r, false).as_bytes());
+        }
+        None => {
+            // the scheduler died without a terminal event (worker panic)
+            let _ = http::write_response(w, 500, JSON_TYPE, br#"{"error":"scheduler died"}"#);
+        }
+    }
+}
+
+/// Streaming mode: one SSE frame per token as it decodes, a terminal
+/// `done` frame with the full result. A failed frame write is the client
+/// disconnecting: set the cancel flag (the scheduler evicts the lane and
+/// frees its KV slot at the next step boundary) and drain the channel to
+/// its terminal event so teardown is deterministic.
+fn stream_response(
+    w: &mut TcpStream,
+    rx: &Receiver<StreamEvent>,
+    cancel: &AtomicBool,
+    received: Instant,
+    ctx: &Ctx,
+) {
+    ctx.tallies.bump(&ctx.tallies.streams, Counter::NetStreams);
+    if http::start_chunked(w, 200, SSE_TYPE).is_err() {
+        disconnected(rx, cancel, ctx);
+        return;
+    }
+    let mut first = true;
+    loop {
+        match rx.recv() {
+            Ok(StreamEvent::Token(t)) => {
+                let frame = http::sse_frame(&format!("{{\"token\":{t}}}"));
+                if http::write_chunk(w, &frame).is_err() {
+                    disconnected(rx, cancel, ctx);
+                    return;
+                }
+                if first {
+                    first = false;
+                    // wire TTFT: request received -> first frame on the
+                    // socket (includes queueing + scheduling + decode)
+                    if crate::obs::enabled() {
+                        crate::obs::wire_ttft()
+                            .record_ms(received.elapsed().as_secs_f64() * 1e3);
+                    }
+                }
+            }
+            Ok(StreamEvent::Done(r)) => {
+                let frame = http::sse_frame(&result_json(&r, true));
+                if http::write_chunk(w, &frame).is_err() {
+                    // disconnect raced the terminal frame: the request is
+                    // already off its lane, nothing to cancel
+                    return;
+                }
+                let _ = http::end_chunked(w);
+                return;
+            }
+            Err(_) => {
+                // scheduler died without a terminal event
+                let _ = http::end_chunked(w);
+                return;
+            }
+        }
+    }
+}
+
+/// Client-disconnect path: request the eviction and wait for the
+/// scheduler's terminal event so the lane/slot handoff is observable.
+fn disconnected(rx: &Receiver<StreamEvent>, cancel: &AtomicBool, ctx: &Ctx) {
+    cancel.store(true, Ordering::SeqCst);
+    ctx.tallies.bump(&ctx.tallies.disconnects, Counter::NetDisconnects);
+    drain_to_done(rx);
+}
+
+/// Pull events until the terminal one; `None` if the channel closed
+/// without it (scheduler worker death).
+fn drain_to_done(rx: &Receiver<StreamEvent>) -> Option<GenResult> {
+    loop {
+        match rx.recv() {
+            Ok(StreamEvent::Done(r)) => return Some(r),
+            Ok(_) => {}
+            Err(_) => return None,
+        }
+    }
+}
+
+/// Render one result as the response/terminal-frame JSON. Non-finite
+/// latencies (zero-budget or cancelled-before-first-token requests)
+/// render as `null` — JSON has no NaN.
+fn result_json(r: &GenResult, done: bool) -> String {
+    let ms = |x: f64| if x.is_finite() { format!("{x:.3}") } else { "null".to_string() };
+    let join = |ts: &[i32]| {
+        ts.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(",")
+    };
+    format!(
+        "{{{}\"id\":{},\"prompt_len\":{},\"tokens\":[{}],\"generated\":[{}],\
+         \"queued_ms\":{},\"ttft_ms\":{},\"total_ms\":{},\"error\":{}}}",
+        if done { "\"done\":true," } else { "" },
+        r.id,
+        r.prompt_len,
+        join(&r.tokens),
+        join(r.generated()),
+        ms(r.queued_ms),
+        ms(r.ttft_ms),
+        ms(r.total_ms),
+        match &r.error {
+            Some(e) => format!("\"{}\"", escape(e)),
+            None => "null".to_string(),
+        },
+    )
+}
+
+// ---------------------------------------------------------------------------
+// SIGINT -> graceful drain
+// ---------------------------------------------------------------------------
+
+#[cfg(unix)]
+mod sigint {
+    use std::os::raw::c_int;
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static DRAIN: AtomicBool = AtomicBool::new(false);
+
+    type SigHandler = extern "C" fn(c_int);
+    extern "C" {
+        fn signal(signum: c_int, handler: SigHandler) -> usize;
+    }
+
+    extern "C" fn on_sigint(_: c_int) {
+        // only an atomic store: async-signal-safe by construction
+        DRAIN.store(true, Ordering::SeqCst);
+    }
+
+    pub fn install() {
+        unsafe {
+            signal(2 /* SIGINT */, on_sigint);
+        }
+    }
+
+    pub fn requested() -> bool {
+        DRAIN.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(not(unix))]
+mod sigint {
+    pub fn install() {}
+
+    pub fn requested() -> bool {
+        false
+    }
+}
+
+/// Route SIGINT into the graceful-drain path (`silq serve --listen` calls
+/// this; ^C then finishes in-flight lanes instead of killing the
+/// process). No-op on non-unix targets.
+pub fn install_sigint_drain() {
+    sigint::install();
+}
+
+/// Whether a SIGINT drain was requested (always false before
+/// [`install_sigint_drain`] and on non-unix targets).
+pub fn drain_requested() -> bool {
+    sigint::requested()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result(err: Option<&str>) -> GenResult {
+        GenResult {
+            id: 7,
+            prompt_len: 2,
+            tokens: vec![1, 2, 9, 10],
+            queued_ms: 0.5,
+            ttft_ms: f64::NAN,
+            total_ms: 3.25,
+            decode_tok_per_sec: f64::NAN,
+            admitted_step: 0,
+            finished_step: 2,
+            error: err.map(|e| e.to_string()),
+        }
+    }
+
+    #[test]
+    fn result_json_renders_nan_as_null_and_escapes_errors() {
+        let doc = result_json(&result(None), false);
+        let parsed = Json::parse(&doc).expect("result json must parse");
+        assert_eq!(parsed.get("id").unwrap().as_u64(), Some(7));
+        assert_eq!(parsed.get("generated").unwrap().as_i32_arr(), Some(vec![9, 10]));
+        assert_eq!(parsed.get("ttft_ms").unwrap(), &Json::Null);
+        assert_eq!(parsed.get("total_ms").unwrap().as_f64(), Some(3.25));
+        assert!(parsed.get("done").is_none());
+        let doc = result_json(&result(Some("bad \"quote\"")), true);
+        let parsed = Json::parse(&doc).expect("escaped error must still parse");
+        assert_eq!(parsed.get("done").unwrap().as_bool(), Some(true));
+        assert_eq!(parsed.get("error").unwrap().as_str(), Some("bad \"quote\""));
+    }
+
+    #[test]
+    fn tallies_mirror_into_the_report() {
+        let t = Tallies::default();
+        t.bump(&t.connections, Counter::NetConnections);
+        t.bump(&t.requests, Counter::NetRequests);
+        t.bump(&t.requests, Counter::NetRequests);
+        let r = t.report();
+        assert_eq!((r.connections, r.requests), (1, 2));
+        assert_eq!((r.streams, r.disconnects, r.rejected_429), (0, 0, 0));
+    }
+}

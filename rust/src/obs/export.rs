@@ -10,7 +10,7 @@
 
 use std::io::Write;
 
-use super::{events, snapshot, TraceEvent};
+use super::{events, snapshot, wire_ttft, TraceEvent};
 
 fn push_event_json(out: &mut String, ev: &TraceEvent) {
     // names/cats are static identifiers (no quotes or escapes by
@@ -45,6 +45,33 @@ pub fn chrome_trace_json() -> String {
     out
 }
 
+/// Render the live counter registry plus the wire-TTFT summary as a
+/// `silq.metrics.v1` JSON document — what `GET /metrics` serves, so a
+/// running server is scrapeable without `--metrics-out` (which instead
+/// exports the per-run `ServeStats` time series under the same schema
+/// tag).
+pub fn metrics_live_json() -> String {
+    let mut out = String::with_capacity(512);
+    out.push_str("{\"schema\":\"silq.metrics.v1\",\"counters\":{");
+    for (i, (name, v)) in snapshot().iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!("\"{name}\":{v}"));
+    }
+    let h = wire_ttft();
+    out.push_str(&format!(
+        "}},\"wire_ttft\":{{\"count\":{},\"mean_ms\":{:.3},\"p50_ms\":{:.3},\
+         \"p95_ms\":{:.3},\"max_ms\":{:.3}}}}}",
+        h.count(),
+        h.mean_ms(),
+        h.percentile_ms(50.0),
+        h.percentile_ms(95.0),
+        h.max_ms(),
+    ));
+    out
+}
+
 /// Write the Chrome trace document to `path`.
 pub fn write_chrome_trace(path: &str) -> std::io::Result<()> {
     let mut f = std::fs::File::create(path)?;
@@ -63,6 +90,16 @@ mod tests {
         assert!(doc.contains("\"traceEvents\":["));
         assert!(doc.contains("\"counters\":{"));
         assert!(doc.contains("\"gemv_calls\":"));
+    }
+
+    #[test]
+    fn live_metrics_json_has_schema_counters_and_wire_ttft() {
+        let doc = metrics_live_json();
+        assert!(doc.contains("\"schema\":\"silq.metrics.v1\""));
+        assert!(doc.contains("\"net_requests\":"));
+        assert!(doc.contains("\"serve_cancelled\":"));
+        assert!(doc.contains("\"wire_ttft\":{\"count\":"));
+        assert!(!doc.contains("NaN"), "live metrics leaked a NaN:\n{doc}");
     }
 
     #[test]

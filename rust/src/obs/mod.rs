@@ -85,10 +85,23 @@ pub enum Counter {
     /// shards claimed across all pool jobs (`pool_shards / pool_jobs` =
     /// mean fan-out width)
     PoolShards,
+    /// requests cancelled mid-flight (client disconnect evicted the lane)
+    ServeCancelled,
+    /// TCP connections accepted by the HTTP front-end
+    NetConnections,
+    /// HTTP requests parsed and routed (all endpoints)
+    NetRequests,
+    /// streaming completions started (SSE/chunked responses opened)
+    NetStreams,
+    /// client disconnects detected mid-stream (write failures that
+    /// triggered a lane cancellation)
+    NetDisconnects,
+    /// requests rejected with 429 because the admission queue was full
+    Net429,
 }
 
 /// Number of registered counters (the registry array size).
-pub const N_COUNTERS: usize = 21;
+pub const N_COUNTERS: usize = 27;
 
 impl Counter {
     /// Every counter, in declaration order — drives [`snapshot`].
@@ -114,6 +127,12 @@ impl Counter {
         Counter::QatSteps,
         Counter::PoolJobs,
         Counter::PoolShards,
+        Counter::ServeCancelled,
+        Counter::NetConnections,
+        Counter::NetRequests,
+        Counter::NetStreams,
+        Counter::NetDisconnects,
+        Counter::Net429,
     ];
 
     /// Stable snake_case name (report keys, JSON fields).
@@ -140,6 +159,12 @@ impl Counter {
             Counter::QatSteps => "qat_steps",
             Counter::PoolJobs => "pool_jobs",
             Counter::PoolShards => "pool_shards",
+            Counter::ServeCancelled => "serve_cancelled",
+            Counter::NetConnections => "net_connections",
+            Counter::NetRequests => "net_requests",
+            Counter::NetStreams => "net_streams",
+            Counter::NetDisconnects => "net_disconnects",
+            Counter::Net429 => "net_429",
         }
     }
 }
@@ -221,6 +246,7 @@ pub fn reset() {
         c.store(0, Ordering::Relaxed);
     }
     EVENTS.lock().unwrap().clear();
+    wire_ttft().reset();
 }
 
 // ---------------------------------------------------------------------------
@@ -387,6 +413,14 @@ impl Histogram {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// Exact sum of all recorded samples in integer microseconds — the
+    /// quantity `record_ms` actually accumulates (`(ms * 1e3) as u64` per
+    /// sample), exposed so tests can pin histogram totals bit-for-bit
+    /// against an independently computed sum.
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
     pub fn is_empty(&self) -> bool {
         self.count() == 0
     }
@@ -418,6 +452,18 @@ impl Histogram {
         }
     }
 
+    /// Zero every cell (tests and fresh runs; used by the global
+    /// [`reset`] for the wire-TTFT histogram).
+    pub fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum_us.store(0, Ordering::Relaxed);
+        self.min_us.store(u64::MAX, Ordering::Relaxed);
+        self.max_us.store(0, Ordering::Relaxed);
+    }
+
     /// Nearest-rank percentile over the buckets: the upper edge of the
     /// bucket holding the target rank, clamped to the observed `[min,
     /// max]`. 0 for an empty histogram.
@@ -440,6 +486,24 @@ impl Histogram {
         }
         self.max_ms()
     }
+}
+
+// ---------------------------------------------------------------------------
+// global wire-latency histogram
+// ---------------------------------------------------------------------------
+
+/// Wire-level time-to-first-token: stamped by the HTTP front-end when the
+/// first token *frame hits the socket*, so it includes queueing, HTTP
+/// parsing, and scheduler latency — the number a client actually feels.
+/// Global (like the counters) because connections outlive any one serve
+/// run; exported by `GET /metrics` and reset with [`reset`].
+static WIRE_TTFT: Histogram = Histogram::new();
+
+/// The global wire-TTFT histogram (see [`WIRE_TTFT`] docs). Recording
+/// respects the [`enabled`] flag at the call site in `net`, not here —
+/// the histogram itself is always writable.
+pub fn wire_ttft() -> &'static Histogram {
+    &WIRE_TTFT
 }
 
 /// Serialize unit tests that toggle the global enable flag or trace ring

@@ -23,10 +23,13 @@
 //! module only owns the serving mechanics — queueing, lane scheduling and
 //! latency accounting.
 //!
-//! The engine is deliberately network-free: in this offline environment the
-//! "clients" are load-generator threads (`silq serve` drives itself), but
-//! the queue/scheduler/pool layering is the one a socket frontend would sit
-//! on top of.
+//! Clients reach the engine two ways: in-process load-generator threads
+//! (`silq serve` drives itself), or over real sockets through the
+//! [`crate::net`] HTTP front-end (`silq serve --listen ADDR`). Both sit on
+//! the same queue/scheduler/pool layering; the wire path additionally
+//! threads a per-token [`TokenSink`] and a cancellation flag through
+//! [`GenRequest`] so tokens stream out as they decode and a client
+//! disconnect frees the lane (and its KV slot) mid-decode.
 
 pub mod backend;
 pub mod scheduler;
@@ -43,8 +46,28 @@ pub use crate::hostmodel::{CacheStore, HostCfg, KvPool, QuantRule};
 
 use anyhow::{bail, ensure, Result};
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+/// Per-token delivery from the scheduler to a streaming client. The
+/// scheduler pushes one [`StreamEvent::Token`] per generated token and
+/// exactly one [`StreamEvent::Done`] when the request leaves its lane —
+/// completed, rejected at admission, or cancelled. Senders never block
+/// (the channel is unbounded) and a hung or vanished receiver never stalls
+/// the decode loop: send failures are ignored.
+#[derive(Debug, Clone)]
+pub enum StreamEvent {
+    /// One generated token, in decode order.
+    Token(i32),
+    /// Terminal event: the request's full result (also returned from the
+    /// scheduler's result vector; `error` distinguishes reject/cancel).
+    Done(GenResult),
+}
+
+/// The sending half a streaming client attaches via
+/// [`GenRequest::with_sink`].
+pub type TokenSink = std::sync::mpsc::Sender<StreamEvent>;
 
 /// One generation request as submitted by a client.
 #[derive(Debug)]
@@ -57,11 +80,26 @@ pub struct GenRequest {
     /// off so every request decodes its full budget deterministically
     pub stop_on_eos: bool,
     pub submitted: Instant,
+    /// streaming delivery: every generated token (and the terminal result)
+    /// is sent here as it happens; `None` for buffered requests
+    pub sink: Option<TokenSink>,
+    /// cooperative cancellation: when set to `true` (client disconnect),
+    /// the scheduler evicts the session at the next step boundary, freeing
+    /// the lane and its KV slot mid-decode
+    pub cancel: Option<Arc<AtomicBool>>,
 }
 
 impl GenRequest {
     pub fn new(id: u64, prompt: Vec<i32>, max_new: usize) -> GenRequest {
-        GenRequest { id, prompt, max_new, stop_on_eos: true, submitted: Instant::now() }
+        GenRequest {
+            id,
+            prompt,
+            max_new,
+            stop_on_eos: true,
+            submitted: Instant::now(),
+            sink: None,
+            cancel: None,
+        }
     }
 
     /// Decode the full `max_new` budget even if the model emits EOS.
@@ -69,10 +107,23 @@ impl GenRequest {
         self.stop_on_eos = false;
         self
     }
+
+    /// Stream tokens (and the terminal result) into `sink` as they decode.
+    pub fn with_sink(mut self, sink: TokenSink) -> GenRequest {
+        self.sink = Some(sink);
+        self
+    }
+
+    /// Attach a cancellation flag; setting it evicts the session at the
+    /// next scheduler step.
+    pub fn with_cancel(mut self, flag: Arc<AtomicBool>) -> GenRequest {
+        self.cancel = Some(flag);
+        self
+    }
 }
 
 /// One finished request with its latency breakdown.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct GenResult {
     pub id: u64,
     pub prompt_len: usize,
@@ -90,7 +141,8 @@ pub struct GenResult {
     pub admitted_step: u64,
     pub finished_step: u64,
     /// set when the request was rejected at admission (bad prompt, cache
-    /// exhaustion); the run itself survives and serves everything else
+    /// exhaustion) or cancelled mid-decode (client disconnect); the run
+    /// itself survives and serves everything else
     pub error: Option<String>,
 }
 
@@ -99,6 +151,37 @@ impl GenResult {
         &self.tokens[self.prompt_len..]
     }
 }
+
+/// Why a non-blocking [`AdmissionQueue::try_submit`] did not enqueue. The
+/// `Full`/`Closed` variants hand the request back so the caller can retry
+/// or answer the client without rebuilding it — the HTTP layer maps them
+/// to `429 Too Many Requests` and `503 Service Unavailable`.
+#[derive(Debug)]
+pub enum SubmitError {
+    /// The queue is at capacity right now (transient: retry later).
+    Full(GenRequest),
+    /// The queue is closed — the server is draining; no retry will succeed.
+    Closed(GenRequest),
+    /// The request can never be accepted (empty prompt).
+    Invalid {
+        /// id of the rejected request
+        id: u64,
+        /// what was wrong with it
+        reason: String,
+    },
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Full(r) => write!(f, "admission queue is full (request {})", r.id),
+            SubmitError::Closed(r) => write!(f, "admission queue is closed (request {})", r.id),
+            SubmitError::Invalid { id, reason } => write!(f, "invalid request {id}: {reason}"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 /// Bounded MPSC admission queue: producers block when the queue is full
 /// (backpressure), the scheduler polls it every step.
@@ -134,6 +217,28 @@ impl AdmissionQueue {
         }
         if g.closed {
             bail!("admission queue is closed");
+        }
+        g.q.push_back(req);
+        crate::obs::add(crate::obs::Counter::ServeEnqueued, 1);
+        self.avail.notify_one();
+        Ok(())
+    }
+
+    /// Non-blocking submit: enqueue if there is space, otherwise return a
+    /// typed error **with the request inside** instead of blocking the
+    /// producer. This is the socket-facing entry point — a full queue must
+    /// become backpressure on the wire (429), not a stalled connection
+    /// handler.
+    pub fn try_submit(&self, req: GenRequest) -> std::result::Result<(), SubmitError> {
+        if req.prompt.is_empty() {
+            return Err(SubmitError::Invalid { id: req.id, reason: "empty prompt".into() });
+        }
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(SubmitError::Closed(req));
+        }
+        if g.q.len() >= self.cap {
+            return Err(SubmitError::Full(req));
         }
         g.q.push_back(req);
         crate::obs::add(crate::obs::Counter::ServeEnqueued, 1);
@@ -177,21 +282,23 @@ impl AdmissionQueue {
     }
 }
 
+/// Everything a drained scheduler worker hands back: completion-ordered
+/// results, the run's stats, and the backend itself (so callers can assert
+/// the shutdown invariants — every KV slot free, nothing resident).
+pub type ServeOutcome<B> = (Vec<GenResult>, ServeStats, B);
+
 /// A scheduler running on its own worker thread, sharing the admission
 /// queue with any number of producer threads — the multi-threaded shape of
 /// the engine (and the proof the serve types are `Send`-sound).
-pub struct ServeHandle {
+pub struct ServeHandle<B: DecodeBackend + Send + 'static> {
     queue: Arc<AdmissionQueue>,
-    worker: std::thread::JoinHandle<Result<(Vec<GenResult>, ServeStats)>>,
+    worker: std::thread::JoinHandle<Result<ServeOutcome<B>>>,
 }
 
-impl ServeHandle {
+impl<B: DecodeBackend + Send + 'static> ServeHandle<B> {
     /// Spawn a scheduler over `backend` with `lanes` batch lanes and an
     /// admission queue of `queue_cap` entries.
-    pub fn spawn<B>(backend: B, lanes: usize, queue_cap: usize) -> Result<ServeHandle>
-    where
-        B: DecodeBackend + Send + 'static,
-    {
+    pub fn spawn(backend: B, lanes: usize, queue_cap: usize) -> Result<ServeHandle<B>> {
         /// Closes the queue when the worker exits — by return, error or
         /// panic — so producers blocked in `submit` always wake up and get
         /// an error instead of deadlocking on a dead scheduler.
@@ -209,7 +316,7 @@ impl ServeHandle {
             let _guard = CloseOnExit(q.clone());
             let mut stats = ServeStats::new(lanes);
             let results = sched.run(&q, &mut stats)?;
-            Ok((results, stats))
+            Ok((results, stats, sched.into_backend()))
         });
         Ok(ServeHandle { queue, worker })
     }
@@ -221,6 +328,13 @@ impl ServeHandle {
 
     /// Close the queue, wait for the drain, and return results + stats.
     pub fn finish(self) -> Result<(Vec<GenResult>, ServeStats)> {
+        self.finish_all().map(|(results, stats, _)| (results, stats))
+    }
+
+    /// Like [`ServeHandle::finish`], but also hand back the drained
+    /// backend so shutdown invariants (`all_slots_free`, zero resident KV
+    /// bytes) can be asserted after the run.
+    pub fn finish_all(self) -> Result<ServeOutcome<B>> {
         self.queue.close();
         match self.worker.join() {
             Ok(r) => r,
@@ -268,6 +382,86 @@ mod tests {
     fn queue_rejects_empty_prompt() {
         let q = AdmissionQueue::new(4);
         assert!(q.submit(GenRequest::new(1, vec![], 1)).is_err());
+    }
+
+    #[test]
+    fn try_submit_maps_full_closed_and_invalid() {
+        let q = AdmissionQueue::new(1);
+        q.try_submit(GenRequest::new(1, vec![1], 1)).unwrap();
+        // full: the request comes back intact for a retry / 429 answer
+        match q.try_submit(GenRequest::new(2, vec![7, 8], 3)) {
+            Err(SubmitError::Full(r)) => {
+                assert_eq!((r.id, r.max_new), (2, 3));
+                assert_eq!(r.prompt, vec![7, 8]);
+            }
+            other => panic!("expected Full, got {other:?}"),
+        }
+        assert_eq!(q.depth(), 1, "a failed try_submit must not enqueue");
+        // space frees -> accepted again
+        assert!(q.try_pop().is_some());
+        q.try_submit(GenRequest::new(3, vec![1], 1)).unwrap();
+        // closed wins over full and over space alike
+        q.close();
+        match q.try_submit(GenRequest::new(4, vec![1], 1)) {
+            Err(SubmitError::Closed(r)) => assert_eq!(r.id, 4),
+            other => panic!("expected Closed, got {other:?}"),
+        }
+        // invalid is terminal: no request to hand back, just the reason
+        let q2 = AdmissionQueue::new(1);
+        match q2.try_submit(GenRequest::new(5, vec![], 1)) {
+            Err(SubmitError::Invalid { id, reason }) => {
+                assert_eq!(id, 5);
+                assert!(reason.contains("empty"));
+            }
+            other => panic!("expected Invalid, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn try_submit_race_never_overfills_or_loses() {
+        // several threads hammer try_submit against a tiny queue while a
+        // consumer drains it: the cap must hold at every instant and every
+        // accepted request must come out exactly once
+        let cap = 3;
+        let q = Arc::new(AdmissionQueue::new(cap));
+        let accepted = Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let submitters: Vec<_> = (0..4u64)
+            .map(|t| {
+                let q = q.clone();
+                let accepted = accepted.clone();
+                std::thread::spawn(move || {
+                    for i in 0..200u64 {
+                        match q.try_submit(GenRequest::new(t * 1000 + i, vec![1], 1)) {
+                            Ok(()) => {
+                                accepted.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Err(SubmitError::Full(_)) => std::thread::yield_now(),
+                            Err(e) => panic!("unexpected submit error: {e}"),
+                        }
+                    }
+                })
+            })
+            .collect();
+        let consumer = {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                let mut drained = 0u64;
+                loop {
+                    assert!(q.depth() <= cap, "queue overfilled under racing try_submit");
+                    match q.try_pop() {
+                        Some(_) => drained += 1,
+                        None if q.is_drained() => break drained,
+                        None => std::thread::yield_now(),
+                    }
+                }
+            })
+        };
+        for t in submitters {
+            t.join().unwrap();
+        }
+        q.close();
+        let drained = consumer.join().unwrap();
+        assert_eq!(drained, accepted.load(Ordering::Relaxed), "accepted != drained");
     }
 
     #[test]

@@ -14,7 +14,7 @@ use crate::obs::{self, Counter};
 use crate::serve::backend::DecodeBackend;
 use crate::serve::session::Session;
 use crate::serve::stats::ServeStats;
-use crate::serve::{AdmissionQueue, GenResult};
+use crate::serve::{AdmissionQueue, GenResult, StreamEvent, TokenSink};
 use crate::util::Timer;
 
 pub struct Scheduler<B: DecodeBackend> {
@@ -41,18 +41,34 @@ impl<B: DecodeBackend> Scheduler<B> {
         &self.backend
     }
 
+    /// Tear the scheduler down and hand the backend back, so drained runs
+    /// can assert the shutdown invariants (`all_slots_free`, zero resident
+    /// KV bytes) on the very backend that served them.
+    pub fn into_backend(self) -> B {
+        self.backend
+    }
+
     fn active(&self) -> usize {
         self.lanes.iter().filter(|l| l.is_some()).count()
     }
 
+    /// Deliver the terminal event to a streaming client (no-op for
+    /// buffered requests; a vanished receiver is ignored).
+    fn deliver(sink: Option<TokenSink>, r: &GenResult) {
+        if let Some(sink) = sink {
+            let _ = sink.send(StreamEvent::Done(r.clone()));
+        }
+    }
+
     /// Complete session `s` out of `lane`: evict, convert, record — and
     /// emit the request's retroactive lifecycle trace events ("queued" =
-    /// submit→admit on the lane track, "request" = admit→now, "ttft" =
-    /// submit→first token) now that the whole timeline is known.
+    /// submit→admit on the lane track, "request" = admit→now) now that the
+    /// whole timeline is known. (The "ttft" event is emitted live, at the
+    /// first generated token.)
     fn complete(
         &mut self,
         lane: usize,
-        s: Session,
+        mut s: Session,
         stats: &mut ServeStats,
         results: &mut Vec<GenResult>,
     ) {
@@ -67,14 +83,38 @@ impl<B: DecodeBackend> Scheduler<B> {
             obs::event_at("queued", "serve", tid, s.submitted, queued_us, s.id);
             let active_us = s.admitted.elapsed().as_micros() as u64;
             obs::event_at("request", "serve", tid, s.admitted, active_us, s.id);
-            if let Some(ft) = s.first_token {
-                let ttft_us =
-                    ft.checked_duration_since(s.submitted).unwrap_or_default().as_micros() as u64;
-                obs::event_at("ttft", "serve", tid, s.submitted, ttft_us, s.id);
-            }
         }
+        let sink = s.sink.take();
         let r = s.into_result(self.step_no);
         stats.on_complete(&r);
+        Self::deliver(sink, &r);
+        results.push(r);
+    }
+
+    /// Evict a cancelled session out of `lane` mid-decode: the client went
+    /// away, so the lane and its KV slot free immediately and a queued
+    /// request can take them this very step. Counts toward
+    /// [`Counter::ServeEvicted`] like a completion (one evict per lane
+    /// departure), plus [`Counter::ServeCancelled`].
+    fn cancel(
+        &mut self,
+        lane: usize,
+        mut s: Session,
+        stats: &mut ServeStats,
+        results: &mut Vec<GenResult>,
+    ) {
+        self.backend.evict(lane);
+        obs::add(Counter::ServeCancelled, 1);
+        obs::add(Counter::ServeEvicted, 1);
+        if obs::enabled() {
+            let active_us = s.admitted.elapsed().as_micros() as u64;
+            obs::event_at("cancelled", "serve", lane as u32 + 1, s.admitted, active_us, s.id);
+        }
+        let sink = s.sink.take();
+        let mut r = s.into_result(self.step_no);
+        r.error = Some("cancelled by client disconnect".into());
+        stats.on_cancel(&r);
+        Self::deliver(sink, &r);
         results.push(r);
     }
 
@@ -86,10 +126,15 @@ impl<B: DecodeBackend> Scheduler<B> {
         let seq_len = self.backend.seq_len();
         loop {
             let admit_timer = Timer::start();
-            // 1. evict finished sessions, freeing their lane + cache slot
+            // 1. evict finished and cancelled sessions, freeing their lane
+            //    + cache slot (a cancelled lane frees mid-decode: the
+            //    client is gone, nothing waits on its remaining budget)
             for lane in 0..self.lanes.len() {
-                let done = matches!(&self.lanes[lane], Some(s) if s.done(seq_len));
-                if done {
+                let Some(s) = &self.lanes[lane] else { continue };
+                if s.cancelled() {
+                    let s = self.lanes[lane].take().unwrap();
+                    self.cancel(lane, s, stats, &mut results);
+                } else if s.done(seq_len) {
                     let s = self.lanes[lane].take().unwrap();
                     self.complete(lane, s, stats, &mut results);
                 }
@@ -118,9 +163,12 @@ impl<B: DecodeBackend> Scheduler<B> {
                         // take down the run (or lose the other sessions)
                         self.backend.evict(lane); // release any partial admit
                         obs::add(Counter::ServeRejected, 1);
-                        let mut r = Session::admit(req, self.step_no).into_result(self.step_no);
+                        let mut sess = Session::admit(req, self.step_no);
+                        let sink = sess.sink.take();
+                        let mut r = sess.into_result(self.step_no);
                         r.error = Some(e.to_string());
                         stats.on_reject();
+                        Self::deliver(sink, &r);
                         results.push(r);
                     }
                 }
@@ -152,7 +200,27 @@ impl<B: DecodeBackend> Scheduler<B> {
             let mut new_tokens = 0usize;
             for (lane, tok) in next.into_iter().enumerate() {
                 if let (Some(s), Some(t)) = (self.lanes[lane].as_mut(), tok) {
+                    let first = s.generated().is_empty();
                     s.push(t);
+                    if first {
+                        // TTFT lands in the stats the moment the first
+                        // token exists — streaming clients see it then,
+                        // so the accounting must too (bit-equal to the old
+                        // record-at-completion value: same instant, same
+                        // conversion — pinned by obs_integration)
+                        let ttft_ms = s.ttft_ms.unwrap_or(f64::NAN);
+                        stats.on_first_token(ttft_ms);
+                        if obs::enabled() {
+                            let ttft_us = s
+                                .first_token
+                                .and_then(|ft| ft.checked_duration_since(s.submitted))
+                                .unwrap_or_default()
+                                .as_micros() as u64;
+                            obs::event_at(
+                                "ttft", "serve", lane as u32 + 1, s.submitted, ttft_us, s.id,
+                            );
+                        }
+                    }
                     new_tokens += 1;
                 }
             }
@@ -311,5 +379,91 @@ mod tests {
     fn rejects_more_lanes_than_backend() {
         assert!(Scheduler::new(MockBackend::new(2, 8), 3).is_err());
         assert!(Scheduler::new(MockBackend::new(2, 8), 0).is_err());
+    }
+
+    #[test]
+    fn cancelled_session_frees_the_lane_for_the_next_request() {
+        use std::sync::atomic::AtomicBool;
+        use std::sync::Arc;
+        // one lane; request 1 has a huge budget but its client is already
+        // gone — the scheduler must evict it after at most one step and
+        // serve request 2 to completion instead of decoding 500 tokens
+        let flag = Arc::new(AtomicBool::new(true));
+        let queue = AdmissionQueue::new(2);
+        queue
+            .submit(GenRequest::new(1, vec![1, 2], 500).with_cancel(flag))
+            .unwrap();
+        queue.submit(GenRequest::new(2, vec![1, 3], 3)).unwrap();
+        queue.close();
+        let mut sched = Scheduler::new(MockBackend::new(1, 1024), 1).unwrap();
+        let mut stats = ServeStats::new(1);
+        let results = sched.run(&queue, &mut stats).unwrap();
+        assert_eq!(results.len(), 2);
+        let r1 = by_id(&results, 1);
+        assert!(r1.error.as_deref().unwrap().contains("cancel"), "{:?}", r1.error);
+        assert!(r1.generated().len() <= 1, "cancelled lane kept decoding");
+        let r2 = by_id(&results, 2);
+        assert!(r2.error.is_none());
+        assert_eq!(r2.generated().len(), 3);
+        assert_eq!((stats.completed, stats.cancelled), (1, 1));
+        // the cancelled request's generated tokens still count: the token
+        // counter invariant (stats == per-step series sum) must hold
+        let generated: usize = results.iter().map(|r| r.generated().len()).sum();
+        assert_eq!(stats.total_new_tokens, generated);
+        // the backend saw exactly one evict per lane departure
+        assert_eq!(sched.backend().evicted[0], 2);
+    }
+
+    #[test]
+    fn sink_streams_tokens_then_done() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let queue = AdmissionQueue::new(1);
+        queue
+            .submit(GenRequest::new(5, vec![1, 2], 3).with_sink(tx))
+            .unwrap();
+        queue.close();
+        let mut sched = Scheduler::new(MockBackend::new(2, 64), 2).unwrap();
+        let mut stats = ServeStats::new(2);
+        let results = sched.run(&queue, &mut stats).unwrap();
+        assert_eq!(results.len(), 1);
+        let events: Vec<_> = rx.try_iter().collect();
+        assert_eq!(events.len(), 4, "3 tokens + 1 done, got {events:?}");
+        for (i, ev) in events.iter().take(3).enumerate() {
+            match ev {
+                crate::serve::StreamEvent::Token(t) => assert_eq!(*t, 100, "token {i}"),
+                other => panic!("expected token, got {other:?}"),
+            }
+        }
+        match &events[3] {
+            crate::serve::StreamEvent::Done(r) => {
+                assert_eq!(r.id, 5);
+                assert_eq!(r.generated(), results[0].generated());
+                assert!(r.error.is_none());
+            }
+            other => panic!("expected done, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejected_request_still_gets_its_done_event() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let queue = AdmissionQueue::new(1);
+        queue
+            .submit(GenRequest::new(9, vec![99, 2], 3).with_sink(tx)) // marker: admit fails
+            .unwrap();
+        queue.close();
+        let mut sched = Scheduler::new(MockBackend::new(1, 64), 1).unwrap();
+        let mut stats = ServeStats::new(1);
+        let results = sched.run(&queue, &mut stats).unwrap();
+        assert_eq!(stats.rejected, 1);
+        assert!(results[0].error.is_some());
+        let events: Vec<_> = rx.try_iter().collect();
+        assert_eq!(events.len(), 1);
+        match &events[0] {
+            crate::serve::StreamEvent::Done(r) => {
+                assert!(r.error.as_deref().unwrap().contains("marker"))
+            }
+            other => panic!("expected done, got {other:?}"),
+        }
     }
 }

@@ -1,9 +1,11 @@
 //! One in-flight generation session: a request bound to a scheduler lane.
 
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::data::vocab::EOS;
-use crate::serve::{GenRequest, GenResult};
+use crate::serve::{GenRequest, GenResult, StreamEvent, TokenSink};
 
 /// State of one admitted request while it occupies a lane.
 #[derive(Debug)]
@@ -18,6 +20,14 @@ pub struct Session {
     pub admitted: Instant,
     pub admitted_step: u64,
     pub first_token: Option<Instant>,
+    /// time-to-first-token, stamped **at the first emitted token** (not
+    /// retroactively at completion) so streaming latency is honest; `None`
+    /// until then (and forever, for zero-budget/rejected requests)
+    pub ttft_ms: Option<f64>,
+    /// streaming delivery target (client sink), carried from the request
+    pub sink: Option<TokenSink>,
+    /// cooperative cancellation flag, carried from the request
+    pub cancel: Option<Arc<AtomicBool>>,
 }
 
 impl Session {
@@ -32,6 +42,9 @@ impl Session {
             admitted: Instant::now(),
             admitted_step: step,
             first_token: None,
+            ttft_ms: None,
+            sink: req.sink,
+            cancel: req.cancel,
         }
     }
 
@@ -39,12 +52,27 @@ impl Session {
         &self.tokens[self.prompt_len..]
     }
 
-    /// Record one generated token (stamps time-to-first-token once).
+    /// Record one generated token: stamps time-to-first-token once (at
+    /// emission time, from the same instant stored in `first_token`, so
+    /// the value is bit-identical to the old compute-at-completion
+    /// accounting) and streams the token to the sink when one is attached.
     pub fn push(&mut self, tok: i32) {
         if self.first_token.is_none() {
-            self.first_token = Some(Instant::now());
+            let now = Instant::now();
+            self.first_token = Some(now);
+            self.ttft_ms = Some(now.duration_since(self.submitted).as_secs_f64() * 1e3);
         }
         self.tokens.push(tok);
+        if let Some(sink) = &self.sink {
+            // a vanished receiver must never stall the decode loop
+            let _ = sink.send(StreamEvent::Token(tok));
+        }
+    }
+
+    /// Whether the client asked for this session to be torn down (socket
+    /// disconnect); the scheduler checks this every step boundary.
+    pub fn cancelled(&self) -> bool {
+        self.cancel.as_ref().is_some_and(|c| c.load(Ordering::Relaxed))
     }
 
     /// A session is done when it hit its token budget, emitted EOS, or
@@ -58,10 +86,6 @@ impl Session {
     pub fn into_result(self, finished_step: u64) -> GenResult {
         let now = Instant::now();
         let new_tokens = self.tokens.len() - self.prompt_len;
-        let ttft_ms = self
-            .first_token
-            .map(|t| t.duration_since(self.submitted).as_secs_f64() * 1e3)
-            .unwrap_or(f64::NAN);
         let decode_secs = self
             .first_token
             .map(|t| now.duration_since(t).as_secs_f64())
@@ -71,7 +95,7 @@ impl Session {
             prompt_len: self.prompt_len,
             tokens: self.tokens,
             queued_ms: self.admitted.duration_since(self.submitted).as_secs_f64() * 1e3,
-            ttft_ms,
+            ttft_ms: self.ttft_ms.unwrap_or(f64::NAN),
             total_ms: now.duration_since(self.submitted).as_secs_f64() * 1e3,
             decode_tok_per_sec: if decode_secs > 0.0 && new_tokens > 1 {
                 (new_tokens - 1) as f64 / decode_secs
@@ -122,5 +146,55 @@ mod tests {
         assert_eq!(r.generated(), &[10, 11]);
         assert_eq!((r.admitted_step, r.finished_step), (2, 9));
         assert!(r.ttft_ms >= 0.0 && r.total_ms >= r.ttft_ms);
+    }
+
+    #[test]
+    fn ttft_is_stamped_at_first_push_and_survives_into_the_result() {
+        let mut s = Session::admit(req(1, vec![1, 2], 4), 0);
+        assert!(s.ttft_ms.is_none());
+        s.push(9);
+        let at_first = s.ttft_ms.expect("first push must stamp ttft");
+        s.push(10);
+        assert_eq!(s.ttft_ms, Some(at_first), "later pushes must not restamp");
+        // bit-equal to the first_token-instant accounting by construction
+        let from_instant =
+            s.first_token.unwrap().duration_since(s.submitted).as_secs_f64() * 1e3;
+        assert_eq!(at_first.to_bits(), from_instant.to_bits());
+        let r = s.into_result(1);
+        assert_eq!(r.ttft_ms.to_bits(), at_first.to_bits());
+    }
+
+    #[test]
+    fn sink_receives_every_token_in_order() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut s = Session::admit(req(2, vec![1], 3).with_sink(tx), 0);
+        s.push(5);
+        s.push(6);
+        s.push(7);
+        let got: Vec<i32> = rx
+            .try_iter()
+            .map(|ev| match ev {
+                StreamEvent::Token(t) => t,
+                other => panic!("unexpected event {other:?}"),
+            })
+            .collect();
+        assert_eq!(got, vec![5, 6, 7]);
+        // a dropped receiver must not panic later pushes
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut s = Session::admit(req(3, vec![1], 2).with_sink(tx), 0);
+        drop(rx);
+        s.push(9);
+        assert_eq!(s.generated(), &[9]);
+    }
+
+    #[test]
+    fn cancel_flag_reads_through() {
+        let flag = Arc::new(AtomicBool::new(false));
+        let s = Session::admit(req(4, vec![1], 2).with_cancel(flag.clone()), 0);
+        assert!(!s.cancelled());
+        flag.store(true, Ordering::Relaxed);
+        assert!(s.cancelled());
+        // no flag attached -> never cancelled
+        assert!(!Session::admit(req(5, vec![1], 2), 0).cancelled());
     }
 }

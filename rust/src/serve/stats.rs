@@ -45,6 +45,8 @@ pub struct ServeStats {
     pub completed: usize,
     /// requests rejected at admission (bad prompt, cache exhaustion)
     pub rejected: usize,
+    /// requests cancelled mid-flight (client disconnect evicted the lane)
+    pub cancelled: usize,
     pub total_new_tokens: usize,
     /// per-step gauges (summed; divide by steps for means)
     queue_depth_sum: f64,
@@ -73,6 +75,7 @@ impl ServeStats {
             steps: 0,
             completed: 0,
             rejected: 0,
+            cancelled: 0,
             total_new_tokens: 0,
             queue_depth_sum: 0.0,
             active_lane_sum: 0.0,
@@ -114,13 +117,22 @@ impl ServeStats {
         self.step_secs += step_ms / 1e3;
     }
 
-    /// Record one finished request.
+    /// Record a request's time-to-first-token **at first-token time** (the
+    /// scheduler calls this the step the token is emitted, so streaming
+    /// clients and the histogram see the same latency at the same moment;
+    /// non-finite samples are skipped, matching the old completion-time
+    /// filter bit for bit).
+    pub fn on_first_token(&mut self, ttft_ms: f64) {
+        if ttft_ms.is_finite() {
+            self.ttft.record_ms(ttft_ms);
+        }
+    }
+
+    /// Record one finished request. (TTFT was already recorded at
+    /// first-token time by [`ServeStats::on_first_token`].)
     pub fn on_complete(&mut self, r: &GenResult) {
         self.completed += 1;
         self.total_new_tokens += r.generated().len();
-        if r.ttft_ms.is_finite() {
-            self.ttft.record_ms(r.ttft_ms);
-        }
         self.queued.record_ms(r.queued_ms);
         self.total.record_ms(r.total_ms);
     }
@@ -128,6 +140,15 @@ impl ServeStats {
     /// Record one request rejected at admission.
     pub fn on_reject(&mut self) {
         self.rejected += 1;
+    }
+
+    /// Record one request cancelled mid-flight. The tokens it generated
+    /// before the disconnect still count toward `total_new_tokens` — the
+    /// per-step series already counted them, and the two accountings must
+    /// stay exactly equal (the soak pins this).
+    pub fn on_cancel(&mut self, r: &GenResult) {
+        self.cancelled += 1;
+        self.total_new_tokens += r.generated().len();
     }
 
     /// Attribute wall time spent admitting/evicting (includes prefill).
@@ -191,7 +212,7 @@ impl ServeStats {
     /// The report `silq serve` prints.
     pub fn report(&self) -> String {
         format!(
-            "served {} requests ({} rejected) / {} tokens in {:.2}s over {} steps\n\
+            "served {} requests ({} rejected, {} cancelled) / {} tokens in {:.2}s over {} steps\n\
              throughput     {:>9.1} tok/s\n\
              ttft           {:>9.2} ms mean   {:>8.2} ms p95\n\
              queued         {:>9.2} ms mean\n\
@@ -200,6 +221,7 @@ impl ServeStats {
              kv pool peak   {:>9.1} KiB (deployment format)",
             self.completed,
             self.rejected,
+            self.cancelled,
             self.total_new_tokens,
             self.wall_secs,
             self.steps,
@@ -251,13 +273,15 @@ impl ServeStats {
             ));
         }
         out.push_str(&format!(
-            "],\"totals\":{{\"steps\":{},\"completed\":{},\"rejected\":{},\"new_tokens\":{},\
+            "],\"totals\":{{\"steps\":{},\"completed\":{},\"rejected\":{},\"cancelled\":{},\
+             \"new_tokens\":{},\
              \"wall_secs\":{:.4},\"tok_per_s\":{:.2},\"ttft_ms_mean\":{:.3},\
              \"ttft_ms_p95\":{:.3},\"queued_ms_mean\":{:.3},\"kv_bytes_peak\":{},\
              \"mean_queue_depth\":{:.3},\"batch_occupancy\":{:.4}}}}}",
             self.steps,
             self.completed,
             self.rejected,
+            self.cancelled,
             self.total_new_tokens,
             self.wall_secs,
             self.tokens_per_sec(),
@@ -299,6 +323,8 @@ mod tests {
         let mut st = ServeStats::new(2);
         let mut s = Session::admit(GenRequest::new(1, vec![1, 2], 3), 0);
         s.push(5);
+        // the scheduler records TTFT the step the first token is emitted
+        st.on_first_token(s.ttft_ms.unwrap());
         s.push(6);
         st.on_complete(&s.into_result(2));
         st.finish();
@@ -308,6 +334,27 @@ mod tests {
         assert!(st.report().contains("served 1 requests"));
         assert_eq!(st.ttft.count(), 1);
         assert_eq!(st.total.count(), 1);
+    }
+
+    #[test]
+    fn cancel_accounting_keeps_token_totals_exact() {
+        let mut st = ServeStats::new(2);
+        let mut s = Session::admit(GenRequest::new(9, vec![1, 2], 8), 0);
+        s.push(5);
+        st.on_first_token(s.ttft_ms.unwrap());
+        s.push(6);
+        st.on_cancel(&s.into_result(3));
+        st.finish();
+        assert_eq!((st.completed, st.cancelled), (0, 1));
+        // partial progress still counts: the per-step series saw these tokens
+        assert_eq!(st.total_new_tokens, 2);
+        assert_eq!(st.ttft.count(), 1, "TTFT was already live when the cancel landed");
+        assert_eq!(st.total.count(), 0, "total-latency histogram is completed-only");
+        assert!(st.report().contains("1 cancelled"));
+        assert!(st.metrics_json().contains("\"cancelled\":1"));
+        // NaN TTFT on a cancelled-before-first-token request is skipped
+        st.on_first_token(f64::NAN);
+        assert_eq!(st.ttft.count(), 1);
     }
 
     #[test]

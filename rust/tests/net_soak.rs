@@ -1,0 +1,230 @@
+//! Wire soak: deterministic id-keyed churn through the HTTP front-end
+//! over real sockets — mixed streaming/buffered traffic, forced
+//! mid-stream disconnects, admission rejections (out-of-vocab prompts),
+//! zero-budget and window-clipped completions, and genuine queue-full
+//! 429s (clients retry until accepted) — asserting that three independent
+//! ledgers agree exactly at drain:
+//!
+//! * `ServeStats` (the scheduler's own accounting),
+//! * the global telemetry counters (`obs`),
+//! * the wire-side `NetReport` tallies plus what the clients observed.
+//!
+//! Single-test binary on purpose: the telemetry registry is process
+//! global, so exact counter deltas need the process to themselves.
+
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+use silq::hostmodel::host_test_params;
+use silq::net::{client as netclient, Json, Server, ServerCfg};
+use silq::obs::Counter;
+use silq::serve::{CacheStore, DecodeBackend, HostBackend, HostCfg};
+
+fn soak_cfg() -> HostCfg {
+    HostCfg {
+        vocab: 256,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 4,
+        d_ff: 64,
+        seq_len: 24,
+        policy: "w4a8kv8".parse().unwrap(),
+        rope_theta: 10000.0,
+    }
+}
+
+/// Malformed request: admission must reject it (never the transport).
+fn is_bad(id: u64) -> bool {
+    id % 17 == 3
+}
+
+/// Even ids stream token-by-token, odd ids take the buffered answer.
+fn is_streaming(id: u64) -> bool {
+    id % 2 == 0
+}
+
+/// Same budget classes as the in-process soak: zero-budget, window-bound,
+/// and small completions.
+fn budget(id: u64, seq_len: usize) -> usize {
+    match id % 13 {
+        0 => 0,
+        1 => seq_len * 2,
+        m => m as usize % 6 + 1,
+    }
+}
+
+/// Streaming requests with the window-bound budget hang up after one
+/// token: plenty of decode left, so the server's next frame write fails
+/// and the lane must cancel mid-decode.
+fn wants_disconnect(id: u64) -> bool {
+    is_streaming(id) && id % 13 == 1 && !is_bad(id)
+}
+
+fn prompt(id: u64) -> Vec<i32> {
+    let plen = 1 + (id % 7) as usize;
+    let mut p: Vec<i32> =
+        (0..plen as i32).map(|k| 1 + (id as i32 * 31 + k * 7) % 250).collect();
+    if is_bad(id) {
+        p.push(9999); // out of vocab: rejected at admission
+    }
+    p
+}
+
+#[test]
+fn wire_soak_accounts_for_every_request_and_frees_everything() {
+    silq::obs::set_enabled(true);
+    silq::kernels::pool::configure(silq::kernels::pool::env_threads().unwrap_or(4));
+    let c0: Vec<u64> = Counter::ALL.iter().map(|&c| silq::obs::get(c)).collect();
+    let delta = move |c: Counter| silq::obs::get(c) - c0[c as usize];
+    let w0 = silq::obs::wire_ttft().count();
+
+    let clients_n: u64 = 6;
+    let n: u64 = if cfg!(debug_assertions) { 120 } else { 360 };
+    let lanes = 2;
+    let cfg = soak_cfg();
+    let seq_len = cfg.seq_len;
+    let params = host_test_params(&cfg, 71);
+    let backend = HostBackend::new(cfg, lanes, &params, CacheStore::Int8).unwrap();
+    // capacity (2 lanes + 2 queue slots) deliberately below the 6
+    // concurrent clients, so queue-full 429s happen for real
+    let server = Server::bind(ServerCfg {
+        addr: "127.0.0.1:0".into(),
+        lanes,
+        queue_cap: 2,
+        max_conns: 8,
+        default_max_new: 4,
+    })
+    .unwrap();
+    let addr = server.local_addr().to_string();
+    let flag = server.shutdown_flag();
+    let worker = std::thread::spawn(move || server.run(backend).unwrap());
+
+    // churn: each client drives its id slice sequentially, retrying 429s
+    // until accepted — so every request is enqueued exactly once
+    let clients: Vec<_> = (0..clients_n)
+        .map(|c| {
+            let addr = addr.clone();
+            std::thread::spawn(move || -> (u64, u64) {
+                let (mut retries, mut disconnects) = (0u64, 0u64);
+                for id in (0..n).filter(|id| id % clients_n == c) {
+                    let body = netclient::completion_body(
+                        id, &prompt(id), budget(id, seq_len), true, is_streaming(id),
+                    );
+                    loop {
+                        let o = if is_streaming(id) {
+                            let cut = if wants_disconnect(id) { Some(1) } else { None };
+                            netclient::complete_streaming(&addr, &body, cut).unwrap()
+                        } else {
+                            netclient::complete_buffered(&addr, &body).unwrap()
+                        };
+                        match o.status {
+                            429 => {
+                                retries += 1;
+                                std::thread::sleep(Duration::from_millis(1));
+                            }
+                            200 => {
+                                if is_bad(id) {
+                                    // rejected at admission: delivered as a
+                                    // terminal document with the reason
+                                    let done = o.done.expect("rejection lost its terminal doc");
+                                    let err =
+                                        done.get("error").and_then(Json::as_str).unwrap_or("");
+                                    assert!(err.contains("vocab"), "request {id}: {err:?}");
+                                    assert!(o.tokens.is_empty());
+                                } else if wants_disconnect(id) {
+                                    assert!(o.disconnected, "request {id} finished too fast");
+                                    disconnects += 1;
+                                } else {
+                                    let plen = 1 + (id % 7) as usize;
+                                    let want = match id % 13 {
+                                        0 => 0,
+                                        1 => seq_len - plen, // clipped at the window
+                                        m => m as usize % 6 + 1,
+                                    };
+                                    assert_eq!(
+                                        o.tokens.len(),
+                                        want,
+                                        "request {id}: wrong budget over the wire"
+                                    );
+                                }
+                                break;
+                            }
+                            s => panic!("request {id}: unexpected status {s}"),
+                        }
+                    }
+                }
+                (retries, disconnects)
+            })
+        })
+        .collect();
+    let (mut retries, mut client_disconnects) = (0u64, 0u64);
+    for t in clients {
+        let (r, d) = t.join().unwrap();
+        retries += r;
+        client_disconnects += d;
+    }
+
+    flag.store(true, Ordering::SeqCst);
+    let ((results, stats, backend), net) = worker.join().unwrap();
+
+    // --- every request terminal exactly once, by one of three fates ---
+    assert_eq!(results.len(), n as usize, "a request was lost or duplicated");
+    let mut ids: Vec<u64> = results.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), n as usize, "duplicate request ids in the results");
+    let n_bad = (0..n).filter(|&id| is_bad(id)).count();
+    assert_eq!(stats.rejected, n_bad);
+    assert_eq!(
+        stats.completed + stats.rejected + stats.cancelled,
+        n as usize,
+        "completed/rejected/cancelled do not partition the requests"
+    );
+    // with ~5 guaranteed-cancellable disconnects the odds of zero actual
+    // cancellations are negligible — a zero here means the disconnect ->
+    // cancel path is broken
+    assert!(stats.cancelled >= 1, "no disconnect cancelled its lane");
+    let generated: usize = results.iter().map(|r| r.generated().len()).sum();
+    assert_eq!(stats.total_new_tokens, generated, "token accounting diverged");
+
+    // --- ledger 2: the telemetry counters equal the scheduler's stats ---
+    assert_eq!(delta(Counter::ServeEnqueued), n, "every request enqueued exactly once");
+    assert_eq!(delta(Counter::ServeCompleted), stats.completed as u64);
+    assert_eq!(delta(Counter::ServeRejected), stats.rejected as u64);
+    assert_eq!(delta(Counter::ServeCancelled), stats.cancelled as u64);
+    assert_eq!(
+        delta(Counter::ServeEvicted),
+        (stats.completed + stats.cancelled) as u64,
+        "one evict per lane departure, completed or cancelled"
+    );
+    assert_eq!(delta(Counter::ServeAdmitted), (stats.completed + stats.cancelled) as u64);
+    assert_eq!(delta(Counter::ServeNewTokens), stats.total_new_tokens as u64);
+    assert_eq!(
+        silq::obs::get(Counter::SpanEnter),
+        silq::obs::get(Counter::SpanExit),
+        "unbalanced spans after the soak"
+    );
+
+    // --- ledger 3: wire tallies equal the clients' observations ---
+    let n_streams = (0..n).filter(|&id| is_streaming(id)).count() as u64;
+    assert_eq!(net.requests, n + retries, "one request tally per POST, retries included");
+    assert_eq!(net.connections, n + retries);
+    assert_eq!(net.rejected_429, retries, "server 429s != client-observed 429s");
+    assert_eq!(net.streams, n_streams, "a 429'd attempt must not count as a stream");
+    assert_eq!(delta(Counter::NetRequests), net.requests);
+    assert_eq!(delta(Counter::NetConnections), net.connections);
+    assert_eq!(delta(Counter::Net429), net.rejected_429);
+    assert_eq!(delta(Counter::NetStreams), net.streams);
+    assert_eq!(delta(Counter::NetDisconnects), net.disconnects);
+    // every cancellation came from a detected disconnect; not every
+    // hangup is detected (the terminal frame can win the race)
+    assert!(net.disconnects >= stats.cancelled as u64);
+    assert!(net.disconnects <= client_disconnects);
+    assert!(silq::obs::wire_ttft().count() > w0, "no wire-TTFT sample recorded");
+
+    // --- shutdown: nothing resident, nothing leaked ---
+    assert!(backend.all_slots_free(), "a lane leaked its KV slot past drain");
+    assert_eq!(backend.kv_bytes(), 0, "resident KV bytes after drain");
+    silq::kernels::pool::shutdown();
+    assert_eq!(silq::kernels::pool::worker_count(), 0, "worker pool leaked threads");
+}

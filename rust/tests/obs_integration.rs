@@ -65,6 +65,20 @@ fn serve_run_exports_consistent_trace_and_metrics() {
     assert!(delta(Counter::KvBytesRead) > 0);
     assert_eq!(obs::get(Counter::SpanEnter), obs::get(Counter::SpanExit), "unbalanced spans");
 
+    // --- TTFT accounting: stamping at the first emitted token (streaming
+    // rework) must be bit-equal to the per-result values — same Instant,
+    // same ms conversion, summed in the same µs units the histogram keeps
+    assert_eq!(stats.ttft.count(), results.iter().filter(|r| r.ttft_ms.is_finite()).count() as u64);
+    assert_eq!(
+        stats.ttft.sum_us(),
+        results
+            .iter()
+            .filter(|r| r.ttft_ms.is_finite())
+            .map(|r| (r.ttft_ms * 1e3) as u64)
+            .sum::<u64>(),
+        "first-token TTFT stamps diverged from the result latencies"
+    );
+
     // --- per-step series: one row per step, sums match the aggregates ---
     assert_eq!(stats.series.len() as u64, stats.steps);
     assert_eq!(

@@ -18,7 +18,8 @@ echo "== cargo test -q --release (integration + property suites) =="
 # run it via `make soak`.
 cargo test -q --offline --release \
   --test proptests --test serve_integration --test serve_soak \
-  --test kernels_integration --test kernels_zero_alloc --test obs_integration
+  --test kernels_integration --test kernels_zero_alloc --test obs_integration \
+  --test net_integration --test net_soak
 
 echo "== kernel identity + serve suites at SILQ_THREADS=1 and =4 =="
 # every identity pin must hold bit-exactly at any worker-pool width: run
@@ -26,7 +27,7 @@ echo "== kernel identity + serve suites at SILQ_THREADS=1 and =4 =="
 for t in 1 4; do
   echo "-- SILQ_THREADS=$t --"
   SILQ_THREADS=$t cargo test -q --offline --release \
-    --test proptests --test kernels_integration --test serve_soak
+    --test proptests --test kernels_integration --test serve_soak --test net_soak
 done
 
 echo "== trace export smoke (--trace / --metrics-out) =="
@@ -51,6 +52,109 @@ print("trace smoke: OK "
       f"({len(trace['traceEvents'])} events, {len(metrics['steps'])} steps)")
 EOF
 rm -f "$TRACE_OUT" "$METRICS_OUT"
+
+echo "== serve-over-HTTP smoke (silq serve --listen) =="
+# end to end over a real socket: start the server on an ephemeral port,
+# stream one SSE completion, check /healthz and the live /metrics schema,
+# then drain through POST /shutdown and require a clean exit
+SERVE_LOG="$(mktemp /tmp/silq_smoke.XXXXXX.serve.log)"
+cargo run -q --release --offline -- serve \
+  --listen 127.0.0.1:0 --batch 2 --prec w4a8kv8 > "$SERVE_LOG" &
+SERVE_PID=$!
+for _ in $(seq 1 100); do
+  grep -q "listening on " "$SERVE_LOG" && break
+  sleep 0.1
+done
+ADDR="$(sed -n 's/^listening on \([0-9.:]*\) .*/\1/p' "$SERVE_LOG" | head -n1)"
+if [ -z "$ADDR" ]; then
+  kill "$SERVE_PID" 2>/dev/null || true
+  echo "http smoke: server never came up"; cat "$SERVE_LOG"; exit 1
+fi
+if ! python3 - "$ADDR" <<'EOF'
+import json, socket, sys
+
+host, port = sys.argv[1].rsplit(":", 1)
+
+def req(method, path, body=b""):
+    s = socket.create_connection((host, int(port)), timeout=30)
+    s.sendall((f"{method} {path} HTTP/1.1\r\nHost: smoke\r\n"
+               f"Content-Type: application/json\r\nContent-Length: {len(body)}\r\n"
+               f"Connection: close\r\n\r\n").encode() + body)
+    data = b""
+    while True:
+        chunk = s.recv(65536)
+        if not chunk:
+            break
+        data += chunk
+    s.close()
+    head, _, rest = data.partition(b"\r\n\r\n")
+    return head, rest
+
+def dechunk(b):
+    out = b""
+    while b:
+        line, _, b = b.partition(b"\r\n")
+        n = int(line, 16)
+        if n == 0:
+            break
+        out += b[:n]
+        b = b[n + 2:]
+    return out
+
+head, body = req("GET", "/healthz")
+assert b" 200 " in head.split(b"\r\n", 1)[0], head
+assert json.loads(body)["status"] == "ok", body
+
+head, body = req("POST", "/v1/completions", json.dumps(
+    {"id": 1, "prompt": [1, 2, 3], "max_tokens": 4,
+     "ignore_eos": True, "stream": True}).encode())
+assert b" 200 " in head.split(b"\r\n", 1)[0], head
+assert b"text/event-stream" in head, head
+frames = [json.loads(f[6:]) for f in dechunk(body).split(b"\n\n")
+          if f.strip().startswith(b"data: ")]
+tokens = [f["token"] for f in frames if "token" in f]
+done = [f for f in frames if f.get("done")]
+assert len(tokens) == 4, frames
+assert done and done[0]["generated"] == tokens, frames
+assert done[0]["ttft_ms"] is not None and done[0]["error"] is None, frames
+
+head, body = req("GET", "/metrics")
+m = json.loads(body)
+assert m["schema"] == "silq.metrics.v1", m.get("schema")
+assert m["wire_ttft"]["count"] >= 1, m["wire_ttft"]
+assert m["counters"]["net_streams"] >= 1, m["counters"]
+
+head, body = req("POST", "/shutdown")
+assert json.loads(body)["draining"] is True, body
+print(f"http smoke: OK ({len(tokens)} tokens streamed, "
+      f"{m['counters']['net_requests']} wire requests)")
+EOF
+then
+  kill "$SERVE_PID" 2>/dev/null || true
+  echo "http smoke failed"; cat "$SERVE_LOG"; exit 1
+fi
+wait "$SERVE_PID"
+grep -q "drained clean" "$SERVE_LOG" || { echo "no clean drain"; cat "$SERVE_LOG"; exit 1; }
+rm -f "$SERVE_LOG"
+
+echo "== bench-serve smoke (wire bench rows) =="
+# the wire bench must produce parseable rows with the TTFT percentiles
+# and provenance fields populated
+BENCH_OUT="$(mktemp /tmp/silq_smoke.XXXXXX.bench.json)"
+cargo run -q --release --offline -- bench-serve \
+  --clients 1,2 --per_client 2 --max_new 4 --prec w4a8kv8 --out "$BENCH_OUT" > /dev/null
+python3 - "$BENCH_OUT" <<'EOF'
+import json, sys
+rows = json.load(open(sys.argv[1]))
+assert len(rows) == 2, rows
+for r in rows:
+    assert r["mode"] == "closed" and r["backend"] == "host+http", r
+    assert r["completed"] == r["clients"] * 2 and r["dropped"] == 0, r
+    assert r["wire_ttft_ms_p50"] > 0 and r["wire_ttft_ms_p95"] >= r["wire_ttft_ms_p50"], r
+    assert r["tok_per_s"] > 0 and r["threads"] >= 1 and r["kernel"], r
+print(f"bench-serve smoke: OK ({len(rows)} rows)")
+EOF
+rm -f "$BENCH_OUT"
 
 echo "== cargo clippy -D warnings =="
 cargo clippy --offline --all-targets -- -D warnings
