@@ -2,7 +2,7 @@
 #
 # `make check` is the tier-1 gate every PR must keep green (see ROADMAP.md).
 
-.PHONY: check fmt artifacts bench bench-quick pytest soak
+.PHONY: check fmt artifacts bench bench-quick pytest soak chaos
 
 # tier-1: release build + full test suite + clippy (-D warnings) + formatting
 check:
@@ -33,3 +33,10 @@ pytest:
 # NOT part of tier-1; run locally before serve/scheduler changes
 soak:
 	cd rust && SILQ_SOAK=long cargo test --offline --release --test serve_soak -- --nocapture
+
+# chaos soak: a seeded fault plan (KV alloc failures, shard stalls, torn
+# frame writes, forced queue-full, a slowlorised request) driven through
+# the live HTTP server, asserting the stats/obs/client ledgers balance
+# exactly and /healthz recovers to ok after the storm (see rust/src/faults)
+chaos:
+	cd rust && cargo test --offline --release --test chaos_soak -- --nocapture

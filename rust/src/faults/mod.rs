@@ -1,0 +1,313 @@
+//! `faults` — deterministic fault injection for the serve stack.
+//!
+//! Chaos testing is only useful if the chaos is reproducible: a failure
+//! found under a fault plan must replay bit-for-bit on the next run. So
+//! this module injects faults at **planned trigger counts**, not random
+//! coin flips. Each injection [`Site`] keeps a process-global hit
+//! counter; a plan arms a site with "fire on the Nth hit" (optionally
+//! repeating every P hits after that), and the Nth hit fires no matter
+//! which thread lands on it. With the same plan and the same request
+//! stream, the same hits fire.
+//!
+//! ### Spec grammar (`--faults SPEC` / `SILQ_FAULTS`)
+//!
+//! ```text
+//!   SPEC   := entry ("," entry)*
+//!   entry  := site "@" nth ["+" period] [":" ms]   |  "seed=" u64
+//!   site   := "kv" | "lat" | "torn" | "stall" | "full"
+//! ```
+//!
+//! - `kv@N[+P]` — the Nth [`Site::KvAlloc`] attempt fails: the KV pool
+//!   reports exhaustion, which the engine must absorb as a typed reject.
+//! - `lat@N[+P]:MS` — the Nth kernel-pool job sleeps `MS` ms before
+//!   running, simulating a stalled shard (drives the step watchdog).
+//! - `torn@N[+P]` — the Nth streamed HTTP chunk write is torn: half the
+//!   frame goes out, then the write fails as a broken pipe.
+//! - `stall@N[+P]:MS` — the Nth wire-client request pauses `MS` ms
+//!   between its header block and its body (a cooperative slowloris,
+//!   exercising the server's read-timeout guard from inside the suite).
+//! - `full@N[+P]` — the Nth admission-queue `try_submit` is forced to
+//!   report `Full` regardless of actual depth (deterministic 429 +
+//!   `Retry-After` coverage).
+//! - `seed=N` — recorded for harnesses ([`seed`]): the chaos soak derives
+//!   its request mix from it so plan + seed fully determine a run. The
+//!   trigger counts themselves are exact, never sampled.
+//!
+//! ### Cost discipline
+//!
+//! Same rules as [`crate::obs`]: disabled means **one relaxed atomic
+//! load** per site hit and nothing else — no allocation, no locks — so
+//! the zero-alloc decode pins and the identity suites hold unchanged
+//! when no plan is armed. Armed sites stay lock-free (fetch_add + a few
+//! loads); only [`configure`]/[`clear`] write the plan.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+/// Where a fault can be injected. Each site owns one global hit counter;
+/// the variant order is the storage index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Site {
+    /// [`crate::hostmodel::KvPool::alloc`] — a fired hit allocates nothing
+    /// and returns `None` (pool exhausted).
+    KvAlloc = 0,
+    /// [`crate::kernels::pool::run`] — a fired hit sleeps the armed
+    /// latency before the job runs.
+    Shard = 1,
+    /// `net::http::write_chunk` — a fired hit writes half the chunk and
+    /// then fails with `BrokenPipe`.
+    NetWrite = 2,
+    /// `net::client` request writes — a fired hit flushes the header
+    /// block, sleeps the armed latency, then sends the body.
+    ClientStall = 3,
+    /// [`crate::serve::AdmissionQueue::try_submit`] — a fired hit reports
+    /// `Full` without enqueueing.
+    Submit = 4,
+}
+
+pub const N_SITES: usize = 5;
+
+impl Site {
+    pub const ALL: [Site; N_SITES] =
+        [Site::KvAlloc, Site::Shard, Site::NetWrite, Site::ClientStall, Site::Submit];
+
+    /// Spec-grammar name of the site.
+    pub fn name(self) -> &'static str {
+        match self {
+            Site::KvAlloc => "kv",
+            Site::Shard => "lat",
+            Site::NetWrite => "torn",
+            Site::ClientStall => "stall",
+            Site::Submit => "full",
+        }
+    }
+
+    fn from_name(s: &str) -> Option<Site> {
+        Site::ALL.into_iter().find(|site| site.name() == s)
+    }
+}
+
+/// Per-site plan + bookkeeping. `trigger == 0` means the site is unarmed
+/// (spec counts are 1-based, so 0 is never a valid trigger).
+struct SiteState {
+    /// fire on this hit number (1-based; 0 = unarmed)
+    trigger: AtomicU64,
+    /// after `trigger`, fire again every `period` hits (0 = once only)
+    period: AtomicU64,
+    /// site parameter — latency in ms for `lat` / `stall`
+    param_ms: AtomicU64,
+    /// total site invocations since the last [`configure`]/[`clear`]
+    hits: AtomicU64,
+    /// how many of those actually fired
+    injected: AtomicU64,
+}
+
+#[allow(clippy::declare_interior_mutable_const)] // per-element array init
+const SITE_INIT: SiteState = SiteState {
+    trigger: AtomicU64::new(0),
+    period: AtomicU64::new(0),
+    param_ms: AtomicU64::new(0),
+    hits: AtomicU64::new(0),
+    injected: AtomicU64::new(0),
+};
+
+static SITES: [SiteState; N_SITES] = [SITE_INIT; N_SITES];
+
+/// Master switch — the only thing the hot path reads when no plan is
+/// armed.
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+
+/// Plan seed (`seed=N`), for harnesses that derive their traffic from the
+/// fault plan.
+static SEED: AtomicU64 = AtomicU64::new(0);
+
+/// Is any fault plan armed? One relaxed load.
+#[inline]
+pub fn enabled() -> bool {
+    ACTIVE.load(Ordering::Relaxed)
+}
+
+/// The hot-path hook: count one hit at `site` and report whether the
+/// planned fault fires on it. Always `false` (after a single relaxed
+/// load) when no plan is armed.
+#[inline]
+pub fn should_inject(site: Site) -> bool {
+    if !enabled() {
+        return false;
+    }
+    fire(&SITES[site as usize])
+}
+
+#[cold]
+fn fire(s: &SiteState) -> bool {
+    let n = s.hits.fetch_add(1, Ordering::Relaxed) + 1;
+    let trigger = s.trigger.load(Ordering::Relaxed);
+    if trigger == 0 || n < trigger {
+        return false;
+    }
+    let period = s.period.load(Ordering::Relaxed);
+    let hit = n == trigger || (period > 0 && (n - trigger) % period == 0);
+    if hit {
+        s.injected.fetch_add(1, Ordering::Relaxed);
+        crate::obs::add(crate::obs::Counter::FaultsInjected, 1);
+    }
+    hit
+}
+
+/// The armed latency (ms) for a site — what a fired `lat`/`stall` hit
+/// should sleep.
+pub fn latency_ms(site: Site) -> u64 {
+    SITES[site as usize].param_ms.load(Ordering::Relaxed)
+}
+
+/// The plan seed (`seed=N`, default 0).
+pub fn seed() -> u64 {
+    SEED.load(Ordering::Relaxed)
+}
+
+/// `(site name, hits, injected)` for every site — for logs and soak
+/// assertions.
+pub fn report() -> Vec<(&'static str, u64, u64)> {
+    Site::ALL
+        .iter()
+        .map(|&site| {
+            let s = &SITES[site as usize];
+            (site.name(), s.hits.load(Ordering::Relaxed), s.injected.load(Ordering::Relaxed))
+        })
+        .collect()
+}
+
+/// Disarm everything and zero all counters.
+pub fn clear() {
+    ACTIVE.store(false, Ordering::Relaxed);
+    SEED.store(0, Ordering::Relaxed);
+    for s in &SITES {
+        s.trigger.store(0, Ordering::Relaxed);
+        s.period.store(0, Ordering::Relaxed);
+        s.param_ms.store(0, Ordering::Relaxed);
+        s.hits.store(0, Ordering::Relaxed);
+        s.injected.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Parse and arm a fault plan (see the module docs for the grammar).
+/// Replaces any previous plan; an empty spec is an error (use [`clear`]
+/// to disarm).
+pub fn configure(spec: &str) -> Result<(), String> {
+    let spec = spec.trim();
+    if spec.is_empty() {
+        return Err("empty fault spec".into());
+    }
+    // parse into a scratch plan first so a bad entry leaves the armed
+    // plan untouched
+    let mut plan: Vec<(Site, u64, u64, u64)> = Vec::new();
+    let mut seed = 0u64;
+    for entry in spec.split(',') {
+        let entry = entry.trim();
+        if let Some(v) = entry.strip_prefix("seed=") {
+            seed = v.parse().map_err(|_| format!("bad seed `{v}`"))?;
+            continue;
+        }
+        let (name, rest) =
+            entry.split_once('@').ok_or_else(|| format!("`{entry}`: expected site@nth"))?;
+        let site = Site::from_name(name)
+            .ok_or_else(|| format!("unknown fault site `{name}` (kv|lat|torn|stall|full)"))?;
+        let (count, ms) = match rest.split_once(':') {
+            Some((c, m)) => (c, m.parse().map_err(|_| format!("`{entry}`: bad ms `{m}`"))?),
+            None => (rest, 0u64),
+        };
+        let (nth, period) = match count.split_once('+') {
+            Some((n, p)) => (
+                n.parse().map_err(|_| format!("`{entry}`: bad nth `{n}`"))?,
+                p.parse().map_err(|_| format!("`{entry}`: bad period `{p}`"))?,
+            ),
+            None => (count.parse().map_err(|_| format!("`{entry}`: bad nth `{count}`"))?, 0u64),
+        };
+        if nth == 0 {
+            return Err(format!("`{entry}`: trigger counts are 1-based"));
+        }
+        if matches!(site, Site::Shard | Site::ClientStall) && ms == 0 {
+            return Err(format!("`{entry}`: {} needs `:ms`", site.name()));
+        }
+        plan.push((site, nth, period, ms));
+    }
+    clear();
+    SEED.store(seed, Ordering::Relaxed);
+    for (site, nth, period, ms) in plan {
+        let s = &SITES[site as usize];
+        s.trigger.store(nth, Ordering::Relaxed);
+        s.period.store(period, Ordering::Relaxed);
+        s.param_ms.store(ms, Ordering::Relaxed);
+    }
+    ACTIVE.store(true, Ordering::Relaxed);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Plan state is process-global; serialize the tests that touch it.
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        static M: std::sync::Mutex<()> = std::sync::Mutex::new(());
+        M.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn disabled_sites_never_fire_and_count_nothing() {
+        let _g = lock();
+        clear();
+        for _ in 0..100 {
+            assert!(!should_inject(Site::KvAlloc));
+        }
+        // hits are not even counted while disarmed
+        assert!(report().iter().all(|&(_, h, i)| h == 0 && i == 0));
+    }
+
+    #[test]
+    fn nth_hit_fires_exactly_once_without_period() {
+        let _g = lock();
+        configure("kv@3").unwrap();
+        let fired: Vec<bool> = (0..8).map(|_| should_inject(Site::KvAlloc)).collect();
+        assert_eq!(fired, [false, false, true, false, false, false, false, false]);
+        let (_, hits, injected) = report()[Site::KvAlloc as usize];
+        assert_eq!((hits, injected), (8, 1));
+        clear();
+    }
+
+    #[test]
+    fn periodic_triggers_repeat_and_params_stick() {
+        let _g = lock();
+        configure("lat@2+3:150, seed=7").unwrap();
+        assert_eq!(latency_ms(Site::Shard), 150);
+        assert_eq!(seed(), 7);
+        let fired: Vec<usize> = (1..=11usize).filter(|_| should_inject(Site::Shard)).collect();
+        // fires on hits 2, 5, 8, 11
+        assert_eq!(fired.len(), 4);
+        // other sites stay silent
+        assert!(!should_inject(Site::NetWrite));
+        clear();
+    }
+
+    #[test]
+    fn spec_errors_are_rejected_and_leave_plan_unarmed() {
+        let _g = lock();
+        clear();
+        for bad in ["", "bogus@1", "kv", "kv@0", "kv@x", "lat@3", "stall@2", "kv@1+z", "seed=x"] {
+            assert!(configure(bad).is_err(), "spec `{bad}` should be rejected");
+        }
+        assert!(!enabled());
+    }
+
+    #[test]
+    fn reconfigure_replaces_the_whole_plan() {
+        let _g = lock();
+        configure("kv@1").unwrap();
+        assert!(should_inject(Site::KvAlloc));
+        configure("full@1").unwrap();
+        // kv was re-zeroed: hit 1 of the new plan has no kv trigger
+        assert!(!should_inject(Site::KvAlloc));
+        assert!(should_inject(Site::Submit));
+        clear();
+    }
+}

@@ -289,8 +289,14 @@ impl KvPool {
         &self.rule
     }
 
-    /// Claim a session slot; `None` when the pool is exhausted.
+    /// Claim a session slot; `None` when the pool is exhausted. An armed
+    /// `kv@N` fault plan ([`crate::faults`]) forces exhaustion on planned
+    /// attempts — exercising the same typed-reject path a genuinely full
+    /// pool takes, never a distinct failure mode.
     pub fn alloc(&mut self) -> Option<usize> {
+        if crate::faults::should_inject(crate::faults::Site::KvAlloc) {
+            return None;
+        }
         let s = self.free.pop()?;
         self.in_use += 1;
         Some(s)

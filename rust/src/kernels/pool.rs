@@ -307,6 +307,14 @@ pub fn shard_range(n: usize, shards: usize, s: usize) -> (usize, usize) {
 /// `shards` `pool_shards` per actually-fanned-out job and wraps it in a
 /// `pool_job` span.
 pub fn run(shards: usize, job: &(dyn Fn(usize) + Sync)) {
+    // fault hook (`lat@N:MS`): a planned hit stalls this job before it
+    // runs — serial fast path included, so the step watchdog sees the
+    // same stall at any SILQ_THREADS. One relaxed load when disarmed.
+    if crate::faults::should_inject(crate::faults::Site::Shard) {
+        std::thread::sleep(std::time::Duration::from_millis(crate::faults::latency_ms(
+            crate::faults::Site::Shard,
+        )));
+    }
     if shards <= 1 || active_threads() <= 1 || IN_POOL_JOB.with(|f| f.get()) {
         for i in 0..shards {
             job(i);

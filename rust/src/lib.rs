@@ -23,6 +23,8 @@
 //!   wire bench client
 //! * [`obs`] — end-to-end telemetry: atomic counter registry, zero-alloc
 //!   spans + trace ring, latency histograms, Chrome-trace export
+//! * [`faults`] — deterministic fault injection (`--faults` plans) for
+//!   the chaos suites; one relaxed load when disarmed
 //! * [`data`] — SynthLang corpus + SFT dataset generators
 //! * [`coordinator`] — one runner per paper table/figure
 
@@ -37,6 +39,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod evalharness;
+pub mod faults;
 pub mod forward;
 pub mod hostmodel;
 pub mod kernels;

@@ -212,15 +212,28 @@ fn main() -> Result<()> {
                  \x20      --listen ADDR (HTTP front-end instead of the load run; host\n\
                  \x20      backend only; port 0 binds an ephemeral port; drain with\n\
                  \x20      POST /shutdown or ^C) --max_conns N (handler cap)\n\
+                 \x20      --header_timeout_ms N (slowloris guard: a connection that\n\
+                 \x20      takes longer than N ms to deliver its request is answered\n\
+                 \x20      408; default 5000)\n\
                  bench-serve: wire-level bench over real sockets —\n\
                  \x20      --clients 1,4,8 --per_client N --mode closed|open --rate R\n\
                  \x20      [--addr host:port] (default: self-host on 127.0.0.1:0)\n\
-                 \x20      --out FILE (default BENCH_serve.json, rows appended)\n\
+                 \x20      --out FILE (default BENCH_serve.json, rows appended); open\n\
+                 \x20      mode honors 429/503 Retry-After backoff hints\n\
                  exec:  --threads N (eval/qat/serve; kernel worker-pool width —\n\
                  \x20      default $SILQ_THREADS, else all cores; 1 = serial) and\n\
                  \x20      --kernel scalar|simd (dot micro-kernel dispatch; default\n\
                  \x20      simd). Both are bit-exact: thread count and kernel choice\n\
                  \x20      never change any result, only throughput\n\
+                 faults: --faults SPEC (or $SILQ_FAULTS) arms deterministic fault\n\
+                 \x20      injection for resilience tests. SPEC is entries joined by\n\
+                 \x20      commas: site@nth[+period][:ms] or seed=N, with sites\n\
+                 \x20      kv (KV-pool alloc fails) | lat:ms (kernel-shard latency)\n\
+                 \x20      | torn (torn stream write) | stall:ms (client stalls\n\
+                 \x20      mid-request) | full (admission queue reports full).\n\
+                 \x20      e.g. --faults kv@3,lat@5+10:40,full@2 — 3rd KV alloc\n\
+                 \x20      fails, every 10th shard call from the 5th sleeps 40ms,\n\
+                 \x20      2nd submit is refused. Unset = disarmed, zero cost\n\
                  obs:   --trace out.trace.json (Chrome trace_event JSON — load in\n\
                  \x20      ui.perfetto.dev; serve + eval) and, serve only,\n\
                  \x20      --metrics-out metrics.json (per-step time series; see\n\
@@ -372,6 +385,17 @@ fn configure_execution(args: &Args) -> Result<()> {
     pool::configure(threads);
     if let Some(k) = args.get("kernel") {
         simd::set_kernel(simd::KernelChoice::parse(k)?);
+    }
+    // deterministic fault injection: `--faults SPEC` wins over the
+    // `SILQ_FAULTS` env var; unset means fully disarmed (one relaxed
+    // load per site check).
+    let faults = args
+        .get("faults")
+        .map(str::to_string)
+        .or_else(|| std::env::var("SILQ_FAULTS").ok().filter(|s| !s.is_empty()));
+    if let Some(spec) = faults {
+        silq::faults::configure(&spec).map_err(|e| anyhow::anyhow!("--faults {spec}: {e}"))?;
+        eprintln!("faults armed: {spec}");
     }
     Ok(())
 }
@@ -727,6 +751,7 @@ fn serve_http_cmd(args: &Args, art_dir: &str) -> Result<()> {
     let queue_cap: usize = args.get_num("queue_cap", "16")?;
     let max_conns: usize = args.get_num::<usize>("max_conns", "32")?.max(1);
     let default_max_new: usize = args.get_num("max_new", "16")?;
+    let header_timeout_ms: u64 = args.get_num::<u64>("header_timeout_ms", "5000")?.max(1);
     let trace_path = args.get("trace").map(str::to_string);
     let metrics_path = args.get("metrics-out").map(str::to_string);
     if trace_path.is_some() {
@@ -751,6 +776,7 @@ fn serve_http_cmd(args: &Args, art_dir: &str) -> Result<()> {
         queue_cap,
         max_conns,
         default_max_new,
+        header_timeout_ms,
     })?;
     install_sigint_drain();
     let addr = server.local_addr();
@@ -778,9 +804,10 @@ fn serve_http_cmd(args: &Args, art_dir: &str) -> Result<()> {
     println!("{}", stats.report());
     println!("phase breakdown:\n{}", stats.breakdown());
     println!(
-        "wire: {} connections, {} requests ({} streaming, {} disconnects, {} x 429) \
-         in {wall:.2}s",
-        net.connections, net.requests, net.streams, net.disconnects, net.rejected_429
+        "wire: {} connections, {} requests ({} streaming, {} disconnects, {} x 429, \
+         {} x 503 shed, {} guard rejects) in {wall:.2}s",
+        net.connections, net.requests, net.streams, net.disconnects, net.rejected_429,
+        net.shed_503, net.guard_rejects
     );
     if let Some(p) = &metrics_path {
         std::fs::write(p, stats.metrics_json())
@@ -801,8 +828,9 @@ fn serve_http_cmd(args: &Args, art_dir: &str) -> Result<()> {
 /// each client count B, drive the HTTP front-end with B streaming
 /// clients — closed loop (each client fires its next request when the
 /// previous finishes) or open loop (requests launch at `--rate` per
-/// second regardless of completions; queue-full 429s count as drops, not
-/// failures). Rows append to `--out` with client-measured TTFT p50/p95,
+/// second regardless of completions; queue-full 429s take the server's
+/// `Retry-After` hint for a bounded backoff-and-retry, then count as
+/// drops, not failures). Rows append to `--out` with client-measured TTFT p50/p95,
 /// wire throughput, and threads/kernel provenance.
 fn bench_serve_cmd(args: &Args, art_dir: &str) -> Result<()> {
     configure_execution(args)?;
@@ -856,6 +884,7 @@ fn bench_serve_cmd(args: &Args, art_dir: &str) -> Result<()> {
                 queue_cap: args.get_num("queue_cap", "32")?,
                 max_conns: 64,
                 default_max_new: max_tokens,
+                header_timeout_ms: 5000,
             })?;
             let flag = server.shutdown_flag();
             let addr = server.local_addr().to_string();
@@ -912,7 +941,18 @@ fn bench_serve_cmd(args: &Args, art_dir: &str) -> Result<()> {
                     let body = netclient::completion_body(
                         i as u64, &prompt(i), max_tokens, true, true,
                     );
-                    let o = netclient::complete_streaming(&addr, &body, None)?;
+                    // honor the server's backoff hint: a 429/503 with a
+                    // retry_after_ms estimate gets a bounded number of
+                    // waited retries before counting as a drop
+                    let mut o = netclient::complete_streaming(&addr, &body, None)?;
+                    for _ in 0..3 {
+                        let Some(ms) = o.retry_after_ms else { break };
+                        if o.status != 429 && o.status != 503 {
+                            break;
+                        }
+                        std::thread::sleep(std::time::Duration::from_millis(ms.min(2000)));
+                        o = netclient::complete_streaming(&addr, &body, None)?;
+                    }
                     Ok(if o.status == 200 { (o.ttft_ms, o.tokens.len()) } else { (f64::NAN, 0) })
                 }));
                 std::thread::sleep(gap);

@@ -9,7 +9,7 @@
 
 use std::io::{BufReader, Write};
 use std::net::TcpStream;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
@@ -32,6 +32,14 @@ pub struct WireOutcome {
     pub ttft_ms: f64,
     /// the client hung up on purpose before the stream finished
     pub disconnected: bool,
+    /// backoff hint from a 429/503 answer (`retry_after_ms` body field),
+    /// `None` on any other outcome
+    pub retry_after_ms: Option<u64>,
+}
+
+/// Pull the `retry_after_ms` backoff hint out of a parsed error body.
+fn retry_hint(done: &Option<Json>) -> Option<u64> {
+    done.as_ref().and_then(|d| d.get("retry_after_ms")).and_then(Json::as_u64)
 }
 
 /// Build a `/v1/completions` request body.
@@ -42,11 +50,38 @@ pub fn completion_body(
     ignore_eos: bool,
     stream: bool,
 ) -> String {
+    completion_body_ext(id, prompt, max_tokens, ignore_eos, stream, None, None, None)
+}
+
+/// [`completion_body`] with the resilience fields: scheduling class and
+/// the two deadlines (all optional, omitted when `None`).
+#[allow(clippy::too_many_arguments)]
+pub fn completion_body_ext(
+    id: u64,
+    prompt: &[i32],
+    max_tokens: usize,
+    ignore_eos: bool,
+    stream: bool,
+    priority: Option<&str>,
+    deadline_ms: Option<u64>,
+    ttft_deadline_ms: Option<u64>,
+) -> String {
     let p = prompt.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(",");
-    format!(
+    let mut body = format!(
         "{{\"id\":{id},\"prompt\":[{p}],\"max_tokens\":{max_tokens},\
-         \"ignore_eos\":{ignore_eos},\"stream\":{stream}}}"
-    )
+         \"ignore_eos\":{ignore_eos},\"stream\":{stream}"
+    );
+    if let Some(p) = priority {
+        body.push_str(&format!(",\"priority\":\"{p}\""));
+    }
+    if let Some(ms) = deadline_ms {
+        body.push_str(&format!(",\"deadline_ms\":{ms}"));
+    }
+    if let Some(ms) = ttft_deadline_ms {
+        body.push_str(&format!(",\"ttft_deadline_ms\":{ms}"));
+    }
+    body.push('}');
+    body
 }
 
 fn connect(addr: &str) -> Result<TcpStream> {
@@ -57,9 +92,19 @@ fn send_request(stream: &mut TcpStream, method: &str, path: &str, body: &str) ->
     write!(
         stream,
         "{method} {path} HTTP/1.1\r\nHost: silq\r\nContent-Type: application/json\r\n\
-         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
         body.len()
     )?;
+    // fault site `stall`: flush the head, then sit on the body — a
+    // deterministic slowloris. With the guard in place the server answers
+    // 408 instead of letting this pin a handler slot.
+    if crate::faults::should_inject(crate::faults::Site::ClientStall) {
+        stream.flush()?;
+        std::thread::sleep(Duration::from_millis(crate::faults::latency_ms(
+            crate::faults::Site::ClientStall,
+        )));
+    }
+    stream.write_all(body.as_bytes())?;
     stream.flush()?;
     Ok(())
 }
@@ -88,7 +133,8 @@ pub fn complete_buffered(addr: &str, body: &str) -> Result<WireOutcome> {
         .and_then(|d| d.get("generated"))
         .and_then(Json::as_i32_arr)
         .unwrap_or_default();
-    Ok(WireOutcome { status, tokens, done, ttft_ms: f64::NAN, disconnected: false })
+    let retry_after_ms = retry_hint(&done);
+    Ok(WireOutcome { status, tokens, done, ttft_ms: f64::NAN, disconnected: false, retry_after_ms })
 }
 
 /// Streaming completion: POST with `"stream":true`, consume SSE frames as
@@ -107,12 +153,18 @@ pub fn complete_streaming(
     let (status, headers) = http::read_response_head(&mut r).context("response head")?;
     if status != 200 {
         let text = http::read_response_body(&mut r, &headers).unwrap_or_default();
+        let done = Json::parse(&String::from_utf8_lossy(&text)).ok();
+        let retry_after_ms = retry_hint(&done).or_else(|| {
+            // fall back to the whole-seconds header if the body had no hint
+            http::header(&headers, "Retry-After").and_then(|v| v.parse::<u64>().ok()).map(|s| s * 1000)
+        });
         return Ok(WireOutcome {
             status,
             tokens: Vec::new(),
-            done: Json::parse(&String::from_utf8_lossy(&text)).ok(),
+            done,
             ttft_ms: f64::NAN,
             disconnected: false,
+            retry_after_ms,
         });
     }
     if !http::header(&headers, "Transfer-Encoding")
@@ -127,6 +179,7 @@ pub fn complete_streaming(
         done: None,
         ttft_ms: f64::NAN,
         disconnected: false,
+        retry_after_ms: None,
     };
     while let Some(chunk) = http::read_chunk(&mut r).context("reading chunk")? {
         for payload in sse.push(&chunk) {
@@ -171,5 +224,24 @@ mod tests {
         assert_eq!(doc.get("max_tokens").unwrap().as_u64(), Some(8));
         assert_eq!(doc.get("ignore_eos").unwrap().as_bool(), Some(true));
         assert_eq!(doc.get("stream").unwrap().as_bool(), Some(false));
+        assert!(doc.get("priority").is_none());
+        assert!(doc.get("deadline_ms").is_none());
+    }
+
+    #[test]
+    fn extended_body_carries_priority_and_deadlines() {
+        let body =
+            completion_body_ext(9, &[4], 2, false, true, Some("batch"), Some(250), Some(40));
+        let doc = Json::parse(&body).unwrap();
+        assert_eq!(doc.get("priority").unwrap().as_str(), Some("batch"));
+        assert_eq!(doc.get("deadline_ms").unwrap().as_u64(), Some(250));
+        assert_eq!(doc.get("ttft_deadline_ms").unwrap().as_u64(), Some(40));
+    }
+
+    #[test]
+    fn retry_hint_reads_the_body_field() {
+        let doc = Json::parse(r#"{"error":"full","retry_after_ms":125}"#).ok();
+        assert_eq!(retry_hint(&doc), Some(125));
+        assert_eq!(retry_hint(&None), None);
     }
 }

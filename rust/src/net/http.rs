@@ -13,10 +13,49 @@
 use std::io::{self, BufRead, Read, Write};
 
 /// Parsed-input hard limits: a malformed or hostile peer must cost a
-/// bounded read, never an unbounded allocation.
+/// bounded read, never an unbounded allocation. Overrunning a cap is a
+/// typed guard error ([`guard_status`]) so the server answers the
+/// honest status — 431 for oversized request line/headers, 413 for an
+/// oversized body — instead of a generic 400.
 const MAX_HEADER_LINE: usize = 8 * 1024;
 const MAX_HEADERS: usize = 64;
 const MAX_BODY: usize = 1 << 20;
+
+/// A parse failure that maps to a specific HTTP status (the slowloris /
+/// resource-cap guard). Carried as the inner error of an
+/// [`io::ErrorKind::InvalidData`] error so the `io::Result` plumbing is
+/// undisturbed; [`guard_status`] recovers the status at the answer site.
+#[derive(Debug)]
+struct GuardError {
+    status: u16,
+    msg: &'static str,
+}
+
+impl std::fmt::Display for GuardError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} ({})", self.msg, self.status)
+    }
+}
+
+impl std::error::Error for GuardError {}
+
+fn guard(status: u16, msg: &'static str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, GuardError { status, msg })
+}
+
+/// The status a request-parse error deserves: 408 for a read timeout (a
+/// stalled peer held the connection past the grace period), the guard's
+/// own status for a cap overrun (431/413), 400 for everything else
+/// malformed.
+pub fn guard_status(e: &io::Error) -> u16 {
+    match e.kind() {
+        io::ErrorKind::TimedOut | io::ErrorKind::WouldBlock => 408,
+        _ => e
+            .get_ref()
+            .and_then(|inner| inner.downcast_ref::<GuardError>())
+            .map_or(400, |g| g.status),
+    }
+}
 
 /// One parsed HTTP request.
 #[derive(Debug)]
@@ -52,7 +91,7 @@ fn read_line<R: BufRead>(r: &mut R) -> io::Result<String> {
     let mut line = String::new();
     let n = r.take(MAX_HEADER_LINE as u64 + 2).read_line(&mut line)?;
     if n > MAX_HEADER_LINE {
-        return Err(bad("header line too long"));
+        return Err(guard(431, "header line too long"));
     }
     while line.ends_with('\n') || line.ends_with('\r') {
         line.pop();
@@ -68,7 +107,7 @@ fn read_headers<R: BufRead>(r: &mut R) -> io::Result<Vec<(String, String)>> {
             return Ok(headers);
         }
         if headers.len() >= MAX_HEADERS {
-            return Err(bad("too many headers"));
+            return Err(guard(431, "too many headers"));
         }
         let (k, v) = line.split_once(':').ok_or_else(|| bad("malformed header"))?;
         headers.push((k.trim().to_string(), v.trim().to_string()));
@@ -81,7 +120,7 @@ fn read_body<R: BufRead>(r: &mut R, headers: &[(String, String)]) -> io::Result<
         None => 0,
     };
     if len > MAX_BODY {
-        return Err(bad("body too large"));
+        return Err(guard(413, "body too large"));
     }
     let mut body = vec![0u8; len];
     r.read_exact(&mut body)?;
@@ -120,7 +159,10 @@ pub fn status_reason(status: u16) -> &'static str {
         200 => "OK",
         400 => "Bad Request",
         404 => "Not Found",
+        408 => "Request Timeout",
+        413 => "Content Too Large",
         429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
         _ => "Unknown",
@@ -134,14 +176,29 @@ pub fn write_response<W: Write>(
     content_type: &str,
     body: &[u8],
 ) -> io::Result<()> {
+    write_response_with(w, status, content_type, &[], body)
+}
+
+/// [`write_response`] with extra headers (e.g. `Retry-After` on 429/503).
+pub fn write_response_with<W: Write>(
+    w: &mut W,
+    status: u16,
+    content_type: &str,
+    extra_headers: &[(&str, String)],
+    body: &[u8],
+) -> io::Result<()> {
     write!(
         w,
-        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n",
         status,
         status_reason(status),
         content_type,
         body.len()
     )?;
+    for (k, v) in extra_headers {
+        write!(w, "{k}: {v}\r\n")?;
+    }
+    w.write_all(b"Connection: close\r\n\r\n")?;
     w.write_all(body)?;
     w.flush()
 }
@@ -162,7 +219,18 @@ pub fn start_chunked<W: Write>(w: &mut W, status: u16, content_type: &str) -> io
 
 /// Write one chunk and flush — each token frame must hit the socket the
 /// step it decodes, not sit in a buffer until the run ends.
+///
+/// An armed `torn@N` fault plan ([`crate::faults`]) tears planned
+/// writes: half the payload goes out, then the write fails as a broken
+/// pipe — exactly what a peer vanishing mid-frame looks like, so the
+/// server's disconnect-as-cancellation path gets exercised on demand.
 pub fn write_chunk<W: Write>(w: &mut W, payload: &[u8]) -> io::Result<()> {
+    if crate::faults::should_inject(crate::faults::Site::NetWrite) {
+        write!(w, "{:x}\r\n", payload.len())?;
+        w.write_all(&payload[..payload.len() / 2])?;
+        let _ = w.flush();
+        return Err(io::Error::new(io::ErrorKind::BrokenPipe, "torn write (fault injected)"));
+    }
     write!(w, "{:x}\r\n", payload.len())?;
     w.write_all(payload)?;
     w.write_all(b"\r\n")?;
@@ -301,6 +369,52 @@ mod tests {
         // a body larger than the cap is refused before allocation
         let raw = format!("POST /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY + 1);
         assert!(read_request(&mut Cursor::new(raw.as_bytes())).is_err());
+    }
+
+    #[test]
+    fn guard_errors_carry_their_status() {
+        // oversized body -> 413
+        let raw = format!("POST /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY + 1);
+        let e = read_request(&mut Cursor::new(raw.as_bytes())).unwrap_err();
+        assert_eq!(guard_status(&e), 413);
+        // unbounded request line (no CRLF in sight) -> 431, after a
+        // bounded read — the guard, not the allocator, stops it
+        let raw = vec![b'A'; MAX_HEADER_LINE + 64];
+        let e = read_request(&mut Cursor::new(&raw[..])).unwrap_err();
+        assert_eq!(guard_status(&e), 431);
+        // header flood -> 431
+        let mut raw = b"GET /x HTTP/1.1\r\n".to_vec();
+        for i in 0..MAX_HEADERS + 1 {
+            raw.extend_from_slice(format!("h{i}: v\r\n").as_bytes());
+        }
+        raw.extend_from_slice(b"\r\n");
+        let e = read_request(&mut Cursor::new(&raw[..])).unwrap_err();
+        assert_eq!(guard_status(&e), 431);
+        // a stalled read (SO_RCVTIMEO surfaces WouldBlock/TimedOut) -> 408
+        assert_eq!(guard_status(&io::Error::from(io::ErrorKind::WouldBlock)), 408);
+        assert_eq!(guard_status(&io::Error::from(io::ErrorKind::TimedOut)), 408);
+        // plain malformed input stays 400
+        let e = read_request(&mut Cursor::new(&b"GARBAGE\r\n\r\n"[..])).unwrap_err();
+        assert_eq!(guard_status(&e), 400);
+    }
+
+    #[test]
+    fn extra_headers_ride_along_and_parse_back() {
+        let mut wire = Vec::new();
+        write_response_with(
+            &mut wire,
+            429,
+            "application/json",
+            &[("Retry-After", "2".to_string())],
+            b"{}",
+        )
+        .unwrap();
+        let mut r = Cursor::new(&wire[..]);
+        let (status, headers) = read_response_head(&mut r).unwrap();
+        assert_eq!(status, 429);
+        assert_eq!(header(&headers, "retry-after"), Some("2"));
+        assert_eq!(header(&headers, "connection"), Some("close"));
+        assert_eq!(read_response_body(&mut r, &headers).unwrap(), b"{}");
     }
 
     #[test]

@@ -19,8 +19,12 @@
 //! one real parser in the repo — the wire is where untrusted bytes come
 //! in). The serving semantics (queueing, scheduling, cancellation,
 //! accounting) all live in [`crate::serve`]; this layer only maps them
-//! onto sockets: backpressure to `429`, disconnect to cancellation,
-//! drain (`/shutdown` or SIGINT) to finish-in-flight-then-exit.
+//! onto sockets: backpressure to `429 Retry-After`, TTFT-deadline sheds
+//! to `503 Retry-After`, disconnect to cancellation, slow/stalled
+//! request delivery to `408` (the slowloris guard), drain (`/shutdown`
+//! or SIGINT) to finish-in-flight-then-exit. `GET /healthz` exposes the
+//! [`crate::serve::health`] state machine (`ok`/`degraded`/`draining`)
+//! with its queue-depth and deadline-miss evidence.
 //!
 //! Request/response schemas and the streaming frame format are documented
 //! in README §Serving over HTTP.

@@ -12,14 +12,18 @@
 //! Endpoints:
 //!
 //! * `POST /v1/completions` — body `{"prompt":[...], "max_tokens":N,
-//!   "ignore_eos":bool, "stream":bool, "id":N}` (all but `prompt`
+//!   "ignore_eos":bool, "stream":bool, "id":N, "priority":"interactive"|
+//!   "batch", "deadline_ms":N, "ttft_deadline_ms":N}` (all but `prompt`
 //!   optional). Buffered mode answers one JSON result; streaming mode
 //!   answers SSE-over-chunked, one `data: {"token":T}` frame per decoded
 //!   token and a terminal `data: {"done":true, ...}` frame. A failed
 //!   frame write (client disconnect) sets the request's cancel flag: the
 //!   scheduler evicts the lane and frees its KV slot at the next step
-//!   boundary — mid-decode, not at drain.
-//! * `GET /healthz` — liveness.
+//!   boundary — mid-decode, not at drain. A full admission queue answers
+//!   `429` and a TTFT-deadline shed answers `503`, both with a
+//!   `Retry-After` header derived from queue depth × recent step time.
+//! * `GET /healthz` — health state machine: `ok`, `degraded` (recent
+//!   deadline misses / slow steps, with evidence fields), or `draining`.
 //! * `GET /metrics` — live `silq.metrics.v1` counters + wire-TTFT summary
 //!   ([`crate::obs::export::metrics_live_json`]).
 //! * `POST /shutdown` — graceful drain: stop accepting, finish in-flight
@@ -39,8 +43,8 @@ use crate::net::http;
 use crate::net::json::{escape, Json};
 use crate::obs::{add, Counter};
 use crate::serve::{
-    AdmissionQueue, DecodeBackend, GenRequest, GenResult, ServeHandle, ServeOutcome, StreamEvent,
-    SubmitError,
+    health, AdmissionQueue, DecodeBackend, FinishReason, GenRequest, GenResult, Priority,
+    ServeHandle, ServeOutcome, StreamEvent, SubmitError,
 };
 
 const JSON_TYPE: &str = "application/json";
@@ -65,6 +69,11 @@ pub struct ServerCfg {
     pub max_conns: usize,
     /// `max_tokens` when the request body does not set one
     pub default_max_new: usize,
+    /// slowloris guard: how long a connection may take to deliver its
+    /// full request (start-line, headers, body) before it is answered
+    /// `408` and dropped. The generous [`SOCKET_TIMEOUT`] is restored
+    /// for the response/stream phase.
+    pub header_timeout_ms: u64,
 }
 
 /// Wire-side totals for one server run, tallied locally (always on,
@@ -80,6 +89,10 @@ pub struct NetReport {
     pub disconnects: u64,
     /// requests answered 429 (admission queue full)
     pub rejected_429: u64,
+    /// requests answered 503 after a TTFT-deadline shed in the queue
+    pub shed_503: u64,
+    /// connections refused by the request-head guards (408/413/431)
+    pub guard_rejects: u64,
 }
 
 #[derive(Default)]
@@ -89,6 +102,8 @@ struct Tallies {
     streams: AtomicU64,
     disconnects: AtomicU64,
     rejected_429: AtomicU64,
+    shed_503: AtomicU64,
+    guard_rejects: AtomicU64,
 }
 
 impl Tallies {
@@ -104,6 +119,8 @@ impl Tallies {
             streams: self.streams.load(Ordering::Relaxed),
             disconnects: self.disconnects.load(Ordering::Relaxed),
             rejected_429: self.rejected_429.load(Ordering::Relaxed),
+            shed_503: self.shed_503.load(Ordering::Relaxed),
+            guard_rejects: self.guard_rejects.load(Ordering::Relaxed),
         }
     }
 }
@@ -116,6 +133,7 @@ struct Ctx {
     /// ids for bodies that do not pick their own
     next_id: AtomicU64,
     default_max_new: usize,
+    header_timeout: Duration,
 }
 
 /// A bound listener, ready to [`Server::run`].
@@ -157,6 +175,11 @@ impl Server {
         self,
         backend: B,
     ) -> Result<(ServeOutcome<B>, NetReport)> {
+        // reset health before the accept loop opens: a handler must never
+        // read stale pressure/draining left by a previous server in the
+        // same process (the scheduler thread also resets, but it races
+        // the first accept)
+        health::reset();
         let handle = ServeHandle::spawn(backend, self.cfg.lanes, self.cfg.queue_cap)?;
         let ctx = Arc::new(Ctx {
             queue: handle.queue(),
@@ -164,6 +187,7 @@ impl Server {
             shutdown: self.shutdown.clone(),
             next_id: AtomicU64::new(1),
             default_max_new: self.cfg.default_max_new.max(1),
+            header_timeout: Duration::from_millis(self.cfg.header_timeout_ms.max(1)),
         });
 
         // handler-slot accounting: slot acquired before spawn, released by
@@ -226,7 +250,10 @@ impl Server {
 // ---------------------------------------------------------------------------
 
 fn handle_conn(stream: TcpStream, ctx: &Ctx) {
-    let _ = stream.set_read_timeout(Some(SOCKET_TIMEOUT));
+    // slowloris guard: the request head gets the short header timeout; a
+    // peer that dribbles bytes (or stalls outright) is answered 408 and
+    // dropped instead of pinning a handler slot for SOCKET_TIMEOUT.
+    let _ = stream.set_read_timeout(Some(ctx.header_timeout));
     let _ = stream.set_write_timeout(Some(SOCKET_TIMEOUT));
     let Ok(read_half) = stream.try_clone() else { return };
     let mut reader = BufReader::new(read_half);
@@ -234,15 +261,24 @@ fn handle_conn(stream: TcpStream, ctx: &Ctx) {
     let req = match http::read_request(&mut reader) {
         Ok(Some(r)) => r,
         Ok(None) => return, // peer connected and left
-        Err(_) => {
-            let _ = http::write_response(&mut w, 400, JSON_TYPE, br#"{"error":"malformed request"}"#);
+        Err(e) => {
+            let status = http::guard_status(&e);
+            if status != 400 {
+                ctx.tallies.bump(&ctx.tallies.guard_rejects, Counter::NetGuardRejects);
+            }
+            let body = format!("{{\"error\":\"{}\"}}", guard_reason(status));
+            let _ = http::write_response(&mut w, status, JSON_TYPE, body.as_bytes());
             return;
         }
     };
+    // head arrived in time: restore the generous per-socket timeout for
+    // the response/stream phase (slow decode is not a slow client)
+    let _ = reader.get_ref().set_read_timeout(Some(SOCKET_TIMEOUT));
     ctx.tallies.bump(&ctx.tallies.requests, Counter::NetRequests);
     match (req.method.as_str(), req.target.as_str()) {
         ("GET", "/healthz") => {
-            let _ = http::write_response(&mut w, 200, JSON_TYPE, br#"{"status":"ok"}"#);
+            let body = health::healthz_json();
+            let _ = http::write_response(&mut w, 200, JSON_TYPE, body.as_bytes());
         }
         ("GET", "/metrics") => {
             let body = crate::obs::export::metrics_live_json();
@@ -250,6 +286,7 @@ fn handle_conn(stream: TcpStream, ctx: &Ctx) {
         }
         ("POST", "/shutdown") => {
             ctx.shutdown.store(true, Ordering::SeqCst);
+            health::set_draining();
             let _ = http::write_response(&mut w, 200, JSON_TYPE, br#"{"draining":true}"#);
         }
         ("POST", "/v1/completions") => completions(&mut w, &req, ctx),
@@ -257,6 +294,22 @@ fn handle_conn(stream: TcpStream, ctx: &Ctx) {
             let _ = http::write_response(&mut w, 404, JSON_TYPE, br#"{"error":"no such endpoint"}"#);
         }
     }
+}
+
+/// Stable body text for a request-head guard rejection.
+fn guard_reason(status: u16) -> &'static str {
+    match status {
+        408 => "request head timed out",
+        413 => "body too large",
+        431 => "request head too large",
+        _ => "malformed request",
+    }
+}
+
+/// Render `retry_after_ms` as the whole-seconds `Retry-After` header
+/// (rounded up, at least 1 — zero tells the client nothing).
+fn retry_after_header(ms: u64) -> (&'static str, String) {
+    ("Retry-After", ms.div_ceil(1000).max(1).to_string())
 }
 
 /// Parse, submit, and answer one completion request (buffered or
@@ -293,22 +346,49 @@ fn completions(w: &mut TcpStream, req: &http::Request, ctx: &Ctx) {
         .unwrap_or(ctx.default_max_new);
     let ignore_eos = doc.get("ignore_eos").and_then(Json::as_bool).unwrap_or(false);
     let stream_mode = doc.get("stream").and_then(Json::as_bool).unwrap_or(false);
+    let priority = match doc.get("priority").and_then(Json::as_str) {
+        None => Priority::default(),
+        Some(p) => match Priority::parse(p) {
+            Ok(p) => p,
+            Err(reason) => {
+                let body = format!("{{\"error\":\"{}\"}}", escape(&reason));
+                let _ = http::write_response(w, 400, JSON_TYPE, body.as_bytes());
+                return;
+            }
+        },
+    };
+    let deadline_ms = doc.get("deadline_ms").and_then(Json::as_u64);
+    let ttft_deadline_ms = doc.get("ttft_deadline_ms").and_then(Json::as_u64);
 
     let received = Instant::now();
     let (tx, rx) = std::sync::mpsc::channel();
     let cancel = Arc::new(AtomicBool::new(false));
-    let mut gr = GenRequest::new(id, prompt, max_new).with_sink(tx).with_cancel(cancel.clone());
+    let mut gr = GenRequest::new(id, prompt, max_new)
+        .with_sink(tx)
+        .with_cancel(cancel.clone())
+        .with_priority(priority);
     if ignore_eos {
         gr = gr.ignore_eos();
     }
+    if let Some(ms) = deadline_ms {
+        gr = gr.with_deadline_ms(ms);
+    }
+    if let Some(ms) = ttft_deadline_ms {
+        gr = gr.with_ttft_deadline_ms(ms);
+    }
     match ctx.queue.try_submit(gr) {
-        Err(SubmitError::Full(_)) => {
+        Err(SubmitError::Full { retry_after_ms, .. }) => {
             ctx.tallies.bump(&ctx.tallies.rejected_429, Counter::Net429);
-            let _ = http::write_response(
+            let body = format!(
+                "{{\"error\":\"admission queue is full, retry later\",\
+                 \"retry_after_ms\":{retry_after_ms}}}"
+            );
+            let _ = http::write_response_with(
                 w,
                 429,
                 JSON_TYPE,
-                br#"{"error":"admission queue is full, retry later"}"#,
+                &[retry_after_header(retry_after_ms)],
+                body.as_bytes(),
             );
         }
         Err(SubmitError::Closed(_)) => {
@@ -327,17 +407,40 @@ fn completions(w: &mut TcpStream, req: &http::Request, ctx: &Ctx) {
             if stream_mode {
                 stream_response(w, &rx, &cancel, received, ctx);
             } else {
-                buffered_response(w, &rx);
+                buffered_response(w, &rx, ctx);
             }
         }
     }
 }
 
+/// Answer a queue-side TTFT-deadline shed: plain `503` with `Retry-After`
+/// (sheds happen before any token, so the response is always atomic —
+/// never a torn stream).
+fn shed_response(w: &mut TcpStream, r: &GenResult, ctx: &Ctx) {
+    ctx.tallies.bump(&ctx.tallies.shed_503, Counter::Net503Shed);
+    let retry_after_ms = health::retry_after_ms(ctx.queue.depth());
+    let body = format!(
+        "{{\"error\":\"shed: ttft deadline exceeded while queued\",\
+         \"reason\":\"{}\",\"id\":{},\"retry_after_ms\":{retry_after_ms}}}",
+        FinishReason::DeadlineShed.name(),
+        r.id,
+    );
+    let _ = http::write_response_with(
+        w,
+        503,
+        JSON_TYPE,
+        &[retry_after_header(retry_after_ms)],
+        body.as_bytes(),
+    );
+}
+
 /// Buffered mode: wait for the terminal event, answer one JSON document.
 /// (Token events are drained and dropped; the terminal result carries the
-/// full token vector.)
-fn buffered_response(w: &mut TcpStream, rx: &Receiver<StreamEvent>) {
+/// full token vector.) A TTFT-deadline shed answers `503 Retry-After`
+/// instead of a 200 body.
+fn buffered_response(w: &mut TcpStream, rx: &Receiver<StreamEvent>, ctx: &Ctx) {
     match drain_to_done(rx) {
+        Some(r) if r.reason == FinishReason::DeadlineShed => shed_response(w, &r, ctx),
         Some(r) => {
             let _ = http::write_response(w, 200, JSON_TYPE, result_json(&r, false).as_bytes());
         }
@@ -349,7 +452,10 @@ fn buffered_response(w: &mut TcpStream, rx: &Receiver<StreamEvent>) {
 }
 
 /// Streaming mode: one SSE frame per token as it decodes, a terminal
-/// `done` frame with the full result. A failed frame write is the client
+/// `done` frame with the full result. The first event is peeked before
+/// the chunked 200 is committed, so a queue-side TTFT shed still answers
+/// a plain `503 Retry-After` (admission rejects keep their historical
+/// 200 + terminal-frame shape). A failed frame write is the client
 /// disconnecting: set the cancel flag (the scheduler evicts the lane and
 /// frees its KV slot at the next step boundary) and drain the channel to
 /// its terminal event so teardown is deterministic.
@@ -360,6 +466,17 @@ fn stream_response(
     received: Instant,
     ctx: &Ctx,
 ) {
+    // Peek the first event before committing to a chunked stream: a
+    // queue-side shed arrives as an immediate terminal event and must
+    // answer a plain 503 (with Retry-After) — once `start_chunked` has
+    // written a 200 status line there is no honest way to say "retry".
+    let mut event = rx.recv();
+    if let Ok(StreamEvent::Done(r)) = &event {
+        if r.reason == FinishReason::DeadlineShed {
+            shed_response(w, r, ctx);
+            return;
+        }
+    }
     ctx.tallies.bump(&ctx.tallies.streams, Counter::NetStreams);
     if http::start_chunked(w, 200, SSE_TYPE).is_err() {
         disconnected(rx, cancel, ctx);
@@ -367,7 +484,7 @@ fn stream_response(
     }
     let mut first = true;
     loop {
-        match rx.recv() {
+        match event {
             Ok(StreamEvent::Token(t)) => {
                 let frame = http::sse_frame(&format!("{{\"token\":{t}}}"));
                 if http::write_chunk(w, &frame).is_err() {
@@ -400,6 +517,7 @@ fn stream_response(
                 return;
             }
         }
+        event = rx.recv();
     }
 }
 
@@ -432,10 +550,11 @@ fn result_json(r: &GenResult, done: bool) -> String {
         ts.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(",")
     };
     format!(
-        "{{{}\"id\":{},\"prompt_len\":{},\"tokens\":[{}],\"generated\":[{}],\
+        "{{{}\"id\":{},\"reason\":\"{}\",\"prompt_len\":{},\"tokens\":[{}],\"generated\":[{}],\
          \"queued_ms\":{},\"ttft_ms\":{},\"total_ms\":{},\"error\":{}}}",
         if done { "\"done\":true," } else { "" },
         r.id,
+        r.reason.name(),
         r.prompt_len,
         join(&r.tokens),
         join(r.generated()),
@@ -519,6 +638,7 @@ mod tests {
             admitted_step: 0,
             finished_step: 2,
             error: err.map(|e| e.to_string()),
+            reason: FinishReason::Completed,
         }
     }
 
@@ -527,6 +647,7 @@ mod tests {
         let doc = result_json(&result(None), false);
         let parsed = Json::parse(&doc).expect("result json must parse");
         assert_eq!(parsed.get("id").unwrap().as_u64(), Some(7));
+        assert_eq!(parsed.get("reason").unwrap().as_str(), Some("ok"));
         assert_eq!(parsed.get("generated").unwrap().as_i32_arr(), Some(vec![9, 10]));
         assert_eq!(parsed.get("ttft_ms").unwrap(), &Json::Null);
         assert_eq!(parsed.get("total_ms").unwrap().as_f64(), Some(3.25));
@@ -538,13 +659,33 @@ mod tests {
     }
 
     #[test]
+    fn result_json_carries_the_deadline_reason() {
+        let mut r = result(Some("completion deadline exceeded mid-decode"));
+        r.reason = FinishReason::DeadlineEvicted;
+        let parsed = Json::parse(&result_json(&r, true)).expect("deadline json must parse");
+        assert_eq!(parsed.get("reason").unwrap().as_str(), Some("deadline"));
+    }
+
+    #[test]
     fn tallies_mirror_into_the_report() {
         let t = Tallies::default();
         t.bump(&t.connections, Counter::NetConnections);
         t.bump(&t.requests, Counter::NetRequests);
         t.bump(&t.requests, Counter::NetRequests);
+        t.bump(&t.shed_503, Counter::Net503Shed);
+        t.bump(&t.guard_rejects, Counter::NetGuardRejects);
         let r = t.report();
         assert_eq!((r.connections, r.requests), (1, 2));
         assert_eq!((r.streams, r.disconnects, r.rejected_429), (0, 0, 0));
+        assert_eq!((r.shed_503, r.guard_rejects), (1, 1));
+    }
+
+    #[test]
+    fn retry_after_header_rounds_up_to_whole_seconds() {
+        assert_eq!(retry_after_header(0).1, "1");
+        assert_eq!(retry_after_header(1).1, "1");
+        assert_eq!(retry_after_header(1000).1, "1");
+        assert_eq!(retry_after_header(1001).1, "2");
+        assert_eq!(retry_after_header(59_500).1, "60");
     }
 }

@@ -98,10 +98,28 @@ pub enum Counter {
     NetDisconnects,
     /// requests rejected with 429 because the admission queue was full
     Net429,
+    /// queued requests shed because their TTFT deadline passed before a
+    /// lane freed up (answered 503 + `Retry-After` on the wire)
+    DeadlineShed,
+    /// in-flight lanes evicted because their decode deadline passed
+    DeadlineEvicted,
+    /// scheduler steps the watchdog flagged as slow (over
+    /// `serve::health::SLOW_STEP_MS`)
+    WatchdogSlowSteps,
+    /// scheduler steps the watchdog flagged as stuck (over
+    /// `serve::health::STUCK_STEP_MS`)
+    WatchdogStuckSteps,
+    /// faults actually fired by an armed [`crate::faults`] plan
+    FaultsInjected,
+    /// malformed or hostile wire requests refused by the slowloris guard
+    /// (408 read timeout, 431 oversized headers, 413 oversized body)
+    NetGuardRejects,
+    /// wire requests answered 503 because they were deadline-shed
+    Net503Shed,
 }
 
 /// Number of registered counters (the registry array size).
-pub const N_COUNTERS: usize = 27;
+pub const N_COUNTERS: usize = 34;
 
 impl Counter {
     /// Every counter, in declaration order — drives [`snapshot`].
@@ -133,6 +151,13 @@ impl Counter {
         Counter::NetStreams,
         Counter::NetDisconnects,
         Counter::Net429,
+        Counter::DeadlineShed,
+        Counter::DeadlineEvicted,
+        Counter::WatchdogSlowSteps,
+        Counter::WatchdogStuckSteps,
+        Counter::FaultsInjected,
+        Counter::NetGuardRejects,
+        Counter::Net503Shed,
     ];
 
     /// Stable snake_case name (report keys, JSON fields).
@@ -165,6 +190,13 @@ impl Counter {
             Counter::NetStreams => "net_streams",
             Counter::NetDisconnects => "net_disconnects",
             Counter::Net429 => "net_429",
+            Counter::DeadlineShed => "deadline_shed",
+            Counter::DeadlineEvicted => "deadline_evicted",
+            Counter::WatchdogSlowSteps => "watchdog_slow_steps",
+            Counter::WatchdogStuckSteps => "watchdog_stuck_steps",
+            Counter::FaultsInjected => "faults_injected",
+            Counter::NetGuardRejects => "net_guard_rejects",
+            Counter::Net503Shed => "net_503_shed",
         }
     }
 }

@@ -1,0 +1,266 @@
+//! `health` — the serve watchdog and liveness state machine.
+//!
+//! The scheduler reports every step here ([`note_step`]) and every
+//! deadline miss ([`note_deadline_miss`]); `GET /healthz` reads the
+//! derived [`HealthState`] plus its evidence. State is process-global
+//! atomics (one scheduler runs at a time; in-crate suites that run
+//! several serialize on the serve/traffic locks already), reset at the
+//! top of every [`crate::serve::Scheduler::run`].
+//!
+//! ### The state machine
+//!
+//! ```text
+//!   ok  --pressure > 0-->  degraded  --pressure drains-->  ok
+//!    \______________ draining (queue closed / shutdown) ___/
+//! ```
+//!
+//! "Pressure" is a bounded integer score: each deadline miss or
+//! slow/stuck step adds to it, each healthy step drains one point. The
+//! scheme is deliberately deterministic — a storm of misses flips
+//! `/healthz` to `degraded`, a bounded amount of clean traffic
+//! (≤ [`PRESSURE_CAP`] steps) is guaranteed to bring it back to `ok` —
+//! so the chaos soak can assert the full transition cycle. `draining` is
+//! terminal for a run: it is set by shutdown/queue-close and only a new
+//! scheduler run clears it.
+//!
+//! The watchdog itself is post-hoc: a stalled step is detected when it
+//! finally ends (its wall time crossed [`SLOW_STEP_MS`] /
+//! [`STUCK_STEP_MS`]), bumping the `watchdog_*` obs counters and adding
+//! pressure. Everything in this module is lock-free and allocation-free,
+//! safe to call from the decode loop.
+
+use crate::obs::{self, Counter};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// A step slower than this is "slow" (watchdog evidence, +pressure).
+pub const SLOW_STEP_MS: f64 = 100.0;
+/// A step slower than this is "stuck" — the scheduler effectively froze.
+pub const STUCK_STEP_MS: f64 = 1000.0;
+
+/// Pressure added per deadline miss or slow step; a stuck step pins the
+/// score to the cap.
+const PRESSURE_ADD: u64 = 3;
+/// Upper bound on the pressure score: recovery needs at most this many
+/// healthy steps.
+pub const PRESSURE_CAP: u64 = 64;
+
+/// What `GET /healthz` reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthState {
+    /// steady state: no recent deadline misses or watchdog flags
+    Ok,
+    /// serving, but under visible stress (unrecovered pressure)
+    Degraded,
+    /// shutting down: the admission queue is closed
+    Draining,
+}
+
+impl HealthState {
+    /// Stable wire name (`/healthz` JSON `status` field).
+    pub fn name(self) -> &'static str {
+        match self {
+            HealthState::Ok => "ok",
+            HealthState::Degraded => "degraded",
+            HealthState::Draining => "draining",
+        }
+    }
+}
+
+/// unrecovered stress score (see module docs)
+static PRESSURE: AtomicU64 = AtomicU64::new(0);
+/// 1 once the run is draining
+static DRAINING: AtomicU64 = AtomicU64::new(0);
+/// EWMA of step wall time, microseconds (α = 1/8)
+static STEP_EWMA_US: AtomicU64 = AtomicU64::new(0);
+/// queue depth observed at the most recent step
+static LAST_DEPTH: AtomicUsize = AtomicUsize::new(0);
+/// total deadline misses (sheds + evictions) this run
+static DEADLINE_MISSES: AtomicU64 = AtomicU64::new(0);
+/// total watchdog flags (slow + stuck steps) this run
+static WATCHDOG_FLAGS: AtomicU64 = AtomicU64::new(0);
+
+/// Start-of-run reset: back to `ok` with no evidence.
+pub fn reset() {
+    PRESSURE.store(0, Ordering::Relaxed);
+    DRAINING.store(0, Ordering::Relaxed);
+    STEP_EWMA_US.store(0, Ordering::Relaxed);
+    LAST_DEPTH.store(0, Ordering::Relaxed);
+    DEADLINE_MISSES.store(0, Ordering::Relaxed);
+    WATCHDOG_FLAGS.store(0, Ordering::Relaxed);
+}
+
+/// The queue closed / shutdown began: report `draining` from here on.
+pub fn set_draining() {
+    DRAINING.store(1, Ordering::Relaxed);
+}
+
+/// One scheduler step finished: fold its wall time into the EWMA, run
+/// the watchdog classification, and drain or add pressure.
+pub fn note_step(queue_depth: usize, step_ms: f64) {
+    LAST_DEPTH.store(queue_depth, Ordering::Relaxed);
+    let us = (step_ms * 1000.0).max(0.0) as u64;
+    let old = STEP_EWMA_US.load(Ordering::Relaxed);
+    let ewma = if old == 0 { us } else { (7 * old + us) / 8 };
+    STEP_EWMA_US.store(ewma.max(1), Ordering::Relaxed);
+
+    if step_ms > STUCK_STEP_MS {
+        obs::add(Counter::WatchdogStuckSteps, 1);
+        WATCHDOG_FLAGS.fetch_add(1, Ordering::Relaxed);
+        PRESSURE.store(PRESSURE_CAP, Ordering::Relaxed);
+    } else if step_ms > SLOW_STEP_MS {
+        obs::add(Counter::WatchdogSlowSteps, 1);
+        WATCHDOG_FLAGS.fetch_add(1, Ordering::Relaxed);
+        add_pressure(PRESSURE_ADD);
+    } else {
+        // a healthy step drains one point of pressure
+        let _ = PRESSURE.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |p| {
+            (p > 0).then(|| p - 1)
+        });
+    }
+}
+
+/// A request missed a deadline (TTFT shed or mid-decode eviction).
+pub fn note_deadline_miss() {
+    DEADLINE_MISSES.fetch_add(1, Ordering::Relaxed);
+    add_pressure(PRESSURE_ADD);
+}
+
+fn add_pressure(n: u64) {
+    let _ = PRESSURE.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |p| {
+        Some((p + n).min(PRESSURE_CAP))
+    });
+}
+
+/// Current state: `draining` once shutdown began, else `degraded` while
+/// pressure is unrecovered, else `ok`.
+pub fn state() -> HealthState {
+    if DRAINING.load(Ordering::Relaxed) != 0 {
+        HealthState::Draining
+    } else if PRESSURE.load(Ordering::Relaxed) > 0 {
+        HealthState::Degraded
+    } else {
+        HealthState::Ok
+    }
+}
+
+/// EWMA of recent step wall time, in milliseconds (0.0 before any step).
+pub fn mean_step_ms() -> f64 {
+    STEP_EWMA_US.load(Ordering::Relaxed) as f64 / 1000.0
+}
+
+/// How long a client should wait before retrying a full queue: every
+/// queued request ahead of it costs roughly one mean step, floored at
+/// 25 ms/request while no step has been measured yet and clamped to
+/// `[1 ms, 60 s]`.
+pub fn retry_after_ms(queue_depth: usize) -> u64 {
+    let per_req = match mean_step_ms() {
+        m if m > 0.0 => m,
+        _ => 25.0,
+    };
+    (((queue_depth + 1) as f64) * per_req).ceil().clamp(1.0, 60_000.0) as u64
+}
+
+/// The `/healthz` body: state plus the evidence behind it.
+pub fn healthz_json() -> String {
+    format!(
+        concat!(
+            "{{\"status\":\"{}\",\"queue_depth\":{},\"pressure\":{},",
+            "\"deadline_misses\":{},\"watchdog_flags\":{},\"mean_step_ms\":{:.3}}}"
+        ),
+        state().name(),
+        LAST_DEPTH.load(Ordering::Relaxed),
+        PRESSURE.load(Ordering::Relaxed),
+        DEADLINE_MISSES.load(Ordering::Relaxed),
+        WATCHDOG_FLAGS.load(Ordering::Relaxed),
+        mean_step_ms(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// State is process-global: serialize tests that drive it.
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        static M: std::sync::Mutex<()> = std::sync::Mutex::new(());
+        M.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn pressure_cycle_ok_degraded_ok() {
+        let _g = lock();
+        reset();
+        assert_eq!(state(), HealthState::Ok);
+        note_deadline_miss();
+        assert_eq!(state(), HealthState::Degraded);
+        // PRESSURE_ADD healthy steps drain it back to ok
+        for _ in 0..PRESSURE_ADD {
+            assert_eq!(state(), HealthState::Degraded);
+            note_step(0, 1.0);
+        }
+        assert_eq!(state(), HealthState::Ok);
+        reset();
+    }
+
+    #[test]
+    fn recovery_is_bounded_by_the_cap() {
+        let _g = lock();
+        reset();
+        for _ in 0..1000 {
+            note_deadline_miss();
+        }
+        note_step(0, STUCK_STEP_MS + 1.0); // stuck step also pins the cap
+        for _ in 0..PRESSURE_CAP {
+            note_step(0, 1.0);
+        }
+        assert_eq!(state(), HealthState::Ok, "cap must bound recovery time");
+        reset();
+    }
+
+    #[test]
+    fn draining_wins_and_reset_clears_it() {
+        let _g = lock();
+        reset();
+        set_draining();
+        note_step(0, 1.0);
+        assert_eq!(state(), HealthState::Draining);
+        assert!(healthz_json().contains("\"status\":\"draining\""));
+        reset();
+        assert_eq!(state(), HealthState::Ok);
+    }
+
+    #[test]
+    fn retry_after_scales_with_depth_and_step_time() {
+        let _g = lock();
+        reset();
+        // no steps yet: 25 ms per queued request
+        assert_eq!(retry_after_ms(0), 25);
+        assert_eq!(retry_after_ms(3), 100);
+        for _ in 0..64 {
+            note_step(0, 8.0); // converge the EWMA near 8 ms
+        }
+        let est = retry_after_ms(4);
+        assert!((30..=60).contains(&est), "estimate {est} out of range");
+        reset();
+    }
+
+    #[test]
+    fn watchdog_classifies_slow_and_stuck() {
+        let _g = lock();
+        reset();
+        let slow0 = obs::get(Counter::WatchdogSlowSteps);
+        let stuck0 = obs::get(Counter::WatchdogStuckSteps);
+        let on = obs::enabled();
+        obs::set_enabled(true);
+        note_step(2, SLOW_STEP_MS + 1.0);
+        note_step(2, STUCK_STEP_MS + 1.0);
+        note_step(2, 1.0);
+        obs::set_enabled(on);
+        assert_eq!(obs::get(Counter::WatchdogSlowSteps) - slow0, 1);
+        assert_eq!(obs::get(Counter::WatchdogStuckSteps) - stuck0, 1);
+        let body = healthz_json();
+        assert!(body.contains("\"watchdog_flags\":2"), "{body}");
+        assert!(body.contains("\"queue_depth\":2"), "{body}");
+        reset();
+    }
+}

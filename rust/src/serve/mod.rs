@@ -32,11 +32,13 @@
 //! disconnect frees the lane (and its KV slot) mid-decode.
 
 pub mod backend;
+pub mod health;
 pub mod scheduler;
 pub mod session;
 pub mod stats;
 
 pub use backend::{ArtifactBackend, DecodeBackend, HostBackend};
+pub use health::HealthState;
 pub use scheduler::Scheduler;
 pub use stats::ServeStats;
 
@@ -69,6 +71,39 @@ pub enum StreamEvent {
 /// [`GenRequest::with_sink`].
 pub type TokenSink = std::sync::mpsc::Sender<StreamEvent>;
 
+/// Scheduling class of a request. The admission queue serves
+/// [`Priority::Interactive`] strictly before [`Priority::Batch`], FIFO
+/// within each class — latency-sensitive traffic never queues behind
+/// bulk work, while bulk work keeps draining whenever no interactive
+/// request is waiting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum Priority {
+    /// latency-sensitive (the default): served first
+    #[default]
+    Interactive,
+    /// throughput traffic: served when no interactive request waits
+    Batch,
+}
+
+impl Priority {
+    /// Stable wire name (`priority` field of `POST /v1/completions`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+        }
+    }
+
+    /// Parse a wire name.
+    pub fn parse(s: &str) -> std::result::Result<Priority, String> {
+        match s {
+            "interactive" => Ok(Priority::Interactive),
+            "batch" => Ok(Priority::Batch),
+            other => Err(format!("unknown priority `{other}` (interactive|batch)")),
+        }
+    }
+}
+
 /// One generation request as submitted by a client.
 #[derive(Debug)]
 pub struct GenRequest {
@@ -80,6 +115,16 @@ pub struct GenRequest {
     /// off so every request decodes its full budget deterministically
     pub stop_on_eos: bool,
     pub submitted: Instant,
+    /// scheduling class (see [`Priority`]; default interactive)
+    pub priority: Priority,
+    /// shed the request if it is still queued at this instant — it will
+    /// never be admitted, and the client gets a typed timeout (503 +
+    /// `Retry-After` on the wire) instead of a first token that arrives
+    /// too late to matter
+    pub ttft_deadline: Option<Instant>,
+    /// evict the request if it is still decoding at this instant; the
+    /// partial completion is delivered with `reason: "deadline"`
+    pub deadline: Option<Instant>,
     /// streaming delivery: every generated token (and the terminal result)
     /// is sent here as it happens; `None` for buffered requests
     pub sink: Option<TokenSink>,
@@ -97,6 +142,9 @@ impl GenRequest {
             max_new,
             stop_on_eos: true,
             submitted: Instant::now(),
+            priority: Priority::Interactive,
+            ttft_deadline: None,
+            deadline: None,
             sink: None,
             cancel: None,
         }
@@ -119,6 +167,59 @@ impl GenRequest {
     pub fn with_cancel(mut self, flag: Arc<AtomicBool>) -> GenRequest {
         self.cancel = Some(flag);
         self
+    }
+
+    /// Set the scheduling class.
+    pub fn with_priority(mut self, p: Priority) -> GenRequest {
+        self.priority = p;
+        self
+    }
+
+    /// Shed the request unless it is admitted within `ms` of submission.
+    pub fn with_ttft_deadline_ms(mut self, ms: u64) -> GenRequest {
+        self.ttft_deadline = Some(self.submitted + Duration::from_millis(ms));
+        self
+    }
+
+    /// Evict the request unless it finishes within `ms` of submission.
+    pub fn with_deadline_ms(mut self, ms: u64) -> GenRequest {
+        self.deadline = Some(self.submitted + Duration::from_millis(ms));
+        self
+    }
+
+    /// Has the TTFT deadline already passed (shed instead of admit)?
+    pub fn ttft_deadline_expired(&self) -> bool {
+        self.ttft_deadline.is_some_and(|d| Instant::now() >= d)
+    }
+}
+
+/// How a request left the engine — the typed terminal outcome behind
+/// [`GenResult::error`]. Every request gets exactly one.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FinishReason {
+    /// decoded to its budget / EOS / context window
+    #[default]
+    Completed,
+    /// refused at admission (bad prompt, KV exhaustion)
+    Rejected,
+    /// evicted mid-decode by the client's cancellation flag
+    Cancelled,
+    /// shed while queued: its TTFT deadline passed before a lane freed
+    DeadlineShed,
+    /// evicted mid-decode: its completion deadline passed
+    DeadlineEvicted,
+}
+
+impl FinishReason {
+    /// Stable wire name (the `reason` field of a terminal frame).
+    pub fn name(self) -> &'static str {
+        match self {
+            FinishReason::Completed => "ok",
+            FinishReason::Rejected => "rejected",
+            FinishReason::Cancelled => "cancelled",
+            FinishReason::DeadlineShed => "deadline_shed",
+            FinishReason::DeadlineEvicted => "deadline",
+        }
     }
 }
 
@@ -144,6 +245,8 @@ pub struct GenResult {
     /// exhaustion) or cancelled mid-decode (client disconnect); the run
     /// itself survives and serves everything else
     pub error: Option<String>,
+    /// typed terminal outcome (`error` carries the human-readable detail)
+    pub reason: FinishReason,
 }
 
 impl GenResult {
@@ -159,7 +262,14 @@ impl GenResult {
 #[derive(Debug)]
 pub enum SubmitError {
     /// The queue is at capacity right now (transient: retry later).
-    Full(GenRequest),
+    Full {
+        /// the request, handed back intact
+        req: GenRequest,
+        /// how long the caller should wait before retrying — current
+        /// queue depth × recent mean step time (the wire layer turns
+        /// this into a `Retry-After` header)
+        retry_after_ms: u64,
+    },
     /// The queue is closed — the server is draining; no retry will succeed.
     Closed(GenRequest),
     /// The request can never be accepted (empty prompt).
@@ -174,7 +284,11 @@ pub enum SubmitError {
 impl std::fmt::Display for SubmitError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            SubmitError::Full(r) => write!(f, "admission queue is full (request {})", r.id),
+            SubmitError::Full { req, retry_after_ms } => write!(
+                f,
+                "admission queue is full (request {}, retry in {retry_after_ms} ms)",
+                req.id
+            ),
             SubmitError::Closed(r) => write!(f, "admission queue is closed (request {})", r.id),
             SubmitError::Invalid { id, reason } => write!(f, "invalid request {id}: {reason}"),
         }
@@ -237,8 +351,9 @@ impl AdmissionQueue {
         if g.closed {
             return Err(SubmitError::Closed(req));
         }
-        if g.q.len() >= self.cap {
-            return Err(SubmitError::Full(req));
+        if g.q.len() >= self.cap || crate::faults::should_inject(crate::faults::Site::Submit) {
+            let retry_after_ms = health::retry_after_ms(g.q.len());
+            return Err(SubmitError::Full { req, retry_after_ms });
         }
         g.q.push_back(req);
         crate::obs::add(crate::obs::Counter::ServeEnqueued, 1);
@@ -246,9 +361,13 @@ impl AdmissionQueue {
         Ok(())
     }
 
+    /// Dequeue the next request by scheduling class: the earliest
+    /// interactive request if any is waiting, else the earliest batch
+    /// request — strict priority, FIFO within a class.
     pub fn try_pop(&self) -> Option<GenRequest> {
         let mut g = self.inner.lock().unwrap();
-        let r = g.q.pop_front();
+        let idx = g.q.iter().position(|r| r.priority == Priority::Interactive).unwrap_or(0);
+        let r = if idx == 0 { g.q.pop_front() } else { g.q.remove(idx) };
         if r.is_some() {
             self.space.notify_one();
         }
@@ -256,9 +375,11 @@ impl AdmissionQueue {
     }
 
     /// No more submissions; the scheduler drains what is left and stops.
+    /// From here `/healthz` reports `draining`.
     pub fn close(&self) {
         let mut g = self.inner.lock().unwrap();
         g.closed = true;
+        health::set_draining();
         self.space.notify_all();
         self.avail.notify_all();
     }
@@ -388,11 +509,13 @@ mod tests {
     fn try_submit_maps_full_closed_and_invalid() {
         let q = AdmissionQueue::new(1);
         q.try_submit(GenRequest::new(1, vec![1], 1)).unwrap();
-        // full: the request comes back intact for a retry / 429 answer
+        // full: the request comes back intact for a retry / 429 answer,
+        // with a positive retry estimate riding along
         match q.try_submit(GenRequest::new(2, vec![7, 8], 3)) {
-            Err(SubmitError::Full(r)) => {
-                assert_eq!((r.id, r.max_new), (2, 3));
-                assert_eq!(r.prompt, vec![7, 8]);
+            Err(SubmitError::Full { req, retry_after_ms }) => {
+                assert_eq!((req.id, req.max_new), (2, 3));
+                assert_eq!(req.prompt, vec![7, 8]);
+                assert!(retry_after_ms >= 1, "retry estimate must be positive");
             }
             other => panic!("expected Full, got {other:?}"),
         }
@@ -435,7 +558,7 @@ mod tests {
                             Ok(()) => {
                                 accepted.fetch_add(1, Ordering::Relaxed);
                             }
-                            Err(SubmitError::Full(_)) => std::thread::yield_now(),
+                            Err(SubmitError::Full { .. }) => std::thread::yield_now(),
                             Err(e) => panic!("unexpected submit error: {e}"),
                         }
                     }
@@ -462,6 +585,32 @@ mod tests {
         q.close();
         let drained = consumer.join().unwrap();
         assert_eq!(drained, accepted.load(Ordering::Relaxed), "accepted != drained");
+    }
+
+    #[test]
+    fn pop_serves_interactive_before_batch_fifo_within_class() {
+        let q = AdmissionQueue::new(8);
+        // submit order: batch 1, batch 2, interactive 3, interactive 4
+        q.submit(GenRequest::new(1, vec![1], 1).with_priority(Priority::Batch)).unwrap();
+        q.submit(GenRequest::new(2, vec![1], 1).with_priority(Priority::Batch)).unwrap();
+        q.submit(GenRequest::new(3, vec![1], 1)).unwrap();
+        q.submit(GenRequest::new(4, vec![1], 1).with_priority(Priority::Interactive)).unwrap();
+        let order: Vec<u64> = std::iter::from_fn(|| q.try_pop()).map(|r| r.id).collect();
+        assert_eq!(order, [3, 4, 1, 2], "interactive first, FIFO within class");
+    }
+
+    #[test]
+    fn deadline_builders_and_expiry() {
+        let r = GenRequest::new(1, vec![1], 4);
+        assert!(!r.ttft_deadline_expired(), "no deadline never expires");
+        assert_eq!(r.priority, Priority::Interactive, "interactive is the default");
+        let r = GenRequest::new(2, vec![1], 4).with_ttft_deadline_ms(0).with_deadline_ms(0);
+        assert!(r.ttft_deadline_expired(), "0 ms TTFT deadline is already over");
+        assert!(r.deadline.is_some());
+        let r = GenRequest::new(3, vec![1], 4).with_ttft_deadline_ms(60_000);
+        assert!(!r.ttft_deadline_expired(), "a generous deadline has not passed");
+        assert_eq!(Priority::parse("batch"), Ok(Priority::Batch));
+        assert!(Priority::parse("urgent").is_err());
     }
 
     #[test]

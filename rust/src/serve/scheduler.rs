@@ -14,7 +14,7 @@ use crate::obs::{self, Counter};
 use crate::serve::backend::DecodeBackend;
 use crate::serve::session::Session;
 use crate::serve::stats::ServeStats;
-use crate::serve::{AdmissionQueue, GenResult, StreamEvent, TokenSink};
+use crate::serve::{health, AdmissionQueue, FinishReason, GenRequest, GenResult, StreamEvent, TokenSink};
 use crate::util::Timer;
 
 pub struct Scheduler<B: DecodeBackend> {
@@ -113,7 +113,62 @@ impl<B: DecodeBackend> Scheduler<B> {
         let sink = s.sink.take();
         let mut r = s.into_result(self.step_no);
         r.error = Some("cancelled by client disconnect".into());
+        r.reason = FinishReason::Cancelled;
         stats.on_cancel(&r);
+        Self::deliver(sink, &r);
+        results.push(r);
+    }
+
+    /// Shed a queued request whose TTFT deadline passed before a lane
+    /// freed: it never touches the backend — no prefill is paid for a
+    /// first token that would arrive too late — and the client gets a
+    /// typed timeout (the wire layer answers `503` + `Retry-After`). Its
+    /// queue wait still lands in the `queued` histogram via
+    /// [`ServeStats::on_shed`].
+    fn shed(&mut self, req: GenRequest, stats: &mut ServeStats, results: &mut Vec<GenResult>) {
+        obs::add(Counter::DeadlineShed, 1);
+        health::note_deadline_miss();
+        let mut sess = Session::admit(req, self.step_no);
+        if obs::enabled() {
+            let queued_us =
+                sess.admitted.checked_duration_since(sess.submitted).unwrap_or_default().as_micros()
+                    as u64;
+            obs::event_at("shed", "serve", 0, sess.submitted, queued_us, sess.id);
+        }
+        let sink = sess.sink.take();
+        let mut r = sess.into_result(self.step_no);
+        r.error = Some("ttft deadline exceeded while queued".into());
+        r.reason = FinishReason::DeadlineShed;
+        stats.on_shed(&r);
+        Self::deliver(sink, &r);
+        results.push(r);
+    }
+
+    /// Evict a session whose completion deadline passed mid-decode: the
+    /// lane and KV slot free immediately and the partial completion is
+    /// delivered with `reason: "deadline"`. Counts toward
+    /// [`Counter::ServeEvicted`] like every lane departure, plus
+    /// [`Counter::DeadlineEvicted`].
+    fn deadline_evict(
+        &mut self,
+        lane: usize,
+        mut s: Session,
+        stats: &mut ServeStats,
+        results: &mut Vec<GenResult>,
+    ) {
+        self.backend.evict(lane);
+        obs::add(Counter::DeadlineEvicted, 1);
+        obs::add(Counter::ServeEvicted, 1);
+        health::note_deadline_miss();
+        if obs::enabled() {
+            let active_us = s.admitted.elapsed().as_micros() as u64;
+            obs::event_at("deadline", "serve", lane as u32 + 1, s.admitted, active_us, s.id);
+        }
+        let sink = s.sink.take();
+        let mut r = s.into_result(self.step_no);
+        r.error = Some("completion deadline exceeded mid-decode".into());
+        r.reason = FinishReason::DeadlineEvicted;
+        stats.on_deadline_evict(&r);
         Self::deliver(sink, &r);
         results.push(r);
     }
@@ -122,18 +177,25 @@ impl<B: DecodeBackend> Scheduler<B> {
     /// every admitted session has finished. Returns results in completion
     /// order.
     pub fn run(&mut self, queue: &AdmissionQueue, stats: &mut ServeStats) -> Result<Vec<GenResult>> {
+        health::reset();
         let mut results = vec![];
         let seq_len = self.backend.seq_len();
         loop {
             let admit_timer = Timer::start();
-            // 1. evict finished and cancelled sessions, freeing their lane
-            //    + cache slot (a cancelled lane frees mid-decode: the
-            //    client is gone, nothing waits on its remaining budget)
+            // 1. evict finished, cancelled and deadline-blown sessions,
+            //    freeing their lane + cache slot (a cancelled or evicted
+            //    lane frees mid-decode: nothing useful waits on its
+            //    remaining budget). The deadline check runs before the
+            //    done check so a lane past its deadline can never leave
+            //    as a normal completion.
             for lane in 0..self.lanes.len() {
                 let Some(s) = &self.lanes[lane] else { continue };
                 if s.cancelled() {
                     let s = self.lanes[lane].take().unwrap();
                     self.cancel(lane, s, stats, &mut results);
+                } else if s.deadline_exceeded() {
+                    let s = self.lanes[lane].take().unwrap();
+                    self.deadline_evict(lane, s, stats, &mut results);
                 } else if s.done(seq_len) {
                     let s = self.lanes[lane].take().unwrap();
                     self.complete(lane, s, stats, &mut results);
@@ -141,36 +203,47 @@ impl<B: DecodeBackend> Scheduler<B> {
             }
 
             // 2. admit queued requests into free lanes (continuous batching:
-            //    this happens every step, not once per batch)
-            for lane in 0..self.lanes.len() {
+            //    this happens every step, not once per batch); requests
+            //    whose TTFT deadline already passed are shed instead of
+            //    admitted, so an expired head-of-line never wastes the
+            //    lane a live request could take this step
+            'admit: for lane in 0..self.lanes.len() {
                 if self.lanes[lane].is_some() {
                     continue;
                 }
-                let Some(req) = queue.try_pop() else { break };
-                match self.backend.admit(lane, &req.prompt) {
-                    Ok(()) => {
-                        obs::add(Counter::ServeAdmitted, 1);
-                        let sess = Session::admit(req, self.step_no);
-                        if sess.done(seq_len) {
-                            // zero-budget request: complete without a step
-                            self.complete(lane, sess, stats, &mut results);
-                        } else {
-                            self.lanes[lane] = Some(sess);
+                loop {
+                    let Some(req) = queue.try_pop() else { break 'admit };
+                    if req.ttft_deadline_expired() {
+                        self.shed(req, stats, &mut results);
+                        continue; // the lane is still free — try the next request
+                    }
+                    match self.backend.admit(lane, &req.prompt) {
+                        Ok(()) => {
+                            obs::add(Counter::ServeAdmitted, 1);
+                            let sess = Session::admit(req, self.step_no);
+                            if sess.done(seq_len) {
+                                // zero-budget request: complete without a step
+                                self.complete(lane, sess, stats, &mut results);
+                            } else {
+                                self.lanes[lane] = Some(sess);
+                            }
+                        }
+                        Err(e) => {
+                            // reject just this request — one bad prompt must not
+                            // take down the run (or lose the other sessions)
+                            self.backend.evict(lane); // release any partial admit
+                            obs::add(Counter::ServeRejected, 1);
+                            let mut sess = Session::admit(req, self.step_no);
+                            let sink = sess.sink.take();
+                            let mut r = sess.into_result(self.step_no);
+                            r.error = Some(e.to_string());
+                            r.reason = FinishReason::Rejected;
+                            stats.on_reject();
+                            Self::deliver(sink, &r);
+                            results.push(r);
                         }
                     }
-                    Err(e) => {
-                        // reject just this request — one bad prompt must not
-                        // take down the run (or lose the other sessions)
-                        self.backend.evict(lane); // release any partial admit
-                        obs::add(Counter::ServeRejected, 1);
-                        let mut sess = Session::admit(req, self.step_no);
-                        let sink = sess.sink.take();
-                        let mut r = sess.into_result(self.step_no);
-                        r.error = Some(e.to_string());
-                        stats.on_reject();
-                        Self::deliver(sink, &r);
-                        results.push(r);
-                    }
+                    break;
                 }
             }
             stats.add_admit_secs(admit_timer.secs());
@@ -226,7 +299,11 @@ impl<B: DecodeBackend> Scheduler<B> {
             }
             obs::add(Counter::ServeSteps, 1);
             obs::add(Counter::ServeNewTokens, new_tokens as u64);
-            stats.on_step(queue.depth(), active, self.backend.kv_bytes(), step_ms, new_tokens);
+            let depth = queue.depth();
+            stats.on_step(depth, active, self.backend.kv_bytes(), step_ms, new_tokens);
+            // watchdog: classify the step's wall time (slow/stuck flags)
+            // and feed the health state machine its evidence
+            health::note_step(depth, step_ms);
         }
         stats.finish();
         Ok(results)
@@ -412,6 +489,65 @@ mod tests {
         assert_eq!(stats.total_new_tokens, generated);
         // the backend saw exactly one evict per lane departure
         assert_eq!(sched.backend().evicted[0], 2);
+    }
+
+    #[test]
+    fn expired_ttft_deadline_sheds_instead_of_admitting() {
+        use crate::serve::FinishReason;
+        // request 1's TTFT deadline is already over when the scheduler
+        // first looks at it: it must be shed without touching the backend,
+        // and request 2 (behind it in the queue) takes the lane this step
+        let queue = AdmissionQueue::new(2);
+        queue
+            .submit(GenRequest::new(1, vec![1, 2], 50).with_ttft_deadline_ms(0))
+            .unwrap();
+        queue.submit(GenRequest::new(2, vec![1, 3], 3)).unwrap();
+        queue.close();
+        let mut sched = Scheduler::new(MockBackend::new(1, 64), 1).unwrap();
+        let mut stats = ServeStats::new(1);
+        let results = sched.run(&queue, &mut stats).unwrap();
+        assert_eq!(results.len(), 2);
+        let shed = by_id(&results, 1);
+        assert_eq!(shed.reason, FinishReason::DeadlineShed);
+        assert!(shed.error.as_deref().unwrap().contains("ttft deadline"), "{:?}", shed.error);
+        assert!(shed.generated().is_empty(), "a shed request must not decode");
+        let ok = by_id(&results, 2);
+        assert_eq!((ok.reason, ok.generated().len()), (FinishReason::Completed, 3));
+        assert_eq!((stats.completed, stats.deadline_shed), (1, 1));
+        // shed without ever admitting: the backend saw exactly one session
+        assert_eq!(sched.backend().admitted[0], 1);
+        assert_eq!(sched.backend().evicted[0], 1);
+    }
+
+    #[test]
+    fn blown_decode_deadline_evicts_the_lane_mid_flight() {
+        use crate::serve::FinishReason;
+        // request 1 has a huge budget but a deadline that is already over
+        // by its first step boundary: exactly one token decodes (admit ->
+        // step -> boundary sees the deadline), then the lane frees for
+        // request 2 — deterministic at any worker-pool width, which the
+        // proptests pin across SILQ_THREADS
+        let queue = AdmissionQueue::new(2);
+        queue
+            .submit(GenRequest::new(1, vec![1, 2], 500).with_deadline_ms(0))
+            .unwrap();
+        queue.submit(GenRequest::new(2, vec![1, 3], 3)).unwrap();
+        queue.close();
+        let mut sched = Scheduler::new(MockBackend::new(1, 1024), 1).unwrap();
+        let mut stats = ServeStats::new(1);
+        let results = sched.run(&queue, &mut stats).unwrap();
+        assert_eq!(results.len(), 2);
+        let evicted = by_id(&results, 1);
+        assert_eq!(evicted.reason, FinishReason::DeadlineEvicted);
+        assert!(evicted.error.as_deref().unwrap().contains("deadline"), "{:?}", evicted.error);
+        assert_eq!(evicted.generated().len(), 1, "evicted at the first step boundary");
+        let ok = by_id(&results, 2);
+        assert_eq!(ok.generated().len(), 3);
+        assert_eq!((stats.completed, stats.deadline_evicted), (1, 1));
+        // evicted tokens still count toward the exact token ledger
+        let generated: usize = results.iter().map(|r| r.generated().len()).sum();
+        assert_eq!(stats.total_new_tokens, generated);
+        assert_eq!(sched.backend().evicted[0], 2, "one evict per lane departure");
     }
 
     #[test]

@@ -5,7 +5,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::data::vocab::EOS;
-use crate::serve::{GenRequest, GenResult, StreamEvent, TokenSink};
+use crate::serve::{FinishReason, GenRequest, GenResult, StreamEvent, TokenSink};
 
 /// State of one admitted request while it occupies a lane.
 #[derive(Debug)]
@@ -24,6 +24,8 @@ pub struct Session {
     /// retroactively at completion) so streaming latency is honest; `None`
     /// until then (and forever, for zero-budget/rejected requests)
     pub ttft_ms: Option<f64>,
+    /// evict at this instant if still decoding, carried from the request
+    pub deadline: Option<Instant>,
     /// streaming delivery target (client sink), carried from the request
     pub sink: Option<TokenSink>,
     /// cooperative cancellation flag, carried from the request
@@ -43,6 +45,7 @@ impl Session {
             admitted_step: step,
             first_token: None,
             ttft_ms: None,
+            deadline: req.deadline,
             sink: req.sink,
             cancel: req.cancel,
         }
@@ -75,6 +78,13 @@ impl Session {
         self.cancel.as_ref().is_some_and(|c| c.load(Ordering::Relaxed))
     }
 
+    /// Whether the session's completion deadline has passed — the
+    /// scheduler evicts it at the next step boundary with
+    /// `reason: "deadline"`, delivering whatever decoded so far.
+    pub fn deadline_exceeded(&self) -> bool {
+        self.deadline.is_some_and(|d| Instant::now() >= d)
+    }
+
     /// A session is done when it hit its token budget, emitted EOS, or
     /// filled the model's context window.
     pub fn done(&self, seq_len: usize) -> bool {
@@ -105,6 +115,7 @@ impl Session {
             admitted_step: self.admitted_step,
             finished_step,
             error: None,
+            reason: FinishReason::Completed,
         }
     }
 }
@@ -196,5 +207,15 @@ mod tests {
         assert!(s.cancelled());
         // no flag attached -> never cancelled
         assert!(!Session::admit(req(5, vec![1], 2), 0).cancelled());
+    }
+
+    #[test]
+    fn deadline_reads_through() {
+        let s = Session::admit(req(6, vec![1], 2).with_deadline_ms(0), 0);
+        assert!(s.deadline_exceeded(), "0 ms deadline is already over");
+        let s = Session::admit(req(7, vec![1], 2).with_deadline_ms(60_000), 0);
+        assert!(!s.deadline_exceeded());
+        // no deadline attached -> never exceeded
+        assert!(!Session::admit(req(8, vec![1], 2), 0).deadline_exceeded());
     }
 }

@@ -47,6 +47,10 @@ pub struct ServeStats {
     pub rejected: usize,
     /// requests cancelled mid-flight (client disconnect evicted the lane)
     pub cancelled: usize,
+    /// requests shed while queued (TTFT deadline passed before admission)
+    pub deadline_shed: usize,
+    /// requests evicted mid-decode (completion deadline passed)
+    pub deadline_evicted: usize,
     pub total_new_tokens: usize,
     /// per-step gauges (summed; divide by steps for means)
     queue_depth_sum: f64,
@@ -76,6 +80,8 @@ impl ServeStats {
             completed: 0,
             rejected: 0,
             cancelled: 0,
+            deadline_shed: 0,
+            deadline_evicted: 0,
             total_new_tokens: 0,
             queue_depth_sum: 0.0,
             active_lane_sum: 0.0,
@@ -151,6 +157,26 @@ impl ServeStats {
         self.total_new_tokens += r.generated().len();
     }
 
+    /// Record one request shed from the queue because its TTFT deadline
+    /// passed before a lane freed. Its queue wait still lands in the
+    /// `queued` histogram — shed requests are precisely the ones whose
+    /// wait mattered most, so dropping them from the wait accounting
+    /// would bias `queued_ms_mean` optimistic under overload.
+    pub fn on_shed(&mut self, r: &GenResult) {
+        self.deadline_shed += 1;
+        self.queued.record_ms(r.queued_ms);
+    }
+
+    /// Record one request evicted mid-decode because its completion
+    /// deadline passed. Like a cancel, its partial tokens stay in the
+    /// exact token ledger; like a shed, its queue wait stays in the
+    /// `queued` histogram.
+    pub fn on_deadline_evict(&mut self, r: &GenResult) {
+        self.deadline_evicted += 1;
+        self.total_new_tokens += r.generated().len();
+        self.queued.record_ms(r.queued_ms);
+    }
+
     /// Attribute wall time spent admitting/evicting (includes prefill).
     pub fn add_admit_secs(&mut self, secs: f64) {
         self.admit_secs += secs;
@@ -212,7 +238,8 @@ impl ServeStats {
     /// The report `silq serve` prints.
     pub fn report(&self) -> String {
         format!(
-            "served {} requests ({} rejected, {} cancelled) / {} tokens in {:.2}s over {} steps\n\
+            "served {} requests ({} rejected, {} cancelled, {} deadline-shed, \
+             {} deadline-evicted) / {} tokens in {:.2}s over {} steps\n\
              throughput     {:>9.1} tok/s\n\
              ttft           {:>9.2} ms mean   {:>8.2} ms p95\n\
              queued         {:>9.2} ms mean\n\
@@ -222,6 +249,8 @@ impl ServeStats {
             self.completed,
             self.rejected,
             self.cancelled,
+            self.deadline_shed,
+            self.deadline_evicted,
             self.total_new_tokens,
             self.wall_secs,
             self.steps,
@@ -274,6 +303,7 @@ impl ServeStats {
         }
         out.push_str(&format!(
             "],\"totals\":{{\"steps\":{},\"completed\":{},\"rejected\":{},\"cancelled\":{},\
+             \"deadline_shed\":{},\"deadline_evicted\":{},\
              \"new_tokens\":{},\
              \"wall_secs\":{:.4},\"tok_per_s\":{:.2},\"ttft_ms_mean\":{:.3},\
              \"ttft_ms_p95\":{:.3},\"queued_ms_mean\":{:.3},\"kv_bytes_peak\":{},\
@@ -282,6 +312,8 @@ impl ServeStats {
             self.completed,
             self.rejected,
             self.cancelled,
+            self.deadline_shed,
+            self.deadline_evicted,
             self.total_new_tokens,
             self.wall_secs,
             self.tokens_per_sec(),
@@ -355,6 +387,31 @@ mod tests {
         // NaN TTFT on a cancelled-before-first-token request is skipped
         st.on_first_token(f64::NAN);
         assert_eq!(st.ttft.count(), 1);
+    }
+
+    #[test]
+    fn shed_and_deadline_evictions_are_distinct_outcomes_with_queue_waits() {
+        let mut st = ServeStats::new(2);
+        // shed: never admitted, no tokens — but its queue wait is recorded
+        let s = Session::admit(GenRequest::new(1, vec![1, 2], 4), 0);
+        st.on_shed(&s.into_result(0));
+        // deadline eviction: partial tokens count, wait is recorded
+        let mut s = Session::admit(GenRequest::new(2, vec![1, 2], 50), 0);
+        s.push(7);
+        st.on_first_token(s.ttft_ms.unwrap());
+        st.on_deadline_evict(&s.into_result(1));
+        st.finish();
+        assert_eq!((st.completed, st.rejected, st.cancelled), (0, 0, 0));
+        assert_eq!((st.deadline_shed, st.deadline_evicted), (1, 1));
+        assert_eq!(st.total_new_tokens, 1, "evicted partial progress still counts");
+        assert_eq!(st.queued.count(), 2, "shed + evicted both stamp the queued histogram");
+        assert_eq!(st.total.count(), 0, "total-latency histogram stays completed-only");
+        let report = st.report();
+        assert!(report.contains("1 deadline-shed"), "{report}");
+        assert!(report.contains("1 deadline-evicted"), "{report}");
+        let doc = st.metrics_json();
+        assert!(doc.contains("\"deadline_shed\":1"), "{doc}");
+        assert!(doc.contains("\"deadline_evicted\":1"), "{doc}");
     }
 
     #[test]

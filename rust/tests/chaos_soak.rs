@@ -1,0 +1,306 @@
+//! Chaos soak: a seeded fault plan driven through the real wire server,
+//! with the books balanced afterwards (`make chaos`).
+//!
+//! One sequential client streams a storm of requests at a live
+//! [`Server`] while the deterministic fault plan fires: KV-pool allocs
+//! fail, kernel shards stall, streamed frames tear mid-write, the
+//! admission queue reports full, and one request slowlorises its own
+//! body. Because the client is sequential and every trigger is an exact
+//! hit count (see [`silq::faults`]), the same plan + seed produces the
+//! same storm every run — the chaos is replayable.
+//!
+//! What must hold when the dust settles:
+//!
+//! * **Exact books**: `ServeStats` == the obs counter deltas == what the
+//!   client observed on the wire, for every terminal class (completed /
+//!   rejected / cancelled / deadline-shed / deadline-evicted / 429 /
+//!   guard-408), and the classes partition the admitted total exactly.
+//! * **No leaks**: every KV slot is free and zero cache bytes are
+//!   resident after drain, torn streams and evictions included.
+//! * **Health cycle**: `/healthz` is `ok` before the storm, `degraded`
+//!   (with deadline-miss evidence) right after it, `ok` again after a
+//!   bounded amount of calm traffic, and the run ends `draining`.
+
+use silq::hostmodel::host_test_params;
+use silq::net::{client as netclient, Json, Server, ServerCfg};
+use silq::obs::{self, Counter};
+use silq::serve::{health, CacheStore, DecodeBackend, HealthState, HostBackend, HostCfg};
+use silq::util::Rng;
+use silq::{faults, kernels::pool};
+
+/// The plan: triggers are chosen against the fixed storm script below so
+/// forced-full submits (2, 11, 20 → ids 1, 10, 19) and KV alloc failures
+/// (6th and 13th alloc → plain buffered ids) never land on a designated
+/// shed/evict id — the designated counts stay exact. The `lat` period
+/// (25) is shorter than any 6-token decode run's pool-call count, so at
+/// least one 120 ms stall is guaranteed to land inside a *measured*
+/// decode step and trip the watchdog (not only inside prefill).
+const PLAN: &str = "kv@6+7,lat@10+25:120,torn@5+10,stall@24:600,full@2+9,seed=42";
+
+const STORM: usize = 24;
+const SHED_IDS: [usize; 3] = [3, 7, 22]; // ttft_deadline_ms = 0 → 503
+const EVICT_IDS: [usize; 3] = [5, 13, 21]; // deadline_ms = 0 → evicted
+const STREAM_IDS: [usize; 4] = [6, 9, 14, 17]; // SSE → torn-write targets
+const STALL_ID: usize = 23; // last request: fault-stalled body → 408
+const CALM: usize = 14; // 14 × 8 tokens = 112 healthy steps > PRESSURE_CAP
+
+fn healthz_doc(addr: &str) -> Json {
+    let (s, body) = netclient::get(addr, "/healthz").unwrap();
+    assert_eq!(s, 200, "{body}");
+    Json::parse(&body).unwrap()
+}
+
+fn health_status(doc: &Json) -> String {
+    doc.get("status").and_then(Json::as_str).unwrap().to_string()
+}
+
+#[test]
+fn seeded_fault_storm_balances_the_books_and_health_recovers() {
+    obs::set_enabled(true);
+    pool::configure(pool::env_threads().unwrap_or(1));
+    faults::clear(); // a clean slate no matter what ran before
+
+    let seq_len = 32;
+    let lanes = 2;
+    let cfg = HostCfg {
+        vocab: 256,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 4,
+        d_ff: 64,
+        seq_len,
+        policy: "w4a8kv8".parse().unwrap(),
+        rope_theta: 10000.0,
+    };
+    let params = host_test_params(&cfg, 71);
+    let store = CacheStore::for_policy(&cfg.policy);
+    let backend = HostBackend::new(cfg, lanes, &params, store).unwrap();
+    let server = Server::bind(ServerCfg {
+        addr: "127.0.0.1:0".into(),
+        lanes,
+        queue_cap: 8,
+        max_conns: 8,
+        default_max_new: 4,
+        header_timeout_ms: 300, // the stalled request must 408 quickly
+    })
+    .unwrap();
+    let addr = server.local_addr().to_string();
+    let worker = std::thread::spawn(move || server.run(backend).unwrap());
+
+    // baseline counter snapshot (other suites may have run in-process)
+    let d = |c: Counter, c0: u64| obs::get(c) - c0;
+    let enq0 = obs::get(Counter::ServeEnqueued);
+    let shed0 = obs::get(Counter::DeadlineShed);
+    let evic0 = obs::get(Counter::DeadlineEvicted);
+    let r4290 = obs::get(Counter::Net429);
+    let r5030 = obs::get(Counter::Net503Shed);
+    let guard0 = obs::get(Counter::NetGuardRejects);
+    let slow0 = obs::get(Counter::WatchdogSlowSteps);
+    let inj0 = obs::get(Counter::FaultsInjected);
+
+    // before the storm: a fresh server is healthy
+    assert_eq!(health_status(&healthz_doc(&addr)), "ok");
+
+    // arm the plan; traffic derives from its seed so plan + seed fully
+    // determine the run
+    faults::configure(PLAN).unwrap();
+    let mut rng = Rng::new(faults::seed());
+
+    // ---- the storm: one sequential client, 24 scripted requests -------
+    let mut c_ok = 0usize; // 200, reason "ok"
+    let mut c_rej = 0usize; // 200, reason "rejected" (KV exhaustion)
+    let mut c_evict = 0usize; // 200, reason "deadline" (mid-decode)
+    let mut c_429 = 0usize;
+    let mut c_503 = 0usize; // TTFT shed
+    let mut c_torn = 0usize; // stream broke mid-read (torn write)
+    let mut stalled_refused = false;
+
+    for i in 0..STORM {
+        let plen = 1 + rng.below(4);
+        let prompt: Vec<i32> = (0..plen).map(|_| 1 + rng.below(250) as i32).collect();
+        let shed = SHED_IDS.contains(&i);
+        let evict = EVICT_IDS.contains(&i);
+        let streamv = STREAM_IDS.contains(&i);
+        let budget = if evict { 4 } else if streamv { 6 } else { 3 };
+        let body = netclient::completion_body_ext(
+            i as u64,
+            &prompt,
+            budget,
+            true,
+            streamv,
+            Some(if evict { "batch" } else { "interactive" }),
+            evict.then_some(0),
+            shed.then_some(0),
+        );
+        if i == STALL_ID {
+            // the armed `stall` fault sleeps past the server's guard
+            // window mid-send; the server answers 408 and hangs up, so
+            // the client sees either the 408 or a broken socket
+            match netclient::complete_buffered(&addr, &body) {
+                Ok(o) => {
+                    assert_eq!(o.status, 408, "{:?}", o.done);
+                    stalled_refused = true;
+                }
+                Err(_) => stalled_refused = true,
+            }
+            continue;
+        }
+        if streamv {
+            match netclient::complete_streaming(&addr, &body, None) {
+                Err(_) => c_torn += 1,
+                Ok(o) => match o.status {
+                    429 => c_429 += 1,
+                    503 => c_503 += 1,
+                    200 => {
+                        let done = o.done.expect("stream ended without a done frame");
+                        match done.get("reason").and_then(Json::as_str) {
+                            Some("ok") => c_ok += 1,
+                            Some("rejected") => c_rej += 1,
+                            other => panic!("stream {i}: unexpected reason {other:?}"),
+                        }
+                    }
+                    s => panic!("stream {i}: unexpected status {s}"),
+                },
+            }
+            continue;
+        }
+        let o = netclient::complete_buffered(&addr, &body).unwrap();
+        match o.status {
+            429 => {
+                assert!(o.retry_after_ms.unwrap() >= 1, "429 without a backoff hint");
+                c_429 += 1;
+            }
+            503 => {
+                let done = o.done.as_ref().expect("shed without a body");
+                assert_eq!(done.get("reason").and_then(Json::as_str), Some("deadline_shed"));
+                assert!(o.retry_after_ms.unwrap() >= 1, "shed without a backoff hint");
+                assert!(shed, "request {i} shed without an expired TTFT deadline");
+                c_503 += 1;
+            }
+            200 => {
+                let done = o.done.as_ref().unwrap();
+                match done.get("reason").and_then(Json::as_str) {
+                    Some("ok") => c_ok += 1,
+                    Some("rejected") => {
+                        let err = done.get("error").and_then(Json::as_str).unwrap();
+                        assert!(err.contains("KV pool"), "reject without KV evidence: {err}");
+                        c_rej += 1;
+                    }
+                    Some("deadline") => {
+                        assert!(evict, "request {i} evicted without a deadline");
+                        assert_eq!(
+                            o.tokens.len(),
+                            1,
+                            "eviction must land at the first step boundary"
+                        );
+                        c_evict += 1;
+                    }
+                    other => panic!("request {i}: unexpected reason {other:?}"),
+                }
+            }
+            s => panic!("request {i}: unexpected status {s}"),
+        }
+    }
+
+    // the storm's fault ledger, before clear() zeroes it
+    let injected: std::collections::HashMap<&str, u64> =
+        faults::report().into_iter().map(|(name, _hits, inj)| (name, inj)).collect();
+    assert_eq!(injected["full"], 3, "forced-full fires on submits 2, 11, 20");
+    assert_eq!(injected["stall"], 1);
+    assert!(injected["kv"] >= 1, "the KV alloc fault never fired");
+    assert!(injected["torn"] >= 1, "the torn-write fault never fired");
+    assert!(injected["lat"] >= 1, "the shard-latency fault never fired");
+    assert!(stalled_refused, "the stalled request was served anyway");
+
+    // right after the storm (its tail is a shed): degraded, with evidence
+    let hz = healthz_doc(&addr);
+    assert_eq!(health_status(&hz), "degraded", "{hz:?}");
+    assert!(
+        hz.get("deadline_misses").and_then(Json::as_u64).unwrap() >= 6,
+        "degraded without deadline-miss evidence: {hz:?}"
+    );
+    assert!(hz.get("pressure").and_then(Json::as_u64).unwrap() >= 1);
+    assert!(
+        d(Counter::WatchdogSlowSteps, slow0) >= 1,
+        "120 ms shard stalls must flag slow steps"
+    );
+
+    // ---- calm: disarm, drain the pressure with healthy traffic --------
+    faults::clear();
+    for i in 0..CALM {
+        let prompt: Vec<i32> = (0..3).map(|_| 1 + rng.below(250) as i32).collect();
+        let body = netclient::completion_body((STORM + i) as u64, &prompt, 8, true, false);
+        let o = netclient::complete_buffered(&addr, &body).unwrap();
+        assert_eq!(o.status, 200, "calm traffic must serve cleanly");
+        assert_eq!(o.tokens.len(), 8);
+        c_ok += 1;
+    }
+    // bounded recovery: ≤ PRESSURE_CAP healthy steps drain any storm
+    let hz = healthz_doc(&addr);
+    assert_eq!(health_status(&hz), "ok", "health did not recover: {hz:?}");
+
+    // ---- drain and balance the books ----------------------------------
+    assert_eq!(netclient::shutdown(&addr).unwrap(), 200);
+    let ((results, stats, backend), net) = worker.join().unwrap();
+
+    // every class, three ways: client observation == ServeStats == counters
+    assert_eq!((c_503, stats.deadline_shed), (3, 3), "TTFT sheds");
+    assert_eq!(d(Counter::DeadlineShed, shed0), 3);
+    assert_eq!((net.shed_503, d(Counter::Net503Shed, r5030)), (3, 3));
+    assert_eq!((c_evict, stats.deadline_evicted), (3, 3), "deadline evictions");
+    assert_eq!(d(Counter::DeadlineEvicted, evic0), 3);
+    assert_eq!((c_429 as u64, net.rejected_429), (3, 3), "forced 429s");
+    assert_eq!(d(Counter::Net429, r4290), 3);
+    assert_eq!(net.guard_rejects, 1, "the stalled request must be guard-rejected");
+    assert_eq!(d(Counter::NetGuardRejects, guard0), 1);
+    assert_eq!(
+        stats.rejected as u64, injected["kv"],
+        "every fired KV fault must surface as exactly one typed reject"
+    );
+    assert_eq!(c_rej, stats.rejected, "client saw different rejects than the engine");
+    assert_eq!(
+        c_torn as u64, injected["torn"],
+        "every torn write must break exactly one client stream"
+    );
+    assert_eq!(
+        stats.cancelled as u64, net.disconnects,
+        "every mid-stream tear cancels its lane exactly once"
+    );
+    assert!(stats.cancelled <= c_torn, "a tear on a terminal frame cancels nothing");
+
+    // the classes partition everything that entered the queue: 24 storm
+    // requests minus 3 forced 429s minus the stalled 408, plus the calm
+    let admitted = (STORM - 3 - 1) + CALM;
+    assert_eq!(d(Counter::ServeEnqueued, enq0), admitted as u64);
+    assert_eq!(results.len(), admitted);
+    assert_eq!(
+        stats.completed
+            + stats.rejected
+            + stats.cancelled
+            + stats.deadline_shed
+            + stats.deadline_evicted,
+        admitted,
+        "terminal classes must partition the admitted total"
+    );
+    assert!(c_ok <= stats.completed, "client cannot see more completions than served");
+    assert_eq!(
+        d(Counter::FaultsInjected, inj0),
+        injected.values().sum::<u64>(),
+        "the counter and the per-site ledger disagree"
+    );
+
+    // no lane outlived its deadline, nothing leaked
+    for r in &results {
+        if EVICT_IDS.contains(&(r.id as usize)) {
+            assert!(
+                r.generated().len() <= 1,
+                "request {} outlived its expired deadline ({} tokens)",
+                r.id,
+                r.generated().len()
+            );
+        }
+    }
+    assert!(backend.all_slots_free(), "the storm leaked a KV slot");
+    assert_eq!(backend.kv_bytes(), 0, "the storm left KV bytes resident");
+    assert_eq!(health::state(), HealthState::Draining, "a drained run reports draining");
+}

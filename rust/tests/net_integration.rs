@@ -8,7 +8,10 @@
 //! * a client disconnect mid-stream cancels the lane and frees its KV
 //!   slot, and the next request completes on the freed lane;
 //! * a full admission queue answers `429` deterministically (lane and
-//!   queue both provably occupied first);
+//!   queue both provably occupied first), carrying a `Retry-After` hint;
+//! * a stalled (slowloris) or oversized request is refused by the guards
+//!   (408/431/413) instead of pinning a handler slot;
+//! * a queued request whose TTFT deadline expires is shed with `503`;
 //! * `/healthz`, `/metrics` and the 400/404 error paths.
 //!
 //! The tests share one process (and so the global telemetry registry and
@@ -64,6 +67,22 @@ fn spawn_server(
     Arc<AtomicBool>,
     std::thread::JoinHandle<(ServeOutcome<HostBackend>, NetReport)>,
 ) {
+    spawn_server_with(prec, seq_len, lanes, queue_cap, 5000)
+}
+
+/// [`spawn_server`] with an explicit slowloris guard window (the stall
+/// regression test needs a short one).
+fn spawn_server_with(
+    prec: &str,
+    seq_len: usize,
+    lanes: usize,
+    queue_cap: usize,
+    header_timeout_ms: u64,
+) -> (
+    String,
+    Arc<AtomicBool>,
+    std::thread::JoinHandle<(ServeOutcome<HostBackend>, NetReport)>,
+) {
     let b = backend(prec, seq_len, lanes);
     let server = Server::bind(ServerCfg {
         addr: "127.0.0.1:0".into(),
@@ -71,6 +90,7 @@ fn spawn_server(
         queue_cap,
         max_conns: 16,
         default_max_new: 4,
+        header_timeout_ms,
     })
     .unwrap();
     let addr = server.local_addr().to_string();
@@ -208,11 +228,13 @@ fn queue_full_answers_429() {
         assert!(Instant::now() < deadline, "B1 never reached the queue");
         std::thread::sleep(Duration::from_millis(1));
     }
-    // lane busy + queue full: B2 bounces immediately
+    // lane busy + queue full: B2 bounces immediately, with a backoff hint
     let body = netclient::completion_body(3, &[9], 2, true, false);
-    let (status, text) = netclient::request(&addr, "POST", "/v1/completions", &body).unwrap();
-    assert_eq!(status, 429, "{text}");
+    let b2 = netclient::complete_buffered(&addr, &body).unwrap();
+    assert_eq!(b2.status, 429, "{:?}", b2.done);
+    let text = b2.done.as_ref().and_then(|d| d.get("error")).and_then(Json::as_str).unwrap();
     assert!(text.contains("queue"));
+    assert!(b2.retry_after_ms.unwrap() >= 1, "429 must carry a retry_after_ms estimate");
     // hang up A: the cancel frees the lane, B1 gets admitted and finishes
     drop(ra);
     drop(a);
@@ -261,4 +283,120 @@ fn health_metrics_and_error_paths() {
     assert_eq!(stats.completed, 1);
     assert_eq!(net.streams, 1);
     assert!(backend.all_slots_free());
+}
+
+#[test]
+fn slowloris_and_oversized_requests_hit_the_guards() {
+    let _g = serial();
+    silq::obs::set_enabled(true);
+    // a short guard window so the stall answers fast
+    let (addr, flag, worker) = spawn_server_with("w4a8kv8", 24, 1, 4, 150);
+
+    // slowloris: deliver half a request head, then stall past the window
+    let mut s = std::net::TcpStream::connect(&addr).unwrap();
+    write!(s, "POST /v1/completions HTTP/1.1\r\nHost: t\r\n").unwrap();
+    s.flush().unwrap();
+    let mut r = BufReader::new(s.try_clone().unwrap());
+    let (status, _) = http::read_response_head(&mut r).unwrap();
+    assert_eq!(status, 408, "a stalled request head must be timed out");
+    drop(r);
+    drop(s);
+
+    // unbounded request line: refused at the line cap, not buffered
+    let mut s = std::net::TcpStream::connect(&addr).unwrap();
+    s.write_all(b"GET /").unwrap();
+    s.write_all(&vec![b'a'; 9 * 1024]).unwrap();
+    s.flush().unwrap();
+    let mut r = BufReader::new(s.try_clone().unwrap());
+    let (status, _) = http::read_response_head(&mut r).unwrap();
+    assert_eq!(status, 431, "an oversized request line must be refused");
+    drop(r);
+    drop(s);
+
+    // oversized body: refused from the declared length alone
+    let mut s = std::net::TcpStream::connect(&addr).unwrap();
+    write!(
+        s,
+        "POST /v1/completions HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n",
+        2 * 1024 * 1024
+    )
+    .unwrap();
+    s.flush().unwrap();
+    let mut r = BufReader::new(s.try_clone().unwrap());
+    let (status, _) = http::read_response_head(&mut r).unwrap();
+    assert_eq!(status, 413, "an oversized body must be refused");
+    drop(r);
+    drop(s);
+
+    // the server is still healthy and serving after the abuse
+    let body = netclient::completion_body(1, &[3, 4], 2, true, false);
+    let o = netclient::complete_buffered(&addr, &body).unwrap();
+    assert_eq!((o.status, o.tokens.len()), (200, 2));
+
+    flag.store(true, Ordering::SeqCst);
+    let ((_, stats, backend), net) = worker.join().unwrap();
+    assert_eq!(stats.completed, 1);
+    assert_eq!(net.guard_rejects, 3, "each guarded refusal must be tallied");
+    assert!(backend.all_slots_free());
+}
+
+#[test]
+fn queued_request_past_its_ttft_deadline_is_shed_with_503() {
+    let _g = serial();
+    silq::obs::set_enabled(true);
+    use silq::obs::Counter;
+    let e0 = silq::obs::get(Counter::ServeEnqueued);
+    // same occupancy trick as the 429 test: A holds the single lane with
+    // a long decode while B waits in the queue with an already-expired
+    // TTFT deadline — the next step boundary must shed B, not admit it
+    let seq_len = 768;
+    let (addr, flag, worker) = spawn_server("w4a8kv8", seq_len, 1, 4);
+    let body_a = netclient::completion_body(1, &[5, 6], seq_len * 2, true, true);
+    let mut a = std::net::TcpStream::connect(&addr).unwrap();
+    write!(
+        a,
+        "POST /v1/completions HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body_a}",
+        body_a.len()
+    )
+    .unwrap();
+    a.flush().unwrap();
+    let mut ra = BufReader::new(a.try_clone().unwrap());
+    let (status, _) = http::read_response_head(&mut ra).unwrap();
+    assert_eq!(status, 200);
+    assert!(http::read_chunk(&mut ra).unwrap().is_some(), "no first token frame");
+
+    // B: expired before it ever reaches the queue (ttft_deadline_ms: 0);
+    // streaming mode on purpose — the shed must preempt the SSE 200
+    let body_b = netclient::completion_body_ext(
+        2, &[7], 4, true, true, Some("interactive"), None, Some(0),
+    );
+    let addr2 = addr.clone();
+    let b = std::thread::spawn(move || {
+        netclient::complete_streaming(&addr2, &body_b, None).unwrap()
+    });
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while silq::obs::get(Counter::ServeEnqueued) - e0 < 2 {
+        assert!(Instant::now() < deadline, "B never reached the queue");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    // free the lane: A hangs up, the next step boundary processes the
+    // queue and sheds B
+    drop(ra);
+    drop(a);
+    let b = b.join().unwrap();
+    assert_eq!(b.status, 503, "{:?}", b.done);
+    let doc = b.done.expect("shed answer must carry a JSON body");
+    assert_eq!(doc.get("reason").and_then(Json::as_str), Some("deadline_shed"));
+    assert!(b.retry_after_ms.unwrap() >= 1, "shed must carry a backoff hint");
+    assert!(b.tokens.is_empty(), "a shed request must never decode");
+
+    flag.store(true, Ordering::SeqCst);
+    let ((results, stats, backend), net) = worker.join().unwrap();
+    assert_eq!((stats.deadline_shed, stats.cancelled), (1, 1));
+    assert_eq!(net.shed_503, 1);
+    let rb = results.iter().find(|r| r.id == 2).unwrap();
+    assert!(rb.error.as_deref().unwrap().contains("ttft deadline"), "{:?}", rb.error);
+    assert!(backend.all_slots_free(), "shed request leaked a KV slot");
+    assert_eq!(backend.kv_bytes(), 0);
 }

@@ -93,6 +93,7 @@ fn wire_soak_accounts_for_every_request_and_frees_everything() {
         queue_cap: 2,
         max_conns: 8,
         default_max_new: 4,
+        header_timeout_ms: 5000,
     })
     .unwrap();
     let addr = server.local_addr().to_string();

@@ -506,3 +506,144 @@ fn prop_policy_spec_display_fromstr_roundtrip() {
         assert_eq!(q.to_string(), s, "seed {seed}: re-rendering must be idempotent");
     }
 }
+
+#[test]
+fn prop_priority_queue_never_inverts() {
+    // The admission queue's scheduling contract, swept over random
+    // push/pop interleavings: a pop yields the oldest waiting interactive
+    // request whenever any interactive request is queued, else the oldest
+    // batch request — strict priority, FIFO within a class, nothing lost.
+    use silq::serve::{AdmissionQueue, GenRequest, Priority};
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x9107);
+        let q = AdmissionQueue::new(1024);
+        // model: (id, priority) in arrival order for everything queued
+        let mut model: Vec<(u64, Priority)> = Vec::new();
+        let mut next_id = 0u64;
+        let mut popped = 0usize;
+        for _ in 0..rng.range(20, 120) {
+            if model.is_empty() || rng.below(5) < 3 {
+                let pr = if rng.below(3) == 0 { Priority::Batch } else { Priority::Interactive };
+                let r = GenRequest::new(next_id, vec![1, 2], 1).with_priority(pr);
+                q.try_submit(r).unwrap_or_else(|e| panic!("seed {seed}: submit: {e}"));
+                model.push((next_id, pr));
+                next_id += 1;
+            } else {
+                let got = q.try_pop().unwrap_or_else(|| panic!("seed {seed}: queue lost a request"));
+                let want = model
+                    .iter()
+                    .position(|(_, p)| *p == Priority::Interactive)
+                    .unwrap_or(0);
+                let (id, pr) = model.remove(want);
+                assert_eq!(
+                    (got.id, got.priority),
+                    (id, pr),
+                    "seed {seed}: pop inverted priority order (model {model:?})"
+                );
+                popped += 1;
+            }
+        }
+        // drain what's left: all interactive (in order) before any batch
+        let mut last = Priority::Interactive;
+        while let Some(r) = q.try_pop() {
+            assert!(
+                !(last == Priority::Batch && r.priority == Priority::Interactive),
+                "seed {seed}: an interactive request was stuck behind batch"
+            );
+            last = r.priority;
+            popped += 1;
+        }
+        assert_eq!(popped as u64, next_id, "seed {seed}: requests leaked");
+        assert_eq!(q.depth(), 0);
+    }
+}
+
+#[test]
+fn prop_deadline_eviction_deterministic_across_thread_widths() {
+    // Deadline enforcement must be scheduler-state arithmetic, never a
+    // race: a request whose completion deadline is already expired at
+    // admission always decodes exactly one token before the next step
+    // boundary evicts it, and every surviving request's tokens are
+    // bit-identical to an undeadlined run — at any worker-pool width
+    // (scripts/check.sh runs this suite under SILQ_THREADS=1 and =4).
+    use silq::hostmodel::{host_test_params, CacheStore, HostCfg};
+    use silq::serve::{serve_inline, FinishReason, GenRequest, HostBackend};
+    let _traffic = hostmodel_traffic_lock();
+    silq::kernels::pool::configure(silq::kernels::pool::env_threads().unwrap_or(1));
+    let cases = if cfg!(debug_assertions) { 6 } else { 16 };
+    for seed in 0..cases {
+        let mut rng = Rng::new(seed ^ 0xDEAD);
+        let lanes = rng.range(1, 4);
+        let cfg = HostCfg {
+            vocab: 64,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 32,
+            seq_len: 24,
+            policy: "w4a8kv8".parse().unwrap(),
+            rope_theta: 10000.0,
+        };
+        let params = host_test_params(&cfg, seed);
+        let store = CacheStore::for_policy(&cfg.policy);
+        let n_req = rng.range(lanes + 1, 2 * lanes + 5);
+        // a random subset carries an already-expired completion deadline
+        let doomed: Vec<bool> = (0..n_req).map(|_| rng.below(3) == 0).collect();
+        let prompts: Vec<Vec<i32>> = (0..n_req)
+            .map(|_| {
+                let plen = rng.range(1, 6);
+                (0..plen).map(|_| rng.below(cfg.vocab) as i32).collect()
+            })
+            .collect();
+        let mk = |with_deadlines: bool| -> Vec<GenRequest> {
+            prompts
+                .iter()
+                .enumerate()
+                .map(|(i, p)| {
+                    let mut r = GenRequest::new(i as u64, p.clone(), 8).ignore_eos();
+                    if with_deadlines && doomed[i] {
+                        r = r.with_deadline_ms(0);
+                    }
+                    r
+                })
+                .collect()
+        };
+        let run = |reqs: Vec<GenRequest>| {
+            let b = HostBackend::new(cfg.clone(), lanes, &params, store).unwrap();
+            let (mut rs, stats) = serve_inline(b, lanes, reqs).unwrap();
+            rs.sort_by_key(|r| r.id);
+            (rs, stats)
+        };
+        let (dead_a, stats_a) = run(mk(true));
+        let (dead_b, _) = run(mk(true));
+        let (free, _) = run(mk(false));
+        let n_doomed = doomed.iter().filter(|&&d| d).count();
+        assert_eq!(stats_a.deadline_evicted, n_doomed, "seed {seed}");
+        for i in 0..n_req {
+            let (a, b) = (&dead_a[i], &dead_b[i]);
+            // rerun determinism: byte-for-byte the same outcome
+            assert_eq!(a.tokens, b.tokens, "seed {seed} req {i}: rerun diverged");
+            assert_eq!(a.reason, b.reason, "seed {seed} req {i}");
+            if doomed[i] {
+                assert_eq!(
+                    a.reason,
+                    FinishReason::DeadlineEvicted,
+                    "seed {seed} req {i}: expired deadline must evict"
+                );
+                assert_eq!(
+                    a.generated().len(),
+                    1,
+                    "seed {seed} req {i}: eviction lands at the first step boundary"
+                );
+            } else {
+                assert_eq!(a.reason, FinishReason::Completed, "seed {seed} req {i}");
+                // deadline traffic on sibling lanes never perturbs
+                // surviving requests' numerics
+                assert_eq!(
+                    a.tokens, free[i].tokens,
+                    "seed {seed} req {i}: deadline evictions changed sibling decode"
+                );
+            }
+        }
+    }
+}

@@ -19,7 +19,7 @@ echo "== cargo test -q --release (integration + property suites) =="
 cargo test -q --offline --release \
   --test proptests --test serve_integration --test serve_soak \
   --test kernels_integration --test kernels_zero_alloc --test obs_integration \
-  --test net_integration --test net_soak
+  --test net_integration --test net_soak --test chaos_soak
 
 echo "== kernel identity + serve suites at SILQ_THREADS=1 and =4 =="
 # every identity pin must hold bit-exactly at any worker-pool width: run
@@ -136,6 +136,107 @@ fi
 wait "$SERVE_PID"
 grep -q "drained clean" "$SERVE_LOG" || { echo "no clean drain"; cat "$SERVE_LOG"; exit 1; }
 rm -f "$SERVE_LOG"
+
+echo "== resilience smoke (--faults, deadlines, health recovery) =="
+# the armed fault plan must surface on the wire exactly once (one forced
+# 429 with a backoff hint), an expired TTFT deadline must shed with 503,
+# and /healthz must walk ok -> degraded -> ok -> draining around the storm
+CHAOS_LOG="$(mktemp /tmp/silq_smoke.XXXXXX.chaos.log)"
+cargo run -q --release --offline -- serve \
+  --listen 127.0.0.1:0 --batch 2 --prec w4a8kv8 --faults full@2 > "$CHAOS_LOG" &
+CHAOS_PID=$!
+for _ in $(seq 1 100); do
+  grep -q "listening on " "$CHAOS_LOG" && break
+  sleep 0.1
+done
+ADDR="$(sed -n 's/^listening on \([0-9.:]*\) .*/\1/p' "$CHAOS_LOG" | head -n1)"
+if [ -z "$ADDR" ]; then
+  kill "$CHAOS_PID" 2>/dev/null || true
+  echo "resilience smoke: server never came up"; cat "$CHAOS_LOG"; exit 1
+fi
+if ! python3 - "$ADDR" <<'EOF'
+import json, socket, sys
+
+host, port = sys.argv[1].rsplit(":", 1)
+
+def req(method, path, body=b""):
+    s = socket.create_connection((host, int(port)), timeout=30)
+    s.sendall((f"{method} {path} HTTP/1.1\r\nHost: smoke\r\n"
+               f"Content-Type: application/json\r\nContent-Length: {len(body)}\r\n"
+               f"Connection: close\r\n\r\n").encode() + body)
+    data = b""
+    while True:
+        chunk = s.recv(65536)
+        if not chunk:
+            break
+        data += chunk
+    s.close()
+    head, _, rest = data.partition(b"\r\n\r\n")
+    return head, rest
+
+def status(head):
+    return int(head.split(b"\r\n", 1)[0].split(b" ")[1])
+
+def header(head, name):
+    for line in head.split(b"\r\n")[1:]:
+        k, _, v = line.partition(b":")
+        if k.strip().lower() == name.lower().encode():
+            return v.strip().decode()
+    return None
+
+def post(doc):
+    return req("POST", "/v1/completions", json.dumps(doc).encode())
+
+def healthz():
+    head, body = req("GET", "/healthz")
+    assert status(head) == 200, head
+    return json.loads(body)
+
+assert healthz()["status"] == "ok"
+
+# submit 1: serves normally
+head, body = post({"id": 1, "prompt": [1, 2, 3], "max_tokens": 4,
+                   "ignore_eos": True, "priority": "interactive"})
+assert status(head) == 200 and len(json.loads(body)["generated"]) == 4, body
+
+# submit 2: the armed full@2 forces queue-full -> 429 with a backoff hint
+head, body = post({"id": 2, "prompt": [4, 5], "max_tokens": 4, "ignore_eos": True})
+assert status(head) == 429, head
+assert int(header(head, "Retry-After")) >= 1, head
+assert json.loads(body)["retry_after_ms"] >= 1, body
+
+# submit 3: the retry is accepted (the fault fires once)
+head, body = post({"id": 2, "prompt": [4, 5], "max_tokens": 4, "ignore_eos": True})
+assert status(head) == 200 and len(json.loads(body)["generated"]) == 4, body
+
+# submit 4: an already-expired TTFT deadline is shed, never decoded
+head, body = post({"id": 3, "prompt": [6], "max_tokens": 4,
+                   "ignore_eos": True, "ttft_deadline_ms": 0})
+assert status(head) == 503, head
+doc = json.loads(body)
+assert doc["reason"] == "deadline_shed" and doc["retry_after_ms"] >= 1, body
+assert int(header(head, "Retry-After")) >= 1, head
+
+# the shed leaves pressure behind: degraded, with the miss on record
+hz = healthz()
+assert hz["status"] == "degraded" and hz["deadline_misses"] >= 1, hz
+
+# submit 5: healthy decode steps drain the pressure back to ok
+head, body = post({"id": 4, "prompt": [7, 8], "max_tokens": 8, "ignore_eos": True})
+assert status(head) == 200 and len(json.loads(body)["generated"]) == 8, body
+assert healthz()["status"] == "ok", healthz()
+
+head, body = req("POST", "/shutdown")
+assert json.loads(body)["draining"] is True, body
+print("resilience smoke: OK (429 hinted, 503 shed, health ok->degraded->ok)")
+EOF
+then
+  kill "$CHAOS_PID" 2>/dev/null || true
+  echo "resilience smoke failed"; cat "$CHAOS_LOG"; exit 1
+fi
+wait "$CHAOS_PID"
+grep -q "drained clean" "$CHAOS_LOG" || { echo "no clean drain"; cat "$CHAOS_LOG"; exit 1; }
+rm -f "$CHAOS_LOG"
 
 echo "== bench-serve smoke (wire bench rows) =="
 # the wire bench must produce parseable rows with the TTFT percentiles
