@@ -18,7 +18,7 @@ use silq::quant;
 use silq::runtime::{build_inputs, literal_i32, Engine};
 use silq::evalharness::decode::argmax;
 use silq::forward::{decode_greedy, HostForward};
-use silq::hostmodel::{builtin_model, host_test_params, HostModel, KvPool};
+use silq::hostmodel::{builtin_model, host_test_params, HostModel, KvLayout, KvPool};
 use silq::serve::{serve_inline, ArtifactBackend, CacheStore, GenRequest, HostBackend, HostCfg};
 use silq::util::timer::{bench_ms, BenchMs};
 use silq::util::{Rng, Timer};
@@ -312,6 +312,66 @@ fn batched_decode_entries() -> Vec<String> {
     out
 }
 
+/// Slab-vs-paged serve rows with page-occupancy and sharing provenance:
+/// the same request mix (half the prompts open with a two-page shared
+/// system prefix) through both KV layouts. The layouts decode
+/// token-identically (pinned by the proptest suite), so these rows track
+/// only the paged walk's overhead plus the occupancy / sharing-ratio
+/// trajectory the paged allocator is for.
+fn paged_serve_entries() -> Vec<String> {
+    let mc = builtin_model("small").expect("builtin model");
+    let cfg = HostCfg::from_policy(&mc, &"w4a8kv8".parse().expect("policy")).expect("host cfg");
+    let params = host_test_params(&cfg, 41);
+    let (lanes, ps) = (4usize, 8usize);
+    let prefix: Vec<i32> =
+        (0..(2 * ps) as i32).map(|p| 1 + (p * 17) % (cfg.vocab as i32 - 1)).collect();
+    let mk_reqs = || -> Vec<GenRequest> {
+        (0..2 * lanes)
+            .map(|i| {
+                let mut prompt = if i % 2 == 0 { prefix.clone() } else { Vec::new() };
+                prompt
+                    .extend((0..4usize).map(|p| 1 + ((i * 29 + p * 13) % (cfg.vocab - 1)) as i32));
+                GenRequest::new(i as u64, prompt, 8).ignore_eos()
+            })
+            .collect()
+    };
+    let mut out = vec![];
+    for (kv, layout) in [
+        ("slab", KvLayout::Slab),
+        ("paged", KvLayout::Paged { page_size: ps, total_pages: None, sharing: true }),
+    ] {
+        let backend =
+            HostBackend::new_with_layout(cfg.clone(), lanes, &params, CacheStore::Int8, layout)
+                .expect("backend");
+        let (_, st) = serve_inline(backend, lanes, mk_reqs()).expect("serve run");
+        report(
+            &format!("serve decode small w4a8kv8, kv={kv}"),
+            st.wall_secs * 1e3,
+            &format!(
+                "({:.0} tok/s, {} pages peak, sharing {:.2})",
+                st.tokens_per_sec(),
+                st.kv_pages_peak,
+                st.kv_sharing_ratio()
+            ),
+        );
+        out.push(format!(
+            "  {{\"label\": \"paged kv serve small w4a8kv8 kv={kv}\", \"backend\": \"host\", \
+             \"policy\": \"w4a8kv8\", \"kv\": \"{kv}\", \"page_size\": {}, \"threads\": {}, \
+             \"kernel\": \"{}\", \"tok_per_s\": {:.2}, \"kv_pages_peak\": {}, \
+             \"kv_sharing_ratio\": {:.4}, \"completed\": {}, \"occupancy\": {:.3}}}",
+            if kv == "paged" { ps } else { cfg.seq_len },
+            pool::active_threads(),
+            simd::active_name(),
+            st.tokens_per_sec(),
+            st.kv_pages_peak,
+            st.kv_sharing_ratio(),
+            st.completed,
+            st.batch_occupancy(),
+        ));
+    }
+    out
+}
+
 /// Batched serve decode at B=8 across worker-pool widths {1, 2, 4, 8}:
 /// the fused cross-lane step shards its GEMMs by output channel and its
 /// int8 attention by lane, so one scheduler step itself scales with the
@@ -367,6 +427,8 @@ fn quick_serve_section(base_threads: usize) {
     let mut entries = serve_host_entries();
     section("cross-lane batched decode (one fused GEMM per matrix per step)");
     entries.extend(batched_decode_entries());
+    section("paged KV serve (page occupancy + prefix sharing)");
+    entries.extend(paged_serve_entries());
     section("batched decode vs worker-pool width (B=8)");
     entries.extend(batched_decode_thread_entries(base_threads));
     write_bench_serve_json(&entries);
@@ -488,6 +550,10 @@ fn main() {
     // several batch widths (also part of --quick; lands in BENCH_serve.json)
     section("cross-lane batched decode (one fused GEMM per matrix per step)");
     serve_json.extend(batched_decode_entries());
+
+    // paged KV layout vs the slab, same mix: occupancy + sharing rows
+    section("paged KV serve (page occupancy + prefix sharing)");
+    serve_json.extend(paged_serve_entries());
 
     // one fused step scales with the worker pool too: B=8, widths 1..8
     section("batched decode vs worker-pool width (B=8)");

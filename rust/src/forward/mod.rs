@@ -25,7 +25,9 @@ use anyhow::{ensure, Context, Result};
 use std::sync::Arc;
 
 use crate::evalharness::decode::{argmax, argmax_rows, pack_rows};
-use crate::hostmodel::{check_tokens, BatchLane, CacheStore, HostCfg, HostModel, KvPool};
+use crate::hostmodel::{
+    check_tokens, AdmitErr, BatchLane, CacheStore, HostCfg, HostModel, KvLayout, KvPool, PageLedger,
+};
 use crate::kernels::{BatchScratch, DecodeScratch};
 use crate::model::ParamStore;
 use crate::obs;
@@ -324,11 +326,34 @@ impl HostForward {
         Self::from_model(HostModel::new(cfg, params)?, n_rows, store)
     }
 
+    /// [`HostForward::new`] with an explicit KV cache layout.
+    pub fn new_with_layout(
+        cfg: HostCfg,
+        n_rows: usize,
+        params: &ParamStore,
+        store: CacheStore,
+        layout: KvLayout,
+    ) -> Result<HostForward> {
+        Self::from_model_with_layout(HostModel::new(cfg, params)?, n_rows, store, layout)
+    }
+
     /// Wrap an already-built model (e.g. a [`HostModel::new_reference`]
     /// build for the f32-baseline benches) in a decode frontend.
     pub fn from_model(model: HostModel, n_rows: usize, store: CacheStore) -> Result<HostForward> {
+        Self::from_model_with_layout(model, n_rows, store, KvLayout::Slab)
+    }
+
+    /// [`HostForward::from_model`] with an explicit cache layout — the
+    /// paged pool is selected here (`--kv paged` upstream) and everything
+    /// downstream is layout-oblivious.
+    pub fn from_model_with_layout(
+        model: HostModel,
+        n_rows: usize,
+        store: CacheStore,
+        layout: KvLayout,
+    ) -> Result<HostForward> {
         ensure!(n_rows >= 1, "need at least one row");
-        let pool = model.make_pool(n_rows, store)?;
+        let pool = model.make_pool_with(n_rows, store, layout)?;
         let scratch = DecodeScratch::for_cfg(&model.cfg);
         let batch_scratch = BatchScratch::for_cfg(&model.cfg, n_rows);
         Ok(HostForward {
@@ -348,12 +373,23 @@ impl HostForward {
         &self.model
     }
 
-    /// Resident KV bytes of the in-use slots, in deployment format.
+    /// Resident KV bytes — bytes of pages actually bound to live
+    /// sessions, in deployment format. Under the slab layout a session
+    /// binds its pages up front, so this still climbs per-slot; under the
+    /// paged layout it tracks true occupancy (shared prefix pages are
+    /// counted once).
     pub fn kv_bytes(&self) -> usize {
-        if self.pool.slots == 0 {
-            return 0;
-        }
-        self.pool.storage_bytes() * self.pool.slots_in_use() / self.pool.slots
+        self.pool.resident_bytes()
+    }
+
+    /// Physical pages currently bound to live sessions.
+    pub fn kv_pages(&self) -> usize {
+        self.pool.pages_in_use()
+    }
+
+    /// Lifetime page-flow counters of the underlying pool.
+    pub fn kv_ledger(&self) -> PageLedger {
+        self.pool.ledger()
     }
 
     /// Bind row `row` to a cache slot and prefill everything but the last
@@ -370,9 +406,16 @@ impl HostForward {
         // per-request rejection, not an error out of the first step
         check_tokens(prompt, self.model.cfg.vocab)?;
         let _span = obs::span("prefill", "serve", row as u32 + 1, prompt.len() as u64);
-        let slot = self.pool.alloc().context("KV pool exhausted")?;
+        // keep the typed cause in the chain: serve admission downcasts to
+        // `AdmitErr` to distinguish pages-exhausted from slot-exhausted
+        let (slot, shared_pos) = self
+            .pool
+            .alloc_with_prompt(prompt)
+            .map_err(|e: AdmitErr| anyhow::Error::new(e).context("KV pool exhausted"))?;
         self.slot_of_row[row] = Some(slot);
-        for (pos, &tok) in prompt[..prompt.len() - 1].iter().enumerate() {
+        // positions < shared_pos are already resident in sealed pages this
+        // session attached to — prefill only the unshared tail
+        for (pos, &tok) in prompt[..prompt.len() - 1].iter().enumerate().skip(shared_pos) {
             let stepped = self
                 .model
                 .forward_token_into(&mut self.pool, slot, tok, pos, false, &mut self.scratch);
@@ -426,6 +469,13 @@ impl HostForward {
     /// invariant the serve soak test pins.
     pub fn all_slots_free(&self) -> bool {
         self.pool.all_slots_free()
+    }
+
+    /// [`HostForward::all_slots_free`] generalized to the paged pool: no
+    /// slot bound, no page resident, no commitment outstanding, every
+    /// physical page accounted for on the free list or the LRU.
+    pub fn all_pages_free(&self) -> bool {
+        self.pool.all_pages_free()
     }
 
     /// Gather every active row into one [`HostModel::forward_tokens_batch`]

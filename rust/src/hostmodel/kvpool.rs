@@ -1,17 +1,44 @@
-//! Slab-allocated KV-cache pool with quantized storage.
+//! Paged KV-cache pool with quantized storage and prefix sharing.
 //!
 //! Each decode session (a serve lane, or an eval/self-generation row) owns
-//! one *slot*: a contiguous per-layer slab of K and V rows, one row of
-//! `dim` channels per generated position. The pool applies the paper's
+//! one *slot*: a page table mapping logical positions to fixed-size
+//! physical **pages** (`page_size` positions × `dim` channels, K, V and
+//! the dynamic write steps co-resident). The pool applies the paper's
 //! cache quantization **on write** (Figure 2: C-bit K/V tensors). Readers
 //! have two views:
 //!
 //! * [`KvPool::read_into`] — dequantize positions `0..len` into f32
-//!   buffers (the fake-quant view; the f32 fallback decode path).
-//! * [`KvPool::slab`] — the raw `i8` rows + their write steps, borrowed
-//!   straight out of the slab with **no copy and no dequantization**; the
-//!   integer attention kernel (`kernels::attend_i8`) computes `q·k` in
-//!   `i32` directly over this view.
+//!   buffers, gathering across pages (the fake-quant view; the f32
+//!   fallback decode path).
+//! * [`KvPool::runs`] — the raw `i8` rows + their write steps, borrowed
+//!   page by page straight out of the resident storage with **no copy and
+//!   no dequantization**; the integer attention kernel
+//!   (`kernels::attend_i8_runs`) walks the runs in position order and
+//!   computes `q·k` in `i32` directly over them. [`KvPool::slab`] remains
+//!   as the single-run view for windows that fit one page (every window,
+//!   under the slab-equivalent geometry).
+//!
+//! **Paging.** [`KvPool::new`] builds the slab-equivalent geometry — one
+//! page of `seq` positions per slot, sharing off — so every pre-paging
+//! caller keeps its exact semantics. [`KvPool::new_paged`] (or
+//! [`KvLayout::Paged`]) turns on real paging: pages are bound lazily on
+//! first write, admission commits the worst-case page budget up front
+//! (`pages_per_slot` minus any shared prefix), and a typed
+//! [`AdmitErr::Pages`] reject fires when the uncommitted pool can't cover
+//! a new session — mid-decode writes can then never run out (the commit
+//! invariant; `alloc_page` panics rather than corrupt if it is ever
+//! broken).
+//!
+//! **Prefix sharing.** [`KvPool::alloc_with_prompt`] chain-hashes the
+//! prompt in `page_size`-token chunks and attaches any already-resident
+//! pages whose full token prefix matches exactly (the hash is a hint;
+//! equality is verified token-for-token). Attached pages are refcounted;
+//! position-determinism (a position's K/V depends only on the tokens at or
+//! before it) makes the skip-prefill bit-exact. A writer landing inside a
+//! page shared `rc > 1` triggers a **copy-on-write fork**; pages whose
+//! last reference drops while still indexed park in an **LRU** list —
+//! revivable by a later matching admit, reclaimed oldest-first when the
+//! free list runs dry.
 //!
 //! Two storage modes share one quantization rule:
 //! * [`CacheStore::F32`] — the QAT "fake quant" view: quantized values kept
@@ -22,15 +49,19 @@
 //!   modes **dequantize** to bit-identical f32 — the paper's deployability
 //!   claim at the value level, pinned by the unit tests below. Since the
 //!   integer-kernel PR, *decode* over the Int8 store runs exact `i32` q·k
-//!   over the slab while the F32 store attends over the fake-quant floats,
-//!   so end-to-end logits agree to float-rounding (~1e-5 relative) rather
-//!   than bit-for-bit; the serve integration test pins greedy decode
-//!   token-identical across the two on the builtin models, where top-logit
-//!   margins dwarf that rounding.
+//!   over the resident pages while the F32 store attends over the
+//!   fake-quant floats, so end-to-end logits agree to float-rounding
+//!   (~1e-5 relative) rather than bit-for-bit; the serve integration test
+//!   pins greedy decode token-identical across the two on the builtin
+//!   models, where top-logit margins dwarf that rounding.
+
+use std::collections::HashMap;
+use std::fmt;
 
 use anyhow::{bail, ensure, Result};
 
-use crate::kernels::{dyn_step, qint};
+use crate::kernels::{dyn_step, qint, KvRun};
+use crate::obs;
 use crate::quant::{fake_quant_prefloored, qbounds, EPS};
 
 /// How cache rows are quantized on write.
@@ -189,9 +220,101 @@ impl CacheStore {
     }
 }
 
+/// Default positions per page for the paged geometry (`--kv paged`).
+pub const DEFAULT_PAGE_SIZE: usize = 16;
+
+/// Pool geometry selector — slab-equivalent (one `seq`-sized page per
+/// slot, no sharing: the pre-paging behavior) or truly paged.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum KvLayout {
+    /// one contiguous page per slot, prefix sharing off
+    #[default]
+    Slab,
+    /// fixed-size pages, lazy binding, refcounted prefix sharing
+    Paged {
+        /// positions per page
+        page_size: usize,
+        /// physical pages in the pool; `None` = `slots * pages_per_slot`
+        /// (capacity-equivalent to the slab)
+        total_pages: Option<usize>,
+        /// hash-match common prompt prefixes at admit
+        sharing: bool,
+    },
+}
+
+impl KvLayout {
+    /// The default paged geometry: [`DEFAULT_PAGE_SIZE`], slab-equivalent
+    /// capacity, sharing on.
+    pub fn paged() -> KvLayout {
+        KvLayout::Paged { page_size: DEFAULT_PAGE_SIZE, total_pages: None, sharing: true }
+    }
+
+    /// Parse a `--kv` flag value; unknown values are a hard error naming
+    /// the accepted set.
+    pub fn parse(s: &str) -> Result<KvLayout> {
+        match s {
+            "slab" => Ok(KvLayout::Slab),
+            "paged" => Ok(KvLayout::paged()),
+            other => bail!("unknown kv layout {other:?} (accepted: slab|paged)"),
+        }
+    }
+}
+
+/// Why [`KvPool::alloc_with_prompt`] refused a session — the typed
+/// admission reject the scheduler surfaces as a rejected finish, and the
+/// HTTP front-end maps onto a 429 body naming the exhausted resource.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmitErr {
+    /// every session slot is taken
+    Slots {
+        /// pool slot count
+        slots: usize,
+    },
+    /// the uncommitted page pool can't cover this session's worst case
+    Pages {
+        /// pages this session would commit
+        needed: usize,
+        /// uncommitted pages actually available
+        available: usize,
+    },
+    /// an armed `kv@N` fault plan forced exhaustion on this attempt
+    Injected,
+}
+
+impl fmt::Display for AdmitErr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AdmitErr::Slots { slots } => write!(f, "no free session slot (pool has {slots})"),
+            AdmitErr::Pages { needed, available } => {
+                write!(f, "out of pages (need {needed}, {available} uncommitted)")
+            }
+            AdmitErr::Injected => write!(f, "forced exhaustion (fault injection)"),
+        }
+    }
+}
+
+/// Running page-event totals — the exact-balance ledger the paged-pool
+/// torture test audits: `allocated + revived == released + resident` at
+/// every point, and `resident == 0` at clean shutdown.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PageLedger {
+    /// pages bound to a session off the free path (incl. COW copies)
+    pub allocated: u64,
+    /// shared-prefix attaches (refcount bumps + LRU revivals)
+    pub shared: u64,
+    /// copy-on-write forks (a writer landed in a page shared `rc > 1`)
+    pub forked: u64,
+    /// sealed LRU pages unsealed and stolen when the free list ran dry
+    pub reclaimed: u64,
+    /// pages whose last reference dropped (to the free list or the LRU)
+    pub released: u64,
+    /// LRU-parked pages re-attached by a later matching admit
+    pub revived: u64,
+}
+
 /// Borrowed view of one (slot, layer)'s raw quantized K/V rows — what
 /// [`KvPool::slab`] hands the integer attention kernel. No copy is made:
-/// the slices alias the resident slab.
+/// the slices alias the resident page.
 pub struct KvSlabRef<'a> {
     /// `i8` K rows, `[len * dim]` row-major by position
     pub k: &'a [i8],
@@ -207,8 +330,34 @@ pub struct KvSlabRef<'a> {
     pub rows: usize,
 }
 
-/// Slab pool: `slots` sessions x `layers` x `seq` positions x `dim` channels
-/// for K and V each.
+/// Physical page lifecycle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum PageState {
+    /// on the free stack
+    Free,
+    /// referenced by >= 1 session (`rc` live references)
+    Live,
+    /// `rc == 0` but still sealed in the share index — revivable until
+    /// reclaimed
+    Lru,
+}
+
+/// Linked-list sentinel for the intrusive LRU.
+const NIL: usize = usize::MAX;
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+#[inline]
+fn fnv_i32(mut h: u64, t: i32) -> u64 {
+    for b in t.to_le_bytes() {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Paged pool: `total_pages` physical pages of `layers` x `page_size`
+/// positions x `dim` channels for K and V each, shared by `slots`
+/// concurrent sessions through per-slot page tables.
 pub struct KvPool {
     /// concurrent sessions
     pub slots: usize,
@@ -221,6 +370,12 @@ pub struct KvPool {
     /// resident representation
     pub store: CacheStore,
     rule: QuantRule,
+    // --- geometry ---
+    page_size: usize,
+    pages_per_slot: usize,
+    total_pages: usize,
+    sharing: bool,
+    // --- physical storage, indexed by page ---
     // F32 storage (quantized values kept as floats)
     kf: Vec<f32>,
     vf: Vec<f32>,
@@ -229,13 +384,38 @@ pub struct KvPool {
     vi: Vec<i8>,
     k_scales: Vec<f32>,
     v_scales: Vec<f32>,
-    free: Vec<usize>,
+    // --- page metadata (state flag replaces the old O(n) free-list scan) ---
+    state: Vec<PageState>,
+    rc: Vec<u32>,
+    sealed: Vec<bool>,
+    seal_key: Vec<u64>,
+    seal_tokens: Vec<Vec<i32>>,
+    free_pages: Vec<usize>,
+    lru_prev: Vec<usize>,
+    lru_next: Vec<usize>,
+    lru_head: usize,
+    lru_tail: usize,
+    lru_len: usize,
+    index: HashMap<u64, usize>,
+    // --- per-slot state (tables preallocated: steady state never allocs) ---
+    slot_live: Vec<bool>,
+    free_slots: Vec<usize>,
+    tables: Vec<Vec<usize>>,
+    growth_left: Vec<usize>,
+    pending: usize,
+    seal_from: Vec<usize>,
+    seal_until: Vec<usize>,
+    seal_keys: Vec<Vec<u64>>,
+    prompt_copy: Vec<Vec<i32>>,
     in_use: usize,
+    resident: usize,
+    ledger: PageLedger,
 }
 
 impl KvPool {
-    /// Build a pool; the rule's static steps are floored here once
-    /// ([`QuantRule::floored`]).
+    /// Build a slab-equivalent pool (one `seq`-sized page per slot, prefix
+    /// sharing off — the pre-paging semantics); the rule's static steps
+    /// are floored here once ([`QuantRule::floored`]).
     pub fn new(
         slots: usize,
         layers: usize,
@@ -244,7 +424,50 @@ impl KvPool {
         store: CacheStore,
         rule: QuantRule,
     ) -> Result<KvPool> {
-        let n = slots * layers * seq * dim;
+        KvPool::new_paged(slots, layers, seq, dim, store, rule, seq.max(1), Some(slots), false)
+    }
+
+    /// Build a pool with the layout `layout` selects.
+    pub fn new_with_layout(
+        slots: usize,
+        layers: usize,
+        seq: usize,
+        dim: usize,
+        store: CacheStore,
+        rule: QuantRule,
+        layout: KvLayout,
+    ) -> Result<KvPool> {
+        match layout {
+            KvLayout::Slab => KvPool::new(slots, layers, seq, dim, store, rule),
+            KvLayout::Paged { page_size, total_pages, sharing } => KvPool::new_paged(
+                slots,
+                layers,
+                seq,
+                dim,
+                store,
+                rule,
+                page_size,
+                total_pages,
+                sharing,
+            ),
+        }
+    }
+
+    /// Build a paged pool: `page_size` positions per page, `total_pages`
+    /// physical pages (`None` = `slots * ceil(seq/page_size)`, the
+    /// slab-equivalent capacity), optional prompt-prefix sharing.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_paged(
+        slots: usize,
+        layers: usize,
+        seq: usize,
+        dim: usize,
+        store: CacheStore,
+        rule: QuantRule,
+        page_size: usize,
+        total_pages: Option<usize>,
+        sharing: bool,
+    ) -> Result<KvPool> {
         match &rule {
             QuantRule::None => {
                 ensure!(store == CacheStore::F32, "integer storage needs a quantization rule");
@@ -261,9 +484,17 @@ impl KvPool {
                 ensure!(*rows > 0 && dim % rows == 0, "dim {dim} not divisible into {rows} rows");
             }
         }
+        ensure!(page_size >= 1, "page size must be >= 1");
+        let pages_per_slot = seq.div_ceil(page_size).max(1);
+        let total = total_pages.unwrap_or(slots * pages_per_slot);
+        ensure!(
+            slots == 0 || total >= pages_per_slot,
+            "pool of {total} pages cannot hold even one session ({pages_per_slot} pages)"
+        );
         let int8 = store == CacheStore::Int8;
+        let n = total * layers * page_size * dim;
         let n_scales = match &rule {
-            QuantRule::Dynamic { rows, .. } if int8 => slots * layers * seq * rows,
+            QuantRule::Dynamic { rows, .. } if int8 => total * layers * page_size * rows,
             _ => 0,
         };
         Ok(KvPool {
@@ -273,14 +504,40 @@ impl KvPool {
             dim,
             store,
             rule: rule.floored(),
+            page_size,
+            pages_per_slot,
+            total_pages: total,
+            sharing,
             kf: if int8 { vec![] } else { vec![0.0; n] },
             vf: if int8 { vec![] } else { vec![0.0; n] },
             ki: if int8 { vec![0; n] } else { vec![] },
             vi: if int8 { vec![0; n] } else { vec![] },
             k_scales: vec![0.0; n_scales],
             v_scales: vec![0.0; n_scales],
-            free: (0..slots).rev().collect(),
+            state: vec![PageState::Free; total],
+            rc: vec![0; total],
+            sealed: vec![false; total],
+            seal_key: vec![0; total],
+            seal_tokens: vec![Vec::new(); total],
+            free_pages: (0..total).rev().collect(),
+            lru_prev: vec![NIL; total],
+            lru_next: vec![NIL; total],
+            lru_head: NIL,
+            lru_tail: NIL,
+            lru_len: 0,
+            index: HashMap::new(),
+            slot_live: vec![false; slots],
+            free_slots: (0..slots).rev().collect(),
+            tables: (0..slots).map(|_| Vec::with_capacity(pages_per_slot)).collect(),
+            growth_left: vec![0; slots],
+            pending: 0,
+            seal_from: vec![0; slots],
+            seal_until: vec![0; slots],
+            seal_keys: (0..slots).map(|_| Vec::with_capacity(pages_per_slot)).collect(),
+            prompt_copy: vec![Vec::new(); slots],
             in_use: 0,
+            resident: 0,
+            ledger: PageLedger::default(),
         })
     }
 
@@ -289,50 +546,287 @@ impl KvPool {
         &self.rule
     }
 
+    /// Dynamic per-(position, head) scale rows kept per cache row on the
+    /// Int8 store; 0 for the static rule / the F32 store (whose attention
+    /// steps live in the model, indexed at stride 0).
+    #[inline]
+    pub fn scale_rows(&self) -> usize {
+        match (&self.rule, self.store) {
+            (QuantRule::Dynamic { rows, .. }, CacheStore::Int8) => *rows,
+            _ => 0,
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // session admission
+    // -----------------------------------------------------------------
+
     /// Claim a session slot; `None` when the pool is exhausted. An armed
     /// `kv@N` fault plan ([`crate::faults`]) forces exhaustion on planned
     /// attempts — exercising the same typed-reject path a genuinely full
     /// pool takes, never a distinct failure mode.
     pub fn alloc(&mut self) -> Option<usize> {
-        if crate::faults::should_inject(crate::faults::Site::KvAlloc) {
-            return None;
-        }
-        let s = self.free.pop()?;
-        self.in_use += 1;
-        Some(s)
+        self.alloc_with_prompt(&[]).ok().map(|(slot, _)| slot)
     }
 
-    /// Return a slot to the free list. Contents need no zeroing: positions
-    /// are only ever read up to the owning session's length.
+    /// Claim a session slot for `prompt`, attaching any already-sealed
+    /// pages whose token prefix matches exactly. Returns `(slot,
+    /// shared_positions)`: positions `0..shared_positions` are resident
+    /// already (their K/V is determined by the matched tokens alone), so
+    /// the caller skips prefilling them. Commits the session's worst-case
+    /// page budget — `pages_per_slot` minus the shared prefix, plus one
+    /// fork allowance when the prompt exactly fills its shared pages (the
+    /// last-token fold then lands inside a shared page and must COW) — and
+    /// rejects typed ([`AdmitErr`]) when slots or uncommitted pages run
+    /// out.
+    pub fn alloc_with_prompt(&mut self, prompt: &[i32]) -> Result<(usize, usize), AdmitErr> {
+        if crate::faults::should_inject(crate::faults::Site::KvAlloc) {
+            return Err(AdmitErr::Injected);
+        }
+        if self.free_slots.is_empty() {
+            return Err(AdmitErr::Slots { slots: self.slots });
+        }
+        let ps = self.page_size;
+        // chain keys over whole-page prompt chunks: key i covers tokens
+        // 0..(i+1)*ps, so a hash match is a candidate for the *entire*
+        // prefix through page i (verified by exact token comparison)
+        let full = if self.sharing { prompt.len() / ps } else { 0 };
+        let mut keys: Vec<u64> = Vec::with_capacity(full);
+        let mut h = FNV_OFFSET;
+        for i in 0..full {
+            for &t in &prompt[i * ps..(i + 1) * ps] {
+                h = fnv_i32(h, t);
+            }
+            keys.push(h);
+        }
+        let mut matched: Vec<usize> = Vec::with_capacity(full);
+        for (i, key) in keys.iter().enumerate() {
+            match self.index.get(key) {
+                Some(&pg)
+                    if self.seal_tokens[pg].len() == (i + 1) * ps
+                        && self.seal_tokens[pg] == prompt[..(i + 1) * ps] =>
+                {
+                    matched.push(pg)
+                }
+                _ => break,
+            }
+        }
+        let shared = matched.len();
+        let needed =
+            self.pages_per_slot - shared + usize::from(shared > 0 && shared * ps == prompt.len());
+        let revivals = matched.iter().filter(|&&pg| self.state[pg] == PageState::Lru).count();
+        let uncommitted =
+            (self.free_pages.len() + self.lru_len - revivals).saturating_sub(self.pending);
+        if uncommitted < needed {
+            return Err(AdmitErr::Pages { needed, available: uncommitted });
+        }
+        let slot = self.free_slots.pop().expect("checked non-empty");
+        self.slot_live[slot] = true;
+        self.in_use += 1;
+        for &pg in &matched {
+            match self.state[pg] {
+                PageState::Live => self.rc[pg] += 1,
+                PageState::Lru => {
+                    self.lru_remove(pg);
+                    self.state[pg] = PageState::Live;
+                    self.rc[pg] = 1;
+                    self.resident += 1;
+                    self.ledger.revived += 1;
+                }
+                PageState::Free => unreachable!("indexed page on the free list"),
+            }
+            self.tables[slot].push(pg);
+        }
+        if shared > 0 {
+            self.ledger.shared += shared as u64;
+            obs::add(obs::Counter::KvPagesShared, shared as u64);
+        }
+        self.growth_left[slot] = needed;
+        self.pending += needed;
+        self.seal_from[slot] = shared;
+        self.seal_until[slot] = full;
+        self.seal_keys[slot].clear();
+        self.seal_keys[slot].extend_from_slice(&keys);
+        self.prompt_copy[slot].clear();
+        self.prompt_copy[slot].extend_from_slice(&prompt[..full * ps]);
+        Ok((slot, shared * ps))
+    }
+
+    /// Return a slot and drop its page references. Contents need no
+    /// zeroing: positions are only ever read up to the owning session's
+    /// length, and reused pages are rewritten before they are read.
     ///
     /// Out-of-range slots and double frees are hard errors (release
     /// asserts, not `debug_assert!`): in release either would silently
-    /// corrupt the free list and surface as a confusing panic far from the
-    /// bug — a lane double-freeing under load must fail *here*. The
-    /// double-free scan is O(free slots), noise next to a decode step.
+    /// corrupt the allocator and surface as a confusing panic far from the
+    /// bug — a lane double-freeing under load must fail *here*. The guard
+    /// is an O(1) per-slot state flag (the old linear free-list scan was
+    /// O(slots) per free, and would be O(pages) on the hot eviction path
+    /// here).
     pub fn free(&mut self, slot: usize) {
         assert!(slot < self.slots, "free of out-of-range slot {slot} (pool has {})", self.slots);
-        assert!(!self.free.contains(&slot), "double free of slot {slot}");
-        self.free.push(slot);
+        assert!(self.slot_live[slot], "double free of slot {slot}");
+        self.slot_live[slot] = false;
+        let mut table = std::mem::take(&mut self.tables[slot]);
+        for &pg in &table {
+            self.decref(pg);
+        }
+        table.clear();
+        self.tables[slot] = table; // keep the preallocated capacity
+        self.pending -= self.growth_left[slot];
+        self.growth_left[slot] = 0;
+        self.seal_from[slot] = 0;
+        self.seal_until[slot] = 0;
+        self.free_slots.push(slot);
         self.in_use -= 1;
     }
+
+    /// Drop one reference; on the last one the page parks in the LRU while
+    /// still sealed (revivable until reclaimed) or returns to the free
+    /// stack.
+    fn decref(&mut self, pg: usize) {
+        debug_assert_eq!(self.state[pg], PageState::Live, "decref of a non-live page");
+        self.rc[pg] -= 1;
+        if self.rc[pg] > 0 {
+            return;
+        }
+        self.resident -= 1;
+        self.ledger.released += 1;
+        if self.sealed[pg] {
+            self.state[pg] = PageState::Lru;
+            self.lru_push_tail(pg);
+        } else {
+            self.state[pg] = PageState::Free;
+            self.free_pages.push(pg);
+        }
+    }
+
+    /// Bind a fresh physical page against `slot`'s committed growth
+    /// budget: free stack first, then the oldest LRU page (unsealed +
+    /// reclaimed). The admission commit invariant guarantees one is
+    /// available — running dry here is allocator corruption, not load.
+    fn alloc_page(&mut self, slot: usize) -> usize {
+        let pg = if let Some(pg) = self.free_pages.pop() {
+            pg
+        } else {
+            let pg = self
+                .lru_pop_head()
+                .expect("KV pool commit invariant violated: no page for a committed write");
+            self.index.remove(&self.seal_key[pg]);
+            self.sealed[pg] = false;
+            self.seal_tokens[pg].clear();
+            self.ledger.reclaimed += 1;
+            obs::add(obs::Counter::KvPagesReclaimed, 1);
+            pg
+        };
+        self.state[pg] = PageState::Live;
+        self.rc[pg] = 1;
+        self.resident += 1;
+        self.ledger.allocated += 1;
+        obs::add(obs::Counter::KvPagesAllocated, 1);
+        debug_assert!(self.growth_left[slot] > 0, "slot {slot} exceeded its committed budget");
+        self.growth_left[slot] -= 1;
+        self.pending -= 1;
+        pg
+    }
+
+    // -----------------------------------------------------------------
+    // intrusive LRU (prealloc'd prev/next arrays — O(1), alloc-free)
+    // -----------------------------------------------------------------
+
+    fn lru_push_tail(&mut self, pg: usize) {
+        self.lru_prev[pg] = self.lru_tail;
+        self.lru_next[pg] = NIL;
+        if self.lru_tail != NIL {
+            self.lru_next[self.lru_tail] = pg;
+        } else {
+            self.lru_head = pg;
+        }
+        self.lru_tail = pg;
+        self.lru_len += 1;
+    }
+
+    fn lru_remove(&mut self, pg: usize) {
+        let (p, n) = (self.lru_prev[pg], self.lru_next[pg]);
+        if p != NIL {
+            self.lru_next[p] = n;
+        } else {
+            self.lru_head = n;
+        }
+        if n != NIL {
+            self.lru_prev[n] = p;
+        } else {
+            self.lru_tail = p;
+        }
+        self.lru_len -= 1;
+    }
+
+    fn lru_pop_head(&mut self) -> Option<usize> {
+        if self.lru_head == NIL {
+            return None;
+        }
+        let pg = self.lru_head;
+        self.lru_remove(pg);
+        Some(pg)
+    }
+
+    // -----------------------------------------------------------------
+    // accounting
+    // -----------------------------------------------------------------
 
     /// Sessions currently holding a slot.
     pub fn slots_in_use(&self) -> usize {
         self.in_use
     }
 
-    /// Whether every session slot has been returned — the shutdown
-    /// invariant the serve soak test pins (a lane leak shows up here long
-    /// before it shows up as pool exhaustion under load).
+    /// Whether every session slot has been returned (the slot half of the
+    /// shutdown invariant; see [`KvPool::all_pages_free`]).
     pub fn all_slots_free(&self) -> bool {
-        self.in_use == 0 && self.free.len() == self.slots
+        self.in_use == 0 && self.free_slots.len() == self.slots
     }
 
-    /// Deployment storage footprint in bytes (bit-packed integers + scales,
-    /// matching `PackedTensor::storage_bytes` accounting).
+    /// Whether every session *and every page* has been returned — the
+    /// shutdown invariant the serve soak/chaos suites pin (a leaked page
+    /// shows up here long before it shows up as pool exhaustion under
+    /// load). LRU-parked pages count as free: they hold no session and are
+    /// reclaimable on demand.
+    pub fn all_pages_free(&self) -> bool {
+        self.all_slots_free()
+            && self.resident == 0
+            && self.pending == 0
+            && self.free_pages.len() + self.lru_len == self.total_pages
+    }
+
+    /// Positions per page.
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    /// Worst-case pages one session can hold.
+    pub fn pages_per_slot(&self) -> usize {
+        self.pages_per_slot
+    }
+
+    /// Physical pages in the pool.
+    pub fn total_pages(&self) -> usize {
+        self.total_pages
+    }
+
+    /// Distinct physical pages currently referenced by >= 1 session.
+    pub fn pages_in_use(&self) -> usize {
+        self.resident
+    }
+
+    /// Running page-event totals (see [`PageLedger`]).
+    pub fn ledger(&self) -> PageLedger {
+        self.ledger
+    }
+
+    /// Deployment storage footprint in bytes of the whole pool
+    /// (bit-packed integers + scales, matching `PackedTensor::storage_bytes`
+    /// accounting).
     pub fn storage_bytes(&self) -> usize {
-        let n = 2 * self.slots * self.layers * self.seq * self.dim; // K and V
+        let n = 2 * self.total_pages * self.layers * self.page_size * self.dim; // K and V
         match (&self.rule, self.store) {
             (QuantRule::None, _) => n * 4,
             (_, CacheStore::F32) => n * 4,
@@ -345,31 +839,79 @@ impl KvPool {
         }
     }
 
+    /// Deployment bytes of one page (K + V values + co-resident dynamic
+    /// scales; the static rule's steps are global, not per page).
+    fn page_bytes(&self) -> usize {
+        let n = 2 * self.layers * self.page_size * self.dim;
+        match (&self.rule, self.store) {
+            (QuantRule::None, _) | (_, CacheStore::F32) => n * 4,
+            (QuantRule::Static { bits, .. }, CacheStore::Int8) => (n * *bits as usize + 7) / 8,
+            (QuantRule::Dynamic { bits, rows }, CacheStore::Int8) => {
+                (n * *bits as usize + 7) / 8 + 2 * self.layers * self.page_size * rows * 4
+            }
+        }
+    }
+
+    /// Deployment bytes of the pages sessions currently hold — what
+    /// `kv_bytes` reports over the wire: resident pages, not reserved
+    /// worst-case slabs.
+    pub fn resident_bytes(&self) -> usize {
+        self.resident * self.page_bytes()
+    }
+
     /// Bytes the attention read path touches per decoded token when the
-    /// prefix holds `len` positions: K and V rows across every layer, plus
-    /// the dynamic write steps on the Int8 store. The integer slab reads
-    /// one byte per channel where the f32 path reads four — the bench
-    /// harness reports this next to decode tok/s.
+    /// prefix holds `len` positions: K and V rows across every layer, the
+    /// dynamic write steps on the Int8 store, plus the static rule's
+    /// per-channel step vectors (one K and one V vector per layer — reads
+    /// the earlier accounting omitted, flattering the int8-vs-f32 traffic
+    /// ratio under static cache policies). The integer pages read one byte
+    /// per channel where the f32 path reads four — the bench harness
+    /// reports this next to decode tok/s.
     pub fn read_bytes_per_token(&self, len: usize) -> usize {
-        let rows = match (&self.rule, self.store) {
-            (QuantRule::Dynamic { rows, .. }, CacheStore::Int8) => *rows,
+        let rows = self.scale_rows();
+        let elem = if self.store == CacheStore::Int8 { 1 } else { 4 };
+        let step_bytes = match (&self.rule, self.store) {
+            (QuantRule::Static { .. }, CacheStore::Int8) => self.layers * 2 * self.dim * 4,
             _ => 0,
         };
-        let elem = if self.store == CacheStore::Int8 { 1 } else { 4 };
-        self.layers * (2 * len * self.dim * elem + 2 * len * rows * 4)
+        self.layers * (2 * len * self.dim * elem + 2 * len * rows * 4) + step_bytes
     }
 
+    /// Base index of `(page, layer, local position)` in the value storage.
     #[inline]
-    fn base(&self, slot: usize, layer: usize, pos: usize) -> usize {
-        debug_assert!(slot < self.slots && layer < self.layers && pos < self.seq);
-        ((slot * self.layers + layer) * self.seq + pos) * self.dim
+    fn page_base(&self, pg: usize, layer: usize, q: usize) -> usize {
+        debug_assert!(pg < self.total_pages && layer < self.layers && q < self.page_size);
+        ((pg * self.layers + layer) * self.page_size + q) * self.dim
     }
 
-    /// Quantize-on-write one position's K and V rows (`dim` channels each).
+    // -----------------------------------------------------------------
+    // write / read
+    // -----------------------------------------------------------------
+
+    /// Quantize-on-write one position's K and V rows (`dim` channels
+    /// each). Binds pages lazily (first write into a logical page pops a
+    /// free page — covered by the admission commit, so it cannot fail
+    /// mid-decode) and forks a private copy first when the target page is
+    /// shared `rc > 1` (copy-on-write); a sole owner writing into a
+    /// still-indexed page just unseals it in place.
     pub fn write(&mut self, slot: usize, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
         assert_eq!(k.len(), self.dim);
         assert_eq!(v.len(), self.dim);
-        let base = self.base(slot, layer, pos);
+        debug_assert!(slot < self.slots && layer < self.layers && pos < self.seq);
+        let (lp, q) = (pos / self.page_size, pos % self.page_size);
+        while self.tables[slot].len() <= lp {
+            let pg = self.alloc_page(slot);
+            self.tables[slot].push(pg);
+        }
+        let mut pg = self.tables[slot][lp];
+        if self.rc[pg] > 1 {
+            pg = self.cow_fork(slot, lp, pg);
+        } else if self.sealed[pg] {
+            self.index.remove(&self.seal_key[pg]);
+            self.sealed[pg] = false;
+            self.seal_tokens[pg].clear();
+        }
+        let base = self.page_base(pg, layer, q);
         if self.store == CacheStore::F32 {
             self.kf[base..base + self.dim].copy_from_slice(k);
             self.vf[base..base + self.dim].copy_from_slice(v);
@@ -378,44 +920,102 @@ impl KvPool {
                 &mut self.kf[base..base + self.dim],
                 &mut self.vf[base..base + self.dim],
             );
+        } else {
+            // Int8 store: quantize straight into the page. The static rule
+            // has no per-write scales (`rows == 0` slices an empty range).
+            let rows = self.scale_rows();
+            let sb = ((pg * self.layers + layer) * self.page_size + q) * rows;
+            self.rule.quantize_i8(
+                layer,
+                k,
+                v,
+                &mut self.ki[base..base + self.dim],
+                &mut self.vi[base..base + self.dim],
+                &mut self.k_scales[sb..sb + rows],
+                &mut self.v_scales[sb..sb + rows],
+            );
+        }
+        // a prompt-determined page is complete once its last position's
+        // last layer lands — register it for prefix matching
+        if self.sharing && layer + 1 == self.layers {
+            self.maybe_seal(slot, lp, pos);
+        }
+    }
+
+    /// Copy-on-write fork: bind a fresh page, copy every layer's K/V rows
+    /// (+ co-resident dynamic scales), swap it into the table and drop the
+    /// shared original's reference.
+    fn cow_fork(&mut self, slot: usize, lp: usize, old: usize) -> usize {
+        let np = self.alloc_page(slot);
+        let n = self.layers * self.page_size * self.dim;
+        if self.store == CacheStore::Int8 {
+            self.ki.copy_within(old * n..(old + 1) * n, np * n);
+            self.vi.copy_within(old * n..(old + 1) * n, np * n);
+        } else {
+            self.kf.copy_within(old * n..(old + 1) * n, np * n);
+            self.vf.copy_within(old * n..(old + 1) * n, np * n);
+        }
+        let rows = self.scale_rows();
+        if rows > 0 {
+            let m = self.layers * self.page_size * rows;
+            self.k_scales.copy_within(old * m..(old + 1) * m, np * m);
+            self.v_scales.copy_within(old * m..(old + 1) * m, np * m);
+        }
+        self.tables[slot][lp] = np;
+        self.decref(old);
+        self.ledger.forked += 1;
+        obs::add(obs::Counter::KvCowForks, 1);
+        np
+    }
+
+    /// Seal slot `slot`'s next pending prompt page if this write completed
+    /// it (its last position, last layer). First identical page wins the
+    /// index entry; later twins stay private.
+    fn maybe_seal(&mut self, slot: usize, lp: usize, pos: usize) {
+        let i = self.seal_from[slot];
+        if i >= self.seal_until[slot] || lp != i || pos + 1 != (i + 1) * self.page_size {
             return;
         }
-        // Int8 store: quantize straight into the slab. The static rule has
-        // no per-write scales (`rows == 0` slices an empty range).
-        let rows = match &self.rule {
-            QuantRule::Dynamic { rows, .. } => *rows,
-            _ => 0,
-        };
-        let sb = ((slot * self.layers + layer) * self.seq + pos) * rows;
-        self.rule.quantize_i8(
-            layer,
-            k,
-            v,
-            &mut self.ki[base..base + self.dim],
-            &mut self.vi[base..base + self.dim],
-            &mut self.k_scales[sb..sb + rows],
-            &mut self.v_scales[sb..sb + rows],
-        );
+        self.seal_from[slot] = i + 1;
+        let key = self.seal_keys[slot][i];
+        if self.index.contains_key(&key) {
+            return;
+        }
+        let pg = self.tables[slot][i];
+        debug_assert_eq!(self.rc[pg], 1, "sealing a page that is already shared");
+        self.sealed[pg] = true;
+        self.seal_key[pg] = key;
+        self.seal_tokens[pg].clear();
+        self.seal_tokens[pg].extend_from_slice(&self.prompt_copy[slot][..(i + 1) * self.page_size]);
+        self.index.insert(key, pg);
     }
 
     /// Borrow the raw `i8` K/V rows (and dynamic write steps) of positions
-    /// `0..len` — zero-copy input for `kernels::attend_i8`. `None` on the
-    /// F32 store, which keeps no integers. `len` past the window is a hard
-    /// error (like [`KvPool::free`]): the slab is contiguous across layers,
-    /// so a release over-read would silently attend over the next layer's
-    /// rows.
+    /// `0..len` as one contiguous run — zero-copy input for
+    /// `kernels::attend_i8` when the window fits one page (every window,
+    /// under the slab-equivalent geometry). `None` on the F32 store, which
+    /// keeps no integers. `len` past the window is a hard error (like
+    /// [`KvPool::free`]): pages are contiguous across layers, so a release
+    /// over-read would silently attend over the next layer's rows. Windows
+    /// that span pages must use [`KvPool::runs`].
     pub fn slab(&self, slot: usize, layer: usize, len: usize) -> Option<KvSlabRef<'_>> {
         if self.store != CacheStore::Int8 {
             return None;
         }
         assert!(len <= self.seq, "slab read past the window: {len} > {}", self.seq);
-        let base = self.base(slot, layer, 0);
-        let rows = match &self.rule {
-            QuantRule::Dynamic { rows, .. } => *rows,
-            _ => 0,
-        };
+        let rows = self.scale_rows();
+        if len == 0 {
+            return Some(KvSlabRef { k: &[], v: &[], k_scales: &[], v_scales: &[], rows });
+        }
+        assert!(
+            len <= self.page_size,
+            "slab read spans pages: {len} > page size {} (use runs())",
+            self.page_size
+        );
+        let pg = self.tables[slot][0];
+        let base = self.page_base(pg, layer, 0);
         let (k_scales, v_scales) = if rows > 0 {
-            let sb = (slot * self.layers + layer) * self.seq * rows;
+            let sb = (pg * self.layers + layer) * self.page_size * rows;
             (&self.k_scales[sb..sb + len * rows], &self.v_scales[sb..sb + len * rows])
         } else {
             (&[][..], &[][..])
@@ -429,8 +1029,21 @@ impl KvPool {
         })
     }
 
+    /// Iterate positions `0..len` of `(slot, layer)` as page runs — the
+    /// zero-copy, zero-alloc input for `kernels::attend_i8_runs`. The
+    /// iterator is `Clone` (the kernel walks it twice: scores, then
+    /// softmax·V) and yields runs in position order, so paged attention is
+    /// bit-identical to the contiguous slab. Int8 store only.
+    pub fn runs(&self, slot: usize, layer: usize, len: usize) -> PageRuns<'_> {
+        debug_assert_eq!(self.store, CacheStore::Int8, "runs() reads the integer store");
+        assert!(len <= self.seq, "slab read past the window: {len} > {}", self.seq);
+        debug_assert!(len == 0 || len.div_ceil(self.page_size) <= self.tables[slot].len());
+        PageRuns { pool: self, table: &self.tables[slot], layer, idx: 0, remaining: len }
+    }
+
     /// Dequantize-on-read positions `0..len` into `k_out`/`v_out`
-    /// (`len * dim` f32 each, row-major by position).
+    /// (`len * dim` f32 each, row-major by position), gathering across
+    /// pages.
     pub fn read_into(
         &self,
         slot: usize,
@@ -441,39 +1054,92 @@ impl KvPool {
     ) -> Result<()> {
         ensure!(len <= self.seq, "read past slab end: {len} > {}", self.seq);
         ensure!(k_out.len() == len * self.dim && v_out.len() == len * self.dim, "bad read buffer");
-        let base = self.base(slot, layer, 0);
-        match (&self.rule, self.store) {
-            (_, CacheStore::F32) => {
-                k_out.copy_from_slice(&self.kf[base..base + len * self.dim]);
-                v_out.copy_from_slice(&self.vf[base..base + len * self.dim]);
-            }
-            (QuantRule::Static { k_steps, v_steps, .. }, CacheStore::Int8) => {
-                let sb = layer * self.dim;
-                for p in 0..len {
-                    for c in 0..self.dim {
-                        let i = p * self.dim + c;
-                        k_out[i] = self.ki[base + i] as f32 * k_steps[sb + c];
-                        v_out[i] = self.vi[base + i] as f32 * v_steps[sb + c];
-                    }
+        let ps = self.page_size;
+        let mut done = 0usize;
+        while done < len {
+            let pg = self.tables[slot][done / ps];
+            let n = (len - done).min(ps);
+            let base = self.page_base(pg, layer, 0);
+            let ob = done * self.dim;
+            match (&self.rule, self.store) {
+                (_, CacheStore::F32) => {
+                    k_out[ob..ob + n * self.dim]
+                        .copy_from_slice(&self.kf[base..base + n * self.dim]);
+                    v_out[ob..ob + n * self.dim]
+                        .copy_from_slice(&self.vf[base..base + n * self.dim]);
                 }
-            }
-            (QuantRule::Dynamic { rows, .. }, CacheStore::Int8) => {
-                let sub = self.dim / rows;
-                for p in 0..len {
-                    let scale_base = ((slot * self.layers + layer) * self.seq + p) * rows;
-                    for r in 0..*rows {
-                        let (ks, vs) = (self.k_scales[scale_base + r], self.v_scales[scale_base + r]);
-                        for c in r * sub..(r + 1) * sub {
+                (QuantRule::Static { k_steps, v_steps, .. }, CacheStore::Int8) => {
+                    let sb = layer * self.dim;
+                    for p in 0..n {
+                        for c in 0..self.dim {
                             let i = p * self.dim + c;
-                            k_out[i] = self.ki[base + i] as f32 * ks;
-                            v_out[i] = self.vi[base + i] as f32 * vs;
+                            k_out[ob + i] = self.ki[base + i] as f32 * k_steps[sb + c];
+                            v_out[ob + i] = self.vi[base + i] as f32 * v_steps[sb + c];
                         }
                     }
                 }
+                (QuantRule::Dynamic { rows, .. }, CacheStore::Int8) => {
+                    let sub = self.dim / rows;
+                    for p in 0..n {
+                        let scale_base = ((pg * self.layers + layer) * self.page_size + p) * rows;
+                        for r in 0..*rows {
+                            let (ks, vs) =
+                                (self.k_scales[scale_base + r], self.v_scales[scale_base + r]);
+                            for c in r * sub..(r + 1) * sub {
+                                let i = p * self.dim + c;
+                                k_out[ob + i] = self.ki[base + i] as f32 * ks;
+                                v_out[ob + i] = self.vi[base + i] as f32 * vs;
+                            }
+                        }
+                    }
+                }
+                (QuantRule::None, CacheStore::Int8) => bail!("unreachable: int8 without rule"),
             }
-            (QuantRule::None, CacheStore::Int8) => bail!("unreachable: int8 without rule"),
+            done += n;
         }
         Ok(())
+    }
+}
+
+/// Clone-able iterator over one (slot, layer)'s resident page runs — see
+/// [`KvPool::runs`]. Plain index arithmetic over borrowed storage: no
+/// allocation, so the steady-state zero-alloc decode pins hold on the
+/// paged path.
+#[derive(Clone)]
+pub struct PageRuns<'a> {
+    pool: &'a KvPool,
+    table: &'a [usize],
+    layer: usize,
+    idx: usize,
+    remaining: usize,
+}
+
+impl<'a> Iterator for PageRuns<'a> {
+    type Item = KvRun<'a>;
+
+    fn next(&mut self) -> Option<KvRun<'a>> {
+        if self.remaining == 0 {
+            return None;
+        }
+        let pg = self.table[self.idx];
+        let n = self.remaining.min(self.pool.page_size);
+        let base = self.pool.page_base(pg, self.layer, 0);
+        let rows = self.pool.scale_rows();
+        let (k_scales, v_scales) = if rows > 0 {
+            let sb = (pg * self.pool.layers + self.layer) * self.pool.page_size * rows;
+            (&self.pool.k_scales[sb..sb + n * rows], &self.pool.v_scales[sb..sb + n * rows])
+        } else {
+            (&[][..], &[][..])
+        };
+        self.idx += 1;
+        self.remaining -= n;
+        Some(KvRun {
+            k: &self.pool.ki[base..base + n * self.pool.dim],
+            v: &self.pool.vi[base..base + n * self.pool.dim],
+            k_scales,
+            v_scales,
+            len: n,
+        })
     }
 }
 
@@ -522,6 +1188,10 @@ mod tests {
         let mut rng = Rng::new(0);
         let mut p = KvPool::new(1, 2, 4, 8, CacheStore::F32, QuantRule::None).unwrap();
         let s = p.alloc().unwrap();
+        for pos in 0..2 {
+            let (k0, v0) = (rand_row(&mut rng, 8), rand_row(&mut rng, 8));
+            p.write(s, 1, pos, &k0, &v0);
+        }
         let (k, v) = (rand_row(&mut rng, 8), rand_row(&mut rng, 8));
         p.write(s, 1, 2, &k, &v);
         let mut ko = vec![0.0; 3 * 8];
@@ -597,8 +1267,8 @@ mod tests {
         ] {
             let mut p = KvPool::new(1, layers, seq, dim, CacheStore::Int8, rule).unwrap();
             let s = p.alloc().unwrap();
-            for layer in 0..layers {
-                for pos in 0..3 {
+            for pos in 0..3 {
+                for layer in 0..layers {
                     let (k, v) = (rand_row(&mut rng, dim), rand_row(&mut rng, dim));
                     p.write(s, layer, pos, &k, &v);
                 }
@@ -611,13 +1281,20 @@ mod tests {
                 p.read_into(s, layer, 3, &mut ko, &mut vo).unwrap();
                 for (i, &kq) in slab.k.iter().enumerate() {
                     let scale = match p.rule() {
-                        QuantRule::Dynamic { .. } => slab.k_scales[(i / dim) * slab.rows
-                            + (i % dim) / (dim / slab.rows)],
+                        QuantRule::Dynamic { .. } => {
+                            slab.k_scales[(i / dim) * slab.rows + (i % dim) / (dim / slab.rows)]
+                        }
                         QuantRule::Static { k_steps, .. } => k_steps[layer * dim + i % dim],
                         QuantRule::None => unreachable!(),
                     };
                     assert_eq!(kq as f32 * scale, ko[i], "rule {:?} idx {i}", p.rule());
                 }
+                // the page-run view exposes the same bytes, page by page
+                let total: usize = p.runs(s, layer, 3).map(|r| r.len).sum();
+                assert_eq!(total, 3);
+                let gathered: Vec<i8> =
+                    p.runs(s, layer, 3).flat_map(|r| r.k.to_vec()).collect();
+                assert_eq!(gathered, slab.k);
             }
         }
         // the f32 store keeps no integers
@@ -665,6 +1342,17 @@ mod tests {
         // back, so the end-to-end ratio lands at exactly 2x (realistic
         // shapes with dim >> rows approach 4x)
         assert!(pf.read_bytes_per_token(8) >= 2 * pi.read_bytes_per_token(8));
+        // static rule: the per-channel step vectors the attention path
+        // actually reads (layers * 2 * dim * 4 bytes) now count on the
+        // int8 side — previously omitted, which flattered the ratio
+        let srule =
+            QuantRule::Static { bits: 8, k_steps: vec![0.1; 2 * 16], v_steps: vec![0.1; 2 * 16] };
+        let sf = KvPool::new(4, 2, 8, 16, CacheStore::F32, srule.clone()).unwrap();
+        let si = KvPool::new(4, 2, 8, 16, CacheStore::Int8, srule).unwrap();
+        let steps = 2 * 2 * 16 * 4; // layers * (K+V) * dim * 4 bytes
+        assert_eq!(si.read_bytes_per_token(8), 2 * (2 * 8 * 16) + steps);
+        assert_eq!(sf.read_bytes_per_token(8), 2 * (2 * 8 * 16 * 4));
+        assert!(sf.read_bytes_per_token(8) > 2 * (si.read_bytes_per_token(8) - steps));
     }
 
     #[test]
@@ -676,6 +1364,10 @@ mod tests {
         assert!(e.contains("int8|f32"), "error must list the accepted set: {e}");
         assert_eq!(CacheStore::for_policy(&QuantPolicy::w4a8kv8()), CacheStore::Int8);
         assert_eq!(CacheStore::for_policy(&QuantPolicy::fp16()), CacheStore::F32);
+        assert_eq!(KvLayout::parse("slab").unwrap(), KvLayout::Slab);
+        assert_eq!(KvLayout::parse("paged").unwrap(), KvLayout::paged());
+        let e = KvLayout::parse("heap").unwrap_err().to_string();
+        assert!(e.contains("slab|paged"), "error must list the accepted set: {e}");
     }
 
     #[test]
@@ -687,5 +1379,117 @@ mod tests {
             .is_err());
         let bad = QuantRule::Static { bits: 8, k_steps: vec![0.1; 4], v_steps: vec![0.1; 8] };
         assert!(KvPool::new(1, 1, 2, 8, CacheStore::Int8, bad).is_err());
+        // a paged pool must hold at least one whole session
+        assert!(
+            KvPool::new_paged(2, 1, 8, 8, CacheStore::F32, QuantRule::None, 2, Some(3), true)
+                .is_err()
+        );
+    }
+
+    /// Write positions `from..upto` of every layer (a sharing admit's
+    /// prefill skips the shared positions, like the host forward does).
+    fn fill(p: &mut KvPool, rng: &mut Rng, slot: usize, from: usize, upto: usize) {
+        for pos in from..upto {
+            for layer in 0..p.layers {
+                let (k, v) = (rand_row(rng, p.dim), rand_row(rng, p.dim));
+                p.write(slot, layer, pos, &k, &v);
+            }
+        }
+    }
+
+    #[test]
+    fn prefix_sharing_holds_p_plus_suffix_pages() {
+        // N lanes sharing a P-page prefix hold exactly P + sum-of-suffix
+        // pages, not N * (P + suffix)
+        let mut rng = Rng::new(11);
+        let rule = QuantRule::Dynamic { bits: 8, rows: 2 };
+        let mut p = KvPool::new_paged(4, 2, 8, 4, CacheStore::Int8, rule, 2, None, true).unwrap();
+        let prompt = [5i32, 6, 7, 8, 9]; // 2 full pages (P=2) + 1 spill token
+        let (s0, shared0) = p.alloc_with_prompt(&prompt).unwrap();
+        assert_eq!(shared0, 0, "nothing sealed yet");
+        fill(&mut p, &mut rng, s0, 0, prompt.len());
+        assert_eq!(p.pages_in_use(), 3); // P=2 + 1 suffix page
+        for n in 2..4usize {
+            let (s, shared) = p.alloc_with_prompt(&prompt).unwrap();
+            assert_eq!(shared, 4, "both full-prompt pages must match");
+            fill(&mut p, &mut rng, s, shared, prompt.len());
+            assert_eq!(p.pages_in_use(), 2 + n, "P + suffix-per-lane");
+        }
+        assert_eq!(p.ledger().shared, 4); // 2 pages x 2 attaching lanes
+        assert_eq!(p.ledger().forked, 0, "no writer landed inside the shared pages");
+        // a different prompt shares nothing
+        let (_s3, shared3) = p.alloc_with_prompt(&[9, 9, 9, 9, 9]).unwrap();
+        assert_eq!(shared3, 0);
+    }
+
+    #[test]
+    fn exact_fill_write_cow_forks_the_shared_page() {
+        let mut rng = Rng::new(13);
+        let rule = QuantRule::Dynamic { bits: 8, rows: 2 };
+        let mut p = KvPool::new_paged(3, 1, 8, 4, CacheStore::Int8, rule, 2, None, true).unwrap();
+        let prompt = [3i32, 1, 4, 1]; // exactly 2 pages
+        let (s0, _) = p.alloc_with_prompt(&prompt).unwrap();
+        fill(&mut p, &mut rng, s0, 0, prompt.len());
+        let (s1, shared) = p.alloc_with_prompt(&prompt).unwrap();
+        assert_eq!(shared, 4, "exact-fill prompt matches whole");
+        assert_eq!(p.pages_in_use(), 2);
+        // re-folding the last prompt token writes position 3 — inside the
+        // shared page — and must fork, leaving s0's copy untouched
+        let mut before = (vec![0.0; 4 * 4], vec![0.0; 4 * 4]);
+        p.read_into(s0, 0, 4, &mut before.0, &mut before.1).unwrap();
+        let (k, v) = (rand_row(&mut rng, 4), rand_row(&mut rng, 4));
+        p.write(s1, 0, 3, &k, &v);
+        assert_eq!(p.ledger().forked, 1);
+        assert_eq!(p.pages_in_use(), 3);
+        let mut after = (vec![0.0; 4 * 4], vec![0.0; 4 * 4]);
+        p.read_into(s0, 0, 4, &mut after.0, &mut after.1).unwrap();
+        assert_eq!(before, after, "COW must not disturb the original lane");
+        // and s1's fork kept the shared positions 0..3
+        let mut forked = (vec![0.0; 4 * 4], vec![0.0; 4 * 4]);
+        p.read_into(s1, 0, 4, &mut forked.0, &mut forked.1).unwrap();
+        assert_eq!(&forked.0[..3 * 4], &after.0[..3 * 4]);
+        p.free(s0);
+        p.free(s1);
+        assert!(p.all_pages_free());
+    }
+
+    #[test]
+    fn lru_parks_sealed_pages_then_revives_or_reclaims() {
+        let mut rng = Rng::new(17);
+        let rule = QuantRule::Dynamic { bits: 8, rows: 2 };
+        // 4 pages total, 2 per session
+        let mut p =
+            KvPool::new_paged(4, 1, 4, 4, CacheStore::Int8, rule, 2, Some(4), true).unwrap();
+        let prompt = [7i32, 7, 7, 7];
+        let (s0, _) = p.alloc_with_prompt(&prompt).unwrap();
+        fill(&mut p, &mut rng, s0, 0, 4);
+        p.free(s0); // both pages sealed -> LRU, revivable
+        assert!(p.all_pages_free(), "LRU pages count as free capacity");
+        assert_eq!(p.pages_in_use(), 0);
+        // a matching admit revives them from the LRU — zero fresh pages
+        let allocated = p.ledger().allocated;
+        let (s1, shared) = p.alloc_with_prompt(&prompt).unwrap();
+        assert_eq!(shared, 4);
+        assert_eq!(p.ledger().revived, 2);
+        assert_eq!(p.ledger().allocated, allocated, "revival binds no fresh page");
+        p.free(s1);
+        // a non-matching admit reclaims the oldest LRU pages once the free
+        // list is dry
+        let (s2, shared2) = p.alloc_with_prompt(&[1, 2, 3, 4]).unwrap();
+        assert_eq!(shared2, 0);
+        fill(&mut p, &mut rng, s2, 0, 4);
+        let (s3, _) = p.alloc_with_prompt(&[5, 6, 7, 8]).unwrap();
+        fill(&mut p, &mut rng, s3, 0, 4);
+        assert_eq!(p.ledger().reclaimed, 2, "the two parked pages were stolen");
+        // the pool is now fully committed: a fifth session rejects typed
+        let err = p.alloc_with_prompt(&[8, 8, 8, 8]).unwrap_err();
+        assert!(matches!(err, AdmitErr::Pages { needed: 2, .. }), "{err}");
+        assert!(err.to_string().contains("out of pages"), "{err}");
+        p.free(s2);
+        p.free(s3);
+        assert!(p.all_pages_free());
+        // ledger balance: every bound page was released (resident == 0)
+        let l = p.ledger();
+        assert_eq!(l.allocated + l.revived, l.released);
     }
 }

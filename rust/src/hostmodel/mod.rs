@@ -42,15 +42,17 @@
 
 pub mod kvpool;
 
-pub use kvpool::{CacheStore, KvPool, KvSlabRef, QuantRule};
+pub use kvpool::{
+    AdmitErr, CacheStore, KvLayout, KvPool, KvSlabRef, PageLedger, QuantRule, DEFAULT_PAGE_SIZE,
+};
 
 use anyhow::{ensure, Context, Result};
 
 use crate::config::{ArtifactSpec, ModelCfg, PrecCfg, TensorSpec};
 use crate::kernels::pool as wpool;
 use crate::kernels::{
-    attend_f32, attend_i8, matvec_into, quant_rows_i32, quant_rows_i8, rmsnorm_into, silu, ActRow,
-    BatchScratch, DecodeScratch, Linear, QLinear, GEMM_BLOCK,
+    attend_f32, attend_i8, attend_i8_runs, matvec_into, quant_rows_i32, quant_rows_i8,
+    rmsnorm_into, silu, ActRow, BatchScratch, DecodeScratch, KvRun, Linear, QLinear, GEMM_BLOCK,
 };
 use crate::model::ParamStore;
 use crate::obs;
@@ -545,13 +547,26 @@ impl HostModel {
     /// A KV pool sized for this model with `slots` concurrent sessions,
     /// quantizing under this model's cache rule.
     pub fn make_pool(&self, slots: usize, store: CacheStore) -> Result<KvPool> {
-        KvPool::new(
+        self.make_pool_with(slots, store, KvLayout::Slab)
+    }
+
+    /// [`HostModel::make_pool`] with an explicit [`KvLayout`] — the paged
+    /// geometry (`--kv paged`) shares prompt-prefix pages across sessions
+    /// and admits in pages, token-identical to the slab by construction.
+    pub fn make_pool_with(
+        &self,
+        slots: usize,
+        store: CacheStore,
+        layout: KvLayout,
+    ) -> Result<KvPool> {
+        KvPool::new_with_layout(
             slots,
             self.cfg.n_layers,
             self.cfg.seq_len,
             self.cfg.d_model,
             store,
             self.rule.clone(),
+            layout,
         )
         .context("building KV pool")
     }
@@ -694,29 +709,45 @@ impl HostModel {
             }
             pool.write(slot, li, pos, &s.k[..d], &s.v[..d]);
 
-            // causal attention over the cached prefix
+            // causal attention over the cached prefix — walking the pool's
+            // resident page runs in position order (one run on the slab
+            // geometry; bit-identical at any split, see
+            // `attend_i8_runs_is_bit_identical_at_any_split`)
             let len = pos + 1;
             if int_attn {
-                let slab = pool.slab(slot, li, len).expect("Int8 store keeps a slab");
-                let (ksc, vsc, stride): (&[f32], &[f32], usize) = if slab.rows > 0 {
-                    (slab.k_scales, slab.v_scales, slab.rows)
+                let stride = pool.scale_rows();
+                if stride > 0 {
+                    attend_i8_runs(
+                        &s.qq[..d],
+                        &s.qs[..h],
+                        pool.runs(slot, li, len),
+                        stride,
+                        h,
+                        d,
+                        len,
+                        &mut s.scores[..len],
+                        &mut s.ctx[..d],
+                    );
                 } else {
-                    (&self.k_attn[li * h..(li + 1) * h], &self.v_attn[li * h..(li + 1) * h], 0)
-                };
-                attend_i8(
-                    &s.qq[..d],
-                    &s.qs[..h],
-                    slab.k,
-                    slab.v,
-                    ksc,
-                    vsc,
-                    stride,
-                    h,
-                    d,
-                    len,
-                    &mut s.scores[..len],
-                    &mut s.ctx[..d],
-                );
+                    // static rule: per-layer steps live in the model, not
+                    // the pages — substitute them into every run at stride 0
+                    let (ksc, vsc) =
+                        (&self.k_attn[li * h..(li + 1) * h], &self.v_attn[li * h..(li + 1) * h]);
+                    let runs = pool
+                        .runs(slot, li, len)
+                        .map(|r| KvRun { k_scales: ksc, v_scales: vsc, ..r });
+                    attend_i8_runs(
+                        &s.qq[..d],
+                        &s.qs[..h],
+                        runs,
+                        0,
+                        h,
+                        d,
+                        len,
+                        &mut s.scores[..len],
+                        &mut s.ctx[..d],
+                    );
+                }
             } else {
                 pool.read_into(slot, li, len, &mut s.kc[..len * d], &mut s.vc[..len * d])?;
                 attend_f32(
@@ -941,17 +972,6 @@ impl HostModel {
                     let (l0, l1) = wpool::shard_range(b, shards, sh);
                     for (l, ln) in lanes.iter().enumerate().take(l1).skip(l0) {
                         let len = ln.pos + 1;
-                        let slab =
-                            kv.slab(ln.slot, li, len).expect("Int8 store keeps a slab");
-                        let (ksc, vsc, stride): (&[f32], &[f32], usize) = if slab.rows > 0 {
-                            (slab.k_scales, slab.v_scales, slab.rows)
-                        } else {
-                            (
-                                &self.k_attn[li * h..(li + 1) * h],
-                                &self.v_attn[li * h..(li + 1) * h],
-                                0,
-                            )
-                        };
                         // SAFETY: lane l's score row `[l·seq, l·seq+len)`
                         // and context row `[l·d, (l+1)·d)` — shards own
                         // disjoint lane ranges and the pool joins every
@@ -962,20 +982,39 @@ impl HostModel {
                         let ctx = unsafe {
                             std::slice::from_raw_parts_mut(ctxp.0.add(l * d), d)
                         };
-                        attend_i8(
-                            &qq[l * d..(l + 1) * d],
-                            &qs[l * h..(l + 1) * h],
-                            slab.k,
-                            slab.v,
-                            ksc,
-                            vsc,
-                            stride,
-                            h,
-                            d,
-                            len,
-                            scores,
-                            ctx,
-                        );
+                        let stride = kv.scale_rows();
+                        if stride > 0 {
+                            attend_i8_runs(
+                                &qq[l * d..(l + 1) * d],
+                                &qs[l * h..(l + 1) * h],
+                                kv.runs(ln.slot, li, len),
+                                stride,
+                                h,
+                                d,
+                                len,
+                                scores,
+                                ctx,
+                            );
+                        } else {
+                            let (ksc, vsc) = (
+                                &self.k_attn[li * h..(li + 1) * h],
+                                &self.v_attn[li * h..(li + 1) * h],
+                            );
+                            let runs = kv
+                                .runs(ln.slot, li, len)
+                                .map(|r| KvRun { k_scales: ksc, v_scales: vsc, ..r });
+                            attend_i8_runs(
+                                &qq[l * d..(l + 1) * d],
+                                &qs[l * h..(l + 1) * h],
+                                runs,
+                                0,
+                                h,
+                                d,
+                                len,
+                                scores,
+                                ctx,
+                            );
+                        }
                     }
                 });
             } else {
@@ -1461,6 +1500,81 @@ mod tests {
                     "quantized={quantized} act_dynamic={act_dynamic} pos={pos}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn paged_pool_decode_is_bit_identical_to_slab() {
+        // the paged-KV tentpole identity at unit scale: the same decode
+        // through a paged pool (windows spanning several pages, prefix
+        // pages attached shared) produces *bit-identical* logits to the
+        // slab pool, on every policy family. Swept through the real
+        // scheduler by proptests.rs.
+        for (quantized, act_dynamic) in [(true, true), (true, false), (false, true)] {
+            let cfg = tiny_host_cfg(quantized, act_dynamic);
+            let params = host_test_params(&cfg, 61);
+            let model = HostModel::new(cfg.clone(), &params).unwrap();
+            let store = CacheStore::for_policy(&cfg.policy);
+            let mut slab = model.make_pool(2, store).unwrap();
+            let layout = KvLayout::Paged { page_size: 4, total_pages: None, sharing: true };
+            let mut paged = model.make_pool_with(2, store, layout).unwrap();
+            let prompt = [1i32, 7, 130, 22, 4, 9, 2, 66]; // 2 full pages
+            let ss = slab.alloc().unwrap();
+            let (sp, shared) = paged.alloc_with_prompt(&prompt).unwrap();
+            assert_eq!(shared, 0, "nothing sealed yet");
+            let mut scratch = DecodeScratch::for_cfg(&cfg);
+            let mut toks = prompt.to_vec();
+            for (p, &t) in prompt[..prompt.len() - 1].iter().enumerate() {
+                model.forward_token_into(&mut slab, ss, t, p, false, &mut scratch).unwrap();
+                model.forward_token_into(&mut paged, sp, t, p, false, &mut scratch).unwrap();
+            }
+            for step in 0..6 {
+                let (pos, &tok) = (toks.len() - 1, toks.last().unwrap());
+                let a = model
+                    .forward_token_into(&mut slab, ss, tok, pos, true, &mut scratch)
+                    .unwrap()
+                    .unwrap()
+                    .to_vec();
+                let b = model
+                    .forward_token_into(&mut paged, sp, tok, pos, true, &mut scratch)
+                    .unwrap()
+                    .unwrap();
+                assert_eq!(
+                    a, b,
+                    "quantized={quantized} act_dynamic={act_dynamic} step={step}: \
+                     paged logits diverged from slab"
+                );
+                toks.push(argmax(b) as i32);
+            }
+            // a second paged session with the same prompt attaches the two
+            // sealed prefix pages and still decodes bit-identically: the
+            // shared positions are skipped at prefill, and its first write
+            // (the prompt-tail fold below) COW-forks out of the shared page
+            let (sp2, shared2) = paged.alloc_with_prompt(&prompt).unwrap();
+            assert_eq!(shared2, 8, "both full prompt pages must attach");
+            assert!(paged.ledger().shared >= 2);
+            let (pos, tok) = (prompt.len() - 1, prompt[prompt.len() - 1]);
+            let b2 = model
+                .forward_token_into(&mut paged, sp2, tok, pos, true, &mut scratch)
+                .unwrap()
+                .unwrap();
+            // same prompt → same first decode logits as the slab run's
+            let sref = slab.alloc().unwrap();
+            for (p, &t) in prompt[..pos].iter().enumerate() {
+                model.forward_token_into(&mut slab, sref, t, p, false, &mut scratch).unwrap();
+            }
+            let b2 = b2.to_vec();
+            let aref = model
+                .forward_token_into(&mut slab, sref, tok, pos, true, &mut scratch)
+                .unwrap()
+                .unwrap();
+            assert_eq!(
+                aref, &b2[..],
+                "quantized={quantized} act_dynamic={act_dynamic}: shared-prefix lane diverged"
+            );
+            paged.free(sp);
+            paged.free(sp2);
+            assert!(paged.all_pages_free());
         }
     }
 

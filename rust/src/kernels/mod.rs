@@ -506,9 +506,67 @@ pub fn attend_i8(
     scores: &mut [f32],
     ctx: &mut [f32],
 ) {
+    debug_assert!(k.len() >= len * dim && v.len() >= len * dim);
+    let run = KvRun { k, v, k_scales, v_scales, len };
+    attend_i8_runs(
+        qq,
+        q_scales,
+        std::iter::once(run),
+        scale_stride,
+        heads,
+        dim,
+        len,
+        scores,
+        ctx,
+    );
+}
+
+/// One contiguous stretch of quantized K/V rows — a whole slab, or one
+/// page of the paged [`crate::hostmodel::KvPool`]. `k`/`v` hold `len`
+/// positions (`[len·dim]` row-major); `k_scales`/`v_scales` hold that
+/// run's per-(position, head) dynamic write steps (`[len·rows]`), or the
+/// per-head static steps shared by every run when `scale_stride` is 0.
+#[derive(Clone, Copy)]
+pub struct KvRun<'a> {
+    /// `i8` K rows of this run, `[len * dim]`
+    pub k: &'a [i8],
+    /// `i8` V rows of this run, `[len * dim]`
+    pub v: &'a [i8],
+    /// K write steps for this run (layout per `scale_stride`)
+    pub k_scales: &'a [f32],
+    /// V write steps for this run (layout per `scale_stride`)
+    pub v_scales: &'a [f32],
+    /// positions in this run
+    pub len: usize,
+}
+
+/// [`attend_i8`] over a sequence of contiguous K/V runs — the paged-pool
+/// entry point. The runs are walked **in position order** twice (the
+/// iterator must be `Clone`): one pass scores every position, the softmax
+/// normalizes over the full score window, and a second pass accumulates
+/// the context. Per position the math is exactly [`attend_i8`]'s — the
+/// position loop is merely split at page boundaries, and neither the
+/// score of a position nor the f32 softmax·V accumulation order depends
+/// on where those splits fall, so paged ≡ contiguous bit-for-bit (the
+/// kernels unit test pins it against random splits). `len` must equal the
+/// run lengths' sum; the byte/call counters are charged here once, in
+/// closed form, exactly as the contiguous path always has.
+#[allow(clippy::too_many_arguments)]
+pub fn attend_i8_runs<'a, I>(
+    qq: &[i32],
+    q_scales: &[f32],
+    runs: I,
+    scale_stride: usize,
+    heads: usize,
+    dim: usize,
+    len: usize,
+    scores: &mut [f32],
+    ctx: &mut [f32],
+) where
+    I: Iterator<Item = KvRun<'a>> + Clone,
+{
     debug_assert_eq!(qq.len(), dim);
     debug_assert_eq!(ctx.len(), dim);
-    debug_assert!(k.len() >= len * dim && v.len() >= len * dim);
     obs::add(obs::Counter::AttendI8Calls, 1);
     obs::add(obs::Counter::KvBytesRead, 2 * (len * dim) as u64);
     let kern = simd::active();
@@ -520,21 +578,32 @@ pub fn attend_i8(
         let off = h * dh;
         let qh = &qq[off..off + dh];
         let sq = q_scales[h];
-        for (j, sc) in scores.iter_mut().enumerate() {
-            let kh = &k[j * dim + off..j * dim + off + dh];
-            // exact i32 q·k (quantized queries fit i16 — the policy caps
-            // query bits at 16 — so the SIMD narrowing is lossless)
-            let acc = kern.dot_q_i8(qh, kh);
-            *sc = acc as f32 * (sq * k_scales[j * scale_stride + h]) * inv;
+        let mut j0 = 0usize;
+        for run in runs.clone() {
+            debug_assert!(run.k.len() >= run.len * dim && run.v.len() >= run.len * dim);
+            for (j, sc) in scores[j0..j0 + run.len].iter_mut().enumerate() {
+                let kh = &run.k[j * dim + off..j * dim + off + dh];
+                // exact i32 q·k (quantized queries fit i16 — the policy
+                // caps query bits at 16 — so the SIMD narrowing is
+                // lossless)
+                let acc = kern.dot_q_i8(qh, kh);
+                *sc = acc as f32 * (sq * run.k_scales[j * scale_stride + h]) * inv;
+            }
+            j0 += run.len;
         }
+        debug_assert_eq!(j0, len, "run lengths must sum to len");
         softmax_inplace(scores);
         let ch = &mut ctx[off..off + dh];
-        for (j, &p) in scores.iter().enumerate() {
-            let w = p * v_scales[j * scale_stride + h];
-            let vh = &v[j * dim + off..j * dim + off + dh];
-            for (cv, &vv) in ch.iter_mut().zip(vh) {
-                *cv += w * vv as f32;
+        let mut j0 = 0usize;
+        for run in runs.clone() {
+            for (j, &p) in scores[j0..j0 + run.len].iter().enumerate() {
+                let w = p * run.v_scales[j * scale_stride + h];
+                let vh = &run.v[j * dim + off..j * dim + off + dh];
+                for (cv, &vv) in ch.iter_mut().zip(vh) {
+                    *cv += w * vv as f32;
+                }
             }
+            j0 += run.len;
         }
     }
 }
@@ -754,6 +823,49 @@ mod tests {
         attend_f32(&qf, &kf, &vf, heads, dim, len, &mut scores2, &mut want);
         for (a, b) in ctx.iter().zip(&want) {
             assert!((a - b).abs() <= 1e-4 * a.abs().max(b.abs()).max(1.0), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn attend_i8_runs_is_bit_identical_at_any_split() {
+        // the paged pool splits the position loop at page boundaries; every
+        // split of the same rows must reproduce the contiguous call exactly
+        let mut rng = Rng::new(9);
+        let (heads, dim, len) = (2usize, 8usize, 7usize);
+        let q = rng.normal_vec(dim, 1.0);
+        let mut qq = vec![0i32; dim];
+        let mut qs = vec![0f32; heads];
+        quant_rows_i32(&q, dim / heads, 16, None, &mut qq, &mut qs);
+        let mut k = vec![0i8; len * dim];
+        let mut v = vec![0i8; len * dim];
+        let mut ksc = vec![0f32; len * heads];
+        let mut vsc = vec![0f32; len * heads];
+        for j in 0..len {
+            let kr = rng.normal_vec(dim, 0.5);
+            let vr = rng.normal_vec(dim, 0.5);
+            let (a, b) = (j * heads, (j + 1) * heads);
+            quant_rows_i8(&kr, dim / heads, 8, None, &mut k[j * dim..(j + 1) * dim], &mut ksc[a..b]);
+            quant_rows_i8(&vr, dim / heads, 8, None, &mut v[j * dim..(j + 1) * dim], &mut vsc[a..b]);
+        }
+        let mut scores = vec![0f32; len];
+        let mut want = vec![0f32; dim];
+        attend_i8(&qq, &qs, &k, &v, &ksc, &vsc, heads, heads, dim, len, &mut scores, &mut want);
+        for page in [1usize, 2, 3, 4, len] {
+            let runs = (0..len.div_ceil(page)).map(|p| {
+                let (j0, j1) = (p * page, ((p + 1) * page).min(len));
+                KvRun {
+                    k: &k[j0 * dim..j1 * dim],
+                    v: &v[j0 * dim..j1 * dim],
+                    k_scales: &ksc[j0 * heads..j1 * heads],
+                    v_scales: &vsc[j0 * heads..j1 * heads],
+                    len: j1 - j0,
+                }
+            });
+            let mut s2 = vec![0f32; len];
+            let mut ctx = vec![0f32; dim];
+            attend_i8_runs(&qq, &qs, runs, heads, heads, dim, len, &mut s2, &mut ctx);
+            assert_eq!(ctx, want, "page size {page} changed bits");
+            assert_eq!(s2, scores, "page size {page} changed the last head's scores");
         }
     }
 

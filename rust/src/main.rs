@@ -25,7 +25,7 @@ use silq::coordinator::{run_experiment, BackendKind, Pipeline, PipelineCfg};
 use silq::data::{vocab, DataMix, SftStyle, Vocab, World};
 use silq::evalharness::Evaluator;
 use silq::forward::HostForward;
-use silq::hostmodel::{self, CacheStore, HostCfg};
+use silq::hostmodel::{self, CacheStore, HostCfg, KvLayout};
 use silq::kernels::pool;
 use silq::kernels::simd;
 use silq::metrics::{percentile, RunLog, Table};
@@ -209,6 +209,12 @@ fn main() -> Result<()> {
                  \x20      graphs, so it takes manifest precision names only)\n\
                  serve: --requests N --batch B --max_new M --queue_cap C --producers P\n\
                  \x20      --cache int8|f32 (host backend)\n\
+                 \x20      --kv slab|paged (host backend; paged = fixed-size pages,\n\
+                 \x20      lazy binding, copy-on-write prompt-prefix sharing, LRU\n\
+                 \x20      reclaim — token-identical to slab) --page-size N\n\
+                 \x20      (positions per page, default 16)\n\
+                 \x20      --tokens-out FILE (load run: id-sorted generated-token\n\
+                 \x20      lines, for the paged-vs-slab identity diff)\n\
                  \x20      --listen ADDR (HTTP front-end instead of the load run; host\n\
                  \x20      backend only; port 0 binds an ephemeral port; drain with\n\
                  \x20      POST /shutdown or ^C) --max_conns N (handler cap)\n\
@@ -684,6 +690,24 @@ fn serve_cmd(args: &Args, art_dir: &str) -> Result<()> {
         obs::export::write_chrome_trace(p).with_context(|| format!("writing --trace {p}"))?;
         println!("(chrome trace -> {p}; load in ui.perfetto.dev or chrome://tracing)");
     }
+    if let Some(p) = args.get("tokens-out") {
+        // one line per request, id-sorted: the paged-vs-slab identity
+        // smoke in check.sh diffs two of these files byte for byte
+        let mut rows: Vec<(u64, String)> = results
+            .iter()
+            .map(|r| {
+                let toks: Vec<String> = r.generated().iter().map(|t| t.to_string()).collect();
+                (r.id, toks.join(" "))
+            })
+            .collect();
+        rows.sort_by_key(|(id, _)| *id);
+        let mut out = String::new();
+        for (id, toks) in rows {
+            out.push_str(&format!("{id}: {toks}\n"));
+        }
+        std::fs::write(p, out).with_context(|| format!("writing --tokens-out {p}"))?;
+        println!("(token streams -> {p})");
+    }
     Ok(())
 }
 
@@ -729,7 +753,24 @@ fn build_host_backend(
             }
         }
     };
-    HostBackend::new(hc, lanes, &params, store)
+    // --kv selects the pool geometry: the contiguous slab (default) or the
+    // paged allocator with copy-on-write prefix sharing; --page-size tunes
+    // positions per page (paged only)
+    let layout = match args.get("kv") {
+        None => KvLayout::Slab,
+        Some(k) => match KvLayout::parse(k)? {
+            KvLayout::Paged { page_size, total_pages, sharing } => KvLayout::Paged {
+                page_size: args.get_num("page-size", &page_size.to_string())?,
+                total_pages,
+                sharing,
+            },
+            slab => slab,
+        },
+    };
+    if layout != KvLayout::Slab {
+        println!("kv cache: paged layout ({layout:?})");
+    }
+    HostBackend::new_with_layout(hc, lanes, &params, store, layout)
 }
 
 /// `silq serve --listen ADDR`: the HTTP front-end. Host backend only (the
@@ -819,6 +860,7 @@ fn serve_http_cmd(args: &Args, art_dir: &str) -> Result<()> {
         println!("(chrome trace -> {p}; load in ui.perfetto.dev or chrome://tracing)");
     }
     ensure!(backend.all_slots_free(), "drain left a KV slot allocated");
+    ensure!(backend.all_pages_free(), "drain left a KV page resident");
     ensure!(backend.kv_bytes() == 0, "drain left KV bytes resident");
     println!("drained clean ({} results)", results.len());
     Ok(())

@@ -381,6 +381,7 @@ fn completions(w: &mut TcpStream, req: &http::Request, ctx: &Ctx) {
             ctx.tallies.bump(&ctx.tallies.rejected_429, Counter::Net429);
             let body = format!(
                 "{{\"error\":\"admission queue is full, retry later\",\
+                 \"reason\":\"queue_full\",\
                  \"retry_after_ms\":{retry_after_ms}}}"
             );
             let _ = http::write_response_with(
@@ -413,6 +414,36 @@ fn completions(w: &mut TcpStream, req: &http::Request, ctx: &Ctx) {
     }
 }
 
+/// Whether a scheduler-side admission reject was a transient KV
+/// pages-exhausted condition (paged pool at capacity) rather than a
+/// permanently-bad request — the former deserves a retryable `429`, the
+/// latter the historical 200 + terminal error frame.
+fn pages_exhausted(r: &GenResult) -> bool {
+    r.reason == FinishReason::Rejected
+        && r.error.as_deref().is_some_and(|e| e.contains("out of pages"))
+}
+
+/// Answer a pages-exhausted admission reject: `429` + `Retry-After`, with
+/// a `reason` distinguishing it from the submit-time queue-full `429`
+/// (`"pages_exhausted"` vs `"queue_full"`) — capacity pressure in the KV
+/// pool, not the admission queue.
+fn pages_exhausted_response(w: &mut TcpStream, r: &GenResult, ctx: &Ctx) {
+    ctx.tallies.bump(&ctx.tallies.rejected_429, Counter::Net429);
+    let retry_after_ms = health::retry_after_ms(ctx.queue.depth());
+    let body = format!(
+        "{{\"error\":\"kv pool out of pages, retry later\",\
+         \"reason\":\"pages_exhausted\",\"id\":{},\"retry_after_ms\":{retry_after_ms}}}",
+        r.id,
+    );
+    let _ = http::write_response_with(
+        w,
+        429,
+        JSON_TYPE,
+        &[retry_after_header(retry_after_ms)],
+        body.as_bytes(),
+    );
+}
+
 /// Answer a queue-side TTFT-deadline shed: plain `503` with `Retry-After`
 /// (sheds happen before any token, so the response is always atomic —
 /// never a torn stream).
@@ -441,6 +472,7 @@ fn shed_response(w: &mut TcpStream, r: &GenResult, ctx: &Ctx) {
 fn buffered_response(w: &mut TcpStream, rx: &Receiver<StreamEvent>, ctx: &Ctx) {
     match drain_to_done(rx) {
         Some(r) if r.reason == FinishReason::DeadlineShed => shed_response(w, &r, ctx),
+        Some(r) if pages_exhausted(&r) => pages_exhausted_response(w, &r, ctx),
         Some(r) => {
             let _ = http::write_response(w, 200, JSON_TYPE, result_json(&r, false).as_bytes());
         }
@@ -474,6 +506,10 @@ fn stream_response(
     if let Ok(StreamEvent::Done(r)) = &event {
         if r.reason == FinishReason::DeadlineShed {
             shed_response(w, r, ctx);
+            return;
+        }
+        if pages_exhausted(r) {
+            pages_exhausted_response(w, r, ctx);
             return;
         }
     }

@@ -116,10 +116,18 @@ pub enum Counter {
     NetGuardRejects,
     /// wire requests answered 503 because they were deadline-shed
     Net503Shed,
+    /// KV pages bound to a session (free-list pops, including COW copies)
+    KvPagesAllocated,
+    /// shared-prefix page attaches (refcount bumps + LRU revivals at admit)
+    KvPagesShared,
+    /// copy-on-write forks (a writer landed inside a page shared rc > 1)
+    KvCowForks,
+    /// sealed LRU pages stolen for reuse when the free list ran dry
+    KvPagesReclaimed,
 }
 
 /// Number of registered counters (the registry array size).
-pub const N_COUNTERS: usize = 34;
+pub const N_COUNTERS: usize = 38;
 
 impl Counter {
     /// Every counter, in declaration order — drives [`snapshot`].
@@ -158,6 +166,10 @@ impl Counter {
         Counter::FaultsInjected,
         Counter::NetGuardRejects,
         Counter::Net503Shed,
+        Counter::KvPagesAllocated,
+        Counter::KvPagesShared,
+        Counter::KvCowForks,
+        Counter::KvPagesReclaimed,
     ];
 
     /// Stable snake_case name (report keys, JSON fields).
@@ -197,6 +209,10 @@ impl Counter {
             Counter::FaultsInjected => "faults_injected",
             Counter::NetGuardRejects => "net_guard_rejects",
             Counter::Net503Shed => "net_503_shed",
+            Counter::KvPagesAllocated => "kv_pages_allocated",
+            Counter::KvPagesShared => "kv_pages_shared",
+            Counter::KvCowForks => "kv_cow_forks",
+            Counter::KvPagesReclaimed => "kv_pages_reclaimed",
         }
     }
 }

@@ -31,7 +31,7 @@ use anyhow::{ensure, Result};
 
 use crate::evalharness::decode::argmax;
 use crate::forward::{ArtifactForward, ForwardBackend, HostForward};
-use crate::hostmodel::{CacheStore, HostCfg};
+use crate::hostmodel::{CacheStore, HostCfg, KvLayout, PageLedger};
 use crate::model::ParamStore;
 use crate::runtime::Engine;
 
@@ -53,6 +53,16 @@ pub trait DecodeBackend {
     /// inside the compiled graph).
     fn kv_bytes(&self) -> usize {
         0
+    }
+    /// Physical KV pages bound to live lanes (0 when the backend has no
+    /// explicit pool).
+    fn kv_pages(&self) -> usize {
+        0
+    }
+    /// Lifetime page-flow counters of the backend's pool (all-zero when
+    /// the backend has no explicit pool).
+    fn kv_ledger(&self) -> PageLedger {
+        PageLedger::default()
     }
 }
 
@@ -123,8 +133,21 @@ impl HostBackend {
         params: &ParamStore,
         store: CacheStore,
     ) -> Result<HostBackend> {
+        Self::new_with_layout(cfg, n_lanes, params, store, KvLayout::Slab)
+    }
+
+    /// [`HostBackend::new`] with an explicit KV cache layout — `--kv
+    /// paged` selects [`KvLayout::Paged`] here and the scheduler above is
+    /// layout-oblivious.
+    pub fn new_with_layout(
+        cfg: HostCfg,
+        n_lanes: usize,
+        params: &ParamStore,
+        store: CacheStore,
+        layout: KvLayout,
+    ) -> Result<HostBackend> {
         Ok(HostBackend {
-            inner: HostForward::new(cfg, n_lanes, params, store)?,
+            inner: HostForward::new_with_layout(cfg, n_lanes, params, store, layout)?,
             sequential: false,
         })
     }
@@ -151,6 +174,13 @@ impl HostBackend {
     /// invariant).
     pub fn all_slots_free(&self) -> bool {
         self.inner.all_slots_free()
+    }
+
+    /// [`HostBackend::all_slots_free`] generalized to the paged pool: no
+    /// page resident and every physical page back on the free list or the
+    /// LRU — the shutdown invariant the paged torture test pins.
+    pub fn all_pages_free(&self) -> bool {
+        self.inner.all_pages_free()
     }
 }
 
@@ -195,6 +225,14 @@ impl DecodeBackend for HostBackend {
 
     fn kv_bytes(&self) -> usize {
         self.inner.kv_bytes()
+    }
+
+    fn kv_pages(&self) -> usize {
+        self.inner.kv_pages()
+    }
+
+    fn kv_ledger(&self) -> PageLedger {
+        self.inner.kv_ledger()
     }
 }
 

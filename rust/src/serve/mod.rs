@@ -307,15 +307,36 @@ pub struct AdmissionQueue {
 }
 
 struct QueueInner {
-    q: VecDeque<GenRequest>,
+    /// one FIFO per scheduling class, so `try_pop` is O(1): the old single
+    /// deque paid an O(n) priority `position` scan per pop under the queue
+    /// lock — quadratic across the drain of a deep batch backlog
+    interactive: VecDeque<GenRequest>,
+    batch: VecDeque<GenRequest>,
     closed: bool,
+}
+
+impl QueueInner {
+    fn len(&self) -> usize {
+        self.interactive.len() + self.batch.len()
+    }
+
+    fn push(&mut self, req: GenRequest) {
+        match req.priority {
+            Priority::Interactive => self.interactive.push_back(req),
+            Priority::Batch => self.batch.push_back(req),
+        }
+    }
 }
 
 impl AdmissionQueue {
     pub fn new(cap: usize) -> AdmissionQueue {
         AdmissionQueue {
             cap: cap.max(1),
-            inner: Mutex::new(QueueInner { q: VecDeque::new(), closed: false }),
+            inner: Mutex::new(QueueInner {
+                interactive: VecDeque::new(),
+                batch: VecDeque::new(),
+                closed: false,
+            }),
             space: Condvar::new(),
             avail: Condvar::new(),
         }
@@ -326,13 +347,13 @@ impl AdmissionQueue {
     pub fn submit(&self, req: GenRequest) -> Result<()> {
         ensure!(!req.prompt.is_empty(), "empty prompt");
         let mut g = self.inner.lock().unwrap();
-        while g.q.len() >= self.cap && !g.closed {
+        while g.len() >= self.cap && !g.closed {
             g = self.space.wait(g).unwrap();
         }
         if g.closed {
             bail!("admission queue is closed");
         }
-        g.q.push_back(req);
+        g.push(req);
         crate::obs::add(crate::obs::Counter::ServeEnqueued, 1);
         self.avail.notify_one();
         Ok(())
@@ -351,11 +372,11 @@ impl AdmissionQueue {
         if g.closed {
             return Err(SubmitError::Closed(req));
         }
-        if g.q.len() >= self.cap || crate::faults::should_inject(crate::faults::Site::Submit) {
-            let retry_after_ms = health::retry_after_ms(g.q.len());
+        if g.len() >= self.cap || crate::faults::should_inject(crate::faults::Site::Submit) {
+            let retry_after_ms = health::retry_after_ms(g.len());
             return Err(SubmitError::Full { req, retry_after_ms });
         }
-        g.q.push_back(req);
+        g.push(req);
         crate::obs::add(crate::obs::Counter::ServeEnqueued, 1);
         self.avail.notify_one();
         Ok(())
@@ -366,8 +387,7 @@ impl AdmissionQueue {
     /// request — strict priority, FIFO within a class.
     pub fn try_pop(&self) -> Option<GenRequest> {
         let mut g = self.inner.lock().unwrap();
-        let idx = g.q.iter().position(|r| r.priority == Priority::Interactive).unwrap_or(0);
-        let r = if idx == 0 { g.q.pop_front() } else { g.q.remove(idx) };
+        let r = g.interactive.pop_front().or_else(|| g.batch.pop_front());
         if r.is_some() {
             self.space.notify_one();
         }
@@ -385,19 +405,19 @@ impl AdmissionQueue {
     }
 
     pub fn depth(&self) -> usize {
-        self.inner.lock().unwrap().q.len()
+        self.inner.lock().unwrap().len()
     }
 
     pub fn is_drained(&self) -> bool {
         let g = self.inner.lock().unwrap();
-        g.closed && g.q.is_empty()
+        g.closed && g.len() == 0
     }
 
     /// Park until a request is available or the queue closes (bounded by
     /// `timeout` so the scheduler can re-check its own state).
     pub fn wait_nonempty(&self, timeout: Duration) {
         let g = self.inner.lock().unwrap();
-        if g.q.is_empty() && !g.closed {
+        if g.len() == 0 && !g.closed {
             let _ = self.avail.wait_timeout(g, timeout).unwrap();
         }
     }

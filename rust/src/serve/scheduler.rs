@@ -208,10 +208,14 @@ impl<B: DecodeBackend> Scheduler<B> {
             //    admitted, so an expired head-of-line never wastes the
             //    lane a live request could take this step
             'admit: for lane in 0..self.lanes.len() {
-                if self.lanes[lane].is_some() {
-                    continue;
-                }
-                loop {
+                // keep pulling from the queue until this lane actually
+                // holds a session: a shed, rejected, or zero-budget
+                // inline-completed request leaves the lane free, and the
+                // next queued request must take it in the SAME pass — a
+                // premature break here used to park the freed lane for a
+                // full decode step while live lanes stepped, one batched
+                // forward of dead TTFT for the head of the queue
+                while self.lanes[lane].is_none() {
                     let Some(req) = queue.try_pop() else { break 'admit };
                     if req.ttft_deadline_expired() {
                         self.shed(req, stats, &mut results);
@@ -222,7 +226,8 @@ impl<B: DecodeBackend> Scheduler<B> {
                             obs::add(Counter::ServeAdmitted, 1);
                             let sess = Session::admit(req, self.step_no);
                             if sess.done(seq_len) {
-                                // zero-budget request: complete without a step
+                                // zero-budget request: complete without a
+                                // step — the lane frees again, keep pulling
                                 self.complete(lane, sess, stats, &mut results);
                             } else {
                                 self.lanes[lane] = Some(sess);
@@ -230,20 +235,23 @@ impl<B: DecodeBackend> Scheduler<B> {
                         }
                         Err(e) => {
                             // reject just this request — one bad prompt must not
-                            // take down the run (or lose the other sessions)
+                            // take down the run (or lose the other sessions);
+                            // the lane frees again, keep pulling
                             self.backend.evict(lane); // release any partial admit
                             obs::add(Counter::ServeRejected, 1);
                             let mut sess = Session::admit(req, self.step_no);
                             let sink = sess.sink.take();
                             let mut r = sess.into_result(self.step_no);
-                            r.error = Some(e.to_string());
+                            // full context chain, not just the outermost
+                            // message: the wire layer keys the retryable
+                            // pages-exhausted 429 off the typed cause
+                            r.error = Some(format!("{e:#}"));
                             r.reason = FinishReason::Rejected;
                             stats.on_reject();
                             Self::deliver(sink, &r);
                             results.push(r);
                         }
                     }
-                    break;
                 }
             }
             stats.add_admit_secs(admit_timer.secs());
@@ -300,11 +308,19 @@ impl<B: DecodeBackend> Scheduler<B> {
             obs::add(Counter::ServeSteps, 1);
             obs::add(Counter::ServeNewTokens, new_tokens as u64);
             let depth = queue.depth();
-            stats.on_step(depth, active, self.backend.kv_bytes(), step_ms, new_tokens);
+            stats.on_step(
+                depth,
+                active,
+                self.backend.kv_bytes(),
+                self.backend.kv_pages(),
+                step_ms,
+                new_tokens,
+            );
             // watchdog: classify the step's wall time (slow/stuck flags)
             // and feed the health state machine its evidence
             health::note_step(depth, step_ms);
         }
+        stats.record_kv_ledger(self.backend.kv_ledger());
         stats.finish();
         Ok(results)
     }
@@ -438,6 +454,35 @@ mod tests {
         assert_eq!(stats.rejected, 1);
         assert!(by_id(&results, 1).error.is_none());
         assert_eq!(by_id(&results, 3).generated().len(), 3);
+    }
+
+    #[test]
+    fn freed_lane_is_refilled_in_the_same_admit_pass() {
+        // regression: the admit loop used to `break` out of a lane after a
+        // rejected or zero-budget inline-completed request, stranding the
+        // just-freed lane for one full decode step while lane 0 stepped.
+        // Queue: r1 keeps lane 0 busy; lane 1 pulls r2 (marker reject),
+        // then r3 (zero budget, completes inline), then r4 — all in the
+        // SAME admit pass, so r4 must be admitted at step 0, not step 1+.
+        let (results, stats) = run_reqs(
+            2,
+            vec![
+                GenRequest::new(1, vec![1, 2], 4),
+                GenRequest::new(2, vec![99, 2], 3), // admit fails on marker
+                GenRequest::new(3, vec![1, 3], 0),  // inline-completes
+                GenRequest::new(4, vec![1, 4], 2),
+            ],
+        );
+        assert_eq!(results.len(), 4);
+        assert_eq!(
+            by_id(&results, 4).admitted_step,
+            by_id(&results, 1).admitted_step,
+            "the follow-up request must take the freed lane in the same pass"
+        );
+        assert_eq!(by_id(&results, 4).admitted_step, 0);
+        assert!(by_id(&results, 3).generated().is_empty());
+        assert_eq!(by_id(&results, 4).generated().len(), 2);
+        assert_eq!((stats.rejected, stats.completed), (1, 3));
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //! the old `Vec<f64>` records paid. Quantiles are bucket-resolution
 //! (upper edge, clamped to the observed min/max); means stay exact.
 
+use crate::hostmodel::PageLedger;
 use crate::metrics::Table;
 use crate::obs::Histogram;
 use crate::serve::GenResult;
@@ -24,6 +25,9 @@ pub struct StepRow {
     pub active_lanes: usize,
     /// deployment-format KV bytes resident after the step
     pub kv_bytes: usize,
+    /// physical KV pages resident after the step (page occupancy; 0 for
+    /// backends without an explicit pool)
+    pub kv_pages: usize,
     /// wall milliseconds of the backend step call
     pub step_ms: f64,
     /// tokens emitted by this step across all lanes
@@ -58,6 +62,11 @@ pub struct ServeStats {
     lanes: usize,
     /// peak deployment-format KV bytes resident in the pool
     pub kv_bytes_peak: usize,
+    /// peak physical KV pages resident in the pool
+    pub kv_pages_peak: usize,
+    /// lifetime page-flow counters snapshotted from the backend's pool at
+    /// the end of the run (all-zero for poolless backends)
+    pub kv_ledger: PageLedger,
     /// per-request latency histograms (TTFT records only finite samples —
     /// zero-budget completions never produce a first token)
     pub ttft: Histogram,
@@ -87,6 +96,8 @@ impl ServeStats {
             active_lane_sum: 0.0,
             lanes: lanes.max(1),
             kv_bytes_peak: 0,
+            kv_pages_peak: 0,
+            kv_ledger: PageLedger::default(),
             ttft: Histogram::new(),
             queued: Histogram::new(),
             total: Histogram::new(),
@@ -105,6 +116,7 @@ impl ServeStats {
         queue_depth: usize,
         active_lanes: usize,
         kv_bytes: usize,
+        kv_pages: usize,
         step_ms: f64,
         new_tokens: usize,
     ) {
@@ -113,6 +125,7 @@ impl ServeStats {
             queue_depth,
             active_lanes,
             kv_bytes,
+            kv_pages,
             step_ms,
             new_tokens,
         });
@@ -120,7 +133,14 @@ impl ServeStats {
         self.queue_depth_sum += queue_depth as f64;
         self.active_lane_sum += active_lanes as f64;
         self.kv_bytes_peak = self.kv_bytes_peak.max(kv_bytes);
+        self.kv_pages_peak = self.kv_pages_peak.max(kv_pages);
         self.step_secs += step_ms / 1e3;
+    }
+
+    /// Snapshot the backend pool's lifetime page-flow counters into the
+    /// run's aggregates (the scheduler calls this once, at drain).
+    pub fn record_kv_ledger(&mut self, ledger: PageLedger) {
+        self.kv_ledger = ledger;
     }
 
     /// Record a request's time-to-first-token **at first-token time** (the
@@ -235,6 +255,18 @@ impl ServeStats {
         self.queued.mean_ms()
     }
 
+    /// Fraction of page binds served by attaching to an already-resident
+    /// page instead of allocating a fresh one (shared attaches over
+    /// allocated + shared); 0 when no pages moved at all.
+    pub fn kv_sharing_ratio(&self) -> f64 {
+        let total = self.kv_ledger.allocated + self.kv_ledger.shared;
+        if total == 0 {
+            0.0
+        } else {
+            self.kv_ledger.shared as f64 / total as f64
+        }
+    }
+
     /// The report `silq serve` prints.
     pub fn report(&self) -> String {
         format!(
@@ -245,7 +277,8 @@ impl ServeStats {
              queued         {:>9.2} ms mean\n\
              queue depth    {:>9.2} mean\n\
              batch occupancy{:>9.1} %\n\
-             kv pool peak   {:>9.1} KiB (deployment format)",
+             kv pool peak   {:>9.1} KiB (deployment format)\n\
+             kv pages peak  {:>9} resident ({} shared attaches, {} cow forks, {} reclaimed)",
             self.completed,
             self.rejected,
             self.cancelled,
@@ -261,6 +294,10 @@ impl ServeStats {
             self.mean_queue_depth(),
             100.0 * self.batch_occupancy(),
             self.kv_bytes_peak as f64 / 1024.0,
+            self.kv_pages_peak,
+            self.kv_ledger.shared,
+            self.kv_ledger.forked,
+            self.kv_ledger.reclaimed,
         )
     }
 
@@ -296,9 +333,9 @@ impl ServeStats {
             }
             out.push_str(&format!(
                 "{{\"step\":{},\"queue_depth\":{},\"active_lanes\":{},\"kv_bytes\":{},\
-                 \"step_ms\":{:.4},\"new_tokens\":{},\"tok_per_s\":{:.2}}}",
-                r.step, r.queue_depth, r.active_lanes, r.kv_bytes, r.step_ms, r.new_tokens,
-                r.tok_per_s()
+                 \"kv_pages\":{},\"step_ms\":{:.4},\"new_tokens\":{},\"tok_per_s\":{:.2}}}",
+                r.step, r.queue_depth, r.active_lanes, r.kv_bytes, r.kv_pages, r.step_ms,
+                r.new_tokens, r.tok_per_s()
             ));
         }
         out.push_str(&format!(
@@ -307,6 +344,8 @@ impl ServeStats {
              \"new_tokens\":{},\
              \"wall_secs\":{:.4},\"tok_per_s\":{:.2},\"ttft_ms_mean\":{:.3},\
              \"ttft_ms_p95\":{:.3},\"queued_ms_mean\":{:.3},\"kv_bytes_peak\":{},\
+             \"kv_pages_peak\":{},\"kv_pages_allocated\":{},\"kv_pages_shared\":{},\
+             \"kv_cow_forks\":{},\"kv_pages_reclaimed\":{},\"kv_sharing_ratio\":{:.4},\
              \"mean_queue_depth\":{:.3},\"batch_occupancy\":{:.4}}}}}",
             self.steps,
             self.completed,
@@ -321,6 +360,12 @@ impl ServeStats {
             self.ttft_p95_ms(),
             self.queued_mean_ms(),
             self.kv_bytes_peak,
+            self.kv_pages_peak,
+            self.kv_ledger.allocated,
+            self.kv_ledger.shared,
+            self.kv_ledger.forked,
+            self.kv_ledger.reclaimed,
+            self.kv_sharing_ratio(),
             self.mean_queue_depth(),
             self.batch_occupancy(),
         ));
@@ -337,11 +382,12 @@ mod tests {
     #[test]
     fn gauges_average_per_step() {
         let mut st = ServeStats::new(4);
-        st.on_step(2, 4, 100, 1.5, 4);
-        st.on_step(0, 2, 50, 0.5, 2);
+        st.on_step(2, 4, 100, 3, 1.5, 4);
+        st.on_step(0, 2, 50, 1, 0.5, 2);
         assert!((st.mean_queue_depth() - 1.0).abs() < 1e-9);
         assert!((st.batch_occupancy() - 0.75).abs() < 1e-9);
         assert_eq!(st.kv_bytes_peak, 100);
+        assert_eq!(st.kv_pages_peak, 3);
         // the series mirrors the gauges row for row
         assert_eq!(st.series.len(), 2);
         assert_eq!(st.series[0].step, 0);
@@ -463,7 +509,7 @@ mod tests {
         let mut st = ServeStats::new(2);
         st.add_admit_secs(0.25);
         st.add_idle_secs(0.1);
-        st.on_step(0, 2, 10, 100.0, 2);
+        st.on_step(0, 2, 10, 1, 100.0, 2);
         st.finish();
         let b = st.breakdown();
         assert!(b.contains("admit+prefill"));
@@ -475,16 +521,30 @@ mod tests {
     #[test]
     fn metrics_json_totals_match_fields() {
         let mut st = ServeStats::new(2);
-        st.on_step(1, 2, 64, 2.0, 2);
+        st.on_step(1, 2, 64, 2, 2.0, 2);
         let mut s = Session::admit(GenRequest::new(7, vec![1], 2), 0);
         s.push(3);
         s.push(4);
         st.on_complete(&s.into_result(1));
+        st.record_kv_ledger(PageLedger {
+            allocated: 3,
+            shared: 1,
+            forked: 1,
+            reclaimed: 0,
+            released: 4,
+            revived: 0,
+        });
         st.finish();
         let doc = st.metrics_json();
         assert!(doc.contains("\"schema\":\"silq.metrics.v1\""));
         assert!(doc.contains("\"completed\":1"));
         assert!(doc.contains("\"new_tokens\":2"));
         assert!(doc.contains("\"kv_bytes_peak\":64"));
+        assert!(doc.contains("\"kv_pages\":2"), "{doc}");
+        assert!(doc.contains("\"kv_pages_peak\":2"), "{doc}");
+        assert!(doc.contains("\"kv_pages_shared\":1"), "{doc}");
+        assert!(doc.contains("\"kv_cow_forks\":1"), "{doc}");
+        assert!(doc.contains("\"kv_sharing_ratio\":0.2500"), "{doc}");
+        assert!(st.report().contains("kv pages peak"));
     }
 }

@@ -302,5 +302,6 @@ fn seeded_fault_storm_balances_the_books_and_health_recovers() {
     }
     assert!(backend.all_slots_free(), "the storm leaked a KV slot");
     assert_eq!(backend.kv_bytes(), 0, "the storm left KV bytes resident");
+    assert!(backend.all_pages_free(), "the storm leaked a KV page");
     assert_eq!(health::state(), HealthState::Draining, "a drained run reports draining");
 }

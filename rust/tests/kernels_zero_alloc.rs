@@ -9,9 +9,16 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use silq::hostmodel::{host_test_params, CacheStore, HostCfg, HostModel};
+use silq::hostmodel::{host_test_params, CacheStore, HostCfg, HostModel, KvLayout};
 use silq::kernels::DecodeScratch;
 use silq::policy::QuantPolicy;
+
+/// Paged geometry for the paged-path sweeps: pages smaller than the
+/// window so the decode loop crosses page boundaries (and lazily binds
+/// fresh pages) inside the counted window.
+fn paged() -> KvLayout {
+    KvLayout::Paged { page_size: 8, total_pages: None, sharing: true }
+}
 
 /// System allocator with an allocation-event counter (frees are not
 /// counted — only acquiring fresh memory violates the budget).
@@ -53,11 +60,11 @@ fn cfg_for(spec: &str) -> HostCfg {
 
 /// Decode `steps` tokens through `forward_token_into` and return how many
 /// allocation events the loop performed.
-fn allocs_during_decode(spec: &str, store: CacheStore, steps: usize) -> u64 {
+fn allocs_during_decode(spec: &str, store: CacheStore, layout: KvLayout, steps: usize) -> u64 {
     let cfg = cfg_for(spec);
     let params = host_test_params(&cfg, 7);
     let model = HostModel::new(cfg.clone(), &params).unwrap();
-    let mut pool = model.make_pool(1, store).unwrap();
+    let mut pool = model.make_pool_with(1, store, layout).unwrap();
     let slot = pool.alloc().unwrap();
     let mut scratch = DecodeScratch::for_cfg(&cfg);
 
@@ -88,13 +95,19 @@ fn allocs_during_decode(spec: &str, store: CacheStore, steps: usize) -> u64 {
 /// Advance `lanes` pool sessions `steps` times through the cross-lane
 /// batched forward and return the allocation events of the steady-state
 /// loop (the lane array and both scratches are built before counting).
-fn allocs_during_batched_decode(spec: &str, store: CacheStore, lanes: usize, steps: usize) -> u64 {
+fn allocs_during_batched_decode(
+    spec: &str,
+    store: CacheStore,
+    layout: KvLayout,
+    lanes: usize,
+    steps: usize,
+) -> u64 {
     use silq::hostmodel::BatchLane;
     use silq::kernels::BatchScratch;
     let cfg = cfg_for(spec);
     let params = host_test_params(&cfg, 11);
     let model = HostModel::new(cfg.clone(), &params).unwrap();
-    let mut pool = model.make_pool(lanes, store).unwrap();
+    let mut pool = model.make_pool_with(lanes, store, layout).unwrap();
     let mut scratch = DecodeScratch::for_cfg(&cfg);
     let mut bscratch = BatchScratch::for_cfg(&cfg, lanes);
 
@@ -154,25 +167,34 @@ fn steady_state_decode_allocates_nothing() {
         ("w4a8kv8:statacts", CacheStore::Int8),
         ("fp16", CacheStore::F32),
     ] {
-        let n = allocs_during_decode(spec, store, 20);
-        assert_eq!(
-            n, 0,
-            "{spec}/{store:?}: steady-state forward_token_into performed {n} heap allocations"
-        );
+        for layout in [KvLayout::Slab, paged()] {
+            let n = allocs_during_decode(spec, store, layout, 20);
+            assert_eq!(
+                n, 0,
+                "{spec}/{store:?}/{layout:?}: steady-state forward_token_into \
+                 performed {n} heap allocations"
+            );
+        }
     }
 
     // the cross-lane batched step inherits the budget: one fused forward
-    // across 3 ragged lanes, zero allocations in steady state
+    // across 3 ragged lanes, zero allocations in steady state — on the
+    // paged pool the 20-step window crosses page boundaries, so the lazy
+    // page binds themselves must also be allocation-free (page tables are
+    // pre-sized to their slot's maximum)
     for (spec, store) in [
         ("w4a8kv8", CacheStore::Int8),
         ("w4a8kv8:statacts", CacheStore::Int8),
         ("fp16", CacheStore::F32),
     ] {
-        let n = allocs_during_batched_decode(spec, store, 3, 20);
-        assert_eq!(
-            n, 0,
-            "{spec}/{store:?}: steady-state forward_tokens_batch performed {n} heap allocations"
-        );
+        for layout in [KvLayout::Slab, paged()] {
+            let n = allocs_during_batched_decode(spec, store, layout, 3, 20);
+            assert_eq!(
+                n, 0,
+                "{spec}/{store:?}/{layout:?}: steady-state forward_tokens_batch \
+                 performed {n} heap allocations"
+            );
+        }
     }
 
     // the same sweeps with the worker pool active: thread spawn and the
@@ -183,16 +205,20 @@ fn steady_state_decode_allocates_nothing() {
     // across threads, so worker-side allocations would be caught here.
     silq::kernels::pool::configure(4);
     for (spec, store) in [("w4a8kv8", CacheStore::Int8), ("fp16", CacheStore::F32)] {
-        let n = allocs_during_decode(spec, store, 20);
-        assert_eq!(
-            n, 0,
-            "{spec}/{store:?}: pooled forward_token_into performed {n} heap allocations"
-        );
-        let n = allocs_during_batched_decode(spec, store, 3, 20);
-        assert_eq!(
-            n, 0,
-            "{spec}/{store:?}: pooled forward_tokens_batch performed {n} heap allocations"
-        );
+        for layout in [KvLayout::Slab, paged()] {
+            let n = allocs_during_decode(spec, store, layout, 20);
+            assert_eq!(
+                n, 0,
+                "{spec}/{store:?}/{layout:?}: pooled forward_token_into \
+                 performed {n} heap allocations"
+            );
+            let n = allocs_during_batched_decode(spec, store, layout, 3, 20);
+            assert_eq!(
+                n, 0,
+                "{spec}/{store:?}/{layout:?}: pooled forward_tokens_batch \
+                 performed {n} heap allocations"
+            );
+        }
     }
     silq::kernels::pool::shutdown();
 

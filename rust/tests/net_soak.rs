@@ -226,6 +226,7 @@ fn wire_soak_accounts_for_every_request_and_frees_everything() {
     // --- shutdown: nothing resident, nothing leaked ---
     assert!(backend.all_slots_free(), "a lane leaked its KV slot past drain");
     assert_eq!(backend.kv_bytes(), 0, "resident KV bytes after drain");
+    assert!(backend.all_pages_free(), "a KV page leaked past drain");
     silq::kernels::pool::shutdown();
     assert_eq!(silq::kernels::pool::worker_count(), 0, "worker pool leaked threads");
 }

@@ -325,6 +325,98 @@ fn prop_batched_cross_lane_decode_matches_sequential() {
 }
 
 #[test]
+fn prop_paged_decode_matches_slab_through_the_scheduler() {
+    // The paged-pool tentpole identity, swept through the REAL scheduler:
+    // `--kv paged` is indirection, not math. The same ragged serve traffic
+    // run over the paged pool (small pages so prompts straddle several,
+    // prefix sharing on) must produce token-exact output AND identical
+    // scheduling against the slab pool, across the w4/w8 integer policies
+    // and the fp16 fallback. Half the prompts open with a shared system
+    // prefix, so hash-matched prefix attaches and copy-on-write forks
+    // actually exercise on the paged side — exactness there is by
+    // construction too: quantized K/V rows are a deterministic function of
+    // the causal token prefix, so an attached sealed page holds exactly
+    // the bytes a fresh prefill would have written.
+    use silq::hostmodel::{host_test_params, CacheStore, HostCfg, KvLayout};
+    use silq::serve::{serve_inline, GenRequest, HostBackend};
+    let _traffic = hostmodel_traffic_lock();
+    silq::kernels::pool::configure(silq::kernels::pool::env_threads().unwrap_or(1));
+    let cases = if cfg!(debug_assertions) { 9 } else { 24 };
+    for seed in 0..cases {
+        let mut rng = Rng::new(seed ^ 0x9A);
+        let spec = ["w4a8kv8", "w8a8kv8", "fp16"][(seed % 3) as usize];
+        let lanes = rng.range(1, 5);
+        let cfg = HostCfg {
+            vocab: 64,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 32,
+            seq_len: 16,
+            policy: spec.parse().unwrap(),
+            rope_theta: 10000.0,
+        };
+        let params = host_test_params(&cfg, seed);
+        let store = CacheStore::for_policy(&cfg.policy);
+        let prefix: Vec<i32> =
+            (0..rng.range(2, 7)).map(|_| rng.below(cfg.vocab) as i32).collect();
+        let n_req = rng.range(lanes + 1, 3 * lanes + 6);
+        let reqs: Vec<(Vec<i32>, usize)> = (0..n_req)
+            .map(|_| {
+                let mut p = if rng.below(2) == 0 { prefix.clone() } else { vec![] };
+                let extra = rng.range(1, 6);
+                p.extend((0..extra).map(|_| rng.below(cfg.vocab) as i32));
+                (p, rng.range(1, 12))
+            })
+            .collect();
+        let mk = |reqs: &[(Vec<i32>, usize)]| -> Vec<GenRequest> {
+            reqs.iter()
+                .enumerate()
+                .map(|(i, (p, b))| GenRequest::new(i as u64, p.clone(), *b).ignore_eos())
+                .collect()
+        };
+        let slab = HostBackend::new(cfg.clone(), lanes, &params, store).unwrap();
+        let paged = HostBackend::new_with_layout(
+            cfg.clone(),
+            lanes,
+            &params,
+            store,
+            KvLayout::Paged { page_size: 4, total_pages: None, sharing: true },
+        )
+        .unwrap();
+        let (mut rs, stats_s) = serve_inline(slab, lanes, mk(&reqs)).unwrap();
+        let (mut rp, stats_p) = serve_inline(paged, lanes, mk(&reqs)).unwrap();
+        rs.sort_by_key(|r| r.id);
+        rp.sort_by_key(|r| r.id);
+        assert_eq!(rp.len(), n_req, "seed {seed}: a request went missing");
+        assert_eq!(rs.len(), n_req);
+        for (a, b) in rp.iter().zip(&rs) {
+            assert_eq!(a.id, b.id);
+            assert!(a.error.is_none() && b.error.is_none(), "seed {seed} req {}", a.id);
+            assert_eq!(
+                a.tokens, b.tokens,
+                "seed {seed} spec {spec} lanes {lanes} req {}: \
+                 paged decode diverged from the slab reference",
+                a.id
+            );
+            assert_eq!(
+                (a.admitted_step, a.finished_step),
+                (b.admitted_step, b.finished_step),
+                "seed {seed} req {}: scheduling diverged",
+                a.id
+            );
+        }
+        assert_eq!(stats_p.total_new_tokens, stats_s.total_new_tokens, "seed {seed}");
+        assert_eq!(stats_p.steps, stats_s.steps, "seed {seed}");
+        // drained paged run: the page ledger balances exactly, nothing
+        // stays resident, and the occupancy gauge saw real pages
+        let l = stats_p.kv_ledger;
+        assert_eq!(l.allocated + l.revived, l.released, "seed {seed}: page ledger unbalanced");
+        assert!(stats_p.kv_pages_peak > 0, "seed {seed}: paged run never bound a page");
+    }
+}
+
+#[test]
 fn prop_parallel_gemm_matches_scalar() {
     // The parallel-kernels tentpole identity: worker-pool width and dot-
     // kernel choice are pure throughput knobs. The same ragged serve

@@ -16,14 +16,27 @@
 //! The default run is sized to stay cheap in debug builds; the release
 //! gate (`scripts/check.sh`) runs a larger sweep, and `make soak` runs
 //! the long-seed version (`SILQ_SOAK=long`) without gating tier-1.
+//!
+//! The second test in this binary is the **paged-pool torture run**: a
+//! deliberately page-starved paged backend (fewer physical pages than
+//! two sessions' worst-case growth) churned with mixed prompt lengths, a
+//! shared system prefix, and forced `kv@N` allocation faults — pinning
+//! that exhaustion surfaces as typed rejects (never a panic) and that
+//! the page ledger balances exactly at shutdown.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
-use silq::hostmodel::host_test_params;
+use silq::faults;
+use silq::hostmodel::{host_test_params, KvLayout};
 use silq::serve::{
-    AdmissionQueue, CacheStore, DecodeBackend, GenRequest, HostBackend, HostCfg, Scheduler,
-    ServeStats,
+    AdmissionQueue, CacheStore, DecodeBackend, FinishReason, GenRequest, HostBackend, HostCfg,
+    Scheduler, ServeStats,
 };
+
+/// Both tests in this binary read process-global state (obs counters,
+/// the fault registry) and assert exact deltas, so they must never run
+/// on sibling test threads.
+static SERIAL: Mutex<()> = Mutex::new(());
 
 fn soak_cfg() -> HostCfg {
     HostCfg {
@@ -64,8 +77,10 @@ fn request(id: u64, seq_len: usize) -> GenRequest {
 
 #[test]
 fn soak_frees_every_slot_and_keeps_stats_exact() {
-    // telemetry live for the whole run — this binary is single-test, so
-    // the global counters can be asserted exactly against ServeStats
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    faults::clear(); // the torture test arms a kv plan; never inherit it
+    // telemetry live for the whole run — the serial lock above keeps the
+    // global counters exact against ServeStats
     silq::obs::set_enabled(true);
     // the soak runs with the worker pool live ($SILQ_THREADS, default 4):
     // decode sharding must survive hundreds of admissions/evictions, and
@@ -196,6 +211,7 @@ fn soak_frees_every_slot_and_keeps_stats_exact() {
         "a lane leaked its KV slot past shutdown"
     );
     assert_eq!(sched.backend().kv_bytes(), 0, "resident KV bytes after shutdown");
+    assert!(sched.backend().all_pages_free(), "a KV page leaked past shutdown");
 
     // --- worker pool: clean shutdown, no leaked worker threads ---
     silq::kernels::pool::shutdown();
@@ -205,4 +221,146 @@ fn soak_frees_every_slot_and_keeps_stats_exact() {
         "worker pool leaked threads past shutdown"
     );
     assert_eq!(silq::kernels::pool::active_threads(), 1, "pool did not return to serial");
+}
+
+// ---------------------------------------------------------------------
+// paged-pool torture
+// ---------------------------------------------------------------------
+
+/// System prompt shared by every even-id torture request: two full pages
+/// at the torture geometry (`page_size = 4`), so sealed-prefix sharing
+/// has real material to match against.
+const SYS_PREFIX: [i32; 8] = [7, 3, 11, 5, 2, 13, 17, 19];
+
+/// Deterministic torture stream. Even ids open with the shared system
+/// prefix; every fourth even id is *exactly* the prefix — the exact-fill
+/// admission whose first decode write folds the final prompt token into
+/// a shared page and must COW-fork it. Odd ids are private prompts of
+/// mixed lengths. Budgets keep lanes occupied across admit passes so
+/// page commitments genuinely collide.
+fn paged_request(id: u64) -> GenRequest {
+    let mut prompt: Vec<i32> = Vec::new();
+    if id % 2 == 0 {
+        prompt.extend_from_slice(&SYS_PREFIX);
+        if id % 8 != 4 {
+            let extra = 1 + (id % 5) as usize;
+            prompt.extend((0..extra as i32).map(|p| 21 + (id as i32 * 13 + p * 3) % 229));
+        }
+    } else {
+        let plen = 1 + (id % 5) as usize;
+        prompt.extend((0..plen as i32).map(|p| 1 + (id as i32 * 37 + p * 11) % 250));
+    }
+    let budget = if id % 11 == 0 { 0 } else { 1 + (id % 5) as usize };
+    GenRequest::new(id, prompt, budget).ignore_eos()
+}
+
+/// The paged-pool torture run: a page-starved paged backend under mixed
+/// prompt lengths, a shared system prefix, and forced `kv@N` allocation
+/// faults. Exhaustion must surface as typed [`FinishReason::Rejected`]
+/// results (never a panic, never a lost request), and the page ledger
+/// must balance exactly at shutdown — every page bound over the whole
+/// run was returned.
+#[test]
+fn paged_torture_rejects_cleanly_and_balances_the_page_ledger() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    silq::obs::set_enabled(true);
+    faults::clear();
+
+    let lanes = 4;
+    let cfg = soak_cfg(); // seq_len 24
+    // page-starved geometry: 6 pages per slot (seq 24 / page 4) but only
+    // 10 physical pages — two private sessions (12 committed pages)
+    // cannot coexist, while a prefix-sharing pair (6 + 4) just fits, so
+    // admission alternates between typed exhaustion rejects and shares
+    let layout = KvLayout::Paged { page_size: 4, total_pages: Some(10), sharing: true };
+    let params = host_test_params(&cfg, 29);
+    let backend =
+        HostBackend::new_with_layout(cfg, lanes, &params, CacheStore::Int8, layout).unwrap();
+
+    let n_requests: u64 = if cfg!(debug_assertions) { 140 } else { 400 };
+    // forced allocation failures layered on top of genuine exhaustion:
+    // every 9th admission attempt from the 4th dies at the fault site
+    faults::configure("kv@4+9,seed=23").unwrap();
+
+    let queue = Arc::new(AdmissionQueue::new(8));
+    let producer = {
+        let q = queue.clone();
+        std::thread::spawn(move || {
+            for id in 0..n_requests {
+                q.submit(paged_request(id)).unwrap();
+            }
+            q.close();
+        })
+    };
+
+    let mut sched = Scheduler::new(backend, lanes).unwrap();
+    let mut stats = ServeStats::new(lanes);
+    let results = sched.run(&queue, &mut stats).unwrap();
+    producer.join().unwrap();
+    let injected_kv =
+        faults::report().into_iter().find(|(name, ..)| *name == "kv").unwrap().2;
+    faults::clear();
+
+    // --- every request surfaces exactly once, typed, never a panic ----
+    assert_eq!(results.len(), n_requests as usize, "a request was lost or duplicated");
+    let mut ids: Vec<u64> = results.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), n_requests as usize, "duplicate request ids in the results");
+
+    let (mut exhausted, mut injected_seen) = (0u64, 0u64);
+    for r in &results {
+        match r.reason {
+            FinishReason::Completed => {
+                assert!(r.error.is_none(), "request {} completed with an error", r.id);
+                let want = if r.id % 11 == 0 { 0 } else { 1 + (r.id % 5) as usize };
+                assert_eq!(r.generated().len(), want, "request {}: wrong budget", r.id);
+            }
+            FinishReason::Rejected => {
+                let err = r.error.as_deref().unwrap_or_default();
+                assert!(
+                    err.contains("KV pool exhausted"),
+                    "request {}: reject without pool evidence: {err}",
+                    r.id
+                );
+                assert!(r.generated().is_empty(), "request {} generated after a reject", r.id);
+                if err.contains("out of pages") {
+                    exhausted += 1;
+                } else {
+                    assert!(err.contains("fault injection"), "request {}: {err}", r.id);
+                    injected_seen += 1;
+                }
+            }
+            other => panic!("request {}: unexpected terminal {other:?}", r.id),
+        }
+    }
+    assert!(exhausted >= 1, "the starved pool never rejected on pages");
+    assert_eq!(
+        injected_seen, injected_kv,
+        "every fired kv fault must surface as exactly one typed reject"
+    );
+    assert_eq!(stats.completed + stats.rejected, n_requests as usize);
+    assert_eq!(stats.rejected as u64, exhausted + injected_seen);
+
+    // --- exact page-ledger balance at shutdown ------------------------
+    let l = sched.backend().kv_ledger();
+    assert!(l.shared >= 1, "the shared system prefix never attached");
+    // (COW-fork counts depend on which sessions coexist at the instant an
+    // exact-fill folds its last prompt token, so the exact-fill requests
+    // here are torture input only — fork determinism is pinned by the
+    // kvpool unit tests)
+    assert_eq!(
+        l.allocated + l.revived,
+        l.released,
+        "page ledger out of balance after drain: {l:?}"
+    );
+    assert!(
+        (1..=10).contains(&stats.kv_pages_peak),
+        "page occupancy peak {} outside the physical pool",
+        stats.kv_pages_peak
+    );
+    assert!(sched.backend().all_slots_free(), "a lane leaked its KV slot");
+    assert!(sched.backend().all_pages_free(), "a page leaked past shutdown");
+    assert_eq!(sched.backend().kv_pages(), 0, "resident pages after drain");
+    assert_eq!(sched.backend().kv_bytes(), 0, "resident KV bytes after drain");
 }

@@ -53,6 +53,24 @@ print("trace smoke: OK "
 EOF
 rm -f "$TRACE_OUT" "$METRICS_OUT"
 
+echo "== paged-vs-slab identity smoke (--kv) =="
+# the paged KV pool must decode token-for-token what the slab decodes,
+# through the real scheduler: the same seeded load runs once per layout
+# (prompts are fixed per request id before the producer split, so the
+# id-sorted --tokens-out dumps must be byte-identical)
+SLAB_TOK="$(mktemp /tmp/silq_smoke.XXXXXX.slab.tokens)"
+PAGED_TOK="$(mktemp /tmp/silq_smoke.XXXXXX.paged.tokens)"
+cargo run -q --release --offline -- serve \
+  --requests 16 --batch 4 --max_new 6 --producers 2 --prec w4a8kv8 \
+  --kv slab --tokens-out "$SLAB_TOK" > /dev/null
+cargo run -q --release --offline -- serve \
+  --requests 16 --batch 4 --max_new 6 --producers 2 --prec w4a8kv8 \
+  --kv paged --page-size 8 --tokens-out "$PAGED_TOK" > /dev/null
+diff "$SLAB_TOK" "$PAGED_TOK" \
+  || { echo "paged decode diverged from the slab"; exit 1; }
+echo "kv identity smoke: OK (16 token streams identical)"
+rm -f "$SLAB_TOK" "$PAGED_TOK"
+
 echo "== serve-over-HTTP smoke (silq serve --listen) =="
 # end to end over a real socket: start the server on an ephemeral port,
 # stream one SSE completion, check /healthz and the live /metrics schema,
